@@ -1,0 +1,44 @@
+//! Scheme comparison: SFL-GA vs SFL vs PSL vs FL on one workload, printing
+//! the paper's headline table — accuracy, total communication and
+//! simulated latency side by side (the Fig. 4/5 story in one screen).
+//!
+//! Run with:  cargo run --release --example compare_schemes [-- --rounds 60]
+
+use sfl_ga::coordinator::{RunMetrics, SchemeKind, TrainConfig, Trainer};
+use sfl_ga::model::Manifest;
+use sfl_ga::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let rounds = args.parse_or("rounds", 60usize)?;
+    let dataset = args.str_or("dataset", "mnist");
+    let cut = args.parse_or("cut", 2usize)?;
+
+    let artifact_dir = std::path::Path::new("artifacts");
+    let manifest = Manifest::load(artifact_dir)?;
+
+    println!("scheme    final_acc   comm_MB   latency_s   (dataset={dataset}, cut=v{cut}, {rounds} rounds)");
+    for scheme in SchemeKind::all() {
+        let cfg = TrainConfig {
+            dataset: dataset.clone(),
+            scheme,
+            rounds,
+            eval_every: rounds, // evaluate once at the end
+            seed: args.parse_or("seed", 17u64)?,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(artifact_dir, &manifest, cfg)?;
+        let mut metrics = RunMetrics::new(scheme, &dataset);
+        for stats in trainer.run(cut)? {
+            metrics.push(&stats);
+        }
+        println!(
+            "{:<8} {:>9.3} {:>9.1} {:>11.1}",
+            scheme.name(),
+            metrics.final_accuracy(),
+            metrics.total_comm_mb(),
+            metrics.total_latency_s()
+        );
+    }
+    Ok(())
+}

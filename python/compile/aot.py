@@ -1,0 +1,125 @@
+"""AOT compile path: lower every (shape, cut, role) to HLO text + manifest.
+
+Run ONCE via `make artifacts`; python never appears on the request path.
+
+Interchange is HLO *text* (not serialized HloModuleProto): jax >= 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts are emitted per *shape key* ("28x28x1", "32x32x3") — mnist and
+fashion-mnist share identical HLO; the manifest maps each logical dataset to
+its shape key so the Rust side resolves files without duplication.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .layers import DATASET_SHAPE, NUM_CUTS, SPECS, ModelSpec
+
+TRAIN_BATCH = 32
+EVAL_BATCH = 256
+
+ROLES_PER_CUT = ("client_fwd", "server_grad", "client_grad")
+ROLES_GLOBAL = ("full_grad", "eval")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_role(spec: ModelSpec, role: str, cut: int, batch: int) -> str:
+    fn, example_args = model.make_role(spec, role, cut, batch)
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def shape_manifest(spec: ModelSpec, files: dict) -> dict:
+    cuts = {}
+    for cut in range(1, NUM_CUTS + 1):
+        fl = spec.flops(cut)
+        cuts[str(cut)] = {
+            "phi": spec.phi(cut),
+            "client_params": spec.client_param_count(cut),
+            "smashed_shape": list(spec.smashed_shape(cut, TRAIN_BATCH)),
+            "flops_client_fwd": fl["client_fwd"],
+            "flops_client_bwd": fl["client_bwd"],
+            "flops_server_fwd": fl["server_fwd"],
+            "flops_server_bwd": fl["server_bwd"],
+            "artifacts": {r: files[(cut, r)] for r in ROLES_PER_CUT},
+        }
+    return {
+        "input_shape": list(spec.input_shape),
+        "classes": spec.classes,
+        "train_batch": TRAIN_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "total_params": spec.total_params,
+        "params": [
+            {"name": p.name, "shape": list(p.shape), "block": p.block}
+            for p in spec.param_specs()
+        ],
+        "cuts": cuts,
+        "artifacts": {r: files[(0, r)] for r in ROLES_GLOBAL},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--shapes",
+        nargs="*",
+        default=list(SPECS),
+        help="shape keys to compile (default: all)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"format": 1, "train_batch": TRAIN_BATCH, "eval_batch": EVAL_BATCH,
+                "shapes": {}, "datasets": {}}
+    t0 = time.time()
+    for key in args.shapes:
+        spec = SPECS[key]
+        files = {}
+        jobs = [(cut, role) for cut in range(1, NUM_CUTS + 1) for role in ROLES_PER_CUT]
+        jobs += [(0, role) for role in ROLES_GLOBAL]
+        for cut, role in jobs:
+            batch = EVAL_BATCH if role == "eval" else TRAIN_BATCH
+            tag = f"{key}_v{cut}_{role}" if cut else f"{key}_{role}"
+            fname = f"{tag}.hlo.txt"
+            t = time.time()
+            text = lower_role(spec, role, cut, batch)
+            with open(os.path.join(args.out, fname), "w") as f:
+                f.write(text)
+            files[(cut, role)] = fname
+            print(f"  [{time.time() - t0:7.1f}s] {fname:44s} "
+                  f"{len(text) / 1e6:6.2f} MB  ({time.time() - t:.1f}s)",
+                  file=sys.stderr)
+        manifest["shapes"][key] = shape_manifest(spec, files)
+
+    for ds, key in DATASET_SHAPE.items():
+        if key in manifest["shapes"]:
+            manifest["datasets"][ds] = key
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(manifest['shapes'])} shapes "
+          f"in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""L1 Pallas kernels for SFL-GA.
+
+The compute hot-spot of the split CNN is matrix multiplication: the fc
+layers directly, and the conv layers via im2col.  All matmuls route through
+the blocked Pallas kernel in :mod:`matmul` (MXU-shaped tiles, VMEM-resident
+blocks), with the bias+activation epilogue fused in :mod:`fused`.  Max
+pooling has its own kernel in :mod:`pool`.
+
+Every kernel is lowered with ``interpret=True`` — the CPU PJRT plugin used
+at runtime cannot execute Mosaic custom-calls, so the interpret path is both
+the correctness oracle target (vs :mod:`ref`) and the artifact path.  TPU
+efficiency is estimated structurally (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from . import matmul, fused, conv, pool, ref  # noqa: F401

@@ -1,0 +1,55 @@
+"""Conv2D expressed as im2col + the fused Pallas matmul.
+
+TPU adaptation: direct sliding-window convolution is a GPU idiom; the
+TPU-native formulation is im2col → one big MXU matmul.  Patch extraction is
+a pure data-movement op (25 static shifted slices for a 5x5 SAME conv) that
+XLA fuses into the surrounding graph; all FLOPs land in the Pallas
+``dense`` kernel, so the conv's hot loop runs on the (simulated) MXU.
+
+Patch layout matches ``w.reshape(kh*kw*cin, cout)`` for HWIO weights.
+Differentiability comes for free: slicing/padding are native JAX ops and
+``dense`` carries its own Pallas VJP.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .fused import Activation, dense
+
+
+def im2col(x: jax.Array, kh: int, kw: int) -> jax.Array:
+    """Extract SAME-padded (kh, kw) patches from NHWC input.
+
+    Returns (batch * h * w, kh * kw * cin), rows ordered (b, y, x) and
+    columns ordered (dy, dx, cin) — matching HWIO weight flattening.
+    """
+    b, h, w, c = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(xp[:, dy : dy + h, dx : dx + w, :])
+    # (b, h, w, kh*kw, c) -> (b*h*w, kh*kw*c)
+    patches = jnp.stack(cols, axis=3)
+    return patches.reshape(b * h * w, kh * kw * c)
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array,
+    *,
+    act: Activation = "none",
+) -> jax.Array:
+    """SAME conv, stride 1, NHWC x HWIO -> NHWC, via im2col + Pallas dense."""
+    b, h, wd, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    if cin != cin2 or bias.shape != (cout,):
+        raise ValueError(f"conv2d shape mismatch: {x.shape} * {w.shape} + {bias.shape}")
+    patches = im2col(x, kh, kw)
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = dense(patches, wmat, bias, act)
+    return out.reshape(b, h, wd, cout)

@@ -1,0 +1,120 @@
+"""Fused dense layer: Pallas matmul with bias + activation epilogue.
+
+Fusing the epilogue into the matmul's final K step keeps the (bm, bn)
+output tile in VMEM for the whole matmul->bias->activation chain — one HBM
+write instead of three round trips (the TPU analogue of a CUDA epilogue
+fusion).
+
+``dense`` carries a custom VJP:
+  da = g * act'(z)   (act' recovered from the *output*: relu' = out > 0)
+  dx = da @ w.T      (Pallas matmul)
+  dw = x.T @ da      (Pallas matmul)
+  db = sum_rows(da)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import (
+    DEFAULT_BK,
+    DEFAULT_BM,
+    DEFAULT_BN,
+    _ceil_to,
+    _resolve_block,
+    matmul_raw,
+)
+
+Activation = Literal["relu", "none"]
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, act: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        z = o_ref[...] + b_ref[...]
+        if act == "relu":
+            z = jnp.maximum(z, 0.0)
+        o_ref[...] = z
+
+
+def dense_raw(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    act: Activation = "none",
+    bm: int | None = DEFAULT_BM,
+    bn: int | None = DEFAULT_BN,
+    bk: int | None = DEFAULT_BK,
+) -> jax.Array:
+    """act(x @ w + b) in one fused Pallas kernel (no VJP rule)."""
+    m, kdim = x.shape
+    k2, n = w.shape
+    if kdim != k2 or b.shape != (n,):
+        raise ValueError(f"dense shape mismatch: {x.shape} @ {w.shape} + {b.shape}")
+
+    bm = _resolve_block(bm, m)
+    bn = _resolve_block(bn, n)
+    bk = _resolve_block(bk, kdim)
+
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(kdim, bk)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - kdim))) if (mp, kp) != (m, kdim) else x
+    wp = jnp.pad(w, ((0, kp - kdim), (0, np_ - n))) if (kp, np_) != (kdim, n) else w
+    bp = jnp.pad(b, (0, np_ - n)) if np_ != n else b
+    bp = bp.reshape(1, np_)
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, nk=grid[2], act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp.astype(jnp.float32), wp.astype(jnp.float32), bp.astype(jnp.float32))
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x: jax.Array, w: jax.Array, b: jax.Array, act: Activation = "none"):
+    """Differentiable fused dense layer act(x @ w + b)."""
+    return dense_raw(x, w, b, act=act)
+
+
+def _dense_fwd(x, w, b, act):
+    out = dense_raw(x, w, b, act=act)
+    return out, (x, w, out)
+
+
+def _dense_bwd(act, res, g):
+    x, w, out = res
+    if act == "relu":
+        da = g * (out > 0.0).astype(g.dtype)
+    else:
+        da = g
+    dx = matmul_raw(da, w.T)
+    dw = matmul_raw(x.T, da)
+    db = jnp.sum(da, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

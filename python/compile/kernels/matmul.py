@@ -1,0 +1,127 @@
+"""Blocked Pallas matmul — the L1 hot-spot kernel.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles (M, N, K) into
+MXU-friendly blocks; each grid step loads one (bm, bk) x-tile and one
+(bk, bn) w-tile into VMEM via BlockSpec and accumulates a (bm, bn) output
+tile in f32.  The K axis is the innermost grid dimension so the output tile
+stays VMEM-resident across the whole reduction (the classic systolic-array
+schedule; what a CUDA kernel would do with threadblock tiles + shared
+memory, expressed here with BlockSpec index maps).
+
+Autodiff: ``pallas_call`` has no VJP rule, so :func:`matmul` is wrapped in
+``jax.custom_vjp`` with the backward pass itself expressed as two Pallas
+matmuls (dx = g @ w.T, dw = x.T @ g) — gradients of the split model never
+leave the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block-shape policy.  On a real TPU the right tiles are MXU-shaped
+# (128x128x128) so the (bm, bk)+(bk, bn) working set stays in VMEM.  Under
+# interpret=True on CPU-PJRT, every grid step costs ~1 ms of interpreter
+# overhead (dynamic-slice + copy per step), so the fast configuration is
+# ONE grid step with whole-array blocks — same kernel, degenerate grid.
+# `SFLGA_TILE` (read at AOT/lowering time) restores fixed tiling to inspect
+# the TPU schedule; DESIGN.md §Perf records the measured difference.
+import os
+
+_TILE = int(os.environ.get("SFLGA_TILE", "0"))  # 0 = whole-array blocks
+TPU_TILE = 128  # the MXU edge used when SFLGA_TILE=128
+
+DEFAULT_BM = _TILE if _TILE > 0 else None
+DEFAULT_BN = _TILE if _TILE > 0 else None
+DEFAULT_BK = _TILE if _TILE > 0 else None
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return ((x + b - 1) // b) * b
+
+
+def _resolve_block(b, dim: int) -> int:
+    """None -> cover the whole (8-aligned) dimension in one step."""
+    padded = _ceil_to(dim, 8)
+    return padded if b is None else min(b, padded)
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """One grid step: accumulate x_tile @ w_tile into the output tile.
+
+    The output BlockSpec maps every k index to the same (i, j) tile, so
+    o_ref acts as the VMEM accumulator across the K reduction.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul_raw(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bm: int | None = DEFAULT_BM,
+    bn: int | None = DEFAULT_BN,
+    bk: int | None = DEFAULT_BK,
+) -> jax.Array:
+    """Pallas blocked matmul without a VJP rule (padding handled here).
+
+    Inputs of any (m, k) x (k, n) shape; internally zero-padded to block
+    multiples (zero rows/cols contribute nothing to the product).
+    """
+    m, kdim = x.shape
+    k2, n = w.shape
+    if kdim != k2:
+        raise ValueError(f"matmul shape mismatch: {x.shape} @ {w.shape}")
+
+    bm = _resolve_block(bm, m)
+    bn = _resolve_block(bn, n)
+    bk = _resolve_block(bk, kdim)
+
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(kdim, bk)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - kdim))) if (mp, kp) != (m, kdim) else x
+    wp = jnp.pad(w, ((0, kp - kdim), (0, np_ - n))) if (kp, np_) != (kdim, n) else w
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp.astype(jnp.float32), wp.astype(jnp.float32))
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Differentiable Pallas matmul (backward = two Pallas matmuls)."""
+    return matmul_raw(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_raw(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    dx = matmul_raw(g, w.T)
+    dw = matmul_raw(x.T, g)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

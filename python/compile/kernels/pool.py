@@ -1,0 +1,68 @@
+"""2x2 max-pool Pallas kernel (stride 2, NHWC).
+
+One grid step per example: the (h, w, c) block stays in VMEM and the
+windowed max is a reshape + reduce — no HBM traffic between the loads and
+the single pooled store.
+
+The custom VJP routes the upstream gradient to the argmax positions
+(ties split evenly), computed with plain jnp ops on the saved forward
+output — max-pool backward is pure data movement, so there is nothing for
+the MXU to do and a Pallas backward kernel would buy nothing.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_kernel(x_ref, o_ref):
+    x = x_ref[...]  # (1, h, w, c)
+    _, h, w, c = x.shape
+    o_ref[...] = x.reshape(1, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def maxpool2x2_raw(x: jax.Array) -> jax.Array:
+    """Forward-only Pallas max-pool; input NHWC with even h, w."""
+    b, h, w, c = x.shape
+    if h % 2 or w % 2:
+        raise ValueError(f"maxpool2x2 needs even spatial dims, got {x.shape}")
+    return pl.pallas_call(
+        _pool_kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, h // 2, w // 2, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h // 2, w // 2, c), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))
+
+
+@jax.custom_vjp
+def maxpool2x2(x: jax.Array) -> jax.Array:
+    """Differentiable 2x2/stride-2 max pool."""
+    return maxpool2x2_raw(x)
+
+
+def _up2(y: jax.Array) -> jax.Array:
+    """Nearest-neighbour 2x upsample of NHWC."""
+    return jnp.repeat(jnp.repeat(y, 2, axis=1), 2, axis=2)
+
+
+def _pool_fwd(x):
+    out = maxpool2x2_raw(x)
+    return out, (x, out)
+
+
+def _pool_bwd(res, g):
+    x, out = res
+    mask = (x == _up2(out)).astype(g.dtype)
+    # Split gradient evenly among tied maxima within each window.
+    counts = mask.reshape(
+        x.shape[0], x.shape[1] // 2, 2, x.shape[2] // 2, 2, x.shape[3]
+    ).sum(axis=(2, 4))
+    dx = mask * _up2(g / jnp.maximum(counts, 1.0))
+    return (dx,)
+
+
+maxpool2x2.defvjp(_pool_fwd, _pool_bwd)

@@ -1,0 +1,50 @@
+"""Pure-jnp/lax oracle for every L1 kernel — the correctness ground truth.
+
+No Pallas anywhere in this file.  pytest/hypothesis sweeps assert
+``kernels.* == ref.*`` (values and gradients) across shapes and dtypes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array, act: str = "none") -> jax.Array:
+    z = matmul(x, w) + b
+    if act == "relu":
+        z = jnp.maximum(z, 0.0)
+    elif act != "none":
+        raise ValueError(f"unknown activation {act!r}")
+    return z
+
+
+def conv2d(x: jax.Array, w: jax.Array, b: jax.Array, act: str = "none") -> jax.Array:
+    """SAME conv, stride 1, NHWC x HWIO -> NHWC via lax.conv_general_dilated."""
+    out = lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    out = out + b
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def maxpool2x2(x: jax.Array) -> jax.Array:
+    return lax.reduce_window(
+        x.astype(jnp.float32),
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )

@@ -1,0 +1,220 @@
+"""Split-CNN architecture description: blocks, parameter specs, FLOPs.
+
+The network is the McMahan-style CNN the paper trains (§V-A, [33]) plus one
+extra fc128 block so that every cut v ∈ {1..4} moves parameters between the
+client and the server:
+
+    B1: conv5x5x32 + relu + maxpool2     B4: fc128 + relu
+    B2: conv5x5x64 + relu + maxpool2     B5: fc10 (logits)
+    B3: flatten + fc512 + relu
+
+Cut v means the client owns blocks 1..v and uploads B_v's output (the
+smashed data).  All FLOP counts are *per sample* and feed the paper's
+computation-latency model (eqs 14-16) on the Rust side via the manifest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv, fused, pool
+
+NUM_BLOCKS = 5
+NUM_CUTS = 4  # v in {1..4}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+    block: int  # 1-based block index owning this parameter
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Static description of one dataset's network."""
+
+    name: str            # shape key, e.g. "28x28x1"
+    height: int
+    width: int
+    channels: int
+    classes: int = 10
+    conv1: int = 32
+    conv2: int = 64
+    fc1: int = 512
+    fc2: int = 128
+
+    @property
+    def input_shape(self) -> Tuple[int, int, int]:
+        return (self.height, self.width, self.channels)
+
+    @property
+    def flat_after_conv(self) -> int:
+        return (self.height // 4) * (self.width // 4) * self.conv2
+
+    def param_specs(self) -> List[ParamSpec]:
+        return [
+            ParamSpec("conv1_w", (5, 5, self.channels, self.conv1), 1),
+            ParamSpec("conv1_b", (self.conv1,), 1),
+            ParamSpec("conv2_w", (5, 5, self.conv1, self.conv2), 2),
+            ParamSpec("conv2_b", (self.conv2,), 2),
+            ParamSpec("fc1_w", (self.flat_after_conv, self.fc1), 3),
+            ParamSpec("fc1_b", (self.fc1,), 3),
+            ParamSpec("fc2_w", (self.fc1, self.fc2), 4),
+            ParamSpec("fc2_b", (self.fc2,), 4),
+            ParamSpec("fc3_w", (self.fc2, self.classes), 5),
+            ParamSpec("fc3_b", (self.classes,), 5),
+        ]
+
+    @property
+    def total_params(self) -> int:
+        return sum(p.size for p in self.param_specs())
+
+    def client_param_count(self, cut: int) -> int:
+        """Number of leading parameter arrays owned by the client at cut v."""
+        return sum(1 for p in self.param_specs() if p.block <= cut)
+
+    def phi(self, cut: int) -> int:
+        """Client-side model size φ(v) in parameters (paper §II-A)."""
+        return sum(p.size for p in self.param_specs() if p.block <= cut)
+
+    def smashed_shape(self, cut: int, batch: int) -> Tuple[int, ...]:
+        h2, w2 = self.height // 2, self.width // 2
+        h4, w4 = self.height // 4, self.width // 4
+        return {
+            1: (batch, h2, w2, self.conv1),
+            2: (batch, h4, w4, self.conv2),
+            3: (batch, self.fc1),
+            4: (batch, self.fc2),
+        }[cut]
+
+    # ---------------------------------------------------------- FLOPs
+    def block_flops_fwd(self) -> List[int]:
+        """Forward FLOPs per sample per block (2·MACs convention)."""
+        h, w = self.height, self.width
+        h2, w2 = h // 2, w // 2
+        return [
+            2 * 5 * 5 * self.channels * self.conv1 * h * w,
+            2 * 5 * 5 * self.conv1 * self.conv2 * h2 * w2,
+            2 * self.flat_after_conv * self.fc1,
+            2 * self.fc1 * self.fc2,
+            2 * self.fc2 * self.classes,
+        ]
+
+    def block_flops_bwd(self) -> List[int]:
+        # Standard estimate: backward ≈ 2x forward (grad wrt inputs + weights).
+        return [2 * f for f in self.block_flops_fwd()]
+
+    def flops(self, cut: int) -> dict:
+        """Per-sample FLOPs split at cut v: γ_F^c, γ_B^c, γ_F^s, γ_B^s."""
+        fwd, bwd = self.block_flops_fwd(), self.block_flops_bwd()
+        return {
+            "client_fwd": sum(fwd[:cut]),
+            "client_bwd": sum(bwd[:cut]),
+            "server_fwd": sum(fwd[cut:]),
+            "server_bwd": sum(bwd[cut:]),
+        }
+
+
+# Shape-keyed specs: mnist and fashion-mnist share "28x28x1".
+SPECS = {
+    "28x28x1": ModelSpec("28x28x1", 28, 28, 1),
+    "32x32x3": ModelSpec("32x32x3", 32, 32, 3),
+}
+
+DATASET_SHAPE = {"mnist": "28x28x1", "fmnist": "28x28x1", "cifar10": "32x32x3"}
+
+
+def init_params(spec: ModelSpec, key: jax.Array) -> List[jax.Array]:
+    """He-normal weights, zero biases (matches rust data/init mirror)."""
+    params: List[jax.Array] = []
+    for p in spec.param_specs():
+        key, sub = jax.random.split(key)
+        if len(p.shape) == 1:
+            params.append(jnp.zeros(p.shape, jnp.float32))
+        else:
+            fan_in = math.prod(p.shape[:-1])
+            std = math.sqrt(2.0 / fan_in)
+            params.append(std * jax.random.normal(sub, p.shape, jnp.float32))
+    return params
+
+
+# ------------------------------------------------------------- forward
+
+def apply_block(spec: ModelSpec, idx: int, params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+    """Apply block `idx` (1-based); params = [w, b] for that block."""
+    w, b = params
+    if idx == 1 or idx == 2:
+        x = conv.conv2d(x, w, b, act="relu")
+        return pool.maxpool2x2(x)
+    if idx == 3:
+        x = x.reshape(x.shape[0], -1)
+        return fused.dense(x, w, b, "relu")
+    if idx == 4:
+        return fused.dense(x, w, b, "relu")
+    if idx == 5:
+        return fused.dense(x, w, b, "none")
+    raise ValueError(f"bad block index {idx}")
+
+
+def forward_range(
+    spec: ModelSpec,
+    params: Sequence[jax.Array],
+    x: jax.Array,
+    first_block: int,
+    last_block: int,
+) -> jax.Array:
+    """Apply blocks first..last inclusive; params are that range's arrays."""
+    i = 0
+    for blk in range(first_block, last_block + 1):
+        x = apply_block(spec, blk, params[i : i + 2], x)
+        i += 2
+    return x
+
+
+def apply_block_ref(spec: ModelSpec, idx: int, params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+    """XLA-native twin of `apply_block` (no Pallas).
+
+    Used only by the *eval* artifact: evaluation is a measurement path, not
+    the paper's training compute, and the big eval batch through the
+    interpret-mode kernels would dominate wall time (DESIGN.md §Perf).
+    The kernel tests prove `ref.* == kernels.*`, so swapping is exact.
+    """
+    from .kernels import ref
+
+    w, b = params
+    if idx == 1 or idx == 2:
+        x = ref.conv2d(x, w, b, act="relu")
+        return ref.maxpool2x2(x)
+    if idx == 3:
+        x = x.reshape(x.shape[0], -1)
+        return ref.dense(x, w, b, "relu")
+    if idx == 4:
+        return ref.dense(x, w, b, "relu")
+    if idx == 5:
+        return ref.dense(x, w, b, "none")
+    raise ValueError(f"bad block index {idx}")
+
+
+def forward_range_ref(
+    spec: ModelSpec,
+    params: Sequence[jax.Array],
+    x: jax.Array,
+    first_block: int,
+    last_block: int,
+) -> jax.Array:
+    """`forward_range` built on the XLA-native reference ops."""
+    i = 0
+    for blk in range(first_block, last_block + 1):
+        x = apply_block_ref(spec, blk, params[i : i + 2], x)
+        i += 2
+    return x

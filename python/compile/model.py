@@ -1,0 +1,176 @@
+"""L2: the split CNN's five AOT roles (pure functions of arrays).
+
+Every role is a pure JAX function over flat argument lists (no pytrees in
+the signature beyond python lists, which flatten in order), so the lowered
+HLO's parameter order is exactly the manifest's declared order and the Rust
+runtime can feed buffers positionally:
+
+  client_fwd(wc..., x)                -> (smashed,)
+  server_grad(ws..., smashed, y1h)    -> (loss, g_ws..., g_smashed)
+  client_grad(wc..., x, g_smashed)    -> (g_wc...,)
+  full_grad(w..., x, y1h)             -> (loss, g_w...)
+  eval_batch(w..., x, y1h)            -> (loss, correct_count)
+
+`server_grad`'s `g_smashed` output is the per-client smashed-data gradient
+s_t^n of eq (4); the SFL-GA aggregation s_t = Σ ρ^n s_t^n (eq 5) happens in
+the Rust coordinator, which then feeds the *same* aggregated tensor to every
+client's `client_grad` (the paper's broadcast step).  Traditional SFL/PSL
+feed each client its own s_t^n through the identical artifact — the scheme
+difference lives entirely in L3, as in the paper.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .layers import NUM_BLOCKS, ModelSpec, forward_range
+
+
+def cross_entropy(logits: jax.Array, y1h: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy with one-hot labels."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y1h * logp, axis=-1))
+
+
+def client_fwd(spec: ModelSpec, cut: int, wc: Sequence[jax.Array], x: jax.Array):
+    """Smashed data S_t^n = ℓ(w^c; ξ^n) (eq 1)."""
+    return (forward_range(spec, wc, x, 1, cut),)
+
+
+def server_fwd(spec: ModelSpec, cut: int, ws: Sequence[jax.Array], smashed: jax.Array):
+    return forward_range(spec, ws, smashed, cut + 1, NUM_BLOCKS)
+
+
+def server_grad(
+    spec: ModelSpec,
+    cut: int,
+    ws: Sequence[jax.Array],
+    smashed: jax.Array,
+    y1h: jax.Array,
+):
+    """Loss, server-side grads g^{s,n} (eq 3) and smashed grads s_t^n (eq 4)."""
+
+    def loss_fn(ws_, smashed_):
+        return cross_entropy(server_fwd(spec, cut, ws_, smashed_), y1h)
+
+    loss, (g_ws, g_smashed) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+        list(ws), smashed
+    )
+    return (loss, *g_ws, g_smashed)
+
+
+def client_grad(
+    spec: ModelSpec,
+    cut: int,
+    wc: Sequence[jax.Array],
+    x: jax.Array,
+    g_smashed: jax.Array,
+):
+    """Client-side grads g^c via VJP with the (aggregated) smashed-data
+    gradient injected as the cotangent — eq (6)'s client half."""
+
+    def fwd(wc_):
+        return forward_range(spec, wc_, x, 1, cut)
+
+    _, vjp = jax.vjp(fwd, list(wc))
+    (g_wc,) = vjp(g_smashed)
+    return tuple(g_wc)
+
+
+def full_grad(spec: ModelSpec, w: Sequence[jax.Array], x: jax.Array, y1h: jax.Array):
+    """FL baseline: loss + gradient of the complete model."""
+
+    def loss_fn(w_):
+        return cross_entropy(forward_range(spec, w_, x, 1, NUM_BLOCKS), y1h)
+
+    loss, g_w = jax.value_and_grad(loss_fn)(list(w))
+    return (loss, *g_w)
+
+
+def eval_batch(spec: ModelSpec, w: Sequence[jax.Array], x: jax.Array, y1h: jax.Array):
+    """Mean loss + correct-prediction count (f32) on one eval batch.
+
+    Uses the XLA-native forward (`forward_range_ref`) — evaluation is a
+    measurement path; the Pallas kernels stay on the training hot path.
+    Exactness is covered by the kernel-vs-ref test suite."""
+    logits = layers.forward_range_ref(spec, w, x, 1, NUM_BLOCKS)
+    loss = cross_entropy(logits, y1h)
+    correct = jnp.sum(
+        (jnp.argmax(logits, axis=-1) == jnp.argmax(y1h, axis=-1)).astype(jnp.float32)
+    )
+    return (loss, correct)
+
+
+# --------------------------------------------------------- role builders
+
+def make_role(spec: ModelSpec, role: str, cut: int, batch: int):
+    """Return (fn, example_args) for jax.jit(fn).lower(*example_args).
+
+    The returned fn takes *flat* positional array arguments in manifest
+    order.  `cut` is ignored for full_grad/eval.
+    """
+    f32 = jnp.float32
+    specs = spec.param_specs()
+    n_client = spec.client_param_count(cut) if cut else 0
+    x_shape = (batch, *spec.input_shape)
+    y_shape = (batch, spec.classes)
+    smashed = spec.smashed_shape(cut, batch) if cut else None
+
+    def arg(shape):
+        return jax.ShapeDtypeStruct(shape, f32)
+
+    if role == "client_fwd":
+        wc_shapes = [p.shape for p in specs[:n_client]]
+
+        def fn(*args):
+            wc, x = list(args[:n_client]), args[n_client]
+            return client_fwd(spec, cut, wc, x)
+
+        return fn, [arg(s) for s in wc_shapes] + [arg(x_shape)]
+
+    if role == "server_grad":
+        ws_shapes = [p.shape for p in specs[n_client:]]
+        n_server = len(ws_shapes)
+
+        def fn(*args):
+            ws = list(args[:n_server])
+            smashed_, y1h = args[n_server], args[n_server + 1]
+            return server_grad(spec, cut, ws, smashed_, y1h)
+
+        return fn, [arg(s) for s in ws_shapes] + [arg(smashed), arg(y_shape)]
+
+    if role == "client_grad":
+        wc_shapes = [p.shape for p in specs[:n_client]]
+
+        def fn(*args):
+            wc = list(args[:n_client])
+            x, gs = args[n_client], args[n_client + 1]
+            return client_grad(spec, cut, wc, x, gs)
+
+        return fn, [arg(s) for s in wc_shapes] + [arg(x_shape), arg(smashed)]
+
+    if role == "full_grad":
+        all_shapes = [p.shape for p in specs]
+        n_all = len(all_shapes)
+
+        def fn(*args):
+            w = list(args[:n_all])
+            return full_grad(spec, w, args[n_all], args[n_all + 1])
+
+        return fn, [arg(s) for s in all_shapes] + [arg(x_shape), arg(y_shape)]
+
+    if role == "eval":
+        all_shapes = [p.shape for p in specs]
+        n_all = len(all_shapes)
+
+        def fn(*args):
+            w = list(args[:n_all])
+            return eval_batch(spec, w, args[n_all], args[n_all + 1])
+
+        return fn, [arg(s) for s in all_shapes] + [arg(x_shape), arg(y_shape)]
+
+    raise ValueError(f"unknown role {role!r}")

@@ -1,0 +1,70 @@
+"""AOT path tests: HLO-text emission and manifest structure."""
+
+import json
+
+import jax
+import pytest
+
+from compile import aot, model
+from compile.layers import NUM_CUTS, SPECS
+
+jax.config.update("jax_platform_name", "cpu")
+
+SPEC = SPECS["28x28x1"]
+
+
+def test_to_hlo_text_emits_parseable_module():
+    fn, args = model.make_role(SPEC, "client_fwd", 1, 4)
+    text = aot.lower_role(SPEC, "client_fwd", 1, 4)
+    assert text.startswith("HloModule"), text[:40]
+    # return_tuple=True => a tuple root somewhere in the entry computation.
+    assert "ENTRY" in text
+    assert "tuple(" in text or "(f32[" in text
+
+
+def test_lower_role_client_fwd_has_params_plus_input():
+    text = aot.lower_role(SPEC, "client_fwd", 2, 8)
+    # cut 2: 4 client params + x = 5 parameters in the ENTRY computation
+    # (nested while-body computations declare their own parameters, so
+    # count only after the ENTRY marker).
+    entry = text[text.index("ENTRY") :]
+    count = entry.count("parameter(")
+    assert count == 5, f"expected 5 entry parameters, found {count}"
+
+
+@pytest.mark.parametrize("role", ["server_grad", "client_grad", "full_grad", "eval"])
+def test_lower_all_roles_smoke(role):
+    cut = 0 if role in ("full_grad", "eval") else 3
+    batch = 16 if role == "eval" else 4
+    text = aot.lower_role(SPEC, role, cut, batch)
+    assert text.startswith("HloModule")
+    assert len(text) > 500
+
+
+def test_shape_manifest_structure():
+    files = {}
+    for cut in range(1, NUM_CUTS + 1):
+        for role in aot.ROLES_PER_CUT:
+            files[(cut, role)] = f"f_{cut}_{role}"
+    for role in aot.ROLES_GLOBAL:
+        files[(0, role)] = f"f_{role}"
+    m = aot.shape_manifest(SPEC, files)
+    assert m["total_params"] == SPEC.total_params
+    assert len(m["params"]) == 10
+    assert set(m["cuts"]) == {"1", "2", "3", "4"}
+    c2 = m["cuts"]["2"]
+    assert c2["phi"] == SPEC.phi(2)
+    assert c2["smashed_shape"] == [aot.TRAIN_BATCH, 7, 7, 64]
+    assert c2["artifacts"]["client_fwd"] == "f_2_client_fwd"
+    # JSON-serializable end to end.
+    json.dumps(m)
+
+
+def test_manifest_flops_are_consistent():
+    files = {(c, r): "x" for c in range(1, NUM_CUTS + 1) for r in aot.ROLES_PER_CUT}
+    files.update({(0, r): "x" for r in aot.ROLES_GLOBAL})
+    m = aot.shape_manifest(SPEC, files)
+    totals = set()
+    for cut in m["cuts"].values():
+        totals.add(cut["flops_client_fwd"] + cut["flops_server_fwd"])
+    assert len(totals) == 1, "fwd FLOPs must sum to the same total at every cut"

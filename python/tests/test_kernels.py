@@ -1,0 +1,203 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp ref oracle.
+
+Hypothesis sweeps shapes/dtypes; every property asserts allclose on both
+values and gradients (where the kernel defines a VJP).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv, fused, matmul, pool, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIM = st.integers(min_value=1, max_value=48)
+SMALL = st.integers(min_value=1, max_value=12)
+DTYPES = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------- matmul
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIM, k=DIM, n=DIM, seed=st.integers(0, 2**31 - 1), dtype=DTYPES)
+def test_matmul_matches_ref(m, k, n, seed, dtype):
+    kx, kw = _keys(seed, 2)
+    x, w = _rand(kx, (m, k), dtype), _rand(kw, (k, n), dtype)
+    got = matmul.matmul(x, w)
+    want = ref.matmul(x, w)
+    np.testing.assert_allclose(got, want, rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=SMALL, k=SMALL, n=SMALL, seed=st.integers(0, 2**31 - 1))
+def test_matmul_grads_match_ref(m, k, n, seed):
+    kx, kw, kg = _keys(seed, 3)
+    x, w = _rand(kx, (m, k)), _rand(kw, (k, n))
+    cot = _rand(kg, (m, n))
+
+    def loss_kernel(x, w):
+        return jnp.sum(matmul.matmul(x, w) * cot)
+
+    def loss_ref(x, w):
+        return jnp.sum(ref.matmul(x, w) * cot)
+
+    gx, gw = jax.grad(loss_kernel, argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(loss_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, rx, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw, rw, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_blocked_large_exact_tiles():
+    """Shapes that are exact multiples of the 128 default blocks."""
+    kx, kw = _keys(7, 2)
+    x, w = _rand(kx, (256, 384)), _rand(kw, (384, 128))
+    np.testing.assert_allclose(matmul.matmul(x, w), ref.matmul(x, w),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        matmul.matmul_raw(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+
+
+# ---------------------------------------------------------------- dense
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIM, k=DIM, n=DIM, seed=st.integers(0, 2**31 - 1),
+       act=st.sampled_from(["relu", "none"]))
+def test_dense_matches_ref(m, k, n, seed, act):
+    kx, kw, kb = _keys(seed, 3)
+    x, w, b = _rand(kx, (m, k)), _rand(kw, (k, n)), _rand(kb, (n,))
+    got = fused.dense(x, w, b, act)
+    want = ref.dense(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=SMALL, k=SMALL, n=SMALL, seed=st.integers(0, 2**31 - 1),
+       act=st.sampled_from(["relu", "none"]))
+def test_dense_grads_match_ref(m, k, n, seed, act):
+    kx, kw, kb, kg = _keys(seed, 4)
+    x, w, b = _rand(kx, (m, k)), _rand(kw, (k, n)), _rand(kb, (n,))
+    cot = _rand(kg, (m, n))
+
+    def loss_kernel(x, w, b):
+        return jnp.sum(fused.dense(x, w, b, act) * cot)
+
+    def loss_ref(x, w, b):
+        return jnp.sum(ref.dense(x, w, b, act) * cot)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+def test_dense_relu_clamps_negative():
+    x = jnp.array([[-1.0, 1.0]])
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros(2)
+    out = fused.dense(x, w, b, "relu")
+    np.testing.assert_allclose(out, [[0.0, 1.0]], atol=1e-6)
+
+
+# ---------------------------------------------------------------- conv2d
+
+@settings(max_examples=12, deadline=None)
+@given(b=st.integers(1, 3), h=st.integers(2, 10), w=st.integers(2, 10),
+       cin=st.integers(1, 4), cout=st.integers(1, 6),
+       k=st.sampled_from([1, 3, 5]), seed=st.integers(0, 2**31 - 1),
+       act=st.sampled_from(["relu", "none"]))
+def test_conv2d_matches_ref(b, h, w, cin, cout, k, seed, act):
+    kx, kw, kb = _keys(seed, 3)
+    x = _rand(kx, (b, h, w, cin))
+    wt = _rand(kw, (k, k, cin, cout)) * 0.3
+    bias = _rand(kb, (cout,)) * 0.1
+    got = conv.conv2d(x, wt, bias, act=act)
+    want = ref.conv2d(x, wt, bias, act=act)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_conv2d_grads_match_ref(seed):
+    kx, kw, kb, kg = _keys(seed, 4)
+    x = _rand(kx, (2, 6, 6, 3))
+    wt = _rand(kw, (3, 3, 3, 4)) * 0.3
+    bias = _rand(kb, (4,)) * 0.1
+    cot = _rand(kg, (2, 6, 6, 4))
+
+    def loss_kernel(x, wt, bias):
+        return jnp.sum(conv.conv2d(x, wt, bias) * cot)
+
+    def loss_ref(x, wt, bias):
+        return jnp.sum(ref.conv2d(x, wt, bias) * cot)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, wt, bias)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, wt, bias)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-3, atol=1e-4)
+
+
+def test_im2col_layout_matches_hwio_flatten():
+    """patches @ w.reshape(-1, cout) must equal the reference conv."""
+    kx, kw = _keys(3, 2)
+    x = _rand(kx, (1, 4, 4, 2))
+    wt = _rand(kw, (3, 3, 2, 5))
+    patches = conv.im2col(x, 3, 3)
+    out = (patches @ wt.reshape(-1, 5)).reshape(1, 4, 4, 5)
+    want = ref.conv2d(x, wt, jnp.zeros(5))
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------- maxpool
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 3), h=st.sampled_from([2, 4, 8, 14]),
+       w=st.sampled_from([2, 4, 8, 14]), c=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_maxpool_matches_ref(b, h, w, c, seed):
+    x = _rand(_keys(seed, 1)[0], (b, h, w, c))
+    np.testing.assert_allclose(pool.maxpool2x2(x), ref.maxpool2x2(x),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_maxpool_grads_match_ref(seed):
+    kx, kg = _keys(seed, 2)
+    x = _rand(kx, (2, 4, 4, 3))
+    cot = _rand(kg, (2, 2, 2, 3))
+
+    def loss_kernel(x):
+        return jnp.sum(pool.maxpool2x2(x) * cot)
+
+    def loss_ref(x):
+        return jnp.sum(ref.maxpool2x2(x) * cot)
+
+    np.testing.assert_allclose(jax.grad(loss_kernel)(x), jax.grad(loss_ref)(x),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_maxpool_tie_splits_gradient():
+    """Equal values in a window split the incoming gradient evenly."""
+    x = jnp.ones((1, 2, 2, 1))
+    g = jax.grad(lambda x: jnp.sum(pool.maxpool2x2(x)))(x)
+    np.testing.assert_allclose(g, jnp.full((1, 2, 2, 1), 0.25), atol=1e-6)
+
+
+def test_maxpool_odd_shape_rejected():
+    with pytest.raises(ValueError):
+        pool.maxpool2x2_raw(jnp.zeros((1, 3, 4, 1)))

@@ -1,0 +1,159 @@
+"""L2 model tests: split/full equivalence, gradient identities, manifest math.
+
+The key reproduction invariant: for every cut v, the split pipeline
+(client_fwd -> server_grad -> client_grad) must equal the monolithic
+full_grad — i.e. splitting is exact, and the ONLY behavioural difference
+between SFL-GA and SFL is which smashed-gradient tensor L3 feeds back.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.layers import DATASET_SHAPE, NUM_CUTS, SPECS, init_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+SPEC = SPECS["28x28x1"]
+BATCH = 4
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(SPEC, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def batch():
+    kx, ky = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(kx, (BATCH, *SPEC.input_shape), jnp.float32)
+    labels = jax.random.randint(ky, (BATCH,), 0, SPEC.classes)
+    y1h = jax.nn.one_hot(labels, SPEC.classes, dtype=jnp.float32)
+    return x, y1h
+
+
+@pytest.mark.parametrize("cut", range(1, NUM_CUTS + 1))
+def test_split_forward_equals_full(params, batch, cut):
+    x, _ = batch
+    nc = SPEC.client_param_count(cut)
+    (smashed,) = model.client_fwd(SPEC, cut, params[:nc], x)
+    assert smashed.shape == SPEC.smashed_shape(cut, BATCH)
+    logits_split = model.server_fwd(SPEC, cut, params[nc:], smashed)
+    logits_full = model.server_fwd(SPEC, 0, params, x)
+    np.testing.assert_allclose(logits_split, logits_full, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("cut", range(1, NUM_CUTS + 1))
+def test_split_gradients_equal_full(params, batch, cut):
+    """server_grad ∘ client_grad == full_grad (chain rule is exact)."""
+    x, y1h = batch
+    nc = SPEC.client_param_count(cut)
+    (smashed,) = model.client_fwd(SPEC, cut, params[:nc], x)
+    loss_s, *rest = model.server_grad(SPEC, cut, params[nc:], smashed, y1h)
+    g_ws, g_smashed = rest[:-1], rest[-1]
+    g_wc = model.client_grad(SPEC, cut, params[:nc], x, g_smashed)
+
+    loss_f, *g_full = model.full_grad(SPEC, params, x, y1h)
+    np.testing.assert_allclose(loss_s, loss_f, rtol=1e-5, atol=1e-6)
+    split_grads = list(g_wc) + list(g_ws)
+    assert len(split_grads) == len(g_full)
+    for a, b in zip(split_grads, g_full):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-5)
+
+
+def test_gradient_aggregation_linearity(params, batch):
+    """Aggregating smashed-gradients then running client_grad equals
+    aggregating per-client client-side gradients (eq 5/6 commute):
+    the client-side VJP is linear in the cotangent."""
+    cut = 2
+    x, _ = batch
+    nc = SPEC.client_param_count(cut)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    g1 = jax.random.normal(k1, SPEC.smashed_shape(cut, BATCH), jnp.float32)
+    g2 = jax.random.normal(k2, SPEC.smashed_shape(cut, BATCH), jnp.float32)
+    rho1, rho2 = 0.3, 0.7
+    agg = model.client_grad(SPEC, cut, params[:nc], x, rho1 * g1 + rho2 * g2)
+    sep1 = model.client_grad(SPEC, cut, params[:nc], x, g1)
+    sep2 = model.client_grad(SPEC, cut, params[:nc], x, g2)
+    for a, b1, b2 in zip(agg, sep1, sep2):
+        np.testing.assert_allclose(a, rho1 * b1 + rho2 * b2, rtol=1e-3, atol=1e-5)
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.array([[2.0, 0.0, -1.0], [0.5, 0.5, 0.5]])
+    y = jnp.array([[1.0, 0.0, 0.0], [0.0, 1.0, 0.0]])
+    want = -np.mean(
+        [
+            np.log(np.exp(2.0) / np.exp([2.0, 0.0, -1.0]).sum()),
+            np.log(np.exp(0.5) / np.exp([0.5, 0.5, 0.5]).sum()),
+        ]
+    )
+    np.testing.assert_allclose(model.cross_entropy(logits, y), want, rtol=1e-6)
+
+
+def test_eval_batch_counts_correct(params, batch):
+    x, y1h = batch
+    loss, correct = model.eval_batch(SPEC, params, x, y1h)
+    logits = model.server_fwd(SPEC, 0, params, x)
+    want = np.sum(np.argmax(logits, -1) == np.argmax(y1h, -1))
+    assert float(correct) == pytest.approx(want)
+    assert float(loss) > 0.0
+
+
+def test_training_reduces_loss(params, batch):
+    """A few SGD steps on full_grad must reduce the loss — the whole
+    compute stack is trainable end-to-end."""
+    x, y1h = batch
+    w = [p for p in params]
+    loss0, *g = model.full_grad(SPEC, w, x, y1h)
+    for _ in range(8):
+        loss, *g = model.full_grad(SPEC, w, x, y1h)
+        w = [wi - 0.01 * gi for wi, gi in zip(w, g)]
+    loss1, *_ = model.full_grad(SPEC, w, x, y1h)
+    assert float(loss1) < float(loss0)
+
+
+# ------------------------------------------------------------ spec math
+
+@pytest.mark.parametrize("key", list(SPECS))
+def test_phi_monotone_in_cut(key):
+    spec = SPECS[key]
+    phis = [spec.phi(v) for v in range(1, NUM_CUTS + 1)]
+    assert all(a <= b for a, b in zip(phis, phis[1:]))
+    assert phis[-1] < spec.total_params  # server always keeps the head
+
+
+@pytest.mark.parametrize("key", list(SPECS))
+def test_flops_split_sums_to_total(key):
+    spec = SPECS[key]
+    total_f = sum(spec.block_flops_fwd())
+    total_b = sum(spec.block_flops_bwd())
+    for v in range(1, NUM_CUTS + 1):
+        fl = spec.flops(v)
+        assert fl["client_fwd"] + fl["server_fwd"] == total_f
+        assert fl["client_bwd"] + fl["server_bwd"] == total_b
+
+
+def test_known_phi_values_mnist():
+    """DESIGN.md table: φ(1)=832, φ(2)=52 096, φ(3)=1 658 240, φ(4)=1 723 904."""
+    spec = SPECS["28x28x1"]
+    assert [spec.phi(v) for v in (1, 2, 3, 4)] == [832, 52096, 1658240, 1723904]
+
+
+def test_dataset_shape_mapping_complete():
+    assert set(DATASET_SHAPE) == {"mnist", "fmnist", "cifar10"}
+    assert all(v in SPECS for v in DATASET_SHAPE.values())
+
+
+@pytest.mark.parametrize("cut", range(1, NUM_CUTS + 1))
+def test_make_role_shapes_consistent(cut):
+    """Example-arg shapes fed to jit.lower must match what the role expects."""
+    fn, args = model.make_role(SPEC, "server_grad", cut, 8)
+    out = jax.eval_shape(fn, *args)
+    # loss, g_ws..., g_smashed
+    n_server = len(SPEC.param_specs()) - SPEC.client_param_count(cut)
+    assert len(out) == 1 + n_server + 1
+    assert out[0].shape == ()
+    assert tuple(out[-1].shape) == SPEC.smashed_shape(cut, 8)

@@ -1,0 +1,39 @@
+//! Allocator benchmarks: P2.1 solve cost vs client count and channel
+//! conditions.  The solver sits on Algorithm 1's inner loop (one solve per
+//! DDQN exploration step) AND on every optimally-allocated round, so its
+//! latency budget is < ~10 ms for N=10 (DESIGN.md §Perf).
+
+use sfl_ga::allocator::RoundProblem;
+use sfl_ga::benchlib::bench;
+use sfl_ga::util::rng::Pcg;
+use sfl_ga::wireless::{avg_gain, dbm_to_watt};
+
+fn problem(n: usize, seed: u64) -> RoundProblem {
+    let mut rng = Pcg::new(seed, 0xBE7C);
+    RoundProblem {
+        x_up_bits: 3.2e6,
+        x_down_bits: 3.2e6,
+        gains: (0..n)
+            .map(|_| avg_gain(rng.range(0.05, 0.5)) * rng.exponential(1.0).max(0.05))
+            .collect(),
+        a: vec![1.8; n],
+        d: vec![3.6; n],
+        c: (0..n).map(|_| rng.range(1e9, 6e9)).collect(),
+        b_total: 20e6,
+        f_total: 100e9,
+        p_max: dbm_to_watt(25.0),
+        p_server: dbm_to_watt(33.0),
+        n0: dbm_to_watt(-174.0),
+    }
+}
+
+fn main() {
+    println!("== allocator (P2.1) ==");
+    for n in [2, 5, 10, 20, 50] {
+        let p = problem(n, n as u64);
+        bench(&format!("solve_optimal/N={n}"), 3, 20, || p.solve().chi);
+    }
+    let p = problem(10, 99);
+    bench("solve_equal/N=10", 10, 200, || p.solve_equal().chi);
+    bench("psi_star/N=10", 10, 500, || p.psi_star());
+}

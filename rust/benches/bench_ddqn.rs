@@ -1,0 +1,31 @@
+//! DDQN benchmarks: act/train-step latency of the pure-Rust agent at the
+//! Algorithm-1 configuration (state dim N+1, 64x64 hidden, batch 32).
+
+use sfl_ga::benchlib::bench;
+use sfl_ga::ddqn::{DdqnAgent, DdqnConfig, Transition};
+
+fn main() {
+    println!("== ddqn ==");
+    let cfg = DdqnConfig {
+        state_dim: 11,
+        num_actions: 4,
+        hidden: vec![64, 64],
+        batch: 32,
+        warmup: 32,
+        ..Default::default()
+    };
+    let mut agent = DdqnAgent::new(cfg, 7);
+    let state = vec![0.3f32; 11];
+    for i in 0..256 {
+        agent.remember(Transition {
+            state: state.clone(),
+            action: i % 4,
+            reward: -(i as f64) * 0.1,
+            next_state: state.clone(),
+            done: i % 20 == 0,
+        });
+    }
+    bench("act(eps-greedy)", 100, 2000, || agent.act(&state));
+    bench("greedy_forward", 100, 2000, || agent.greedy(&state));
+    bench("train_step(batch=32)", 20, 300, || agent.train_step());
+}

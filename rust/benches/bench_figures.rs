@@ -1,0 +1,56 @@
+//! Figure-harness benchmarks: the timing-model sweeps behind Fig. 8 and
+//! the per-round cost model of Figs. 5/6 (no NN training — these isolate
+//! the simulation/optimization layers that every figure run multiplies).
+
+use sfl_ga::benchlib::bench;
+use sfl_ga::coordinator::timing::{round_latency, AllocPolicy};
+use sfl_ga::coordinator::SchemeKind;
+use sfl_ga::latency::ComputeConfig;
+use sfl_ga::model::Manifest;
+use sfl_ga::wireless::{Channel, NetConfig};
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping bench_figures: run `make artifacts` first");
+        return Ok(());
+    }
+    println!("== figure timing models ==");
+    let manifest = Manifest::load(dir)?;
+    let spec = manifest.for_dataset("mnist")?.clone();
+    let net = NetConfig::default();
+    let comp = ComputeConfig::default();
+    let mut ch = Channel::new(net.clone(), 10, 11);
+    let st = ch.draw_round();
+
+    for scheme in SchemeKind::all() {
+        bench(&format!("round_latency_opt/{}", scheme.name()), 2, 30, || {
+            round_latency(scheme, &spec, spec.cut(2), &net, &comp, &st, AllocPolicy::Optimal, 1)
+                .total()
+        });
+    }
+    bench("round_latency_equal/sfl-ga", 10, 200, || {
+        round_latency(SchemeKind::SflGa, &spec, spec.cut(2), &net, &comp, &st, AllocPolicy::Equal, 1)
+            .total()
+    });
+    // Fig. 8's full sweep: 6 bandwidths x 4 schemes x K draws.
+    bench("fig8_sweep(6bw x 4schemes x 5draws)", 1, 5, || {
+        let mut total = 0.0;
+        for bw in [5.0, 10.0, 15.0, 20.0, 25.0, 30.0] {
+            let net = NetConfig { bandwidth: bw * 1e6, ..Default::default() };
+            let mut ch = Channel::new(net.clone(), 10, bw as u64);
+            for _ in 0..5 {
+                let st = ch.draw_round();
+                for scheme in SchemeKind::all() {
+                    total += round_latency(
+                        scheme, &spec, spec.cut(2), &net, &comp, &st,
+                        AllocPolicy::Optimal, 1,
+                    )
+                    .total();
+                }
+            }
+        }
+        total
+    });
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! End-to-end round benchmarks: real wall time of one communication round
+//! per scheme (compute via PJRT + aggregation + bookkeeping), plus the
+//! per-round hot-path pieces (aggregation saxpy, channel draw, comm/timing
+//! models).  This is the paper's Table-less "system cost" view.
+
+use sfl_ga::benchlib::bench;
+use sfl_ga::coordinator::{SchemeKind, TrainConfig, Trainer};
+use sfl_ga::model::Manifest;
+use sfl_ga::tensor;
+use sfl_ga::util::rng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping bench_round: run `make artifacts` first");
+        return Ok(());
+    }
+    println!("== end-to-end rounds ==");
+    let manifest = Manifest::load(dir)?;
+    for scheme in SchemeKind::all() {
+        let cfg = TrainConfig {
+            scheme,
+            rounds: 1_000_000, // never reached; we drive rounds manually
+            eval_every: usize::MAX,
+            samples_per_client: 64,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(dir, &manifest, cfg)?;
+        bench(&format!("round/{}", scheme.name()), 1, 8, || {
+            let st = trainer.draw_channel();
+            trainer.run_round(2, &st).unwrap().train_loss
+        });
+    }
+
+    println!("== hot-path pieces ==");
+    let mut rng = Pcg::new(3, 3);
+    // Smashed-gradient aggregation at v=2: 10 tensors of 32*3136 floats.
+    let parts: Vec<Vec<f32>> = (0..10)
+        .map(|_| (0..32 * 3136).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let refs: Vec<&[f32]> = parts.iter().map(|v| v.as_slice()).collect();
+    let rho = vec![0.1f64; 10];
+    bench("aggregate_smashed_grads(10x100k)", 10, 200, || {
+        tensor::weighted_sum_flat(&refs, &rho)
+    });
+
+    // Server-side model aggregation at v=2 (~1.67M params over 10 parts).
+    let model_parts: Vec<Vec<Vec<f32>>> = (0..10)
+        .map(|_| vec![(0..1_673_098 / 2).map(|_| rng.normal() as f32).collect::<Vec<f32>>(); 2])
+        .collect();
+    let model_refs: Vec<&Vec<Vec<f32>>> = model_parts.iter().collect();
+    bench("aggregate_server_models(10x1.67M)", 2, 20, || {
+        tensor::weighted_sum(&model_refs, &rho)
+    });
+
+    let mut channel = sfl_ga::wireless::Channel::new(Default::default(), 10, 1);
+    bench("channel_draw(N=10)", 100, 5000, || channel.draw_round());
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! Golden-section search for 1-D unimodal minimization, plus generic
+//! monotone bisection — the numeric primitives behind the P2.1 solver.
+
+/// Minimize a unimodal `f` on [lo, hi]; returns (argmin, min).
+pub fn golden_min<F: Fn(f64) -> f64>(mut lo: f64, mut hi: f64, iters: usize, f: F) -> (f64, f64) {
+    debug_assert!(lo <= hi);
+    const INV_PHI: f64 = 0.618_033_988_749_894_8;
+    let mut x1 = hi - INV_PHI * (hi - lo);
+    let mut x2 = lo + INV_PHI * (hi - lo);
+    let mut f1 = f(x1);
+    let mut f2 = f(x2);
+    for _ in 0..iters {
+        if f1 <= f2 {
+            hi = x2;
+            x2 = x1;
+            f2 = f1;
+            x1 = hi - INV_PHI * (hi - lo);
+            f1 = f(x1);
+        } else {
+            lo = x1;
+            x1 = x2;
+            f1 = f2;
+            x2 = lo + INV_PHI * (hi - lo);
+            f2 = f(x2);
+        }
+    }
+    let xm = 0.5 * (lo + hi);
+    (xm, f(xm))
+}
+
+/// Smallest x in [lo, hi] with pred(x) true, assuming pred is monotone
+/// (false..false true..true). Returns None if pred(hi) is false.
+pub fn bisect_first_true<F: Fn(f64) -> bool>(
+    lo: f64,
+    hi: f64,
+    iters: usize,
+    pred: F,
+) -> Option<f64> {
+    if !pred(hi) {
+        return None;
+    }
+    if pred(lo) {
+        return Some(lo);
+    }
+    let (mut lo, mut hi) = (lo, hi);
+    for _ in 0..iters {
+        let mid = 0.5 * (lo + hi);
+        if pred(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_finds_parabola_min() {
+        let (x, fx) = golden_min(-10.0, 10.0, 80, |x| (x - 3.0).powi(2) + 1.0);
+        assert!((x - 3.0).abs() < 1e-6, "x = {x}");
+        assert!((fx - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn golden_handles_boundary_min() {
+        let (x, _) = golden_min(0.0, 5.0, 80, |x| x); // min at lo
+        assert!(x < 1e-6);
+        let (x, _) = golden_min(0.0, 5.0, 80, |x| -x); // min at hi
+        assert!((x - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn golden_asymmetric_unimodal() {
+        // min of x + 1/x on (0, inf) is at x=1.
+        let (x, fx) = golden_min(1e-3, 100.0, 100, |x| x + 1.0 / x);
+        assert!((x - 1.0).abs() < 1e-4, "x = {x}");
+        assert!((fx - 2.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn bisect_finds_threshold() {
+        let x = bisect_first_true(0.0, 10.0, 60, |x| x >= 7.25).unwrap();
+        assert!((x - 7.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bisect_none_when_never_true() {
+        assert!(bisect_first_true(0.0, 1.0, 60, |_| false).is_none());
+    }
+
+    #[test]
+    fn bisect_lo_when_always_true() {
+        assert_eq!(bisect_first_true(2.0, 3.0, 60, |_| true), Some(2.0));
+    }
+}

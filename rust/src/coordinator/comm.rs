@@ -1,0 +1,145 @@
+//! Communication accounting — the quantity Fig. 4 plots and the reason
+//! SFL-GA exists.
+//!
+//! Per communication round (τ local epochs), in bits:
+//!
+//! | scheme | uplink                                   | downlink                         |
+//! |--------|------------------------------------------|----------------------------------|
+//! | SFL-GA | τ·Σ_n (smashed + labels)                 | τ·smashed (ONE broadcast, eq 5)  |
+//! | SFL    | τ·Σ_n (smashed + labels) + Σ_n |w^c|     | τ·Σ_n smashed + |w^c| broadcast  |
+//! | PSL    | τ·Σ_n (smashed + labels)                 | τ·Σ_n smashed (unicast each)     |
+//! | FL     | Σ_n |w|                                  | |w| broadcast                    |
+//!
+//! SFL's extra |w^c| terms are the synchronous client-side model
+//! aggregation SFL-GA eliminates; the τ·(N−1)·smashed downlink gap between
+//! PSL and SFL-GA is the gradient-aggregation saving itself.
+
+use crate::latency::ComputeConfig;
+use crate::model::{CutSpec, ShapeSpec};
+
+use super::SchemeKind;
+
+/// One round's communication volume in bits.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RoundComm {
+    pub uplink_bits: f64,
+    pub downlink_bits: f64,
+}
+
+impl RoundComm {
+    pub fn total_bits(&self) -> f64 {
+        self.uplink_bits + self.downlink_bits
+    }
+
+    pub fn total_mbytes(&self) -> f64 {
+        self.total_bits() / 8.0 / 1e6
+    }
+}
+
+/// Bits for one round of `scheme` at cut v with `n` clients and τ epochs.
+pub fn round_comm(
+    scheme: SchemeKind,
+    spec: &ShapeSpec,
+    cut: &CutSpec,
+    cfg: &ComputeConfig,
+    n_clients: usize,
+    tau: usize,
+) -> RoundComm {
+    let n = n_clients as f64;
+    let tau = tau as f64;
+    let smashed = crate::latency::smashed_bits(cut, cfg);
+    let labels = crate::latency::label_bits(spec, cfg);
+    let wc_bits = crate::latency::model_bits(cut.phi, cfg);
+    let w_bits = crate::latency::model_bits(spec.total_params, cfg);
+    match scheme {
+        // The drift ablation exchanges exactly what SFL-GA exchanges.
+        SchemeKind::SflGa | SchemeKind::SflGaDrift => RoundComm {
+            uplink_bits: tau * n * (smashed + labels),
+            downlink_bits: tau * smashed,
+        },
+        SchemeKind::Sfl => RoundComm {
+            uplink_bits: tau * n * (smashed + labels) + n * wc_bits,
+            downlink_bits: tau * n * smashed + wc_bits,
+        },
+        SchemeKind::Psl => RoundComm {
+            uplink_bits: tau * n * (smashed + labels),
+            downlink_bits: tau * n * smashed,
+        },
+        SchemeKind::Fl => RoundComm {
+            uplink_bits: n * w_bits,
+            downlink_bits: w_bits,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Manifest;
+
+    fn setup() -> Option<(ShapeSpec, ComputeConfig)> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        Some((m.for_dataset("mnist").unwrap().clone(), ComputeConfig::default()))
+    }
+
+    #[test]
+    fn sfl_ga_strictly_cheaper_than_psl_and_sfl() {
+        let Some((spec, cfg)) = setup() else { return };
+        for v in 1..=4 {
+            let cut = spec.cut(v);
+            for n in [2, 10, 50] {
+                let ga = round_comm(SchemeKind::SflGa, &spec, cut, &cfg, n, 1);
+                let psl = round_comm(SchemeKind::Psl, &spec, cut, &cfg, n, 1);
+                let sfl = round_comm(SchemeKind::Sfl, &spec, cut, &cfg, n, 1);
+                assert!(ga.total_bits() < psl.total_bits());
+                assert!(psl.total_bits() < sfl.total_bits());
+                // Uplink identical for GA and PSL; the saving is downlink.
+                assert_eq!(ga.uplink_bits, psl.uplink_bits);
+                assert_eq!(psl.downlink_bits, ga.downlink_bits * n as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn gradient_aggregation_saving_formula() {
+        // PSL − SFL-GA downlink = (N−1)·τ·smashed bits exactly.
+        let Some((spec, cfg)) = setup() else { return };
+        let cut = spec.cut(2);
+        let n = 10;
+        let tau = 3;
+        let ga = round_comm(SchemeKind::SflGa, &spec, cut, &cfg, n, tau);
+        let psl = round_comm(SchemeKind::Psl, &spec, cut, &cfg, n, tau);
+        let smashed = crate::latency::smashed_bits(cut, &cfg);
+        assert_eq!(
+            psl.downlink_bits - ga.downlink_bits,
+            (n - 1) as f64 * tau as f64 * smashed
+        );
+    }
+
+    #[test]
+    fn fl_scales_with_model_not_batch() {
+        let Some((spec, cfg)) = setup() else { return };
+        let cut = spec.cut(1);
+        let fl1 = round_comm(SchemeKind::Fl, &spec, cut, &cfg, 10, 1);
+        let fl5 = round_comm(SchemeKind::Fl, &spec, cut, &cfg, 10, 5);
+        assert_eq!(fl1, fl5, "FL comm is per-round, independent of tau");
+        let w_bits = spec.total_params as f64 * 32.0;
+        assert_eq!(fl1.uplink_bits, 10.0 * w_bits);
+        assert_eq!(fl1.downlink_bits, w_bits);
+    }
+
+    #[test]
+    fn sfl_carries_client_model_aggregation_traffic() {
+        let Some((spec, cfg)) = setup() else { return };
+        let cut = spec.cut(3); // big client model
+        let sfl = round_comm(SchemeKind::Sfl, &spec, cut, &cfg, 4, 1);
+        let psl = round_comm(SchemeKind::Psl, &spec, cut, &cfg, 4, 1);
+        let wc = cut.phi as f64 * 32.0;
+        assert_eq!(sfl.uplink_bits - psl.uplink_bits, 4.0 * wc);
+        assert_eq!(sfl.downlink_bits - psl.downlink_bits, wc);
+    }
+}

@@ -1,0 +1,148 @@
+//! Round-stats collection and CSV export for the figure harnesses.
+
+use std::path::Path;
+
+use crate::util::csvio::CsvWriter;
+
+use super::trainer::RoundStats;
+use super::SchemeKind;
+
+/// Accumulated series for one training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub scheme: String,
+    pub dataset: String,
+    pub rows: Vec<Row>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Row {
+    pub round: usize,
+    pub cut: usize,
+    pub train_loss: f64,
+    pub cum_comm_mb: f64,
+    pub cum_latency_s: f64,
+    pub test_loss: f64,
+    pub test_acc: f64,
+    /// True when test_loss/test_acc were freshly measured this round.
+    pub evaluated: bool,
+}
+
+impl RunMetrics {
+    pub fn new(scheme: SchemeKind, dataset: &str) -> RunMetrics {
+        RunMetrics {
+            scheme: scheme.name().to_string(),
+            dataset: dataset.to_string(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Fold a round's stats in, carrying forward the last test metrics.
+    pub fn push(&mut self, stats: &RoundStats) {
+        let (prev_comm, prev_lat, prev_tl, prev_ta) = self
+            .rows
+            .last()
+            .map(|r| (r.cum_comm_mb, r.cum_latency_s, r.test_loss, r.test_acc))
+            .unwrap_or((0.0, 0.0, f64::NAN, f64::NAN));
+        let (test_loss, test_acc, evaluated) = match stats.test {
+            Some((l, a)) => (l, a, true),
+            None => (prev_tl, prev_ta, false),
+        };
+        self.rows.push(Row {
+            round: stats.round,
+            cut: stats.cut,
+            train_loss: stats.train_loss,
+            cum_comm_mb: prev_comm + stats.comm.total_mbytes(),
+            cum_latency_s: prev_lat + stats.latency.total(),
+            test_loss,
+            test_acc,
+            evaluated,
+        });
+    }
+
+    /// Latest accuracy (NaN before the first eval).
+    pub fn final_accuracy(&self) -> f64 {
+        self.rows.last().map(|r| r.test_acc).unwrap_or(f64::NAN)
+    }
+
+    pub fn total_comm_mb(&self) -> f64 {
+        self.rows.last().map(|r| r.cum_comm_mb).unwrap_or(0.0)
+    }
+
+    pub fn total_latency_s(&self) -> f64 {
+        self.rows.last().map(|r| r.cum_latency_s).unwrap_or(0.0)
+    }
+
+    /// Write the full series (one row per round).
+    pub fn write_csv<P: AsRef<Path>>(&self, path: P) -> anyhow::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &[
+                "scheme", "dataset", "round", "cut", "train_loss",
+                "cum_comm_mb", "cum_latency_s", "test_loss", "test_acc", "evaluated",
+            ],
+        )?;
+        for r in &self.rows {
+            w.row(&[
+                self.scheme.clone(),
+                self.dataset.clone(),
+                r.round.to_string(),
+                r.cut.to_string(),
+                format!("{:.6}", r.train_loss),
+                format!("{:.6}", r.cum_comm_mb),
+                format!("{:.6}", r.cum_latency_s),
+                format!("{:.6}", r.test_loss),
+                format!("{:.6}", r.test_acc),
+                r.evaluated.to_string(),
+            ])?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::comm::RoundComm;
+    use crate::coordinator::timing::RoundLatency;
+
+    fn stats(round: usize, test: Option<(f64, f64)>) -> RoundStats {
+        RoundStats {
+            round,
+            cut: 2,
+            train_loss: 1.0,
+            comm: RoundComm { uplink_bits: 8e6, downlink_bits: 8e6 },
+            latency: RoundLatency { uplink_leg: 0.5, downlink_leg: 0.5 },
+            test,
+        }
+    }
+
+    #[test]
+    fn accumulates_and_carries_forward() {
+        let mut m = RunMetrics::new(SchemeKind::SflGa, "mnist");
+        m.push(&stats(1, Some((2.0, 0.4))));
+        m.push(&stats(2, None));
+        m.push(&stats(3, Some((1.0, 0.6))));
+        assert_eq!(m.rows.len(), 3);
+        assert!((m.rows[1].cum_comm_mb - 4.0).abs() < 1e-9); // 2 * 16Mbit = 4 MB
+        assert_eq!(m.rows[1].test_acc, 0.4); // carried forward
+        assert!(!m.rows[1].evaluated);
+        assert_eq!(m.final_accuracy(), 0.6);
+        assert!((m.total_latency_s() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_roundtrip_row_count() {
+        let mut m = RunMetrics::new(SchemeKind::Psl, "cifar10");
+        for r in 1..=5 {
+            m.push(&stats(r, Some((1.0, 0.5))));
+        }
+        let dir = std::env::temp_dir().join(format!("sflga_metrics_{}", std::process::id()));
+        let path = dir.join("run.csv");
+        m.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 6); // header + 5 rows
+        assert!(text.starts_with("scheme,dataset,round"));
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+}

@@ -1,0 +1,74 @@
+//! The paper's training frameworks: SFL-GA plus the SFL / PSL / FL
+//! baselines, with communication accounting ([`comm`]), simulated wireless
+//! timing ([`timing`]) and metrics collection ([`metrics`]).
+
+pub mod comm;
+pub mod metrics;
+pub mod timing;
+pub mod trainer;
+
+pub use comm::RoundComm;
+pub use metrics::RunMetrics;
+pub use timing::{AllocPolicy, RoundLatency};
+pub use trainer::{RoundStats, TrainConfig, Trainer};
+
+/// The four training schemes the paper evaluates, plus one ablation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchemeKind {
+    /// The paper's contribution: aggregated smashed-gradient broadcast,
+    /// with the client-independent g^c of eq (19) (shared client model).
+    SflGa,
+    /// ABLATION — the *literal per-client* reading of §II-A: every client
+    /// backprops the aggregated cotangent through its own data and keeps
+    /// its own w^c with no aggregation.  Same communication volume as
+    /// SflGa; diverges at large cuts (see DESIGN.md §SFL-GA gradient
+    /// semantics).  Not part of the paper's evaluation.
+    SflGaDrift,
+    /// Traditional SplitFed [11]: unicast gradients + client-side FedAvg.
+    Sfl,
+    /// Parallel split learning: unicast gradients, no client aggregation.
+    Psl,
+    /// FedAvg on the full model.
+    Fl,
+}
+
+impl SchemeKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchemeKind::SflGa => "sfl-ga",
+            SchemeKind::SflGaDrift => "sfl-ga-drift",
+            SchemeKind::Sfl => "sfl",
+            SchemeKind::Psl => "psl",
+            SchemeKind::Fl => "fl",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<SchemeKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "sfl-ga" | "sflga" | "ga" => Ok(SchemeKind::SflGa),
+            "sfl-ga-drift" | "drift" => Ok(SchemeKind::SflGaDrift),
+            "sfl" => Ok(SchemeKind::Sfl),
+            "psl" => Ok(SchemeKind::Psl),
+            "fl" | "fedavg" => Ok(SchemeKind::Fl),
+            other => anyhow::bail!("unknown scheme '{other}' (sfl-ga|sfl-ga-drift|sfl|psl|fl)"),
+        }
+    }
+
+    /// The paper's four evaluated schemes (the drift ablation excluded).
+    pub fn all() -> [SchemeKind; 4] {
+        [SchemeKind::SflGa, SchemeKind::Sfl, SchemeKind::Psl, SchemeKind::Fl]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_names_roundtrip() {
+        for s in SchemeKind::all() {
+            assert_eq!(SchemeKind::parse(s.name()).unwrap(), s);
+        }
+        assert!(SchemeKind::parse("bogus").is_err());
+    }
+}

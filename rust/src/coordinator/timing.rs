@@ -1,0 +1,258 @@
+//! Per-scheme simulated round latency, combining the wireless/compute
+//! models (eqs 12–16, 29) with an allocation policy.
+//!
+//! Downlink differences per scheme:
+//! * SFL-GA broadcasts ONE aggregated gradient — every client receives the
+//!   same transmission concurrently, so the downlink time is the slowest
+//!   client's broadcast reception (eq 13 with the full band).
+//! * SFL / PSL unicast per-client gradients sequentially on the full band
+//!   (TDM), so downlink times add.
+//! * SFL additionally pays client-model upload (uplink, with the round's
+//!   bandwidth allocation) and aggregated-client-model broadcast.
+//! * FL uploads the whole model and receives one model broadcast.
+
+use crate::allocator::Allocation;
+use crate::latency::{self, ComputeConfig};
+use crate::model::{CutSpec, ShapeSpec};
+use crate::wireless::{rate, ChannelState, NetConfig};
+
+use super::SchemeKind;
+
+/// How the round's bandwidth / server-CPU are allocated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocPolicy {
+    /// Solve P2.1 (the paper's Algorithm 1 inner step).
+    Optimal,
+    /// Equal split (the "fixed resource" baseline of Fig. 6).
+    Equal,
+}
+
+/// Latency breakdown for one round.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundLatency {
+    pub uplink_leg: f64,
+    pub downlink_leg: f64,
+}
+
+impl RoundLatency {
+    pub fn total(&self) -> f64 {
+        self.uplink_leg + self.downlink_leg
+    }
+}
+
+/// Simulated latency of one round of `scheme` at cut v (τ epochs).
+///
+/// Split schemes pay τ× the smashed-data exchange; model-aggregation
+/// traffic (SFL's w^c, FL's w) is once per round.
+pub fn round_latency(
+    scheme: SchemeKind,
+    spec: &ShapeSpec,
+    cut: &CutSpec,
+    net: &NetConfig,
+    comp: &ComputeConfig,
+    state: &ChannelState,
+    policy: AllocPolicy,
+    tau: usize,
+) -> RoundLatency {
+    match scheme {
+        SchemeKind::Fl => fl_latency(spec, net, comp, state),
+        _ => split_latency(scheme, spec, cut, net, comp, state, policy, tau),
+    }
+}
+
+/// Allocate resources for the split-scheme uplink leg.
+pub fn allocate(
+    spec: &ShapeSpec,
+    cut: &CutSpec,
+    net: &NetConfig,
+    comp: &ComputeConfig,
+    state: &ChannelState,
+    policy: AllocPolicy,
+) -> Allocation {
+    let problem = crate::allocator::build_problem(spec, cut, net, comp, state);
+    match policy {
+        AllocPolicy::Optimal => problem.solve(),
+        AllocPolicy::Equal => problem.solve_equal(),
+    }
+}
+
+fn split_latency(
+    scheme: SchemeKind,
+    spec: &ShapeSpec,
+    cut: &CutSpec,
+    net: &NetConfig,
+    comp: &ComputeConfig,
+    state: &ChannelState,
+    policy: AllocPolicy,
+    tau: usize,
+) -> RoundLatency {
+    let alloc = allocate(spec, cut, net, comp, state, policy);
+    let n = state.gains.len();
+    let smashed = latency::smashed_bits(cut, comp);
+    let tau_f = tau as f64;
+
+    // Uplink leg: χ from the allocation covers smashed upload + client FP
+    // + server compute (eq 31b), once per epoch.
+    let mut uplink_leg = tau_f * alloc.chi;
+    // Downlink gradients.
+    let down_rates: Vec<f64> = (0..n)
+        .map(|i| rate(net.bandwidth, net.p_server, state.gains[i], net.n0))
+        .collect();
+    // Downlink leg takes the max over clients: the slowest deployment
+    // member gates the BP time under heterogeneity.
+    let f_min = comp
+        .client_flops(n, n as u64)
+        .into_iter()
+        .fold(f64::INFINITY, f64::min);
+    let bwd = latency::client_bwd_latency(cut, comp, f_min);
+    let mut downlink_leg = match scheme {
+        SchemeKind::SflGa | SchemeKind::SflGaDrift => {
+            // One broadcast: all clients listen; slowest receiver gates.
+            let t_bc = down_rates
+                .iter()
+                .map(|&r| latency::comm_latency(smashed, r))
+                .fold(0.0, f64::max);
+            tau_f * (t_bc + bwd)
+        }
+        _ => {
+            // Sequential unicasts: transmissions add; every client then
+            // runs BP (overlapped except the last, so add one bwd).
+            let t_uni: f64 = down_rates
+                .iter()
+                .map(|&r| latency::comm_latency(smashed, r))
+                .sum();
+            tau_f * (t_uni + bwd)
+        }
+    };
+
+    if scheme == SchemeKind::Sfl {
+        // Client-side model aggregation: upload w^c over the allocated
+        // uplink bandwidth, broadcast the aggregate.
+        let wc_bits = latency::model_bits(cut.phi, comp);
+        let up_extra = (0..n)
+            .map(|i| {
+                let r = rate(alloc.bandwidth[i], alloc.power[i], state.gains[i], net.n0);
+                latency::comm_latency(wc_bits, r)
+            })
+            .fold(0.0, f64::max);
+        uplink_leg += up_extra;
+        let bc_extra = down_rates
+            .iter()
+            .map(|&r| latency::comm_latency(wc_bits, r))
+            .fold(0.0, f64::max);
+        downlink_leg += bc_extra;
+    }
+
+    RoundLatency { uplink_leg, downlink_leg }
+}
+
+fn fl_latency(
+    spec: &ShapeSpec,
+    net: &NetConfig,
+    comp: &ComputeConfig,
+    state: &ChannelState,
+) -> RoundLatency {
+    let n = state.gains.len();
+    let w_bits = latency::model_bits(spec.total_params, comp);
+    // Full fwd+bwd locally on the weakest hardware (entire model).
+    let total_fwd: f64 = spec.cuts.last().map(|c| c.flops_client_fwd + c.flops_server_fwd).unwrap();
+    let total_bwd: f64 = spec.cuts.last().map(|c| c.flops_client_bwd + c.flops_server_bwd).unwrap();
+    let f_min = comp
+        .client_flops(n, n as u64)
+        .into_iter()
+        .fold(f64::INFINITY, f64::min);
+    let local = comp.samples_per_round as f64 * (total_fwd + total_bwd) / f_min;
+    // Equal uplink bandwidth split for the model upload.
+    let b_each = net.bandwidth / n as f64;
+    let uplink_leg = (0..n)
+        .map(|i| {
+            let r = rate(b_each, net.p_max, state.gains[i], net.n0);
+            local + latency::comm_latency(w_bits, r)
+        })
+        .fold(0.0, f64::max);
+    let downlink_leg = (0..n)
+        .map(|i| {
+            let r = rate(net.bandwidth, net.p_server, state.gains[i], net.n0);
+            latency::comm_latency(w_bits, r)
+        })
+        .fold(0.0, f64::max);
+    RoundLatency { uplink_leg, downlink_leg }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Manifest;
+    use crate::wireless::Channel;
+
+    fn setup() -> Option<(ShapeSpec, NetConfig, ComputeConfig, ChannelState)> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let spec = m.for_dataset("mnist").unwrap().clone();
+        let net = NetConfig::default();
+        let mut ch = Channel::new(net.clone(), 10, 11);
+        let state = ch.draw_round();
+        Some((spec, net, ComputeConfig::default(), state))
+    }
+
+    #[test]
+    fn broadcast_beats_unicast_downlink() {
+        let Some((spec, net, comp, st)) = setup() else { return };
+        let cut = spec.cut(2);
+        let ga = round_latency(SchemeKind::SflGa, &spec, cut, &net, &comp, &st, AllocPolicy::Equal, 1);
+        let psl = round_latency(SchemeKind::Psl, &spec, cut, &net, &comp, &st, AllocPolicy::Equal, 1);
+        assert!(ga.downlink_leg < psl.downlink_leg, "{} vs {}", ga.downlink_leg, psl.downlink_leg);
+        assert_eq!(ga.uplink_leg, psl.uplink_leg);
+    }
+
+    #[test]
+    fn sfl_pays_model_aggregation_latency() {
+        let Some((spec, net, comp, st)) = setup() else { return };
+        let cut = spec.cut(2);
+        let sfl = round_latency(SchemeKind::Sfl, &spec, cut, &net, &comp, &st, AllocPolicy::Equal, 1);
+        let psl = round_latency(SchemeKind::Psl, &spec, cut, &net, &comp, &st, AllocPolicy::Equal, 1);
+        assert!(sfl.total() > psl.total());
+    }
+
+    #[test]
+    fn optimal_allocation_no_worse_than_equal() {
+        let Some((spec, net, comp, st)) = setup() else { return };
+        for v in 1..=4 {
+            let cut = spec.cut(v);
+            let opt = round_latency(SchemeKind::SflGa, &spec, cut, &net, &comp, &st, AllocPolicy::Optimal, 1);
+            let eq = round_latency(SchemeKind::SflGa, &spec, cut, &net, &comp, &st, AllocPolicy::Equal, 1);
+            assert!(
+                opt.uplink_leg <= eq.uplink_leg * (1.0 + 1e-6),
+                "v={v}: {} > {}",
+                opt.uplink_leg,
+                eq.uplink_leg
+            );
+        }
+    }
+
+    #[test]
+    fn fl_slowest_on_weak_clients() {
+        // With 0.1 GHz clients and a 1.7M-param model, FL's local compute
+        // dominates every split scheme (the paper's Fig. 5 ordering).
+        let Some((spec, net, comp, st)) = setup() else { return };
+        let cut = spec.cut(2);
+        let fl = round_latency(SchemeKind::Fl, &spec, cut, &net, &comp, &st, AllocPolicy::Equal, 1);
+        let ga = round_latency(SchemeKind::SflGa, &spec, cut, &net, &comp, &st, AllocPolicy::Optimal, 1);
+        assert!(fl.total() > ga.total(), "fl {} vs ga {}", fl.total(), ga.total());
+    }
+
+    #[test]
+    fn tau_scales_exchange_but_not_aggregation() {
+        let Some((spec, net, comp, st)) = setup() else { return };
+        let cut = spec.cut(1);
+        let l1 = round_latency(SchemeKind::Sfl, &spec, cut, &net, &comp, &st, AllocPolicy::Equal, 1);
+        let l3 = round_latency(SchemeKind::Sfl, &spec, cut, &net, &comp, &st, AllocPolicy::Equal, 3);
+        // τ=3 costs less than 3× τ=1 because the model-aggregation part
+        // is per-round.
+        assert!(l3.total() > 2.0 * l1.total() * 0.9);
+        assert!(l3.total() < 3.0 * l1.total());
+    }
+}

@@ -1,0 +1,446 @@
+//! The SFL-GA training coordinator: runs communication rounds of the
+//! paper's framework (§II-A steps 1–5) and its three baselines over the
+//! PJRT runtime, with full communication/latency accounting.
+//!
+//! Scheme semantics (see DESIGN.md for the discussion):
+//! * **SflGa** — clients upload smashed data; the server updates per-client
+//!   server-side models and aggregates them (eq 7), aggregates the
+//!   smashed-data gradients (eq 5) and *broadcasts one tensor*; every
+//!   client backprops that aggregated cotangent through its own data.
+//!   Per the paper's eqs (6)/(18)/(19), the client-side gradient g_t^c is
+//!   client-independent — all clients hold the same w^c and apply the same
+//!   update, so no synchronous aggregation is needed.  We realize that
+//!   semantics exactly: one shared w^c updated with the ρ-weighted VJP of
+//!   the aggregated cotangent (∇_{w^c} F̃ of eq 19).  The *bias* of that
+//!   gradient vs the true split gradient is the Γ(φ(v)) term of
+//!   Assumption 4 — it grows with the client model, which is what Fig. 3
+//!   measures.
+//! * **Sfl** — per-client smashed-gradient unicast + synchronous client-
+//!   side FedAvg each round (SplitFed [11]).
+//! * **Psl** — per-client unicast, no client-side aggregation.
+//! * **Fl** — FedAvg on the full model.
+//!
+//! Evaluation always scores the *global* model: ρ-weighted client-side
+//! average joined with the server-side model (for FL, the global model).
+
+use std::path::Path;
+
+use crate::data::init::{init_params, join_params, split_params};
+use crate::data::{generate, partition, Batcher, Dataset};
+use crate::latency::ComputeConfig;
+use crate::model::Manifest;
+use crate::runtime::{ModelRuntime, Tensor};
+use crate::tensor::{self, Params};
+use crate::wireless::{Channel, ChannelState, NetConfig};
+
+use super::comm::{round_comm, RoundComm};
+use super::timing::{round_latency, AllocPolicy, RoundLatency};
+use super::SchemeKind;
+
+/// Training configuration (defaults = the paper's §V-A setup).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub dataset: String,
+    pub scheme: SchemeKind,
+    pub num_clients: usize,
+    pub rounds: usize,
+    /// Local epochs τ per round (eq 6).
+    pub tau: usize,
+    pub lr: f32,
+    /// Samples per client shard.
+    pub samples_per_client: usize,
+    /// Test-set size (multiple of the eval artifact batch).
+    pub test_samples: usize,
+    /// Dirichlet α for non-IID splits; None = IID.
+    pub non_iid_alpha: Option<f64>,
+    pub seed: u64,
+    /// Rounds between evaluations.
+    pub eval_every: usize,
+    pub net: NetConfig,
+    pub comp: ComputeConfig,
+    pub alloc: AllocPolicy,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            dataset: "mnist".into(),
+            scheme: SchemeKind::SflGa,
+            num_clients: 10,
+            rounds: 100,
+            tau: 1,
+            lr: 0.02,
+            samples_per_client: 256,
+            test_samples: 2048,
+            non_iid_alpha: None,
+            seed: 17,
+            eval_every: 5,
+            net: NetConfig::default(),
+            comp: ComputeConfig::default(),
+            alloc: AllocPolicy::Optimal,
+        }
+    }
+}
+
+/// Per-round record (metrics.rs turns these into figure CSVs).
+#[derive(Clone, Copy, Debug)]
+pub struct RoundStats {
+    pub round: usize,
+    pub cut: usize,
+    pub train_loss: f64,
+    pub comm: RoundComm,
+    pub latency: RoundLatency,
+    /// Test metrics when this round evaluated (eval_every), else None.
+    pub test: Option<(f64, f64)>, // (loss, accuracy)
+}
+
+/// The coordinator state machine.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    rt: ModelRuntime,
+    train: Dataset,
+    test: Dataset,
+    batchers: Vec<Batcher>,
+    /// Aggregation weights ρ^n = D^n / D.
+    rho: Vec<f64>,
+    channel: Channel,
+    /// Per-client client-side models (all schemes; identical where the
+    /// scheme keeps them synchronized).
+    wc: Vec<Params>,
+    /// Server-side model (split schemes) — the aggregated w^s of eq (7).
+    ws: Params,
+    /// Full global model (FL).
+    w_full: Params,
+    round: usize,
+    /// Cut used in the previous round (dynamic-cut runs resync on change).
+    last_cut: Option<usize>,
+}
+
+impl Trainer {
+    pub fn new(artifact_dir: &Path, manifest: &Manifest, cfg: TrainConfig) -> anyhow::Result<Trainer> {
+        anyhow::ensure!(cfg.num_clients > 0 && cfg.rounds > 0 && cfg.tau > 0);
+        let rt = ModelRuntime::load(artifact_dir, manifest, &cfg.dataset)?;
+        let spec = rt.spec().clone();
+        anyhow::ensure!(
+            cfg.test_samples % spec.eval_batch == 0,
+            "test_samples must be a multiple of the eval batch {}",
+            spec.eval_batch
+        );
+
+        let total = cfg.samples_per_client * cfg.num_clients;
+        let train = generate(&spec, &cfg.dataset, total, cfg.seed);
+        let test = generate(&spec, &cfg.dataset, cfg.test_samples, cfg.seed ^ 0x7E57);
+        let shards = partition(&train, cfg.num_clients, cfg.non_iid_alpha, cfg.seed);
+        let d_total: usize = shards.iter().map(Vec::len).sum();
+        let rho: Vec<f64> = shards.iter().map(|s| s.len() as f64 / d_total as f64).collect();
+        let batchers = shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Batcher::new(s.clone(), spec.train_batch, cfg.seed ^ (i as u64) << 8))
+            .collect();
+
+        let params = init_params(&spec, cfg.seed ^ 0x1417);
+        // Initialize every cut's split from the same full model; the cut in
+        // force selects which prefix the clients own.
+        let wc = vec![params.clone(); cfg.num_clients];
+        let channel = Channel::new(cfg.net.clone(), cfg.num_clients, cfg.seed ^ 0xC4A7);
+
+        Ok(Trainer {
+            rt,
+            train,
+            test,
+            batchers,
+            rho,
+            channel,
+            ws: params.clone(),
+            w_full: params,
+            wc,
+            round: 0,
+            last_cut: None,
+            cfg,
+        })
+    }
+
+    pub fn spec(&self) -> &crate::model::ShapeSpec {
+        self.rt.spec()
+    }
+
+    pub fn rho(&self) -> &[f64] {
+        &self.rho
+    }
+
+    pub fn round_index(&self) -> usize {
+        self.round
+    }
+
+    /// Draw this round's channel (exposed for cut-selection policies that
+    /// observe the state before choosing v — Algorithm 1's MDP state).
+    pub fn draw_channel(&mut self) -> ChannelState {
+        self.channel.draw_round()
+    }
+
+    /// Run one communication round at cut `v` with channel `state`.
+    pub fn run_round(&mut self, cut: usize, state: &ChannelState) -> anyhow::Result<RoundStats> {
+        // Dynamic cut selection (Algorithm 1) moves layer ownership between
+        // the sides; on a cut change, re-anchor every replica to the global
+        // model so the handed-over blocks carry the aggregated weights.
+        if self.last_cut.is_some() && self.last_cut != Some(cut) {
+            let global = self.global_params(self.last_cut.unwrap());
+            for w in &mut self.wc {
+                *w = global.clone();
+            }
+            self.ws = global;
+        }
+        self.last_cut = Some(cut);
+        let loss = match self.cfg.scheme {
+            SchemeKind::SflGa => self.round_sfl_ga(cut, /*shared_wc=*/ true)?,
+            SchemeKind::SflGaDrift => self.round_sfl_ga(cut, /*shared_wc=*/ false)?,
+            SchemeKind::Sfl => self.round_sfl(cut, /*aggregate_clients=*/ true)?,
+            SchemeKind::Psl => self.round_sfl(cut, /*aggregate_clients=*/ false)?,
+            SchemeKind::Fl => self.round_fl()?,
+        };
+        let spec = self.rt.spec().clone();
+        let cut_spec = spec.cut(cut);
+        let comm = round_comm(self.cfg.scheme, &spec, cut_spec, &self.cfg.comp,
+                              self.cfg.num_clients, self.cfg.tau);
+        let latency = round_latency(
+            self.cfg.scheme, &spec, cut_spec, &self.cfg.net, &self.cfg.comp,
+            state, self.cfg.alloc, self.cfg.tau,
+        );
+        self.round += 1;
+        let test = if self.round % self.cfg.eval_every == 0 || self.round == self.cfg.rounds {
+            Some(self.evaluate(cut)?)
+        } else {
+            None
+        };
+        Ok(RoundStats { round: self.round, cut, train_loss: loss, comm, latency, test })
+    }
+
+    /// Convenience: run a full fixed-cut training; returns all stats.
+    pub fn run(&mut self, cut: usize) -> anyhow::Result<Vec<RoundStats>> {
+        let mut out = Vec::with_capacity(self.cfg.rounds);
+        for _ in 0..self.cfg.rounds {
+            let state = self.draw_channel();
+            out.push(self.run_round(cut, &state)?);
+        }
+        Ok(out)
+    }
+
+    // ----------------------------------------------------------- schemes
+
+    /// SFL-GA round (§II-A steps 1–5), τ epochs.
+    ///
+    /// `shared_wc=true` is the paper's eq (19) semantics (one client-side
+    /// gradient, shared model); `shared_wc=false` is the literal
+    /// per-client ablation (own VJP of the aggregated cotangent, own
+    /// model, no aggregation) — SchemeKind::SflGaDrift.
+    fn round_sfl_ga(&mut self, cut: usize, shared_wc: bool) -> anyhow::Result<f64> {
+        let spec = self.rt.spec().clone();
+        let nc = spec.cut(cut).client_params;
+        let mut mean_loss = 0.0;
+        for _ in 0..self.cfg.tau {
+            let n = self.cfg.num_clients;
+            let mut batches = Vec::with_capacity(n);
+            let mut smasheds = Vec::with_capacity(n);
+            // (1) client-side FP in parallel (engine serializes execution;
+            // the simulated latency model accounts the parallel timing).
+            for i in 0..n {
+                let idx = self.batchers[i].next_batch();
+                let (x, y) = self.train.batch(&idx);
+                let wc_i = self.wc[i][..nc].to_vec();
+                let s = self.rt.client_fwd(cut, &wc_i, &x)?;
+                batches.push((x, y));
+                smasheds.push(s);
+            }
+            // (2)(3) server-side update + gradient aggregation.
+            let ws_srv = self.ws[nc..].to_vec();
+            let mut g_ws_parts: Vec<Params> = Vec::with_capacity(n);
+            let mut g_s_parts: Vec<Tensor> = Vec::with_capacity(n);
+            let mut loss_acc = 0.0;
+            for i in 0..n {
+                let (_, y) = &batches[i];
+                let (loss, g_ws, g_s) = self.rt.server_grad(cut, &ws_srv, &smasheds[i], y)?;
+                loss_acc += self.rho[i] * loss as f64;
+                g_ws_parts.push(g_ws);
+                g_s_parts.push(g_s);
+            }
+            // Aggregate server-side models (eq 7) — equivalent to one SGD
+            // step with the ρ-weighted gradient (verified in tests).
+            let g_ws_refs: Vec<&Params> = g_ws_parts.iter().collect();
+            let g_ws = tensor::weighted_sum(&g_ws_refs, &self.rho);
+            let mut ws_new = ws_srv.clone();
+            tensor::sgd_step(&mut ws_new, &g_ws, self.cfg.lr);
+            for (dst, src) in self.ws[nc..].iter_mut().zip(ws_new) {
+                *dst = src;
+            }
+            // Aggregate smashed-data gradients (eq 5).
+            let flat: Vec<&[f32]> = g_s_parts.iter().map(|t| t.data.as_slice()).collect();
+            let g_s_agg = Tensor::new(
+                tensor::weighted_sum_flat(&flat, &self.rho),
+                g_s_parts[0].shape.clone(),
+            );
+            // (4)(5) broadcast + client-side BP with the SAME cotangent.
+            if shared_wc {
+                // g_t^c = Σ_n ρ^n VJP_n(s_agg) — the client-independent
+                // client-side gradient of eq (19); every replica applies
+                // the identical update, so the shared-w^c invariant holds
+                // with NO aggregation traffic.
+                let wc_shared = self.wc[0][..nc].to_vec();
+                let mut g_c_parts: Vec<Params> = Vec::with_capacity(n);
+                for (x, _) in &batches {
+                    g_c_parts.push(self.rt.client_grad(cut, &wc_shared, x, &g_s_agg)?);
+                }
+                let g_c_refs: Vec<&Params> = g_c_parts.iter().collect();
+                let g_c = tensor::weighted_sum(&g_c_refs, &self.rho);
+                for wc_i in &mut self.wc {
+                    for (w, g) in wc_i[..nc].iter_mut().zip(&g_c) {
+                        tensor::saxpy(w, -self.cfg.lr, g);
+                    }
+                }
+            } else {
+                // Drift ablation: each client applies its OWN VJP of the
+                // aggregated cotangent to its OWN w^c replica.
+                for (i, (x, _)) in batches.iter().enumerate() {
+                    let wc_i = self.wc[i][..nc].to_vec();
+                    let g_c = self.rt.client_grad(cut, &wc_i, x, &g_s_agg)?;
+                    for (w, g) in self.wc[i][..nc].iter_mut().zip(&g_c) {
+                        tensor::saxpy(w, -self.cfg.lr, g);
+                    }
+                }
+            }
+            mean_loss += loss_acc / self.cfg.tau as f64;
+        }
+        Ok(mean_loss)
+    }
+
+    /// Traditional SFL [11] (aggregate_clients=true) / PSL (false).
+    fn round_sfl(&mut self, cut: usize, aggregate_clients: bool) -> anyhow::Result<f64> {
+        let spec = self.rt.spec().clone();
+        let nc = spec.cut(cut).client_params;
+        let mut mean_loss = 0.0;
+        for _ in 0..self.cfg.tau {
+            let n = self.cfg.num_clients;
+            let ws_srv = self.ws[nc..].to_vec();
+            let mut g_ws_parts: Vec<Params> = Vec::with_capacity(n);
+            let mut loss_acc = 0.0;
+            for i in 0..n {
+                let idx = self.batchers[i].next_batch();
+                let (x, y) = self.train.batch(&idx);
+                let wc_i = self.wc[i][..nc].to_vec();
+                let s = self.rt.client_fwd(cut, &wc_i, &x)?;
+                let (loss, g_ws, g_s) = self.rt.server_grad(cut, &ws_srv, &s, &y)?;
+                loss_acc += self.rho[i] * loss as f64;
+                g_ws_parts.push(g_ws);
+                // Per-client gradient unicast: own cotangent.
+                let g_c = self.rt.client_grad(cut, &wc_i, &x, &g_s)?;
+                for (w, g) in self.wc[i][..nc].iter_mut().zip(&g_c) {
+                    tensor::saxpy(w, -self.cfg.lr, g);
+                }
+            }
+            let g_ws_refs: Vec<&Params> = g_ws_parts.iter().collect();
+            let g_ws = tensor::weighted_sum(&g_ws_refs, &self.rho);
+            let mut ws_new = ws_srv.clone();
+            tensor::sgd_step(&mut ws_new, &g_ws, self.cfg.lr);
+            for (dst, src) in self.ws[nc..].iter_mut().zip(ws_new) {
+                *dst = src;
+            }
+            mean_loss += loss_acc / self.cfg.tau as f64;
+        }
+        if aggregate_clients {
+            // Synchronous client-side FedAvg (the traffic SFL-GA removes).
+            let parts: Vec<Params> = self.wc.iter().map(|w| w[..nc].to_vec()).collect();
+            let refs: Vec<&Params> = parts.iter().collect();
+            let agg = tensor::weighted_sum(&refs, &self.rho);
+            for w in &mut self.wc {
+                for (dst, src) in w[..nc].iter_mut().zip(&agg) {
+                    dst.copy_from_slice(src);
+                }
+            }
+        }
+        Ok(mean_loss)
+    }
+
+    /// FedAvg baseline: τ local full-model steps, then model aggregation.
+    fn round_fl(&mut self) -> anyhow::Result<f64> {
+        let n = self.cfg.num_clients;
+        let mut locals: Vec<Params> = Vec::with_capacity(n);
+        let mut loss_acc = 0.0;
+        for i in 0..n {
+            let mut w = self.w_full.clone();
+            for e in 0..self.cfg.tau {
+                let idx = self.batchers[i].next_batch();
+                let (x, y) = self.train.batch(&idx);
+                let (loss, g) = self.rt.full_grad(&w, &x, &y)?;
+                if e == 0 {
+                    loss_acc += self.rho[i] * loss as f64;
+                }
+                tensor::sgd_step(&mut w, &g, self.cfg.lr);
+            }
+            locals.push(w);
+        }
+        let refs: Vec<&Params> = locals.iter().collect();
+        self.w_full = tensor::weighted_sum(&refs, &self.rho);
+        Ok(loss_acc)
+    }
+
+    // ------------------------------------------------------------- eval
+
+    /// Global model at cut v: ρ-weighted client-side average ++ server side.
+    pub fn global_params(&self, cut: usize) -> Params {
+        if self.cfg.scheme == SchemeKind::Fl {
+            return self.w_full.clone();
+        }
+        let nc = self.rt.spec().cut(cut).client_params;
+        let parts: Vec<Params> = self.wc.iter().map(|w| w[..nc].to_vec()).collect();
+        let refs: Vec<&Params> = parts.iter().collect();
+        let wc_avg = tensor::weighted_sum(&refs, &self.rho);
+        join_params(&wc_avg, &self.ws[nc..].to_vec())
+    }
+
+    /// Test-set (loss, accuracy) of the global model.
+    pub fn evaluate(&self, cut: usize) -> anyhow::Result<(f64, f64)> {
+        let w = self.global_params(cut);
+        let spec = self.rt.spec();
+        let eb = spec.eval_batch;
+        let n_batches = self.test.len() / eb;
+        let mut loss = 0.0;
+        let mut correct = 0.0;
+        for b in 0..n_batches {
+            let idx: Vec<usize> = (b * eb..(b + 1) * eb).collect();
+            let (x, y) = self.test.batch(&idx);
+            let (l, c) = self.rt.eval(&w, &x, &y)?;
+            loss += l as f64;
+            correct += c as f64;
+        }
+        Ok((loss / n_batches as f64, correct / (n_batches * eb) as f64))
+    }
+
+    /// Max |Δ| between two clients' client-side models — the drift Γ(φ)
+    /// bounds (diagnostics + tests).
+    pub fn client_drift(&self, cut: usize) -> f64 {
+        let nc = self.rt.spec().cut(cut).client_params;
+        let mut m = 0.0f64;
+        for i in 1..self.wc.len() {
+            let a: Params = self.wc[0][..nc].to_vec();
+            let b: Params = self.wc[i][..nc].to_vec();
+            m = m.max(tensor::max_abs_diff(&a, &b));
+        }
+        m
+    }
+
+    /// Reset all model state (fresh init) without reloading artifacts.
+    pub fn reset(&mut self, seed: u64) {
+        let spec = self.rt.spec().clone();
+        let params = init_params(&spec, seed);
+        self.wc = vec![params.clone(); self.cfg.num_clients];
+        self.ws = params.clone();
+        self.w_full = params;
+        self.round = 0;
+        self.last_cut = None;
+    }
+
+    /// Access the split of the *current* global params (testing).
+    pub fn split_of_global(&self, cut: usize) -> (Params, Params) {
+        split_params(self.rt.spec(), cut, &self.global_params(cut))
+    }
+}

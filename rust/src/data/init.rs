@@ -1,0 +1,105 @@
+//! Parameter initialization mirroring the python side: He-normal weights,
+//! zero biases.  (Bit-identical parity with jax.random is not required —
+//! both inits draw from the same distribution family; equivalence tests
+//! compare *computations* under identical weights, which travel through
+//! the artifacts as explicit inputs.)
+
+use crate::model::ShapeSpec;
+use crate::tensor::Params;
+use crate::util::rng::Pcg;
+
+/// He-normal init for every parameter array of the model.
+pub fn init_params(spec: &ShapeSpec, seed: u64) -> Params {
+    let mut rng = Pcg::new(seed, 0x1417);
+    spec.params
+        .iter()
+        .map(|p| {
+            if p.shape.len() == 1 {
+                vec![0.0f32; p.size()]
+            } else {
+                let fan_in: usize = p.shape[..p.shape.len() - 1].iter().product();
+                let std = (2.0 / fan_in as f64).sqrt();
+                (0..p.size()).map(|_| (rng.normal() * std) as f32).collect()
+            }
+        })
+        .collect()
+}
+
+/// Split a full parameter set at cut v: (client-side, server-side).
+pub fn split_params(spec: &ShapeSpec, cut: usize, params: &Params) -> (Params, Params) {
+    let nc = spec.cut(cut).client_params;
+    (params[..nc].to_vec(), params[nc..].to_vec())
+}
+
+/// Reassemble a full parameter set from the two halves.
+pub fn join_params(wc: &Params, ws: &Params) -> Params {
+    let mut out = wc.clone();
+    out.extend_from_slice(ws);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Manifest;
+
+    fn spec() -> Option<ShapeSpec> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Manifest::load(&dir).unwrap().for_dataset("mnist").unwrap().clone())
+    }
+
+    #[test]
+    fn init_shapes_match_manifest() {
+        let Some(spec) = spec() else { return };
+        let p = init_params(&spec, 0);
+        assert_eq!(p.len(), spec.params.len());
+        for (buf, ps) in p.iter().zip(&spec.params) {
+            assert_eq!(buf.len(), ps.size());
+        }
+    }
+
+    #[test]
+    fn biases_zero_weights_scaled() {
+        let Some(spec) = spec() else { return };
+        let p = init_params(&spec, 1);
+        for (buf, ps) in p.iter().zip(&spec.params) {
+            if ps.shape.len() == 1 {
+                assert!(buf.iter().all(|&x| x == 0.0), "{} not zero", ps.name);
+            } else {
+                let fan_in: usize = ps.shape[..ps.shape.len() - 1].iter().product();
+                let want_std = (2.0 / fan_in as f64).sqrt();
+                let var: f64 =
+                    buf.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / buf.len() as f64;
+                assert!(
+                    (var.sqrt() / want_std - 1.0).abs() < 0.2,
+                    "{}: std {} vs He {}",
+                    ps.name,
+                    var.sqrt(),
+                    want_std
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn split_join_roundtrip() {
+        let Some(spec) = spec() else { return };
+        let p = init_params(&spec, 2);
+        for v in 1..=4 {
+            let (wc, ws) = split_params(&spec, v, &p);
+            assert_eq!(wc.len(), spec.cut(v).client_params);
+            assert_eq!(join_params(&wc, &ws), p);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let Some(spec) = spec() else { return };
+        let a = init_params(&spec, 3);
+        let b = init_params(&spec, 4);
+        assert_ne!(a[0], b[0]);
+    }
+}

@@ -1,0 +1,378 @@
+//! Synthetic dataset substrate (offline substitute for MNIST / Fashion-
+//! MNIST / CIFAR-10 — see DESIGN.md §Substitutions).
+//!
+//! Each class c gets a smoothed random template T_c; a sample is a
+//! randomly shifted, scaled copy of its class template plus pixel noise:
+//!     x = α · shift(T_c, δ) + σ · ε.
+//! Shift invariance makes convolution the right inductive bias (so cut
+//! placement matters like it does on image data), class templates make the
+//! task learnable, and the noise level keeps it non-trivial.  Shapes,
+//! class count and dataset sizes match the real datasets.
+
+pub mod init;
+
+use crate::model::ShapeSpec;
+use crate::runtime::Tensor;
+use crate::util::rng::Pcg;
+
+/// In-memory dataset: row-major samples + integer labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub input_shape: Vec<usize>,
+    pub classes: usize,
+    /// len = n_samples * input_elems.
+    pub x: Vec<f32>,
+    pub labels: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn sample(&self, i: usize) -> &[f32] {
+        let e = self.input_elems();
+        &self.x[i * e..(i + 1) * e]
+    }
+
+    /// Gather samples `idx` into a batch tensor + one-hot label tensor.
+    pub fn batch(&self, idx: &[usize]) -> (Tensor, Tensor) {
+        let e = self.input_elems();
+        let mut xb = Vec::with_capacity(idx.len() * e);
+        let mut yb = vec![0.0f32; idx.len() * self.classes];
+        for (row, &i) in idx.iter().enumerate() {
+            xb.extend_from_slice(self.sample(i));
+            yb[row * self.classes + self.labels[i] as usize] = 1.0;
+        }
+        let mut shape = vec![idx.len()];
+        shape.extend_from_slice(&self.input_shape);
+        (Tensor::new(xb, shape), Tensor::new(yb, vec![idx.len(), self.classes]))
+    }
+}
+
+/// Generator parameters per logical dataset name.
+#[derive(Clone, Debug)]
+pub struct SynthConfig {
+    pub noise: f64,
+    pub shift_max: i64,
+    pub template_smoothing: usize,
+    pub seed: u64,
+}
+
+impl SynthConfig {
+    pub fn for_dataset(name: &str) -> SynthConfig {
+        match name {
+            // fmnist: same shape as mnist, harder (more noise, bigger shifts).
+            "fmnist" => SynthConfig { noise: 0.45, shift_max: 3, template_smoothing: 2, seed: 0xF0 },
+            "cifar10" => SynthConfig { noise: 0.55, shift_max: 3, template_smoothing: 2, seed: 0xC1 },
+            // mnist (default): mild noise, small shifts.
+            _ => SynthConfig { noise: 0.30, shift_max: 2, template_smoothing: 3, seed: 0x30 },
+        }
+    }
+}
+
+/// Smooth a (h, w, c) image in-place with `iters` 3x3 box filters.
+fn box_smooth(img: &mut [f32], h: usize, w: usize, c: usize, iters: usize) {
+    let mut tmp = vec![0.0f32; img.len()];
+    for _ in 0..iters {
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..c {
+                    let mut acc = 0.0;
+                    let mut cnt = 0.0;
+                    for dy in -1i64..=1 {
+                        for dx in -1i64..=1 {
+                            let yy = y as i64 + dy;
+                            let xx = x as i64 + dx;
+                            if (0..h as i64).contains(&yy) && (0..w as i64).contains(&xx) {
+                                acc += img[(yy as usize * w + xx as usize) * c + ch];
+                                cnt += 1.0;
+                            }
+                        }
+                    }
+                    tmp[(y * w + x) * c + ch] = acc / cnt;
+                }
+            }
+        }
+        img.copy_from_slice(&tmp);
+    }
+}
+
+/// Shift a (h, w, c) image by (dy, dx), zero-filling borders.
+fn shift(img: &[f32], h: usize, w: usize, c: usize, dy: i64, dx: i64, out: &mut [f32]) {
+    out.fill(0.0);
+    for y in 0..h as i64 {
+        for x in 0..w as i64 {
+            let sy = y - dy;
+            let sx = x - dx;
+            if (0..h as i64).contains(&sy) && (0..w as i64).contains(&sx) {
+                let src = ((sy as usize * w) + sx as usize) * c;
+                let dst = ((y as usize * w) + x as usize) * c;
+                out[dst..dst + c].copy_from_slice(&img[src..src + c]);
+            }
+        }
+    }
+}
+
+/// Generate `n` samples of dataset `name` with the spec's input geometry.
+pub fn generate(spec: &ShapeSpec, name: &str, n: usize, seed: u64) -> Dataset {
+    let cfg = SynthConfig::for_dataset(name);
+    let (h, w, c) = (spec.input_shape[0], spec.input_shape[1], spec.input_shape[2]);
+    let e = h * w * c;
+    let classes = spec.classes;
+
+    // Class templates from the dataset-identity seed (stable across runs
+    // and across train/test splits).
+    let mut trng = Pcg::new(cfg.seed, 0x7E47u64);
+    let templates: Vec<Vec<f32>> = (0..classes)
+        .map(|_| {
+            let mut t: Vec<f32> = (0..e).map(|_| trng.normal() as f32).collect();
+            box_smooth(&mut t, h, w, c, cfg.template_smoothing);
+            // Normalize template energy so classes are equally separable.
+            let norm = (t.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / e as f64)
+                .sqrt()
+                .max(1e-6) as f32;
+            t.iter_mut().for_each(|v| *v /= norm);
+            t
+        })
+        .collect();
+
+    let mut rng = Pcg::new(seed ^ cfg.seed.rotate_left(17), 0xDA7A);
+    let mut x = vec![0.0f32; n * e];
+    let mut labels = Vec::with_capacity(n);
+    let mut shifted = vec![0.0f32; e];
+    for i in 0..n {
+        let cls = rng.below(classes);
+        labels.push(cls as u8);
+        let dy = rng.below(2 * cfg.shift_max as usize + 1) as i64 - cfg.shift_max;
+        let dx = rng.below(2 * cfg.shift_max as usize + 1) as i64 - cfg.shift_max;
+        shift(&templates[cls], h, w, c, dy, dx, &mut shifted);
+        let alpha = rng.range(0.8, 1.2) as f32;
+        let row = &mut x[i * e..(i + 1) * e];
+        for (o, &s) in row.iter_mut().zip(&shifted) {
+            *o = alpha * s + (cfg.noise * rng.normal()) as f32;
+        }
+    }
+    Dataset { input_shape: spec.input_shape.clone(), classes, x, labels }
+}
+
+/// Split sample indices across `n_clients`: IID (uniform) or label-skewed
+/// via a symmetric Dirichlet(alpha) per class (standard non-IID protocol).
+pub fn partition(
+    ds: &Dataset,
+    n_clients: usize,
+    dirichlet_alpha: Option<f64>,
+    seed: u64,
+) -> Vec<Vec<usize>> {
+    let mut rng = Pcg::new(seed, 0x59117u64);
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); n_clients];
+    match dirichlet_alpha {
+        None => {
+            let mut idx: Vec<usize> = (0..ds.len()).collect();
+            rng.shuffle(&mut idx);
+            for (i, s) in idx.into_iter().enumerate() {
+                shards[i % n_clients].push(s);
+            }
+        }
+        Some(alpha) => {
+            for cls in 0..ds.classes {
+                let mut members: Vec<usize> = (0..ds.len())
+                    .filter(|&i| ds.labels[i] as usize == cls)
+                    .collect();
+                rng.shuffle(&mut members);
+                let props = rng.dirichlet(alpha, n_clients);
+                let mut start = 0usize;
+                for (ci, &p) in props.iter().enumerate() {
+                    let take = if ci + 1 == n_clients {
+                        members.len() - start
+                    } else {
+                        ((p * members.len() as f64).round() as usize)
+                            .min(members.len() - start)
+                    };
+                    shards[ci].extend_from_slice(&members[start..start + take]);
+                    start += take;
+                }
+            }
+            for s in &mut shards {
+                rng.shuffle(s);
+            }
+        }
+    }
+    shards
+}
+
+/// Cycling mini-batch iterator over one client's shard.
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    indices: Vec<usize>,
+    cursor: usize,
+    batch: usize,
+    rng: Pcg,
+}
+
+impl Batcher {
+    pub fn new(mut indices: Vec<usize>, batch: usize, seed: u64) -> Batcher {
+        assert!(!indices.is_empty(), "empty shard");
+        let mut rng = Pcg::new(seed, 0xBA7C);
+        rng.shuffle(&mut indices);
+        Batcher { indices, cursor: 0, batch, rng }
+    }
+
+    /// Next `batch` indices, reshuffling at epoch boundaries; wraps so the
+    /// batch size is always exact (samples may repeat across the seam).
+    pub fn next_batch(&mut self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.batch);
+        while out.len() < self.batch {
+            if self.cursor >= self.indices.len() {
+                self.rng.shuffle(&mut self.indices);
+                self.cursor = 0;
+            }
+            out.push(self.indices[self.cursor]);
+            self.cursor += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Manifest;
+
+    fn mnist_spec() -> Option<ShapeSpec> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Manifest::load(&dir).unwrap().for_dataset("mnist").unwrap().clone())
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let Some(spec) = mnist_spec() else { return };
+        let a = generate(&spec, "mnist", 64, 1);
+        let b = generate(&spec, "mnist", 64, 1);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.labels, b.labels);
+        let c = generate(&spec, "mnist", 64, 2);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn all_classes_present_and_bounded() {
+        let Some(spec) = mnist_spec() else { return };
+        let ds = generate(&spec, "mnist", 500, 3);
+        let mut seen = vec![false; ds.classes];
+        for &l in &ds.labels {
+            seen[l as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "some class missing in 500 draws");
+        assert!(ds.x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn classes_are_separable_by_template_correlation() {
+        // Nearest-template classification on clean correlation should beat
+        // chance by a wide margin — the task is learnable.
+        let Some(spec) = mnist_spec() else { return };
+        let ds = generate(&spec, "mnist", 400, 7);
+        // Recover templates by averaging samples per class.
+        let e = ds.input_elems();
+        let mut means = vec![vec![0.0f64; e]; ds.classes];
+        let mut counts = vec![0usize; ds.classes];
+        for i in 0..ds.len() {
+            let c = ds.labels[i] as usize;
+            counts[c] += 1;
+            for (m, &v) in means[c].iter_mut().zip(ds.sample(i)) {
+                *m += v as f64;
+            }
+        }
+        for (m, &cnt) in means.iter_mut().zip(&counts) {
+            m.iter_mut().for_each(|v| *v /= cnt.max(1) as f64);
+        }
+        let mut correct = 0;
+        for i in 0..ds.len() {
+            let s = ds.sample(i);
+            let best = (0..ds.classes)
+                .max_by(|&a, &b| {
+                    let da: f64 = means[a].iter().zip(s).map(|(m, &v)| m * v as f64).sum();
+                    let db: f64 = means[b].iter().zip(s).map(|(m, &v)| m * v as f64).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == ds.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.len() as f64;
+        assert!(acc > 0.5, "nearest-mean accuracy only {acc}");
+    }
+
+    #[test]
+    fn iid_partition_is_balanced_and_complete() {
+        let Some(spec) = mnist_spec() else { return };
+        let ds = generate(&spec, "mnist", 1000, 5);
+        let shards = partition(&ds, 10, None, 1);
+        assert_eq!(shards.iter().map(Vec::len).sum::<usize>(), 1000);
+        assert!(shards.iter().all(|s| s.len() == 100));
+        let mut all: Vec<usize> = shards.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn dirichlet_partition_skews_labels() {
+        let Some(spec) = mnist_spec() else { return };
+        let ds = generate(&spec, "mnist", 2000, 6);
+        let shards = partition(&ds, 10, Some(0.2), 2);
+        assert_eq!(shards.iter().map(Vec::len).sum::<usize>(), 2000);
+        // With alpha=0.2 at least one client should be visibly skewed:
+        // its most common label > 30% of its data.
+        let skewed = shards.iter().filter(|s| !s.is_empty()).any(|s| {
+            let mut hist = [0usize; 10];
+            for &i in s.iter() {
+                hist[ds.labels[i] as usize] += 1;
+            }
+            let max = *hist.iter().max().unwrap();
+            max as f64 > 0.3 * s.len() as f64
+        });
+        assert!(skewed, "no skew detected at alpha=0.2");
+    }
+
+    #[test]
+    fn batcher_cycles_with_exact_size() {
+        let mut b = Batcher::new((0..7).collect(), 3, 9);
+        let mut seen = vec![0usize; 7];
+        for _ in 0..7 {
+            let batch = b.next_batch();
+            assert_eq!(batch.len(), 3);
+            for i in batch {
+                seen[i] += 1;
+            }
+        }
+        // 21 draws over 7 items: every item drawn ≥ 2 times.
+        assert!(seen.iter().all(|&c| c >= 2), "{seen:?}");
+    }
+
+    #[test]
+    fn batch_tensor_shapes_and_onehot() {
+        let Some(spec) = mnist_spec() else { return };
+        let ds = generate(&spec, "mnist", 50, 8);
+        let (x, y) = ds.batch(&[0, 1, 2]);
+        assert_eq!(x.shape, vec![3, 28, 28, 1]);
+        assert_eq!(y.shape, vec![3, 10]);
+        for row in 0..3 {
+            let r = &y.data[row * 10..(row + 1) * 10];
+            assert_eq!(r.iter().sum::<f32>(), 1.0);
+            assert_eq!(r[ds.labels[row] as usize], 1.0);
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Adam optimizer over the Q-network's per-layer (w, b) buffers.
+
+use super::nn::{Grads, Mlp};
+
+#[derive(Clone, Debug)]
+pub struct AdamConfig {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Adam {
+    cfg: AdamConfig,
+    /// (m, v) moments per layer for (w, b).
+    moments: Vec<(Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>)>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(net: &Mlp, cfg: AdamConfig) -> Adam {
+        let moments = net
+            .layers
+            .iter()
+            .map(|l| {
+                (
+                    vec![0.0; l.w.len()],
+                    vec![0.0; l.w.len()],
+                    vec![0.0; l.b.len()],
+                    vec![0.0; l.b.len()],
+                )
+            })
+            .collect();
+        Adam { cfg, moments, t: 0 }
+    }
+
+    pub fn step(&mut self, net: &mut Mlp, grads: &Grads) {
+        self.t += 1;
+        let b1t = 1.0 - self.cfg.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.cfg.beta2.powi(self.t as i32);
+        for (layer, ((dw, db), (mw, vw, mb, vb))) in net
+            .layers
+            .iter_mut()
+            .zip(grads.layers.iter().map(|(a, b)| (a, b)).zip(&mut self.moments))
+        {
+            update(&mut layer.w, dw, mw, vw, &self.cfg, b1t, b2t);
+            update(&mut layer.b, db, mb, vb, &self.cfg, b1t, b2t);
+        }
+    }
+}
+
+fn update(
+    params: &mut [f32],
+    grads: &[f32],
+    m: &mut [f64],
+    v: &mut [f64],
+    cfg: &AdamConfig,
+    b1t: f64,
+    b2t: f64,
+) {
+    for i in 0..params.len() {
+        let g = grads[i] as f64;
+        m[i] = cfg.beta1 * m[i] + (1.0 - cfg.beta1) * g;
+        v[i] = cfg.beta2 * v[i] + (1.0 - cfg.beta2) * g * g;
+        let mhat = m[i] / b1t;
+        let vhat = v[i] / b2t;
+        params[i] -= (cfg.lr * mhat / (vhat.sqrt() + cfg.eps)) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        // Fit a 1-layer net y = w*x to minimize (w*x - 3x)^2 → w → 3.
+        let mut rng = Pcg::new(2, 2);
+        let mut net = Mlp::new(&[1, 1], &mut rng);
+        let mut opt = Adam::new(&net, AdamConfig { lr: 0.05, ..Default::default() });
+        for _ in 0..600 {
+            let x = [1.0f32];
+            let cache = net.forward_cached(&x);
+            let err = cache.output[0] - 3.0;
+            let mut grads = net.zero_grads();
+            net.backward(&cache, &[err], &mut grads);
+            opt.step(&mut net, &grads);
+        }
+        let out = net.forward(&[1.0])[0];
+        assert!((out - 3.0).abs() < 1e-2, "converged to {out}");
+    }
+
+    #[test]
+    fn step_count_bias_correction() {
+        // First step with grad g moves param by ~lr regardless of g scale.
+        let mut rng = Pcg::new(4, 4);
+        let mut net = Mlp::new(&[1, 1], &mut rng);
+        let w0 = net.layers[0].w[0];
+        let mut opt = Adam::new(&net, AdamConfig { lr: 0.1, ..Default::default() });
+        let mut grads = net.zero_grads();
+        grads.layers[0].0[0] = 1e-4; // tiny gradient
+        opt.step(&mut net, &grads);
+        let dw = (net.layers[0].w[0] - w0).abs();
+        assert!((dw - 0.1).abs() < 0.01, "first-step size {dw}");
+    }
+}

@@ -1,0 +1,270 @@
+//! Double-DQN agent (paper §IV-B2, eqs 38–40).
+//!
+//! Online net selects the argmax action at s'; the target net evaluates it
+//! (eq 40's decoupling), which removes vanilla-DQN's max-operator
+//! overestimation.  ε-greedy exploration with exponential decay; hard
+//! target sync every `target_sync` learner steps.
+
+use super::adam::{Adam, AdamConfig};
+use super::nn::Mlp;
+use super::replay::{Replay, Transition};
+use crate::util::rng::Pcg;
+
+#[derive(Clone, Debug)]
+pub struct DdqnConfig {
+    pub state_dim: usize,
+    pub num_actions: usize,
+    pub hidden: Vec<usize>,
+    pub gamma: f64,
+    pub lr: f64,
+    pub batch: usize,
+    pub replay_capacity: usize,
+    /// Learner steps between hard target-network syncs.
+    pub target_sync: usize,
+    pub eps_start: f64,
+    pub eps_end: f64,
+    /// Multiplicative ε decay per act() call.
+    pub eps_decay: f64,
+    /// Minimum buffered transitions before learning starts.
+    pub warmup: usize,
+}
+
+impl Default for DdqnConfig {
+    fn default() -> Self {
+        DdqnConfig {
+            state_dim: 1,
+            num_actions: 2,
+            hidden: vec![64, 64],
+            gamma: 0.9,
+            lr: 1e-3,
+            batch: 32,
+            replay_capacity: 10_000,
+            target_sync: 100,
+            eps_start: 1.0,
+            eps_end: 0.05,
+            eps_decay: 0.995,
+            warmup: 64,
+        }
+    }
+}
+
+pub struct DdqnAgent {
+    pub cfg: DdqnConfig,
+    online: Mlp,
+    target: Mlp,
+    opt: Adam,
+    replay: Replay,
+    rng: Pcg,
+    eps: f64,
+    steps: usize,
+}
+
+impl DdqnAgent {
+    pub fn new(cfg: DdqnConfig, seed: u64) -> DdqnAgent {
+        let mut rng = Pcg::new(seed, 0xDD01);
+        let mut dims = vec![cfg.state_dim];
+        dims.extend_from_slice(&cfg.hidden);
+        dims.push(cfg.num_actions);
+        let online = Mlp::new(&dims, &mut rng);
+        let mut target = Mlp::new(&dims, &mut rng);
+        target.copy_from(&online);
+        let opt = Adam::new(&online, AdamConfig { lr: cfg.lr, ..Default::default() });
+        let replay = Replay::new(cfg.replay_capacity);
+        let eps = cfg.eps_start;
+        DdqnAgent { cfg, online, target, opt, replay, rng, eps, steps: 0 }
+    }
+
+    pub fn epsilon(&self) -> f64 {
+        self.eps
+    }
+
+    /// Greedy Q-values for diagnostics.
+    pub fn q_values(&self, state: &[f32]) -> Vec<f32> {
+        self.online.forward(state)
+    }
+
+    /// ε-greedy action; decays ε.
+    pub fn act(&mut self, state: &[f32]) -> usize {
+        let a = if self.rng.uniform() < self.eps {
+            self.rng.below(self.cfg.num_actions)
+        } else {
+            self.greedy(state)
+        };
+        self.eps = (self.eps * self.cfg.eps_decay).max(self.cfg.eps_end);
+        a
+    }
+
+    /// Greedy action (no exploration, no decay) — evaluation mode.
+    pub fn greedy(&self, state: &[f32]) -> usize {
+        argmax(&self.online.forward(state))
+    }
+
+    pub fn remember(&mut self, t: Transition) {
+        self.replay.push(t);
+    }
+
+    /// One learner step; returns the minibatch TD loss when training ran.
+    pub fn train_step(&mut self) -> Option<f64> {
+        if self.replay.len() < self.cfg.warmup.max(self.cfg.batch) {
+            return None;
+        }
+        let batch = self.replay.sample(self.cfg.batch, &mut self.rng);
+        let mut grads = self.online.zero_grads();
+        let mut loss = 0.0;
+        let scale = 1.0 / self.cfg.batch as f32;
+        for tr in batch {
+            // Double-Q target (eq 40): a* from online, value from target.
+            let y = if tr.done {
+                tr.reward
+            } else {
+                let a_star = argmax(&self.online.forward(&tr.next_state));
+                let q_next = self.target.forward(&tr.next_state)[a_star] as f64;
+                tr.reward + self.cfg.gamma * q_next
+            };
+            let cache = self.online.forward_cached(&tr.state);
+            let q_sa = cache.output[tr.action] as f64;
+            let err = (q_sa - y) as f32;
+            loss += 0.5 * (err as f64) * (err as f64);
+            let mut dout = vec![0.0f32; self.cfg.num_actions];
+            dout[tr.action] = err * scale;
+            self.online.backward(&cache, &dout, &mut grads);
+        }
+        self.opt.step(&mut self.online, &grads);
+        self.steps += 1;
+        if self.steps % self.cfg.target_sync == 0 {
+            self.target.copy_from(&self.online);
+        }
+        Some(loss / self.cfg.batch as f64)
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_first_on_ties() {
+        assert_eq!(argmax(&[1.0, 1.0, 0.5]), 0);
+        assert_eq!(argmax(&[0.0, 2.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn epsilon_decays_to_floor() {
+        let mut agent = DdqnAgent::new(
+            DdqnConfig { eps_decay: 0.5, eps_end: 0.1, ..Default::default() },
+            1,
+        );
+        for _ in 0..100 {
+            agent.act(&[0.0]);
+        }
+        assert!((agent.epsilon() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_training_before_warmup() {
+        let mut agent = DdqnAgent::new(DdqnConfig { warmup: 10, ..Default::default() }, 2);
+        for _ in 0..5 {
+            agent.remember(Transition {
+                state: vec![0.0],
+                action: 0,
+                reward: 0.0,
+                next_state: vec![0.0],
+                done: false,
+            });
+        }
+        assert!(agent.train_step().is_none());
+    }
+
+    #[test]
+    fn learns_two_armed_bandit() {
+        // Single state, two actions, deterministic rewards 0 / 1.
+        let cfg = DdqnConfig {
+            state_dim: 1,
+            num_actions: 2,
+            hidden: vec![16],
+            gamma: 0.0, // bandit: no bootstrapping
+            lr: 5e-3,
+            batch: 16,
+            warmup: 16,
+            eps_decay: 0.98,
+            ..Default::default()
+        };
+        let mut agent = DdqnAgent::new(cfg, 3);
+        for _ in 0..400 {
+            let a = agent.act(&[1.0]);
+            let r = if a == 1 { 1.0 } else { 0.0 };
+            agent.remember(Transition {
+                state: vec![1.0],
+                action: a,
+                reward: r,
+                next_state: vec![1.0],
+                done: true,
+            });
+            agent.train_step();
+        }
+        assert_eq!(agent.greedy(&[1.0]), 1);
+        let q = agent.q_values(&[1.0]);
+        assert!((q[1] as f64 - 1.0).abs() < 0.2, "Q(good) = {}", q[1]);
+        assert!((q[0] as f64).abs() < 0.3, "Q(bad) = {}", q[0]);
+    }
+
+    #[test]
+    fn learns_chain_mdp_with_bootstrapping() {
+        // Two-state chain: s0 --a1--> s1 (r=0), s1 --a1--> terminal (r=1);
+        // a0 anywhere terminates with r=0.  Optimal: pick a1 twice.
+        // Q*(s0, a1) = γ·1, Q*(s1, a1) = 1.
+        let cfg = DdqnConfig {
+            state_dim: 2,
+            num_actions: 2,
+            hidden: vec![24],
+            gamma: 0.9,
+            lr: 5e-3,
+            batch: 32,
+            warmup: 32,
+            target_sync: 50,
+            eps_decay: 0.995,
+            ..Default::default()
+        };
+        let mut agent = DdqnAgent::new(cfg, 7);
+        let s0 = [1.0f32, 0.0];
+        let s1 = [0.0f32, 1.0];
+        for _ in 0..1500 {
+            // episode
+            let a0 = agent.act(&s0);
+            if a0 == 0 {
+                agent.remember(Transition {
+                    state: s0.to_vec(), action: 0, reward: 0.0,
+                    next_state: s0.to_vec(), done: true,
+                });
+            } else {
+                agent.remember(Transition {
+                    state: s0.to_vec(), action: 1, reward: 0.0,
+                    next_state: s1.to_vec(), done: false,
+                });
+                let a1 = agent.act(&s1);
+                let r = if a1 == 1 { 1.0 } else { 0.0 };
+                agent.remember(Transition {
+                    state: s1.to_vec(), action: a1, reward: r,
+                    next_state: s1.to_vec(), done: true,
+                });
+            }
+            agent.train_step();
+        }
+        assert_eq!(agent.greedy(&s0), 1, "should walk the chain");
+        assert_eq!(agent.greedy(&s1), 1, "should collect the reward");
+        let q1 = agent.q_values(&s1)[1] as f64;
+        assert!((q1 - 1.0).abs() < 0.25, "Q(s1, a1) = {q1}");
+        let q0 = agent.q_values(&s0)[1] as f64;
+        assert!((q0 - 0.9).abs() < 0.3, "Q(s0, a1) = {q0}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Pure-Rust Double-DQN: MLP Q-network + Adam + replay + double-Q targets.
+//! Drives the cutting-point selection subproblem P2.2 (see [`crate::ccc`]).
+
+pub mod adam;
+pub mod agent;
+pub mod nn;
+pub mod replay;
+
+pub use agent::{DdqnAgent, DdqnConfig};
+pub use replay::Transition;

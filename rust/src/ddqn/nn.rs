@@ -1,0 +1,273 @@
+//! Fully-connected Q-network: f32 MLP with ReLU hidden layers and a
+//! linear head, plus exact manual backprop (verified by finite-difference
+//! gradcheck in the tests).  This is the FCNN the paper's complexity
+//! analysis assumes (§IV-C).
+
+use crate::util::rng::Pcg;
+
+/// One dense layer: row-major weights [out][in] + bias.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub n_in: usize,
+    pub n_out: usize,
+}
+
+impl Layer {
+    fn new(n_in: usize, n_out: usize, rng: &mut Pcg) -> Layer {
+        // He-normal for ReLU nets.
+        let std = (2.0 / n_in as f64).sqrt();
+        let w = (0..n_in * n_out)
+            .map(|_| (rng.normal() * std) as f32)
+            .collect();
+        Layer { w, b: vec![0.0; n_out], n_in, n_out }
+    }
+
+    fn forward(&self, x: &[f32], out: &mut Vec<f32>) {
+        debug_assert_eq!(x.len(), self.n_in);
+        out.clear();
+        out.reserve(self.n_out);
+        for o in 0..self.n_out {
+            let row = &self.w[o * self.n_in..(o + 1) * self.n_in];
+            let mut acc = self.b[o];
+            for (wi, xi) in row.iter().zip(x) {
+                acc += wi * xi;
+            }
+            out.push(acc);
+        }
+    }
+}
+
+/// Gradients mirroring a network's layers.
+#[derive(Clone, Debug)]
+pub struct Grads {
+    pub layers: Vec<(Vec<f32>, Vec<f32>)>, // (dW, db) per layer
+}
+
+/// Forward cache for one input: pre-activations per layer + the input.
+pub struct Cache {
+    input: Vec<f32>,
+    /// Post-activation outputs of each hidden layer (ReLU applied).
+    hidden: Vec<Vec<f32>>,
+    /// Final linear output (Q-values).
+    pub output: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub layers: Vec<Layer>,
+}
+
+impl Mlp {
+    /// `dims` = [input, hidden..., output].
+    pub fn new(dims: &[usize], rng: &mut Pcg) -> Mlp {
+        assert!(dims.len() >= 2, "need at least input+output dims");
+        let layers = dims
+            .windows(2)
+            .map(|w| Layer::new(w[0], w[1], rng))
+            .collect();
+        Mlp { layers }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().map(|l| l.w.len() + l.b.len()).sum()
+    }
+
+    /// Q-values for one state.
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        let mut cur = x.to_vec();
+        let mut next = Vec::new();
+        for (i, layer) in self.layers.iter().enumerate() {
+            layer.forward(&cur, &mut next);
+            if i + 1 < self.layers.len() {
+                for v in next.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            std::mem::swap(&mut cur, &mut next);
+        }
+        cur
+    }
+
+    /// Forward keeping activations for backprop.
+    pub fn forward_cached(&self, x: &[f32]) -> Cache {
+        let mut hidden = Vec::with_capacity(self.layers.len() - 1);
+        let mut cur = x.to_vec();
+        let mut next = Vec::new();
+        for (i, layer) in self.layers.iter().enumerate() {
+            layer.forward(&cur, &mut next);
+            if i + 1 < self.layers.len() {
+                for v in next.iter_mut() {
+                    *v = v.max(0.0);
+                }
+                hidden.push(next.clone());
+            }
+            std::mem::swap(&mut cur, &mut next);
+        }
+        Cache { input: x.to_vec(), hidden, output: cur }
+    }
+
+    pub fn zero_grads(&self) -> Grads {
+        Grads {
+            layers: self
+                .layers
+                .iter()
+                .map(|l| (vec![0.0; l.w.len()], vec![0.0; l.b.len()]))
+                .collect(),
+        }
+    }
+
+    /// Accumulate gradients for one sample given dL/d(output).
+    /// ReLU masks are recovered from the cached post-activations.
+    pub fn backward(&self, cache: &Cache, dout: &[f32], grads: &mut Grads) {
+        let nl = self.layers.len();
+        let mut delta = dout.to_vec();
+        for li in (0..nl).rev() {
+            let layer = &self.layers[li];
+            let input: &[f32] = if li == 0 { &cache.input } else { &cache.hidden[li - 1] };
+            let (dw, db) = &mut grads.layers[li];
+            for o in 0..layer.n_out {
+                let d = delta[o];
+                if d != 0.0 {
+                    let row = &mut dw[o * layer.n_in..(o + 1) * layer.n_in];
+                    for (g, xi) in row.iter_mut().zip(input) {
+                        *g += d * xi;
+                    }
+                    db[o] += d;
+                }
+            }
+            if li > 0 {
+                // Propagate: delta_in = W^T delta, masked by ReLU'(hidden).
+                let mut din = vec![0.0f32; layer.n_in];
+                for o in 0..layer.n_out {
+                    let d = delta[o];
+                    if d != 0.0 {
+                        let row = &layer.w[o * layer.n_in..(o + 1) * layer.n_in];
+                        for (di, wi) in din.iter_mut().zip(row) {
+                            *di += d * wi;
+                        }
+                    }
+                }
+                let act = &cache.hidden[li - 1];
+                for (di, &a) in din.iter_mut().zip(act) {
+                    if a <= 0.0 {
+                        *di = 0.0;
+                    }
+                }
+                delta = din;
+            }
+        }
+    }
+
+    /// Hard-copy weights (target-network sync).
+    pub fn copy_from(&mut self, other: &Mlp) {
+        for (dst, src) in self.layers.iter_mut().zip(&other.layers) {
+            dst.w.copy_from_slice(&src.w);
+            dst.b.copy_from_slice(&src.b);
+        }
+    }
+
+    /// Flat views for the optimizer: (&mut w, &mut b) per layer.
+    pub fn params_mut(&mut self) -> Vec<(&mut Vec<f32>, &mut Vec<f32>)> {
+        self.layers.iter_mut().map(|l| (&mut l.w, &mut l.b)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_net() -> Mlp {
+        let mut rng = Pcg::new(1, 1);
+        Mlp::new(&[3, 8, 5, 2], &mut rng)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let net = toy_net();
+        let q = net.forward(&[0.1, -0.2, 0.3]);
+        assert_eq!(q.len(), 2);
+        assert_eq!(net.num_params(), 3 * 8 + 8 + 8 * 5 + 5 + 5 * 2 + 2);
+    }
+
+    #[test]
+    fn cached_forward_matches_plain() {
+        let net = toy_net();
+        let x = [0.5, -1.0, 2.0];
+        let plain = net.forward(&x);
+        let cache = net.forward_cached(&x);
+        assert_eq!(plain, cache.output);
+    }
+
+    #[test]
+    fn gradcheck_against_finite_differences() {
+        let mut net = toy_net();
+        let x = [0.7f32, -0.3, 0.9];
+        // Loss: 0.5 * sum(q^2) → dout = q.
+        let cache = net.forward_cached(&x);
+        let mut grads = net.zero_grads();
+        net.backward(&cache, &cache.output.clone(), &mut grads);
+
+        let loss = |net: &Mlp| -> f64 {
+            net.forward(&x).iter().map(|&q| 0.5 * (q as f64) * (q as f64)).sum()
+        };
+        let eps = 1e-3f32;
+        for li in 0..net.layers.len() {
+            // Spot-check a handful of weights per layer.
+            for &wi in &[0usize, 1, net.layers[li].w.len() - 1] {
+                let orig = net.layers[li].w[wi];
+                net.layers[li].w[wi] = orig + eps;
+                let lp = loss(&net);
+                net.layers[li].w[wi] = orig - eps;
+                let lm = loss(&net);
+                net.layers[li].w[wi] = orig;
+                let numeric = (lp - lm) / (2.0 * eps as f64);
+                let analytic = grads.layers[li].0[wi] as f64;
+                assert!(
+                    (numeric - analytic).abs() < 2e-2 * (1.0 + numeric.abs()),
+                    "layer {li} w[{wi}]: numeric {numeric} vs analytic {analytic}"
+                );
+            }
+            let orig = net.layers[li].b[0];
+            net.layers[li].b[0] = orig + eps;
+            let lp = loss(&net);
+            net.layers[li].b[0] = orig - eps;
+            let lm = loss(&net);
+            net.layers[li].b[0] = orig;
+            let numeric = (lp - lm) / (2.0 * eps as f64);
+            let analytic = grads.layers[li].1[0] as f64;
+            assert!(
+                (numeric - analytic).abs() < 2e-2 * (1.0 + numeric.abs()),
+                "layer {li} b[0]: numeric {numeric} vs analytic {analytic}"
+            );
+        }
+    }
+
+    #[test]
+    fn copy_from_syncs_outputs() {
+        let net = toy_net();
+        let mut rng = Pcg::new(9, 9);
+        let mut other = Mlp::new(&[3, 8, 5, 2], &mut rng);
+        let x = [0.2, 0.4, -0.6];
+        assert_ne!(net.forward(&x), other.forward(&x));
+        other.copy_from(&net);
+        assert_eq!(net.forward(&x), other.forward(&x));
+    }
+
+    #[test]
+    fn relu_kills_negative_paths() {
+        // Single hidden unit forced negative: gradient through it is zero.
+        let mut rng = Pcg::new(3, 3);
+        let mut net = Mlp::new(&[1, 1, 1], &mut rng);
+        net.layers[0].w[0] = 1.0;
+        net.layers[0].b[0] = -10.0; // hidden pre-act always << 0 for small x
+        net.layers[1].w[0] = 1.0;
+        let cache = net.forward_cached(&[0.5]);
+        let mut grads = net.zero_grads();
+        net.backward(&cache, &[1.0], &mut grads);
+        assert_eq!(grads.layers[0].0[0], 0.0);
+        assert_eq!(grads.layers[1].0[0], 0.0); // input to layer 1 is 0
+        assert_eq!(grads.layers[1].1[0], 1.0); // bias still learns
+    }
+}

@@ -1,0 +1,95 @@
+//! Experience replay buffer (fixed-capacity ring + uniform sampling).
+
+use crate::util::rng::Pcg;
+
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub state: Vec<f32>,
+    pub action: usize,
+    pub reward: f64,
+    pub next_state: Vec<f32>,
+    pub done: bool,
+}
+
+#[derive(Debug)]
+pub struct Replay {
+    buf: Vec<Transition>,
+    capacity: usize,
+    head: usize,
+}
+
+impl Replay {
+    pub fn new(capacity: usize) -> Replay {
+        assert!(capacity > 0);
+        Replay { buf: Vec::with_capacity(capacity), capacity, head: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(t);
+        } else {
+            self.buf[self.head] = t;
+            self.head = (self.head + 1) % self.capacity;
+        }
+    }
+
+    /// Uniform sample with replacement (standard DQN practice).
+    pub fn sample<'a>(&'a self, batch: usize, rng: &mut Pcg) -> Vec<&'a Transition> {
+        assert!(!self.buf.is_empty());
+        (0..batch).map(|_| &self.buf[rng.below(self.buf.len())]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(r: f64) -> Transition {
+        Transition { state: vec![r as f32], action: 0, reward: r, next_state: vec![], done: false }
+    }
+
+    #[test]
+    fn fills_then_wraps() {
+        let mut rp = Replay::new(3);
+        for i in 0..5 {
+            rp.push(t(i as f64));
+        }
+        assert_eq!(rp.len(), 3);
+        // Entries 0 and 1 overwritten by 3 and 4.
+        let rewards: Vec<f64> = rp.buf.iter().map(|x| x.reward).collect();
+        let mut sorted = rewards.clone();
+        sorted.sort_by(f64::total_cmp);
+        assert_eq!(sorted, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn sampling_covers_buffer() {
+        let mut rp = Replay::new(10);
+        for i in 0..10 {
+            rp.push(t(i as f64));
+        }
+        let mut rng = Pcg::new(3, 0);
+        let sample = rp.sample(1000, &mut rng);
+        let mut seen = [false; 10];
+        for s in sample {
+            seen[s.reward as usize] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    #[should_panic]
+    fn sample_empty_panics() {
+        let rp = Replay::new(4);
+        let mut rng = Pcg::new(1, 1);
+        let _ = rp.sample(1, &mut rng);
+    }
+}

@@ -1,0 +1,54 @@
+//! Figure 3 — convergence (test accuracy vs communication round) of
+//! SFL-GA at cuts v = 1..4, with traditional SFL as the benchmark, per
+//! dataset.  Validates Theorem 2 / Remark 1: smaller φ(v) converges better.
+
+use crate::coordinator::{RunMetrics, SchemeKind, TrainConfig, Trainer};
+use crate::model::NUM_CUTS;
+use crate::util::csvio::CsvWriter;
+
+use super::FigCtx;
+
+pub fn run(ctx: &FigCtx) -> anyhow::Result<()> {
+    let rounds = if ctx.fast { 30 } else { 100 };
+    for ds in ctx.datasets() {
+        let mut w = CsvWriter::create(
+            ctx.out(&format!("fig3_{ds}.csv")),
+            &["series", "round", "test_acc", "test_loss", "train_loss"],
+        )?;
+        // SFL benchmark at the middle cut.
+        let mut runs: Vec<(String, SchemeKind, usize)> =
+            vec![("sfl".into(), SchemeKind::Sfl, 2)];
+        for v in 1..=NUM_CUTS {
+            runs.push((format!("sfl-ga-v{v}"), SchemeKind::SflGa, v));
+        }
+        for (series, scheme, cut) in runs {
+            let cfg = TrainConfig {
+                dataset: ds.to_string(),
+                scheme,
+                rounds,
+                eval_every: if ctx.fast { 5 } else { 4 },
+                seed: ctx.seed,
+                ..Default::default()
+            };
+            let mut trainer = Trainer::new(&ctx.artifact_dir, &ctx.manifest, cfg)?;
+            let mut metrics = RunMetrics::new(scheme, ds);
+            for stats in trainer.run(cut)? {
+                metrics.push(&stats);
+                if let Some((tl, ta)) = stats.test {
+                    w.row(&[
+                        series.clone(),
+                        stats.round.to_string(),
+                        format!("{ta:.4}"),
+                        format!("{tl:.4}"),
+                        format!("{:.4}", stats.train_loss),
+                    ])?;
+                }
+            }
+            crate::info!(
+                "fig3 {ds} {series}: final acc {:.3}",
+                metrics.final_accuracy()
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Figure 4 — communication overhead (MB) vs test accuracy for SFL-GA,
+//! traditional SFL and PSL.  The headline claim: SFL-GA reaches the same
+//! accuracy with a fraction of the traffic (e.g. <20 MB vs >40 MB for SFL
+//! at ~94% on MNIST).
+
+use crate::coordinator::{RunMetrics, SchemeKind, TrainConfig, Trainer};
+use crate::util::csvio::CsvWriter;
+
+use super::FigCtx;
+
+pub const CUT: usize = 2;
+
+pub fn run(ctx: &FigCtx) -> anyhow::Result<()> {
+    let rounds = if ctx.fast { 30 } else { 100 };
+    for ds in ctx.datasets() {
+        let mut w = CsvWriter::create(
+            ctx.out(&format!("fig4_{ds}.csv")),
+            &["scheme", "round", "cum_comm_mb", "test_acc"],
+        )?;
+        for scheme in [SchemeKind::SflGa, SchemeKind::Sfl, SchemeKind::Psl] {
+            let cfg = TrainConfig {
+                dataset: ds.to_string(),
+                scheme,
+                rounds,
+                eval_every: if ctx.fast { 5 } else { 4 },
+                seed: ctx.seed,
+                ..Default::default()
+            };
+            let mut trainer = Trainer::new(&ctx.artifact_dir, &ctx.manifest, cfg)?;
+            let mut metrics = RunMetrics::new(scheme, ds);
+            for stats in trainer.run(CUT)? {
+                metrics.push(&stats);
+                let row = metrics.rows.last().unwrap();
+                if row.evaluated {
+                    w.row(&[
+                        scheme.name().to_string(),
+                        row.round.to_string(),
+                        format!("{:.4}", row.cum_comm_mb),
+                        format!("{:.4}", row.test_acc),
+                    ])?;
+                }
+            }
+            crate::info!(
+                "fig4 {ds} {}: acc {:.3} at {:.1} MB",
+                scheme.name(),
+                metrics.final_accuracy(),
+                metrics.total_comm_mb()
+            );
+        }
+    }
+    Ok(())
+}

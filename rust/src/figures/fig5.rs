@@ -1,0 +1,51 @@
+//! Figure 5 — test accuracy vs cumulative wall latency for SFL-GA, SFL,
+//! PSL and FL.  FL converges slowest (full model on 0.1 GHz clients); the
+//! split schemes bunch together with SFL-GA cheapest per round.
+
+use crate::coordinator::{RunMetrics, SchemeKind, TrainConfig, Trainer};
+use crate::util::csvio::CsvWriter;
+
+use super::FigCtx;
+
+pub const CUT: usize = 2;
+
+pub fn run(ctx: &FigCtx) -> anyhow::Result<()> {
+    let rounds = if ctx.fast { 30 } else { 100 };
+    for ds in ctx.datasets() {
+        let mut w = CsvWriter::create(
+            ctx.out(&format!("fig5_{ds}.csv")),
+            &["scheme", "round", "cum_latency_s", "test_acc"],
+        )?;
+        for scheme in SchemeKind::all() {
+            let cfg = TrainConfig {
+                dataset: ds.to_string(),
+                scheme,
+                rounds,
+                eval_every: if ctx.fast { 5 } else { 4 },
+                seed: ctx.seed,
+                ..Default::default()
+            };
+            let mut trainer = Trainer::new(&ctx.artifact_dir, &ctx.manifest, cfg)?;
+            let mut metrics = RunMetrics::new(scheme, ds);
+            for stats in trainer.run(CUT)? {
+                metrics.push(&stats);
+                let row = metrics.rows.last().unwrap();
+                if row.evaluated {
+                    w.row(&[
+                        scheme.name().to_string(),
+                        row.round.to_string(),
+                        format!("{:.4}", row.cum_latency_s),
+                        format!("{:.4}", row.test_acc),
+                    ])?;
+                }
+            }
+            crate::info!(
+                "fig5 {ds} {}: acc {:.3} after {:.1}s simulated",
+                scheme.name(),
+                metrics.final_accuracy(),
+                metrics.total_latency_s()
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Figure 8 — expected round latency vs total bandwidth (5–30 MHz) for
+//! SFL-GA, SFL, PSL and FL (MNIST).  Pure timing-model sweep: more
+//! bandwidth → faster rounds for everyone; SFL-GA lowest among the split
+//! schemes (broadcast beats unicast, no model-aggregation traffic).
+
+use crate::coordinator::timing::{round_latency, AllocPolicy};
+use crate::coordinator::SchemeKind;
+use crate::latency::ComputeConfig;
+use crate::util::csvio::CsvWriter;
+use crate::wireless::{Channel, NetConfig};
+
+use super::FigCtx;
+
+pub const CUT: usize = 2;
+
+pub fn run(ctx: &FigCtx) -> anyhow::Result<()> {
+    let draws = if ctx.fast { 10 } else { 40 };
+    let spec = ctx.manifest.for_dataset("mnist")?.clone();
+    let comp = ComputeConfig::default();
+    let mut w = CsvWriter::create(
+        ctx.out("fig8_mnist.csv"),
+        &["scheme", "bandwidth_mhz", "mean_round_latency_s"],
+    )?;
+    for bw_mhz in [5.0, 10.0, 15.0, 20.0, 25.0, 30.0] {
+        let net = NetConfig { bandwidth: bw_mhz * 1e6, ..Default::default() };
+        let mut channel = Channel::new(net.clone(), 10, ctx.seed ^ bw_mhz as u64);
+        let states: Vec<_> = (0..draws).map(|_| channel.draw_round()).collect();
+        for scheme in SchemeKind::all() {
+            let mean: f64 = states
+                .iter()
+                .map(|st| {
+                    round_latency(
+                        scheme,
+                        &spec,
+                        spec.cut(CUT),
+                        &net,
+                        &comp,
+                        st,
+                        AllocPolicy::Optimal,
+                        1,
+                    )
+                    .total()
+                })
+                .sum::<f64>()
+                / draws as f64;
+            w.row(&[
+                scheme.name().to_string(),
+                format!("{bw_mhz}"),
+                format!("{mean:.4}"),
+            ])?;
+            crate::info!("fig8 {} @ {bw_mhz} MHz: {mean:.3}s/round", scheme.name());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Figure harnesses: one module per evaluation figure of the paper.
+//! Each writes `results/figN_*.csv` with the same series the paper plots.
+
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+
+use std::path::{Path, PathBuf};
+
+use crate::model::Manifest;
+
+/// Shared harness context.
+pub struct FigCtx {
+    pub artifact_dir: PathBuf,
+    pub results_dir: PathBuf,
+    pub manifest: Manifest,
+    /// Fast mode: fewer rounds/episodes for smoke runs (`--fast`).
+    pub fast: bool,
+    pub seed: u64,
+}
+
+impl FigCtx {
+    pub fn new(artifact_dir: &Path, results_dir: &Path, fast: bool, seed: u64) -> anyhow::Result<FigCtx> {
+        Ok(FigCtx {
+            artifact_dir: artifact_dir.to_path_buf(),
+            results_dir: results_dir.to_path_buf(),
+            manifest: Manifest::load(artifact_dir)?,
+            fast,
+            seed,
+        })
+    }
+
+    pub fn out(&self, name: &str) -> PathBuf {
+        self.results_dir.join(name)
+    }
+
+    /// Datasets figures sweep: fast mode keeps mnist only.
+    pub fn datasets(&self) -> Vec<&'static str> {
+        if self.fast {
+            vec!["mnist"]
+        } else {
+            vec!["mnist", "fmnist", "cifar10"]
+        }
+    }
+}
+
+/// Run one figure by number.
+pub fn run(ctx: &FigCtx, fig: usize) -> anyhow::Result<()> {
+    match fig {
+        3 => fig3::run(ctx),
+        4 => fig4::run(ctx),
+        5 => fig5::run(ctx),
+        6 => fig6::run(ctx),
+        7 => fig7::run(ctx),
+        8 => fig8::run(ctx),
+        other => anyhow::bail!("no figure {other} (have 3..=8)"),
+    }
+}
+
+/// Run every figure.
+pub fn run_all(ctx: &FigCtx) -> anyhow::Result<()> {
+    for fig in 3..=8 {
+        crate::info!("=== figure {fig} ===");
+        run(ctx, fig)?;
+    }
+    Ok(())
+}

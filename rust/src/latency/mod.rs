@@ -1,0 +1,181 @@
+//! Latency model (paper §II-C/D, eqs 12–16 and 29).
+//!
+//! Communication: l = X(v) / r with X(v) the smashed-data (or gradient)
+//! bit size at cut v.  Computation: l = D·γ(v) / f with γ per-sample FLOPs
+//! and f device FLOPS capacity (the paper writes CPU cycles; we use FLOPs
+//! uniformly — the ratio structure, which is all the optimizer sees, is
+//! identical).
+
+use crate::model::{CutSpec, ShapeSpec};
+
+/// Computation capabilities (defaults = paper §V-A1: client 0.1 GHz,
+/// server total 100 GHz, i.e. client ~1e8, server ~1e11 FLOPS).
+#[derive(Clone, Debug)]
+pub struct ComputeConfig {
+    /// Max client compute f^{n,c}_max in FLOPS (constraint 30b is
+    /// per-client; see `client_flops` for the heterogeneous draw).
+    pub f_client_max: f64,
+    /// Heterogeneity spread in [0, 1): client n's capacity is drawn once
+    /// as f_client_max · U(1 − spread, 1].  0 = homogeneous (paper §V-A).
+    pub f_client_spread: f64,
+    /// Total server compute f^s_max (shared across clients) in FLOPS.
+    pub f_server_total: f64,
+    /// Samples processed per client per round (D^n in eqs 14–16).
+    pub samples_per_round: usize,
+    /// Bits per transmitted scalar (f32 = 32).
+    pub bits_per_scalar: f64,
+}
+
+impl Default for ComputeConfig {
+    fn default() -> Self {
+        ComputeConfig {
+            f_client_max: 0.1e9,
+            f_client_spread: 0.0,
+            f_server_total: 100e9,
+            samples_per_round: 32,
+            bits_per_scalar: 32.0,
+        }
+    }
+}
+
+impl ComputeConfig {
+    /// Per-client FLOPS capacities f^{n,c}_max — fixed hardware, drawn
+    /// once per deployment from the spread (deterministic in `seed`).
+    pub fn client_flops(&self, n: usize, seed: u64) -> Vec<f64> {
+        if self.f_client_spread <= 0.0 {
+            return vec![self.f_client_max; n];
+        }
+        let mut rng = crate::util::rng::Pcg::new(seed, 0xF10C);
+        (0..n)
+            .map(|_| self.f_client_max * rng.range(1.0 - self.f_client_spread, 1.0))
+            .collect()
+    }
+}
+
+/// X_t(v): bits of smashed data for one round's samples (eq 12/13).
+/// Uplink additionally carries the labels (classes one-hot);
+/// the downlink gradient has the same size as the smashed data.
+pub fn smashed_bits(cut: &CutSpec, cfg: &ComputeConfig) -> f64 {
+    cut.smashed_per_sample() as f64 * cfg.samples_per_round as f64 * cfg.bits_per_scalar
+}
+
+/// Label bits per round (uplink only; one-hot f32 like the artifacts).
+pub fn label_bits(spec: &ShapeSpec, cfg: &ComputeConfig) -> f64 {
+    spec.classes as f64 * cfg.samples_per_round as f64 * cfg.bits_per_scalar
+}
+
+/// Model bits (for FL / SFL client-model aggregation traffic).
+pub fn model_bits(num_params: usize, cfg: &ComputeConfig) -> f64 {
+    num_params as f64 * cfg.bits_per_scalar
+}
+
+/// Communication latency l = X / r (eqs 12, 13). Infinite if r == 0.
+pub fn comm_latency(bits: f64, rate: f64) -> f64 {
+    if rate <= 0.0 {
+        f64::INFINITY
+    } else {
+        bits / rate
+    }
+}
+
+/// Client-side FP latency (eq 14): D^n γ_F^c(v) / f^n.
+pub fn client_fwd_latency(cut: &CutSpec, cfg: &ComputeConfig, f_client: f64) -> f64 {
+    cfg.samples_per_round as f64 * cut.flops_client_fwd / f_client
+}
+
+/// Client-side BP latency (eq 16): D^n γ_B^c(v) / f^n.
+pub fn client_bwd_latency(cut: &CutSpec, cfg: &ComputeConfig, f_client: f64) -> f64 {
+    cfg.samples_per_round as f64 * cut.flops_client_bwd / f_client
+}
+
+/// Server-side FP+BP latency (eq 15): D^n (γ_F^s + γ_B^s) / f^{s,n}.
+pub fn server_latency(cut: &CutSpec, cfg: &ComputeConfig, f_server_n: f64) -> f64 {
+    cfg.samples_per_round as f64 * (cut.flops_server_fwd + cut.flops_server_bwd) / f_server_n
+}
+
+/// Per-client round legs, combined per eq (29):
+/// l_t = max_n{uplink + client FP + server} + max_n{downlink + client BP}.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClientRoundLatency {
+    pub uplink: f64,
+    pub client_fwd: f64,
+    pub server: f64,
+    pub downlink: f64,
+    pub client_bwd: f64,
+}
+
+impl ClientRoundLatency {
+    pub fn uplink_leg(&self) -> f64 {
+        self.uplink + self.client_fwd + self.server
+    }
+
+    pub fn downlink_leg(&self) -> f64 {
+        self.downlink + self.client_bwd
+    }
+}
+
+/// Total round latency across clients (eq 29).
+pub fn round_latency(legs: &[ClientRoundLatency]) -> f64 {
+    let up = legs.iter().map(|l| l.uplink_leg()).fold(0.0, f64::max);
+    let down = legs.iter().map(|l| l.downlink_leg()).fold(0.0, f64::max);
+    up + down
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn toy_cut() -> CutSpec {
+        CutSpec {
+            cut: 1,
+            phi: 100,
+            client_params: 2,
+            smashed_shape: vec![32, 10, 10, 4],
+            flops_client_fwd: 1e6,
+            flops_client_bwd: 2e6,
+            flops_server_fwd: 3e6,
+            flops_server_bwd: 4e6,
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn smashed_bits_counts_per_sample_elems() {
+        let cfg = ComputeConfig { samples_per_round: 32, ..Default::default() };
+        // 10*10*4 = 400 elems/sample * 32 samples * 32 bits
+        assert_eq!(smashed_bits(&toy_cut(), &cfg), 400.0 * 32.0 * 32.0);
+    }
+
+    #[test]
+    fn comm_latency_div_and_infinite() {
+        assert_eq!(comm_latency(1e6, 1e6), 1.0);
+        assert!(comm_latency(1.0, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn compute_latencies_match_formulas() {
+        let cut = toy_cut();
+        let cfg = ComputeConfig { samples_per_round: 10, ..Default::default() };
+        assert!((client_fwd_latency(&cut, &cfg, 1e7) - 10.0 * 1e6 / 1e7).abs() < 1e-12);
+        assert!((client_bwd_latency(&cut, &cfg, 1e7) - 10.0 * 2e6 / 1e7).abs() < 1e-12);
+        assert!((server_latency(&cut, &cfg, 1e9) - 10.0 * 7e6 / 1e9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_latency_is_max_plus_max() {
+        let legs = vec![
+            ClientRoundLatency { uplink: 1.0, client_fwd: 1.0, server: 1.0, downlink: 5.0, client_bwd: 0.0 },
+            ClientRoundLatency { uplink: 4.0, client_fwd: 0.0, server: 0.0, downlink: 1.0, client_bwd: 1.0 },
+        ];
+        // up legs: 3.0, 4.0 → 4.0; down legs: 5.0, 2.0 → 5.0.
+        assert_eq!(round_latency(&legs), 9.0);
+    }
+
+    #[test]
+    fn straggler_dominates() {
+        let mut legs = vec![ClientRoundLatency::default(); 5];
+        legs[3].uplink = 100.0;
+        assert_eq!(round_latency(&legs), 100.0);
+    }
+}

@@ -1,0 +1,43 @@
+//! # SFL-GA — Split Federated Learning with Gradient Aggregation
+//!
+//! Reproduction of "Communication-and-Computation Efficient Split Federated
+//! Learning: Gradient Aggregation and Resource Management" (cs.DC 2025).
+//!
+//! Layer map (see DESIGN.md):
+//! - [`runtime`] loads the JAX/Pallas AOT artifacts (HLO text) via PJRT and
+//!   executes them from a dedicated engine thread.
+//! - [`coordinator`] implements the paper's training frameworks: SFL-GA and
+//!   the SFL / PSL / FL baselines, with full communication accounting.
+//! - [`wireless`], [`latency`], [`privacy`] are the paper's §II system
+//!   models (eqs 10–17, 29).
+//! - [`allocator`] solves the per-round convex resource-allocation
+//!   subproblem P2.1; [`ddqn`] + [`ccc`] implement Algorithm 1 (joint CCC).
+//! - [`figures`] regenerates Figures 3–8 of the paper's evaluation.
+
+pub mod util;
+
+pub mod tensor;
+
+pub mod model;
+
+pub mod wireless;
+
+pub mod latency;
+
+pub mod privacy;
+
+pub mod allocator;
+
+pub mod ddqn;
+
+pub mod runtime;
+
+pub mod data;
+
+pub mod coordinator;
+
+pub mod ccc;
+
+pub mod figures;
+
+pub mod benchlib;

@@ -1,0 +1,159 @@
+//! `repro` — SFL-GA reproduction CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   train     run one training configuration and dump metrics CSV
+//!   optimize  run Algorithm 1 (joint CCC) and report the reward curve
+//!   figures   regenerate the paper's evaluation figures (3–8)
+//!   info      print manifest / model-splitting summary
+
+use std::path::PathBuf;
+
+use sfl_ga::ccc::{self, CccConfig};
+use sfl_ga::coordinator::{AllocPolicy, RunMetrics, SchemeKind, TrainConfig, Trainer};
+use sfl_ga::figures::{self, FigCtx};
+use sfl_ga::model::Manifest;
+use sfl_ga::util::cli::Args;
+use sfl_ga::util::logging;
+use sfl_ga::{info, privacy};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    logging::set_level(logging::level_from_str(&args.str_or("log", "info")));
+    let artifact_dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let results_dir = PathBuf::from(args.str_or("results", "results"));
+    let seed = args.parse_or("seed", 17u64)?;
+
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args, &artifact_dir, &results_dir, seed),
+        Some("optimize") => cmd_optimize(&args, &artifact_dir, seed),
+        Some("figures") => cmd_figures(&args, &artifact_dir, &results_dir, seed),
+        Some("info") | None => cmd_info(&artifact_dir),
+        Some(other) => anyhow::bail!("unknown subcommand '{other}' (train|optimize|figures|info)"),
+    }
+}
+
+fn cmd_train(
+    args: &Args,
+    artifact_dir: &PathBuf,
+    results_dir: &PathBuf,
+    seed: u64,
+) -> anyhow::Result<()> {
+    let manifest = Manifest::load(artifact_dir)?;
+    let dataset = args.str_or("dataset", "mnist");
+    let scheme = SchemeKind::parse(&args.str_or("scheme", "sfl-ga"))?;
+    let cut = args.parse_or("cut", 2usize)?;
+    let cfg = TrainConfig {
+        dataset: dataset.clone(),
+        scheme,
+        num_clients: args.parse_or("clients", 10usize)?,
+        rounds: args.parse_or("rounds", 100usize)?,
+        tau: args.parse_or("tau", 1usize)?,
+        lr: args.parse_or("lr", 0.02f32)?,
+        samples_per_client: args.parse_or("samples-per-client", 256usize)?,
+        non_iid_alpha: args
+            .get("non-iid-alpha")
+            .map(|v| v.parse::<f64>())
+            .transpose()?,
+        seed,
+        eval_every: args.parse_or("eval-every", 5usize)?,
+        alloc: if args.flag("equal-alloc") { AllocPolicy::Equal } else { AllocPolicy::Optimal },
+        comp: sfl_ga::latency::ComputeConfig {
+            // --f-spread 0.5 → clients draw 50–100% of f_client_max (30b).
+            f_client_spread: args.parse_or("f-spread", 0.0f64)?,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    info!("training {} on {dataset}, cut v={cut}, {} rounds", scheme.name(), cfg.rounds);
+    let mut trainer = Trainer::new(artifact_dir, &manifest, cfg)?;
+    let mut metrics = RunMetrics::new(scheme, &dataset);
+    for stats in trainer.run(cut)? {
+        metrics.push(&stats);
+        if let Some((tl, ta)) = stats.test {
+            info!(
+                "round {:>4}  train_loss {:.4}  test_loss {:.4}  test_acc {:.3}  comm {:.1} MB  latency {:.1}s",
+                stats.round, stats.train_loss, tl, ta,
+                metrics.total_comm_mb(), metrics.total_latency_s()
+            );
+        }
+    }
+    let out = results_dir.join(format!("train_{}_{}_v{}.csv", scheme.name(), dataset, cut));
+    metrics.write_csv(&out)?;
+    info!("wrote {}", out.display());
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args, artifact_dir: &PathBuf, seed: u64) -> anyhow::Result<()> {
+    let manifest = Manifest::load(artifact_dir)?;
+    let dataset = args.str_or("dataset", "mnist");
+    let spec = manifest.for_dataset(&dataset)?.clone();
+    let cfg = CccConfig {
+        epsilon: args.parse_or("epsilon", 1e-4f64)?,
+        episodes: args.parse_or("episodes", 300usize)?,
+        steps_per_episode: args.parse_or("steps", 20usize)?,
+        alloc: if args.flag("equal-alloc") { AllocPolicy::Equal } else { AllocPolicy::Optimal },
+        ..Default::default()
+    };
+    let clients = args.parse_or("clients", 10usize)?;
+    info!(
+        "Algorithm 1 on {dataset}: eps={}, {} episodes x {} steps, {clients} clients",
+        cfg.epsilon, cfg.episodes, cfg.steps_per_episode
+    );
+    let mut env = ccc::Env::new(spec, Default::default(), Default::default(), cfg, clients, seed);
+    let trained = ccc::train(&mut env, seed ^ 0xA1);
+    let n = trained.episode_rewards.len();
+    for (ep, r) in trained.episode_rewards.iter().enumerate() {
+        if ep % (n / 20).max(1) == 0 || ep + 1 == n {
+            info!("episode {ep:>5}: reward {r:.2}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_figures(
+    args: &Args,
+    artifact_dir: &PathBuf,
+    results_dir: &PathBuf,
+    seed: u64,
+) -> anyhow::Result<()> {
+    let ctx = FigCtx::new(artifact_dir, results_dir, args.flag("fast"), seed)?;
+    if args.flag("all") {
+        figures::run_all(&ctx)?;
+    } else {
+        let fig = args.parse_or("fig", 0usize)?;
+        anyhow::ensure!(fig != 0, "pass --fig N (3..8) or --all");
+        figures::run(&ctx, fig)?;
+    }
+    info!("figure CSVs in {}", results_dir.display());
+    Ok(())
+}
+
+fn cmd_info(artifact_dir: &PathBuf) -> anyhow::Result<()> {
+    let manifest = Manifest::load(artifact_dir)?;
+    println!("SFL-GA reproduction — manifest summary\n");
+    for (ds, key) in &manifest.datasets {
+        let spec = &manifest.shapes[key];
+        println!(
+            "dataset {ds:<8} shape {key:<8} params {:>9}  train_batch {}  eval_batch {}",
+            spec.total_params, spec.train_batch, spec.eval_batch
+        );
+        for cut in &spec.cuts {
+            println!(
+                "  cut v={}: phi={:>8} ({:.2}% of q)  smashed/sample={:>5}  privacy margin={:.2e}",
+                cut.cut,
+                cut.phi,
+                100.0 * cut.phi as f64 / spec.total_params as f64,
+                cut.smashed_per_sample(),
+                privacy::leakage_margin(spec, cut.cut),
+            );
+        }
+    }
+    Ok(())
+}

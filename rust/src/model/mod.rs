@@ -1,0 +1,296 @@
+//! Rust mirror of the L2 manifest: model architecture metadata.
+//!
+//! `artifacts/manifest.json` (written by `python/compile/aot.py`) is the
+//! single source of truth for parameter shapes, cut-point sizes φ(v),
+//! smashed-data shapes and per-side FLOP counts.  This module parses it
+//! into typed specs used by the runtime (buffer shapes), the latency model
+//! (γ workloads of eqs 14–16) and the privacy model (φ(v)/q of eq 17).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+pub const NUM_CUTS: usize = 4;
+
+/// Roles compiled per cut; global roles are `full_grad` and `eval`.
+pub const CUT_ROLES: [&str; 3] = ["client_fwd", "server_grad", "client_grad"];
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub block: usize,
+}
+
+impl ParamSpec {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct CutSpec {
+    pub cut: usize,
+    /// φ(v): client-side model size in parameters.
+    pub phi: usize,
+    /// Number of leading parameter arrays owned by the client.
+    pub client_params: usize,
+    /// Smashed-data shape at the train batch size (batch first).
+    pub smashed_shape: Vec<usize>,
+    /// Per-sample FLOPs: γ_F^c, γ_B^c, γ_F^s, γ_B^s (eqs 14–16).
+    pub flops_client_fwd: f64,
+    pub flops_client_bwd: f64,
+    pub flops_server_fwd: f64,
+    pub flops_server_bwd: f64,
+    /// role -> artifact file name.
+    pub artifacts: BTreeMap<String, String>,
+}
+
+impl CutSpec {
+    /// Smashed elements per *sample* (shape without the batch dim).
+    pub fn smashed_per_sample(&self) -> usize {
+        self.smashed_shape[1..].iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ShapeSpec {
+    pub key: String,
+    pub input_shape: Vec<usize>,
+    pub classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub total_params: usize,
+    pub params: Vec<ParamSpec>,
+    pub cuts: Vec<CutSpec>,
+    /// Global artifacts: full_grad, eval.
+    pub artifacts: BTreeMap<String, String>,
+}
+
+impl ShapeSpec {
+    pub fn cut(&self, v: usize) -> &CutSpec {
+        assert!((1..=NUM_CUTS).contains(&v), "cut {v} out of range");
+        &self.cuts[v - 1]
+    }
+
+    /// Input elements per sample.
+    pub fn input_per_sample(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        self.params.iter().map(|p| p.shape.clone()).collect()
+    }
+
+    /// φ(v)/q — the privacy-relevant client model fraction.
+    pub fn phi_fraction(&self, v: usize) -> f64 {
+        self.cut(v).phi as f64 / self.total_params as f64
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub shapes: BTreeMap<String, ShapeSpec>,
+    /// dataset name -> shape key (mnist/fmnist share "28x28x1").
+    pub datasets: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(dir: P) -> anyhow::Result<Manifest> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+        let json = Json::parse(&text)?;
+        Self::from_json(&json)
+    }
+
+    pub fn from_json(json: &Json) -> anyhow::Result<Manifest> {
+        let format = json.at(&["format"])?.as_usize()?;
+        anyhow::ensure!(format == 1, "unsupported manifest format {format}");
+        let train_batch = json.at(&["train_batch"])?.as_usize()?;
+        let eval_batch = json.at(&["eval_batch"])?.as_usize()?;
+
+        let mut shapes = BTreeMap::new();
+        for (key, sj) in json.at(&["shapes"])?.as_obj()? {
+            shapes.insert(key.clone(), parse_shape(key, sj, train_batch, eval_batch)?);
+        }
+        let mut datasets = BTreeMap::new();
+        for (ds, kj) in json.at(&["datasets"])?.as_obj()? {
+            let key = kj.as_str()?.to_string();
+            anyhow::ensure!(shapes.contains_key(&key), "dataset {ds} maps to unknown shape {key}");
+            datasets.insert(ds.clone(), key);
+        }
+        Ok(Manifest { train_batch, eval_batch, shapes, datasets })
+    }
+
+    /// Resolve a dataset name ("mnist") to its shape spec.
+    pub fn for_dataset(&self, dataset: &str) -> anyhow::Result<&ShapeSpec> {
+        let key = self
+            .datasets
+            .get(dataset)
+            .ok_or_else(|| anyhow::anyhow!(
+                "unknown dataset '{dataset}' (have: {:?})",
+                self.datasets.keys().collect::<Vec<_>>()
+            ))?;
+        Ok(&self.shapes[key])
+    }
+}
+
+fn parse_shape(
+    key: &str,
+    json: &Json,
+    train_batch: usize,
+    eval_batch: usize,
+) -> anyhow::Result<ShapeSpec> {
+    let params = json
+        .at(&["params"])?
+        .as_arr()?
+        .iter()
+        .map(|p| {
+            Ok(ParamSpec {
+                name: p.at(&["name"])?.as_str()?.to_string(),
+                shape: p.at(&["shape"])?.usize_array()?,
+                block: p.at(&["block"])?.as_usize()?,
+            })
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+
+    let mut cuts = Vec::new();
+    for v in 1..=NUM_CUTS {
+        let cj = json.at(&["cuts", &v.to_string()])?;
+        let mut artifacts = BTreeMap::new();
+        for (role, f) in cj.at(&["artifacts"])?.as_obj()? {
+            artifacts.insert(role.clone(), f.as_str()?.to_string());
+        }
+        for role in CUT_ROLES {
+            anyhow::ensure!(artifacts.contains_key(role), "{key} cut {v} missing role {role}");
+        }
+        cuts.push(CutSpec {
+            cut: v,
+            phi: cj.at(&["phi"])?.as_usize()?,
+            client_params: cj.at(&["client_params"])?.as_usize()?,
+            smashed_shape: cj.at(&["smashed_shape"])?.usize_array()?,
+            flops_client_fwd: cj.at(&["flops_client_fwd"])?.as_f64()?,
+            flops_client_bwd: cj.at(&["flops_client_bwd"])?.as_f64()?,
+            flops_server_fwd: cj.at(&["flops_server_fwd"])?.as_f64()?,
+            flops_server_bwd: cj.at(&["flops_server_bwd"])?.as_f64()?,
+            artifacts,
+        });
+    }
+
+    let mut artifacts = BTreeMap::new();
+    for (role, f) in json.at(&["artifacts"])?.as_obj()? {
+        artifacts.insert(role.clone(), f.as_str()?.to_string());
+    }
+    for role in ["full_grad", "eval"] {
+        anyhow::ensure!(artifacts.contains_key(role), "{key} missing global role {role}");
+    }
+
+    let spec = ShapeSpec {
+        key: key.to_string(),
+        input_shape: json.at(&["input_shape"])?.usize_array()?,
+        classes: json.at(&["classes"])?.as_usize()?,
+        train_batch,
+        eval_batch,
+        total_params: json.at(&["total_params"])?.as_usize()?,
+        params,
+        cuts,
+        artifacts,
+    };
+
+    // Cross-checks: φ must equal the sum of client-owned parameter sizes.
+    for cut in &spec.cuts {
+        let phi_sum: usize = spec.params[..cut.client_params].iter().map(|p| p.size()).sum();
+        anyhow::ensure!(
+            phi_sum == cut.phi,
+            "{key} cut {}: phi {} != sum of client param sizes {phi_sum}",
+            cut.cut,
+            cut.phi
+        );
+    }
+    let total: usize = spec.params.iter().map(|p| p.size()).sum();
+    anyhow::ensure!(total == spec.total_params, "{key}: total_params mismatch");
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest_json() -> String {
+        // Two-param toy: conv (block 1, 8 params) + fc (block 2, 4 params).
+        let cut_tpl = |phi: usize, nc: usize| {
+            format!(
+                r#"{{"phi": {phi}, "client_params": {nc}, "smashed_shape": [2, 3],
+                 "flops_client_fwd": 10, "flops_client_bwd": 20,
+                 "flops_server_fwd": 30, "flops_server_bwd": 40,
+                 "artifacts": {{"client_fwd": "a", "server_grad": "b", "client_grad": "c"}}}}"#
+            )
+        };
+        format!(
+            r#"{{"format": 1, "train_batch": 2, "eval_batch": 4,
+             "shapes": {{"toy": {{
+               "input_shape": [4], "classes": 2, "total_params": 12,
+               "params": [{{"name": "w1", "shape": [2, 4], "block": 1}},
+                          {{"name": "w2", "shape": [4], "block": 2}}],
+               "cuts": {{"1": {c1}, "2": {c2}, "3": {c2}, "4": {c2}}},
+               "artifacts": {{"full_grad": "f", "eval": "e"}}
+             }}}},
+             "datasets": {{"toyset": "toy"}}}}"#,
+            c1 = cut_tpl(8, 1),
+            c2 = cut_tpl(12, 2),
+        )
+    }
+
+    #[test]
+    fn parses_toy_manifest() {
+        let json = Json::parse(&toy_manifest_json()).unwrap();
+        let m = Manifest::from_json(&json).unwrap();
+        let spec = m.for_dataset("toyset").unwrap();
+        assert_eq!(spec.total_params, 12);
+        assert_eq!(spec.cut(1).phi, 8);
+        assert_eq!(spec.cut(1).smashed_per_sample(), 3);
+        assert_eq!(spec.phi_fraction(1), 8.0 / 12.0);
+        assert_eq!(spec.param_shapes(), vec![vec![2, 4], vec![4]]);
+    }
+
+    #[test]
+    fn rejects_phi_mismatch() {
+        let text = toy_manifest_json().replace("\"phi\": 8", "\"phi\": 9");
+        let json = Json::parse(&text).unwrap();
+        assert!(Manifest::from_json(&json).is_err());
+    }
+
+    #[test]
+    fn unknown_dataset_is_error() {
+        let json = Json::parse(&toy_manifest_json()).unwrap();
+        let m = Manifest::from_json(&json).unwrap();
+        assert!(m.for_dataset("nope").is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // Integration-style check against the artifacts dir when built.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        for ds in ["mnist", "fmnist", "cifar10"] {
+            let spec = m.for_dataset(ds).unwrap();
+            assert_eq!(spec.cuts.len(), NUM_CUTS);
+            // φ(v) monotone non-decreasing (paper's Assumption 4 premise).
+            for w in spec.cuts.windows(2) {
+                assert!(w[0].phi <= w[1].phi);
+            }
+            // Client+server FLOPs sum to the same total at every cut.
+            let t0 = spec.cuts[0].flops_client_fwd + spec.cuts[0].flops_server_fwd;
+            for c in &spec.cuts {
+                assert!((c.flops_client_fwd + c.flops_server_fwd - t0).abs() < 1.0);
+            }
+        }
+    }
+}

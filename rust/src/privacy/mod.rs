@@ -1,0 +1,96 @@
+//! Privacy model (paper §II-E, eq 17): smashed data leaks less as the
+//! client-side model deepens; the constraint log(1 + φ(v)/q) ≥ ε bounds
+//! the admissible cuts from below.
+
+use crate::model::{ShapeSpec, NUM_CUTS};
+
+/// Privacy leakage metric: log(1 + φ(v)/q) (natural log, monotone in φ).
+pub fn leakage_margin(spec: &ShapeSpec, cut: usize) -> f64 {
+    (1.0 + spec.phi_fraction(cut)).ln()
+}
+
+/// Constraint (17): is cut v admissible at threshold ε?
+pub fn cut_feasible(spec: &ShapeSpec, cut: usize, epsilon: f64) -> bool {
+    leakage_margin(spec, cut) >= epsilon
+}
+
+/// All admissible cuts at threshold ε (ascending).  Since φ(v) is monotone
+/// non-decreasing in v, this is always a suffix of 1..=NUM_CUTS.
+pub fn feasible_cuts(spec: &ShapeSpec, epsilon: f64) -> Vec<usize> {
+    (1..=NUM_CUTS).filter(|&v| cut_feasible(spec, v, epsilon)).collect()
+}
+
+/// Smallest admissible cut, if any.
+pub fn min_feasible_cut(spec: &ShapeSpec, epsilon: f64) -> Option<usize> {
+    feasible_cuts(spec, epsilon).into_iter().next()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Manifest;
+    use crate::util::json::Json;
+
+    fn toy_spec() -> ShapeSpec {
+        // Reuse the model module's toy manifest via JSON to get a ShapeSpec.
+        let text = r#"{"format": 1, "train_batch": 2, "eval_batch": 4,
+         "shapes": {"toy": {
+           "input_shape": [4], "classes": 2, "total_params": 1000,
+           "params": [{"name": "w1", "shape": [10], "block": 1},
+                      {"name": "w2", "shape": [90], "block": 2},
+                      {"name": "w3", "shape": [900], "block": 5}],
+           "cuts": {
+             "1": {"phi": 10, "client_params": 1, "smashed_shape": [2,3],
+                   "flops_client_fwd": 1, "flops_client_bwd": 1,
+                   "flops_server_fwd": 1, "flops_server_bwd": 1,
+                   "artifacts": {"client_fwd": "a", "server_grad": "b", "client_grad": "c"}},
+             "2": {"phi": 100, "client_params": 2, "smashed_shape": [2,3],
+                   "flops_client_fwd": 1, "flops_client_bwd": 1,
+                   "flops_server_fwd": 1, "flops_server_bwd": 1,
+                   "artifacts": {"client_fwd": "a", "server_grad": "b", "client_grad": "c"}},
+             "3": {"phi": 100, "client_params": 2, "smashed_shape": [2,3],
+                   "flops_client_fwd": 1, "flops_client_bwd": 1,
+                   "flops_server_fwd": 1, "flops_server_bwd": 1,
+                   "artifacts": {"client_fwd": "a", "server_grad": "b", "client_grad": "c"}},
+             "4": {"phi": 100, "client_params": 2, "smashed_shape": [2,3],
+                   "flops_client_fwd": 1, "flops_client_bwd": 1,
+                   "flops_server_fwd": 1, "flops_server_bwd": 1,
+                   "artifacts": {"client_fwd": "a", "server_grad": "b", "client_grad": "c"}}},
+           "artifacts": {"full_grad": "f", "eval": "e"}
+         }},
+         "datasets": {"toyset": "toy"}}"#;
+        let m = Manifest::from_json(&Json::parse(text).unwrap()).unwrap();
+        m.shapes["toy"].clone()
+    }
+
+    #[test]
+    fn leakage_monotone_in_cut() {
+        let spec = toy_spec();
+        let m1 = leakage_margin(&spec, 1);
+        let m2 = leakage_margin(&spec, 2);
+        assert!(m1 < m2);
+        assert!((m1 - (1.0_f64 + 0.01).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn feasible_set_is_suffix() {
+        let spec = toy_spec();
+        // ε between margin(1) and margin(2): only cuts 2..4 admissible.
+        let eps = 0.05;
+        assert_eq!(feasible_cuts(&spec, eps), vec![2, 3, 4]);
+        assert_eq!(min_feasible_cut(&spec, eps), Some(2));
+    }
+
+    #[test]
+    fn everything_feasible_at_zero_eps() {
+        let spec = toy_spec();
+        assert_eq!(feasible_cuts(&spec, 0.0), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn nothing_feasible_at_huge_eps() {
+        let spec = toy_spec();
+        assert!(feasible_cuts(&spec, 10.0).is_empty());
+        assert_eq!(min_feasible_cut(&spec, 10.0), None);
+    }
+}

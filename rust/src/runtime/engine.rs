@@ -1,0 +1,221 @@
+//! PJRT execution engine: a dedicated thread owns the (non-Send) PJRT
+//! client and every compiled executable; the rest of the coordinator talks
+//! to it through a cloneable [`Handle`] over mpsc channels.
+//!
+//! This is the runtime half of the AOT bridge: HLO text artifacts from
+//! `python/compile/aot.py` are parsed with `HloModuleProto::from_text_file`
+//! (text, NOT serialized protos — xla_extension 0.5.1 rejects jax≥0.5's
+//! 64-bit instruction ids) and compiled once at startup; the training hot
+//! path then only moves f32 buffers.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::thread;
+
+use super::tensor::Tensor;
+
+enum Request {
+    Execute {
+        exe: usize,
+        inputs: Vec<Tensor>,
+        reply: mpsc::Sender<anyhow::Result<Vec<Tensor>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, Send handle to the engine thread.
+#[derive(Clone)]
+pub struct Handle {
+    tx: mpsc::Sender<Request>,
+    names: BTreeMap<String, usize>,
+}
+
+impl Handle {
+    /// Execute a loaded computation by name. Blocks until the result is
+    /// back on the host.
+    pub fn execute(&self, name: &str, inputs: Vec<Tensor>) -> anyhow::Result<Vec<Tensor>> {
+        let exe = *self
+            .names
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown computation '{name}'"))?;
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Execute { exe, inputs, reply })
+            .map_err(|_| anyhow::anyhow!("engine thread terminated"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine thread dropped reply"))?
+    }
+
+    pub fn computations(&self) -> Vec<String> {
+        self.names.keys().cloned().collect()
+    }
+}
+
+/// The engine: owns the thread; dropping shuts it down.
+pub struct Engine {
+    handle: Handle,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Load and compile `files` = [(name, path)] on a fresh engine thread.
+    pub fn load(files: Vec<(String, PathBuf)>) -> anyhow::Result<Engine> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let names: BTreeMap<String, usize> = files
+            .iter()
+            .enumerate()
+            .map(|(i, (n, _))| (n.clone(), i))
+            .collect();
+        anyhow::ensure!(names.len() == files.len(), "duplicate computation names");
+
+        let join = thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || engine_main(files, rx, ready_tx))?;
+
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
+        Ok(Engine { handle: Handle { tx, names }, join: Some(join) })
+    }
+
+    /// Convenience: load a set of manifest artifacts from `dir`.
+    /// `entries` = [(logical name, file name)].
+    pub fn load_artifacts(
+        dir: &Path,
+        entries: &[(String, String)],
+    ) -> anyhow::Result<Engine> {
+        let files = entries
+            .iter()
+            .map(|(name, file)| (name.clone(), dir.join(file)))
+            .collect();
+        Engine::load(files)
+    }
+
+    pub fn handle(&self) -> Handle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn engine_main(
+    files: Vec<(String, PathBuf)>,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<anyhow::Result<()>>,
+) {
+    let setup = || -> anyhow::Result<(xla::PjRtClient, Vec<xla::PjRtLoadedExecutable>)> {
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = Vec::with_capacity(files.len());
+        for (name, path) in &files {
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+                anyhow::anyhow!("loading artifact '{name}' from {}: {e}", path.display())
+            })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling artifact '{name}': {e}"))?;
+            crate::debug!("compiled '{name}' in {:.2}s", t0.elapsed().as_secs_f64());
+            exes.push(exe);
+        }
+        Ok((client, exes))
+    };
+
+    let (_client, exes) = match setup() {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Execute { exe, inputs, reply } => {
+                let _ = reply.send(run_one(&exes[exe], inputs));
+            }
+        }
+    }
+}
+
+fn run_one(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: Vec<Tensor>,
+) -> anyhow::Result<Vec<Tensor>> {
+    let literals = inputs
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let result = exe.execute::<xla::Literal>(&literals)?;
+    // Single device, single result buffer; aot.py lowers return_tuple=True.
+    let tuple = result[0][0].to_literal_sync()?;
+    let parts = tuple.to_tuple()?;
+    parts.iter().map(Tensor::from_literal).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn unknown_name_is_error_without_engine_thread_crash() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = crate::model::Manifest::load(&dir).unwrap();
+        let spec = m.for_dataset("mnist").unwrap();
+        let file = spec.cut(1).artifacts["client_fwd"].clone();
+        let engine =
+            Engine::load_artifacts(&dir, &[("cf".to_string(), file)]).unwrap();
+        let h = engine.handle();
+        assert!(h.execute("nope", vec![]).is_err());
+        assert_eq!(h.computations(), vec!["cf".to_string()]);
+    }
+
+    #[test]
+    fn executes_client_fwd_with_zero_params() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = crate::model::Manifest::load(&dir).unwrap();
+        let spec = m.for_dataset("mnist").unwrap();
+        let cut = spec.cut(1);
+        let file = cut.artifacts["client_fwd"].clone();
+        let engine =
+            Engine::load_artifacts(&dir, &[("cf".to_string(), file)]).unwrap();
+        let h = engine.handle();
+
+        let mut inputs: Vec<Tensor> = spec.params[..cut.client_params]
+            .iter()
+            .map(|p| Tensor::zeros(&p.shape))
+            .collect();
+        let mut xshape = vec![spec.train_batch];
+        xshape.extend_from_slice(&spec.input_shape);
+        inputs.push(Tensor::zeros(&xshape));
+
+        let out = h.execute("cf", inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, cut.smashed_shape);
+        // Zero weights + zero biases → relu(conv(0)) = 0 everywhere.
+        assert!(out[0].data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn load_missing_file_fails_cleanly() {
+        let err = Engine::load(vec![("x".into(), PathBuf::from("/nonexistent.hlo.txt"))]);
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by the python AOT
+//! path and executes them from a dedicated engine thread.
+//!
+//! Layering rule: this module is the ONLY place PJRT/xla types appear; the
+//! coordinator above deals purely in [`Tensor`] buffers, keeping the
+//! request path free of python and of FFI details.
+
+pub mod engine;
+pub mod exec;
+pub mod tensor;
+
+pub use engine::{Engine, Handle};
+pub use exec::ModelRuntime;
+pub use tensor::Tensor;

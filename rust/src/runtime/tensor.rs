@@ -1,0 +1,94 @@
+//! Host-side tensor: flat f32 buffer + shape, converting to/from PJRT
+//! Literals at the engine boundary.
+
+/// A host tensor (f32, row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Tensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(data.len(), n, "tensor data/shape mismatch: {} vs {:?}", data.len(), shape);
+        Tensor { data, shape }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { data: vec![v], shape: vec![] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Scalar accessor (panics if not a 1-element tensor).
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "item() on non-scalar tensor {:?}", self.shape);
+        self.data[0]
+    }
+
+    pub(crate) fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.len() == 1 {
+            return Ok(lit);
+        }
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub(crate) fn from_literal(lit: &xla::Literal) -> anyhow::Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(Tensor::new(data, dims))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        let t = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(t.len(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn bad_shape_panics() {
+        Tensor::new(vec![1.0], vec![2, 2]);
+    }
+
+    #[test]
+    fn scalar_item() {
+        assert_eq!(Tensor::scalar(2.5).item(), 2.5);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::new((0..6).map(|i| i as f32).collect(), vec![2, 3]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_literal_roundtrip() {
+        // 0-d tensors travel as rank-1 length-1; PJRT outputs of rank 0
+        // come back with empty dims.
+        let t = Tensor::new(vec![7.0], vec![1]);
+        let lit = t.to_literal().unwrap();
+        assert_eq!(Tensor::from_literal(&lit).unwrap().data, vec![7.0]);
+    }
+}

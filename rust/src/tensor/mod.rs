@@ -1,0 +1,177 @@
+//! Flat f32 tensor math for the coordinator's hot paths: FedAvg-style
+//! weighted aggregation (eqs 5, 7), SGD steps (eq 6), norms.
+//!
+//! Model state lives as `Vec<Vec<f32>>` — one flat buffer per parameter
+//! array, in manifest order.  These loops are the only L3-side numeric
+//! code touching model-sized data, so they are written allocation-free.
+
+/// One model's parameters (or gradients): flat buffers in manifest order.
+pub type Params = Vec<Vec<f32>>;
+
+/// y += a * x (shape-checked).
+pub fn saxpy(y: &mut [f32], a: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len(), "saxpy shape mismatch");
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// x *= a.
+pub fn scale(x: &mut [f32], a: f32) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+/// SGD: w -= lr * g over a whole parameter set.
+pub fn sgd_step(w: &mut Params, g: &[Vec<f32>], lr: f32) {
+    assert_eq!(w.len(), g.len(), "sgd param-count mismatch");
+    for (wi, gi) in w.iter_mut().zip(g) {
+        saxpy(wi, -lr, gi);
+    }
+}
+
+/// Weighted aggregation Σ ρ^n x^n into a fresh buffer set (eqs 5/7).
+/// Weights need not sum to 1 (callers normalize per the paper's ρ^n = D^n/D).
+pub fn weighted_sum(parts: &[&Params], weights: &[f64]) -> Params {
+    assert!(!parts.is_empty());
+    assert_eq!(parts.len(), weights.len());
+    let mut out: Params = parts[0]
+        .iter()
+        .map(|buf| vec![0.0f32; buf.len()])
+        .collect();
+    for (part, &w) in parts.iter().zip(weights) {
+        assert_eq!(part.len(), out.len(), "aggregation param-count mismatch");
+        for (acc, src) in out.iter_mut().zip(part.iter()) {
+            saxpy(acc, w as f32, src);
+        }
+    }
+    out
+}
+
+/// Weighted aggregation of single flat buffers (smashed-data gradients).
+pub fn weighted_sum_flat(parts: &[&[f32]], weights: &[f64]) -> Vec<f32> {
+    assert!(!parts.is_empty());
+    assert_eq!(parts.len(), weights.len());
+    let mut out = vec![0.0f32; parts[0].len()];
+    for (part, &w) in parts.iter().zip(weights) {
+        saxpy(&mut out, w as f32, part);
+    }
+    out
+}
+
+/// L2 norm squared across a parameter set.
+pub fn norm2(params: &Params) -> f64 {
+    params
+        .iter()
+        .flat_map(|buf| buf.iter())
+        .map(|&x| (x as f64) * (x as f64))
+        .sum()
+}
+
+/// Max |a - b| across two parameter sets (used by equivalence tests).
+pub fn max_abs_diff(a: &Params, b: &Params) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut m = 0.0f64;
+    for (ai, bi) in a.iter().zip(b) {
+        assert_eq!(ai.len(), bi.len());
+        for (x, y) in ai.iter().zip(bi) {
+            m = m.max((*x as f64 - *y as f64).abs());
+        }
+    }
+    m
+}
+
+/// Total element count of a parameter set.
+pub fn num_elems(params: &Params) -> usize {
+    params.iter().map(|b| b.len()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+    use crate::util::rng::Pcg;
+
+    fn rand_params(rng: &mut Pcg, shapes: &[usize]) -> Params {
+        shapes
+            .iter()
+            .map(|&n| (0..n).map(|_| rng.normal() as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn saxpy_basic() {
+        let mut y = vec![1.0, 2.0];
+        saxpy(&mut y, 2.0, &[10.0, 20.0]);
+        assert_eq!(y, vec![21.0, 42.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn saxpy_shape_checked() {
+        saxpy(&mut [0.0f32; 2], 1.0, &[0.0f32; 3]);
+    }
+
+    #[test]
+    fn sgd_reduces_toward_gradient_direction() {
+        let mut w: Params = vec![vec![1.0, 1.0]];
+        sgd_step(&mut w, &[vec![0.5, -0.5]], 0.1);
+        assert_eq!(w[0], vec![0.95, 1.05]);
+    }
+
+    #[test]
+    fn weighted_sum_is_convex_combination() {
+        let a: Params = vec![vec![0.0, 10.0]];
+        let b: Params = vec![vec![10.0, 0.0]];
+        let out = weighted_sum(&[&a, &b], &[0.25, 0.75]);
+        assert_eq!(out[0], vec![7.5, 2.5]);
+    }
+
+    #[test]
+    fn property_aggregation_linearity() {
+        // weighted_sum(w; x..) then sgd equals per-part saxpy accumulation.
+        check("aggregation-linearity", 64, |rng| {
+            let shapes = [3, 5];
+            let n = 1 + rng.below(4);
+            let parts: Vec<Params> = (0..n).map(|_| rand_params(rng, &shapes)).collect();
+            let weights: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+            let refs: Vec<&Params> = parts.iter().collect();
+            let agg = weighted_sum(&refs, &weights);
+            // naive recompute
+            for (pi, shape) in shapes.iter().enumerate() {
+                for j in 0..*shape {
+                    let want: f64 = parts
+                        .iter()
+                        .zip(&weights)
+                        .map(|(p, &w)| p[pi][j] as f64 * w)
+                        .sum();
+                    prop_assert!(
+                        (agg[pi][j] as f64 - want).abs() < 1e-4,
+                        "agg[{pi}][{j}] = {} want {want}",
+                        agg[pi][j]
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_identity_weights() {
+        check("identity-weight", 32, |rng| {
+            let p = rand_params(rng, &[4, 2]);
+            let out = weighted_sum(&[&p], &[1.0]);
+            prop_assert!(max_abs_diff(&out, &p) < 1e-7, "identity aggregation changed values");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn norms_and_counts() {
+        let p: Params = vec![vec![3.0], vec![4.0]];
+        assert_eq!(norm2(&p), 25.0);
+        assert_eq!(num_elems(&p), 2);
+    }
+}

@@ -1,0 +1,134 @@
+//! Tiny declarative CLI argument parser (clap is not vendored offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional subcommands,
+//! typed getters with defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    declared: Vec<(String, String, String)>, // (name, default-or-"", help)
+}
+
+impl Args {
+    /// Parse `std::env::args()[1..]`: optional subcommand first, then
+    /// `--key value|--key=value|--flag` pairs.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(tok) = it.next() {
+            let Some(name) = tok.strip_prefix("--") else {
+                anyhow::bail!("unexpected positional argument '{tok}'");
+            };
+            if let Some((k, v)) = name.split_once('=') {
+                args.values.insert(k.to_string(), v.to_string());
+            } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                args.values.insert(name.to_string(), it.next().unwrap());
+            } else {
+                args.flags.push(name.to_string());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn declare(&mut self, name: &str, default: &str, help: &str) {
+        self.declared
+            .push((name.to_string(), default.to_string(), help.to_string()));
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.values.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.values.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{name} {v}: {e}")),
+        }
+    }
+
+    pub fn usage(&self, prog: &str, about: &str) -> String {
+        let mut s = format!("{prog} — {about}\n\noptions:\n");
+        for (name, default, help) in &self.declared {
+            let d = if default.is_empty() {
+                String::new()
+            } else {
+                format!(" [default: {default}]")
+            };
+            s.push_str(&format!("  --{name:<18} {help}{d}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_kv() {
+        let a = parse(&["train", "--rounds", "100", "--dataset=mnist"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.parse_or("rounds", 0u32).unwrap(), 100);
+        assert_eq!(a.str_or("dataset", ""), "mnist");
+    }
+
+    #[test]
+    fn flags_without_values() {
+        let a = parse(&["--verbose", "--seed", "7", "--all"]);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("all"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.parse_or("seed", 0u64).unwrap(), 7);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.parse_or("clients", 10usize).unwrap(), 10);
+        assert!(a.subcommand.is_none());
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let a = parse(&["--rounds", "ten"]);
+        assert!(a.parse_or("rounds", 0u32).is_err());
+    }
+
+    #[test]
+    fn rejects_stray_positional() {
+        assert!(Args::parse(["train".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn negative_number_is_value_not_flag() {
+        // "--w -1.5": "-1.5" doesn't start with "--" so it's a value.
+        let a = parse(&["--w", "-1.5"]);
+        assert_eq!(a.parse_or("w", 0.0f64).unwrap(), -1.5);
+    }
+}

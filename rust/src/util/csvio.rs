@@ -1,0 +1,72 @@
+//! CSV writing for figure outputs (results/*.csv consumed by plotting).
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+pub struct CsvWriter {
+    file: fs::File,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create `path` (parents included) and write the header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> anyhow::Result<CsvWriter> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut file = fs::File::create(&path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter { file, cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            values.len() == self.cols,
+            "csv row has {} values, header has {}",
+            values.len(),
+            self.cols
+        );
+        writeln!(self.file, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    pub fn row_f64(&mut self, values: &[f64]) -> anyhow::Result<()> {
+        let vals: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        self.row(&vals)
+    }
+}
+
+/// Format helper: mixed string/number rows.
+#[macro_export]
+macro_rules! csv_row {
+    ($writer:expr, $($v:expr),+ $(,)?) => {
+        $writer.row(&[$(format!("{}", $v)),+])
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join(format!("sflga_csv_{}", std::process::id()));
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["1".into(), "x".into()]).unwrap();
+        w.row_f64(&[2.5, 3.0]).unwrap();
+        drop(w);
+        let text = fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,x\n2.5,3\n");
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_wrong_arity() {
+        let dir = std::env::temp_dir().join(format!("sflga_csv2_{}", std::process::id()));
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        assert!(w.row(&["1".into()]).is_err());
+        fs::remove_dir_all(dir).unwrap();
+    }
+}

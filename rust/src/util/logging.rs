@@ -1,0 +1,108 @@
+//! Leveled stderr logger with elapsed-time stamps (no env_logger offline).
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+use once_cell_lite::Lazy;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+
+/// Minimal once-initialized cell (once_cell crate is in the vendor set but
+/// keeping the dependency surface to xla+anyhow only).
+mod once_cell_lite {
+    use std::sync::OnceLock;
+
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        pub const fn new(init: F) -> Self {
+            Lazy { cell: OnceLock::new(), init }
+        }
+
+        pub fn force(&self) -> &T {
+            self.cell.get_or_init(&self.init)
+        }
+    }
+}
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level_from_str(s: &str) -> Level {
+    match s.to_ascii_lowercase().as_str() {
+        "debug" => Level::Debug,
+        "warn" => Level::Warn,
+        "error" => Level::Error,
+        _ => Level::Info,
+    }
+}
+
+pub fn enabled(level: Level) -> bool {
+    level as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.force().elapsed().as_secs_f64();
+    let tag = match level {
+        Level::Debug => "DBG",
+        Level::Info => "INF",
+        Level::Warn => "WRN",
+        Level::Error => "ERR",
+    };
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{t:9.3}s {tag} {module}] {msg}");
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn_log {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_gates() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Debug));
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn parses_levels() {
+        assert_eq!(level_from_str("debug"), Level::Debug);
+        assert_eq!(level_from_str("WARN"), Level::Warn);
+        assert_eq!(level_from_str("bogus"), Level::Info);
+    }
+}

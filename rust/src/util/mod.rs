@@ -1,0 +1,9 @@
+//! Shared substrates: JSON, RNG, CLI, logging, stats, CSV, property tests.
+
+pub mod cli;
+pub mod csvio;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,79 @@
+//! Mini property-testing harness (proptest is not in the offline vendor
+//! set): run a property over N seeded random cases; on failure report the
+//! seed so the case replays deterministically.
+
+use super::rng::Pcg;
+
+pub const DEFAULT_CASES: u64 = 256;
+
+/// Run `prop` over `cases` deterministic PCG streams; panics with the
+/// failing seed on the first violation.
+pub fn check<F: FnMut(&mut Pcg) -> Result<(), String>>(name: &str, cases: u64, mut prop: F) {
+    for case in 0..cases {
+        let mut rng = Pcg::new(0x5F1_6A ^ case, case);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed on case {case}: {msg}");
+        }
+    }
+}
+
+/// Convenience assertion helpers returning Result<(), String>.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b) = ($a, $b);
+        if (a - b).abs() > $tol * (1.0 + a.abs().max(b.abs())) {
+            return Err(format!(
+                "{} = {a} != {b} = {} (tol {})",
+                stringify!($a),
+                stringify!($b),
+                $tol
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always-true", 32, |rng| {
+            count += 1;
+            let x = rng.uniform();
+            prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 8, |rng| {
+            let x = rng.uniform();
+            prop_assert!(x < 0.0, "uniform is never negative: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn close_macro_tolerates_scale() {
+        fn inner() -> Result<(), String> {
+            prop_assert_close!(1000.0_f64, 1000.0001_f64, 1e-6);
+            Ok(())
+        }
+        assert!(inner().is_ok());
+    }
+}

@@ -1,0 +1,262 @@
+//! Deterministic PRNG stack (no `rand` crate offline): PCG-XSH-RR 64/32
+//! with SplitMix64 seeding, plus the distributions the simulator needs
+//! (uniform, normal via Box–Muller, Rayleigh, exponential, Dirichlet).
+//!
+//! Determinism is a correctness requirement: every figure run is seeded, so
+//! paper-figure CSVs are bit-reproducible across runs and machines.
+
+/// SplitMix64 — used to expand one u64 seed into PCG state/stream.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG-XSH-RR 64/32: small, fast, statistically solid.
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+    /// Cached second normal from Box–Muller.
+    spare_normal: Option<f64>,
+}
+
+impl Pcg {
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut sm = seed;
+        let init_state = splitmix64(&mut sm);
+        let mut sm2 = stream ^ 0xDA3E_39CB_94B9_5BDB;
+        let init_inc = splitmix64(&mut sm2) | 1;
+        let mut pcg = Pcg { state: 0, inc: init_inc, spare_normal: None };
+        pcg.state = init_state.wrapping_add(init_inc);
+        pcg.next_u32();
+        pcg
+    }
+
+    /// Derive an independent child stream (for per-client channels etc.).
+    pub fn child(&mut self, tag: u64) -> Pcg {
+        let seed = (self.next_u32() as u64) << 32 | self.next_u32() as u64;
+        Pcg::new(seed ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15), tag)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6364136223846793005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1) with 32 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        self.next_u32() as f64 * (1.0 / 4294967296.0)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Multiply-shift rejection-free mapping (Lemire); bias < 2^-32.
+        ((self.next_u32() as u64 * n as u64) >> 32) as usize
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // u1 in (0,1] to avoid ln(0).
+        let u1 = 1.0 - self.uniform();
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Rayleigh-distributed amplitude with scale sigma
+    /// (block-fading magnitude; |h|^2 is then exponential).
+    pub fn rayleigh(&mut self, sigma: f64) -> f64 {
+        let u = 1.0 - self.uniform();
+        sigma * (-2.0 * u.ln()).sqrt()
+    }
+
+    /// Exponential with mean `mean` (Rayleigh power gain |h|^2).
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        let u = 1.0 - self.uniform();
+        -mean * u.ln()
+    }
+
+    /// Gamma(shape k >= 0) via Marsaglia–Tsang (with boost for k < 1).
+    pub fn gamma(&mut self, k: f64) -> f64 {
+        if k < 1.0 {
+            let g = self.gamma(k + 1.0);
+            return g * self.uniform().powf(1.0 / k);
+        }
+        let d = k - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v;
+            }
+        }
+    }
+
+    /// Symmetric Dirichlet(alpha) over n categories (non-IID data splits).
+    pub fn dirichlet(&mut self, alpha: f64, n: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..n).map(|_| self.gamma(alpha)).collect();
+        let s: f64 = v.iter().sum();
+        if s <= 0.0 {
+            return vec![1.0 / n as f64; n];
+        }
+        for x in &mut v {
+            *x /= s;
+        }
+        v
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg::new(42, 1);
+        let mut b = Pcg::new(42, 1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg::new(42, 1);
+        let mut b = Pcg::new(42, 2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval_and_centered() {
+        let mut r = Pcg::new(7, 0);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg::new(9, 0);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Pcg::new(11, 0);
+        let n = 50_000;
+        let m = (0..n).map(|_| r.exponential(2.5)).sum::<f64>() / n as f64;
+        assert!((m - 2.5).abs() < 0.1, "mean {m}");
+    }
+
+    #[test]
+    fn rayleigh_positive_and_mean() {
+        let mut r = Pcg::new(13, 0);
+        let n = 50_000;
+        let sigma = 1.0;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.rayleigh(sigma);
+            assert!(x >= 0.0);
+            sum += x;
+        }
+        let want = sigma * (std::f64::consts::PI / 2.0).sqrt();
+        assert!((sum / n as f64 - want).abs() < 0.02);
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Pcg::new(17, 0);
+        for alpha in [0.1, 0.5, 1.0, 10.0] {
+            let v = r.dirichlet(alpha, 10);
+            assert_eq!(v.len(), 10);
+            assert!((v.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(v.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Pcg::new(19, 0);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let i = r.below(7);
+            assert!(i < 7);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg::new(23, 0);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Pcg::new(29, 0);
+        for k in [0.5, 2.0, 7.5] {
+            let n = 30_000;
+            let m = (0..n).map(|_| r.gamma(k)).sum::<f64>() / n as f64;
+            assert!((m - k).abs() / k < 0.05, "k={k} mean={m}");
+        }
+    }
+}

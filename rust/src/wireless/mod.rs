@@ -1,0 +1,218 @@
+//! Wireless system model (paper §II-C, §V-A2).
+//!
+//! Path loss 128.1 + 37.6·log10(d_km) dB, block Rayleigh fading (constant
+//! within a round, redrawn across rounds), thermal noise −174 dBm/Hz.
+//! Uplink: OFDMA subchannels, rate eq (10); downlink: full-band broadcast,
+//! rate eq (11).  All quantities SI: Hz, W, bits/s.
+
+use crate::util::rng::Pcg;
+
+/// Static network configuration (defaults = the paper's §V-A numbers).
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Total uplink bandwidth B in Hz (paper: 20 MHz).
+    pub bandwidth: f64,
+    /// Client max transmit power in W (paper: 25 dBm).
+    pub p_max: f64,
+    /// Server broadcast power in W (paper: 33 dBm).
+    pub p_server: f64,
+    /// Noise spectral density N0 in W/Hz (paper: −174 dBm/Hz).
+    pub n0: f64,
+    /// Client distance range in km (uniform draw per client).
+    pub d_min_km: f64,
+    pub d_max_km: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            bandwidth: 20e6,
+            p_max: dbm_to_watt(25.0),
+            p_server: dbm_to_watt(33.0),
+            n0: dbm_to_watt(-174.0), // per Hz
+            d_min_km: 0.05,
+            d_max_km: 0.5,
+        }
+    }
+}
+
+pub fn dbm_to_watt(dbm: f64) -> f64 {
+    10f64.powf((dbm - 30.0) / 10.0)
+}
+
+pub fn db_to_linear(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+/// Path loss in dB at distance d (km): 128.1 + 37.6 log10(d).
+pub fn path_loss_db(d_km: f64) -> f64 {
+    128.1 + 37.6 * d_km.log10()
+}
+
+/// Average (large-scale) channel power gain at distance d.
+pub fn avg_gain(d_km: f64) -> f64 {
+    db_to_linear(-path_loss_db(d_km))
+}
+
+/// Shannon rate in bit/s over bandwidth `b` Hz with received power `p*g`.
+/// r = B log2(1 + p g / (B N0))  — eqs (10)/(11).
+pub fn rate(b: f64, p: f64, g: f64, n0: f64) -> f64 {
+    if b <= 0.0 {
+        return 0.0;
+    }
+    b * (1.0 + p * g / (b * n0)).log2()
+}
+
+/// Per-round channel state for all clients.
+#[derive(Clone, Debug)]
+pub struct ChannelState {
+    /// Instantaneous power gains g_t^n (path loss × Rayleigh |h|²).
+    pub gains: Vec<f64>,
+}
+
+/// Block-fading channel: fixed client placement, i.i.d. Rayleigh power
+/// fading per round (|h|² ~ Exp(1)).
+#[derive(Clone, Debug)]
+pub struct Channel {
+    cfg: NetConfig,
+    avg_gains: Vec<f64>,
+    rng: Pcg,
+}
+
+impl Channel {
+    pub fn new(cfg: NetConfig, num_clients: usize, seed: u64) -> Channel {
+        let mut rng = Pcg::new(seed, 0xC4A7);
+        let avg_gains = (0..num_clients)
+            .map(|_| avg_gain(rng.range(cfg.d_min_km, cfg.d_max_km)))
+            .collect();
+        Channel { cfg, avg_gains, rng }
+    }
+
+    pub fn cfg(&self) -> &NetConfig {
+        &self.cfg
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.avg_gains.len()
+    }
+
+    /// Draw round-t gains: g_t^n = ḡ_n · |h|²,  |h|² ~ Exp(1).
+    pub fn draw_round(&mut self) -> ChannelState {
+        let gains = self
+            .avg_gains
+            .iter()
+            .map(|&g| g * self.rng.exponential(1.0))
+            .collect();
+        ChannelState { gains }
+    }
+
+    /// Uplink rate for client n given its bandwidth/power allocation.
+    pub fn uplink_rate(&self, state: &ChannelState, n: usize, b: f64, p: f64) -> f64 {
+        rate(b, p, state.gains[n], self.cfg.n0)
+    }
+
+    /// Downlink broadcast rate to client n (full band, server power),
+    /// eq (11).
+    pub fn downlink_rate(&self, state: &ChannelState, n: usize) -> f64 {
+        rate(self.cfg.bandwidth, self.cfg.p_server, state.gains[n], self.cfg.n0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn dbm_conversions() {
+        assert!((dbm_to_watt(30.0) - 1.0).abs() < 1e-12);
+        assert!((dbm_to_watt(0.0) - 1e-3).abs() < 1e-15);
+        assert!((dbm_to_watt(25.0) - 0.316227766).abs() < 1e-6);
+    }
+
+    #[test]
+    fn path_loss_reference_point() {
+        // At 1 km the law gives exactly 128.1 dB.
+        assert!((path_loss_db(1.0) - 128.1).abs() < 1e-9);
+        // Closer → less loss.
+        assert!(path_loss_db(0.1) < path_loss_db(1.0));
+    }
+
+    #[test]
+    fn rate_monotone_in_power_and_positive() {
+        let g = avg_gain(0.2);
+        let n0 = dbm_to_watt(-174.0);
+        let r1 = rate(1e6, 0.1, g, n0);
+        let r2 = rate(1e6, 0.3, g, n0);
+        assert!(r2 > r1 && r1 > 0.0);
+    }
+
+    #[test]
+    fn rate_subadditive_in_bandwidth() {
+        // Fixed power split across more bandwidth still increases rate
+        // (log concavity ⇒ diminishing, but monotone in B).
+        let g = avg_gain(0.2);
+        let n0 = dbm_to_watt(-174.0);
+        let r1 = rate(1e6, 0.1, g, n0);
+        let r2 = rate(2e6, 0.1, g, n0);
+        assert!(r2 > r1);
+        assert!(r2 < 2.0 * r1);
+    }
+
+    #[test]
+    fn zero_bandwidth_zero_rate() {
+        assert_eq!(rate(0.0, 1.0, 1.0, 1e-20), 0.0);
+    }
+
+    #[test]
+    fn channel_is_deterministic_per_seed() {
+        let cfg = NetConfig::default();
+        let mut a = Channel::new(cfg.clone(), 5, 42);
+        let mut b = Channel::new(cfg, 5, 42);
+        for _ in 0..10 {
+            assert_eq!(a.draw_round().gains, b.draw_round().gains);
+        }
+    }
+
+    #[test]
+    fn fading_preserves_mean_gain() {
+        let cfg = NetConfig::default();
+        let mut ch = Channel::new(cfg, 3, 7);
+        let avg = ch.avg_gains.clone();
+        let rounds = 20_000;
+        let mut sums = vec![0.0; 3];
+        for _ in 0..rounds {
+            let st = ch.draw_round();
+            for (s, g) in sums.iter_mut().zip(&st.gains) {
+                *s += g;
+            }
+        }
+        for (s, a) in sums.iter().zip(&avg) {
+            let mean = s / rounds as f64;
+            assert!((mean / a - 1.0).abs() < 0.05, "mean {mean} avg {a}");
+        }
+    }
+
+    #[test]
+    fn property_downlink_uses_full_band() {
+        check("downlink-band", 32, |rng| {
+            let cfg = NetConfig::default();
+            let ch = Channel::new(cfg.clone(), 2, rng.next_u64());
+            let st = ChannelState { gains: vec![rng.uniform() * 1e-10 + 1e-13; 2] };
+            let r = ch.downlink_rate(&st, 0);
+            let want = rate(cfg.bandwidth, cfg.p_server, st.gains[0], cfg.n0);
+            prop_assert!((r - want).abs() < 1e-6, "downlink {r} != {want}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn realistic_rates_order_of_magnitude() {
+        // 20 MHz, 25 dBm, 100–500 m: uplink SNR should yield Mb/s rates.
+        let cfg = NetConfig::default();
+        let g = avg_gain(0.3);
+        let r = rate(2e6, cfg.p_max, g, cfg.n0);
+        assert!(r > 1e5 && r < 1e9, "r = {r} bit/s");
+    }
+}

@@ -1,0 +1,116 @@
+//! Ablation tests: the two readings of SFL-GA's client update (shared w^c
+//! per eq 19 vs literal per-client drift) and heterogeneous client compute
+//! (per-client constraint 30b).
+
+use std::path::{Path, PathBuf};
+
+use sfl_ga::coordinator::timing::{round_latency, AllocPolicy};
+use sfl_ga::coordinator::{SchemeKind, TrainConfig, Trainer};
+use sfl_ga::latency::ComputeConfig;
+use sfl_ga::model::Manifest;
+use sfl_ga::wireless::{Channel, NetConfig};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn drift_scheme_parses_and_is_not_in_paper_set() {
+    assert_eq!(SchemeKind::parse("sfl-ga-drift").unwrap(), SchemeKind::SflGaDrift);
+    assert!(!SchemeKind::all().contains(&SchemeKind::SflGaDrift));
+}
+
+/// The drift ablation exchanges exactly what SFL-GA exchanges.
+#[test]
+fn drift_comm_equals_sfl_ga() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let spec = manifest.for_dataset("mnist").unwrap();
+    let comp = ComputeConfig::default();
+    for v in 1..=4 {
+        let a = sfl_ga::coordinator::comm::round_comm(
+            SchemeKind::SflGa, spec, spec.cut(v), &comp, 10, 1);
+        let b = sfl_ga::coordinator::comm::round_comm(
+            SchemeKind::SflGaDrift, spec, spec.cut(v), &comp, 10, 1);
+        assert_eq!(a, b);
+    }
+}
+
+/// At small cuts the two readings nearly coincide; the drift variant
+/// actually drifts (nonzero replica divergence) while SFL-GA does not.
+#[test]
+fn drift_ablation_diverges_where_sfl_ga_does_not() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let run = |scheme: SchemeKind| {
+        let cfg = TrainConfig {
+            scheme,
+            num_clients: 4,
+            rounds: 3,
+            eval_every: 10,
+            samples_per_client: 64,
+            alloc: AllocPolicy::Equal,
+            seed: 5,
+            ..Default::default()
+        };
+        let mut t = Trainer::new(&dir, &manifest, cfg).unwrap();
+        t.run(2).unwrap();
+        t.client_drift(2)
+    };
+    assert_eq!(run(SchemeKind::SflGa), 0.0);
+    assert!(run(SchemeKind::SflGaDrift) > 0.0);
+}
+
+// ------------------------------------------------- heterogeneous clients
+
+#[test]
+fn client_flops_homogeneous_by_default() {
+    let comp = ComputeConfig::default();
+    let f = comp.client_flops(5, 1);
+    assert!(f.iter().all(|&x| x == comp.f_client_max));
+}
+
+#[test]
+fn client_flops_spread_is_bounded_and_deterministic() {
+    let comp = ComputeConfig { f_client_spread: 0.5, ..Default::default() };
+    let f1 = comp.client_flops(10, 10);
+    let f2 = comp.client_flops(10, 10);
+    assert_eq!(f1, f2, "deployment draw must be stable");
+    for &f in &f1 {
+        assert!(f <= comp.f_client_max && f >= 0.5 * comp.f_client_max);
+    }
+    assert!(f1.windows(2).any(|w| w[0] != w[1]), "spread should differ across clients");
+}
+
+/// Heterogeneity can only slow the round down (straggler effect), and the
+/// optimal allocator partially compensates relative to equal split.
+#[test]
+fn heterogeneity_slows_rounds_and_allocator_compensates() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let spec = manifest.for_dataset("mnist").unwrap().clone();
+    let net = NetConfig::default();
+    let mut ch = Channel::new(net.clone(), 10, 3);
+    let st = ch.draw_round();
+    let homo = ComputeConfig::default();
+    let hetero = ComputeConfig { f_client_spread: 0.6, ..Default::default() };
+
+    let l_homo = round_latency(
+        SchemeKind::SflGa, &spec, spec.cut(2), &net, &homo, &st, AllocPolicy::Equal, 1);
+    let l_het_eq = round_latency(
+        SchemeKind::SflGa, &spec, spec.cut(2), &net, &hetero, &st, AllocPolicy::Equal, 1);
+    let l_het_opt = round_latency(
+        SchemeKind::SflGa, &spec, spec.cut(2), &net, &hetero, &st, AllocPolicy::Optimal, 1);
+
+    assert!(
+        l_het_eq.total() > l_homo.total(),
+        "straggler must slow the round: {} vs {}",
+        l_het_eq.total(),
+        l_homo.total()
+    );
+    assert!(
+        l_het_opt.uplink_leg <= l_het_eq.uplink_leg * (1.0 + 1e-9),
+        "optimal allocation must not be worse under heterogeneity"
+    );
+}

@@ -1,0 +1,261 @@
+//! Integration tests across the whole stack: PJRT runtime + manifest +
+//! data + coordinator.  These run against the real AOT artifacts and are
+//! skipped (not failed) when `make artifacts` hasn't been run.
+
+use std::path::{Path, PathBuf};
+
+use sfl_ga::coordinator::{AllocPolicy, SchemeKind, TrainConfig, Trainer};
+use sfl_ga::data::init::init_params;
+use sfl_ga::data::{generate, Batcher};
+use sfl_ga::model::Manifest;
+use sfl_ga::runtime::ModelRuntime;
+use sfl_ga::tensor;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+/// rust-side mirror of python's split-equivalence test, through PJRT:
+/// client_fwd ∘ server_grad ∘ client_grad must equal full_grad.
+#[test]
+fn split_gradients_equal_full_through_pjrt() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = ModelRuntime::load(&dir, &manifest, "mnist").unwrap();
+    let spec = rt.spec().clone();
+    let params = init_params(&spec, 42);
+    let ds = generate(&spec, "mnist", 64, 9);
+    let idx: Vec<usize> = (0..spec.train_batch).collect();
+    let (x, y) = ds.batch(&idx);
+
+    let (loss_full, g_full) = rt.full_grad(&params, &x, &y).unwrap();
+
+    for cut in 1..=4 {
+        let nc = spec.cut(cut).client_params;
+        let wc = params[..nc].to_vec();
+        let ws = params[nc..].to_vec();
+        let smashed = rt.client_fwd(cut, &wc, &x).unwrap();
+        let (loss_split, g_ws, g_s) = rt.server_grad(cut, &ws, &smashed, &y).unwrap();
+        let g_wc = rt.client_grad(cut, &wc, &x, &g_s).unwrap();
+
+        assert!(
+            (loss_full - loss_split).abs() < 1e-4 * (1.0 + loss_full.abs()),
+            "cut {cut}: loss {loss_split} != {loss_full}"
+        );
+        let mut g_split = g_wc.clone();
+        g_split.extend(g_ws.iter().cloned());
+        let diff = tensor::max_abs_diff(&g_split, &g_full);
+        assert!(diff < 2e-3, "cut {cut}: max grad diff {diff}");
+    }
+}
+
+/// With a single client, SFL-GA, SFL and PSL are mathematically identical
+/// (aggregation over one element is the identity) — all three must produce
+/// the same model trajectory.
+#[test]
+fn single_client_schemes_coincide() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut finals = Vec::new();
+    for scheme in [SchemeKind::SflGa, SchemeKind::Sfl, SchemeKind::Psl] {
+        let cfg = TrainConfig {
+            scheme,
+            num_clients: 1,
+            rounds: 3,
+            eval_every: 3,
+            samples_per_client: 64,
+            seed: 5,
+            alloc: AllocPolicy::Equal,
+            ..Default::default()
+        };
+        let mut t = Trainer::new(&dir, &manifest, cfg).unwrap();
+        let stats = t.run(2).unwrap();
+        let (loss, acc) = stats.last().unwrap().test.unwrap();
+        finals.push((t.global_params(2), loss, acc));
+    }
+    for i in 1..finals.len() {
+        let diff = tensor::max_abs_diff(&finals[0].0, &finals[i].0);
+        assert!(diff < 1e-5, "scheme {i} diverged from scheme 0 by {diff}");
+        assert!((finals[0].1 - finals[i].1).abs() < 1e-5);
+    }
+}
+
+/// Deterministic: same seed ⇒ identical metrics; different seed ⇒ not.
+#[test]
+fn training_is_seed_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let run = |seed: u64| {
+        let cfg = TrainConfig {
+            rounds: 2,
+            eval_every: 2,
+            samples_per_client: 64,
+            seed,
+            alloc: AllocPolicy::Equal,
+            ..Default::default()
+        };
+        let mut t = Trainer::new(&dir, &manifest, cfg).unwrap();
+        let stats = t.run(1).unwrap();
+        (stats.last().unwrap().train_loss, stats.last().unwrap().test.unwrap())
+    };
+    let a = run(7);
+    let b = run(7);
+    let c = run(8);
+    assert_eq!(a, b);
+    assert_ne!(a, c);
+}
+
+/// SFL-GA's shared-client-model invariant: zero drift across replicas.
+#[test]
+fn sfl_ga_clients_stay_identical() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let cfg = TrainConfig {
+        scheme: SchemeKind::SflGa,
+        num_clients: 4,
+        rounds: 3,
+        eval_every: 10,
+        samples_per_client: 64,
+        alloc: AllocPolicy::Equal,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(&dir, &manifest, cfg).unwrap();
+    t.run(2).unwrap();
+    assert_eq!(t.client_drift(2), 0.0, "SFL-GA replicas must remain identical");
+}
+
+/// PSL clients drift (no aggregation), SFL clients re-sync every round.
+#[test]
+fn psl_drifts_sfl_resyncs() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let drift = |scheme: SchemeKind| {
+        let cfg = TrainConfig {
+            scheme,
+            num_clients: 4,
+            rounds: 3,
+            eval_every: 10,
+            samples_per_client: 64,
+            alloc: AllocPolicy::Equal,
+            ..Default::default()
+        };
+        let mut t = Trainer::new(&dir, &manifest, cfg).unwrap();
+        t.run(2).unwrap();
+        t.client_drift(2)
+    };
+    assert!(drift(SchemeKind::Psl) > 0.0, "PSL must drift");
+    assert_eq!(drift(SchemeKind::Sfl), 0.0, "SFL aggregates every round");
+}
+
+/// Short SFL-GA training improves over the initial model.
+#[test]
+fn sfl_ga_learns_in_ten_rounds() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let cfg = TrainConfig {
+        rounds: 10,
+        eval_every: 10,
+        samples_per_client: 128,
+        alloc: AllocPolicy::Equal,
+        seed: 3,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(&dir, &manifest, cfg).unwrap();
+    let (loss0, acc0) = t.evaluate(1).unwrap();
+    let stats = t.run(1).unwrap();
+    let (loss1, acc1) = stats.last().unwrap().test.unwrap();
+    assert!(loss1 < loss0, "loss {loss0} -> {loss1} did not improve");
+    assert!(acc1 >= acc0, "acc {acc0} -> {acc1} regressed");
+}
+
+/// Communication accounting sanity at the run level: SFL-GA's cumulative
+/// traffic is strictly below PSL's, which is below SFL's (same workload).
+#[test]
+fn cumulative_comm_ordering() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let total = |scheme: SchemeKind| {
+        let cfg = TrainConfig {
+            scheme,
+            rounds: 2,
+            eval_every: 10,
+            samples_per_client: 64,
+            alloc: AllocPolicy::Equal,
+            ..Default::default()
+        };
+        let mut t = Trainer::new(&dir, &manifest, cfg).unwrap();
+        t.run(2)
+            .unwrap()
+            .iter()
+            .map(|s| s.comm.total_bits())
+            .sum::<f64>()
+    };
+    let ga = total(SchemeKind::SflGa);
+    let psl = total(SchemeKind::Psl);
+    let sfl = total(SchemeKind::Sfl);
+    assert!(ga < psl && psl < sfl, "ordering violated: ga={ga} psl={psl} sfl={sfl}");
+}
+
+/// FL baseline trains through the same runtime.
+#[test]
+fn fl_baseline_learns() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let cfg = TrainConfig {
+        scheme: SchemeKind::Fl,
+        rounds: 8,
+        eval_every: 8,
+        samples_per_client: 128,
+        alloc: AllocPolicy::Equal,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(&dir, &manifest, cfg).unwrap();
+    let (loss0, _) = t.evaluate(1).unwrap();
+    let stats = t.run(1).unwrap();
+    let (loss1, _) = stats.last().unwrap().test.unwrap();
+    assert!(loss1 < loss0, "FL loss {loss0} -> {loss1}");
+}
+
+/// Dynamic cut switching (Algorithm 1 mode) keeps training stable.
+#[test]
+fn dynamic_cut_switching_is_stable() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let cfg = TrainConfig {
+        rounds: 6,
+        eval_every: 6,
+        samples_per_client: 64,
+        alloc: AllocPolicy::Equal,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(&dir, &manifest, cfg).unwrap();
+    let cuts = [1usize, 3, 2, 4, 2, 1];
+    let mut last = None;
+    for &v in &cuts {
+        let st = t.draw_channel();
+        let stats = t.run_round(v, &st).unwrap();
+        assert!(stats.train_loss.is_finite());
+        last = stats.test;
+    }
+    let (loss, acc) = last.unwrap();
+    assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+}
+
+/// Batcher + dataset wiring: every client sees only its own shard.
+#[test]
+fn batcher_respects_shards() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let spec = manifest.for_dataset("mnist").unwrap().clone();
+    let ds = generate(&spec, "mnist", 100, 4);
+    let shards = sfl_ga::data::partition(&ds, 4, None, 2);
+    for shard in &shards {
+        let mut b = Batcher::new(shard.clone(), 8, 1);
+        for _ in 0..10 {
+            for i in b.next_batch() {
+                assert!(shard.contains(&i));
+            }
+        }
+    }
+}
