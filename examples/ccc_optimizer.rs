@@ -17,7 +17,7 @@ fn main() -> anyhow::Result<()> {
     let epsilon = args.parse_or("epsilon", 1e-3f64)?;
     let seed = args.parse_or("seed", 17u64)?;
 
-    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let manifest = Manifest::builtin();
     let spec = manifest.for_dataset("mnist")?.clone();
     println!(
         "privacy ε={epsilon}: feasible cuts = {:?}",
@@ -31,7 +31,8 @@ fn main() -> anyhow::Result<()> {
         alloc: AllocPolicy::Equal, // fast inner loop for the demo
         ..Default::default()
     };
-    let mut env = ccc::Env::new(spec.clone(), Default::default(), Default::default(), cfg, 10, seed);
+    let mut env =
+        ccc::Env::new(spec.clone(), Default::default(), Default::default(), cfg, 10, seed);
     println!("training Algorithm 1 agent: {episodes} episodes x 20 steps ...");
     let trained = ccc::train(&mut env, seed ^ 0xA1);
     for (ep, r) in trained.episode_rewards.iter().enumerate() {

@@ -14,8 +14,7 @@ fn main() -> anyhow::Result<()> {
     let dataset = args.str_or("dataset", "mnist");
     let cut = args.parse_or("cut", 2usize)?;
 
-    let artifact_dir = std::path::Path::new("artifacts");
-    let manifest = Manifest::load(artifact_dir)?;
+    let manifest = Manifest::builtin();
 
     println!("scheme    final_acc   comm_MB   latency_s   (dataset={dataset}, cut=v{cut}, {rounds} rounds)");
     for scheme in SchemeKind::all() {
@@ -27,7 +26,7 @@ fn main() -> anyhow::Result<()> {
             seed: args.parse_or("seed", 17u64)?,
             ..Default::default()
         };
-        let mut trainer = Trainer::new(artifact_dir, &manifest, cfg)?;
+        let mut trainer = Trainer::native(&manifest, cfg)?;
         let mut metrics = RunMetrics::new(scheme, &dataset);
         for stats in trainer.run(cut)? {
             metrics.push(&stats);

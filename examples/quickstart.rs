@@ -1,8 +1,9 @@
 //! Quickstart: the smallest useful SFL-GA program.
 //!
-//! Loads the AOT artifacts, trains the split model with gradient
-//! aggregation for 20 rounds on the synthetic MNIST workload, and prints
-//! accuracy + communication + simulated latency.
+//! Builds the native pure-Rust runtime from the built-in manifest (no
+//! artifacts needed), trains the split model with gradient aggregation
+//! for 20 rounds on the synthetic MNIST workload, and prints accuracy +
+//! communication + simulated latency.
 //!
 //! Run with:  cargo run --release --example quickstart
 
@@ -10,8 +11,7 @@ use sfl_ga::coordinator::{RunMetrics, SchemeKind, TrainConfig, Trainer};
 use sfl_ga::model::Manifest;
 
 fn main() -> anyhow::Result<()> {
-    let artifact_dir = std::path::Path::new("artifacts");
-    let manifest = Manifest::load(artifact_dir)?;
+    let manifest = Manifest::builtin();
 
     let cfg = TrainConfig {
         dataset: "mnist".into(),
@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     let cut = 2; // client owns conv1+conv2; server owns the fc stack
 
     println!("SFL-GA quickstart: {} clients, cut v={cut}, {} rounds", cfg.num_clients, cfg.rounds);
-    let mut trainer = Trainer::new(artifact_dir, &manifest, cfg)?;
+    let mut trainer = Trainer::native(&manifest, cfg)?;
     let mut metrics = RunMetrics::new(SchemeKind::SflGa, "mnist");
     for stats in trainer.run(cut)? {
         metrics.push(&stats);

@@ -1,7 +1,7 @@
-//! End-to-end driver (EXPERIMENTS.md §End-to-end): trains the full
-//! three-layer stack — Rust coordinator → PJRT runtime → JAX/Pallas AOT
-//! artifacts — for several hundred rounds on the synthetic corpus, logging
-//! the loss curve, accuracy, communication and simulated wall latency.
+//! End-to-end driver: trains the full stack — Rust coordinator over the
+//! native pure-Rust runtime — for several hundred rounds on the synthetic
+//! corpus, logging the loss curve, accuracy, communication and simulated
+//! wall latency.
 //!
 //! Run with:  cargo run --release --example train_sfl_ga [-- --rounds 300]
 
@@ -15,8 +15,7 @@ fn main() -> anyhow::Result<()> {
     let dataset = args.str_or("dataset", "mnist");
     let cut = args.parse_or("cut", 2usize)?;
 
-    let artifact_dir = std::path::Path::new("artifacts");
-    let manifest = Manifest::load(artifact_dir)?;
+    let manifest = Manifest::builtin();
     let cfg = TrainConfig {
         dataset: dataset.clone(),
         scheme: SchemeKind::SflGa,
@@ -32,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     println!("# dataset={dataset} cut=v{cut} clients={} rounds={rounds}", cfg.num_clients);
     println!("# round,train_loss,test_loss,test_acc,cum_comm_mb,cum_latency_s");
     let t0 = std::time::Instant::now();
-    let mut trainer = Trainer::new(artifact_dir, &manifest, cfg)?;
+    let mut trainer = Trainer::native(&manifest, cfg)?;
     let mut metrics = RunMetrics::new(SchemeKind::SflGa, &dataset);
     for stats in trainer.run(cut)? {
         metrics.push(&stats);
@@ -40,8 +39,12 @@ fn main() -> anyhow::Result<()> {
         if row.evaluated {
             println!(
                 "{},{:.4},{:.4},{:.4},{:.2},{:.2}",
-                row.round, row.train_loss, row.test_loss, row.test_acc,
-                row.cum_comm_mb, row.cum_latency_s
+                row.round,
+                row.train_loss,
+                row.test_loss,
+                row.test_acc,
+                row.cum_comm_mb,
+                row.cum_latency_s,
             );
         }
     }

@@ -3,20 +3,15 @@
 //! the simulation/optimization layers that every figure run multiplies).
 
 use sfl_ga::benchlib::bench;
-use sfl_ga::coordinator::timing::{round_latency, AllocPolicy};
 use sfl_ga::coordinator::SchemeKind;
+use sfl_ga::coordinator::timing::{AllocPolicy, round_latency};
 use sfl_ga::latency::ComputeConfig;
 use sfl_ga::model::Manifest;
 use sfl_ga::wireless::{Channel, NetConfig};
 
 fn main() -> anyhow::Result<()> {
-    let dir = std::path::Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping bench_figures: run `make artifacts` first");
-        return Ok(());
-    }
     println!("== figure timing models ==");
-    let manifest = Manifest::load(dir)?;
+    let manifest = Manifest::builtin();
     let spec = manifest.for_dataset("mnist")?.clone();
     let net = NetConfig::default();
     let comp = ComputeConfig::default();
@@ -30,8 +25,8 @@ fn main() -> anyhow::Result<()> {
         });
     }
     bench("round_latency_equal/sfl-ga", 10, 200, || {
-        round_latency(SchemeKind::SflGa, &spec, spec.cut(2), &net, &comp, &st, AllocPolicy::Equal, 1)
-            .total()
+        let pol = AllocPolicy::Equal;
+        round_latency(SchemeKind::SflGa, &spec, spec.cut(2), &net, &comp, &st, pol, 1).total()
     });
     // Fig. 8's full sweep: 6 bandwidths x 4 schemes x K draws.
     bench("fig8_sweep(6bw x 4schemes x 5draws)", 1, 5, || {
@@ -43,8 +38,14 @@ fn main() -> anyhow::Result<()> {
                 let st = ch.draw_round();
                 for scheme in SchemeKind::all() {
                     total += round_latency(
-                        scheme, &spec, spec.cut(2), &net, &comp, &st,
-                        AllocPolicy::Optimal, 1,
+                        scheme,
+                        &spec,
+                        spec.cut(2),
+                        &net,
+                        &comp,
+                        &st,
+                        AllocPolicy::Optimal,
+                        1,
                     )
                     .total();
                 }

@@ -1,7 +1,7 @@
 //! End-to-end round benchmarks: real wall time of one communication round
-//! per scheme (compute via PJRT + aggregation + bookkeeping), plus the
-//! per-round hot-path pieces (aggregation saxpy, channel draw, comm/timing
-//! models).  This is the paper's Table-less "system cost" view.
+//! per scheme (native-backend compute + aggregation + bookkeeping), plus
+//! the per-round hot-path pieces (aggregation saxpy, channel draw,
+//! comm/timing models).  This is the paper's Table-less "system cost" view.
 
 use sfl_ga::benchlib::bench;
 use sfl_ga::coordinator::{SchemeKind, TrainConfig, Trainer};
@@ -10,23 +10,19 @@ use sfl_ga::tensor;
 use sfl_ga::util::rng::Pcg;
 
 fn main() -> anyhow::Result<()> {
-    let dir = std::path::Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping bench_round: run `make artifacts` first");
-        return Ok(());
-    }
     println!("== end-to-end rounds ==");
-    let manifest = Manifest::load(dir)?;
+    let manifest = Manifest::builtin();
     for scheme in SchemeKind::all() {
         let cfg = TrainConfig {
             scheme,
             rounds: 1_000_000, // never reached; we drive rounds manually
             eval_every: usize::MAX,
             samples_per_client: 64,
+            num_clients: 4,
             ..Default::default()
         };
-        let mut trainer = Trainer::new(dir, &manifest, cfg)?;
-        bench(&format!("round/{}", scheme.name()), 1, 8, || {
+        let mut trainer = Trainer::native(&manifest, cfg)?;
+        bench(&format!("round/{}", scheme.name()), 1, 3, || {
             let st = trainer.draw_channel();
             trainer.run_round(2, &st).unwrap().train_loss
         });

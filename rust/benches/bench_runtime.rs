@@ -1,26 +1,17 @@
-//! Runtime benchmarks: PJRT execute round-trips for every artifact role —
-//! the L3↔L2 boundary cost that bounds the real (non-simulated) round
-//! time.  Requires `make artifacts`.
+//! Runtime benchmarks: native-backend execution of every model role — the
+//! L3↔L2 boundary cost that bounds the real (non-simulated) round time.
+//! Runs from a clean checkout (no artifacts required).
 
-use sfl_ga::benchlib::{bench, bench_once};
+use sfl_ga::benchlib::bench;
 use sfl_ga::data::init::init_params;
-use sfl_ga::data::{generate, partition, Batcher};
+use sfl_ga::data::{Batcher, generate, partition};
 use sfl_ga::model::Manifest;
-use sfl_ga::runtime::{ModelRuntime, Tensor};
+use sfl_ga::runtime::ModelRuntime;
 
 fn main() -> anyhow::Result<()> {
-    let dir = std::path::Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping bench_runtime: run `make artifacts` first");
-        return Ok(());
-    }
-    println!("== runtime (PJRT engine) ==");
-    let manifest = Manifest::load(dir)?;
-    let rt_handle = bench_once("load+compile 14 artifacts (mnist)", || {
-        ModelRuntime::load(dir, &manifest, "mnist").unwrap()
-    });
-    let _ = rt_handle;
-    let rt = ModelRuntime::load(dir, &manifest, "mnist")?;
+    println!("== runtime (native backend) ==");
+    let manifest = Manifest::builtin();
+    let rt = ModelRuntime::native(&manifest, "mnist")?;
     let spec = rt.spec().clone();
 
     let params = init_params(&spec, 7);
@@ -34,31 +25,23 @@ fn main() -> anyhow::Result<()> {
         let wc = params[..nc].to_vec();
         let ws = params[nc..].to_vec();
         let smashed = rt.client_fwd(cut, &wc, &x)?;
-        bench(&format!("client_fwd/v{cut}"), 3, 20, || {
+        bench(&format!("client_fwd/v{cut}"), 2, 10, || {
             rt.client_fwd(cut, &wc, &x).unwrap()
         });
-        bench(&format!("server_grad/v{cut}"), 3, 20, || {
+        bench(&format!("server_grad/v{cut}"), 2, 10, || {
             rt.server_grad(cut, &ws, &smashed, &y).unwrap()
         });
         let (_, _, gs) = rt.server_grad(cut, &ws, &smashed, &y)?;
-        bench(&format!("client_grad/v{cut}"), 3, 20, || {
+        bench(&format!("client_grad/v{cut}"), 2, 10, || {
             rt.client_grad(cut, &wc, &x, &gs).unwrap()
         });
     }
-    bench("full_grad", 3, 20, || rt.full_grad(&params, &x, &y).unwrap());
+    bench("full_grad", 2, 10, || rt.full_grad(&params, &x, &y).unwrap());
 
     let eval_idx: Vec<usize> = (0..spec.eval_batch.min(ds.len())).collect();
     let (ex, ey) = ds.batch(&eval_idx);
-    if ex.shape[0] == spec.eval_batch {
-        bench("eval(batch=256)", 3, 20, || rt.eval(&params, &ex, &ey).unwrap());
-    }
-
-    // Engine channel overhead: a no-compute round-trip approximation using
-    // the tiniest executable (v4 client_fwd on zero input is the smallest).
-    let zeros = Tensor::zeros(&[spec.train_batch, 28, 28, 1]);
-    let wc4 = params[..spec.cut(4).client_params].to_vec();
-    bench("engine_roundtrip(v4 client_fwd)", 3, 30, || {
-        rt.client_fwd(4, &wc4, &zeros).unwrap()
+    bench(&format!("eval(batch={})", ex.shape[0]), 1, 5, || {
+        rt.eval(&params, &ex, &ey).unwrap()
     });
     Ok(())
 }

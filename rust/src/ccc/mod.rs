@@ -16,7 +16,7 @@ use crate::allocator::build_problem;
 use crate::coordinator::timing::AllocPolicy;
 use crate::ddqn::{DdqnAgent, DdqnConfig, Transition};
 use crate::latency::ComputeConfig;
-use crate::model::{ShapeSpec, NUM_CUTS};
+use crate::model::{NUM_CUTS, ShapeSpec};
 use crate::privacy;
 use crate::util::rng::Pcg;
 use crate::wireless::{Channel, ChannelState, NetConfig};
@@ -278,12 +278,8 @@ mod tests {
     use super::*;
     use crate::model::Manifest;
 
-    fn env(epsilon: f64, episodes: usize) -> Option<Env> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("manifest.json").exists() {
-            return None;
-        }
-        let m = Manifest::load(&dir).unwrap();
+    fn env(epsilon: f64, episodes: usize) -> Env {
+        let m = Manifest::builtin();
         let spec = m.for_dataset("mnist").unwrap().clone();
         let cfg = CccConfig {
             epsilon,
@@ -294,12 +290,12 @@ mod tests {
             alloc: AllocPolicy::Equal,
             ..Default::default()
         };
-        Some(Env::new(spec, NetConfig::default(), ComputeConfig::default(), cfg, 4, 3))
+        Env::new(spec, NetConfig::default(), ComputeConfig::default(), cfg, 4, 3)
     }
 
     #[test]
     fn features_have_expected_dim_and_scale() {
-        let Some(mut env) = env(1e-4, 1) else { return };
+        let mut env = env(1e-4, 1);
         let (_st, f) = env.reset();
         assert_eq!(f.len(), 5);
         assert!(f.iter().all(|&x| x.is_finite() && x.abs() < 20.0), "{f:?}");
@@ -309,7 +305,7 @@ mod tests {
     fn infeasible_cut_gets_penalty() {
         // ε high enough that v=1 violates privacy on mnist:
         // φ(1)/q ≈ 4.8e-4 → margin ≈ 4.8e-4 < 1e-3.
-        let Some(mut env) = env(1e-3, 1) else { return };
+        let mut env = env(1e-3, 1);
         let (st, _) = env.reset();
         let out = env.step(&st, 1);
         assert!(!out.feasible);
@@ -321,7 +317,7 @@ mod tests {
 
     #[test]
     fn cost_components_monotone_gamma() {
-        let Some(mut env) = env(0.0, 1) else { return };
+        let mut env = env(0.0, 1);
         let (st, _) = env.reset();
         let g: Vec<f64> = (1..=4).map(|v| env.cost_components(&st, v).0).collect();
         assert!(g.windows(2).all(|w| w[0] <= w[1]), "{g:?}");
@@ -329,7 +325,7 @@ mod tests {
 
     #[test]
     fn training_improves_rewards_and_avoids_penalties() {
-        let Some(mut env) = env(1e-3, 60) else { return };
+        let mut env = env(1e-3, 60);
         let trained = train(&mut env, 5);
         assert_eq!(trained.episode_rewards.len(), 60);
         let early: f64 = trained.episode_rewards[..10].iter().sum::<f64>() / 10.0;
@@ -347,7 +343,7 @@ mod tests {
 
     #[test]
     fn policies_report_names_and_respect_feasibility() {
-        let Some(env) = env(1e-3, 1) else { return };
+        let env = env(1e-3, 1);
         let mut fixed = FixedCut(3);
         assert_eq!(fixed.select(0, &[]), 3);
         assert_eq!(fixed.name(), "fixed-v3");

@@ -77,18 +77,14 @@ mod tests {
     use super::*;
     use crate::model::Manifest;
 
-    fn setup() -> Option<(ShapeSpec, ComputeConfig)> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("manifest.json").exists() {
-            return None;
-        }
-        let m = Manifest::load(&dir).unwrap();
-        Some((m.for_dataset("mnist").unwrap().clone(), ComputeConfig::default()))
+    fn setup() -> (ShapeSpec, ComputeConfig) {
+        let m = Manifest::builtin();
+        (m.for_dataset("mnist").unwrap().clone(), ComputeConfig::default())
     }
 
     #[test]
     fn sfl_ga_strictly_cheaper_than_psl_and_sfl() {
-        let Some((spec, cfg)) = setup() else { return };
+        let (spec, cfg) = setup();
         for v in 1..=4 {
             let cut = spec.cut(v);
             for n in [2, 10, 50] {
@@ -107,7 +103,7 @@ mod tests {
     #[test]
     fn gradient_aggregation_saving_formula() {
         // PSL − SFL-GA downlink = (N−1)·τ·smashed bits exactly.
-        let Some((spec, cfg)) = setup() else { return };
+        let (spec, cfg) = setup();
         let cut = spec.cut(2);
         let n = 10;
         let tau = 3;
@@ -122,7 +118,7 @@ mod tests {
 
     #[test]
     fn fl_scales_with_model_not_batch() {
-        let Some((spec, cfg)) = setup() else { return };
+        let (spec, cfg) = setup();
         let cut = spec.cut(1);
         let fl1 = round_comm(SchemeKind::Fl, &spec, cut, &cfg, 10, 1);
         let fl5 = round_comm(SchemeKind::Fl, &spec, cut, &cfg, 10, 5);
@@ -134,7 +130,7 @@ mod tests {
 
     #[test]
     fn sfl_carries_client_model_aggregation_traffic() {
-        let Some((spec, cfg)) = setup() else { return };
+        let (spec, cfg) = setup();
         let cut = spec.cut(3); // big client model
         let sfl = round_comm(SchemeKind::Sfl, &spec, cut, &cfg, 4, 1);
         let psl = round_comm(SchemeKind::Psl, &spec, cut, &cfg, 4, 1);

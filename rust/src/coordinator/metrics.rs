@@ -4,8 +4,8 @@ use std::path::Path;
 
 use crate::util::csvio::CsvWriter;
 
-use super::trainer::RoundStats;
 use super::SchemeKind;
+use super::trainer::RoundStats;
 
 /// Accumulated series for one training run.
 #[derive(Clone, Debug, Default)]

@@ -14,7 +14,7 @@
 use crate::allocator::Allocation;
 use crate::latency::{self, ComputeConfig};
 use crate::model::{CutSpec, ShapeSpec};
-use crate::wireless::{rate, ChannelState, NetConfig};
+use crate::wireless::{ChannelState, NetConfig, rate};
 
 use super::SchemeKind;
 
@@ -44,6 +44,7 @@ impl RoundLatency {
 ///
 /// Split schemes pay τ× the smashed-data exchange; model-aggregation
 /// traffic (SFL's w^c, FL's w) is once per round.
+#[allow(clippy::too_many_arguments)]
 pub fn round_latency(
     scheme: SchemeKind,
     spec: &ShapeSpec,
@@ -76,6 +77,7 @@ pub fn allocate(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn split_latency(
     scheme: SchemeKind,
     spec: &ShapeSpec,
@@ -185,45 +187,44 @@ mod tests {
     use crate::model::Manifest;
     use crate::wireless::Channel;
 
-    fn setup() -> Option<(ShapeSpec, NetConfig, ComputeConfig, ChannelState)> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("manifest.json").exists() {
-            return None;
-        }
-        let m = Manifest::load(&dir).unwrap();
+    type Ctx = (ShapeSpec, NetConfig, ComputeConfig, ChannelState);
+
+    fn setup() -> Ctx {
+        let m = Manifest::builtin();
         let spec = m.for_dataset("mnist").unwrap().clone();
         let net = NetConfig::default();
         let mut ch = Channel::new(net.clone(), 10, 11);
         let state = ch.draw_round();
-        Some((spec, net, ComputeConfig::default(), state))
+        (spec, net, ComputeConfig::default(), state)
+    }
+
+    fn lat(ctx: &Ctx, sk: SchemeKind, v: usize, policy: AllocPolicy, tau: usize) -> RoundLatency {
+        round_latency(sk, &ctx.0, ctx.0.cut(v), &ctx.1, &ctx.2, &ctx.3, policy, tau)
     }
 
     #[test]
     fn broadcast_beats_unicast_downlink() {
-        let Some((spec, net, comp, st)) = setup() else { return };
-        let cut = spec.cut(2);
-        let ga = round_latency(SchemeKind::SflGa, &spec, cut, &net, &comp, &st, AllocPolicy::Equal, 1);
-        let psl = round_latency(SchemeKind::Psl, &spec, cut, &net, &comp, &st, AllocPolicy::Equal, 1);
+        let ctx = setup();
+        let ga = lat(&ctx, SchemeKind::SflGa, 2, AllocPolicy::Equal, 1);
+        let psl = lat(&ctx, SchemeKind::Psl, 2, AllocPolicy::Equal, 1);
         assert!(ga.downlink_leg < psl.downlink_leg, "{} vs {}", ga.downlink_leg, psl.downlink_leg);
         assert_eq!(ga.uplink_leg, psl.uplink_leg);
     }
 
     #[test]
     fn sfl_pays_model_aggregation_latency() {
-        let Some((spec, net, comp, st)) = setup() else { return };
-        let cut = spec.cut(2);
-        let sfl = round_latency(SchemeKind::Sfl, &spec, cut, &net, &comp, &st, AllocPolicy::Equal, 1);
-        let psl = round_latency(SchemeKind::Psl, &spec, cut, &net, &comp, &st, AllocPolicy::Equal, 1);
+        let ctx = setup();
+        let sfl = lat(&ctx, SchemeKind::Sfl, 2, AllocPolicy::Equal, 1);
+        let psl = lat(&ctx, SchemeKind::Psl, 2, AllocPolicy::Equal, 1);
         assert!(sfl.total() > psl.total());
     }
 
     #[test]
     fn optimal_allocation_no_worse_than_equal() {
-        let Some((spec, net, comp, st)) = setup() else { return };
+        let ctx = setup();
         for v in 1..=4 {
-            let cut = spec.cut(v);
-            let opt = round_latency(SchemeKind::SflGa, &spec, cut, &net, &comp, &st, AllocPolicy::Optimal, 1);
-            let eq = round_latency(SchemeKind::SflGa, &spec, cut, &net, &comp, &st, AllocPolicy::Equal, 1);
+            let opt = lat(&ctx, SchemeKind::SflGa, v, AllocPolicy::Optimal, 1);
+            let eq = lat(&ctx, SchemeKind::SflGa, v, AllocPolicy::Equal, 1);
             assert!(
                 opt.uplink_leg <= eq.uplink_leg * (1.0 + 1e-6),
                 "v={v}: {} > {}",
@@ -237,19 +238,17 @@ mod tests {
     fn fl_slowest_on_weak_clients() {
         // With 0.1 GHz clients and a 1.7M-param model, FL's local compute
         // dominates every split scheme (the paper's Fig. 5 ordering).
-        let Some((spec, net, comp, st)) = setup() else { return };
-        let cut = spec.cut(2);
-        let fl = round_latency(SchemeKind::Fl, &spec, cut, &net, &comp, &st, AllocPolicy::Equal, 1);
-        let ga = round_latency(SchemeKind::SflGa, &spec, cut, &net, &comp, &st, AllocPolicy::Optimal, 1);
+        let ctx = setup();
+        let fl = lat(&ctx, SchemeKind::Fl, 2, AllocPolicy::Equal, 1);
+        let ga = lat(&ctx, SchemeKind::SflGa, 2, AllocPolicy::Optimal, 1);
         assert!(fl.total() > ga.total(), "fl {} vs ga {}", fl.total(), ga.total());
     }
 
     #[test]
     fn tau_scales_exchange_but_not_aggregation() {
-        let Some((spec, net, comp, st)) = setup() else { return };
-        let cut = spec.cut(1);
-        let l1 = round_latency(SchemeKind::Sfl, &spec, cut, &net, &comp, &st, AllocPolicy::Equal, 1);
-        let l3 = round_latency(SchemeKind::Sfl, &spec, cut, &net, &comp, &st, AllocPolicy::Equal, 3);
+        let ctx = setup();
+        let l1 = lat(&ctx, SchemeKind::Sfl, 1, AllocPolicy::Equal, 1);
+        let l3 = lat(&ctx, SchemeKind::Sfl, 1, AllocPolicy::Equal, 3);
         // τ=3 costs less than 3× τ=1 because the model-aggregation part
         // is per-round.
         assert!(l3.total() > 2.0 * l1.total() * 0.9);

@@ -1,6 +1,8 @@
 //! The SFL-GA training coordinator: runs communication rounds of the
-//! paper's framework (§II-A steps 1–5) and its three baselines over the
-//! PJRT runtime, with full communication/latency accounting.
+//! paper's framework (§II-A steps 1–5) and its three baselines over a
+//! pluggable execution backend ([`ModelRuntime`]), with full
+//! communication/latency accounting.  [`Trainer::native`] wires the
+//! pure-Rust backend; the PJRT/AOT path sits behind the `pjrt` feature.
 //!
 //! Scheme semantics (see DESIGN.md for the discussion):
 //! * **SflGa** — clients upload smashed data; the server updates per-client
@@ -23,10 +25,8 @@
 //! Evaluation always scores the *global* model: ρ-weighted client-side
 //! average joined with the server-side model (for FL, the global model).
 
-use std::path::Path;
-
 use crate::data::init::{init_params, join_params, split_params};
-use crate::data::{generate, partition, Batcher, Dataset};
+use crate::data::{Batcher, Dataset, generate, partition};
 use crate::latency::ComputeConfig;
 use crate::model::Manifest;
 use crate::runtime::{ModelRuntime, Tensor};
@@ -34,8 +34,8 @@ use crate::tensor::{self, Params};
 use crate::wireless::{Channel, ChannelState, NetConfig};
 
 use super::comm::{round_comm, RoundComm};
-use super::timing::{round_latency, AllocPolicy, RoundLatency};
 use super::SchemeKind;
+use super::timing::{AllocPolicy, round_latency, RoundLatency};
 
 /// Training configuration (defaults = the paper's §V-A setup).
 #[derive(Clone, Debug)]
@@ -117,9 +117,26 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    pub fn new(artifact_dir: &Path, manifest: &Manifest, cfg: TrainConfig) -> anyhow::Result<Trainer> {
-        anyhow::ensure!(cfg.num_clients > 0 && cfg.rounds > 0 && cfg.tau > 0);
+    /// Trainer over the native pure-Rust backend — no artifacts needed.
+    pub fn native(manifest: &Manifest, cfg: TrainConfig) -> anyhow::Result<Trainer> {
+        let rt = ModelRuntime::native(manifest, &cfg.dataset)?;
+        Trainer::new(rt, cfg)
+    }
+
+    /// Trainer over the PJRT backend, compiled from the AOT artifacts.
+    #[cfg(feature = "pjrt")]
+    pub fn from_artifacts(
+        artifact_dir: &std::path::Path,
+        manifest: &Manifest,
+        cfg: TrainConfig,
+    ) -> anyhow::Result<Trainer> {
         let rt = ModelRuntime::load(artifact_dir, manifest, &cfg.dataset)?;
+        Trainer::new(rt, cfg)
+    }
+
+    /// Trainer over an already-constructed runtime (any backend).
+    pub fn new(rt: ModelRuntime, cfg: TrainConfig) -> anyhow::Result<Trainer> {
+        anyhow::ensure!(cfg.num_clients > 0 && cfg.rounds > 0 && cfg.tau > 0);
         let spec = rt.spec().clone();
         anyhow::ensure!(
             cfg.test_samples % spec.eval_batch == 0,
@@ -165,6 +182,11 @@ impl Trainer {
         self.rt.spec()
     }
 
+    /// Name of the execution backend in use ("native", "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.rt.backend_name()
+    }
+
     pub fn rho(&self) -> &[f64] {
         &self.rho
     }
@@ -201,11 +223,23 @@ impl Trainer {
         };
         let spec = self.rt.spec().clone();
         let cut_spec = spec.cut(cut);
-        let comm = round_comm(self.cfg.scheme, &spec, cut_spec, &self.cfg.comp,
-                              self.cfg.num_clients, self.cfg.tau);
+        let comm = round_comm(
+            self.cfg.scheme,
+            &spec,
+            cut_spec,
+            &self.cfg.comp,
+            self.cfg.num_clients,
+            self.cfg.tau,
+        );
         let latency = round_latency(
-            self.cfg.scheme, &spec, cut_spec, &self.cfg.net, &self.cfg.comp,
-            state, self.cfg.alloc, self.cfg.tau,
+            self.cfg.scheme,
+            &spec,
+            cut_spec,
+            &self.cfg.net,
+            &self.cfg.comp,
+            state,
+            self.cfg.alloc,
+            self.cfg.tau,
         );
         self.round += 1;
         let test = if self.round % self.cfg.eval_every == 0 || self.round == self.cfg.rounds {
@@ -394,7 +428,7 @@ impl Trainer {
         let parts: Vec<Params> = self.wc.iter().map(|w| w[..nc].to_vec()).collect();
         let refs: Vec<&Params> = parts.iter().collect();
         let wc_avg = tensor::weighted_sum(&refs, &self.rho);
-        join_params(&wc_avg, &self.ws[nc..].to_vec())
+        join_params(&wc_avg, &self.ws[nc..])
     }
 
     /// Test-set (loss, accuracy) of the global model.

@@ -26,14 +26,14 @@ pub fn init_params(spec: &ShapeSpec, seed: u64) -> Params {
 }
 
 /// Split a full parameter set at cut v: (client-side, server-side).
-pub fn split_params(spec: &ShapeSpec, cut: usize, params: &Params) -> (Params, Params) {
+pub fn split_params(spec: &ShapeSpec, cut: usize, params: &[Vec<f32>]) -> (Params, Params) {
     let nc = spec.cut(cut).client_params;
     (params[..nc].to_vec(), params[nc..].to_vec())
 }
 
 /// Reassemble a full parameter set from the two halves.
-pub fn join_params(wc: &Params, ws: &Params) -> Params {
-    let mut out = wc.clone();
+pub fn join_params(wc: &[Vec<f32>], ws: &[Vec<f32>]) -> Params {
+    let mut out = wc.to_vec();
     out.extend_from_slice(ws);
     out
 }
@@ -43,17 +43,13 @@ mod tests {
     use super::*;
     use crate::model::Manifest;
 
-    fn spec() -> Option<ShapeSpec> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("manifest.json").exists() {
-            return None;
-        }
-        Some(Manifest::load(&dir).unwrap().for_dataset("mnist").unwrap().clone())
+    fn spec() -> ShapeSpec {
+        Manifest::builtin().for_dataset("mnist").unwrap().clone()
     }
 
     #[test]
     fn init_shapes_match_manifest() {
-        let Some(spec) = spec() else { return };
+        let spec = spec();
         let p = init_params(&spec, 0);
         assert_eq!(p.len(), spec.params.len());
         for (buf, ps) in p.iter().zip(&spec.params) {
@@ -63,7 +59,7 @@ mod tests {
 
     #[test]
     fn biases_zero_weights_scaled() {
-        let Some(spec) = spec() else { return };
+        let spec = spec();
         let p = init_params(&spec, 1);
         for (buf, ps) in p.iter().zip(&spec.params) {
             if ps.shape.len() == 1 {
@@ -86,7 +82,7 @@ mod tests {
 
     #[test]
     fn split_join_roundtrip() {
-        let Some(spec) = spec() else { return };
+        let spec = spec();
         let p = init_params(&spec, 2);
         for v in 1..=4 {
             let (wc, ws) = split_params(&spec, v, &p);
@@ -97,7 +93,7 @@ mod tests {
 
     #[test]
     fn different_seeds_differ() {
-        let Some(spec) = spec() else { return };
+        let spec = spec();
         let a = init_params(&spec, 3);
         let b = init_params(&spec, 4);
         assert_ne!(a[0], b[0]);

@@ -69,12 +69,18 @@ pub struct SynthConfig {
 
 impl SynthConfig {
     pub fn for_dataset(name: &str) -> SynthConfig {
+        let cfg = |noise, shift_max, template_smoothing, seed| SynthConfig {
+            noise,
+            shift_max,
+            template_smoothing,
+            seed,
+        };
         match name {
             // fmnist: same shape as mnist, harder (more noise, bigger shifts).
-            "fmnist" => SynthConfig { noise: 0.45, shift_max: 3, template_smoothing: 2, seed: 0xF0 },
-            "cifar10" => SynthConfig { noise: 0.55, shift_max: 3, template_smoothing: 2, seed: 0xC1 },
+            "fmnist" => cfg(0.45, 3, 2, 0xF0),
+            "cifar10" => cfg(0.55, 3, 2, 0xC1),
             // mnist (default): mild noise, small shifts.
-            _ => SynthConfig { noise: 0.30, shift_max: 2, template_smoothing: 3, seed: 0x30 },
+            _ => cfg(0.30, 2, 3, 0x30),
         }
     }
 }
@@ -247,17 +253,13 @@ mod tests {
     use super::*;
     use crate::model::Manifest;
 
-    fn mnist_spec() -> Option<ShapeSpec> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("manifest.json").exists() {
-            return None;
-        }
-        Some(Manifest::load(&dir).unwrap().for_dataset("mnist").unwrap().clone())
+    fn mnist_spec() -> ShapeSpec {
+        Manifest::builtin().for_dataset("mnist").unwrap().clone()
     }
 
     #[test]
     fn generation_is_deterministic() {
-        let Some(spec) = mnist_spec() else { return };
+        let spec = mnist_spec();
         let a = generate(&spec, "mnist", 64, 1);
         let b = generate(&spec, "mnist", 64, 1);
         assert_eq!(a.x, b.x);
@@ -268,7 +270,7 @@ mod tests {
 
     #[test]
     fn all_classes_present_and_bounded() {
-        let Some(spec) = mnist_spec() else { return };
+        let spec = mnist_spec();
         let ds = generate(&spec, "mnist", 500, 3);
         let mut seen = vec![false; ds.classes];
         for &l in &ds.labels {
@@ -282,7 +284,7 @@ mod tests {
     fn classes_are_separable_by_template_correlation() {
         // Nearest-template classification on clean correlation should beat
         // chance by a wide margin — the task is learnable.
-        let Some(spec) = mnist_spec() else { return };
+        let spec = mnist_spec();
         let ds = generate(&spec, "mnist", 400, 7);
         // Recover templates by averaging samples per class.
         let e = ds.input_elems();
@@ -318,7 +320,7 @@ mod tests {
 
     #[test]
     fn iid_partition_is_balanced_and_complete() {
-        let Some(spec) = mnist_spec() else { return };
+        let spec = mnist_spec();
         let ds = generate(&spec, "mnist", 1000, 5);
         let shards = partition(&ds, 10, None, 1);
         assert_eq!(shards.iter().map(Vec::len).sum::<usize>(), 1000);
@@ -330,7 +332,7 @@ mod tests {
 
     #[test]
     fn dirichlet_partition_skews_labels() {
-        let Some(spec) = mnist_spec() else { return };
+        let spec = mnist_spec();
         let ds = generate(&spec, "mnist", 2000, 6);
         let shards = partition(&ds, 10, Some(0.2), 2);
         assert_eq!(shards.iter().map(Vec::len).sum::<usize>(), 2000);
@@ -364,7 +366,7 @@ mod tests {
 
     #[test]
     fn batch_tensor_shapes_and_onehot() {
-        let Some(spec) = mnist_spec() else { return };
+        let spec = mnist_spec();
         let ds = generate(&spec, "mnist", 50, 8);
         let (x, y) = ds.batch(&[0, 1, 2]);
         assert_eq!(x.shape, vec![3, 28, 28, 1]);

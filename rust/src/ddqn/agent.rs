@@ -243,19 +243,28 @@ mod tests {
             let a0 = agent.act(&s0);
             if a0 == 0 {
                 agent.remember(Transition {
-                    state: s0.to_vec(), action: 0, reward: 0.0,
-                    next_state: s0.to_vec(), done: true,
+                    state: s0.to_vec(),
+                    action: 0,
+                    reward: 0.0,
+                    next_state: s0.to_vec(),
+                    done: true,
                 });
             } else {
                 agent.remember(Transition {
-                    state: s0.to_vec(), action: 1, reward: 0.0,
-                    next_state: s1.to_vec(), done: false,
+                    state: s0.to_vec(),
+                    action: 1,
+                    reward: 0.0,
+                    next_state: s1.to_vec(),
+                    done: false,
                 });
                 let a1 = agent.act(&s1);
                 let r = if a1 == 1 { 1.0 } else { 0.0 };
                 agent.remember(Transition {
-                    state: s1.to_vec(), action: a1, reward: r,
-                    next_state: s1.to_vec(), done: true,
+                    state: s1.to_vec(),
+                    action: a1,
+                    reward: r,
+                    next_state: s1.to_vec(),
+                    done: true,
                 });
             }
             agent.train_step();

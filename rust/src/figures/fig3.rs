@@ -30,7 +30,7 @@ pub fn run(ctx: &FigCtx) -> anyhow::Result<()> {
                 seed: ctx.seed,
                 ..Default::default()
             };
-            let mut trainer = Trainer::new(&ctx.artifact_dir, &ctx.manifest, cfg)?;
+            let mut trainer = Trainer::native(&ctx.manifest, cfg)?;
             let mut metrics = RunMetrics::new(scheme, ds);
             for stats in trainer.run(cut)? {
                 metrics.push(&stats);

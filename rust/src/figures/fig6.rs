@@ -69,7 +69,7 @@ pub fn run(ctx: &FigCtx) -> anyhow::Result<()> {
                 seed: ctx.seed,
                 ..Default::default()
             };
-            let mut trainer = Trainer::new(&ctx.artifact_dir, &ctx.manifest, cfg)?;
+            let mut trainer = Trainer::native(&ctx.manifest, cfg)?;
             let mut metrics = RunMetrics::new(SchemeKind::SflGa, ds);
             // Build a throwaway env (same cfg) for feature extraction so
             // the trained policy sees Algorithm 1's state layout.

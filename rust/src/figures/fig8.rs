@@ -3,8 +3,8 @@
 //! bandwidth → faster rounds for everyone; SFL-GA lowest among the split
 //! schemes (broadcast beats unicast, no model-aggregation traffic).
 
-use crate::coordinator::timing::{round_latency, AllocPolicy};
 use crate::coordinator::SchemeKind;
+use crate::coordinator::timing::{AllocPolicy, round_latency};
 use crate::latency::ComputeConfig;
 use crate::util::csvio::CsvWriter;
 use crate::wireless::{Channel, NetConfig};

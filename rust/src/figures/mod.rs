@@ -12,9 +12,9 @@ use std::path::{Path, PathBuf};
 
 use crate::model::Manifest;
 
-/// Shared harness context.
+/// Shared harness context.  Figures run on the built-in manifest and the
+/// native backend, so regenerating them needs no artifacts.
 pub struct FigCtx {
-    pub artifact_dir: PathBuf,
     pub results_dir: PathBuf,
     pub manifest: Manifest,
     /// Fast mode: fewer rounds/episodes for smoke runs (`--fast`).
@@ -23,11 +23,11 @@ pub struct FigCtx {
 }
 
 impl FigCtx {
-    pub fn new(artifact_dir: &Path, results_dir: &Path, fast: bool, seed: u64) -> anyhow::Result<FigCtx> {
+    pub fn new(results_dir: &Path, fast: bool, seed: u64) -> anyhow::Result<FigCtx> {
+        std::fs::create_dir_all(results_dir)?;
         Ok(FigCtx {
-            artifact_dir: artifact_dir.to_path_buf(),
             results_dir: results_dir.to_path_buf(),
-            manifest: Manifest::load(artifact_dir)?,
+            manifest: Manifest::builtin(),
             fast,
             seed,
         })

@@ -123,8 +123,8 @@ pub fn round_latency(legs: &[ClientRoundLatency]) -> f64 {
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use std::collections::BTreeMap;
+    use super::*;
 
     fn toy_cut() -> CutSpec {
         CutSpec {
@@ -164,10 +164,14 @@ mod tests {
 
     #[test]
     fn round_latency_is_max_plus_max() {
-        let legs = vec![
-            ClientRoundLatency { uplink: 1.0, client_fwd: 1.0, server: 1.0, downlink: 5.0, client_bwd: 0.0 },
-            ClientRoundLatency { uplink: 4.0, client_fwd: 0.0, server: 0.0, downlink: 1.0, client_bwd: 1.0 },
-        ];
+        let leg = |uplink, client_fwd, server, downlink, client_bwd| ClientRoundLatency {
+            uplink,
+            client_fwd,
+            server,
+            downlink,
+            client_bwd,
+        };
+        let legs = vec![leg(1.0, 1.0, 1.0, 5.0, 0.0), leg(4.0, 0.0, 0.0, 1.0, 1.0)];
         // up legs: 3.0, 4.0 → 4.0; down legs: 5.0, 2.0 → 5.0.
         assert_eq!(round_latency(&legs), 9.0);
     }

@@ -4,8 +4,9 @@
 //! Learning: Gradient Aggregation and Resource Management" (cs.DC 2025).
 //!
 //! Layer map (see DESIGN.md):
-//! - [`runtime`] loads the JAX/Pallas AOT artifacts (HLO text) via PJRT and
-//!   executes them from a dedicated engine thread.
+//! - [`runtime`] executes the split model behind the [`runtime::Backend`]
+//!   trait: the pure-Rust native backend by default, or (feature `pjrt`)
+//!   the JAX/Pallas AOT artifacts (HLO text) via a PJRT engine thread.
 //! - [`coordinator`] implements the paper's training frameworks: SFL-GA and
 //!   the SFL / PSL / FL baselines, with full communication accounting.
 //! - [`wireless`], [`latency`], [`privacy`] are the paper's §II system

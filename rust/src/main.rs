@@ -5,8 +5,11 @@
 //!   optimize  run Algorithm 1 (joint CCC) and report the reward curve
 //!   figures   regenerate the paper's evaluation figures (3–8)
 //!   info      print manifest / model-splitting summary
+//!
+//! Everything runs on the built-in manifest + native pure-Rust backend;
+//! no artifacts, Python or PJRT required (see DESIGN.md §Backends).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use sfl_ga::ccc::{self, CccConfig};
 use sfl_ga::coordinator::{AllocPolicy, RunMetrics, SchemeKind, TrainConfig, Trainer};
@@ -26,26 +29,20 @@ fn main() {
 fn run() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     logging::set_level(logging::level_from_str(&args.str_or("log", "info")));
-    let artifact_dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let results_dir = PathBuf::from(args.str_or("results", "results"));
     let seed = args.parse_or("seed", 17u64)?;
 
     match args.subcommand.as_deref() {
-        Some("train") => cmd_train(&args, &artifact_dir, &results_dir, seed),
-        Some("optimize") => cmd_optimize(&args, &artifact_dir, seed),
-        Some("figures") => cmd_figures(&args, &artifact_dir, &results_dir, seed),
-        Some("info") | None => cmd_info(&artifact_dir),
+        Some("train") => cmd_train(&args, &results_dir, seed),
+        Some("optimize") => cmd_optimize(&args, seed),
+        Some("figures") => cmd_figures(&args, &results_dir, seed),
+        Some("info") | None => cmd_info(),
         Some(other) => anyhow::bail!("unknown subcommand '{other}' (train|optimize|figures|info)"),
     }
 }
 
-fn cmd_train(
-    args: &Args,
-    artifact_dir: &PathBuf,
-    results_dir: &PathBuf,
-    seed: u64,
-) -> anyhow::Result<()> {
-    let manifest = Manifest::load(artifact_dir)?;
+fn cmd_train(args: &Args, results_dir: &Path, seed: u64) -> anyhow::Result<()> {
+    let manifest = Manifest::builtin();
     let dataset = args.str_or("dataset", "mnist");
     let scheme = SchemeKind::parse(&args.str_or("scheme", "sfl-ga"))?;
     let cut = args.parse_or("cut", 2usize)?;
@@ -72,15 +69,20 @@ fn cmd_train(
         ..Default::default()
     };
     info!("training {} on {dataset}, cut v={cut}, {} rounds", scheme.name(), cfg.rounds);
-    let mut trainer = Trainer::new(artifact_dir, &manifest, cfg)?;
+    let mut trainer = Trainer::native(&manifest, cfg)?;
+    info!("backend: {}", trainer.backend_name());
     let mut metrics = RunMetrics::new(scheme, &dataset);
     for stats in trainer.run(cut)? {
         metrics.push(&stats);
         if let Some((tl, ta)) = stats.test {
             info!(
                 "round {:>4}  train_loss {:.4}  test_loss {:.4}  test_acc {:.3}  comm {:.1} MB  latency {:.1}s",
-                stats.round, stats.train_loss, tl, ta,
-                metrics.total_comm_mb(), metrics.total_latency_s()
+                stats.round,
+                stats.train_loss,
+                tl,
+                ta,
+                metrics.total_comm_mb(),
+                metrics.total_latency_s(),
             );
         }
     }
@@ -90,8 +92,8 @@ fn cmd_train(
     Ok(())
 }
 
-fn cmd_optimize(args: &Args, artifact_dir: &PathBuf, seed: u64) -> anyhow::Result<()> {
-    let manifest = Manifest::load(artifact_dir)?;
+fn cmd_optimize(args: &Args, seed: u64) -> anyhow::Result<()> {
+    let manifest = Manifest::builtin();
     let dataset = args.str_or("dataset", "mnist");
     let spec = manifest.for_dataset(&dataset)?.clone();
     let cfg = CccConfig {
@@ -104,7 +106,9 @@ fn cmd_optimize(args: &Args, artifact_dir: &PathBuf, seed: u64) -> anyhow::Resul
     let clients = args.parse_or("clients", 10usize)?;
     info!(
         "Algorithm 1 on {dataset}: eps={}, {} episodes x {} steps, {clients} clients",
-        cfg.epsilon, cfg.episodes, cfg.steps_per_episode
+        cfg.epsilon,
+        cfg.episodes,
+        cfg.steps_per_episode,
     );
     let mut env = ccc::Env::new(spec, Default::default(), Default::default(), cfg, clients, seed);
     let trained = ccc::train(&mut env, seed ^ 0xA1);
@@ -117,13 +121,8 @@ fn cmd_optimize(args: &Args, artifact_dir: &PathBuf, seed: u64) -> anyhow::Resul
     Ok(())
 }
 
-fn cmd_figures(
-    args: &Args,
-    artifact_dir: &PathBuf,
-    results_dir: &PathBuf,
-    seed: u64,
-) -> anyhow::Result<()> {
-    let ctx = FigCtx::new(artifact_dir, results_dir, args.flag("fast"), seed)?;
+fn cmd_figures(args: &Args, results_dir: &Path, seed: u64) -> anyhow::Result<()> {
+    let ctx = FigCtx::new(results_dir, args.flag("fast"), seed)?;
     if args.flag("all") {
         figures::run_all(&ctx)?;
     } else {
@@ -135,14 +134,16 @@ fn cmd_figures(
     Ok(())
 }
 
-fn cmd_info(artifact_dir: &PathBuf) -> anyhow::Result<()> {
-    let manifest = Manifest::load(artifact_dir)?;
+fn cmd_info() -> anyhow::Result<()> {
+    let manifest = Manifest::builtin();
     println!("SFL-GA reproduction — manifest summary\n");
     for (ds, key) in &manifest.datasets {
         let spec = &manifest.shapes[key];
         println!(
             "dataset {ds:<8} shape {key:<8} params {:>9}  train_batch {}  eval_batch {}",
-            spec.total_params, spec.train_batch, spec.eval_batch
+            spec.total_params,
+            spec.train_batch,
+            spec.eval_batch,
         );
         for cut in &spec.cuts {
             println!(

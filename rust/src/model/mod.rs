@@ -1,10 +1,15 @@
 //! Rust mirror of the L2 manifest: model architecture metadata.
 //!
-//! `artifacts/manifest.json` (written by `python/compile/aot.py`) is the
-//! single source of truth for parameter shapes, cut-point sizes φ(v),
-//! smashed-data shapes and per-side FLOP counts.  This module parses it
-//! into typed specs used by the runtime (buffer shapes), the latency model
-//! (γ workloads of eqs 14–16) and the privacy model (φ(v)/q of eq 17).
+//! Two sources produce the same typed specs:
+//!
+//! * [`Manifest::builtin`] — the paper's split-CNN architecture
+//!   (`python/compile/layers.py`) expressed directly in Rust, so a clean
+//!   checkout needs no artifacts to run the native backend.
+//! * [`Manifest::load`] — parses `artifacts/manifest.json` (written by
+//!   `python/compile/aot.py`) for the PJRT/AOT path.
+//!
+//! The specs feed the runtime (buffer shapes), the latency model (γ
+//! workloads of eqs 14–16) and the privacy model (φ(v)/q of eq 17).
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -98,11 +103,120 @@ pub struct Manifest {
     pub datasets: BTreeMap<String, String>,
 }
 
+/// Architecture constants of the paper's split CNN (§V-A, [33] plus one
+/// fc128 block so every cut moves parameters) — mirrors
+/// `python/compile/layers.py::ModelSpec`.
+mod arch {
+    pub const KERNEL: usize = 5;
+    pub const CONV1: usize = 32;
+    pub const CONV2: usize = 64;
+    pub const FC1: usize = 512;
+    pub const FC2: usize = 128;
+    pub const CLASSES: usize = 10;
+    pub const TRAIN_BATCH: usize = 32;
+    pub const EVAL_BATCH: usize = 256;
+}
+
+/// Build one shape key's spec from the architecture constants.
+fn builtin_shape(key: &str, h: usize, w: usize, c: usize, tb: usize, eb: usize) -> ShapeSpec {
+    use arch::{CLASSES, CONV1, CONV2, FC1, FC2, KERNEL};
+    let flat = (h / 4) * (w / 4) * CONV2;
+    let param = |name: &str, shape: Vec<usize>, block: usize| ParamSpec {
+        name: name.to_string(),
+        shape,
+        block,
+    };
+    let params = vec![
+        param("conv1_w", vec![KERNEL, KERNEL, c, CONV1], 1),
+        param("conv1_b", vec![CONV1], 1),
+        param("conv2_w", vec![KERNEL, KERNEL, CONV1, CONV2], 2),
+        param("conv2_b", vec![CONV2], 2),
+        param("fc1_w", vec![flat, FC1], 3),
+        param("fc1_b", vec![FC1], 3),
+        param("fc2_w", vec![FC1, FC2], 4),
+        param("fc2_b", vec![FC2], 4),
+        param("fc3_w", vec![FC2, CLASSES], 5),
+        param("fc3_b", vec![CLASSES], 5),
+    ];
+    // Per-sample forward FLOPs per block (2·MACs); backward ≈ 2x forward.
+    let kk = KERNEL * KERNEL;
+    let fwd: [f64; 5] = [
+        (2 * kk * c * CONV1 * h * w) as f64,
+        (2 * kk * CONV1 * CONV2 * (h / 2) * (w / 2)) as f64,
+        (2 * flat * FC1) as f64,
+        (2 * FC1 * FC2) as f64,
+        (2 * FC2 * CLASSES) as f64,
+    ];
+    let smashed = |cut: usize| -> Vec<usize> {
+        match cut {
+            1 => vec![tb, h / 2, w / 2, CONV1],
+            2 => vec![tb, h / 4, w / 4, CONV2],
+            3 => vec![tb, FC1],
+            _ => vec![tb, FC2],
+        }
+    };
+    let mut cuts = Vec::with_capacity(NUM_CUTS);
+    for v in 1..=NUM_CUTS {
+        let mut artifacts = BTreeMap::new();
+        for role in CUT_ROLES {
+            artifacts.insert(role.to_string(), format!("{key}_v{v}_{role}.hlo.txt"));
+        }
+        cuts.push(CutSpec {
+            cut: v,
+            phi: params.iter().filter(|p| p.block <= v).map(ParamSpec::size).sum(),
+            client_params: params.iter().filter(|p| p.block <= v).count(),
+            smashed_shape: smashed(v),
+            flops_client_fwd: fwd[..v].iter().sum(),
+            flops_client_bwd: 2.0 * fwd[..v].iter().sum::<f64>(),
+            flops_server_fwd: fwd[v..].iter().sum(),
+            flops_server_bwd: 2.0 * fwd[v..].iter().sum::<f64>(),
+            artifacts,
+        });
+    }
+    let mut artifacts = BTreeMap::new();
+    for role in ["full_grad", "eval"] {
+        artifacts.insert(role.to_string(), format!("{key}_{role}.hlo.txt"));
+    }
+    ShapeSpec {
+        key: key.to_string(),
+        input_shape: vec![h, w, c],
+        classes: CLASSES,
+        train_batch: tb,
+        eval_batch: eb,
+        total_params: params.iter().map(ParamSpec::size).sum(),
+        params,
+        cuts,
+        artifacts,
+    }
+}
+
 impl Manifest {
+    /// The paper's architecture as a built-in spec source: no
+    /// `artifacts/manifest.json` (and therefore no Python) required.
+    /// Batch sizes are the paper's §V-A defaults (train 32, eval 256).
+    pub fn builtin() -> Manifest {
+        Self::builtin_with_batches(arch::TRAIN_BATCH, arch::EVAL_BATCH)
+    }
+
+    /// Built-in specs with custom batch sizes (tests use small batches to
+    /// keep native-backend compute cheap).
+    pub fn builtin_with_batches(train_batch: usize, eval_batch: usize) -> Manifest {
+        let mut shapes = BTreeMap::new();
+        for (key, h, w, c) in [("28x28x1", 28, 28, 1), ("32x32x3", 32, 32, 3)] {
+            shapes.insert(key.to_string(), builtin_shape(key, h, w, c, train_batch, eval_batch));
+        }
+        let datasets = [("mnist", "28x28x1"), ("fmnist", "28x28x1"), ("cifar10", "32x32x3")]
+            .into_iter()
+            .map(|(d, k)| (d.to_string(), k.to_string()))
+            .collect();
+        Manifest { train_batch, eval_batch, shapes, datasets }
+    }
+
     pub fn load<P: AsRef<Path>>(dir: P) -> anyhow::Result<Manifest> {
         let path = dir.as_ref().join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display())
+        })?;
         let json = Json::parse(&text)?;
         Self::from_json(&json)
     }
@@ -272,13 +386,10 @@ mod tests {
     }
 
     #[test]
-    fn loads_real_manifest_if_present() {
-        // Integration-style check against the artifacts dir when built.
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("manifest.json").exists() {
-            return; // artifacts not built in this environment
-        }
-        let m = Manifest::load(&dir).unwrap();
+    fn builtin_manifest_is_consistent() {
+        let m = Manifest::builtin();
+        assert_eq!(m.train_batch, 32);
+        assert_eq!(m.eval_batch, 256);
         for ds in ["mnist", "fmnist", "cifar10"] {
             let spec = m.for_dataset(ds).unwrap();
             assert_eq!(spec.cuts.len(), NUM_CUTS);
@@ -286,10 +397,67 @@ mod tests {
             for w in spec.cuts.windows(2) {
                 assert!(w[0].phi <= w[1].phi);
             }
+            // φ cross-check against the declared client parameter prefix.
+            for cut in &spec.cuts {
+                let phi: usize = spec.params[..cut.client_params].iter().map(|p| p.size()).sum();
+                assert_eq!(phi, cut.phi, "{ds} cut {}", cut.cut);
+            }
             // Client+server FLOPs sum to the same total at every cut.
             let t0 = spec.cuts[0].flops_client_fwd + spec.cuts[0].flops_server_fwd;
             for c in &spec.cuts {
                 assert!((c.flops_client_fwd + c.flops_server_fwd - t0).abs() < 1.0);
+            }
+            let total: usize = spec.params.iter().map(|p| p.size()).sum();
+            assert_eq!(total, spec.total_params);
+        }
+        // mnist and fmnist share one shape key; cifar10 differs.
+        assert_eq!(m.datasets["mnist"], m.datasets["fmnist"]);
+        assert_ne!(m.datasets["mnist"], m.datasets["cifar10"]);
+    }
+
+    #[test]
+    fn builtin_mnist_matches_paper_geometry() {
+        let m = Manifest::builtin();
+        let spec = m.for_dataset("mnist").unwrap();
+        // Known sizes of the McMahan CNN + fc128 (layers.py param_specs).
+        assert_eq!(spec.total_params, 1_725_194);
+        assert_eq!(spec.cut(1).phi, 832);
+        assert_eq!(spec.cut(2).phi, 832 + 51_264);
+        assert_eq!(spec.cut(1).smashed_shape, vec![32, 14, 14, 32]);
+        assert_eq!(spec.cut(2).smashed_shape, vec![32, 7, 7, 64]);
+        assert_eq!(spec.cut(3).smashed_shape, vec![32, 512]);
+        assert_eq!(spec.cut(4).smashed_shape, vec![32, 128]);
+        assert_eq!(spec.cut(4).client_params, 8);
+        assert_eq!(spec.input_per_sample(), 784);
+    }
+
+    #[test]
+    fn builtin_with_batches_scales_smashed_shapes() {
+        let m = Manifest::builtin_with_batches(8, 40);
+        let spec = m.for_dataset("cifar10").unwrap();
+        assert_eq!(spec.train_batch, 8);
+        assert_eq!(spec.eval_batch, 40);
+        assert_eq!(spec.cut(2).smashed_shape, vec![8, 8, 8, 64]);
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // Integration-style check against the artifacts dir when built:
+        // the AOT manifest must agree with the built-in spec source.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let b = Manifest::builtin();
+        for ds in ["mnist", "fmnist", "cifar10"] {
+            let spec = m.for_dataset(ds).unwrap();
+            let bspec = b.for_dataset(ds).unwrap();
+            assert_eq!(spec.total_params, bspec.total_params);
+            for (c, bc) in spec.cuts.iter().zip(&bspec.cuts) {
+                assert_eq!(c.phi, bc.phi);
+                assert_eq!(c.client_params, bc.client_params);
+                assert_eq!(c.smashed_shape[1..], bc.smashed_shape[1..]);
             }
         }
     }

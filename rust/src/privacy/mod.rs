@@ -2,7 +2,7 @@
 //! client-side model deepens; the constraint log(1 + φ(v)/q) ≥ ε bounds
 //! the admissible cuts from below.
 
-use crate::model::{ShapeSpec, NUM_CUTS};
+use crate::model::{NUM_CUTS, ShapeSpec};
 
 /// Privacy leakage metric: log(1 + φ(v)/q) (natural log, monotone in φ).
 pub fn leakage_margin(spec: &ShapeSpec, cut: usize) -> f64 {

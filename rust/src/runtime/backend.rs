@@ -1,0 +1,58 @@
+//! The execution-backend contract: every way of running the split model —
+//! the pure-Rust [`super::NativeBackend`], the PJRT engine pool behind the
+//! `pjrt` feature — implements this trait, and everything above the
+//! runtime ([`crate::coordinator`], figures, examples) is written against
+//! it.
+//!
+//! Contract (see DESIGN.md §Backend trait):
+//! * Parameters travel as flat `f32` buffers in manifest order
+//!   ([`crate::tensor::Params`]); activations as [`Tensor`]s.
+//! * `cut` is the paper's v ∈ 1..=NUM_CUTS; the client owns the leading
+//!   `spec.cut(v).client_params` parameter arrays.
+//! * Batch size is taken from the input tensor's leading dimension, so
+//!   train and eval batches need no separate entry points.
+//! * Implementations must be deterministic: identical inputs produce
+//!   identical outputs (the coordinator's seeding guarantees rely on it).
+
+use crate::model::ShapeSpec;
+use crate::tensor::Params;
+
+use super::tensor::Tensor;
+
+/// One executable realization of the split model's five roles.
+pub trait Backend: Send + Sync {
+    /// Short human-readable backend name ("native", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// The model/shape metadata this backend was built for.
+    fn spec(&self) -> &ShapeSpec;
+
+    /// Smashed data S = ℓ(w^c; x) — eq (1).
+    fn client_fwd(&self, cut: usize, wc: &[Vec<f32>], x: &Tensor) -> anyhow::Result<Tensor>;
+
+    /// Server FP+BP: (loss, server grads g^{s,n}, smashed grads s^n) —
+    /// eqs (2)(3)(4).
+    fn server_grad(
+        &self,
+        cut: usize,
+        ws: &[Vec<f32>],
+        smashed: &Tensor,
+        y1h: &Tensor,
+    ) -> anyhow::Result<(f32, Params, Tensor)>;
+
+    /// Client BP with an injected (aggregated) smashed-gradient cotangent
+    /// — eq (6).
+    fn client_grad(
+        &self,
+        cut: usize,
+        wc: &[Vec<f32>],
+        x: &Tensor,
+        g_smashed: &Tensor,
+    ) -> anyhow::Result<Params>;
+
+    /// FL baseline: (loss, full-model gradient).
+    fn full_grad(&self, w: &[Vec<f32>], x: &Tensor, y1h: &Tensor) -> anyhow::Result<(f32, Params)>;
+
+    /// Eval batch: (mean loss, correct count).
+    fn eval(&self, w: &[Vec<f32>], x: &Tensor, y1h: &Tensor) -> anyhow::Result<(f32, f32)>;
+}

@@ -1,19 +1,37 @@
-//! PJRT execution engine: a dedicated thread owns the (non-Send) PJRT
-//! client and every compiled executable; the rest of the coordinator talks
-//! to it through a cloneable [`Handle`] over mpsc channels.
+//! PJRT execution engine (feature `pjrt`): a dedicated thread owns the
+//! (non-Send) PJRT client and every compiled executable; the rest of the
+//! coordinator talks to it through a cloneable [`Handle`] over mpsc
+//! channels.  [`PjrtBackend`] pools several engines and implements the
+//! [`Backend`] trait over them.
 //!
 //! This is the runtime half of the AOT bridge: HLO text artifacts from
 //! `python/compile/aot.py` are parsed with `HloModuleProto::from_text_file`
 //! (text, NOT serialized protos — xla_extension 0.5.1 rejects jax≥0.5's
 //! 64-bit instruction ids) and compiled once at startup; the training hot
 //! path then only moves f32 buffers.
+//!
+//! Building this module requires the `xla` (xla-rs) crate and a local PJRT
+//! toolchain; see DESIGN.md §Backends.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::thread;
 
+use crate::model::{CUT_ROLES, Manifest, NUM_CUTS, ShapeSpec};
+use crate::tensor::Params;
+
+use super::backend::Backend;
 use super::tensor::Tensor;
+
+/// Default engine-pool size: PJRT executables are single-lane per engine
+/// thread, so N independent clients' compute parallelizes across lanes.
+pub fn default_lanes() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(2).clamp(1, 4))
+        .unwrap_or(1)
+}
 
 enum Request {
     Execute {
@@ -81,10 +99,7 @@ impl Engine {
 
     /// Convenience: load a set of manifest artifacts from `dir`.
     /// `entries` = [(logical name, file name)].
-    pub fn load_artifacts(
-        dir: &Path,
-        entries: &[(String, String)],
-    ) -> anyhow::Result<Engine> {
+    pub fn load_artifacts(dir: &Path, entries: &[(String, String)]) -> anyhow::Result<Engine> {
         let files = entries
             .iter()
             .map(|(name, file)| (name.clone(), dir.join(file)))
@@ -150,10 +165,7 @@ fn engine_main(
     }
 }
 
-fn run_one(
-    exe: &xla::PjRtLoadedExecutable,
-    inputs: Vec<Tensor>,
-) -> anyhow::Result<Vec<Tensor>> {
+fn run_one(exe: &xla::PjRtLoadedExecutable, inputs: Vec<Tensor>) -> anyhow::Result<Vec<Tensor>> {
     let literals = inputs
         .iter()
         .map(|t| t.to_literal())
@@ -163,6 +175,147 @@ fn run_one(
     let tuple = result[0][0].to_literal_sync()?;
     let parts = tuple.to_tuple()?;
     parts.iter().map(Tensor::from_literal).collect()
+}
+
+/// PJRT realization of the [`Backend`] trait: all compiled computations
+/// for one dataset shape, with typed wrappers for the five artifact
+/// roles.  Holds a pool of engines (each owning its own PJRT client +
+/// compiled executables); calls are distributed round-robin, so
+/// independent per-client executions run concurrently.
+pub struct PjrtBackend {
+    engines: Vec<Engine>,
+    next: AtomicUsize,
+    spec: ShapeSpec,
+}
+
+impl PjrtBackend {
+    /// Compile every artifact of `dataset`'s shape (12 per-cut + 2
+    /// global) on `lanes` engines (1 = serial).
+    pub fn load(
+        artifact_dir: &Path,
+        manifest: &Manifest,
+        dataset: &str,
+        lanes: usize,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(lanes > 0, "need at least one engine lane");
+        let spec = manifest.for_dataset(dataset)?.clone();
+        let mut entries = Vec::new();
+        for cut in &spec.cuts {
+            for role in CUT_ROLES {
+                entries.push((format!("v{}_{role}", cut.cut), cut.artifacts[role].clone()));
+            }
+        }
+        for (role, file) in &spec.artifacts {
+            entries.push((role.clone(), file.clone()));
+        }
+        let engines = (0..lanes)
+            .map(|_| Engine::load_artifacts(artifact_dir, &entries))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(PjrtBackend { engines, next: AtomicUsize::new(0), spec })
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.engines.len()
+    }
+
+    fn engine(&self) -> &Engine {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.engines.len();
+        &self.engines[i]
+    }
+
+    fn params_to_tensors(&self, params: &[Vec<f32>], offset: usize) -> Vec<Tensor> {
+        params
+            .iter()
+            .enumerate()
+            .map(|(i, buf)| Tensor::new(buf.clone(), self.spec.params[offset + i].shape.clone()))
+            .collect()
+    }
+
+    fn check_cut(&self, cut: usize) -> anyhow::Result<()> {
+        anyhow::ensure!((1..=NUM_CUTS).contains(&cut), "cut {cut} out of range");
+        Ok(())
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn spec(&self) -> &ShapeSpec {
+        &self.spec
+    }
+
+    fn client_fwd(&self, cut: usize, wc: &[Vec<f32>], x: &Tensor) -> anyhow::Result<Tensor> {
+        self.check_cut(cut)?;
+        let mut inputs = self.params_to_tensors(wc, 0);
+        inputs.push(x.clone());
+        let mut out = self.engine().handle().execute(&format!("v{cut}_client_fwd"), inputs)?;
+        anyhow::ensure!(out.len() == 1, "client_fwd returned {} outputs", out.len());
+        Ok(out.pop().unwrap())
+    }
+
+    fn server_grad(
+        &self,
+        cut: usize,
+        ws: &[Vec<f32>],
+        smashed: &Tensor,
+        y1h: &Tensor,
+    ) -> anyhow::Result<(f32, Params, Tensor)> {
+        self.check_cut(cut)?;
+        let nc = self.spec.cut(cut).client_params;
+        let mut inputs = self.params_to_tensors(ws, nc);
+        inputs.push(smashed.clone());
+        inputs.push(y1h.clone());
+        let mut out = self.engine().handle().execute(&format!("v{cut}_server_grad"), inputs)?;
+        let n_server = self.spec.params.len() - nc;
+        anyhow::ensure!(
+            out.len() == 1 + n_server + 1,
+            "server_grad returned {} outputs, expected {}",
+            out.len(),
+            2 + n_server
+        );
+        let g_smashed = out.pop().unwrap();
+        let loss = out[0].item();
+        let g_ws: Params = out.drain(1..).map(|t| t.data).collect();
+        Ok((loss, g_ws, g_smashed))
+    }
+
+    fn client_grad(
+        &self,
+        cut: usize,
+        wc: &[Vec<f32>],
+        x: &Tensor,
+        g_smashed: &Tensor,
+    ) -> anyhow::Result<Params> {
+        self.check_cut(cut)?;
+        let mut inputs = self.params_to_tensors(wc, 0);
+        inputs.push(x.clone());
+        inputs.push(g_smashed.clone());
+        let out = self.engine().handle().execute(&format!("v{cut}_client_grad"), inputs)?;
+        anyhow::ensure!(out.len() == wc.len(), "client_grad output arity mismatch");
+        Ok(out.into_iter().map(|t| t.data).collect())
+    }
+
+    fn full_grad(&self, w: &[Vec<f32>], x: &Tensor, y1h: &Tensor) -> anyhow::Result<(f32, Params)> {
+        let mut inputs = self.params_to_tensors(w, 0);
+        inputs.push(x.clone());
+        inputs.push(y1h.clone());
+        let mut out = self.engine().handle().execute("full_grad", inputs)?;
+        anyhow::ensure!(out.len() == 1 + w.len(), "full_grad output arity mismatch");
+        let loss = out[0].item();
+        let g: Params = out.drain(1..).map(|t| t.data).collect();
+        Ok((loss, g))
+    }
+
+    fn eval(&self, w: &[Vec<f32>], x: &Tensor, y1h: &Tensor) -> anyhow::Result<(f32, f32)> {
+        let mut inputs = self.params_to_tensors(w, 0);
+        inputs.push(x.clone());
+        inputs.push(y1h.clone());
+        let out = self.engine().handle().execute("eval", inputs)?;
+        anyhow::ensure!(out.len() == 2, "eval returned {} outputs", out.len());
+        Ok((out[0].item(), out[1].item()))
+    }
 }
 
 #[cfg(test)]
@@ -180,8 +333,7 @@ mod tests {
         let m = crate::model::Manifest::load(&dir).unwrap();
         let spec = m.for_dataset("mnist").unwrap();
         let file = spec.cut(1).artifacts["client_fwd"].clone();
-        let engine =
-            Engine::load_artifacts(&dir, &[("cf".to_string(), file)]).unwrap();
+        let engine = Engine::load_artifacts(&dir, &[("cf".to_string(), file)]).unwrap();
         let h = engine.handle();
         assert!(h.execute("nope", vec![]).is_err());
         assert_eq!(h.computations(), vec!["cf".to_string()]);
@@ -194,8 +346,7 @@ mod tests {
         let spec = m.for_dataset("mnist").unwrap();
         let cut = spec.cut(1);
         let file = cut.artifacts["client_fwd"].clone();
-        let engine =
-            Engine::load_artifacts(&dir, &[("cf".to_string(), file)]).unwrap();
+        let engine = Engine::load_artifacts(&dir, &[("cf".to_string(), file)]).unwrap();
         let h = engine.handle();
 
         let mut inputs: Vec<Tensor> = spec.params[..cut.client_params]

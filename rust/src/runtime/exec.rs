@@ -1,174 +1,136 @@
-//! Typed execution facade: binds the manifest's artifact roles to the
-//! engine and converts between coordinator state (`tensor::Params`) and
-//! engine tensors.
+//! Typed execution facade: a backend-agnostic [`ModelRuntime`] that the
+//! coordinator, figures and examples talk to.  The actual compute lives
+//! behind the [`Backend`] trait — the pure-Rust [`NativeBackend`] by
+//! default, the PJRT engine pool with `--features pjrt`.
 
-use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
-
-use super::engine::Engine;
-use super::tensor::Tensor;
-use crate::model::{Manifest, ShapeSpec, CUT_ROLES, NUM_CUTS};
+use crate::model::{Manifest, ShapeSpec};
 use crate::tensor::Params;
 
-/// Default engine-pool size: PJRT executables are single-lane per engine
-/// thread, so N independent clients' compute parallelizes across lanes.
-pub fn default_lanes() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get().saturating_sub(2).clamp(1, 4))
-        .unwrap_or(1)
-}
+use super::backend::Backend;
+use super::native::NativeBackend;
+use super::tensor::Tensor;
 
-/// All compiled computations for one dataset shape, with typed wrappers
-/// for the five artifact roles.  Holds a pool of engines (each owning its
-/// own PJRT client + compiled executables); calls are distributed
-/// round-robin, so independent per-client executions run concurrently.
+/// All executable roles for one dataset shape, dispatched to a backend.
 pub struct ModelRuntime {
-    engines: Vec<Engine>,
-    next: AtomicUsize,
-    spec: ShapeSpec,
+    backend: Box<dyn Backend>,
 }
 
 impl ModelRuntime {
-    /// Compile every artifact of `dataset`'s shape (12 per-cut + 2 global)
-    /// on `default_lanes()` engines.
-    pub fn load(artifact_dir: &Path, manifest: &Manifest, dataset: &str) -> anyhow::Result<Self> {
-        Self::load_pooled(artifact_dir, manifest, dataset, default_lanes())
+    /// Native pure-Rust runtime for `dataset` — works from a clean
+    /// checkout with no artifacts, Python or PJRT.
+    pub fn native(manifest: &Manifest, dataset: &str) -> anyhow::Result<Self> {
+        let spec = manifest.for_dataset(dataset)?.clone();
+        Ok(ModelRuntime { backend: Box::new(NativeBackend::new(spec)?) })
     }
 
-    /// Compile on an explicit number of engine lanes (1 = serial).
+    /// Wrap an already-constructed backend.
+    pub fn from_backend(backend: Box<dyn Backend>) -> Self {
+        ModelRuntime { backend }
+    }
+
+    /// PJRT runtime over the AOT artifacts (see `python/compile/aot.py`),
+    /// pooled across [`super::engine::default_lanes`] engine threads.
+    #[cfg(feature = "pjrt")]
+    pub fn load(
+        artifact_dir: &std::path::Path,
+        manifest: &Manifest,
+        dataset: &str,
+    ) -> anyhow::Result<Self> {
+        let lanes = super::engine::default_lanes();
+        Self::load_pooled(artifact_dir, manifest, dataset, lanes)
+    }
+
+    /// PJRT runtime with an explicit engine-pool size (1 = serial).
+    #[cfg(feature = "pjrt")]
     pub fn load_pooled(
-        artifact_dir: &Path,
+        artifact_dir: &std::path::Path,
         manifest: &Manifest,
         dataset: &str,
         lanes: usize,
     ) -> anyhow::Result<Self> {
-        anyhow::ensure!(lanes > 0, "need at least one engine lane");
-        let spec = manifest.for_dataset(dataset)?.clone();
-        let mut entries = Vec::new();
-        for cut in &spec.cuts {
-            for role in CUT_ROLES {
-                entries.push((
-                    format!("v{}_{role}", cut.cut),
-                    cut.artifacts[role].clone(),
-                ));
-            }
-        }
-        for (role, file) in &spec.artifacts {
-            entries.push((role.clone(), file.clone()));
-        }
-        let engines = (0..lanes)
-            .map(|_| Engine::load_artifacts(artifact_dir, &entries))
-            .collect::<anyhow::Result<Vec<_>>>()?;
-        Ok(ModelRuntime { engines, next: AtomicUsize::new(0), spec })
+        let backend = super::engine::PjrtBackend::load(artifact_dir, manifest, dataset, lanes)?;
+        Ok(ModelRuntime { backend: Box::new(backend) })
     }
 
-    pub fn lanes(&self) -> usize {
-        self.engines.len()
-    }
-
-    fn engine(&self) -> &Engine {
-        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.engines.len();
-        &self.engines[i]
+    /// Backend name ("native", "pjrt") for logging and reports.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     pub fn spec(&self) -> &ShapeSpec {
-        &self.spec
-    }
-
-    fn params_to_tensors(&self, params: &Params, offset: usize) -> Vec<Tensor> {
-        params
-            .iter()
-            .enumerate()
-            .map(|(i, buf)| Tensor::new(buf.clone(), self.spec.params[offset + i].shape.clone()))
-            .collect()
+        self.backend.spec()
     }
 
     /// Smashed data S = ℓ(w^c; x) — eq (1).
-    pub fn client_fwd(&self, cut: usize, wc: &Params, x: &Tensor) -> anyhow::Result<Tensor> {
-        self.check_cut(cut)?;
-        let mut inputs = self.params_to_tensors(wc, 0);
-        inputs.push(x.clone());
-        let mut out = self.engine().handle().execute(&format!("v{cut}_client_fwd"), inputs)?;
-        anyhow::ensure!(out.len() == 1, "client_fwd returned {} outputs", out.len());
-        Ok(out.pop().unwrap())
+    pub fn client_fwd(&self, cut: usize, wc: &[Vec<f32>], x: &Tensor) -> anyhow::Result<Tensor> {
+        self.backend.client_fwd(cut, wc, x)
     }
 
-    /// Server FP+BP: returns (loss, server grads g^{s,n}, smashed grads s^n)
-    /// — eqs (2)(3)(4).
+    /// Server FP+BP: returns (loss, server grads g^{s,n}, smashed grads
+    /// s^n) — eqs (2)(3)(4).
     pub fn server_grad(
         &self,
         cut: usize,
-        ws: &Params,
+        ws: &[Vec<f32>],
         smashed: &Tensor,
         y1h: &Tensor,
     ) -> anyhow::Result<(f32, Params, Tensor)> {
-        self.check_cut(cut)?;
-        let nc = self.spec.cut(cut).client_params;
-        let mut inputs = self.params_to_tensors(ws, nc);
-        inputs.push(smashed.clone());
-        inputs.push(y1h.clone());
-        let mut out = self.engine().handle().execute(&format!("v{cut}_server_grad"), inputs)?;
-        let n_server = self.spec.params.len() - nc;
-        anyhow::ensure!(
-            out.len() == 1 + n_server + 1,
-            "server_grad returned {} outputs, expected {}",
-            out.len(),
-            2 + n_server
-        );
-        let g_smashed = out.pop().unwrap();
-        let loss = out[0].item();
-        let g_ws: Params = out.drain(1..).map(|t| t.data).collect();
-        Ok((loss, g_ws, g_smashed))
+        self.backend.server_grad(cut, ws, smashed, y1h)
     }
 
     /// Client BP with injected (aggregated) smashed-gradient — eq (6).
     pub fn client_grad(
         &self,
         cut: usize,
-        wc: &Params,
+        wc: &[Vec<f32>],
         x: &Tensor,
         g_smashed: &Tensor,
     ) -> anyhow::Result<Params> {
-        self.check_cut(cut)?;
-        let mut inputs = self.params_to_tensors(wc, 0);
-        inputs.push(x.clone());
-        inputs.push(g_smashed.clone());
-        let out = self.engine().handle().execute(&format!("v{cut}_client_grad"), inputs)?;
-        anyhow::ensure!(out.len() == wc.len(), "client_grad output arity mismatch");
-        Ok(out.into_iter().map(|t| t.data).collect())
+        self.backend.client_grad(cut, wc, x, g_smashed)
     }
 
     /// FL baseline: (loss, full gradient).
-    pub fn full_grad(&self, w: &Params, x: &Tensor, y1h: &Tensor) -> anyhow::Result<(f32, Params)> {
-        let mut inputs = self.params_to_tensors(w, 0);
-        inputs.push(x.clone());
-        inputs.push(y1h.clone());
-        let mut out = self.engine().handle().execute("full_grad", inputs)?;
-        anyhow::ensure!(out.len() == 1 + w.len(), "full_grad output arity mismatch");
-        let loss = out[0].item();
-        let g: Params = out.drain(1..).map(|t| t.data).collect();
-        Ok((loss, g))
+    pub fn full_grad(
+        &self,
+        w: &[Vec<f32>],
+        x: &Tensor,
+        y1h: &Tensor,
+    ) -> anyhow::Result<(f32, Params)> {
+        self.backend.full_grad(w, x, y1h)
     }
 
     /// Eval batch: (mean loss, correct count).
-    pub fn eval(&self, w: &Params, x: &Tensor, y1h: &Tensor) -> anyhow::Result<(f32, f32)> {
-        let mut inputs = self.params_to_tensors(w, 0);
-        inputs.push(x.clone());
-        inputs.push(y1h.clone());
-        let out = self.engine().handle().execute("eval", inputs)?;
-        anyhow::ensure!(out.len() == 2, "eval returned {} outputs", out.len());
-        Ok((out[0].item(), out[1].item()))
-    }
-
-    fn check_cut(&self, cut: usize) -> anyhow::Result<()> {
-        anyhow::ensure!((1..=NUM_CUTS).contains(&cut), "cut {cut} out of range");
-        Ok(())
+    pub fn eval(&self, w: &[Vec<f32>], x: &Tensor, y1h: &Tensor) -> anyhow::Result<(f32, f32)> {
+        self.backend.eval(w, x, y1h)
     }
 
     /// Train-batch input shape [batch, h, w, c].
     pub fn input_shape(&self, batch: usize) -> Vec<usize> {
         let mut s = vec![batch];
-        s.extend_from_slice(&self.spec.input_shape);
+        s.extend_from_slice(&self.spec().input_shape);
         s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_runtime_loads_every_dataset() {
+        let m = Manifest::builtin();
+        for ds in ["mnist", "fmnist", "cifar10"] {
+            let rt = ModelRuntime::native(&m, ds).unwrap();
+            assert_eq!(rt.backend_name(), "native");
+            assert_eq!(rt.spec().key, m.datasets[ds]);
+        }
+        assert!(ModelRuntime::native(&m, "imagenet").is_err());
+    }
+
+    #[test]
+    fn input_shape_prepends_batch() {
+        let m = Manifest::builtin();
+        let rt = ModelRuntime::native(&m, "cifar10").unwrap();
+        assert_eq!(rt.input_shape(7), vec![7, 32, 32, 3]);
     }
 }

@@ -1,14 +1,26 @@
-//! PJRT runtime: loads the HLO-text artifacts produced by the python AOT
-//! path and executes them from a dedicated engine thread.
+//! Model execution runtime, split into a backend-agnostic facade and
+//! pluggable backends (see DESIGN.md §Backends):
 //!
-//! Layering rule: this module is the ONLY place PJRT/xla types appear; the
-//! coordinator above deals purely in [`Tensor`] buffers, keeping the
-//! request path free of python and of FFI details.
+//! * [`backend`] — the [`Backend`] trait every execution engine
+//!   implements: the five roles (`client_fwd`, `server_grad`,
+//!   `client_grad`, `full_grad`, `eval`) over flat f32 buffers.
+//! * [`native`] — the default pure-Rust backend: dense/conv/pool forward
+//!   and backward on the host, zero external dependencies.
+//! * [`engine`] (feature `pjrt`) — the XLA/PJRT engine pool that executes
+//!   the HLO-text artifacts produced by `python/compile/aot.py`.  This is
+//!   the ONLY place PJRT/xla types appear; the coordinator above deals
+//!   purely in [`Tensor`] buffers.
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod exec;
+pub mod native;
 pub mod tensor;
 
+pub use backend::Backend;
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, Handle};
 pub use exec::ModelRuntime;
+pub use native::NativeBackend;
 pub use tensor::Tensor;

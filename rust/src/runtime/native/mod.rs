@@ -1,0 +1,530 @@
+//! The native pure-Rust backend: executes the paper's split CNN directly
+//! on flat `Vec<f32>` buffers — no Python, JAX, XLA or PJRT anywhere.
+//!
+//! The block structure is derived from the manifest's parameter shapes
+//! (4-d weight -> conv5x5+relu+maxpool2, 2-d weight -> dense, last block
+//! linear), which makes this backend work for every shape key the
+//! manifest describes rather than hard-coding the MNIST/CIFAR geometry.
+//! Forward passes record a per-block tape (inputs, post-relu activations,
+//! pool argmaxes); backward consumes the tape to produce exactly the VJPs
+//! the five roles need.
+//!
+//! Numerical semantics are pinned to the JAX reference kernels
+//! (`python/compile/kernels/ref.py`) by the golden tests in [`ops`] and
+//! the full-model goldens below; split-vs-full gradient equality is exact
+//! (bitwise) because both paths share the same kernels.
+
+pub mod ops;
+
+use crate::model::{NUM_CUTS, ShapeSpec};
+use crate::tensor::Params;
+
+use ops::Geom;
+use super::backend::Backend;
+use super::tensor::Tensor;
+
+/// Static description of one block, derived from the manifest shapes.
+#[derive(Clone, Copy, Debug)]
+enum BlockDesc {
+    /// conv `k`x`k` SAME + relu + maxpool2x2 on an `h`x`w`x`ic` input.
+    Conv { h: usize, w: usize, ic: usize, k: usize, oc: usize },
+    /// dense `din` -> `dout`, relu unless it is the logits layer.
+    Dense { din: usize, dout: usize, relu: bool },
+}
+
+/// Per-block forward records needed by the backward pass.
+enum Tape {
+    Conv { input: Vec<f32>, g: Geom, k: usize, oc: usize, act: Vec<f32>, idx: Vec<u32> },
+    Dense { input: Vec<f32>, din: usize, dout: usize, out: Vec<f32>, relu: bool },
+}
+
+/// Pure-Rust execution of the split model (all cuts, all five roles).
+pub struct NativeBackend {
+    spec: ShapeSpec,
+    blocks: Vec<BlockDesc>,
+}
+
+impl NativeBackend {
+    /// Derive the block table from `spec` and validate its consistency.
+    pub fn new(spec: ShapeSpec) -> anyhow::Result<NativeBackend> {
+        anyhow::ensure!(
+            spec.input_shape.len() == 3,
+            "native backend expects [h, w, c] inputs, got {:?}",
+            spec.input_shape
+        );
+        anyhow::ensure!(
+            !spec.params.is_empty() && spec.params.len() % 2 == 0,
+            "native backend expects (weight, bias) parameter pairs"
+        );
+        let n_blocks = spec.params.len() / 2;
+        let (mut h, mut w, mut c) =
+            (spec.input_shape[0], spec.input_shape[1], spec.input_shape[2]);
+        let mut blocks = Vec::with_capacity(n_blocks);
+        for bi in 0..n_blocks {
+            let wshape = &spec.params[2 * bi].shape;
+            let bshape = &spec.params[2 * bi + 1].shape;
+            let wname = &spec.params[2 * bi].name;
+            anyhow::ensure!(bshape.len() == 1, "{wname}: bias must be rank 1");
+            match wshape.len() {
+                4 => {
+                    let k = wshape[0];
+                    let oc = wshape[3];
+                    anyhow::ensure!(wshape[1] == k && k % 2 == 1, "{wname}: bad kernel");
+                    anyhow::ensure!(wshape[2] == c, "{wname}: in-channels {} != {c}", wshape[2]);
+                    anyhow::ensure!(bshape[0] == oc, "{wname}: bias/filters mismatch");
+                    anyhow::ensure!(h % 2 == 0 && w % 2 == 0, "{wname}: pool needs even h/w");
+                    blocks.push(BlockDesc::Conv { h, w, ic: c, k, oc });
+                    h /= 2;
+                    w /= 2;
+                    c = oc;
+                }
+                2 => {
+                    let (din, dout) = (wshape[0], wshape[1]);
+                    anyhow::ensure!(
+                        din == h * w * c,
+                        "{wname}: dense fan-in {din} != upstream {}",
+                        h * w * c
+                    );
+                    anyhow::ensure!(bshape[0] == dout, "{wname}: bias/out mismatch");
+                    blocks.push(BlockDesc::Dense { din, dout, relu: bi + 1 < n_blocks });
+                    h = 1;
+                    w = 1;
+                    c = dout;
+                }
+                r => anyhow::bail!("{wname}: unsupported weight rank {r}"),
+            }
+        }
+        anyhow::ensure!(
+            matches!(blocks.last(), Some(BlockDesc::Dense { dout, .. }) if *dout == spec.classes),
+            "last block must produce {} logits",
+            spec.classes
+        );
+        Ok(NativeBackend { spec, blocks })
+    }
+
+    fn check_cut(&self, cut: usize) -> anyhow::Result<usize> {
+        anyhow::ensure!((1..=NUM_CUTS).contains(&cut), "cut {cut} out of range");
+        let nc = self.spec.cut(cut).client_params;
+        anyhow::ensure!(
+            nc % 2 == 0 && nc / 2 < self.blocks.len(),
+            "cut {cut}: client_params {nc} does not align to a block boundary"
+        );
+        Ok(nc)
+    }
+
+    /// Validate `[batch, input_shape...]` and return the batch size.
+    fn batch_of_input(&self, x: &Tensor) -> anyhow::Result<usize> {
+        anyhow::ensure!(
+            x.shape.len() == 4 && x.shape[1..] == self.spec.input_shape[..],
+            "input shape {:?} does not match [b, {:?}]",
+            x.shape,
+            self.spec.input_shape
+        );
+        Ok(x.shape[0])
+    }
+
+    /// The smashed-data shape at `cut` for an arbitrary batch size.
+    fn smashed_shape(&self, cut: usize, batch: usize) -> Vec<usize> {
+        let mut s = self.spec.cut(cut).smashed_shape.clone();
+        s[0] = batch;
+        s
+    }
+
+    /// Run blocks `first..=last` (1-based), recording the backward tape.
+    fn forward(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        batch: usize,
+        first: usize,
+        last: usize,
+    ) -> anyhow::Result<(Vec<f32>, Vec<Tape>)> {
+        anyhow::ensure!(
+            params.len() == 2 * (last + 1 - first),
+            "blocks {first}..={last} need {} params, got {}",
+            2 * (last + 1 - first),
+            params.len()
+        );
+        let mut cur = x.to_vec();
+        let mut tapes = Vec::with_capacity(last + 1 - first);
+        for (bi, blk) in (first..=last).enumerate() {
+            let wt = &params[2 * bi];
+            let bias = &params[2 * bi + 1];
+            match self.blocks[blk - 1] {
+                BlockDesc::Conv { h, w, ic, k, oc } => {
+                    let g = Geom { b: batch, h, w, c: ic };
+                    anyhow::ensure!(cur.len() == g.len(), "block {blk}: input length mismatch");
+                    anyhow::ensure!(wt.len() == k * k * ic * oc, "block {blk}: weight length");
+                    let act = ops::conv2d_fwd(&cur, g, wt, k, oc, bias, true);
+                    let ag = Geom { b: batch, h, w, c: oc };
+                    let (out, idx) = ops::maxpool2x2_fwd(&act, ag);
+                    let input = std::mem::replace(&mut cur, out);
+                    tapes.push(Tape::Conv { input, g, k, oc, act, idx });
+                }
+                BlockDesc::Dense { din, dout, relu } => {
+                    anyhow::ensure!(
+                        cur.len() == batch * din,
+                        "block {blk}: input length {} != {batch}x{din}",
+                        cur.len()
+                    );
+                    anyhow::ensure!(wt.len() == din * dout, "block {blk}: weight length");
+                    let out = ops::dense_fwd(&cur, batch, din, dout, wt, bias, relu);
+                    let input = std::mem::take(&mut cur);
+                    cur = out.clone();
+                    tapes.push(Tape::Dense { input, din, dout, out, relu });
+                }
+            }
+        }
+        Ok((cur, tapes))
+    }
+
+    /// Forward-only variant for paths that never backprop (`client_fwd`,
+    /// `eval`): no tape, no input clones, no retained activations.
+    fn forward_no_tape(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        batch: usize,
+        first: usize,
+        last: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(
+            params.len() == 2 * (last + 1 - first),
+            "blocks {first}..={last} need {} params, got {}",
+            2 * (last + 1 - first),
+            params.len()
+        );
+        let mut cur = x.to_vec();
+        for (bi, blk) in (first..=last).enumerate() {
+            let wt = &params[2 * bi];
+            let bias = &params[2 * bi + 1];
+            match self.blocks[blk - 1] {
+                BlockDesc::Conv { h, w, ic, k, oc } => {
+                    let g = Geom { b: batch, h, w, c: ic };
+                    anyhow::ensure!(cur.len() == g.len(), "block {blk}: input length mismatch");
+                    anyhow::ensure!(wt.len() == k * k * ic * oc, "block {blk}: weight length");
+                    let act = ops::conv2d_fwd(&cur, g, wt, k, oc, bias, true);
+                    let ag = Geom { b: batch, h, w, c: oc };
+                    (cur, _) = ops::maxpool2x2_fwd(&act, ag);
+                }
+                BlockDesc::Dense { din, dout, relu } => {
+                    anyhow::ensure!(
+                        cur.len() == batch * din,
+                        "block {blk}: input length {} != {batch}x{din}",
+                        cur.len()
+                    );
+                    anyhow::ensure!(wt.len() == din * dout, "block {blk}: weight length");
+                    cur = ops::dense_fwd(&cur, batch, din, dout, wt, bias, relu);
+                }
+            }
+        }
+        Ok(cur)
+    }
+
+    /// Backpropagate `d_last` through the taped blocks; returns the
+    /// parameter gradients (manifest order) and the input cotangent.
+    fn backward(
+        &self,
+        params: &[Vec<f32>],
+        tapes: &[Tape],
+        d_last: Vec<f32>,
+        batch: usize,
+    ) -> (Params, Vec<f32>) {
+        let mut grads: Params = vec![Vec::new(); params.len()];
+        let mut d = d_last;
+        for (bi, tape) in tapes.iter().enumerate().rev() {
+            let wt = &params[2 * bi];
+            match tape {
+                Tape::Conv { input, g, k, oc, act, idx } => {
+                    let mut d_act = ops::maxpool2x2_bwd(idx, &d, act.len());
+                    ops::relu_mask(&mut d_act, act);
+                    let (d_x, d_w, d_b) = ops::conv2d_bwd(input, *g, wt, *k, *oc, &d_act);
+                    grads[2 * bi] = d_w;
+                    grads[2 * bi + 1] = d_b;
+                    d = d_x;
+                }
+                Tape::Dense { input, din, dout, out, relu } => {
+                    if *relu {
+                        ops::relu_mask(&mut d, out);
+                    }
+                    let (d_x, d_w, d_b) = ops::dense_bwd(input, batch, *din, *dout, wt, &d);
+                    grads[2 * bi] = d_w;
+                    grads[2 * bi + 1] = d_b;
+                    d = d_x;
+                }
+            }
+        }
+        (grads, d)
+    }
+
+    fn check_labels(&self, y1h: &Tensor, batch: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            y1h.shape == [batch, self.spec.classes],
+            "labels shape {:?} != [{batch}, {}]",
+            y1h.shape,
+            self.spec.classes
+        );
+        Ok(())
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn spec(&self) -> &ShapeSpec {
+        &self.spec
+    }
+
+    fn client_fwd(&self, cut: usize, wc: &[Vec<f32>], x: &Tensor) -> anyhow::Result<Tensor> {
+        let nc = self.check_cut(cut)?;
+        anyhow::ensure!(wc.len() == nc, "client_fwd: {} params, expected {nc}", wc.len());
+        let batch = self.batch_of_input(x)?;
+        let out = self.forward_no_tape(wc, &x.data, batch, 1, nc / 2)?;
+        Ok(Tensor::new(out, self.smashed_shape(cut, batch)))
+    }
+
+    fn server_grad(
+        &self,
+        cut: usize,
+        ws: &[Vec<f32>],
+        smashed: &Tensor,
+        y1h: &Tensor,
+    ) -> anyhow::Result<(f32, Params, Tensor)> {
+        let nc = self.check_cut(cut)?;
+        let n_server = self.spec.params.len() - nc;
+        anyhow::ensure!(
+            ws.len() == n_server,
+            "server_grad: {} params, expected {n_server}",
+            ws.len()
+        );
+        anyhow::ensure!(
+            smashed.shape.len() > 1
+                && smashed.shape[1..] == self.spec.cut(cut).smashed_shape[1..],
+            "smashed shape {:?} does not match cut {cut}",
+            smashed.shape
+        );
+        let batch = smashed.shape[0];
+        self.check_labels(y1h, batch)?;
+        let first = nc / 2 + 1;
+        let (logits, tapes) = self.forward(ws, &smashed.data, batch, first, self.blocks.len())?;
+        let (loss, d_logits) = ops::softmax_ce(&logits, &y1h.data, batch, self.spec.classes);
+        let (g_ws, d_smashed) = self.backward(ws, &tapes, d_logits, batch);
+        Ok((loss, g_ws, Tensor::new(d_smashed, smashed.shape.clone())))
+    }
+
+    fn client_grad(
+        &self,
+        cut: usize,
+        wc: &[Vec<f32>],
+        x: &Tensor,
+        g_smashed: &Tensor,
+    ) -> anyhow::Result<Params> {
+        let nc = self.check_cut(cut)?;
+        anyhow::ensure!(wc.len() == nc, "client_grad: {} params, expected {nc}", wc.len());
+        let batch = self.batch_of_input(x)?;
+        anyhow::ensure!(
+            g_smashed.shape == self.smashed_shape(cut, batch),
+            "cotangent shape {:?} does not match cut {cut} batch {batch}",
+            g_smashed.shape
+        );
+        let (_out, tapes) = self.forward(wc, &x.data, batch, 1, nc / 2)?;
+        let (g_wc, _d_x) = self.backward(wc, &tapes, g_smashed.data.clone(), batch);
+        Ok(g_wc)
+    }
+
+    fn full_grad(&self, w: &[Vec<f32>], x: &Tensor, y1h: &Tensor) -> anyhow::Result<(f32, Params)> {
+        let n = self.spec.params.len();
+        anyhow::ensure!(w.len() == n, "full_grad: {} params, expected {n}", w.len());
+        let batch = self.batch_of_input(x)?;
+        self.check_labels(y1h, batch)?;
+        let (logits, tapes) = self.forward(w, &x.data, batch, 1, self.blocks.len())?;
+        let (loss, d_logits) = ops::softmax_ce(&logits, &y1h.data, batch, self.spec.classes);
+        let (g_w, _d_x) = self.backward(w, &tapes, d_logits, batch);
+        Ok((loss, g_w))
+    }
+
+    fn eval(&self, w: &[Vec<f32>], x: &Tensor, y1h: &Tensor) -> anyhow::Result<(f32, f32)> {
+        let n = self.spec.params.len();
+        anyhow::ensure!(w.len() == n, "eval: {} params, expected {n}", w.len());
+        let batch = self.batch_of_input(x)?;
+        self.check_labels(y1h, batch)?;
+        let logits = self.forward_no_tape(w, &x.data, batch, 1, self.blocks.len())?;
+        let loss = ops::ce_loss(&logits, &y1h.data, batch, self.spec.classes);
+        let correct = ops::correct_count(&logits, &y1h.data, batch, self.spec.classes);
+        Ok((loss, correct))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::ops::tests::gen_vec;
+    use super::*;
+    use crate::model::Manifest;
+    use crate::tensor;
+
+    fn backend() -> NativeBackend {
+        let spec = Manifest::builtin().for_dataset("mnist").unwrap().clone();
+        NativeBackend::new(spec).unwrap()
+    }
+
+    /// Parameters/inputs from the shared deterministic generator — the
+    /// same buffers the JAX golden script builds (array k at offset k·1e6,
+    /// x at 2e7, labels (3i+1) mod 10).
+    fn golden_setup(be: &NativeBackend) -> (Params, Tensor, Tensor) {
+        let spec = be.spec();
+        let params: Params = spec
+            .params
+            .iter()
+            .enumerate()
+            .map(|(k, p)| gen_vec(k as u64 * 1_000_000, p.size()))
+            .collect();
+        let batch = 2usize;
+        let mut xshape = vec![batch];
+        xshape.extend_from_slice(&spec.input_shape);
+        let x = Tensor::new(gen_vec(20_000_000, batch * spec.input_per_sample()), xshape);
+        let mut y = vec![0.0f32; batch * spec.classes];
+        for i in 0..batch {
+            y[i * spec.classes + (3 * i + 1) % spec.classes] = 1.0;
+        }
+        let y1h = Tensor::new(y, vec![batch, spec.classes]);
+        (params, x, y1h)
+    }
+
+    const GOLD_LOSS: f64 = 3.7887232303619385;
+    const GOLD_GRAD_ABSSUM: [f64; 10] = [
+        8298.501360177994,
+        1473.2559788227081,
+        66977.71572766759,
+        219.59729354083538,
+        313059.0024780063,
+        90.47802595794201,
+        7924.51078856885,
+        16.297020066529512,
+        470.6403131179182,
+        0.553443807616466,
+    ];
+    const GOLD_SMASHED_SUM: [f64; 4] =
+        [4392.887069702148, 6867.429403662682, 752.670960560441, 592.0061593055725];
+
+    fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + b.abs())
+    }
+
+    #[test]
+    fn full_grad_matches_jax_goldens() {
+        let be = backend();
+        let (params, x, y1h) = golden_setup(&be);
+        let (loss, g) = be.full_grad(&params, &x, &y1h).unwrap();
+        assert!(rel_close(loss as f64, GOLD_LOSS, 1e-3), "loss {loss} vs {GOLD_LOSS}");
+        assert_eq!(g.len(), GOLD_GRAD_ABSSUM.len());
+        for (k, (buf, &want)) in g.iter().zip(&GOLD_GRAD_ABSSUM).enumerate() {
+            let got: f64 = buf.iter().map(|&v| v.abs() as f64).sum();
+            assert!(rel_close(got, want, 1e-2), "grad[{k}] |sum| {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn client_fwd_matches_jax_goldens_at_every_cut() {
+        let be = backend();
+        let (params, x, _y1h) = golden_setup(&be);
+        for cut in 1..=NUM_CUTS {
+            let nc = be.spec().cut(cut).client_params;
+            let s = be.client_fwd(cut, &params[..nc], &x).unwrap();
+            assert_eq!(s.shape, be.smashed_shape(cut, 2));
+            let sum: f64 = s.data.iter().map(|&v| v as f64).sum();
+            let want = GOLD_SMASHED_SUM[cut - 1];
+            assert!(rel_close(sum, want, 1e-3), "cut {cut}: smashed sum {sum} vs {want}");
+        }
+    }
+
+    #[test]
+    fn split_gradient_equals_full_gradient_exactly() {
+        let be = backend();
+        let (params, x, y1h) = golden_setup(&be);
+        let (loss_full, g_full) = be.full_grad(&params, &x, &y1h).unwrap();
+        for cut in 1..=NUM_CUTS {
+            let nc = be.spec().cut(cut).client_params;
+            let smashed = be.client_fwd(cut, &params[..nc], &x).unwrap();
+            let (loss_split, g_ws, g_s) =
+                be.server_grad(cut, &params[nc..], &smashed, &y1h).unwrap();
+            let mut g_split = be.client_grad(cut, &params[..nc], &x, &g_s).unwrap();
+            g_split.extend(g_ws);
+            // Both paths run the identical kernels on identical buffers,
+            // so the equality is exact, not approximate.
+            assert_eq!(loss_full, loss_split, "cut {cut} loss");
+            let diff = tensor::max_abs_diff(&g_split, &g_full);
+            assert!(diff == 0.0, "cut {cut}: split grad differs by {diff}");
+        }
+    }
+
+    #[test]
+    fn eval_returns_loss_and_correct_count() {
+        let be = backend();
+        let (params, x, y1h) = golden_setup(&be);
+        let (loss, correct) = be.eval(&params, &x, &y1h).unwrap();
+        let (loss_full, _g) = be.full_grad(&params, &x, &y1h).unwrap();
+        assert_eq!(loss, loss_full);
+        // JAX golden: neither random-param prediction is correct.
+        assert_eq!(correct, 0.0);
+    }
+
+    #[test]
+    fn shape_errors_are_reported_not_panicked() {
+        let be = backend();
+        let (params, x, y1h) = golden_setup(&be);
+        assert!(be.client_fwd(0, &params[..2], &x).is_err());
+        assert!(be.client_fwd(5, &params[..2], &x).is_err());
+        assert!(be.client_fwd(1, &params[..4], &x).is_err());
+        let bad_x = Tensor::zeros(&[2, 27, 28, 1]);
+        assert!(be.client_fwd(1, &params[..2], &bad_x).is_err());
+        let bad_y = Tensor::zeros(&[3, 10]);
+        assert!(be.full_grad(&params, &x, &bad_y).is_err());
+    }
+
+    #[test]
+    fn batch_size_is_taken_from_the_input() {
+        // The same backend serves train- and eval-sized batches.
+        let be = backend();
+        let (params, _x, _y) = golden_setup(&be);
+        for batch in [1usize, 3, 5] {
+            let x = Tensor::zeros(&[batch, 28, 28, 1]);
+            let s = be.client_fwd(2, &params[..4], &x).unwrap();
+            assert_eq!(s.shape[0], batch);
+        }
+    }
+
+    #[test]
+    fn cifar_shape_builds_and_splits_exactly() {
+        let spec = Manifest::builtin().for_dataset("cifar10").unwrap().clone();
+        let be = NativeBackend::new(spec).unwrap();
+        let spec = be.spec().clone();
+        let params: Params = spec
+            .params
+            .iter()
+            .enumerate()
+            .map(|(k, p)| gen_vec(k as u64 * 1_000_000, p.size()))
+            .collect();
+        let batch = 2usize;
+        let x = Tensor::new(
+            gen_vec(30_000_000, batch * spec.input_per_sample()),
+            vec![batch, 32, 32, 3],
+        );
+        let mut y = vec![0.0f32; batch * spec.classes];
+        for i in 0..batch {
+            y[i * spec.classes + (7 * i + 2) % spec.classes] = 1.0;
+        }
+        let y1h = Tensor::new(y, vec![batch, spec.classes]);
+        let (loss_full, g_full) = be.full_grad(&params, &x, &y1h).unwrap();
+        assert!(loss_full.is_finite());
+        for cut in 1..=NUM_CUTS {
+            let nc = spec.cut(cut).client_params;
+            let smashed = be.client_fwd(cut, &params[..nc], &x).unwrap();
+            let (_l, g_ws, g_s) = be.server_grad(cut, &params[nc..], &smashed, &y1h).unwrap();
+            let mut g_split = be.client_grad(cut, &params[..nc], &x, &g_s).unwrap();
+            g_split.extend(g_ws);
+            assert!(tensor::max_abs_diff(&g_split, &g_full) == 0.0, "cut {cut}");
+        }
+    }
+}

@@ -1,0 +1,518 @@
+//! Pure-Rust neural-net primitives for the native backend: SAME-padded
+//! conv2d, 2x2 max-pool, dense layers and softmax cross-entropy, each with
+//! its backward pass.
+//!
+//! Layout conventions match the AOT artifacts exactly: activations are
+//! NHWC, conv weights are HWIO, dense weights are `[in, out]`, everything
+//! row-major `f32`.  Inner loops run over the innermost (channel/output)
+//! dimension so reads and writes stay contiguous; zero inputs (common
+//! after relu) skip their accumulation entirely.
+//!
+//! Golden values in the tests below were produced by JAX CPU (see
+//! DESIGN.md §Native backend) from the same deterministic inputs, so the
+//! semantics — padding offsets, pooling tie-breaks, loss scaling — are
+//! pinned to the reference implementation rather than to this code.
+
+/// Image geometry of an NHWC activation buffer.
+#[derive(Clone, Copy, Debug)]
+pub struct Geom {
+    pub b: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Geom {
+    pub fn len(&self) -> usize {
+        self.b * self.h * self.w * self.c
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// SAME conv2d, stride 1, square odd kernel `k`, NHWC x HWIO -> NHWC,
+/// with bias add and optional relu fused at the end.
+pub fn conv2d_fwd(
+    x: &[f32],
+    g: Geom,
+    wt: &[f32],
+    k: usize,
+    oc: usize,
+    bias: &[f32],
+    relu: bool,
+) -> Vec<f32> {
+    let Geom { b, h, w, c: ic } = g;
+    debug_assert_eq!(x.len(), g.len());
+    debug_assert_eq!(wt.len(), k * k * ic * oc);
+    debug_assert_eq!(bias.len(), oc);
+    let pad = k / 2;
+    let mut out = vec![0.0f32; b * h * w * oc];
+    for n in 0..b {
+        for y in 0..h {
+            for ky in 0..k {
+                // Source row sy = y + ky - pad, skipped outside the image.
+                if y + ky < pad || y + ky - pad >= h {
+                    continue;
+                }
+                let sy = y + ky - pad;
+                for xo in 0..w {
+                    let obase = ((n * h + y) * w + xo) * oc;
+                    for kx in 0..k {
+                        if xo + kx < pad || xo + kx - pad >= w {
+                            continue;
+                        }
+                        let sx = xo + kx - pad;
+                        let xbase = ((n * h + sy) * w + sx) * ic;
+                        let wbase = (ky * k + kx) * ic * oc;
+                        for i in 0..ic {
+                            let xv = x[xbase + i];
+                            if xv != 0.0 {
+                                let wrow = &wt[wbase + i * oc..wbase + (i + 1) * oc];
+                                let orow = &mut out[obase..obase + oc];
+                                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                                    *o += xv * wv;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for row in out.chunks_mut(oc) {
+        for (o, &bv) in row.iter_mut().zip(bias) {
+            *o += bv;
+            if relu && *o < 0.0 {
+                *o = 0.0;
+            }
+        }
+    }
+    out
+}
+
+/// Backward of [`conv2d_fwd`] *without* the activation: the caller masks
+/// `d_out` by the relu derivative first.  Returns `(d_x, d_w, d_b)`.
+pub fn conv2d_bwd(
+    x: &[f32],
+    g: Geom,
+    wt: &[f32],
+    k: usize,
+    oc: usize,
+    d_out: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let Geom { b, h, w, c: ic } = g;
+    debug_assert_eq!(x.len(), g.len());
+    debug_assert_eq!(d_out.len(), b * h * w * oc);
+    let pad = k / 2;
+    let mut d_x = vec![0.0f32; x.len()];
+    let mut d_w = vec![0.0f32; wt.len()];
+    let mut d_b = vec![0.0f32; oc];
+    for row in d_out.chunks(oc) {
+        for (db, &dv) in d_b.iter_mut().zip(row) {
+            *db += dv;
+        }
+    }
+    for n in 0..b {
+        for y in 0..h {
+            for ky in 0..k {
+                if y + ky < pad || y + ky - pad >= h {
+                    continue;
+                }
+                let sy = y + ky - pad;
+                for xo in 0..w {
+                    let obase = ((n * h + y) * w + xo) * oc;
+                    let dorow = &d_out[obase..obase + oc];
+                    for kx in 0..k {
+                        if xo + kx < pad || xo + kx - pad >= w {
+                            continue;
+                        }
+                        let sx = xo + kx - pad;
+                        let xbase = ((n * h + sy) * w + sx) * ic;
+                        let wbase = (ky * k + kx) * ic * oc;
+                        for i in 0..ic {
+                            let wrow = &wt[wbase + i * oc..wbase + (i + 1) * oc];
+                            let mut acc = 0.0f32;
+                            for (&dv, &wv) in dorow.iter().zip(wrow) {
+                                acc += dv * wv;
+                            }
+                            d_x[xbase + i] += acc;
+                            let xv = x[xbase + i];
+                            if xv != 0.0 {
+                                let dwrow = &mut d_w[wbase + i * oc..wbase + (i + 1) * oc];
+                                for (dw, &dv) in dwrow.iter_mut().zip(dorow) {
+                                    *dw += xv * dv;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (d_x, d_w, d_b)
+}
+
+/// 2x2 max-pool, stride 2, VALID.  Returns the pooled buffer and the flat
+/// input index of each window's max (first max in row-major scan order —
+/// the same tie-break XLA's select-and-scatter uses).
+pub fn maxpool2x2_fwd(x: &[f32], g: Geom) -> (Vec<f32>, Vec<u32>) {
+    let Geom { b, h, w, c } = g;
+    debug_assert_eq!(x.len(), g.len());
+    debug_assert!(h % 2 == 0 && w % 2 == 0, "pool needs even h/w, got {h}x{w}");
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0.0f32; b * oh * ow * c];
+    let mut idx = vec![0u32; out.len()];
+    for n in 0..b {
+        for y in 0..oh {
+            for xo in 0..ow {
+                for ch in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut bi = 0usize;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let src = ((n * h + 2 * y + dy) * w + 2 * xo + dx) * c + ch;
+                            if x[src] > best {
+                                best = x[src];
+                                bi = src;
+                            }
+                        }
+                    }
+                    let o = ((n * oh + y) * ow + xo) * c + ch;
+                    out[o] = best;
+                    idx[o] = bi as u32;
+                }
+            }
+        }
+    }
+    (out, idx)
+}
+
+/// Backward of [`maxpool2x2_fwd`]: routes each output gradient to the
+/// recorded argmax position.
+pub fn maxpool2x2_bwd(idx: &[u32], d_out: &[f32], in_len: usize) -> Vec<f32> {
+    debug_assert_eq!(idx.len(), d_out.len());
+    let mut d_x = vec![0.0f32; in_len];
+    for (&i, &dv) in idx.iter().zip(d_out) {
+        d_x[i as usize] += dv;
+    }
+    d_x
+}
+
+/// Dense layer `out = x @ w + b`, optional relu.  `x` is `[bsz, din]`,
+/// `wt` is `[din, dout]` row-major.
+pub fn dense_fwd(
+    x: &[f32],
+    bsz: usize,
+    din: usize,
+    dout: usize,
+    wt: &[f32],
+    bias: &[f32],
+    relu: bool,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), bsz * din);
+    debug_assert_eq!(wt.len(), din * dout);
+    debug_assert_eq!(bias.len(), dout);
+    let mut out = vec![0.0f32; bsz * dout];
+    for n in 0..bsz {
+        let xrow = &x[n * din..(n + 1) * din];
+        let orow = &mut out[n * dout..(n + 1) * dout];
+        orow.copy_from_slice(bias);
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv != 0.0 {
+                let wrow = &wt[i * dout..(i + 1) * dout];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+        if relu {
+            for o in orow.iter_mut() {
+                if *o < 0.0 {
+                    *o = 0.0;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Backward of [`dense_fwd`] without the activation (caller masks first).
+/// Returns `(d_x, d_w, d_b)`.
+pub fn dense_bwd(
+    x: &[f32],
+    bsz: usize,
+    din: usize,
+    dout: usize,
+    wt: &[f32],
+    d_out: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(x.len(), bsz * din);
+    debug_assert_eq!(d_out.len(), bsz * dout);
+    let mut d_x = vec![0.0f32; bsz * din];
+    let mut d_w = vec![0.0f32; wt.len()];
+    let mut d_b = vec![0.0f32; dout];
+    for n in 0..bsz {
+        let dorow = &d_out[n * dout..(n + 1) * dout];
+        for (db, &dv) in d_b.iter_mut().zip(dorow) {
+            *db += dv;
+        }
+        let xrow = &x[n * din..(n + 1) * din];
+        let dxrow = &mut d_x[n * din..(n + 1) * din];
+        for i in 0..din {
+            let wrow = &wt[i * dout..(i + 1) * dout];
+            let mut acc = 0.0f32;
+            for (&dv, &wv) in dorow.iter().zip(wrow) {
+                acc += dv * wv;
+            }
+            dxrow[i] = acc;
+            let xv = xrow[i];
+            if xv != 0.0 {
+                let dwrow = &mut d_w[i * dout..(i + 1) * dout];
+                for (dw, &dv) in dwrow.iter_mut().zip(dorow) {
+                    *dw += xv * dv;
+                }
+            }
+        }
+    }
+    (d_x, d_w, d_b)
+}
+
+/// In-place relu VJP: zero the gradient wherever the recorded
+/// post-activation is not positive.
+pub fn relu_mask(d: &mut [f32], act: &[f32]) {
+    debug_assert_eq!(d.len(), act.len());
+    for (dv, &av) in d.iter_mut().zip(act) {
+        if av <= 0.0 {
+            *dv = 0.0;
+        }
+    }
+}
+
+/// Mean softmax cross-entropy with one-hot labels; returns the scalar loss
+/// and `d loss / d logits` (the `(p - y)/B` cotangent).
+pub fn softmax_ce(logits: &[f32], y1h: &[f32], bsz: usize, classes: usize) -> (f32, Vec<f32>) {
+    debug_assert_eq!(logits.len(), bsz * classes);
+    debug_assert_eq!(y1h.len(), bsz * classes);
+    let mut d = vec![0.0f32; logits.len()];
+    let mut loss = 0.0f64;
+    for n in 0..bsz {
+        let lrow = &logits[n * classes..(n + 1) * classes];
+        let yrow = &y1h[n * classes..(n + 1) * classes];
+        let m = lrow.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let mut se = 0.0f32;
+        for &v in lrow {
+            se += (v - m).exp();
+        }
+        let lse = se.ln();
+        let drow = &mut d[n * classes..(n + 1) * classes];
+        for j in 0..classes {
+            let logp = lrow[j] - m - lse;
+            loss -= (yrow[j] * logp) as f64;
+            drow[j] = (logp.exp() - yrow[j]) / bsz as f32;
+        }
+    }
+    ((loss / bsz as f64) as f32, d)
+}
+
+/// Loss-only variant of [`softmax_ce`] for evaluation paths: identical
+/// arithmetic, no gradient buffer allocated.
+pub fn ce_loss(logits: &[f32], y1h: &[f32], bsz: usize, classes: usize) -> f32 {
+    debug_assert_eq!(logits.len(), bsz * classes);
+    debug_assert_eq!(y1h.len(), bsz * classes);
+    let mut loss = 0.0f64;
+    for n in 0..bsz {
+        let lrow = &logits[n * classes..(n + 1) * classes];
+        let yrow = &y1h[n * classes..(n + 1) * classes];
+        let m = lrow.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let mut se = 0.0f32;
+        for &v in lrow {
+            se += (v - m).exp();
+        }
+        let lse = se.ln();
+        for (l, y) in lrow.iter().zip(yrow) {
+            loss -= (y * (l - m - lse)) as f64;
+        }
+    }
+    (loss / bsz as f64) as f32
+}
+
+/// Count of rows where argmax(logits) == argmax(y1h) (first max wins ties,
+/// matching `jnp.argmax`).
+pub fn correct_count(logits: &[f32], y1h: &[f32], bsz: usize, classes: usize) -> f32 {
+    let argmax = |row: &[f32]| {
+        let mut bi = 0usize;
+        let mut bv = f32::NEG_INFINITY;
+        for (j, &v) in row.iter().enumerate() {
+            if v > bv {
+                bv = v;
+                bi = j;
+            }
+        }
+        bi
+    };
+    let mut correct = 0usize;
+    for n in 0..bsz {
+        let lrow = &logits[n * classes..(n + 1) * classes];
+        let yrow = &y1h[n * classes..(n + 1) * classes];
+        if argmax(lrow) == argmax(yrow) {
+            correct += 1;
+        }
+    }
+    correct as f32
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// Deterministic dyadic-rational generator shared with the JAX golden
+    /// script: exact in f32 on every platform.
+    pub(crate) fn gen(i: u64) -> f32 {
+        let h = (i as u32).wrapping_mul(2654435761);
+        ((h >> 16) & 0xFF) as f32 / 256.0 - 0.5
+    }
+
+    pub(crate) fn gen_vec(offset: u64, n: usize) -> Vec<f32> {
+        (0..n as u64).map(|j| gen(offset + j)).collect()
+    }
+
+    fn fsum(v: &[f32]) -> f64 {
+        v.iter().map(|&x| x as f64).sum()
+    }
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + b.abs())
+    }
+
+    // Golden values from JAX CPU (lax.conv_general_dilated / reduce_window
+    // / log_softmax) on the same generated inputs; offsets follow the
+    // generation order in the golden script.
+    const X_CONV: u64 = 0; // (2,6,5,3) = 180
+    const W_CONV: u64 = 180; // (5,5,3,4) = 300
+    const B_CONV: u64 = 480; // (4,)
+    const DO_CONV: u64 = 484; // (2,6,5,4) = 240
+    const X_POOL: u64 = 724; // (2,4,6,3) = 144
+    const DO_POOL: u64 = 868; // (2,2,3,3) = 36
+    const X_DENSE: u64 = 904; // (3,7) = 21
+    const W_DENSE: u64 = 925; // (7,5) = 35
+    const B_DENSE: u64 = 960; // (5,)
+    const LOGITS: u64 = 965; // (4,10) = 40, scaled by 4
+
+    const CONV_G: Geom = Geom { b: 2, h: 6, w: 5, c: 3 };
+    const POOL_G: Geom = Geom { b: 2, h: 4, w: 6, c: 3 };
+
+    #[test]
+    fn conv2d_fwd_matches_jax() {
+        let x = gen_vec(X_CONV, 180);
+        let w = gen_vec(W_CONV, 300);
+        let b = gen_vec(B_CONV, 4);
+        let out = conv2d_fwd(&x, CONV_G, &w, 5, 4, &b, true);
+        assert!(close(fsum(&out), 46.72308349609375, 1e-4), "sum {}", fsum(&out));
+        // out[0, 0, 1, 2] with OC=4: ((0*6+0)*5+1)*4+2 = 6.
+        assert!((out[6] - 0.755523681640625).abs() < 1e-5, "probe {}", out[6]);
+    }
+
+    #[test]
+    fn conv2d_bwd_matches_jax() {
+        let x = gen_vec(X_CONV, 180);
+        let w = gen_vec(W_CONV, 300);
+        let d_out = gen_vec(DO_CONV, 240);
+        let (d_x, d_w, d_b) = conv2d_bwd(&x, CONV_G, &w, 5, 4, &d_out);
+        assert!(close(fsum(&d_x), 0.0796661376953125, 1e-3), "d_x {}", fsum(&d_x));
+        assert!(close(fsum(&d_w), 1.1000213623046875, 1e-3), "d_w {}", fsum(&d_w));
+        assert!(close(fsum(&d_b), -1.5546875, 1e-3), "d_b {}", fsum(&d_b));
+    }
+
+    #[test]
+    fn maxpool_matches_jax() {
+        let x = gen_vec(X_POOL, 144);
+        let (out, idx) = maxpool2x2_fwd(&x, POOL_G);
+        assert_eq!(out.len(), 2 * 2 * 3 * 3);
+        assert!(close(fsum(&out), 10.84375, 1e-5), "pool {}", fsum(&out));
+        let d_out = gen_vec(DO_POOL, 36);
+        let d_x = maxpool2x2_bwd(&idx, &d_out, x.len());
+        assert!(close(fsum(&d_x), -0.08984375, 1e-4), "pool bwd {}", fsum(&d_x));
+        // Gradient mass is conserved by max-pool routing.
+        assert!((fsum(&d_x) - fsum(&d_out)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn dense_fwd_matches_jax() {
+        let x = gen_vec(X_DENSE, 21);
+        let w = gen_vec(W_DENSE, 35);
+        let b = gen_vec(B_DENSE, 5);
+        let out = dense_fwd(&x, 3, 7, 5, &w, &b, true);
+        assert!(close(fsum(&out), 1.689208984375, 1e-4), "dense {}", fsum(&out));
+    }
+
+    #[test]
+    fn dense_bwd_is_consistent_with_finite_difference() {
+        let x = gen_vec(X_DENSE, 21);
+        let mut w = gen_vec(W_DENSE, 35);
+        let b = gen_vec(B_DENSE, 5);
+        let d_out = gen_vec(40, 15);
+        let (_d_x, d_w, _d_b) = dense_bwd(&x, 3, 7, 5, &w, &d_out);
+        // <d_w, e> ≈ (f(w + h e) - f(w - h e)) / 2h with f = <out, d_out>.
+        let probe = 9usize;
+        let h = 1e-3f32;
+        let dot = |out: &[f32]| -> f64 {
+            out.iter().zip(&d_out).map(|(&o, &d)| (o * d) as f64).sum()
+        };
+        w[probe] += h;
+        let up = dot(&dense_fwd(&x, 3, 7, 5, &w, &b, false));
+        w[probe] -= 2.0 * h;
+        let dn = dot(&dense_fwd(&x, 3, 7, 5, &w, &b, false));
+        let fd = (up - dn) / (2.0 * h as f64);
+        assert!(
+            (fd - d_w[probe] as f64).abs() < 1e-3 * (1.0 + fd.abs()),
+            "fd {fd} vs analytic {}",
+            d_w[probe]
+        );
+    }
+
+    #[test]
+    fn softmax_ce_matches_jax() {
+        let logits: Vec<f32> = gen_vec(LOGITS, 40).iter().map(|&v| v * 4.0).collect();
+        let mut y1h = vec![0.0f32; 40];
+        for n in 0..4 {
+            y1h[n * 10 + n % 10] = 1.0;
+        }
+        let (loss, d) = softmax_ce(&logits, &y1h, 4, 10);
+        assert!(close(loss as f64, 3.093003273010254, 1e-5), "loss {loss}");
+        let sumabs: f64 = d.iter().map(|&v| v.abs() as f64).sum();
+        assert!(close(sumabs, 1.8301606494933367, 1e-4), "grad |sum| {sumabs}");
+        // Each row of (p - y)/B sums to zero.
+        for n in 0..4 {
+            let s: f64 = d[n * 10..(n + 1) * 10].iter().map(|&v| v as f64).sum();
+            assert!(s.abs() < 1e-6, "row {n} grad sum {s}");
+        }
+    }
+
+    #[test]
+    fn ce_loss_equals_softmax_ce_loss() {
+        let logits: Vec<f32> = gen_vec(LOGITS, 40).iter().map(|&v| v * 4.0).collect();
+        let mut y1h = vec![0.0f32; 40];
+        for n in 0..4 {
+            y1h[n * 10 + n % 10] = 1.0;
+        }
+        let (loss, _d) = softmax_ce(&logits, &y1h, 4, 10);
+        assert_eq!(ce_loss(&logits, &y1h, 4, 10), loss);
+    }
+
+    #[test]
+    fn relu_mask_zeroes_nonpositive_lanes() {
+        let mut d = vec![1.0f32, 2.0, 3.0, 4.0];
+        relu_mask(&mut d, &[0.5, 0.0, -1.0, 2.0]);
+        assert_eq!(d, vec![1.0, 0.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn correct_count_ties_take_first_max() {
+        // logits row 0 ties classes 0/1 -> argmax 0; y1h row 0 is class 0.
+        let logits = vec![1.0f32, 1.0, 0.0, 0.0, 0.0, 1.0];
+        let y1h = vec![1.0f32, 0.0, 0.0, 0.0, 0.0, 1.0];
+        assert_eq!(correct_count(&logits, &y1h, 2, 3), 2.0);
+    }
+}

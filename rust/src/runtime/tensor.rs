@@ -1,5 +1,5 @@
-//! Host-side tensor: flat f32 buffer + shape, converting to/from PJRT
-//! Literals at the engine boundary.
+//! Host-side tensor: flat f32 buffer + shape.  With the `pjrt` feature it
+//! also converts to/from PJRT Literals at the engine boundary.
 
 /// A host tensor (f32, row-major).
 #[derive(Clone, Debug, PartialEq)]
@@ -37,6 +37,7 @@ impl Tensor {
         self.data[0]
     }
 
+    #[cfg(feature = "pjrt")]
     pub(crate) fn to_literal(&self) -> anyhow::Result<xla::Literal> {
         let lit = xla::Literal::vec1(&self.data);
         if self.shape.len() == 1 {
@@ -46,6 +47,7 @@ impl Tensor {
         Ok(lit.reshape(&dims)?)
     }
 
+    #[cfg(feature = "pjrt")]
     pub(crate) fn from_literal(lit: &xla::Literal) -> anyhow::Result<Tensor> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -75,6 +77,7 @@ mod tests {
         assert_eq!(Tensor::scalar(2.5).item(), 2.5);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip() {
         let t = Tensor::new((0..6).map(|i| i as f32).collect(), vec![2, 3]);
@@ -83,6 +86,7 @@ mod tests {
         assert_eq!(back, t);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn scalar_literal_roundtrip() {
         // 0-d tensors travel as rank-1 length-1; PJRT outputs of rank 0

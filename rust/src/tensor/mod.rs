@@ -24,7 +24,7 @@ pub fn scale(x: &mut [f32], a: f32) {
 }
 
 /// SGD: w -= lr * g over a whole parameter set.
-pub fn sgd_step(w: &mut Params, g: &[Vec<f32>], lr: f32) {
+pub fn sgd_step(w: &mut [Vec<f32>], g: &[Vec<f32>], lr: f32) {
     assert_eq!(w.len(), g.len(), "sgd param-count mismatch");
     for (wi, gi) in w.iter_mut().zip(g) {
         saxpy(wi, -lr, gi);
@@ -61,7 +61,7 @@ pub fn weighted_sum_flat(parts: &[&[f32]], weights: &[f64]) -> Vec<f32> {
 }
 
 /// L2 norm squared across a parameter set.
-pub fn norm2(params: &Params) -> f64 {
+pub fn norm2(params: &[Vec<f32>]) -> f64 {
     params
         .iter()
         .flat_map(|buf| buf.iter())
@@ -70,7 +70,7 @@ pub fn norm2(params: &Params) -> f64 {
 }
 
 /// Max |a - b| across two parameter sets (used by equivalence tests).
-pub fn max_abs_diff(a: &Params, b: &Params) -> f64 {
+pub fn max_abs_diff(a: &[Vec<f32>], b: &[Vec<f32>]) -> f64 {
     assert_eq!(a.len(), b.len());
     let mut m = 0.0f64;
     for (ai, bi) in a.iter().zip(b) {
@@ -83,7 +83,7 @@ pub fn max_abs_diff(a: &Params, b: &Params) -> f64 {
 }
 
 /// Total element count of a parameter set.
-pub fn num_elems(params: &Params) -> usize {
+pub fn num_elems(params: &[Vec<f32>]) -> usize {
     params.iter().map(|b| b.len()).sum()
 }
 

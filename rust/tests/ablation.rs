@@ -1,19 +1,13 @@
 //! Ablation tests: the two readings of SFL-GA's client update (shared w^c
 //! per eq 19 vs literal per-client drift) and heterogeneous client compute
-//! (per-client constraint 30b).
+//! (per-client constraint 30b).  All run on the native backend + built-in
+//! manifest.
 
-use std::path::{Path, PathBuf};
-
-use sfl_ga::coordinator::timing::{round_latency, AllocPolicy};
+use sfl_ga::coordinator::timing::{AllocPolicy, round_latency};
 use sfl_ga::coordinator::{SchemeKind, TrainConfig, Trainer};
 use sfl_ga::latency::ComputeConfig;
 use sfl_ga::model::Manifest;
 use sfl_ga::wireless::{Channel, NetConfig};
-
-fn artifacts() -> Option<PathBuf> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    dir.join("manifest.json").exists().then_some(dir)
-}
 
 #[test]
 fn drift_scheme_parses_and_is_not_in_paper_set() {
@@ -24,16 +18,14 @@ fn drift_scheme_parses_and_is_not_in_paper_set() {
 /// The drift ablation exchanges exactly what SFL-GA exchanges.
 #[test]
 fn drift_comm_equals_sfl_ga() {
-    let Some(dir) = artifacts() else { return };
-    let manifest = Manifest::load(&dir).unwrap();
+    let manifest = Manifest::builtin();
     let spec = manifest.for_dataset("mnist").unwrap();
     let comp = ComputeConfig::default();
+    let comm = |scheme: SchemeKind, v: usize| {
+        sfl_ga::coordinator::comm::round_comm(scheme, spec, spec.cut(v), &comp, 10, 1)
+    };
     for v in 1..=4 {
-        let a = sfl_ga::coordinator::comm::round_comm(
-            SchemeKind::SflGa, spec, spec.cut(v), &comp, 10, 1);
-        let b = sfl_ga::coordinator::comm::round_comm(
-            SchemeKind::SflGaDrift, spec, spec.cut(v), &comp, 10, 1);
-        assert_eq!(a, b);
+        assert_eq!(comm(SchemeKind::SflGa, v), comm(SchemeKind::SflGaDrift, v));
     }
 }
 
@@ -41,20 +33,20 @@ fn drift_comm_equals_sfl_ga() {
 /// actually drifts (nonzero replica divergence) while SFL-GA does not.
 #[test]
 fn drift_ablation_diverges_where_sfl_ga_does_not() {
-    let Some(dir) = artifacts() else { return };
-    let manifest = Manifest::load(&dir).unwrap();
+    let manifest = Manifest::builtin_with_batches(8, 32);
     let run = |scheme: SchemeKind| {
         let cfg = TrainConfig {
             scheme,
             num_clients: 4,
-            rounds: 3,
+            rounds: 2,
             eval_every: 10,
-            samples_per_client: 64,
+            samples_per_client: 24,
+            test_samples: 32,
             alloc: AllocPolicy::Equal,
             seed: 5,
             ..Default::default()
         };
-        let mut t = Trainer::new(&dir, &manifest, cfg).unwrap();
+        let mut t = Trainer::native(&manifest, cfg).unwrap();
         t.run(2).unwrap();
         t.client_drift(2)
     };
@@ -87,21 +79,21 @@ fn client_flops_spread_is_bounded_and_deterministic() {
 /// optimal allocator partially compensates relative to equal split.
 #[test]
 fn heterogeneity_slows_rounds_and_allocator_compensates() {
-    let Some(dir) = artifacts() else { return };
-    let manifest = Manifest::load(&dir).unwrap();
+    let manifest = Manifest::builtin();
     let spec = manifest.for_dataset("mnist").unwrap().clone();
     let net = NetConfig::default();
     let mut ch = Channel::new(net.clone(), 10, 3);
     let st = ch.draw_round();
     let homo = ComputeConfig::default();
     let hetero = ComputeConfig { f_client_spread: 0.6, ..Default::default() };
+    let cut = spec.cut(2);
+    let lat = |comp: &ComputeConfig, policy: AllocPolicy| {
+        round_latency(SchemeKind::SflGa, &spec, cut, &net, comp, &st, policy, 1)
+    };
 
-    let l_homo = round_latency(
-        SchemeKind::SflGa, &spec, spec.cut(2), &net, &homo, &st, AllocPolicy::Equal, 1);
-    let l_het_eq = round_latency(
-        SchemeKind::SflGa, &spec, spec.cut(2), &net, &hetero, &st, AllocPolicy::Equal, 1);
-    let l_het_opt = round_latency(
-        SchemeKind::SflGa, &spec, spec.cut(2), &net, &hetero, &st, AllocPolicy::Optimal, 1);
+    let l_homo = lat(&homo, AllocPolicy::Equal);
+    let l_het_eq = lat(&hetero, AllocPolicy::Equal);
+    let l_het_opt = lat(&hetero, AllocPolicy::Optimal);
 
     assert!(
         l_het_eq.total() > l_homo.total(),

@@ -1,25 +1,17 @@
 //! Convergence-theory checks (Theorem 2 / Remark 1): properties of the
 //! bound the paper derives, evaluated on the implemented Γ, and the
-//! empirical counterpart measured on short training runs.
-
-use std::path::{Path, PathBuf};
+//! empirical counterpart measured on short native-backend training runs.
 
 use sfl_ga::ccc::gamma_of_phi;
 use sfl_ga::coordinator::{AllocPolicy, SchemeKind, TrainConfig, Trainer};
 use sfl_ga::model::Manifest;
-
-fn artifacts() -> Option<PathBuf> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    dir.join("manifest.json").exists().then_some(dir)
-}
 
 /// Theorem 2's bound: the cutting-point term (4/T)ΣΓ(φ_t(v)) is monotone
 /// non-decreasing in v for any round sequence — smaller client models give
 /// a tighter bound (Remark 1).
 #[test]
 fn theorem2_cut_term_monotone() {
-    let Some(dir) = artifacts() else { return };
-    let manifest = Manifest::load(&dir).unwrap();
+    let manifest = Manifest::builtin();
     for key in ["28x28x1", "32x32x3"] {
         let spec = &manifest.shapes[key];
         let term = |v: usize| 4.0 * gamma_of_phi(spec, v, 10.0);
@@ -50,19 +42,20 @@ fn variance_term_minimized_by_equal_weights() {
 /// This is the mechanism behind Fig. 3.
 #[test]
 fn empirical_smaller_cut_converges_no_worse() {
-    let Some(dir) = artifacts() else { return };
-    let manifest = Manifest::load(&dir).unwrap();
+    let manifest = Manifest::builtin_with_batches(8, 32);
     let loss_at = |cut: usize| {
         let cfg = TrainConfig {
             scheme: SchemeKind::SflGa,
-            rounds: 12,
-            eval_every: 12,
-            samples_per_client: 128,
+            num_clients: 3,
+            rounds: 5,
+            eval_every: 5,
+            samples_per_client: 48,
+            test_samples: 32,
             seed: 11,
             alloc: AllocPolicy::Equal,
             ..Default::default()
         };
-        let mut t = Trainer::new(&dir, &manifest, cfg).unwrap();
+        let mut t = Trainer::native(&manifest, cfg).unwrap();
         let stats = t.run(cut).unwrap();
         stats.last().unwrap().test.unwrap().0
     };

@@ -1,0 +1,51 @@
+//! Deterministic-seeding guarantee: two [`Trainer`] runs with the same
+//! `TrainConfig { seed, .. }` on the native backend must produce
+//! BITWISE-identical eval curves.  This guards the whole seeded stack —
+//! `util::rng::Pcg`, `data::generate`/`partition`, `Batcher` ordering,
+//! `data::init::init_params`, the channel draws and the backend itself —
+//! against accidental nondeterminism (e.g. iteration-order or threading
+//! changes).
+
+use sfl_ga::coordinator::{AllocPolicy, SchemeKind, TrainConfig, Trainer};
+use sfl_ga::model::Manifest;
+
+/// Full eval curve as raw bits: (round, train_loss, test_loss, test_acc).
+fn eval_curve(seed: u64, scheme: SchemeKind) -> Vec<(usize, u64, u64, u64)> {
+    let manifest = Manifest::builtin_with_batches(8, 32);
+    let cfg = TrainConfig {
+        scheme,
+        num_clients: 3,
+        rounds: 4,
+        eval_every: 2,
+        samples_per_client: 24,
+        test_samples: 32,
+        seed,
+        alloc: AllocPolicy::Equal,
+        ..Default::default()
+    };
+    let mut t = Trainer::native(&manifest, cfg).unwrap();
+    t.run(2)
+        .unwrap()
+        .into_iter()
+        .filter_map(|s| {
+            s.test.map(|(tl, ta)| (s.round, s.train_loss.to_bits(), tl.to_bits(), ta.to_bits()))
+        })
+        .collect()
+}
+
+#[test]
+fn same_seed_gives_bitwise_identical_eval_curves() {
+    for scheme in [SchemeKind::SflGa, SchemeKind::Fl] {
+        let a = eval_curve(7, scheme);
+        let b = eval_curve(7, scheme);
+        assert!(!a.is_empty(), "no eval points recorded");
+        assert_eq!(a, b, "{scheme:?}: same seed must reproduce bit-identically");
+    }
+}
+
+#[test]
+fn different_seed_gives_different_curves() {
+    let a = eval_curve(7, SchemeKind::SflGa);
+    let c = eval_curve(8, SchemeKind::SflGa);
+    assert_ne!(a, c, "different seeds should not coincide");
+}

@@ -1,28 +1,45 @@
-//! Integration tests across the whole stack: PJRT runtime + manifest +
-//! data + coordinator.  These run against the real AOT artifacts and are
-//! skipped (not failed) when `make artifacts` hasn't been run.
-
-use std::path::{Path, PathBuf};
+//! Integration tests across the whole stack: runtime + manifest + data +
+//! coordinator.  They run against the NATIVE backend and the built-in
+//! manifest, so they execute on every clean checkout — no artifacts, no
+//! Python.  Small batches keep the conv compute cheap.
+//!
+//! The PJRT mirror of the gradient-equivalence test lives behind the
+//! `pjrt` feature at the bottom of this file.
 
 use sfl_ga::coordinator::{AllocPolicy, SchemeKind, TrainConfig, Trainer};
 use sfl_ga::data::init::init_params;
-use sfl_ga::data::{generate, Batcher};
+use sfl_ga::data::{Batcher, generate};
 use sfl_ga::model::Manifest;
 use sfl_ga::runtime::ModelRuntime;
 use sfl_ga::tensor;
 
-fn artifacts() -> Option<PathBuf> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    dir.join("manifest.json").exists().then_some(dir)
+/// Built-in manifest with test-sized batches (train 8, eval 32).
+fn manifest() -> Manifest {
+    Manifest::builtin_with_batches(8, 32)
 }
 
-/// rust-side mirror of python's split-equivalence test, through PJRT:
-/// client_fwd ∘ server_grad ∘ client_grad must equal full_grad.
+/// Small-but-real training config: 64 test samples, 48 per client.
+fn test_cfg(scheme: SchemeKind, num_clients: usize, rounds: usize) -> TrainConfig {
+    TrainConfig {
+        scheme,
+        num_clients,
+        rounds,
+        eval_every: rounds,
+        samples_per_client: 48,
+        test_samples: 64,
+        alloc: AllocPolicy::Equal,
+        ..Default::default()
+    }
+}
+
+/// Mirror of python's split-equivalence test, through the native backend:
+/// client_fwd ∘ server_grad ∘ client_grad must equal full_grad at every
+/// cut point.  This is the invariant that makes split training "the same
+/// computation" as centralized training (paper eq 6 vs eq 19 discussion).
 #[test]
-fn split_gradients_equal_full_through_pjrt() {
-    let Some(dir) = artifacts() else { return };
-    let manifest = Manifest::load(&dir).unwrap();
-    let rt = ModelRuntime::load(&dir, &manifest, "mnist").unwrap();
+fn split_gradients_equal_full_through_native() {
+    let manifest = manifest();
+    let rt = ModelRuntime::native(&manifest, "mnist").unwrap();
     let spec = rt.spec().clone();
     let params = init_params(&spec, 42);
     let ds = generate(&spec, "mnist", 64, 9);
@@ -30,6 +47,7 @@ fn split_gradients_equal_full_through_pjrt() {
     let (x, y) = ds.batch(&idx);
 
     let (loss_full, g_full) = rt.full_grad(&params, &x, &y).unwrap();
+    assert!(loss_full.is_finite());
 
     for cut in 1..=4 {
         let nc = spec.cut(cut).client_params;
@@ -40,13 +58,13 @@ fn split_gradients_equal_full_through_pjrt() {
         let g_wc = rt.client_grad(cut, &wc, &x, &g_s).unwrap();
 
         assert!(
-            (loss_full - loss_split).abs() < 1e-4 * (1.0 + loss_full.abs()),
+            (loss_full - loss_split).abs() < 1e-6 * (1.0 + loss_full.abs()),
             "cut {cut}: loss {loss_split} != {loss_full}"
         );
         let mut g_split = g_wc.clone();
         g_split.extend(g_ws.iter().cloned());
         let diff = tensor::max_abs_diff(&g_split, &g_full);
-        assert!(diff < 2e-3, "cut {cut}: max grad diff {diff}");
+        assert!(diff == 0.0, "cut {cut}: max grad diff {diff}");
     }
 }
 
@@ -55,21 +73,11 @@ fn split_gradients_equal_full_through_pjrt() {
 /// the same model trajectory.
 #[test]
 fn single_client_schemes_coincide() {
-    let Some(dir) = artifacts() else { return };
-    let manifest = Manifest::load(&dir).unwrap();
+    let manifest = manifest();
     let mut finals = Vec::new();
     for scheme in [SchemeKind::SflGa, SchemeKind::Sfl, SchemeKind::Psl] {
-        let cfg = TrainConfig {
-            scheme,
-            num_clients: 1,
-            rounds: 3,
-            eval_every: 3,
-            samples_per_client: 64,
-            seed: 5,
-            alloc: AllocPolicy::Equal,
-            ..Default::default()
-        };
-        let mut t = Trainer::new(&dir, &manifest, cfg).unwrap();
+        let cfg = TrainConfig { seed: 5, ..test_cfg(scheme, 1, 2) };
+        let mut t = Trainer::native(&manifest, cfg).unwrap();
         let stats = t.run(2).unwrap();
         let (loss, acc) = stats.last().unwrap().test.unwrap();
         finals.push((t.global_params(2), loss, acc));
@@ -81,46 +89,13 @@ fn single_client_schemes_coincide() {
     }
 }
 
-/// Deterministic: same seed ⇒ identical metrics; different seed ⇒ not.
-#[test]
-fn training_is_seed_deterministic() {
-    let Some(dir) = artifacts() else { return };
-    let manifest = Manifest::load(&dir).unwrap();
-    let run = |seed: u64| {
-        let cfg = TrainConfig {
-            rounds: 2,
-            eval_every: 2,
-            samples_per_client: 64,
-            seed,
-            alloc: AllocPolicy::Equal,
-            ..Default::default()
-        };
-        let mut t = Trainer::new(&dir, &manifest, cfg).unwrap();
-        let stats = t.run(1).unwrap();
-        (stats.last().unwrap().train_loss, stats.last().unwrap().test.unwrap())
-    };
-    let a = run(7);
-    let b = run(7);
-    let c = run(8);
-    assert_eq!(a, b);
-    assert_ne!(a, c);
-}
-
 /// SFL-GA's shared-client-model invariant: zero drift across replicas.
 #[test]
 fn sfl_ga_clients_stay_identical() {
-    let Some(dir) = artifacts() else { return };
-    let manifest = Manifest::load(&dir).unwrap();
-    let cfg = TrainConfig {
-        scheme: SchemeKind::SflGa,
-        num_clients: 4,
-        rounds: 3,
-        eval_every: 10,
-        samples_per_client: 64,
-        alloc: AllocPolicy::Equal,
-        ..Default::default()
-    };
-    let mut t = Trainer::new(&dir, &manifest, cfg).unwrap();
+    let manifest = manifest();
+    let mut cfg = test_cfg(SchemeKind::SflGa, 4, 2);
+    cfg.eval_every = 10;
+    let mut t = Trainer::native(&manifest, cfg).unwrap();
     t.run(2).unwrap();
     assert_eq!(t.client_drift(2), 0.0, "SFL-GA replicas must remain identical");
 }
@@ -128,19 +103,11 @@ fn sfl_ga_clients_stay_identical() {
 /// PSL clients drift (no aggregation), SFL clients re-sync every round.
 #[test]
 fn psl_drifts_sfl_resyncs() {
-    let Some(dir) = artifacts() else { return };
-    let manifest = Manifest::load(&dir).unwrap();
+    let manifest = manifest();
     let drift = |scheme: SchemeKind| {
-        let cfg = TrainConfig {
-            scheme,
-            num_clients: 4,
-            rounds: 3,
-            eval_every: 10,
-            samples_per_client: 64,
-            alloc: AllocPolicy::Equal,
-            ..Default::default()
-        };
-        let mut t = Trainer::new(&dir, &manifest, cfg).unwrap();
+        let mut cfg = test_cfg(scheme, 4, 2);
+        cfg.eval_every = 10;
+        let mut t = Trainer::native(&manifest, cfg).unwrap();
         t.run(2).unwrap();
         t.client_drift(2)
     };
@@ -151,17 +118,9 @@ fn psl_drifts_sfl_resyncs() {
 /// Short SFL-GA training improves over the initial model.
 #[test]
 fn sfl_ga_learns_in_ten_rounds() {
-    let Some(dir) = artifacts() else { return };
-    let manifest = Manifest::load(&dir).unwrap();
-    let cfg = TrainConfig {
-        rounds: 10,
-        eval_every: 10,
-        samples_per_client: 128,
-        alloc: AllocPolicy::Equal,
-        seed: 3,
-        ..Default::default()
-    };
-    let mut t = Trainer::new(&dir, &manifest, cfg).unwrap();
+    let manifest = manifest();
+    let cfg = TrainConfig { seed: 3, lr: 0.05, ..test_cfg(SchemeKind::SflGa, 4, 10) };
+    let mut t = Trainer::native(&manifest, cfg).unwrap();
     let (loss0, acc0) = t.evaluate(1).unwrap();
     let stats = t.run(1).unwrap();
     let (loss1, acc1) = stats.last().unwrap().test.unwrap();
@@ -173,18 +132,12 @@ fn sfl_ga_learns_in_ten_rounds() {
 /// traffic is strictly below PSL's, which is below SFL's (same workload).
 #[test]
 fn cumulative_comm_ordering() {
-    let Some(dir) = artifacts() else { return };
-    let manifest = Manifest::load(&dir).unwrap();
+    let manifest = manifest();
     let total = |scheme: SchemeKind| {
-        let cfg = TrainConfig {
-            scheme,
-            rounds: 2,
-            eval_every: 10,
-            samples_per_client: 64,
-            alloc: AllocPolicy::Equal,
-            ..Default::default()
-        };
-        let mut t = Trainer::new(&dir, &manifest, cfg).unwrap();
+        let mut cfg = test_cfg(scheme, 4, 2);
+        cfg.eval_every = 10;
+        cfg.samples_per_client = 16;
+        let mut t = Trainer::native(&manifest, cfg).unwrap();
         t.run(2)
             .unwrap()
             .iter()
@@ -200,17 +153,9 @@ fn cumulative_comm_ordering() {
 /// FL baseline trains through the same runtime.
 #[test]
 fn fl_baseline_learns() {
-    let Some(dir) = artifacts() else { return };
-    let manifest = Manifest::load(&dir).unwrap();
-    let cfg = TrainConfig {
-        scheme: SchemeKind::Fl,
-        rounds: 8,
-        eval_every: 8,
-        samples_per_client: 128,
-        alloc: AllocPolicy::Equal,
-        ..Default::default()
-    };
-    let mut t = Trainer::new(&dir, &manifest, cfg).unwrap();
+    let manifest = manifest();
+    let cfg = TrainConfig { lr: 0.05, ..test_cfg(SchemeKind::Fl, 2, 6) };
+    let mut t = Trainer::native(&manifest, cfg).unwrap();
     let (loss0, _) = t.evaluate(1).unwrap();
     let stats = t.run(1).unwrap();
     let (loss1, _) = stats.last().unwrap().test.unwrap();
@@ -220,16 +165,9 @@ fn fl_baseline_learns() {
 /// Dynamic cut switching (Algorithm 1 mode) keeps training stable.
 #[test]
 fn dynamic_cut_switching_is_stable() {
-    let Some(dir) = artifacts() else { return };
-    let manifest = Manifest::load(&dir).unwrap();
-    let cfg = TrainConfig {
-        rounds: 6,
-        eval_every: 6,
-        samples_per_client: 64,
-        alloc: AllocPolicy::Equal,
-        ..Default::default()
-    };
-    let mut t = Trainer::new(&dir, &manifest, cfg).unwrap();
+    let manifest = manifest();
+    let cfg = test_cfg(SchemeKind::SflGa, 2, 6);
+    let mut t = Trainer::native(&manifest, cfg).unwrap();
     let cuts = [1usize, 3, 2, 4, 2, 1];
     let mut last = None;
     for &v in &cuts {
@@ -245,8 +183,7 @@ fn dynamic_cut_switching_is_stable() {
 /// Batcher + dataset wiring: every client sees only its own shard.
 #[test]
 fn batcher_respects_shards() {
-    let Some(dir) = artifacts() else { return };
-    let manifest = Manifest::load(&dir).unwrap();
+    let manifest = manifest();
     let spec = manifest.for_dataset("mnist").unwrap().clone();
     let ds = generate(&spec, "mnist", 100, 4);
     let shards = sfl_ga::data::partition(&ds, 4, None, 2);
@@ -257,5 +194,65 @@ fn batcher_respects_shards() {
                 assert!(shard.contains(&i));
             }
         }
+    }
+}
+
+/// The PJRT mirror: same invariant through the XLA-compiled artifacts.
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use std::path::{Path, PathBuf};
+    use super::*;
+
+    fn artifacts() -> Option<PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn split_gradients_equal_full_through_pjrt() {
+        let Some(dir) = artifacts() else { return };
+        let manifest = Manifest::load(&dir).unwrap();
+        let rt = ModelRuntime::load(&dir, &manifest, "mnist").unwrap();
+        let spec = rt.spec().clone();
+        let params = init_params(&spec, 42);
+        let ds = generate(&spec, "mnist", 64, 9);
+        let idx: Vec<usize> = (0..spec.train_batch).collect();
+        let (x, y) = ds.batch(&idx);
+
+        let (loss_full, g_full) = rt.full_grad(&params, &x, &y).unwrap();
+        for cut in 1..=4 {
+            let nc = spec.cut(cut).client_params;
+            let wc = params[..nc].to_vec();
+            let ws = params[nc..].to_vec();
+            let smashed = rt.client_fwd(cut, &wc, &x).unwrap();
+            let (loss_split, g_ws, g_s) = rt.server_grad(cut, &ws, &smashed, &y).unwrap();
+            let g_wc = rt.client_grad(cut, &wc, &x, &g_s).unwrap();
+            assert!(
+                (loss_full - loss_split).abs() < 1e-4 * (1.0 + loss_full.abs()),
+                "cut {cut}: loss {loss_split} != {loss_full}"
+            );
+            let mut g_split = g_wc.clone();
+            g_split.extend(g_ws.iter().cloned());
+            let diff = tensor::max_abs_diff(&g_split, &g_full);
+            assert!(diff < 2e-3, "cut {cut}: max grad diff {diff}");
+        }
+    }
+
+    /// Native and PJRT must agree on the same inputs (backend parity).
+    #[test]
+    fn native_and_pjrt_agree_on_full_grad() {
+        let Some(dir) = artifacts() else { return };
+        let manifest = Manifest::load(&dir).unwrap();
+        let pjrt = ModelRuntime::load(&dir, &manifest, "mnist").unwrap();
+        let native = ModelRuntime::native(&manifest, "mnist").unwrap();
+        let spec = pjrt.spec().clone();
+        let params = init_params(&spec, 11);
+        let ds = generate(&spec, "mnist", 64, 13);
+        let idx: Vec<usize> = (0..spec.train_batch).collect();
+        let (x, y) = ds.batch(&idx);
+        let (lp, gp) = pjrt.full_grad(&params, &x, &y).unwrap();
+        let (ln, gn) = native.full_grad(&params, &x, &y).unwrap();
+        assert!((lp - ln).abs() < 1e-4 * (1.0 + lp.abs()));
+        assert!(tensor::max_abs_diff(&gp, &gn) < 2e-3);
     }
 }

@@ -1,0 +1,140 @@
+//! Vendored minimal drop-in for the `anyhow` crate.
+//!
+//! The build must succeed from a clean checkout with no crates.io access
+//! (CI runners and the offline dev container alike), so this workspace
+//! vendors the subset of `anyhow` the codebase actually uses:
+//!
+//! * [`Error`] — an opaque, `Send + Sync` error value built from a message
+//!   or from any `std::error::Error` (source chains are flattened eagerly).
+//! * [`Result<T>`] — alias with the error type defaulted.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros.
+//!
+//! Like the real crate, [`Error`] deliberately does NOT implement
+//! `std::error::Error`: that keeps the blanket `From<E: std::error::Error>`
+//! conversion coherent with the reflexive `From<Error> for Error`, which is
+//! what makes `?` work uniformly.
+
+use std::fmt;
+
+/// Opaque error value: a message, with any source chain already flattened
+/// into it ("outer: middle: root").
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // The chain is pre-flattened, so `{}` and `{:#}` coincide.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `Result` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn anyhow_formats_and_captures() {
+        let name = "x";
+        let e = anyhow!("unknown computation '{name}'");
+        assert_eq!(e.to_string(), "unknown computation 'x'");
+        let e = anyhow!("{} + {}", 1, 2);
+        assert_eq!(e.to_string(), "1 + 2");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn open() -> crate::Result<String> {
+            let s = std::fs::read_to_string("/nonexistent/definitely/missing")?;
+            Ok(s)
+        }
+        assert!(open().is_err());
+    }
+
+    #[test]
+    fn ensure_with_and_without_message() {
+        fn check(v: usize) -> crate::Result<()> {
+            ensure!(v > 0);
+            ensure!(v < 10, "v {v} too large");
+            Ok(())
+        }
+        assert!(check(5).is_ok());
+        assert_eq!(check(0).unwrap_err().to_string(), "condition failed: v > 0");
+        assert_eq!(check(11).unwrap_err().to_string(), "v 11 too large");
+    }
+
+    #[test]
+    fn bail_returns_error() {
+        fn f() -> crate::Result<()> {
+            bail!("nope: {}", 3);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope: 3");
+    }
+}
