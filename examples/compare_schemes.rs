@@ -24,6 +24,9 @@ fn main() -> anyhow::Result<()> {
             rounds,
             eval_every: rounds, // evaluate once at the end
             seed: args.parse_or("seed", 17u64)?,
+            // Every scheme runs through the same parallel round engine
+            // (--threads N; 0 = auto); the table is thread-count invariant.
+            threads: args.threads()?,
             ..Default::default()
         };
         let mut trainer = Trainer::native(&manifest, cfg)?;

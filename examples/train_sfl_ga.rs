@@ -24,14 +24,18 @@ fn main() -> anyhow::Result<()> {
         eval_every: 10,
         samples_per_client: 512,
         seed: args.parse_or("seed", 17u64)?,
+        // Parallel round engine (--threads N; 0 = auto, 1 = serial).
+        // The loss/accuracy series is bitwise identical either way.
+        threads: args.threads()?,
         ..Default::default()
     };
 
     println!("# SFL-GA end-to-end training driver");
     println!("# dataset={dataset} cut=v{cut} clients={} rounds={rounds}", cfg.num_clients);
-    println!("# round,train_loss,test_loss,test_acc,cum_comm_mb,cum_latency_s");
     let t0 = std::time::Instant::now();
     let mut trainer = Trainer::native(&manifest, cfg)?;
+    println!("# round engine: {} worker thread(s)", trainer.threads());
+    println!("# round,train_loss,test_loss,test_acc,cum_comm_mb,cum_latency_s");
     let mut metrics = RunMetrics::new(SchemeKind::SflGa, &dataset);
     for stats in trainer.run(cut)? {
         metrics.push(&stats);

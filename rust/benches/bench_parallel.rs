@@ -1,0 +1,70 @@
+//! Parallel round-engine scaling: real wall-clock of one communication
+//! round at threads ∈ {1, 2, 4} for SFL-GA and FL on the builtin manifest
+//! (native backend, default paper batches), plus the measured speedup vs
+//! the serial engine.  Emits a machine-readable summary to
+//! `BENCH_parallel.json` (override the path with `SFLGA_BENCH_OUT`) to
+//! seed the perf trajectory across PRs.
+//!
+//! Training results are bitwise identical at every thread count
+//! (`tests/determinism.rs`), so this measures pure systems speedup.
+
+use std::collections::BTreeMap;
+
+use sfl_ga::benchlib::bench;
+use sfl_ga::coordinator::{SchemeKind, TrainConfig, Trainer};
+use sfl_ga::model::Manifest;
+use sfl_ga::util::json::Json;
+
+const CUT: usize = 2;
+const CLIENTS: usize = 8;
+const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::builtin();
+    let mut schemes_json: BTreeMap<String, Json> = BTreeMap::new();
+    println!("== parallel round engine: one-round wall-clock ==");
+    for scheme in [SchemeKind::SflGa, SchemeKind::Fl] {
+        let mut per_thread: BTreeMap<String, Json> = BTreeMap::new();
+        let mut serial_mean_ns = 0.0;
+        for threads in THREAD_COUNTS {
+            let cfg = TrainConfig {
+                scheme,
+                threads,
+                rounds: 1_000_000, // never reached; we drive rounds manually
+                eval_every: usize::MAX,
+                samples_per_client: 64,
+                num_clients: CLIENTS,
+                ..Default::default()
+            };
+            let mut trainer = Trainer::native(&manifest, cfg)?;
+            let r = bench(&format!("round/{}/threads={threads}", scheme.name()), 1, 4, || {
+                let st = trainer.draw_channel();
+                trainer.run_round(CUT, &st).unwrap().train_loss
+            });
+            if threads == 1 {
+                serial_mean_ns = r.mean_ns;
+            }
+            let speedup = serial_mean_ns / r.mean_ns;
+            println!("    -> speedup vs threads=1: {speedup:.2}x");
+            let mut entry = BTreeMap::new();
+            entry.insert("mean_ns".to_string(), Json::Num(r.mean_ns));
+            entry.insert("p50_ns".to_string(), Json::Num(r.p50_ns));
+            entry.insert("min_ns".to_string(), Json::Num(r.min_ns));
+            entry.insert("speedup_vs_serial".to_string(), Json::Num(speedup));
+            per_thread.insert(format!("threads_{threads}"), Json::Obj(entry));
+        }
+        schemes_json.insert(scheme.name().to_string(), Json::Obj(per_thread));
+    }
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("parallel_round_engine".to_string()));
+    root.insert("cut".to_string(), Json::Num(CUT as f64));
+    root.insert("num_clients".to_string(), Json::Num(CLIENTS as f64));
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    root.insert("host_parallelism".to_string(), Json::Num(host as f64));
+    root.insert("schemes".to_string(), Json::Obj(schemes_json));
+    let out = std::env::var("SFLGA_BENCH_OUT").unwrap_or_else(|_| "BENCH_parallel.json".into());
+    std::fs::write(&out, Json::Obj(root).to_string() + "\n")?;
+    println!("summary written to {out}");
+    Ok(())
+}

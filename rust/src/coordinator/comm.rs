@@ -17,6 +17,7 @@
 use crate::latency::ComputeConfig;
 use crate::model::{CutSpec, ShapeSpec};
 
+use super::plan::{CotangentRoute, RoundPlan};
 use super::SchemeKind;
 
 /// One round's communication volume in bits.
@@ -37,6 +38,8 @@ impl RoundComm {
 }
 
 /// Bits for one round of `scheme` at cut v with `n` clients and τ epochs.
+/// Volumes derive from the scheme's [`RoundPlan`]: the cotangent route
+/// sets the downlink shape, the client-sync policy adds the w^c exchange.
 pub fn round_comm(
     scheme: SchemeKind,
     spec: &ShapeSpec,
@@ -51,21 +54,26 @@ pub fn round_comm(
     let labels = crate::latency::label_bits(spec, cfg);
     let wc_bits = crate::latency::model_bits(cut.phi, cfg);
     let w_bits = crate::latency::model_bits(spec.total_params, cfg);
-    match scheme {
-        // The drift ablation exchanges exactly what SFL-GA exchanges.
-        SchemeKind::SflGa | SchemeKind::SflGaDrift => RoundComm {
-            uplink_bits: tau * n * (smashed + labels),
-            downlink_bits: tau * smashed,
-        },
-        SchemeKind::Sfl => RoundComm {
-            uplink_bits: tau * n * (smashed + labels) + n * wc_bits,
-            downlink_bits: tau * n * smashed + wc_bits,
-        },
-        SchemeKind::Psl => RoundComm {
-            uplink_bits: tau * n * (smashed + labels),
-            downlink_bits: tau * n * smashed,
-        },
-        SchemeKind::Fl => RoundComm {
+    let plan = scheme.plan();
+    match plan {
+        RoundPlan::Split { route, .. } => {
+            // Every split scheme uploads τ·Σ_n (smashed + labels).
+            let mut up = tau * n * (smashed + labels);
+            // Broadcast sends ONE aggregated cotangent (eq 5); unicast
+            // repeats it per client — the gradient-aggregation saving.
+            let mut down = match route {
+                CotangentRoute::Broadcast => tau * smashed,
+                CotangentRoute::Unicast => tau * n * smashed,
+            };
+            if plan.pays_client_fedavg() {
+                // SFL's synchronous client-model exchange (removed by the
+                // shared-step plan of eq 19).
+                up += n * wc_bits;
+                down += wc_bits;
+            }
+            RoundComm { uplink_bits: up, downlink_bits: down }
+        }
+        RoundPlan::Full => RoundComm {
             uplink_bits: n * w_bits,
             downlink_bits: w_bits,
         },

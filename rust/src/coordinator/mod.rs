@@ -1,14 +1,18 @@
 //! The paper's training frameworks: SFL-GA plus the SFL / PSL / FL
-//! baselines, with communication accounting ([`comm`]), simulated wireless
-//! timing ([`timing`]) and metrics collection ([`metrics`]).
+//! baselines, all executed by one phased round engine ([`trainer`])
+//! configured per scheme by a [`plan::RoundPlan`] policy, with
+//! communication accounting ([`comm`]), simulated wireless timing
+//! ([`timing`]) and metrics collection ([`metrics`]).
 
 pub mod comm;
 pub mod metrics;
+pub mod plan;
 pub mod timing;
 pub mod trainer;
 
 pub use comm::RoundComm;
 pub use metrics::RunMetrics;
+pub use plan::{ClientSync, CotangentRoute, RoundPlan};
 pub use timing::{AllocPolicy, RoundLatency};
 pub use trainer::{RoundStats, TrainConfig, Trainer};
 

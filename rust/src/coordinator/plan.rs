@@ -1,0 +1,116 @@
+//! The round *plan*: a small per-scheme policy object that configures the
+//! single phased round executor in [`super::trainer`].
+//!
+//! Every scheme the paper evaluates is the same five-phase round —
+//! *client-fwd fan-out → server reduce → cotangent routing → client-bwd
+//! fan-out → aggregate* — differing only in (a) how the server routes the
+//! smashed-data cotangents back (§II-A step 4) and (b) what happens to the
+//! client-side models afterwards.  `RoundPlan` captures exactly those two
+//! choices, so SflGa / SflGaDrift / Sfl / Psl are configurations of one
+//! executor rather than hand-rolled loops, and FL is the degenerate plan
+//! with no split at all.  The communication ([`super::comm`]) and latency
+//! ([`super::timing`]) models dispatch on the same plan, keeping the
+//! scheme semantics defined in ONE place.
+
+use super::SchemeKind;
+
+/// How the server returns smashed-data cotangents to the clients
+/// (§II-A step 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CotangentRoute {
+    /// Aggregate per eq (5) and broadcast ONE tensor to every client —
+    /// the paper's gradient-aggregation saving.
+    Broadcast,
+    /// Unicast each client its own cotangent (SFL / PSL).
+    Unicast,
+}
+
+/// What happens to the client-side models at the end of the round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClientSync {
+    /// eq (19): the client-side gradient is client-independent, so ONE
+    /// ρ-weighted gradient steps the shared w^c — no aggregation traffic.
+    SharedStep,
+    /// Per-replica step + synchronous client-side FedAvg exchange
+    /// (SplitFed [11]) — the w^c traffic SFL-GA eliminates.
+    FedAvg,
+    /// Per-replica step, no synchronization (PSL, the drift ablation).
+    None,
+}
+
+/// The per-scheme configuration of the phased round executor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundPlan {
+    /// Split execution: client-fwd fan-out → server reduce → cotangent
+    /// routing → client-bwd fan-out → client aggregate.
+    Split { route: CotangentRoute, sync: ClientSync },
+    /// FedAvg on the full model: local-step fan-out → model aggregate.
+    Full,
+}
+
+impl RoundPlan {
+    /// The split-phase routing, if this plan splits the model.
+    pub fn route(&self) -> Option<CotangentRoute> {
+        match self {
+            RoundPlan::Split { route, .. } => Some(*route),
+            RoundPlan::Full => None,
+        }
+    }
+
+    /// Whether the round pays synchronous client-model FedAvg traffic.
+    pub fn pays_client_fedavg(&self) -> bool {
+        matches!(self, RoundPlan::Split { sync: ClientSync::FedAvg, .. })
+    }
+}
+
+impl SchemeKind {
+    /// The policy object the round executor, comm and timing models run.
+    pub fn plan(self) -> RoundPlan {
+        match self {
+            SchemeKind::SflGa => RoundPlan::Split {
+                route: CotangentRoute::Broadcast,
+                sync: ClientSync::SharedStep,
+            },
+            SchemeKind::SflGaDrift => RoundPlan::Split {
+                route: CotangentRoute::Broadcast,
+                sync: ClientSync::None,
+            },
+            SchemeKind::Sfl => RoundPlan::Split {
+                route: CotangentRoute::Unicast,
+                sync: ClientSync::FedAvg,
+            },
+            SchemeKind::Psl => RoundPlan::Split {
+                route: CotangentRoute::Unicast,
+                sync: ClientSync::None,
+            },
+            SchemeKind::Fl => RoundPlan::Full,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_encode_the_papers_scheme_table() {
+        // SFL-GA = broadcast + shared step (eq 19), no FedAvg traffic.
+        let ga = SchemeKind::SflGa.plan();
+        assert_eq!(ga.route(), Some(CotangentRoute::Broadcast));
+        assert!(!ga.pays_client_fedavg());
+        // The drift ablation shares SFL-GA's communication pattern.
+        assert_eq!(SchemeKind::SflGaDrift.plan().route(), ga.route());
+        // SFL = unicast + the client FedAvg exchange SFL-GA removes.
+        let sfl = SchemeKind::Sfl.plan();
+        assert_eq!(sfl.route(), Some(CotangentRoute::Unicast));
+        assert!(sfl.pays_client_fedavg());
+        // PSL = unicast, no sync.
+        assert_eq!(
+            SchemeKind::Psl.plan(),
+            RoundPlan::Split { route: CotangentRoute::Unicast, sync: ClientSync::None }
+        );
+        // FL never splits.
+        assert_eq!(SchemeKind::Fl.plan().route(), None);
+        assert!(!SchemeKind::Fl.plan().pays_client_fedavg());
+    }
+}

@@ -16,6 +16,7 @@ use crate::latency::{self, ComputeConfig};
 use crate::model::{CutSpec, ShapeSpec};
 use crate::wireless::{ChannelState, NetConfig, rate};
 
+use super::plan::{CotangentRoute, RoundPlan};
 use super::SchemeKind;
 
 /// How the round's bandwidth / server-CPU are allocated.
@@ -55,9 +56,9 @@ pub fn round_latency(
     policy: AllocPolicy,
     tau: usize,
 ) -> RoundLatency {
-    match scheme {
-        SchemeKind::Fl => fl_latency(spec, net, comp, state),
-        _ => split_latency(scheme, spec, cut, net, comp, state, policy, tau),
+    match scheme.plan() {
+        RoundPlan::Full => fl_latency(spec, net, comp, state),
+        plan => split_latency(plan, spec, cut, net, comp, state, policy, tau),
     }
 }
 
@@ -79,7 +80,7 @@ pub fn allocate(
 
 #[allow(clippy::too_many_arguments)]
 fn split_latency(
-    scheme: SchemeKind,
+    plan: RoundPlan,
     spec: &ShapeSpec,
     cut: &CutSpec,
     net: &NetConfig,
@@ -107,8 +108,8 @@ fn split_latency(
         .into_iter()
         .fold(f64::INFINITY, f64::min);
     let bwd = latency::client_bwd_latency(cut, comp, f_min);
-    let mut downlink_leg = match scheme {
-        SchemeKind::SflGa | SchemeKind::SflGaDrift => {
+    let mut downlink_leg = match plan.route() {
+        Some(CotangentRoute::Broadcast) => {
             // One broadcast: all clients listen; slowest receiver gates.
             let t_bc = down_rates
                 .iter()
@@ -127,7 +128,7 @@ fn split_latency(
         }
     };
 
-    if scheme == SchemeKind::Sfl {
+    if plan.pays_client_fedavg() {
         // Client-side model aggregation: upload w^c over the allocated
         // uplink bandwidth, broadcast the aggregate.
         let wc_bits = latency::model_bits(cut.phi, comp);

@@ -1,22 +1,40 @@
-//! The SFL-GA training coordinator: runs communication rounds of the
-//! paper's framework (§II-A steps 1–5) and its three baselines over a
-//! pluggable execution backend ([`ModelRuntime`]), with full
-//! communication/latency accounting.  [`Trainer::native`] wires the
+//! The SFL-GA training coordinator: a single phased round engine that runs
+//! communication rounds of the paper's framework (§II-A steps 1–5) and its
+//! baselines over a pluggable execution backend ([`ModelRuntime`]), with
+//! full communication/latency accounting.  [`Trainer::native`] wires the
 //! pure-Rust backend; the PJRT/AOT path sits behind the `pjrt` feature.
+//!
+//! Every scheme executes the same five phases, configured per scheme by a
+//! [`RoundPlan`] policy (see `plan.rs`):
+//!
+//! 1. **client-fwd fan-out** — per-client forward passes (eq 1),
+//! 2. **server reduce** — per-client server FP+BP (eqs 2–4) and the
+//!    fixed-order ρ-weighted server-gradient reduction (eq 7),
+//! 3. **cotangent routing** — ONE aggregated broadcast (eq 5) or
+//!    per-client unicast,
+//! 4. **client-bwd fan-out** — per-client VJPs of the routed cotangent
+//!    (eq 6),
+//! 5. **aggregate** — the scheme's client-side synchronization policy.
+//!
+//! Fan-out phases run on the [`ParallelExecutor`] — the paper's framework
+//! is parallel by construction (N clients compute simultaneously), and the
+//! engine executes it that way.  Determinism: every per-client job is a
+//! pure function of the round-start state, batches are drawn on the
+//! coordinator thread in client order, and ALL reductions/updates happen
+//! on the coordinator thread in fixed client-index order — so training is
+//! bitwise identical for every thread count (`tests/determinism.rs`).
 //!
 //! Scheme semantics (see DESIGN.md for the discussion):
 //! * **SflGa** — clients upload smashed data; the server updates per-client
 //!   server-side models and aggregates them (eq 7), aggregates the
-//!   smashed-data gradients (eq 5) and *broadcasts one tensor*; every
-//!   client backprops that aggregated cotangent through its own data.
-//!   Per the paper's eqs (6)/(18)/(19), the client-side gradient g_t^c is
-//!   client-independent — all clients hold the same w^c and apply the same
-//!   update, so no synchronous aggregation is needed.  We realize that
-//!   semantics exactly: one shared w^c updated with the ρ-weighted VJP of
-//!   the aggregated cotangent (∇_{w^c} F̃ of eq 19).  The *bias* of that
-//!   gradient vs the true split gradient is the Γ(φ(v)) term of
-//!   Assumption 4 — it grows with the client model, which is what Fig. 3
-//!   measures.
+//!   smashed-data gradients (eq 5) and *broadcasts one tensor*.  Per the
+//!   paper's eqs (6)/(18)/(19), the client-side gradient g_t^c is
+//!   client-independent — one shared w^c steps with the ρ-weighted VJP of
+//!   the aggregated cotangent, no client aggregation traffic.  The *bias*
+//!   of that gradient vs the true split gradient is the Γ(φ(v)) term of
+//!   Assumption 4 — it grows with the client model (Fig. 3 measures it).
+//! * **SflGaDrift** — ablation: own VJP of the aggregated cotangent, own
+//!   replica, no sync.
 //! * **Sfl** — per-client smashed-gradient unicast + synchronous client-
 //!   side FedAvg each round (SplitFed [11]).
 //! * **Psl** — per-client unicast, no client-side aggregation.
@@ -29,11 +47,12 @@ use crate::data::init::{init_params, join_params, split_params};
 use crate::data::{Batcher, Dataset, generate, partition};
 use crate::latency::ComputeConfig;
 use crate::model::Manifest;
-use crate::runtime::{ModelRuntime, Tensor};
+use crate::runtime::{ModelRuntime, ParallelExecutor, Tensor};
 use crate::tensor::{self, Params};
 use crate::wireless::{Channel, ChannelState, NetConfig};
 
 use super::comm::{round_comm, RoundComm};
+use super::plan::{ClientSync, CotangentRoute, RoundPlan};
 use super::SchemeKind;
 use super::timing::{AllocPolicy, round_latency, RoundLatency};
 
@@ -49,13 +68,17 @@ pub struct TrainConfig {
     pub lr: f32,
     /// Samples per client shard.
     pub samples_per_client: usize,
-    /// Test-set size (multiple of the eval artifact batch).
+    /// Test-set size (any size; the tail batch is handled).
     pub test_samples: usize,
     /// Dirichlet α for non-IID splits; None = IID.
     pub non_iid_alpha: Option<f64>,
     pub seed: u64,
     /// Rounds between evaluations.
     pub eval_every: usize,
+    /// Round-engine worker threads: `0` = auto (the `SFLGA_TEST_THREADS`
+    /// env override if set, else available parallelism), `1` = fully
+    /// serial.  Training results are bitwise identical for every value.
+    pub threads: usize,
     pub net: NetConfig,
     pub comp: ComputeConfig,
     pub alloc: AllocPolicy,
@@ -75,6 +98,7 @@ impl Default for TrainConfig {
             non_iid_alpha: None,
             seed: 17,
             eval_every: 5,
+            threads: 0,
             net: NetConfig::default(),
             comp: ComputeConfig::default(),
             alloc: AllocPolicy::Optimal,
@@ -98,6 +122,7 @@ pub struct RoundStats {
 pub struct Trainer {
     pub cfg: TrainConfig,
     rt: ModelRuntime,
+    pool: ParallelExecutor,
     train: Dataset,
     test: Dataset,
     batchers: Vec<Batcher>,
@@ -137,10 +162,16 @@ impl Trainer {
     /// Trainer over an already-constructed runtime (any backend).
     pub fn new(rt: ModelRuntime, cfg: TrainConfig) -> anyhow::Result<Trainer> {
         anyhow::ensure!(cfg.num_clients > 0 && cfg.rounds > 0 && cfg.tau > 0);
+        anyhow::ensure!(cfg.eval_every > 0, "eval_every must be positive");
+        anyhow::ensure!(cfg.test_samples > 0, "test_samples must be positive");
         let spec = rt.spec().clone();
+        // Dynamic-batch backends (native) score the remainder tail batch;
+        // fixed-shape AOT backends (pjrt) cannot take one.
         anyhow::ensure!(
-            cfg.test_samples % spec.eval_batch == 0,
-            "test_samples must be a multiple of the eval batch {}",
+            rt.dynamic_batch() || cfg.test_samples % spec.eval_batch == 0,
+            "backend '{}' is compiled for fixed shapes: test_samples must be a multiple of the \
+             eval batch {}",
+            rt.backend_name(),
             spec.eval_batch
         );
 
@@ -161,9 +192,11 @@ impl Trainer {
         // force selects which prefix the clients own.
         let wc = vec![params.clone(); cfg.num_clients];
         let channel = Channel::new(cfg.net.clone(), cfg.num_clients, cfg.seed ^ 0xC4A7);
+        let pool = ParallelExecutor::new(cfg.threads);
 
         Ok(Trainer {
             rt,
+            pool,
             train,
             test,
             batchers,
@@ -185,6 +218,11 @@ impl Trainer {
     /// Name of the execution backend in use ("native", "pjrt").
     pub fn backend_name(&self) -> &'static str {
         self.rt.backend_name()
+    }
+
+    /// Resolved round-engine worker count (1 = serial).
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
     }
 
     pub fn rho(&self) -> &[f64] {
@@ -214,12 +252,9 @@ impl Trainer {
             self.ws = global;
         }
         self.last_cut = Some(cut);
-        let loss = match self.cfg.scheme {
-            SchemeKind::SflGa => self.round_sfl_ga(cut, /*shared_wc=*/ true)?,
-            SchemeKind::SflGaDrift => self.round_sfl_ga(cut, /*shared_wc=*/ false)?,
-            SchemeKind::Sfl => self.round_sfl(cut, /*aggregate_clients=*/ true)?,
-            SchemeKind::Psl => self.round_sfl(cut, /*aggregate_clients=*/ false)?,
-            SchemeKind::Fl => self.round_fl()?,
+        let loss = match self.cfg.scheme.plan() {
+            RoundPlan::Split { route, sync } => self.round_split(cut, route, sync)?,
+            RoundPlan::Full => self.round_full()?,
         };
         let spec = self.rt.spec().clone();
         let cut_spec = spec.cut(cut);
@@ -260,131 +295,110 @@ impl Trainer {
         Ok(out)
     }
 
-    // ----------------------------------------------------------- schemes
+    // ------------------------------------------------- the round engine
 
-    /// SFL-GA round (§II-A steps 1–5), τ epochs.
-    ///
-    /// `shared_wc=true` is the paper's eq (19) semantics (one client-side
-    /// gradient, shared model); `shared_wc=false` is the literal
-    /// per-client ablation (own VJP of the aggregated cotangent, own
-    /// model, no aggregation) — SchemeKind::SflGaDrift.
-    fn round_sfl_ga(&mut self, cut: usize, shared_wc: bool) -> anyhow::Result<f64> {
-        let spec = self.rt.spec().clone();
-        let nc = spec.cut(cut).client_params;
-        let mut mean_loss = 0.0;
-        for _ in 0..self.cfg.tau {
-            let n = self.cfg.num_clients;
-            let mut batches = Vec::with_capacity(n);
-            let mut smasheds = Vec::with_capacity(n);
-            // (1) client-side FP in parallel (engine serializes execution;
-            // the simulated latency model accounts the parallel timing).
-            for i in 0..n {
+    /// Draw every client's next batch, on the coordinator thread in client
+    /// order (phase 0) — the Batcher RNG sequence is therefore identical
+    /// for every thread count.
+    fn draw_batches(&mut self) -> Vec<(Tensor, Tensor)> {
+        (0..self.cfg.num_clients)
+            .map(|i| {
                 let idx = self.batchers[i].next_batch();
-                let (x, y) = self.train.batch(&idx);
-                let wc_i = self.wc[i][..nc].to_vec();
-                let s = self.rt.client_fwd(cut, &wc_i, &x)?;
-                batches.push((x, y));
-                smasheds.push(s);
-            }
-            // (2)(3) server-side update + gradient aggregation.
-            let ws_srv = self.ws[nc..].to_vec();
-            let mut g_ws_parts: Vec<Params> = Vec::with_capacity(n);
-            let mut g_s_parts: Vec<Tensor> = Vec::with_capacity(n);
-            let mut loss_acc = 0.0;
-            for i in 0..n {
-                let (_, y) = &batches[i];
-                let (loss, g_ws, g_s) = self.rt.server_grad(cut, &ws_srv, &smasheds[i], y)?;
-                loss_acc += self.rho[i] * loss as f64;
-                g_ws_parts.push(g_ws);
-                g_s_parts.push(g_s);
-            }
-            // Aggregate server-side models (eq 7) — equivalent to one SGD
-            // step with the ρ-weighted gradient (verified in tests).
-            let g_ws_refs: Vec<&Params> = g_ws_parts.iter().collect();
-            let g_ws = tensor::weighted_sum(&g_ws_refs, &self.rho);
-            let mut ws_new = ws_srv.clone();
-            tensor::sgd_step(&mut ws_new, &g_ws, self.cfg.lr);
-            for (dst, src) in self.ws[nc..].iter_mut().zip(ws_new) {
-                *dst = src;
-            }
-            // Aggregate smashed-data gradients (eq 5).
-            let flat: Vec<&[f32]> = g_s_parts.iter().map(|t| t.data.as_slice()).collect();
-            let g_s_agg = Tensor::new(
-                tensor::weighted_sum_flat(&flat, &self.rho),
-                g_s_parts[0].shape.clone(),
-            );
-            // (4)(5) broadcast + client-side BP with the SAME cotangent.
-            if shared_wc {
-                // g_t^c = Σ_n ρ^n VJP_n(s_agg) — the client-independent
-                // client-side gradient of eq (19); every replica applies
-                // the identical update, so the shared-w^c invariant holds
-                // with NO aggregation traffic.
-                let wc_shared = self.wc[0][..nc].to_vec();
-                let mut g_c_parts: Vec<Params> = Vec::with_capacity(n);
-                for (x, _) in &batches {
-                    g_c_parts.push(self.rt.client_grad(cut, &wc_shared, x, &g_s_agg)?);
-                }
-                let g_c_refs: Vec<&Params> = g_c_parts.iter().collect();
-                let g_c = tensor::weighted_sum(&g_c_refs, &self.rho);
-                for wc_i in &mut self.wc {
-                    for (w, g) in wc_i[..nc].iter_mut().zip(&g_c) {
-                        tensor::saxpy(w, -self.cfg.lr, g);
-                    }
-                }
-            } else {
-                // Drift ablation: each client applies its OWN VJP of the
-                // aggregated cotangent to its OWN w^c replica.
-                for (i, (x, _)) in batches.iter().enumerate() {
-                    let wc_i = self.wc[i][..nc].to_vec();
-                    let g_c = self.rt.client_grad(cut, &wc_i, x, &g_s_agg)?;
-                    for (w, g) in self.wc[i][..nc].iter_mut().zip(&g_c) {
-                        tensor::saxpy(w, -self.cfg.lr, g);
-                    }
-                }
-            }
-            mean_loss += loss_acc / self.cfg.tau as f64;
-        }
-        Ok(mean_loss)
+                self.train.batch(&idx)
+            })
+            .collect()
     }
 
-    /// Traditional SFL [11] (aggregate_clients=true) / PSL (false).
-    fn round_sfl(&mut self, cut: usize, aggregate_clients: bool) -> anyhow::Result<f64> {
-        let spec = self.rt.spec().clone();
-        let nc = spec.cut(cut).client_params;
+    /// One split round (§II-A steps 1–5) of τ epochs, phases configured by
+    /// `route`/`sync`.  All per-client backend calls fan out on the
+    /// executor; all reductions run on the coordinator thread in fixed
+    /// client-index order (bitwise thread-count independence).
+    fn round_split(
+        &mut self,
+        cut: usize,
+        route: CotangentRoute,
+        sync: ClientSync,
+    ) -> anyhow::Result<f64> {
+        let nc = self.rt.spec().cut(cut).client_params;
+        let n = self.cfg.num_clients;
+        let lr = self.cfg.lr;
+        let shared = sync == ClientSync::SharedStep;
+        // Preallocated reduction accumulators, reused across the τ epochs.
+        let mut g_ws_acc = tensor::zeros_like(&self.ws[nc..]);
+        let mut g_c_acc = if shared {
+            tensor::zeros_like(&self.wc[0][..nc])
+        } else {
+            Params::new()
+        };
         let mut mean_loss = 0.0;
         for _ in 0..self.cfg.tau {
-            let n = self.cfg.num_clients;
-            let ws_srv = self.ws[nc..].to_vec();
-            let mut g_ws_parts: Vec<Params> = Vec::with_capacity(n);
+            let batches = self.draw_batches();
+            let rt = &self.rt;
+            let wc = &self.wc;
+            // (1) client-fwd fan-out — eq (1), zero-copy parameter views.
+            let smashed = self.pool.map(n, |i| rt.client_fwd(cut, &wc[i][..nc], &batches[i].0))?;
+            // (2) server reduce: per-client server FP+BP (eqs 2–4) fan
+            // out; the ρ-weighted server-gradient reduction (eq 7) then
+            // streams into the accumulator in client-index order.
+            let ws_srv = &self.ws[nc..];
+            let server =
+                self.pool.map(n, |i| rt.server_grad(cut, ws_srv, &smashed[i], &batches[i].1))?;
+            tensor::zero(&mut g_ws_acc);
             let mut loss_acc = 0.0;
-            for i in 0..n {
-                let idx = self.batchers[i].next_batch();
-                let (x, y) = self.train.batch(&idx);
-                let wc_i = self.wc[i][..nc].to_vec();
-                let s = self.rt.client_fwd(cut, &wc_i, &x)?;
-                let (loss, g_ws, g_s) = self.rt.server_grad(cut, &ws_srv, &s, &y)?;
-                loss_acc += self.rho[i] * loss as f64;
-                g_ws_parts.push(g_ws);
-                // Per-client gradient unicast: own cotangent.
-                let g_c = self.rt.client_grad(cut, &wc_i, &x, &g_s)?;
-                for (w, g) in self.wc[i][..nc].iter_mut().zip(&g_c) {
-                    tensor::saxpy(w, -self.cfg.lr, g);
-                }
+            for (i, (loss, g_ws, _)) in server.iter().enumerate() {
+                loss_acc += self.rho[i] * *loss as f64;
+                tensor::weighted_accumulate(&mut g_ws_acc, g_ws, self.rho[i]);
             }
-            let g_ws_refs: Vec<&Params> = g_ws_parts.iter().collect();
-            let g_ws = tensor::weighted_sum(&g_ws_refs, &self.rho);
-            let mut ws_new = ws_srv.clone();
-            tensor::sgd_step(&mut ws_new, &g_ws, self.cfg.lr);
-            for (dst, src) in self.ws[nc..].iter_mut().zip(ws_new) {
-                *dst = src;
+            // (3) cotangent routing: aggregate per eq (5) and broadcast
+            // ONE tensor, or unicast each client its own cotangent.
+            let broadcast = match route {
+                CotangentRoute::Broadcast => {
+                    let mut agg = Tensor::zeros(&server[0].2.shape);
+                    for (i, (_, _, g_s)) in server.iter().enumerate() {
+                        tensor::weighted_accumulate_flat(&mut agg.data, &g_s.data, self.rho[i]);
+                    }
+                    Some(agg)
+                }
+                CotangentRoute::Unicast => None,
+            };
+            // (4) client-bwd fan-out — eq (6).  The shared plan runs every
+            // VJP against the one shared w^c; per-client plans against the
+            // client's own replica and (unicast) own cotangent.
+            let g_c_parts = self.pool.map(n, |i| {
+                let wc_i = if shared { &wc[0][..nc] } else { &wc[i][..nc] };
+                let cot = broadcast.as_ref().unwrap_or(&server[i].2);
+                rt.client_grad(cut, wc_i, &batches[i].0, cot)
+            })?;
+            // Apply this epoch's updates on the coordinator thread:
+            // server-side SGD step on the aggregated gradient (eq 7)…
+            tensor::sgd_step(&mut self.ws[nc..], &g_ws_acc, lr);
+            if shared {
+                // …and the client-independent g_t^c of eq (19): the
+                // ρ-weighted VJP reduction, applied identically to every
+                // replica, keeps the shared-w^c invariant with NO
+                // aggregation traffic.
+                tensor::zero(&mut g_c_acc);
+                for (i, g_c) in g_c_parts.iter().enumerate() {
+                    tensor::weighted_accumulate(&mut g_c_acc, g_c, self.rho[i]);
+                }
+                for wc_i in &mut self.wc {
+                    tensor::sgd_step(&mut wc_i[..nc], &g_c_acc, lr);
+                }
+            } else {
+                // …or each client's own step on its own replica.
+                for (wc_i, g_c) in self.wc.iter_mut().zip(&g_c_parts) {
+                    tensor::sgd_step(&mut wc_i[..nc], g_c, lr);
+                }
             }
             mean_loss += loss_acc / self.cfg.tau as f64;
         }
-        if aggregate_clients {
-            // Synchronous client-side FedAvg (the traffic SFL-GA removes).
-            let parts: Vec<Params> = self.wc.iter().map(|w| w[..nc].to_vec()).collect();
-            let refs: Vec<&Params> = parts.iter().collect();
-            let agg = tensor::weighted_sum(&refs, &self.rho);
+        // (5) aggregate: synchronous client-side FedAvg — SFL only, the
+        // traffic SFL-GA removes.
+        if sync == ClientSync::FedAvg {
+            let mut agg = tensor::zeros_like(&self.wc[0][..nc]);
+            for (i, w) in self.wc.iter().enumerate() {
+                tensor::weighted_accumulate(&mut agg, &w[..nc], self.rho[i]);
+            }
             for w in &mut self.wc {
                 for (dst, src) in w[..nc].iter_mut().zip(&agg) {
                     dst.copy_from_slice(src);
@@ -394,26 +408,44 @@ impl Trainer {
         Ok(mean_loss)
     }
 
-    /// FedAvg baseline: τ local full-model steps, then model aggregation.
-    fn round_fl(&mut self) -> anyhow::Result<f64> {
+    /// FedAvg round ([`RoundPlan::Full`]): per-client τ full-model local
+    /// steps fan out (each worker owns a private model clone), then the
+    /// ρ-weighted model aggregation streams in client-index order.
+    fn round_full(&mut self) -> anyhow::Result<f64> {
         let n = self.cfg.num_clients;
-        let mut locals: Vec<Params> = Vec::with_capacity(n);
-        let mut loss_acc = 0.0;
-        for i in 0..n {
-            let mut w = self.w_full.clone();
-            for e in 0..self.cfg.tau {
-                let idx = self.batchers[i].next_batch();
-                let (x, y) = self.train.batch(&idx);
-                let (loss, g) = self.rt.full_grad(&w, &x, &y)?;
+        let lr = self.cfg.lr;
+        let tau = self.cfg.tau;
+        // Phase 0: τ batch-index draws per client, in client order on the
+        // coordinator thread (per-client Batcher RNG order is identical to
+        // serial).  Workers materialize their own client's tensors from
+        // the shared read-only dataset, so only one batch per worker is
+        // resident at a time.
+        let draws: Vec<Vec<Vec<usize>>> = (0..n)
+            .map(|i| (0..tau).map(|_| self.batchers[i].next_batch()).collect())
+            .collect();
+        let rt = &self.rt;
+        let train = &self.train;
+        let w0 = &self.w_full;
+        let locals = self.pool.map(n, |i| {
+            let mut w = w0.clone();
+            let mut first_loss = 0.0f32;
+            for (e, idx) in draws[i].iter().enumerate() {
+                let (x, y) = train.batch(idx);
+                let (loss, g) = rt.full_grad(&w, &x, &y)?;
                 if e == 0 {
-                    loss_acc += self.rho[i] * loss as f64;
+                    first_loss = loss;
                 }
-                tensor::sgd_step(&mut w, &g, self.cfg.lr);
+                tensor::sgd_step(&mut w, &g, lr);
             }
-            locals.push(w);
+            Ok((first_loss, w))
+        })?;
+        let mut agg = tensor::zeros_like(&self.w_full);
+        let mut loss_acc = 0.0;
+        for (i, (loss, w)) in locals.iter().enumerate() {
+            loss_acc += self.rho[i] * *loss as f64;
+            tensor::weighted_accumulate(&mut agg, w, self.rho[i]);
         }
-        let refs: Vec<&Params> = locals.iter().collect();
-        self.w_full = tensor::weighted_sum(&refs, &self.rho);
+        self.w_full = agg;
         Ok(loss_acc)
     }
 
@@ -425,28 +457,40 @@ impl Trainer {
             return self.w_full.clone();
         }
         let nc = self.rt.spec().cut(cut).client_params;
-        let parts: Vec<Params> = self.wc.iter().map(|w| w[..nc].to_vec()).collect();
-        let refs: Vec<&Params> = parts.iter().collect();
-        let wc_avg = tensor::weighted_sum(&refs, &self.rho);
+        let mut wc_avg = tensor::zeros_like(&self.wc[0][..nc]);
+        for (i, w) in self.wc.iter().enumerate() {
+            tensor::weighted_accumulate(&mut wc_avg, &w[..nc], self.rho[i]);
+        }
         join_params(&wc_avg, &self.ws[nc..])
     }
 
-    /// Test-set (loss, accuracy) of the global model.
+    /// Test-set (loss, accuracy) of the global model.  Batches fan out on
+    /// the executor; the remainder tail batch (when `test_samples` is not
+    /// a multiple of the eval batch) is scored too, with the mean loss
+    /// weighted by true batch sizes.
     pub fn evaluate(&self, cut: usize) -> anyhow::Result<(f64, f64)> {
         let w = self.global_params(cut);
-        let spec = self.rt.spec();
-        let eb = spec.eval_batch;
-        let n_batches = self.test.len() / eb;
+        let eb = self.rt.spec().eval_batch;
+        let total = self.test.len();
+        anyhow::ensure!(total > 0, "empty test set");
+        let starts: Vec<usize> = (0..total).step_by(eb).collect();
+        let rt = &self.rt;
+        let test = &self.test;
+        let scores = self.pool.map(starts.len(), |b| {
+            let lo = starts[b];
+            let hi = (lo + eb).min(total);
+            let idx: Vec<usize> = (lo..hi).collect();
+            let (x, y) = test.batch(&idx);
+            let (l, c) = rt.eval(&w, &x, &y)?;
+            Ok((l as f64 * (hi - lo) as f64, c as f64))
+        })?;
         let mut loss = 0.0;
         let mut correct = 0.0;
-        for b in 0..n_batches {
-            let idx: Vec<usize> = (b * eb..(b + 1) * eb).collect();
-            let (x, y) = self.test.batch(&idx);
-            let (l, c) = self.rt.eval(&w, &x, &y)?;
-            loss += l as f64;
-            correct += c as f64;
+        for (l, c) in scores {
+            loss += l;
+            correct += c;
         }
-        Ok((loss / n_batches as f64, correct / (n_batches * eb) as f64))
+        Ok((loss / total as f64, correct / total as f64))
     }
 
     /// Max |Δ| between two clients' client-side models — the drift Γ(φ)
@@ -455,9 +499,7 @@ impl Trainer {
         let nc = self.rt.spec().cut(cut).client_params;
         let mut m = 0.0f64;
         for i in 1..self.wc.len() {
-            let a: Params = self.wc[0][..nc].to_vec();
-            let b: Params = self.wc[i][..nc].to_vec();
-            m = m.max(tensor::max_abs_diff(&a, &b));
+            m = m.max(tensor::max_abs_diff(&self.wc[0][..nc], &self.wc[i][..nc]));
         }
         m
     }

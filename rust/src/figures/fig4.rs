@@ -24,6 +24,7 @@ pub fn run(ctx: &FigCtx) -> anyhow::Result<()> {
                 rounds,
                 eval_every: if ctx.fast { 5 } else { 4 },
                 seed: ctx.seed,
+                threads: ctx.threads,
                 ..Default::default()
             };
             let mut trainer = Trainer::native(&ctx.manifest, cfg)?;

@@ -67,6 +67,7 @@ pub fn run(ctx: &FigCtx) -> anyhow::Result<()> {
                 eval_every: 5,
                 alloc: *alloc,
                 seed: ctx.seed,
+                threads: ctx.threads,
                 ..Default::default()
             };
             let mut trainer = Trainer::native(&ctx.manifest, cfg)?;

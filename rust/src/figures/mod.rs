@@ -20,6 +20,9 @@ pub struct FigCtx {
     /// Fast mode: fewer rounds/episodes for smoke runs (`--fast`).
     pub fast: bool,
     pub seed: u64,
+    /// Round-engine worker threads (0 = auto); results are bitwise
+    /// identical for every value, so figures stay reproducible.
+    pub threads: usize,
 }
 
 impl FigCtx {
@@ -30,6 +33,7 @@ impl FigCtx {
             manifest: Manifest::builtin(),
             fast,
             seed,
+            threads: 0,
         })
     }
 

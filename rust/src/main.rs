@@ -60,6 +60,7 @@ fn cmd_train(args: &Args, results_dir: &Path, seed: u64) -> anyhow::Result<()> {
             .transpose()?,
         seed,
         eval_every: args.parse_or("eval-every", 5usize)?,
+        threads: args.threads()?,
         alloc: if args.flag("equal-alloc") { AllocPolicy::Equal } else { AllocPolicy::Optimal },
         comp: sfl_ga::latency::ComputeConfig {
             // --f-spread 0.5 → clients draw 50–100% of f_client_max (30b).
@@ -70,7 +71,7 @@ fn cmd_train(args: &Args, results_dir: &Path, seed: u64) -> anyhow::Result<()> {
     };
     info!("training {} on {dataset}, cut v={cut}, {} rounds", scheme.name(), cfg.rounds);
     let mut trainer = Trainer::native(&manifest, cfg)?;
-    info!("backend: {}", trainer.backend_name());
+    info!("backend: {} ({} round-engine threads)", trainer.backend_name(), trainer.threads());
     let mut metrics = RunMetrics::new(scheme, &dataset);
     for stats in trainer.run(cut)? {
         metrics.push(&stats);
@@ -122,7 +123,8 @@ fn cmd_optimize(args: &Args, seed: u64) -> anyhow::Result<()> {
 }
 
 fn cmd_figures(args: &Args, results_dir: &Path, seed: u64) -> anyhow::Result<()> {
-    let ctx = FigCtx::new(results_dir, args.flag("fast"), seed)?;
+    let mut ctx = FigCtx::new(results_dir, args.flag("fast"), seed)?;
+    ctx.threads = args.threads()?;
     if args.flag("all") {
         figures::run_all(&ctx)?;
     } else {

@@ -13,6 +13,13 @@
 //!   train and eval batches need no separate entry points.
 //! * Implementations must be deterministic: identical inputs produce
 //!   identical outputs (the coordinator's seeding guarantees rely on it).
+//! * Every role is a PURE function of its arguments, and the trait is
+//!   `Send + Sync`: the round engine's [`super::ParallelExecutor`] issues
+//!   per-client calls from concurrent `std::thread::scope` workers against
+//!   one shared backend instance, and the bitwise threads=N ≡ threads=1
+//!   guarantee (`tests/determinism.rs`) holds only if no call observes
+//!   mutable state from another.  Cache or pool internally behind locks if
+//!   you must, but results may depend only on the inputs.
 
 use crate::model::ShapeSpec;
 use crate::tensor::Params;
@@ -26,6 +33,14 @@ pub trait Backend: Send + Sync {
 
     /// The model/shape metadata this backend was built for.
     fn spec(&self) -> &ShapeSpec;
+
+    /// Whether this backend accepts arbitrary leading batch sizes.  AOT
+    /// backends compiled for fixed input shapes return false; the
+    /// coordinator then requires the test set to split into whole eval
+    /// batches instead of sending a remainder tail batch.
+    fn dynamic_batch(&self) -> bool {
+        true
+    }
 
     /// Smashed data S = ℓ(w^c; x) — eq (1).
     fn client_fwd(&self, cut: usize, wc: &[Vec<f32>], x: &Tensor) -> anyhow::Result<Tensor>;

@@ -246,6 +246,12 @@ impl Backend for PjrtBackend {
         &self.spec
     }
 
+    /// AOT executables are compiled for exact input shapes — no
+    /// remainder tail batches (the coordinator enforces divisibility).
+    fn dynamic_batch(&self) -> bool {
+        false
+    }
+
     fn client_fwd(&self, cut: usize, wc: &[Vec<f32>], x: &Tensor) -> anyhow::Result<Tensor> {
         self.check_cut(cut)?;
         let mut inputs = self.params_to_tensors(wc, 0);

@@ -1,7 +1,9 @@
 //! Typed execution facade: a backend-agnostic [`ModelRuntime`] that the
-//! coordinator, figures and examples talk to.  The actual compute lives
-//! behind the [`Backend`] trait — the pure-Rust [`NativeBackend`] by
-//! default, the PJRT engine pool with `--features pjrt`.
+//! coordinator, figures and examples talk to, plus the [`ParallelExecutor`]
+//! that fans independent per-client backend calls across scoped worker
+//! threads.  The actual compute lives behind the [`Backend`] trait — the
+//! pure-Rust [`NativeBackend`] by default, the PJRT engine pool with
+//! `--features pjrt`.
 
 use crate::model::{Manifest, ShapeSpec};
 use crate::tensor::Params;
@@ -9,6 +11,88 @@ use crate::tensor::Params;
 use super::backend::Backend;
 use super::native::NativeBackend;
 use super::tensor::Tensor;
+
+/// Env var overriding the auto thread count (CI exercises the threaded
+/// round engine by exporting `SFLGA_TEST_THREADS=4` over `cargo test`).
+pub const THREADS_ENV: &str = "SFLGA_TEST_THREADS";
+
+/// Resolve a requested worker-thread count: `0` means auto — the
+/// [`THREADS_ENV`] override if set, else the machine's available
+/// parallelism.  Any explicit `n >= 1` is taken verbatim.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    if let Ok(v) = std::env::var(THREADS_ENV) {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Fans independent per-index jobs (the per-client `client_fwd` /
+/// `server_grad` / `client_grad` / `full_grad` calls of a round phase)
+/// across `std::thread::scope` workers.
+///
+/// Determinism contract: worker `k` of `w` computes indices `k, k+w,
+/// k+2w, …` and every result is scattered back into its index slot, so
+/// the output `Vec` ordering — and hence any index-ordered reduction the
+/// caller performs — is identical for every thread count.  Jobs must be
+/// pure functions of their index (the [`Backend`] contract), which makes
+/// `threads = N` bitwise equal to `threads = 1`.
+pub struct ParallelExecutor {
+    threads: usize,
+}
+
+impl ParallelExecutor {
+    /// `requested = 0` → auto (see [`resolve_threads`]); `1` → run every
+    /// job inline on the caller thread (no spawns at all).
+    pub fn new(requested: usize) -> ParallelExecutor {
+        ParallelExecutor { threads: resolve_threads(requested) }
+    }
+
+    /// The resolved worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Compute `f(0..n)`, in parallel when the executor has more than one
+    /// worker, returning results in index order.  The first error (in
+    /// index order of the worker that hit it) aborts the round.
+    pub fn map<T, F>(&self, n: usize, f: F) -> anyhow::Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> anyhow::Result<T> + Sync,
+    {
+        let w = self.threads.min(n);
+        if w <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let f = &f;
+        let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        std::thread::scope(|s| -> anyhow::Result<()> {
+            let handles: Vec<_> = (0..w)
+                .map(|k| {
+                    s.spawn(move || -> anyhow::Result<Vec<(usize, T)>> {
+                        (k..n).step_by(w).map(|i| Ok((i, f(i)?))).collect()
+                    })
+                })
+                .collect();
+            for h in handles {
+                let part = h.join().expect("round worker panicked")?;
+                for (i, v) in part {
+                    out[i] = Some(v);
+                }
+            }
+            Ok(())
+        })?;
+        Ok(out.into_iter().map(|v| v.expect("worker skipped an index")).collect())
+    }
+}
 
 /// All executable roles for one dataset shape, dispatched to a backend.
 pub struct ModelRuntime {
@@ -55,6 +139,12 @@ impl ModelRuntime {
     /// Backend name ("native", "pjrt") for logging and reports.
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Whether the backend accepts arbitrary leading batch sizes (see
+    /// [`Backend::dynamic_batch`]).
+    pub fn dynamic_batch(&self) -> bool {
+        self.backend.dynamic_batch()
     }
 
     pub fn spec(&self) -> &ShapeSpec {
@@ -132,5 +222,36 @@ mod tests {
         let m = Manifest::builtin();
         let rt = ModelRuntime::native(&m, "cifar10").unwrap();
         assert_eq!(rt.input_shape(7), vec![7, 32, 32, 3]);
+    }
+
+    #[test]
+    fn parallel_map_preserves_index_order() {
+        for threads in [1usize, 2, 4, 7] {
+            let ex = ParallelExecutor::new(threads);
+            assert_eq!(ex.threads(), threads);
+            let got = ex.map(11, |i| Ok(i * i)).unwrap();
+            assert_eq!(got, (0..11).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn parallel_map_handles_fewer_jobs_than_workers() {
+        let ex = ParallelExecutor::new(8);
+        assert_eq!(ex.map(1, |i| Ok(i + 40)).unwrap(), vec![40]);
+        assert_eq!(ex.map(0, |i| Ok(i)).unwrap(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn parallel_map_propagates_errors() {
+        let ex = ParallelExecutor::new(4);
+        let res: anyhow::Result<Vec<usize>> =
+            ex.map(10, |i| if i == 6 { anyhow::bail!("job {i} failed") } else { Ok(i) });
+        assert!(res.unwrap_err().to_string().contains("job 6"));
+    }
+
+    #[test]
+    fn resolve_threads_prefers_explicit_request() {
+        assert_eq!(resolve_threads(3), 3);
+        assert!(resolve_threads(0) >= 1);
     }
 }

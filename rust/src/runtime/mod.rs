@@ -21,6 +21,6 @@ pub mod tensor;
 pub use backend::Backend;
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, Handle};
-pub use exec::ModelRuntime;
+pub use exec::{ModelRuntime, ParallelExecutor, resolve_threads, THREADS_ENV};
 pub use native::NativeBackend;
 pub use tensor::Tensor;

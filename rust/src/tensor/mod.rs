@@ -31,20 +31,46 @@ pub fn sgd_step(w: &mut [Vec<f32>], g: &[Vec<f32>], lr: f32) {
     }
 }
 
+/// Zeroed accumulator set shaped like `like` (round-engine reductions
+/// preallocate once and [`weighted_accumulate`] into it per client).
+pub fn zeros_like(like: &[Vec<f32>]) -> Params {
+    like.iter().map(|buf| vec![0.0f32; buf.len()]).collect()
+}
+
+/// Reset a preallocated accumulator set to zero (buffer reuse across
+/// τ epochs — no per-epoch allocation).
+pub fn zero(params: &mut [Vec<f32>]) {
+    for buf in params.iter_mut() {
+        buf.fill(0.0);
+    }
+}
+
+/// Streaming reduction step: acc += w · part over a parameter set.
+///
+/// The round engine reduces per-client gradients by calling this in
+/// FIXED client-index order on the coordinator thread, so the f32
+/// addition order — and therefore every bit of the result — is
+/// independent of how many worker threads computed the parts.
+pub fn weighted_accumulate(acc: &mut [Vec<f32>], part: &[Vec<f32>], w: f64) {
+    assert_eq!(acc.len(), part.len(), "aggregation param-count mismatch");
+    for (a, p) in acc.iter_mut().zip(part) {
+        saxpy(a, w as f32, p);
+    }
+}
+
+/// Flat-buffer variant of [`weighted_accumulate`] (smashed-data grads).
+pub fn weighted_accumulate_flat(acc: &mut [f32], part: &[f32], w: f64) {
+    saxpy(acc, w as f32, part);
+}
+
 /// Weighted aggregation Σ ρ^n x^n into a fresh buffer set (eqs 5/7).
 /// Weights need not sum to 1 (callers normalize per the paper's ρ^n = D^n/D).
 pub fn weighted_sum(parts: &[&Params], weights: &[f64]) -> Params {
     assert!(!parts.is_empty());
     assert_eq!(parts.len(), weights.len());
-    let mut out: Params = parts[0]
-        .iter()
-        .map(|buf| vec![0.0f32; buf.len()])
-        .collect();
+    let mut out = zeros_like(parts[0]);
     for (part, &w) in parts.iter().zip(weights) {
-        assert_eq!(part.len(), out.len(), "aggregation param-count mismatch");
-        for (acc, src) in out.iter_mut().zip(part.iter()) {
-            saxpy(acc, w as f32, src);
-        }
+        weighted_accumulate(&mut out, part, w);
     }
     out
 }
@@ -55,7 +81,7 @@ pub fn weighted_sum_flat(parts: &[&[f32]], weights: &[f64]) -> Vec<f32> {
     assert_eq!(parts.len(), weights.len());
     let mut out = vec![0.0f32; parts[0].len()];
     for (part, &w) in parts.iter().zip(weights) {
-        saxpy(&mut out, w as f32, part);
+        weighted_accumulate_flat(&mut out, part, w);
     }
     out
 }
@@ -166,6 +192,37 @@ mod tests {
             prop_assert!(max_abs_diff(&out, &p) < 1e-7, "identity aggregation changed values");
             Ok(())
         });
+    }
+
+    #[test]
+    fn property_streaming_accumulate_is_bitwise_weighted_sum() {
+        // The round engine's index-ordered streaming reduction must equal
+        // the collect-then-sum path BITWISE — this is the determinism
+        // contract parallel rounds rely on.
+        check("streaming-accumulate-bitwise", 64, |rng| {
+            let shapes = [7, 3];
+            let n = 1 + rng.below(5);
+            let parts: Vec<Params> = (0..n).map(|_| rand_params(rng, &shapes)).collect();
+            let weights: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+            let refs: Vec<&Params> = parts.iter().collect();
+            let want = weighted_sum(&refs, &weights);
+            let mut acc = zeros_like(&parts[0]);
+            zero(&mut acc); // idempotent on fresh buffers
+            for (p, &w) in parts.iter().zip(&weights) {
+                weighted_accumulate(&mut acc, p, w);
+            }
+            for (a, b) in acc.iter().flatten().zip(want.iter().flatten()) {
+                prop_assert!(a.to_bits() == b.to_bits(), "streaming != batch: {a} vs {b}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_resets_in_place() {
+        let mut p: Params = vec![vec![1.0, 2.0], vec![3.0]];
+        zero(&mut p);
+        assert_eq!(p, vec![vec![0.0, 0.0], vec![0.0]]);
     }
 
     #[test]

@@ -68,6 +68,14 @@ impl Args {
         }
     }
 
+    /// `--threads N`: round-engine worker threads.  `0` (the default)
+    /// means auto — resolved by `runtime::resolve_threads` to the
+    /// `SFLGA_TEST_THREADS` env override or the machine's available
+    /// parallelism; `1` forces fully serial execution.
+    pub fn threads(&self) -> anyhow::Result<usize> {
+        self.parse_or("threads", 0usize)
+    }
+
     pub fn usage(&self, prog: &str, about: &str) -> String {
         let mut s = format!("{prog} — {about}\n\noptions:\n");
         for (name, default, help) in &self.declared {
@@ -118,6 +126,13 @@ mod tests {
     fn bad_value_is_error() {
         let a = parse(&["--rounds", "ten"]);
         assert!(a.parse_or("rounds", 0u32).is_err());
+    }
+
+    #[test]
+    fn threads_defaults_to_auto() {
+        assert_eq!(parse(&[]).threads().unwrap(), 0);
+        assert_eq!(parse(&["--threads", "4"]).threads().unwrap(), 4);
+        assert!(parse(&["--threads", "many"]).threads().is_err());
     }
 
     #[test]

@@ -5,6 +5,11 @@
 //! `data::init::init_params`, the channel draws and the backend itself —
 //! against accidental nondeterminism (e.g. iteration-order or threading
 //! changes).
+//!
+//! It also pins the parallel round engine's core guarantee: `threads = N`
+//! training is bitwise equal to `threads = 1` for EVERY scheme and cut —
+//! per-client jobs are pure, work assignment is index-strided, and all
+//! reductions run on the coordinator thread in fixed client-index order.
 
 use sfl_ga::coordinator::{AllocPolicy, SchemeKind, TrainConfig, Trainer};
 use sfl_ga::model::Manifest;
@@ -48,4 +53,59 @@ fn different_seed_gives_different_curves() {
     let a = eval_curve(7, SchemeKind::SflGa);
     let c = eval_curve(8, SchemeKind::SflGa);
     assert_ne!(a, c, "different seeds should not coincide");
+}
+
+/// Round stats + final global model as raw bits at a given thread count.
+/// `test_samples = 40` with eval batch 32 also exercises the tail batch.
+fn run_bits(scheme: SchemeKind, cut: usize, threads: usize) -> (Vec<u64>, Vec<u32>) {
+    let manifest = Manifest::builtin_with_batches(8, 32);
+    let cfg = TrainConfig {
+        scheme,
+        num_clients: 3,
+        rounds: 2,
+        eval_every: 1,
+        samples_per_client: 16,
+        test_samples: 40,
+        seed: 11,
+        threads,
+        alloc: AllocPolicy::Equal,
+        ..Default::default()
+    };
+    let mut t = Trainer::native(&manifest, cfg).unwrap();
+    assert_eq!(t.threads(), threads);
+    let mut stat_bits = Vec::new();
+    for s in t.run(cut).unwrap() {
+        stat_bits.push(s.train_loss.to_bits());
+        let (tl, ta) = s.test.expect("eval_every=1 evaluates every round");
+        stat_bits.push(tl.to_bits());
+        stat_bits.push(ta.to_bits());
+    }
+    let param_bits: Vec<u32> =
+        t.global_params(cut).iter().flatten().map(|v| v.to_bits()).collect();
+    (stat_bits, param_bits)
+}
+
+#[test]
+fn parallel_rounds_are_bitwise_equal_to_serial_for_every_scheme_and_cut() {
+    let schemes = [
+        SchemeKind::SflGa,
+        SchemeKind::SflGaDrift,
+        SchemeKind::Sfl,
+        SchemeKind::Psl,
+        SchemeKind::Fl,
+    ];
+    for scheme in schemes {
+        for cut in 1..=4 {
+            let (stats1, params1) = run_bits(scheme, cut, 1);
+            let (stats4, params4) = run_bits(scheme, cut, 4);
+            assert_eq!(
+                stats1, stats4,
+                "{scheme:?} cut {cut}: threads=4 round stats diverge from threads=1"
+            );
+            assert_eq!(
+                params1, params4,
+                "{scheme:?} cut {cut}: threads=4 final params diverge from threads=1"
+            );
+        }
+    }
 }
