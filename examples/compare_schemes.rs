@@ -27,6 +27,9 @@ fn main() -> anyhow::Result<()> {
             // Every scheme runs through the same parallel round engine
             // (--threads N; 0 = auto); the table is thread-count invariant.
             threads: args.threads()?,
+            // Scenario flags (--partition/--participation/--straggler)
+            // compare the schemes under heterogeneity.
+            scenario: args.scenario()?,
             ..Default::default()
         };
         let mut trainer = Trainer::native(&manifest, cfg)?;

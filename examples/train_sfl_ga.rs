@@ -27,6 +27,8 @@ fn main() -> anyhow::Result<()> {
         // Parallel round engine (--threads N; 0 = auto, 1 = serial).
         // The loss/accuracy series is bitwise identical either way.
         threads: args.threads()?,
+        // Scenario flags (--partition/--participation/--straggler).
+        scenario: args.scenario()?,
         ..Default::default()
     };
 

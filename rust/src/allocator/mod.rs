@@ -1,5 +1,12 @@
 //! P2.1 convex resource allocation: bandwidth, power and server-CPU split
 //! minimizing the per-round latency bound χ + ψ (paper §IV-B1).
+//!
+//! [`build_problem`] assembles one round's instance from the system
+//! models (channel gains, smashed-data sizes at the cut, per-client
+//! compute capacities — including scenario straggler profiles via
+//! [`ComputeConfig::client_flops`]); [`solver`] bisects on the uplink-leg
+//! bound χ with a bandwidth-pricing inner step, built on the
+//! golden-section / monotone-bisection primitives in [`golden`].
 
 pub mod golden;
 pub mod solver;

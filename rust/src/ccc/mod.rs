@@ -18,6 +18,7 @@ use crate::ddqn::{DdqnAgent, DdqnConfig, Transition};
 use crate::latency::ComputeConfig;
 use crate::model::{NUM_CUTS, ShapeSpec};
 use crate::privacy;
+use crate::scenario::ScenarioConfig;
 use crate::util::rng::Pcg;
 use crate::wireless::{Channel, ChannelState, NetConfig};
 
@@ -72,13 +73,22 @@ impl Default for CccConfig {
     }
 }
 
-/// The MDP environment: wireless channel + P2.1 allocator + privacy gate.
+/// The MDP environment: wireless channel + P2.1 allocator + privacy gate,
+/// under a [`ScenarioConfig`] (straggler compute profiles shift the
+/// allocator's FP/BP terms; partial participation shrinks the per-round
+/// cohort the allocation serves — Algorithm 1 then optimizes the cut for
+/// the clients that actually show up).
 pub struct Env {
     pub spec: ShapeSpec,
     pub net: NetConfig,
     pub comp: ComputeConfig,
     pub cfg: CccConfig,
     channel: Channel,
+    /// Scenario state: per-client capacities (straggler multipliers
+    /// folded in) and the cohort-draw RNG.
+    scenario: ScenarioConfig,
+    caps: Vec<f64>,
+    part_rng: Pcg,
     cum_cost: f64,
     steps: usize,
 }
@@ -92,12 +102,46 @@ impl Env {
         num_clients: usize,
         seed: u64,
     ) -> Env {
+        Env::with_scenario(spec, net, comp, cfg, num_clients, seed, ScenarioConfig::default())
+    }
+
+    /// Environment whose per-step cost reflects a heterogeneity scenario.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_scenario(
+        spec: ShapeSpec,
+        net: NetConfig,
+        comp: ComputeConfig,
+        cfg: CccConfig,
+        num_clients: usize,
+        seed: u64,
+        scenario: ScenarioConfig,
+    ) -> Env {
         let channel = Channel::new(net.clone(), num_clients, seed);
-        Env { spec, net, comp, cfg, channel, cum_cost: 0.0, steps: 0 }
+        // Fixed hardware: the same capacity fold and participation RNG
+        // the Trainer derives from the run seed (see DESIGN.md
+        // §Scenarios), so the optimizer prices the simulator's hardware.
+        let caps = scenario.resolve_caps(&comp, num_clients, seed);
+        let part_rng = ScenarioConfig::part_rng(seed);
+        Env {
+            spec,
+            net,
+            comp,
+            cfg,
+            channel,
+            scenario,
+            caps,
+            part_rng,
+            cum_cost: 0.0,
+            steps: 0,
+        }
     }
 
     pub fn num_clients(&self) -> usize {
         self.channel.num_clients()
+    }
+
+    pub fn scenario(&self) -> &ScenarioConfig {
+        &self.scenario
     }
 
     /// DDQN dimensions for this environment.
@@ -131,23 +175,64 @@ impl Env {
     }
 
     /// One MDP step: act with cut v on `state`; returns
-    /// (reward, cost_components, next_state, next_features).
+    /// (reward, cost_components, next_state, next_features).  The round's
+    /// cost is evaluated over the participant cohort drawn from the round
+    /// RNG (everyone under full participation).
     pub fn step(&mut self, state: &ChannelState, cut: usize) -> StepOutcome {
         let feasible = privacy::cut_feasible(&self.spec, cut, self.cfg.epsilon);
-        let (gamma, chi, psi) = self.cost_components(state, cut);
+        let n = self.num_clients();
+        // Fast path under full participation: no cohort draw, no RNG use.
+        let cohort = (!self.scenario.full_participation())
+            .then(|| self.scenario.draw_participants(&mut self.part_rng, n));
+        let participants = cohort.as_ref().map_or(n, Vec::len);
+        let (gamma, chi, psi) = self.cost_components_cohort(state, cut, cohort.as_deref());
         let cost = self.cfg.w * gamma + chi + psi;
         let reward = if feasible { -cost } else { -self.cfg.penalty };
         self.cum_cost += if feasible { cost } else { self.cfg.penalty };
         self.steps += 1;
         let next_state = self.channel.draw_round();
         let next_features = self.features(&next_state);
-        StepOutcome { reward, gamma, chi, psi, feasible, next_state, next_features }
+        StepOutcome {
+            reward,
+            gamma,
+            chi,
+            psi,
+            feasible,
+            participants,
+            next_state,
+            next_features,
+        }
     }
 
-    /// (Γ, χ*, ψ*) at cut v under the configured allocation policy.
+    /// (Γ, χ*, ψ*) at cut v under the configured allocation policy, with
+    /// every client participating.
     pub fn cost_components(&self, state: &ChannelState, cut: usize) -> (f64, f64, f64) {
+        self.cost_components_cohort(state, cut, None)
+    }
+
+    /// (Γ, χ*, ψ*) with channel/compute restricted to a cohort (`None` =
+    /// all clients — no per-call channel rebuild).
+    fn cost_components_cohort(
+        &self,
+        state: &ChannelState,
+        cut: usize,
+        cohort: Option<&[usize]>,
+    ) -> (f64, f64, f64) {
         let cut_spec = self.spec.cut(cut);
-        let problem = build_problem(&self.spec, cut_spec, &self.net, &self.comp, state);
+        let mut comp = self.comp.clone();
+        let sub_state;
+        let state_ref = match cohort {
+            None => {
+                comp.client_caps = self.caps.clone();
+                state
+            }
+            Some(p) => {
+                comp.client_caps = p.iter().map(|&i| self.caps[i]).collect();
+                sub_state = ChannelState { gains: p.iter().map(|&i| state.gains[i]).collect() };
+                &sub_state
+            }
+        };
+        let problem = build_problem(&self.spec, cut_spec, &self.net, &comp, state_ref);
         let alloc = match self.cfg.alloc {
             AllocPolicy::Optimal => problem.solve(),
             AllocPolicy::Equal => problem.solve_equal(),
@@ -162,6 +247,8 @@ pub struct StepOutcome {
     pub chi: f64,
     pub psi: f64,
     pub feasible: bool,
+    /// Cohort size the cost was evaluated over.
+    pub participants: usize,
     pub next_state: ChannelState,
     pub next_features: Vec<f32>,
 }

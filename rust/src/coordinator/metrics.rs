@@ -19,6 +19,9 @@ pub struct RunMetrics {
 pub struct Row {
     pub round: usize,
     pub cut: usize,
+    /// Clients that participated this round (scenario engine; = N under
+    /// full participation).
+    pub participants: usize,
     pub train_loss: f64,
     pub cum_comm_mb: f64,
     pub cum_latency_s: f64,
@@ -51,6 +54,7 @@ impl RunMetrics {
         self.rows.push(Row {
             round: stats.round,
             cut: stats.cut,
+            participants: stats.participants,
             train_loss: stats.train_loss,
             cum_comm_mb: prev_comm + stats.comm.total_mbytes(),
             cum_latency_s: prev_lat + stats.latency.total(),
@@ -78,7 +82,7 @@ impl RunMetrics {
         let mut w = CsvWriter::create(
             path,
             &[
-                "scheme", "dataset", "round", "cut", "train_loss",
+                "scheme", "dataset", "round", "cut", "participants", "train_loss",
                 "cum_comm_mb", "cum_latency_s", "test_loss", "test_acc", "evaluated",
             ],
         )?;
@@ -88,6 +92,7 @@ impl RunMetrics {
                 self.dataset.clone(),
                 r.round.to_string(),
                 r.cut.to_string(),
+                r.participants.to_string(),
                 format!("{:.6}", r.train_loss),
                 format!("{:.6}", r.cum_comm_mb),
                 format!("{:.6}", r.cum_latency_s),
@@ -110,6 +115,7 @@ mod tests {
         RoundStats {
             round,
             cut: 2,
+            participants: 10,
             train_loss: 1.0,
             comm: RoundComm { uplink_bits: 8e6, downlink_bits: 8e6 },
             latency: RoundLatency { uplink_leg: 0.5, downlink_leg: 0.5 },

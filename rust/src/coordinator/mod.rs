@@ -2,7 +2,9 @@
 //! baselines, all executed by one phased round engine ([`trainer`])
 //! configured per scheme by a [`plan::RoundPlan`] policy, with
 //! communication accounting ([`comm`]), simulated wireless timing
-//! ([`timing`]) and metrics collection ([`metrics`]).
+//! ([`timing`]) and metrics collection ([`metrics`]).  Runs are
+//! parameterized by a [`crate::scenario::ScenarioConfig`] — data
+//! partition, partial participation, straggler compute profiles.
 
 pub mod comm;
 pub mod metrics;

@@ -24,6 +24,16 @@
 //! on the coordinator thread in fixed client-index order — so training is
 //! bitwise identical for every thread count (`tests/determinism.rs`).
 //!
+//! Every run executes under a [`ScenarioConfig`] (see [`crate::scenario`]
+//! and DESIGN.md §Scenarios): the partition strategy fixes per-client
+//! shards and the sample-count aggregation weights ρ^n = |D^n|/|D|;
+//! straggler profiles slow a subset of clients in the timing model; and
+//! under partial participation each round runs over a cohort drawn
+//! coordinator-side, with weights renormalized over the cohort and
+//! communication/latency accounted for exactly the clients that took
+//! part.  The default scenario reproduces the paper's IID, homogeneous,
+//! always-on setup byte-for-byte.
+//!
 //! Scheme semantics (see DESIGN.md for the discussion):
 //! * **SflGa** — clients upload smashed data; the server updates per-client
 //!   server-side models and aggregates them (eq 7), aggregates the
@@ -44,11 +54,13 @@
 //! average joined with the server-side model (for FL, the global model).
 
 use crate::data::init::{init_params, join_params, split_params};
-use crate::data::{Batcher, Dataset, generate, partition};
+use crate::data::{Batcher, Dataset, generate};
 use crate::latency::ComputeConfig;
 use crate::model::Manifest;
 use crate::runtime::{ModelRuntime, ParallelExecutor, Tensor};
+use crate::scenario::ScenarioConfig;
 use crate::tensor::{self, Params};
+use crate::util::rng::Pcg;
 use crate::wireless::{Channel, ChannelState, NetConfig};
 
 use super::comm::{round_comm, RoundComm};
@@ -70,8 +82,10 @@ pub struct TrainConfig {
     pub samples_per_client: usize,
     /// Test-set size (any size; the tail batch is handled).
     pub test_samples: usize,
-    /// Dirichlet α for non-IID splits; None = IID.
-    pub non_iid_alpha: Option<f64>,
+    /// Scenario layer: data partition (IID / Dirichlet / shards), partial
+    /// participation and compute stragglers.  Defaults = the paper's
+    /// homogeneous always-on IID setup.
+    pub scenario: ScenarioConfig,
     pub seed: u64,
     /// Rounds between evaluations.
     pub eval_every: usize,
@@ -95,7 +109,7 @@ impl Default for TrainConfig {
             lr: 0.02,
             samples_per_client: 256,
             test_samples: 2048,
-            non_iid_alpha: None,
+            scenario: ScenarioConfig::default(),
             seed: 17,
             eval_every: 5,
             threads: 0,
@@ -111,6 +125,9 @@ impl Default for TrainConfig {
 pub struct RoundStats {
     pub round: usize,
     pub cut: usize,
+    /// Clients that actually participated this round (= N under full
+    /// participation); comm/latency below account for exactly these.
+    pub participants: usize,
     pub train_loss: f64,
     pub comm: RoundComm,
     pub latency: RoundLatency,
@@ -136,6 +153,14 @@ pub struct Trainer {
     ws: Params,
     /// Full global model (FL).
     w_full: Params,
+    /// Per-client compute capacities in FLOPS — the max/spread draw with
+    /// the scenario's straggler multipliers folded in, resolved once per
+    /// deployment (fixed hardware).
+    caps: Vec<f64>,
+    /// Participation RNG: the cohort draw consumes this on the
+    /// coordinator thread, one draw per round (untouched under full
+    /// participation).
+    part_rng: Pcg,
     round: usize,
     /// Cut used in the previous round (dynamic-cut runs resync on change).
     last_cut: Option<usize>,
@@ -164,6 +189,8 @@ impl Trainer {
         anyhow::ensure!(cfg.num_clients > 0 && cfg.rounds > 0 && cfg.tau > 0);
         anyhow::ensure!(cfg.eval_every > 0, "eval_every must be positive");
         anyhow::ensure!(cfg.test_samples > 0, "test_samples must be positive");
+        anyhow::ensure!(cfg.samples_per_client > 0, "samples_per_client must be positive");
+        cfg.scenario.validate()?;
         let spec = rt.spec().clone();
         // Dynamic-batch backends (native) score the remainder tail batch;
         // fixed-shape AOT backends (pjrt) cannot take one.
@@ -178,7 +205,11 @@ impl Trainer {
         let total = cfg.samples_per_client * cfg.num_clients;
         let train = generate(&spec, &cfg.dataset, total, cfg.seed);
         let test = generate(&spec, &cfg.dataset, cfg.test_samples, cfg.seed ^ 0x7E57);
-        let shards = partition(&train, cfg.num_clients, cfg.non_iid_alpha, cfg.seed);
+        // Scenario axis 1 — data distribution: the partition strategy
+        // fixes each client's shard and, via |D^n|, the sample-count
+        // aggregation weights ρ^n = |D^n| / |D| (FedAvg weighting).
+        let shards =
+            cfg.scenario.partition.indices(&train.labels, train.classes, cfg.num_clients, cfg.seed);
         let d_total: usize = shards.iter().map(Vec::len).sum();
         let rho: Vec<f64> = shards.iter().map(|s| s.len() as f64 / d_total as f64).collect();
         let batchers = shards
@@ -187,11 +218,17 @@ impl Trainer {
             .map(|(i, s)| Batcher::new(s.clone(), spec.train_batch, cfg.seed ^ (i as u64) << 8))
             .collect();
 
+        // Scenario axis 2 — compute heterogeneity: resolve the max/spread
+        // draw and the straggler multipliers into one per-client capacity
+        // table (fixed hardware; participant subsets index into it).
+        let caps = cfg.scenario.resolve_caps(&cfg.comp, cfg.num_clients, cfg.seed);
+
         let params = init_params(&spec, cfg.seed ^ 0x1417);
         // Initialize every cut's split from the same full model; the cut in
         // force selects which prefix the clients own.
         let wc = vec![params.clone(); cfg.num_clients];
         let channel = Channel::new(cfg.net.clone(), cfg.num_clients, cfg.seed ^ 0xC4A7);
+        let part_rng = ScenarioConfig::part_rng(cfg.seed);
         let pool = ParallelExecutor::new(cfg.threads);
 
         Ok(Trainer {
@@ -205,6 +242,8 @@ impl Trainer {
             ws: params.clone(),
             w_full: params,
             wc,
+            caps,
+            part_rng,
             round: 0,
             last_cut: None,
             cfg,
@@ -240,6 +279,26 @@ impl Trainer {
     }
 
     /// Run one communication round at cut `v` with channel `state`.
+    ///
+    /// The round runs the scheme's [`RoundPlan`] over this round's
+    /// participant cohort (drawn coordinator-side from the round RNG —
+    /// everyone under full participation), then accounts communication
+    /// and latency for exactly the clients that took part.
+    ///
+    /// # Example
+    ///
+    /// ```no_run
+    /// use sfl_ga::coordinator::{TrainConfig, Trainer};
+    /// use sfl_ga::model::Manifest;
+    ///
+    /// let manifest = Manifest::builtin();
+    /// let mut trainer = Trainer::native(&manifest, TrainConfig::default())?;
+    /// // Cut selection policies observe the channel before choosing v.
+    /// let state = trainer.draw_channel();
+    /// let stats = trainer.run_round(2, &state)?;
+    /// println!("{} clients participated", stats.participants);
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn run_round(&mut self, cut: usize, state: &ChannelState) -> anyhow::Result<RoundStats> {
         // Dynamic cut selection (Algorithm 1) moves layer ownership between
         // the sides; on a cut change, re-anchor every replica to the global
@@ -252,18 +311,42 @@ impl Trainer {
             self.ws = global;
         }
         self.last_cut = Some(cut);
-        let loss = match self.cfg.scheme.plan() {
-            RoundPlan::Split { route, sync } => self.round_split(cut, route, sync)?,
-            RoundPlan::Full => self.round_full()?,
+        // Scenario axis 3 — participation: the cohort draw happens on the
+        // coordinator thread, so it is identical for every thread count.
+        let n = self.cfg.num_clients;
+        let participants = self.cfg.scenario.draw_participants(&mut self.part_rng, n);
+        // Aggregation weights over the cohort: ρ renormalized to sum to 1
+        // across the participants (exactly ρ itself under full
+        // participation — no renormalization bit-noise on the fast path).
+        let weights: Vec<f64> = if participants.len() == n {
+            self.rho.clone()
+        } else {
+            let total: f64 = participants.iter().map(|&i| self.rho[i]).sum();
+            participants.iter().map(|&i| self.rho[i] / total).collect()
         };
+        let loss = match self.cfg.scheme.plan() {
+            RoundPlan::Split { route, sync } => {
+                self.round_split(cut, route, sync, &participants, &weights)?
+            }
+            RoundPlan::Full => self.round_full(&participants, &weights)?,
+        };
+        // Communication and latency account for the cohort only: the
+        // channel state and compute table restricted to participants.
+        let state_round = if participants.len() == n {
+            state.clone()
+        } else {
+            ChannelState { gains: participants.iter().map(|&i| state.gains[i]).collect() }
+        };
+        let mut comp_round = self.cfg.comp.clone();
+        comp_round.client_caps = participants.iter().map(|&i| self.caps[i]).collect();
         let spec = self.rt.spec().clone();
         let cut_spec = spec.cut(cut);
         let comm = round_comm(
             self.cfg.scheme,
             &spec,
             cut_spec,
-            &self.cfg.comp,
-            self.cfg.num_clients,
+            &comp_round,
+            participants.len(),
             self.cfg.tau,
         );
         let latency = round_latency(
@@ -271,8 +354,8 @@ impl Trainer {
             &spec,
             cut_spec,
             &self.cfg.net,
-            &self.cfg.comp,
-            state,
+            &comp_round,
+            &state_round,
             self.cfg.alloc,
             self.cfg.tau,
         );
@@ -282,10 +365,43 @@ impl Trainer {
         } else {
             None
         };
-        Ok(RoundStats { round: self.round, cut, train_loss: loss, comm, latency, test })
+        Ok(RoundStats {
+            round: self.round,
+            cut,
+            participants: participants.len(),
+            train_loss: loss,
+            comm,
+            latency,
+            test,
+        })
     }
 
     /// Convenience: run a full fixed-cut training; returns all stats.
+    ///
+    /// # Example
+    ///
+    /// ```no_run
+    /// use sfl_ga::coordinator::{SchemeKind, TrainConfig, Trainer};
+    /// use sfl_ga::model::Manifest;
+    /// use sfl_ga::scenario::ScenarioConfig;
+    /// use sfl_ga::data::partition::Partition;
+    ///
+    /// let manifest = Manifest::builtin();
+    /// let cfg = TrainConfig {
+    ///     scheme: SchemeKind::SflGa,
+    ///     rounds: 10,
+    ///     scenario: ScenarioConfig {
+    ///         partition: Partition::Dirichlet(0.3),
+    ///         participation: 0.5,
+    ///         ..Default::default()
+    ///     },
+    ///     ..Default::default()
+    /// };
+    /// let mut trainer = Trainer::native(&manifest, cfg)?;
+    /// let stats = trainer.run(2)?; // fixed cut v=2
+    /// assert_eq!(stats.len(), 10);
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn run(&mut self, cut: usize) -> anyhow::Result<Vec<RoundStats>> {
         let mut out = Vec::with_capacity(self.cfg.rounds);
         for _ in 0..self.cfg.rounds {
@@ -297,30 +413,37 @@ impl Trainer {
 
     // ------------------------------------------------- the round engine
 
-    /// Draw every client's next batch, on the coordinator thread in client
-    /// order (phase 0) — the Batcher RNG sequence is therefore identical
-    /// for every thread count.
-    fn draw_batches(&mut self) -> Vec<(Tensor, Tensor)> {
-        (0..self.cfg.num_clients)
-            .map(|i| {
+    /// Draw each participant's next batch, on the coordinator thread in
+    /// ascending client order (phase 0) — the Batcher RNG sequences are
+    /// therefore identical for every thread count, and a client's batch
+    /// stream only advances on rounds it participates in.
+    fn draw_batches(&mut self, participants: &[usize]) -> Vec<(Tensor, Tensor)> {
+        participants
+            .iter()
+            .map(|&i| {
                 let idx = self.batchers[i].next_batch();
                 self.train.batch(&idx)
             })
             .collect()
     }
 
-    /// One split round (§II-A steps 1–5) of τ epochs, phases configured by
-    /// `route`/`sync`.  All per-client backend calls fan out on the
-    /// executor; all reductions run on the coordinator thread in fixed
-    /// client-index order (bitwise thread-count independence).
+    /// One split round (§II-A steps 1–5) of τ epochs over the cohort
+    /// `participants` (sorted ascending), phases configured by
+    /// `route`/`sync`.  `weights[j]` is participant j's aggregation
+    /// weight (ρ renormalized over the cohort).  All per-client backend
+    /// calls fan out on the executor; all reductions run on the
+    /// coordinator thread in fixed client-index order (bitwise
+    /// thread-count independence).
     fn round_split(
         &mut self,
         cut: usize,
         route: CotangentRoute,
         sync: ClientSync,
+        participants: &[usize],
+        weights: &[f64],
     ) -> anyhow::Result<f64> {
         let nc = self.rt.spec().cut(cut).client_params;
-        let n = self.cfg.num_clients;
+        let k = participants.len();
         let lr = self.cfg.lr;
         let shared = sync == ClientSync::SharedStep;
         // Preallocated reduction accumulators, reused across the τ epochs.
@@ -332,30 +455,33 @@ impl Trainer {
         };
         let mut mean_loss = 0.0;
         for _ in 0..self.cfg.tau {
-            let batches = self.draw_batches();
+            let batches = self.draw_batches(participants);
             let rt = &self.rt;
             let wc = &self.wc;
             // (1) client-fwd fan-out — eq (1), zero-copy parameter views.
-            let smashed = self.pool.map(n, |i| rt.client_fwd(cut, &wc[i][..nc], &batches[i].0))?;
-            // (2) server reduce: per-client server FP+BP (eqs 2–4) fan
-            // out; the ρ-weighted server-gradient reduction (eq 7) then
-            // streams into the accumulator in client-index order.
+            let smashed = self.pool.map(k, |j| {
+                rt.client_fwd(cut, &wc[participants[j]][..nc], &batches[j].0)
+            })?;
+            // (2) server reduce: per-participant server FP+BP (eqs 2–4)
+            // fan out; the weighted server-gradient reduction (eq 7) then
+            // streams into the accumulator in cohort (= ascending client
+            // index) order.
             let ws_srv = &self.ws[nc..];
             let server =
-                self.pool.map(n, |i| rt.server_grad(cut, ws_srv, &smashed[i], &batches[i].1))?;
+                self.pool.map(k, |j| rt.server_grad(cut, ws_srv, &smashed[j], &batches[j].1))?;
             tensor::zero(&mut g_ws_acc);
             let mut loss_acc = 0.0;
-            for (i, (loss, g_ws, _)) in server.iter().enumerate() {
-                loss_acc += self.rho[i] * *loss as f64;
-                tensor::weighted_accumulate(&mut g_ws_acc, g_ws, self.rho[i]);
+            for (j, (loss, g_ws, _)) in server.iter().enumerate() {
+                loss_acc += weights[j] * *loss as f64;
+                tensor::weighted_accumulate(&mut g_ws_acc, g_ws, weights[j]);
             }
             // (3) cotangent routing: aggregate per eq (5) and broadcast
-            // ONE tensor, or unicast each client its own cotangent.
+            // ONE tensor, or unicast each participant its own cotangent.
             let broadcast = match route {
                 CotangentRoute::Broadcast => {
                     let mut agg = Tensor::zeros(&server[0].2.shape);
-                    for (i, (_, _, g_s)) in server.iter().enumerate() {
-                        tensor::weighted_accumulate_flat(&mut agg.data, &g_s.data, self.rho[i]);
+                    for (j, (_, _, g_s)) in server.iter().enumerate() {
+                        tensor::weighted_accumulate_flat(&mut agg.data, &g_s.data, weights[j]);
                     }
                     Some(agg)
                 }
@@ -364,43 +490,49 @@ impl Trainer {
             // (4) client-bwd fan-out — eq (6).  The shared plan runs every
             // VJP against the one shared w^c; per-client plans against the
             // client's own replica and (unicast) own cotangent.
-            let g_c_parts = self.pool.map(n, |i| {
-                let wc_i = if shared { &wc[0][..nc] } else { &wc[i][..nc] };
-                let cot = broadcast.as_ref().unwrap_or(&server[i].2);
-                rt.client_grad(cut, wc_i, &batches[i].0, cot)
+            let g_c_parts = self.pool.map(k, |j| {
+                let wc_j = if shared { &wc[0][..nc] } else { &wc[participants[j]][..nc] };
+                let cot = broadcast.as_ref().unwrap_or(&server[j].2);
+                rt.client_grad(cut, wc_j, &batches[j].0, cot)
             })?;
             // Apply this epoch's updates on the coordinator thread:
             // server-side SGD step on the aggregated gradient (eq 7)…
             tensor::sgd_step(&mut self.ws[nc..], &g_ws_acc, lr);
             if shared {
                 // …and the client-independent g_t^c of eq (19): the
-                // ρ-weighted VJP reduction, applied identically to every
+                // weighted VJP reduction, applied identically to every
                 // replica, keeps the shared-w^c invariant with NO
-                // aggregation traffic.
+                // aggregation traffic.  Under partial participation the
+                // shared w^c is ONE logical server-held model — clients
+                // that sat the round out pick the stepped model up when
+                // they next join, so every replica steps here too.
                 tensor::zero(&mut g_c_acc);
-                for (i, g_c) in g_c_parts.iter().enumerate() {
-                    tensor::weighted_accumulate(&mut g_c_acc, g_c, self.rho[i]);
+                for (j, g_c) in g_c_parts.iter().enumerate() {
+                    tensor::weighted_accumulate(&mut g_c_acc, g_c, weights[j]);
                 }
                 for wc_i in &mut self.wc {
                     tensor::sgd_step(&mut wc_i[..nc], &g_c_acc, lr);
                 }
             } else {
-                // …or each client's own step on its own replica.
-                for (wc_i, g_c) in self.wc.iter_mut().zip(&g_c_parts) {
-                    tensor::sgd_step(&mut wc_i[..nc], g_c, lr);
+                // …or each participant's own step on its own replica
+                // (absent clients keep their stale replicas).
+                for (j, g_c) in g_c_parts.iter().enumerate() {
+                    tensor::sgd_step(&mut self.wc[participants[j]][..nc], g_c, lr);
                 }
             }
             mean_loss += loss_acc / self.cfg.tau as f64;
         }
         // (5) aggregate: synchronous client-side FedAvg — SFL only, the
-        // traffic SFL-GA removes.
+        // traffic SFL-GA removes.  Only the round's participants exchange
+        // and receive the aggregate; absentees stay stale until they next
+        // participate.
         if sync == ClientSync::FedAvg {
             let mut agg = tensor::zeros_like(&self.wc[0][..nc]);
-            for (i, w) in self.wc.iter().enumerate() {
-                tensor::weighted_accumulate(&mut agg, &w[..nc], self.rho[i]);
+            for (j, &i) in participants.iter().enumerate() {
+                tensor::weighted_accumulate(&mut agg, &self.wc[i][..nc], weights[j]);
             }
-            for w in &mut self.wc {
-                for (dst, src) in w[..nc].iter_mut().zip(&agg) {
+            for &i in participants {
+                for (dst, src) in self.wc[i][..nc].iter_mut().zip(&agg) {
                     dst.copy_from_slice(src);
                 }
             }
@@ -408,28 +540,30 @@ impl Trainer {
         Ok(mean_loss)
     }
 
-    /// FedAvg round ([`RoundPlan::Full`]): per-client τ full-model local
-    /// steps fan out (each worker owns a private model clone), then the
-    /// ρ-weighted model aggregation streams in client-index order.
-    fn round_full(&mut self) -> anyhow::Result<f64> {
-        let n = self.cfg.num_clients;
+    /// FedAvg round ([`RoundPlan::Full`]) over the cohort: per-participant
+    /// τ full-model local steps fan out (each worker owns a private model
+    /// clone), then the weighted model aggregation streams in cohort
+    /// order.
+    fn round_full(&mut self, participants: &[usize], weights: &[f64]) -> anyhow::Result<f64> {
+        let k = participants.len();
         let lr = self.cfg.lr;
         let tau = self.cfg.tau;
-        // Phase 0: τ batch-index draws per client, in client order on the
-        // coordinator thread (per-client Batcher RNG order is identical to
-        // serial).  Workers materialize their own client's tensors from
-        // the shared read-only dataset, so only one batch per worker is
-        // resident at a time.
-        let draws: Vec<Vec<Vec<usize>>> = (0..n)
-            .map(|i| (0..tau).map(|_| self.batchers[i].next_batch()).collect())
+        // Phase 0: τ batch-index draws per participant, in ascending
+        // client order on the coordinator thread (per-client Batcher RNG
+        // order is identical to serial).  Workers materialize their own
+        // client's tensors from the shared read-only dataset, so only one
+        // batch per worker is resident at a time.
+        let draws: Vec<Vec<Vec<usize>>> = participants
+            .iter()
+            .map(|&i| (0..tau).map(|_| self.batchers[i].next_batch()).collect())
             .collect();
         let rt = &self.rt;
         let train = &self.train;
         let w0 = &self.w_full;
-        let locals = self.pool.map(n, |i| {
+        let locals = self.pool.map(k, |j| {
             let mut w = w0.clone();
             let mut first_loss = 0.0f32;
-            for (e, idx) in draws[i].iter().enumerate() {
+            for (e, idx) in draws[j].iter().enumerate() {
                 let (x, y) = train.batch(idx);
                 let (loss, g) = rt.full_grad(&w, &x, &y)?;
                 if e == 0 {
@@ -441,9 +575,9 @@ impl Trainer {
         })?;
         let mut agg = tensor::zeros_like(&self.w_full);
         let mut loss_acc = 0.0;
-        for (i, (loss, w)) in locals.iter().enumerate() {
-            loss_acc += self.rho[i] * *loss as f64;
-            tensor::weighted_accumulate(&mut agg, w, self.rho[i]);
+        for (j, (loss, w)) in locals.iter().enumerate() {
+            loss_acc += weights[j] * *loss as f64;
+            tensor::weighted_accumulate(&mut agg, w, weights[j]);
         }
         self.w_full = agg;
         Ok(loss_acc)

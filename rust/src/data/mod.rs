@@ -10,6 +10,7 @@
 //! class count and dataset sizes match the real datasets.
 
 pub mod init;
+pub mod partition;
 
 use crate::model::ShapeSpec;
 use crate::runtime::Tensor;
@@ -172,47 +173,20 @@ pub fn generate(spec: &ShapeSpec, name: &str, n: usize, seed: u64) -> Dataset {
 
 /// Split sample indices across `n_clients`: IID (uniform) or label-skewed
 /// via a symmetric Dirichlet(alpha) per class (standard non-IID protocol).
+///
+/// Convenience wrapper over [`partition::Partition::indices`] — the full
+/// strategy set (including pathological shard skew) lives there.
 pub fn partition(
     ds: &Dataset,
     n_clients: usize,
     dirichlet_alpha: Option<f64>,
     seed: u64,
 ) -> Vec<Vec<usize>> {
-    let mut rng = Pcg::new(seed, 0x59117u64);
-    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); n_clients];
-    match dirichlet_alpha {
-        None => {
-            let mut idx: Vec<usize> = (0..ds.len()).collect();
-            rng.shuffle(&mut idx);
-            for (i, s) in idx.into_iter().enumerate() {
-                shards[i % n_clients].push(s);
-            }
-        }
-        Some(alpha) => {
-            for cls in 0..ds.classes {
-                let mut members: Vec<usize> = (0..ds.len())
-                    .filter(|&i| ds.labels[i] as usize == cls)
-                    .collect();
-                rng.shuffle(&mut members);
-                let props = rng.dirichlet(alpha, n_clients);
-                let mut start = 0usize;
-                for (ci, &p) in props.iter().enumerate() {
-                    let take = if ci + 1 == n_clients {
-                        members.len() - start
-                    } else {
-                        ((p * members.len() as f64).round() as usize)
-                            .min(members.len() - start)
-                    };
-                    shards[ci].extend_from_slice(&members[start..start + take]);
-                    start += take;
-                }
-            }
-            for s in &mut shards {
-                rng.shuffle(s);
-            }
-        }
-    }
-    shards
+    let strategy = match dirichlet_alpha {
+        None => partition::Partition::Iid,
+        Some(alpha) => partition::Partition::Dirichlet(alpha),
+    };
+    strategy.indices(&ds.labels, ds.classes, n_clients, seed)
 }
 
 /// Cycling mini-batch iterator over one client's shard.

@@ -1,0 +1,315 @@
+//! Client data partitioning — the data axis of the scenario engine.
+//!
+//! A [`Partition`] strategy splits one dataset's sample indices across N
+//! clients.  Three strategies cover the standard federated-learning
+//! evaluation protocols (see DESIGN.md §Scenarios for the math):
+//!
+//! * **IID** — a uniform shuffle dealt round-robin: every client sees the
+//!   global label distribution and |D^n| is equal up to one sample.
+//! * **Dirichlet(α)** — label skew: for every class c a proportion vector
+//!   p_c ~ Dir(α·1_N) decides how that class's samples split across
+//!   clients.  α → ∞ recovers IID; α → 0 assigns each class to
+//!   essentially one client.  This is the standard non-IID benchmark
+//!   protocol (Hsu et al. 2019), and the protocol cut-layer studies such
+//!   as arXiv:2412.15536 sweep.
+//! * **Shards(s)** — pathological skew (McMahan et al. 2017): sort
+//!   indices by label, slice into N·s contiguous shards, deal s shards to
+//!   each client.  Each client then holds at most ~s·⌈spanned labels⌉
+//!   distinct classes regardless of α-style randomness.
+//!
+//! All strategies are deterministic in `seed`, and every sample is
+//! assigned to exactly one client (full coverage).  Skewed strategies can
+//! produce empty shards (e.g. Dirichlet with small α);
+//! [`Partition::indices`] repairs those by moving single samples from the
+//! largest shard, so every client can always build a [`super::Batcher`].
+//!
+//! The per-client shard sizes drive the aggregation weights ρ^n = |D^n|/|D|
+//! the trainer reduces with (sample-count-weighted FedAvg) — see
+//! [`crate::coordinator::Trainer`].
+
+use crate::util::rng::Pcg;
+
+/// How sample indices are split across clients.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum Partition {
+    /// Uniform shuffle, round-robin deal (every client ≈ the global
+    /// distribution).
+    #[default]
+    Iid,
+    /// Symmetric-Dirichlet label skew with concentration α > 0.
+    Dirichlet(f64),
+    /// Pathological label skew: label-sorted shards, `s ≥ 1` shards per
+    /// client.
+    Shards(usize),
+}
+
+impl Partition {
+    /// Parse the CLI syntax: `iid` | `dirichlet:<alpha>` | `shards:<s>`.
+    pub fn parse(s: &str) -> anyhow::Result<Partition> {
+        let lower = s.to_ascii_lowercase();
+        if lower == "iid" {
+            return Ok(Partition::Iid);
+        }
+        if let Some(a) = lower.strip_prefix("dirichlet:") {
+            let alpha: f64 = a
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--partition dirichlet:{a}: {e}"))?;
+            anyhow::ensure!(
+                alpha.is_finite() && alpha > 0.0,
+                "dirichlet alpha must be finite and > 0, got {alpha}"
+            );
+            return Ok(Partition::Dirichlet(alpha));
+        }
+        if let Some(k) = lower.strip_prefix("shards:") {
+            let s: usize = k
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--partition shards:{k}: {e}"))?;
+            anyhow::ensure!(s >= 1, "shards per client must be >= 1");
+            return Ok(Partition::Shards(s));
+        }
+        anyhow::bail!("unknown partition '{s}' (iid|dirichlet:<alpha>|shards:<s>)")
+    }
+
+    /// Human/CSV-friendly name ("iid", "dirichlet(0.3)", "shards(2)").
+    pub fn name(&self) -> String {
+        match self {
+            Partition::Iid => "iid".to_string(),
+            Partition::Dirichlet(a) => format!("dirichlet({a})"),
+            Partition::Shards(s) => format!("shards({s})"),
+        }
+    }
+
+    /// Split sample indices `0..labels.len()` across `n_clients`.
+    ///
+    /// Deterministic in `seed`; every sample lands in exactly one shard
+    /// and every shard is non-empty (skew-induced empties are repaired by
+    /// moving single samples from the largest shard).  `classes` is the
+    /// label-space size (Dirichlet draws one proportion vector per class,
+    /// present or not, so the RNG stream only depends on the config).
+    pub fn indices(
+        &self,
+        labels: &[u8],
+        classes: usize,
+        n_clients: usize,
+        seed: u64,
+    ) -> Vec<Vec<usize>> {
+        assert!(n_clients > 0, "need at least one client");
+        assert!(
+            labels.len() >= n_clients,
+            "cannot split {} samples across {} clients",
+            labels.len(),
+            n_clients
+        );
+        let mut rng = Pcg::new(seed, 0x59117u64);
+        let mut shards: Vec<Vec<usize>> = vec![Vec::new(); n_clients];
+        match *self {
+            Partition::Iid => {
+                let mut idx: Vec<usize> = (0..labels.len()).collect();
+                rng.shuffle(&mut idx);
+                for (i, s) in idx.into_iter().enumerate() {
+                    shards[i % n_clients].push(s);
+                }
+            }
+            Partition::Dirichlet(alpha) => {
+                for cls in 0..classes {
+                    let mut members: Vec<usize> = (0..labels.len())
+                        .filter(|&i| labels[i] as usize == cls)
+                        .collect();
+                    rng.shuffle(&mut members);
+                    let props = rng.dirichlet(alpha, n_clients);
+                    let mut start = 0usize;
+                    for (ci, &p) in props.iter().enumerate() {
+                        let take = if ci + 1 == n_clients {
+                            members.len() - start
+                        } else {
+                            ((p * members.len() as f64).round() as usize)
+                                .min(members.len() - start)
+                        };
+                        shards[ci].extend_from_slice(&members[start..start + take]);
+                        start += take;
+                    }
+                }
+                for s in &mut shards {
+                    rng.shuffle(s);
+                }
+            }
+            Partition::Shards(per_client) => {
+                let per_client = per_client.max(1);
+                let total_shards = n_clients * per_client;
+                // Label-sorted order (stable by index) → contiguous runs
+                // of each class.
+                let mut order: Vec<usize> = (0..labels.len()).collect();
+                order.sort_by_key(|&i| (labels[i], i));
+                // Slice into near-equal contiguous chunks; the first
+                // `rem` chunks absorb the remainder.
+                let base = order.len() / total_shards;
+                let rem = order.len() % total_shards;
+                let mut chunks: Vec<Vec<usize>> = Vec::with_capacity(total_shards);
+                let mut start = 0usize;
+                for c in 0..total_shards {
+                    let take = base + usize::from(c < rem);
+                    chunks.push(order[start..start + take].to_vec());
+                    start += take;
+                }
+                rng.shuffle(&mut chunks);
+                for (c, chunk) in chunks.into_iter().enumerate() {
+                    shards[c % n_clients].extend_from_slice(&chunk);
+                }
+                for s in &mut shards {
+                    rng.shuffle(s);
+                }
+            }
+        }
+        repair_empty_shards(&mut shards);
+        shards
+    }
+}
+
+/// Move single samples from the largest shard into each empty shard so
+/// every client can batch.  Deterministic: empties are filled in client
+/// order, donors are the largest shard (lowest index on ties), donating
+/// their last element.
+fn repair_empty_shards(shards: &mut [Vec<usize>]) {
+    for i in 0..shards.len() {
+        if !shards[i].is_empty() {
+            continue;
+        }
+        let donor = shards
+            .iter()
+            .enumerate()
+            .max_by(|(ai, a), (bi, b)| a.len().cmp(&b.len()).then(bi.cmp(ai)))
+            .map(|(j, _)| j)
+            .unwrap();
+        assert!(shards[donor].len() > 1, "not enough samples to cover every client");
+        let moved = shards[donor].pop().unwrap();
+        shards[i].push(moved);
+    }
+}
+
+/// Per-class label fractions of one shard (statistics for tests and
+/// diagnostics; each row sums to 1 for a non-empty shard).
+pub fn label_marginals(labels: &[u8], classes: usize, shard: &[usize]) -> Vec<f64> {
+    let mut hist = vec![0.0f64; classes];
+    for &i in shard {
+        hist[labels[i] as usize] += 1.0;
+    }
+    if !shard.is_empty() {
+        let n = shard.len() as f64;
+        for h in &mut hist {
+            *h /= n;
+        }
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Balanced synthetic label vector: `n` samples over `classes` labels.
+    fn labels(n: usize, classes: usize) -> Vec<u8> {
+        (0..n).map(|i| (i % classes) as u8).collect()
+    }
+
+    fn assert_full_coverage(shards: &[Vec<usize>], n: usize) {
+        let mut all: Vec<usize> = shards.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>(), "not a partition of 0..{n}");
+    }
+
+    #[test]
+    fn parse_roundtrip_and_errors() {
+        assert_eq!(Partition::parse("iid").unwrap(), Partition::Iid);
+        assert_eq!(Partition::parse("IID").unwrap(), Partition::Iid);
+        assert_eq!(Partition::parse("dirichlet:0.3").unwrap(), Partition::Dirichlet(0.3));
+        assert_eq!(Partition::parse("shards:2").unwrap(), Partition::Shards(2));
+        assert!(Partition::parse("dirichlet:-1").is_err());
+        assert!(Partition::parse("dirichlet:nope").is_err());
+        assert!(Partition::parse("shards:0").is_err());
+        assert!(Partition::parse("zipf:2").is_err());
+        assert_eq!(Partition::Dirichlet(0.3).name(), "dirichlet(0.3)");
+    }
+
+    #[test]
+    fn every_strategy_covers_all_samples_nonempty() {
+        let ls = labels(1000, 10);
+        for p in [Partition::Iid, Partition::Dirichlet(0.1), Partition::Shards(2)] {
+            let shards = p.indices(&ls, 10, 10, 7);
+            assert_eq!(shards.len(), 10);
+            assert_full_coverage(&shards, 1000);
+            assert!(shards.iter().all(|s| !s.is_empty()), "{} left an empty shard", p.name());
+        }
+    }
+
+    #[test]
+    fn strategies_are_deterministic_in_seed() {
+        let ls = labels(500, 10);
+        for p in [Partition::Iid, Partition::Dirichlet(0.5), Partition::Shards(3)] {
+            let a = p.indices(&ls, 10, 8, 42);
+            let b = p.indices(&ls, 10, 8, 42);
+            assert_eq!(a, b, "{} not deterministic", p.name());
+            let c = p.indices(&ls, 10, 8, 43);
+            assert_ne!(a, c, "{} ignores the seed", p.name());
+        }
+    }
+
+    #[test]
+    fn iid_marginals_are_near_uniform() {
+        let ls = labels(2000, 10);
+        for shard in Partition::Iid.indices(&ls, 10, 10, 3) {
+            for m in label_marginals(&ls, 10, &shard) {
+                assert!((m - 0.1).abs() < 0.08, "IID marginal {m} far from 0.1");
+            }
+        }
+    }
+
+    #[test]
+    fn dirichlet_skew_grows_as_alpha_shrinks() {
+        // Mean max-marginal across clients: α=0.1 must be much more
+        // concentrated than α=10 (which is near IID's 0.1).
+        let ls = labels(2000, 10);
+        let mean_max = |alpha: f64| {
+            let shards = Partition::Dirichlet(alpha).indices(&ls, 10, 10, 5);
+            let sum: f64 = shards
+                .iter()
+                .map(|s| {
+                    label_marginals(&ls, 10, s)
+                        .into_iter()
+                        .fold(0.0f64, f64::max)
+                })
+                .sum();
+            sum / shards.len() as f64
+        };
+        let skewed = mean_max(0.1);
+        let mild = mean_max(10.0);
+        assert!(skewed > 0.35, "alpha=0.1 max-marginal only {skewed}");
+        assert!(mild < 0.3, "alpha=10 max-marginal {mild} too skewed");
+        assert!(skewed > 1.5 * mild, "no separation: {skewed} vs {mild}");
+    }
+
+    #[test]
+    fn shards_limit_distinct_labels_per_client() {
+        // 2000 samples, 10 classes, s=2 shards of 100 contiguous
+        // label-sorted samples: each shard spans ≤ 2 labels, so every
+        // client sees ≤ 4 distinct labels (vs ~10 under IID).
+        let ls = labels(2000, 10);
+        let shards = Partition::Shards(2).indices(&ls, 10, 10, 9);
+        assert_full_coverage(&shards, 2000);
+        for s in &shards {
+            let distinct = label_marginals(&ls, 10, s).iter().filter(|&&m| m > 0.0).count();
+            assert!(distinct <= 4, "client has {distinct} labels under shards:2");
+        }
+    }
+
+    #[test]
+    fn empty_shards_are_repaired() {
+        // 4 samples of one class across 4 clients under extreme skew:
+        // Dirichlet will pile everything on few clients; repair must
+        // leave everyone with at least one sample.
+        let ls = vec![0u8; 4];
+        let shards = Partition::Dirichlet(0.01).indices(&ls, 10, 4, 1);
+        assert_eq!(shards.len(), 4);
+        assert!(shards.iter().all(|s| !s.is_empty()));
+        assert_full_coverage(&shards, 4);
+    }
+}

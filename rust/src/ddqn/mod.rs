@@ -1,5 +1,12 @@
 //! Pure-Rust Double-DQN: MLP Q-network + Adam + replay + double-Q targets.
 //! Drives the cutting-point selection subproblem P2.2 (see [`crate::ccc`]).
+//!
+//! Layout: [`nn`] is a minimal dense MLP with manual backprop, [`adam`]
+//! its optimizer, [`replay`] the ring-buffer experience store, and
+//! [`agent`] ties them into the ε-greedy Double-DQN of Algorithm 1
+//! (online net selects the argmax action, target net evaluates it —
+//! the van Hasselt 2016 decoupling).  Everything is deterministic in the
+//! seed; no external crates.
 
 pub mod adam;
 pub mod agent;

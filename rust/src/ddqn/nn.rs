@@ -5,7 +5,7 @@
 
 use crate::util::rng::Pcg;
 
-/// One dense layer: row-major weights [out][in] + bias.
+/// One dense layer: row-major weights `[out][in]` + bias.
 #[derive(Clone, Debug)]
 pub struct Layer {
     pub w: Vec<f32>,

@@ -29,6 +29,7 @@ pub fn run(ctx: &FigCtx) -> anyhow::Result<()> {
                 eval_every: if ctx.fast { 5 } else { 4 },
                 seed: ctx.seed,
                 threads: ctx.threads,
+                scenario: ctx.scenario.clone(),
                 ..Default::default()
             };
             let mut trainer = Trainer::native(&ctx.manifest, cfg)?;

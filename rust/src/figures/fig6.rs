@@ -23,13 +23,16 @@ pub fn run(ctx: &FigCtx) -> anyhow::Result<()> {
             alloc: AllocPolicy::Optimal,
             ..Default::default()
         };
-        let mut env = ccc::Env::new(
+        // The agent trains under the same scenario the evaluation runs in
+        // (stragglers shift the allocator costs it optimizes against).
+        let mut env = ccc::Env::with_scenario(
             spec.clone(),
             Default::default(),
             Default::default(),
             ccc_cfg,
             10,
             ctx.seed,
+            ctx.scenario.clone(),
         );
         let trained = ccc::train(&mut env, ctx.seed ^ 0xA1);
 
@@ -68,6 +71,7 @@ pub fn run(ctx: &FigCtx) -> anyhow::Result<()> {
                 alloc: *alloc,
                 seed: ctx.seed,
                 threads: ctx.threads,
+                scenario: ctx.scenario.clone(),
                 ..Default::default()
             };
             let mut trainer = Trainer::native(&ctx.manifest, cfg)?;

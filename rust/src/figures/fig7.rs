@@ -26,13 +26,16 @@ pub fn run(ctx: &FigCtx) -> anyhow::Result<()> {
             alloc: AllocPolicy::Equal,
             ..Default::default()
         };
-        let mut env = ccc::Env::new(
+        // Scenario flags carry through: stragglers/participation shift
+        // the allocator costs the reward is built from.
+        let mut env = ccc::Env::with_scenario(
             spec.clone(),
             Default::default(),
             Default::default(),
             cfg,
             10,
             ctx.seed,
+            ctx.scenario.clone(),
         );
         let trained = ccc::train(&mut env, ctx.seed ^ 0x77);
         let mut smooth = f64::NAN;

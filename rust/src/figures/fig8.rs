@@ -6,29 +6,50 @@
 use crate::coordinator::SchemeKind;
 use crate::coordinator::timing::{AllocPolicy, round_latency};
 use crate::latency::ComputeConfig;
+use crate::scenario::ScenarioConfig;
 use crate::util::csvio::CsvWriter;
-use crate::wireless::{Channel, NetConfig};
+use crate::wireless::{Channel, ChannelState, NetConfig};
 
 use super::FigCtx;
 
 pub const CUT: usize = 2;
+pub const CLIENTS: usize = 10;
 
 pub fn run(ctx: &FigCtx) -> anyhow::Result<()> {
     let draws = if ctx.fast { 10 } else { 40 };
     let spec = ctx.manifest.for_dataset("mnist")?.clone();
-    let comp = ComputeConfig::default();
+    // Scenario flags carry through the pure timing sweep too: straggler
+    // capacities and per-draw participation cohorts, resolved exactly
+    // like the trainer resolves them.
+    let mut comp = ComputeConfig::default();
+    let caps = ctx.scenario.resolve_caps(&comp, CLIENTS, ctx.seed);
     let mut w = CsvWriter::create(
         ctx.out("fig8_mnist.csv"),
         &["scheme", "bandwidth_mhz", "mean_round_latency_s"],
     )?;
     for bw_mhz in [5.0, 10.0, 15.0, 20.0, 25.0, 30.0] {
         let net = NetConfig { bandwidth: bw_mhz * 1e6, ..Default::default() };
-        let mut channel = Channel::new(net.clone(), 10, ctx.seed ^ bw_mhz as u64);
-        let states: Vec<_> = (0..draws).map(|_| channel.draw_round()).collect();
+        let mut channel = Channel::new(net.clone(), CLIENTS, ctx.seed ^ bw_mhz as u64);
+        // Each draw is one round: a channel state plus (under partial
+        // participation) its cohort, shared across the four schemes.
+        // The cohort RNG is re-derived per bandwidth point, like the
+        // channel, so every point averages over the same cohort sequence
+        // and adding/removing a bandwidth never shifts the others.
+        let mut part_rng = ScenarioConfig::part_rng(ctx.seed ^ bw_mhz as u64);
+        let rounds: Vec<(ChannelState, Vec<f64>)> = (0..draws)
+            .map(|_| {
+                let st = channel.draw_round();
+                let cohort = ctx.scenario.draw_participants(&mut part_rng, CLIENTS);
+                let gains = cohort.iter().map(|&i| st.gains[i]).collect();
+                let cohort_caps = cohort.iter().map(|&i| caps[i]).collect();
+                (ChannelState { gains }, cohort_caps)
+            })
+            .collect();
         for scheme in SchemeKind::all() {
-            let mean: f64 = states
+            let mean: f64 = rounds
                 .iter()
-                .map(|st| {
+                .map(|(st, cohort_caps)| {
+                    comp.client_caps = cohort_caps.clone();
                     round_latency(
                         scheme,
                         &spec,

@@ -11,6 +11,7 @@ pub mod fig8;
 use std::path::{Path, PathBuf};
 
 use crate::model::Manifest;
+use crate::scenario::ScenarioConfig;
 
 /// Shared harness context.  Figures run on the built-in manifest and the
 /// native backend, so regenerating them needs no artifacts.
@@ -23,6 +24,9 @@ pub struct FigCtx {
     /// Round-engine worker threads (0 = auto); results are bitwise
     /// identical for every value, so figures stay reproducible.
     pub threads: usize,
+    /// Scenario the training figures (3–6) run under; the default
+    /// reproduces the paper's IID homogeneous always-on setup.
+    pub scenario: ScenarioConfig,
 }
 
 impl FigCtx {
@@ -34,6 +38,7 @@ impl FigCtx {
             fast,
             seed,
             threads: 0,
+            scenario: ScenarioConfig::default(),
         })
     }
 

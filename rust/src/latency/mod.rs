@@ -18,6 +18,12 @@ pub struct ComputeConfig {
     /// Heterogeneity spread in [0, 1): client n's capacity is drawn once
     /// as f_client_max · U(1 − spread, 1].  0 = homogeneous (paper §V-A).
     pub f_client_spread: f64,
+    /// Explicit per-client capacities in FLOPS, overriding the
+    /// max/spread draw when non-empty.  The scenario engine resolves
+    /// spread + straggler multipliers into this table once per deployment
+    /// so that per-round participant *subsets* keep each client's
+    /// hardware stable (see [`crate::scenario::StragglerConfig`]).
+    pub client_caps: Vec<f64>,
     /// Total server compute f^s_max (shared across clients) in FLOPS.
     pub f_server_total: f64,
     /// Samples processed per client per round (D^n in eqs 14–16).
@@ -31,6 +37,7 @@ impl Default for ComputeConfig {
         ComputeConfig {
             f_client_max: 0.1e9,
             f_client_spread: 0.0,
+            client_caps: Vec::new(),
             f_server_total: 100e9,
             samples_per_round: 32,
             bits_per_scalar: 32.0,
@@ -39,9 +46,20 @@ impl Default for ComputeConfig {
 }
 
 impl ComputeConfig {
-    /// Per-client FLOPS capacities f^{n,c}_max — fixed hardware, drawn
-    /// once per deployment from the spread (deterministic in `seed`).
+    /// Per-client FLOPS capacities f^{n,c}_max — fixed hardware.  An
+    /// explicit [`ComputeConfig::client_caps`] table wins; otherwise
+    /// capacities are drawn once per deployment from the spread
+    /// (deterministic in `seed`).
     pub fn client_flops(&self, n: usize, seed: u64) -> Vec<f64> {
+        if !self.client_caps.is_empty() {
+            assert!(
+                self.client_caps.len() >= n,
+                "client_caps has {} entries for {} clients",
+                self.client_caps.len(),
+                n
+            );
+            return self.client_caps[..n].to_vec();
+        }
         if self.f_client_spread <= 0.0 {
             return vec![self.f_client_max; n];
         }

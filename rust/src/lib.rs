@@ -1,19 +1,55 @@
 //! # SFL-GA — Split Federated Learning with Gradient Aggregation
 //!
-//! Reproduction of "Communication-and-Computation Efficient Split Federated
-//! Learning: Gradient Aggregation and Resource Management" (cs.DC 2025).
+//! Reproduction of *"Communication-and-Computation Efficient Split
+//! Federated Learning: Gradient Aggregation and Resource Management"*
+//! (cs.DC 2025), grown into a pure-Rust simulator of split federated
+//! training over wireless networks — schemes, system models, resource
+//! optimization and figure harnesses, with no external dependencies.
 //!
-//! Layer map (see DESIGN.md):
+//! ## Quick start
+//!
+//! ```no_run
+//! use sfl_ga::coordinator::{SchemeKind, TrainConfig, Trainer};
+//! use sfl_ga::model::Manifest;
+//!
+//! let manifest = Manifest::builtin();
+//! let cfg = TrainConfig { scheme: SchemeKind::SflGa, rounds: 20, ..Default::default() };
+//! let mut trainer = Trainer::native(&manifest, cfg)?;
+//! for stats in trainer.run(2)? {
+//!     if let Some((loss, acc)) = stats.test {
+//!         println!("round {}: loss {loss:.3} acc {acc:.3}", stats.round);
+//!     }
+//! }
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! ## Layer map (see DESIGN.md)
+//!
 //! - [`runtime`] executes the split model behind the [`runtime::Backend`]
 //!   trait: the pure-Rust native backend by default, or (feature `pjrt`)
-//!   the JAX/Pallas AOT artifacts (HLO text) via a PJRT engine thread.
-//! - [`coordinator`] implements the paper's training frameworks: SFL-GA and
-//!   the SFL / PSL / FL baselines, with full communication accounting.
+//!   the JAX/Pallas AOT artifacts (HLO text) via a PJRT engine pool; the
+//!   [`runtime::ParallelExecutor`] fans per-client calls across worker
+//!   threads with bitwise-deterministic results.
+//! - [`coordinator`] implements the paper's training frameworks — SFL-GA
+//!   and the SFL / PSL / FL baselines — as ONE phased round engine
+//!   configured per scheme by a [`coordinator::RoundPlan`], with full
+//!   communication accounting.
+//! - [`data`] generates the synthetic datasets and, via
+//!   [`data::partition`], splits them across clients (IID / Dirichlet
+//!   label skew / pathological shards).
+//! - [`scenario`] parameterizes runs by data distribution, partial
+//!   participation and compute stragglers — the heterogeneity the CCC
+//!   strategy exists to manage.
 //! - [`wireless`], [`latency`], [`privacy`] are the paper's §II system
 //!   models (eqs 10–17, 29).
 //! - [`allocator`] solves the per-round convex resource-allocation
-//!   subproblem P2.1; [`ddqn`] + [`ccc`] implement Algorithm 1 (joint CCC).
+//!   subproblem P2.1; [`ddqn`] + [`ccc`] implement Algorithm 1 (joint
+//!   cut/communication/computation management).
 //! - [`figures`] regenerates Figures 3–8 of the paper's evaluation.
+//!
+//! Everything is deterministic in the run seed: figures, training curves
+//! and benchmarks reproduce bit-for-bit across machines and thread
+//! counts.
 
 pub mod util;
 
@@ -34,6 +70,8 @@ pub mod ddqn;
 pub mod runtime;
 
 pub mod data;
+
+pub mod scenario;
 
 pub mod coordinator;
 

@@ -46,6 +46,7 @@ fn cmd_train(args: &Args, results_dir: &Path, seed: u64) -> anyhow::Result<()> {
     let dataset = args.str_or("dataset", "mnist");
     let scheme = SchemeKind::parse(&args.str_or("scheme", "sfl-ga"))?;
     let cut = args.parse_or("cut", 2usize)?;
+    let scenario = args.scenario()?;
     let cfg = TrainConfig {
         dataset: dataset.clone(),
         scheme,
@@ -54,10 +55,7 @@ fn cmd_train(args: &Args, results_dir: &Path, seed: u64) -> anyhow::Result<()> {
         tau: args.parse_or("tau", 1usize)?,
         lr: args.parse_or("lr", 0.02f32)?,
         samples_per_client: args.parse_or("samples-per-client", 256usize)?,
-        non_iid_alpha: args
-            .get("non-iid-alpha")
-            .map(|v| v.parse::<f64>())
-            .transpose()?,
+        scenario: scenario.clone(),
         seed,
         eval_every: args.parse_or("eval-every", 5usize)?,
         threads: args.threads()?,
@@ -69,7 +67,12 @@ fn cmd_train(args: &Args, results_dir: &Path, seed: u64) -> anyhow::Result<()> {
         },
         ..Default::default()
     };
-    info!("training {} on {dataset}, cut v={cut}, {} rounds", scheme.name(), cfg.rounds);
+    info!(
+        "training {} on {dataset} [{}], cut v={cut}, {} rounds",
+        scheme.name(),
+        scenario.describe(),
+        cfg.rounds
+    );
     let mut trainer = Trainer::native(&manifest, cfg)?;
     info!("backend: {} ({} round-engine threads)", trainer.backend_name(), trainer.threads());
     let mut metrics = RunMetrics::new(scheme, &dataset);
@@ -105,13 +108,23 @@ fn cmd_optimize(args: &Args, seed: u64) -> anyhow::Result<()> {
         ..Default::default()
     };
     let clients = args.parse_or("clients", 10usize)?;
+    let scenario = args.scenario()?;
     info!(
-        "Algorithm 1 on {dataset}: eps={}, {} episodes x {} steps, {clients} clients",
+        "Algorithm 1 on {dataset} [{}]: eps={}, {} episodes x {} steps, {clients} clients",
+        scenario.describe(),
         cfg.epsilon,
         cfg.episodes,
         cfg.steps_per_episode,
     );
-    let mut env = ccc::Env::new(spec, Default::default(), Default::default(), cfg, clients, seed);
+    let mut env = ccc::Env::with_scenario(
+        spec,
+        Default::default(),
+        Default::default(),
+        cfg,
+        clients,
+        seed,
+        scenario,
+    );
     let trained = ccc::train(&mut env, seed ^ 0xA1);
     let n = trained.episode_rewards.len();
     for (ep, r) in trained.episode_rewards.iter().enumerate() {
@@ -125,6 +138,9 @@ fn cmd_optimize(args: &Args, seed: u64) -> anyhow::Result<()> {
 fn cmd_figures(args: &Args, results_dir: &Path, seed: u64) -> anyhow::Result<()> {
     let mut ctx = FigCtx::new(results_dir, args.flag("fast"), seed)?;
     ctx.threads = args.threads()?;
+    // Figures reproduce the paper's setup by default; scenario flags let
+    // the same harnesses replot under heterogeneity.
+    ctx.scenario = args.scenario()?;
     if args.flag("all") {
         figures::run_all(&ctx)?;
     } else {

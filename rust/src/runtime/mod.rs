@@ -6,7 +6,7 @@
 //!   `client_grad`, `full_grad`, `eval`) over flat f32 buffers.
 //! * [`native`] — the default pure-Rust backend: dense/conv/pool forward
 //!   and backward on the host, zero external dependencies.
-//! * [`engine`] (feature `pjrt`) — the XLA/PJRT engine pool that executes
+//! * `engine` (feature `pjrt`) — the XLA/PJRT engine pool that executes
 //!   the HLO-text artifacts produced by `python/compile/aot.py`.  This is
 //!   the ONLY place PJRT/xla types appear; the coordinator above deals
 //!   purely in [`Tensor`] buffers.

@@ -1,0 +1,286 @@
+//! The scenario engine: who trains, on what data, on what hardware.
+//!
+//! The paper's CCC strategy only matters when clients differ — in
+//! channels, compute and data — so every training run is parameterized by
+//! a [`ScenarioConfig`] with three orthogonal axes:
+//!
+//! * **data distribution** — a [`Partition`] strategy (IID /
+//!   Dirichlet(α) label skew / pathological shards) producing the
+//!   per-client datasets and, through their sizes, the sample-count
+//!   aggregation weights ρ^n = |D^n|/|D|;
+//! * **client heterogeneity** — a [`StragglerConfig`] marking a fraction
+//!   of clients as stragglers whose compute capacity is divided by a
+//!   slowdown factor, flowing into [`crate::latency::ComputeConfig`] and
+//!   from there into the timing model and the P2.1 resource allocator;
+//! * **participation** — a per-round client sampling rate: each round the
+//!   coordinator draws K = ⌈rate·N⌉ of the N clients from the round RNG,
+//!   and only those clients compute, communicate and aggregate (with
+//!   weights renormalized over the cohort).
+//!
+//! Defaults reproduce the paper's §V-A setup exactly: IID data,
+//! homogeneous always-on clients.  Determinism: every draw is keyed on
+//! the run seed and happens on the coordinator thread, so scenario runs
+//! inherit the round engine's bitwise thread-count independence (see
+//! `tests/determinism.rs` and DESIGN.md §Scenarios).
+
+use crate::data::partition::Partition;
+use crate::latency::ComputeConfig;
+use crate::util::rng::Pcg;
+
+/// Compute heterogeneity: a fraction of clients run `factor×` slower.
+///
+/// CLI syntax: `--straggler <frac>x<factor>`, e.g. `0.25x4` = a quarter
+/// of the clients at a quarter speed.  Which clients straggle is drawn
+/// once per deployment (fixed hardware), deterministically from the seed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StragglerConfig {
+    /// Fraction of clients that are stragglers, in [0, 1].
+    pub frac: f64,
+    /// Slowdown factor (≥ 1): straggler capacity = f_client / factor.
+    pub factor: f64,
+}
+
+impl Default for StragglerConfig {
+    fn default() -> Self {
+        StragglerConfig { frac: 0.0, factor: 1.0 }
+    }
+}
+
+impl StragglerConfig {
+    /// Parse the CLI syntax `<frac>x<factor>` (e.g. `0.25x4`); `none`
+    /// disables stragglers.
+    pub fn parse(s: &str) -> anyhow::Result<StragglerConfig> {
+        let lower = s.to_ascii_lowercase();
+        if lower == "none" {
+            return Ok(StragglerConfig::default());
+        }
+        let Some((frac, factor)) = lower.split_once('x') else {
+            anyhow::bail!("bad straggler spec '{s}' (want <frac>x<factor>, e.g. 0.25x4)");
+        };
+        let cfg = StragglerConfig {
+            frac: frac
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--straggler frac '{frac}': {e}"))?,
+            factor: factor
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--straggler factor '{factor}': {e}"))?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.frac) && self.frac.is_finite(),
+            "straggler fraction must be in [0, 1], got {}",
+            self.frac
+        );
+        anyhow::ensure!(
+            self.factor >= 1.0 && self.factor.is_finite(),
+            "straggler factor must be >= 1, got {}",
+            self.factor
+        );
+        Ok(())
+    }
+
+    /// Any straggling configured?
+    pub fn enabled(&self) -> bool {
+        self.frac > 0.0 && self.factor > 1.0
+    }
+
+    /// Per-client speed multipliers in (0, 1]: `1/factor` for the
+    /// ⌈frac·n⌉ straggler clients (chosen by a seeded shuffle), `1.0`
+    /// for the rest.  All-ones when disabled.
+    pub fn multipliers(&self, n: usize, seed: u64) -> Vec<f64> {
+        let mut m = vec![1.0; n];
+        if !self.enabled() || n == 0 {
+            return m;
+        }
+        let k = ((self.frac * n as f64).ceil() as usize).clamp(1, n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        let mut rng = Pcg::new(seed, 0x57A6);
+        rng.shuffle(&mut idx);
+        for &i in &idx[..k] {
+            m[i] = 1.0 / self.factor;
+        }
+        m
+    }
+}
+
+/// The full scenario: data partition × participation × stragglers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioConfig {
+    /// How training data splits across clients.
+    pub partition: Partition,
+    /// Per-round participation rate in (0, 1]: each round the coordinator
+    /// samples ⌈rate·N⌉ clients.  `1.0` = everyone, every round.
+    pub participation: f64,
+    /// Compute heterogeneity profile.
+    pub straggler: StragglerConfig,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            partition: Partition::Iid,
+            participation: 1.0,
+            straggler: StragglerConfig::default(),
+        }
+    }
+}
+
+impl ScenarioConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.participation > 0.0 && self.participation <= 1.0,
+            "participation rate must be in (0, 1], got {}",
+            self.participation
+        );
+        if let Partition::Dirichlet(a) = self.partition {
+            anyhow::ensure!(a.is_finite() && a > 0.0, "dirichlet alpha must be > 0, got {a}");
+        }
+        if let Partition::Shards(s) = self.partition {
+            anyhow::ensure!(s >= 1, "shards per client must be >= 1");
+        }
+        self.straggler.validate()
+    }
+
+    /// True when every client participates every round — the fast path
+    /// that bypasses the cohort draw entirely (and therefore reproduces
+    /// pre-scenario runs byte-for-byte).
+    pub fn full_participation(&self) -> bool {
+        self.participation >= 1.0
+    }
+
+    /// Cohort size K = ⌈rate·N⌉, clamped to [1, N].
+    pub fn cohort_size(&self, n: usize) -> usize {
+        ((self.participation * n as f64).ceil() as usize).clamp(1, n)
+    }
+
+    /// Draw this round's participant set: K distinct client indices,
+    /// returned **sorted ascending** so reductions over the cohort keep
+    /// the fixed client-index order the determinism guarantee needs.
+    /// Full participation returns `0..n` without touching `rng`.
+    pub fn draw_participants(&self, rng: &mut Pcg, n: usize) -> Vec<usize> {
+        if self.full_participation() {
+            return (0..n).collect();
+        }
+        let k = self.cohort_size(n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let mut cohort = idx[..k].to_vec();
+        cohort.sort_unstable();
+        cohort
+    }
+
+    /// Resolve the deployment's per-client compute capacities in FLOPS:
+    /// the max/spread draw of [`ComputeConfig::client_flops`] (seeded by
+    /// the client count, matching the timing model's convention) with the
+    /// straggler multipliers folded in.  The trainer, the CCC environment
+    /// and the figure harnesses all share this fold, so the optimizer
+    /// prices exactly the hardware the simulator runs on.
+    pub fn resolve_caps(&self, comp: &ComputeConfig, n: usize, seed: u64) -> Vec<f64> {
+        let mut caps = comp.client_flops(n, n as u64);
+        if self.straggler.enabled() {
+            let mult = self.straggler.multipliers(n, seed ^ 0x57A6);
+            for (c, m) in caps.iter_mut().zip(&mult) {
+                *c *= m;
+            }
+        }
+        caps
+    }
+
+    /// The participation RNG for a run: one cohort draw per round is
+    /// consumed from this stream (shared between trainer and CCC env so
+    /// both derive it from the run seed identically).
+    pub fn part_rng(seed: u64) -> Pcg {
+        Pcg::new(seed ^ 0x9AC7, 0x9AC7)
+    }
+
+    /// One-line description for logs ("dirichlet(0.3), participation 0.5,
+    /// stragglers 0.25x4").
+    pub fn describe(&self) -> String {
+        let mut s = self.partition.name();
+        if !self.full_participation() {
+            s.push_str(&format!(", participation {}", self.participation));
+        }
+        if self.straggler.enabled() {
+            s.push_str(&format!(
+                ", stragglers {}x{}",
+                self.straggler.frac, self.straggler.factor
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_the_papers_setup() {
+        let s = ScenarioConfig::default();
+        assert_eq!(s.partition, Partition::Iid);
+        assert!(s.full_participation());
+        assert!(!s.straggler.enabled());
+        s.validate().unwrap();
+        assert_eq!(s.describe(), "iid");
+    }
+
+    #[test]
+    fn straggler_parse_and_multipliers() {
+        let s = StragglerConfig::parse("0.25x4").unwrap();
+        assert_eq!(s, StragglerConfig { frac: 0.25, factor: 4.0 });
+        assert!(StragglerConfig::parse("none").unwrap() == StragglerConfig::default());
+        assert!(StragglerConfig::parse("1.5x4").is_err());
+        assert!(StragglerConfig::parse("0.5x0.5").is_err());
+        assert!(StragglerConfig::parse("fastx4").is_err());
+        assert!(StragglerConfig::parse("0.5").is_err());
+
+        let m = s.multipliers(8, 11);
+        assert_eq!(m.len(), 8);
+        assert_eq!(m.iter().filter(|&&x| x == 0.25).count(), 2, "{m:?}");
+        assert_eq!(m.iter().filter(|&&x| x == 1.0).count(), 6);
+        assert_eq!(m, s.multipliers(8, 11), "multipliers not deterministic");
+        assert_ne!(m, s.multipliers(8, 12), "seed ignored");
+        // Disabled profile is the identity.
+        assert_eq!(StragglerConfig::default().multipliers(5, 1), vec![1.0; 5]);
+    }
+
+    #[test]
+    fn cohort_draw_is_sorted_distinct_and_deterministic() {
+        let sc = ScenarioConfig { participation: 0.5, ..Default::default() };
+        sc.validate().unwrap();
+        let mut rng = Pcg::new(3, 1);
+        let a = sc.draw_participants(&mut rng, 10);
+        assert_eq!(a.len(), 5);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "not sorted/distinct: {a:?}");
+        assert!(a.iter().all(|&i| i < 10));
+        // Re-draws differ across rounds but replay identically per seed.
+        let b = sc.draw_participants(&mut rng, 10);
+        let mut rng2 = Pcg::new(3, 1);
+        assert_eq!(a, sc.draw_participants(&mut rng2, 10));
+        assert_eq!(b, sc.draw_participants(&mut rng2, 10));
+    }
+
+    #[test]
+    fn full_participation_is_identity_and_leaves_rng_untouched() {
+        let sc = ScenarioConfig::default();
+        let mut rng = Pcg::new(5, 7);
+        assert_eq!(sc.draw_participants(&mut rng, 4), vec![0, 1, 2, 3]);
+        let mut fresh = Pcg::new(5, 7);
+        assert_eq!(rng.next_u64(), fresh.next_u64(), "full participation consumed RNG");
+    }
+
+    #[test]
+    fn cohort_size_rounds_up_and_clamps() {
+        let sc = |p| ScenarioConfig { participation: p, ..Default::default() };
+        assert_eq!(sc(0.5).cohort_size(10), 5);
+        assert_eq!(sc(0.55).cohort_size(10), 6);
+        assert_eq!(sc(0.01).cohort_size(10), 1);
+        assert_eq!(sc(1.0).cohort_size(10), 10);
+        assert!(sc(0.0).validate().is_err());
+        assert!(sc(1.5).validate().is_err());
+    }
+}

@@ -1,9 +1,13 @@
 //! Tiny declarative CLI argument parser (clap is not vendored offline).
 //!
 //! Supports `--flag`, `--key value`, `--key=value`, positional subcommands,
-//! typed getters with defaults, and auto-generated `--help`.
+//! typed getters with defaults, auto-generated `--help`, and shared typed
+//! getters for cross-cutting options (`--threads`, the scenario flags).
 
 use std::collections::BTreeMap;
+
+use crate::data::partition::Partition;
+use crate::scenario::{ScenarioConfig, StragglerConfig};
 
 #[derive(Debug, Default)]
 pub struct Args {
@@ -76,6 +80,39 @@ impl Args {
         self.parse_or("threads", 0usize)
     }
 
+    /// The scenario flags, shared by `train`, `optimize`, `figures` and
+    /// the examples:
+    ///
+    /// * `--partition iid|dirichlet:<alpha>|shards:<s>` — data split
+    ///   (`--non-iid-alpha A` is accepted as a legacy spelling of
+    ///   `dirichlet:A` when `--partition` is absent);
+    /// * `--participation R` — per-round client sampling rate in (0, 1];
+    /// * `--straggler <frac>x<factor>` — e.g. `0.25x4`: a quarter of the
+    ///   clients at a quarter compute speed (`none` disables).
+    ///
+    /// Defaults reproduce the paper's IID, homogeneous, always-on setup.
+    pub fn scenario(&self) -> anyhow::Result<ScenarioConfig> {
+        let partition = match (self.get("partition"), self.get("non-iid-alpha")) {
+            (Some(p), _) => Partition::parse(p)?,
+            (None, Some(a)) => Partition::Dirichlet(
+                a.parse::<f64>()
+                    .map_err(|e| anyhow::anyhow!("--non-iid-alpha {a}: {e}"))?,
+            ),
+            (None, None) => Partition::Iid,
+        };
+        let straggler = match self.get("straggler") {
+            Some(s) => StragglerConfig::parse(s)?,
+            None => StragglerConfig::default(),
+        };
+        let cfg = ScenarioConfig {
+            partition,
+            participation: self.parse_or("participation", 1.0f64)?,
+            straggler,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
     pub fn usage(&self, prog: &str, about: &str) -> String {
         let mut s = format!("{prog} — {about}\n\noptions:\n");
         for (name, default, help) in &self.declared {
@@ -133,6 +170,38 @@ mod tests {
         assert_eq!(parse(&[]).threads().unwrap(), 0);
         assert_eq!(parse(&["--threads", "4"]).threads().unwrap(), 4);
         assert!(parse(&["--threads", "many"]).threads().is_err());
+    }
+
+    #[test]
+    fn scenario_defaults_and_parsing() {
+        let s = parse(&[]).scenario().unwrap();
+        assert_eq!(s, crate::scenario::ScenarioConfig::default());
+
+        let s = parse(&[
+            "--partition",
+            "dirichlet:0.3",
+            "--participation",
+            "0.5",
+            "--straggler",
+            "0.25x4",
+        ])
+        .scenario()
+        .unwrap();
+        assert_eq!(s.partition, Partition::Dirichlet(0.3));
+        assert_eq!(s.participation, 0.5);
+        assert_eq!(s.straggler.frac, 0.25);
+
+        // Legacy spelling maps to Dirichlet; --partition wins when both.
+        let s = parse(&["--non-iid-alpha", "0.7"]).scenario().unwrap();
+        assert_eq!(s.partition, Partition::Dirichlet(0.7));
+        let s = parse(&["--partition", "shards:2", "--non-iid-alpha", "0.7"])
+            .scenario()
+            .unwrap();
+        assert_eq!(s.partition, Partition::Shards(2));
+
+        assert!(parse(&["--participation", "0"]).scenario().is_err());
+        assert!(parse(&["--partition", "zipf:1"]).scenario().is_err());
+        assert!(parse(&["--straggler", "2x2"]).scenario().is_err());
     }
 
     #[test]

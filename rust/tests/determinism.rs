@@ -12,7 +12,9 @@
 //! reductions run on the coordinator thread in fixed client-index order.
 
 use sfl_ga::coordinator::{AllocPolicy, SchemeKind, TrainConfig, Trainer};
+use sfl_ga::data::partition::Partition;
 use sfl_ga::model::Manifest;
+use sfl_ga::scenario::{ScenarioConfig, StragglerConfig};
 
 /// Full eval curve as raw bits: (round, train_loss, test_loss, test_acc).
 fn eval_curve(seed: u64, scheme: SchemeKind) -> Vec<(usize, u64, u64, u64)> {
@@ -107,5 +109,69 @@ fn parallel_rounds_are_bitwise_equal_to_serial_for_every_scheme_and_cut() {
                 "{scheme:?} cut {cut}: threads=4 final params diverge from threads=1"
             );
         }
+    }
+}
+
+/// Round stats + final global model as raw bits for a full scenario run:
+/// Dirichlet(0.3) label skew, participation 0.5 (cohort of 2 of 4
+/// clients) and a 4× straggler — the heterogeneity path must keep the
+/// same bitwise thread-count independence as the IID path.
+fn run_bits_scenario(scheme: SchemeKind, threads: usize) -> (Vec<u64>, Vec<u32>) {
+    let manifest = Manifest::builtin_with_batches(8, 32);
+    let cfg = TrainConfig {
+        scheme,
+        num_clients: 4,
+        rounds: 3,
+        eval_every: 1,
+        samples_per_client: 16,
+        test_samples: 40,
+        seed: 13,
+        threads,
+        alloc: AllocPolicy::Equal,
+        scenario: ScenarioConfig {
+            partition: Partition::Dirichlet(0.3),
+            participation: 0.5,
+            straggler: StragglerConfig { frac: 0.25, factor: 4.0 },
+        },
+        ..Default::default()
+    };
+    let cut = 2;
+    let mut t = Trainer::native(&manifest, cfg).unwrap();
+    assert_eq!(t.threads(), threads);
+    let mut stat_bits = Vec::new();
+    for s in t.run(cut).unwrap() {
+        assert_eq!(s.participants, 2, "participation 0.5 of 4 clients must pick 2");
+        stat_bits.push(s.train_loss.to_bits());
+        stat_bits.push(s.comm.total_bits().to_bits());
+        stat_bits.push(s.latency.total().to_bits());
+        let (tl, ta) = s.test.expect("eval_every=1 evaluates every round");
+        stat_bits.push(tl.to_bits());
+        stat_bits.push(ta.to_bits());
+    }
+    let param_bits: Vec<u32> =
+        t.global_params(cut).iter().flatten().map(|v| v.to_bits()).collect();
+    (stat_bits, param_bits)
+}
+
+#[test]
+fn scenario_rounds_are_bitwise_equal_to_serial_for_every_scheme() {
+    let schemes = [
+        SchemeKind::SflGa,
+        SchemeKind::SflGaDrift,
+        SchemeKind::Sfl,
+        SchemeKind::Psl,
+        SchemeKind::Fl,
+    ];
+    for scheme in schemes {
+        let (stats1, params1) = run_bits_scenario(scheme, 1);
+        let (stats4, params4) = run_bits_scenario(scheme, 4);
+        assert_eq!(
+            stats1, stats4,
+            "{scheme:?}: scenario threads=4 round stats diverge from threads=1"
+        );
+        assert_eq!(
+            params1, params4,
+            "{scheme:?}: scenario threads=4 final params diverge from threads=1"
+        );
     }
 }

@@ -1,0 +1,256 @@
+//! Scenario-engine integration tests: partition statistics flowing into
+//! sample-count-weighted aggregation, partial participation flowing into
+//! the communication/latency accounting, and straggler compute profiles
+//! flowing into the timing model — plus the backward-compatibility
+//! guarantee that the default scenario reproduces the pre-scenario
+//! (IID, homogeneous, always-on) behavior exactly.
+
+use sfl_ga::coordinator::{AllocPolicy, SchemeKind, TrainConfig, Trainer};
+use sfl_ga::data::partition::{label_marginals, Partition};
+use sfl_ga::data::{generate, partition};
+use sfl_ga::model::Manifest;
+use sfl_ga::scenario::{ScenarioConfig, StragglerConfig};
+use sfl_ga::tensor;
+
+fn manifest() -> Manifest {
+    Manifest::builtin_with_batches(8, 32)
+}
+
+fn base_cfg(scheme: SchemeKind) -> TrainConfig {
+    TrainConfig {
+        scheme,
+        num_clients: 4,
+        rounds: 2,
+        eval_every: 2,
+        samples_per_client: 16,
+        test_samples: 32,
+        seed: 19,
+        alloc: AllocPolicy::Equal,
+        ..Default::default()
+    }
+}
+
+/// The legacy `data::partition` wrapper and the strategy API must agree
+/// exactly — this is what makes `--partition iid` (the default) reproduce
+/// pre-scenario runs byte-for-byte.
+#[test]
+fn partition_wrapper_matches_strategy_api() {
+    let spec = manifest().for_dataset("mnist").unwrap().clone();
+    let ds = generate(&spec, "mnist", 300, 5);
+    assert_eq!(
+        partition(&ds, 6, None, 9),
+        Partition::Iid.indices(&ds.labels, ds.classes, 6, 9)
+    );
+    assert_eq!(
+        partition(&ds, 6, Some(0.3), 9),
+        Partition::Dirichlet(0.3).indices(&ds.labels, ds.classes, 6, 9)
+    );
+}
+
+/// Full coverage + non-empty shards for every strategy on real generated
+/// data, and the label marginals behave as the strategy promises.
+#[test]
+fn partition_statistics_on_generated_data() {
+    let spec = manifest().for_dataset("mnist").unwrap().clone();
+    let ds = generate(&spec, "mnist", 600, 7);
+    for p in [Partition::Iid, Partition::Dirichlet(0.2), Partition::Shards(2)] {
+        let shards = p.indices(&ds.labels, ds.classes, 6, 11);
+        let mut all: Vec<usize> = shards.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..600).collect::<Vec<_>>(), "{}: not a full cover", p.name());
+        assert!(shards.iter().all(|s| !s.is_empty()));
+    }
+    // Dirichlet(0.2) skews at least one client visibly past IID's ~0.1.
+    let skewed = Partition::Dirichlet(0.2).indices(&ds.labels, ds.classes, 6, 11);
+    let max_marginal = skewed
+        .iter()
+        .map(|s| label_marginals(&ds.labels, ds.classes, s).into_iter().fold(0.0f64, f64::max))
+        .fold(0.0f64, f64::max);
+    assert!(max_marginal > 0.3, "no visible skew: max marginal {max_marginal}");
+}
+
+/// Size-weighted FedAvg: aggregating with ρ^n = |D^n|/|D| weights must
+/// equal the hand-computed weighted mean (the reduction the trainer runs
+/// in fixed client-index order).
+#[test]
+fn size_weighted_fedavg_matches_manual_mean() {
+    // Two clients with 1 and 3 samples → ρ = [0.25, 0.75].
+    let sizes = [1usize, 3];
+    let total: usize = sizes.iter().sum();
+    let rho: Vec<f64> = sizes.iter().map(|&s| s as f64 / total as f64).collect();
+    let a: Vec<Vec<f32>> = vec![vec![1.0, -2.0], vec![4.0]];
+    let b: Vec<Vec<f32>> = vec![vec![3.0, 6.0], vec![-4.0]];
+    let agg = tensor::weighted_sum(&[&a, &b], &rho);
+    assert_eq!(agg[0], vec![0.25 * 1.0 + 0.75 * 3.0, 0.25 * -2.0 + 0.75 * 6.0]);
+    assert_eq!(agg[1], vec![0.25 * 4.0 + 0.75 * -4.0]);
+}
+
+/// The trainer's ρ weights come from the partition sizes and sum to 1.
+#[test]
+fn trainer_rho_tracks_partition_sizes() {
+    let mut cfg = base_cfg(SchemeKind::SflGa);
+    cfg.scenario.partition = Partition::Dirichlet(0.3);
+    let t = Trainer::native(&manifest(), cfg).unwrap();
+    let rho = t.rho();
+    assert_eq!(rho.len(), 4);
+    assert!((rho.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    assert!(rho.iter().all(|&r| r > 0.0), "empty shard slipped through: {rho:?}");
+}
+
+/// Partial participation shrinks the cohort AND the accounted traffic:
+/// comm volume scales with who actually uploaded, and the cohort size is
+/// recorded in the round stats.
+#[test]
+fn participation_shrinks_comm_and_is_recorded() {
+    let run = |participation: f64| {
+        let mut cfg = base_cfg(SchemeKind::SflGa);
+        cfg.scenario.participation = participation;
+        let mut t = Trainer::native(&manifest(), cfg).unwrap();
+        t.run(2).unwrap()
+    };
+    let full = run(1.0);
+    let half = run(0.5);
+    assert!(full.iter().all(|s| s.participants == 4));
+    assert!(half.iter().all(|s| s.participants == 2));
+    for (f, h) in full.iter().zip(&half) {
+        assert!(
+            h.comm.total_bits() < f.comm.total_bits(),
+            "cohort of 2 must move fewer bits than cohort of 4"
+        );
+    }
+    // SFL-GA uplink is per-participant: half the cohort, half the upload.
+    assert!((half[0].comm.uplink_bits - full[0].comm.uplink_bits / 2.0).abs() < 1e-6);
+}
+
+/// Straggler profiles slow the simulated round down (the slowest cohort
+/// member gates the computation legs) without changing the traffic.
+#[test]
+fn stragglers_increase_latency_not_comm() {
+    let run = |straggler: StragglerConfig| {
+        let mut cfg = base_cfg(SchemeKind::SflGa);
+        cfg.scenario.straggler = straggler;
+        let mut t = Trainer::native(&manifest(), cfg).unwrap();
+        t.run(2).unwrap()
+    };
+    let plain = run(StragglerConfig::default());
+    let slow = run(StragglerConfig { frac: 0.5, factor: 8.0 });
+    for (p, s) in plain.iter().zip(&slow) {
+        assert_eq!(p.comm.total_bits(), s.comm.total_bits(), "stragglers must not change bits");
+        assert!(
+            s.latency.total() > p.latency.total(),
+            "8x stragglers must slow the round: {} vs {}",
+            s.latency.total(),
+            p.latency.total()
+        );
+    }
+}
+
+/// The explicit default scenario is the pre-scenario behavior: spelling
+/// out `iid + participation 1.0 + no stragglers` changes nothing, and
+/// training results are identical to the implicit default.
+#[test]
+fn default_scenario_is_identity() {
+    let curve = |scenario: ScenarioConfig| {
+        let mut cfg = base_cfg(SchemeKind::SflGa);
+        cfg.scenario = scenario;
+        let mut t = Trainer::native(&manifest(), cfg).unwrap();
+        t.run(2)
+            .unwrap()
+            .into_iter()
+            .map(|s| {
+                (
+                    s.participants,
+                    s.train_loss.to_bits(),
+                    s.comm.total_bits().to_bits(),
+                    s.latency.total().to_bits(),
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+    let implicit = curve(ScenarioConfig::default());
+    let explicit = curve(ScenarioConfig {
+        partition: Partition::Iid,
+        participation: 1.0,
+        straggler: StragglerConfig { frac: 0.0, factor: 1.0 },
+    });
+    assert_eq!(implicit, explicit);
+    assert!(implicit.iter().all(|&(k, ..)| k == 4), "everyone participates by default");
+}
+
+/// Scenario configs are validated at trainer construction.
+#[test]
+fn invalid_scenarios_are_rejected() {
+    for scenario in [
+        ScenarioConfig { participation: 0.0, ..Default::default() },
+        ScenarioConfig { participation: 1.5, ..Default::default() },
+        ScenarioConfig {
+            straggler: StragglerConfig { frac: 2.0, factor: 4.0 },
+            ..Default::default()
+        },
+        ScenarioConfig { partition: Partition::Dirichlet(-0.5), ..Default::default() },
+    ] {
+        let mut cfg = base_cfg(SchemeKind::SflGa);
+        cfg.scenario = scenario;
+        assert!(Trainer::native(&manifest(), cfg).is_err());
+    }
+}
+
+/// Non-IID + partial participation trains end to end for every scheme and
+/// still evaluates (the whole point of the scenario engine).
+#[test]
+fn every_scheme_trains_under_full_scenario() {
+    for scheme in [
+        SchemeKind::SflGa,
+        SchemeKind::SflGaDrift,
+        SchemeKind::Sfl,
+        SchemeKind::Psl,
+        SchemeKind::Fl,
+    ] {
+        let mut cfg = base_cfg(scheme);
+        cfg.scenario = ScenarioConfig {
+            partition: Partition::Shards(2),
+            participation: 0.5,
+            straggler: StragglerConfig { frac: 0.25, factor: 4.0 },
+        };
+        let mut t = Trainer::native(&manifest(), cfg).unwrap();
+        let stats = t.run(2).unwrap();
+        assert_eq!(stats.len(), 2);
+        let (loss, acc) = stats.last().unwrap().test.expect("final round evaluates");
+        assert!(loss.is_finite() && (0.0..=1.0).contains(&acc), "{scheme:?}: {loss} {acc}");
+    }
+}
+
+/// The CCC environment prices stragglers into the allocator's χ: a slow
+/// cohort raises the optimal uplink-leg latency bound.
+#[test]
+fn ccc_env_costs_reflect_stragglers() {
+    use sfl_ga::ccc::{CccConfig, Env};
+    let spec = Manifest::builtin().for_dataset("mnist").unwrap().clone();
+    let cfg = || CccConfig { alloc: AllocPolicy::Equal, ..Default::default() };
+    let mut plain = Env::new(spec.clone(), Default::default(), Default::default(), cfg(), 4, 3);
+    let scenario = ScenarioConfig {
+        straggler: StragglerConfig { frac: 0.5, factor: 8.0 },
+        ..Default::default()
+    };
+    let mut slow = Env::with_scenario(
+        spec,
+        Default::default(),
+        Default::default(),
+        cfg(),
+        4,
+        3,
+        scenario,
+    );
+    // Same seed → same channel draw; only the compute profile differs.
+    let (st_p, _) = plain.reset();
+    let (st_s, _) = slow.reset();
+    assert_eq!(st_p.gains, st_s.gains);
+    for cut in 1..=4 {
+        let (_, chi_p, _) = plain.cost_components(&st_p, cut);
+        let (_, chi_s, _) = slow.cost_components(&st_s, cut);
+        assert!(
+            chi_s >= chi_p,
+            "cut {cut}: straggler χ {chi_s} < homogeneous χ {chi_p}"
+        );
+    }
+}
