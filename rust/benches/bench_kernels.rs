@@ -1,0 +1,206 @@
+//! Native-kernel micro-benchmarks: per-op wall-clock and GFLOP/s for the
+//! conv2d and dense forward/backward kernels at the builtin manifest's
+//! layer shapes, scalar reference vs the im2col+GEMM fast path — the perf
+//! trajectory seed for the runtime layer (ISSUE 4 acceptance: ≥2×
+//! single-thread on conv fwd+bwd).
+//!
+//! Emits a machine-readable summary to `BENCH_kernels.json` (override the
+//! path with `SFLGA_BENCH_OUT`, same convention as `bench_parallel`).
+//! Everything runs single-threaded: this measures the kernels, not the
+//! round engine's fan-out (that is `bench_parallel`'s job).
+
+use std::collections::BTreeMap;
+
+use sfl_ga::benchlib::bench;
+use sfl_ga::model::Manifest;
+use sfl_ga::runtime::native::ops::{self, Geom};
+use sfl_ga::runtime::native::reference;
+use sfl_ga::runtime::Scratch;
+use sfl_ga::util::json::Json;
+
+/// The deterministic dyadic generator the golden tests use: dense values
+/// in [-0.5, 0.5), so the reference's zero-skip heuristic sees realistic
+/// (almost-never-zero) raw inputs.
+fn gen_vec(offset: u64, n: usize) -> Vec<f32> {
+    (0..n as u64)
+        .map(|j| {
+            let h = ((offset + j) as u32).wrapping_mul(2654435761);
+            ((h >> 16) & 0xFF) as f32 / 256.0 - 0.5
+        })
+        .collect()
+}
+
+/// One benchmarked layer op: name, total FLOPs, and the two paths' times.
+struct OpRow {
+    name: String,
+    flops: f64,
+    scalar_ns: f64,
+    gemm_ns: f64,
+}
+
+impl OpRow {
+    fn json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("flops".to_string(), Json::Num(self.flops));
+        m.insert("scalar_ns".to_string(), Json::Num(self.scalar_ns));
+        m.insert("gemm_ns".to_string(), Json::Num(self.gemm_ns));
+        m.insert("speedup".to_string(), Json::Num(self.scalar_ns / self.gemm_ns));
+        m.insert("gflops_scalar".to_string(), Json::Num(self.flops / self.scalar_ns));
+        m.insert("gflops_gemm".to_string(), Json::Num(self.flops / self.gemm_ns));
+        Json::Obj(m)
+    }
+}
+
+fn check_close(tag: &str, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{tag}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= 1e-4 * (1.0 + y.abs()),
+            "{tag}[{i}]: fast {x} vs reference {y}"
+        );
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::builtin();
+    let spec = manifest.for_dataset("mnist")?.clone();
+    let b = spec.train_batch;
+    println!("== native kernels: scalar reference vs im2col+GEMM (batch {b}) ==");
+
+    let mut scratch = Scratch::new();
+    let mut rows: Vec<OpRow> = Vec::new();
+    let (mut conv_scalar_ns, mut conv_gemm_ns) = (0.0f64, 0.0f64);
+
+    // Walk the manifest blocks exactly like NativeBackend::new does.
+    let (mut h, mut w, mut c) =
+        (spec.input_shape[0], spec.input_shape[1], spec.input_shape[2]);
+    for bi in 0..spec.params.len() / 2 {
+        let wshape = &spec.params[2 * bi].shape;
+        let name = spec.params[2 * bi].name.trim_end_matches("_w").to_string();
+        match wshape.len() {
+            4 => {
+                let (k, oc) = (wshape[0], wshape[3]);
+                let g = Geom { b, h, w, c };
+                let x = gen_vec(1_000_000 * bi as u64, g.len());
+                let wt = gen_vec(1_000_000 * bi as u64 + 500_000, k * k * c * oc);
+                let bias = gen_vec(1_000_000 * bi as u64 + 900_000, oc);
+                let d_out = gen_vec(1_000_000 * bi as u64 + 950_000, b * h * w * oc);
+                // 2 FLOPs (mul+add) per tap per output element.
+                let fwd_flops = 2.0 * (b * h * w * k * k * c * oc) as f64;
+
+                check_close(
+                    &format!("{name}_fwd"),
+                    &ops::conv2d_fwd(&mut scratch, &x, g, &wt, k, oc, &bias, true),
+                    &reference::conv2d_fwd(&x, g, &wt, k, oc, &bias, true),
+                );
+                let s = bench(&format!("{name}_fwd/scalar"), 1, 3, || {
+                    reference::conv2d_fwd(&x, g, &wt, k, oc, &bias, true)
+                });
+                let f = bench(&format!("{name}_fwd/gemm"), 1, 3, || {
+                    ops::conv2d_fwd(&mut scratch, &x, g, &wt, k, oc, &bias, true)
+                });
+                println!("    -> speedup {:.2}x", s.mean_ns / f.mean_ns);
+                conv_scalar_ns += s.mean_ns;
+                conv_gemm_ns += f.mean_ns;
+                rows.push(OpRow {
+                    name: format!("{name}_fwd"),
+                    flops: fwd_flops,
+                    scalar_ns: s.mean_ns,
+                    gemm_ns: f.mean_ns,
+                });
+
+                let s = bench(&format!("{name}_bwd/scalar"), 1, 3, || {
+                    reference::conv2d_bwd(&x, g, &wt, k, oc, &d_out)
+                });
+                let f = bench(&format!("{name}_bwd/gemm"), 1, 3, || {
+                    ops::conv2d_bwd(&mut scratch, &x, g, &wt, k, oc, &d_out)
+                });
+                println!("    -> speedup {:.2}x", s.mean_ns / f.mean_ns);
+                conv_scalar_ns += s.mean_ns;
+                conv_gemm_ns += f.mean_ns;
+                rows.push(OpRow {
+                    name: format!("{name}_bwd"),
+                    flops: 2.0 * fwd_flops, // d_x and d_w GEMMs
+                    scalar_ns: s.mean_ns,
+                    gemm_ns: f.mean_ns,
+                });
+                h /= 2;
+                w /= 2;
+                c = oc;
+            }
+            2 => {
+                let (din, dout) = (wshape[0], wshape[1]);
+                let x = gen_vec(2_000_000 * bi as u64, b * din);
+                let wt = gen_vec(2_000_000 * bi as u64 + 500_000, din * dout);
+                let bias = gen_vec(2_000_000 * bi as u64 + 900_000, dout);
+                let d_out = gen_vec(2_000_000 * bi as u64 + 950_000, b * dout);
+                let fwd_flops = 2.0 * (b * din * dout) as f64;
+
+                check_close(
+                    &format!("{name}_fwd"),
+                    &ops::dense_fwd(&mut scratch, &x, b, din, dout, &wt, &bias, true),
+                    &reference::dense_fwd(&x, b, din, dout, &wt, &bias, true),
+                );
+                let s = bench(&format!("{name}_fwd/scalar"), 2, 8, || {
+                    reference::dense_fwd(&x, b, din, dout, &wt, &bias, true)
+                });
+                let f = bench(&format!("{name}_fwd/gemm"), 2, 8, || {
+                    ops::dense_fwd(&mut scratch, &x, b, din, dout, &wt, &bias, true)
+                });
+                println!("    -> speedup {:.2}x", s.mean_ns / f.mean_ns);
+                rows.push(OpRow {
+                    name: format!("{name}_fwd"),
+                    flops: fwd_flops,
+                    scalar_ns: s.mean_ns,
+                    gemm_ns: f.mean_ns,
+                });
+
+                let s = bench(&format!("{name}_bwd/scalar"), 2, 8, || {
+                    reference::dense_bwd(&x, b, din, dout, &wt, &d_out)
+                });
+                let f = bench(&format!("{name}_bwd/gemm"), 2, 8, || {
+                    ops::dense_bwd(&mut scratch, &x, b, din, dout, &wt, &d_out)
+                });
+                println!("    -> speedup {:.2}x", s.mean_ns / f.mean_ns);
+                rows.push(OpRow {
+                    name: format!("{name}_bwd"),
+                    flops: 2.0 * fwd_flops,
+                    scalar_ns: s.mean_ns,
+                    gemm_ns: f.mean_ns,
+                });
+                h = 1;
+                w = 1;
+                c = dout;
+            }
+            r => anyhow::bail!("unsupported weight rank {r}"),
+        }
+    }
+
+    let conv_speedup = conv_scalar_ns / conv_gemm_ns;
+    println!(
+        "conv2d fwd+bwd total: scalar {:.1} ms, gemm {:.1} ms -> {conv_speedup:.2}x \
+         (acceptance floor: 2.00x)",
+        conv_scalar_ns / 1e6,
+        conv_gemm_ns / 1e6
+    );
+    println!("scratch high-water: {} KiB", scratch.capacity_bytes() / 1024);
+
+    let mut ops_json = BTreeMap::new();
+    for row in &rows {
+        ops_json.insert(row.name.clone(), row.json());
+    }
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("native_kernels".to_string()));
+    root.insert("shape_key".to_string(), Json::Str(spec.key.clone()));
+    root.insert("train_batch".to_string(), Json::Num(b as f64));
+    root.insert("conv_fwd_bwd_speedup".to_string(), Json::Num(conv_speedup));
+    root.insert(
+        "scratch_bytes".to_string(),
+        Json::Num(scratch.capacity_bytes() as f64),
+    );
+    root.insert("ops".to_string(), Json::Obj(ops_json));
+    let out = std::env::var("SFLGA_BENCH_OUT").unwrap_or_else(|_| "BENCH_kernels.json".into());
+    std::fs::write(&out, Json::Obj(root).to_string() + "\n")?;
+    println!("summary written to {out}");
+    Ok(())
+}

@@ -18,7 +18,9 @@
 //!
 //! Fan-out phases run on the [`ParallelExecutor`] — the paper's framework
 //! is parallel by construction (N clients compute simultaneously), and the
-//! engine executes it that way.  Determinism: every per-client job is a
+//! engine executes it that way; each worker reuses its own kernel scratch
+//! arena across jobs (see `runtime::scratch`).  Determinism: every
+//! per-client job is a
 //! pure function of the round-start state, batches are drawn on the
 //! coordinator thread in client order, and ALL reductions/updates happen
 //! on the coordinator thread in fixed client-index order — so training is
@@ -458,17 +460,19 @@ impl Trainer {
             let batches = self.draw_batches(participants);
             let rt = &self.rt;
             let wc = &self.wc;
-            // (1) client-fwd fan-out — eq (1), zero-copy parameter views.
-            let smashed = self.pool.map(k, |j| {
-                rt.client_fwd(cut, &wc[participants[j]][..nc], &batches[j].0)
+            // (1) client-fwd fan-out — eq (1), zero-copy parameter views;
+            // each worker draws kernel scratch from its own arena.
+            let smashed = self.pool.map_with_scratch(k, |scratch, j| {
+                rt.client_fwd_with(scratch, cut, &wc[participants[j]][..nc], &batches[j].0)
             })?;
             // (2) server reduce: per-participant server FP+BP (eqs 2–4)
             // fan out; the weighted server-gradient reduction (eq 7) then
             // streams into the accumulator in cohort (= ascending client
             // index) order.
             let ws_srv = &self.ws[nc..];
-            let server =
-                self.pool.map(k, |j| rt.server_grad(cut, ws_srv, &smashed[j], &batches[j].1))?;
+            let server = self.pool.map_with_scratch(k, |scratch, j| {
+                rt.server_grad_with(scratch, cut, ws_srv, &smashed[j], &batches[j].1)
+            })?;
             tensor::zero(&mut g_ws_acc);
             let mut loss_acc = 0.0;
             for (j, (loss, g_ws, _)) in server.iter().enumerate() {
@@ -490,10 +494,10 @@ impl Trainer {
             // (4) client-bwd fan-out — eq (6).  The shared plan runs every
             // VJP against the one shared w^c; per-client plans against the
             // client's own replica and (unicast) own cotangent.
-            let g_c_parts = self.pool.map(k, |j| {
+            let g_c_parts = self.pool.map_with_scratch(k, |scratch, j| {
                 let wc_j = if shared { &wc[0][..nc] } else { &wc[participants[j]][..nc] };
                 let cot = broadcast.as_ref().unwrap_or(&server[j].2);
-                rt.client_grad(cut, wc_j, &batches[j].0, cot)
+                rt.client_grad_with(scratch, cut, wc_j, &batches[j].0, cot)
             })?;
             // Apply this epoch's updates on the coordinator thread:
             // server-side SGD step on the aggregated gradient (eq 7)…
@@ -560,12 +564,12 @@ impl Trainer {
         let rt = &self.rt;
         let train = &self.train;
         let w0 = &self.w_full;
-        let locals = self.pool.map(k, |j| {
+        let locals = self.pool.map_with_scratch(k, |scratch, j| {
             let mut w = w0.clone();
             let mut first_loss = 0.0f32;
             for (e, idx) in draws[j].iter().enumerate() {
                 let (x, y) = train.batch(idx);
-                let (loss, g) = rt.full_grad(&w, &x, &y)?;
+                let (loss, g) = rt.full_grad_with(scratch, &w, &x, &y)?;
                 if e == 0 {
                     first_loss = loss;
                 }
@@ -610,12 +614,12 @@ impl Trainer {
         let starts: Vec<usize> = (0..total).step_by(eb).collect();
         let rt = &self.rt;
         let test = &self.test;
-        let scores = self.pool.map(starts.len(), |b| {
+        let scores = self.pool.map_with_scratch(starts.len(), |scratch, b| {
             let lo = starts[b];
             let hi = (lo + eb).min(total);
             let idx: Vec<usize> = (lo..hi).collect();
             let (x, y) = test.batch(&idx);
-            let (l, c) = rt.eval(&w, &x, &y)?;
+            let (l, c) = rt.eval_with(scratch, &w, &x, &y)?;
             Ok((l as f64 * (hi - lo) as f64, c as f64))
         })?;
         let mut loss = 0.0;

@@ -20,10 +20,19 @@
 //!   guarantee (`tests/determinism.rs`) holds only if no call observes
 //!   mutable state from another.  Cache or pool internally behind locks if
 //!   you must, but results may depend only on the inputs.
+//! * Each role also has a `*_with` variant taking a [`ScratchHandle`] —
+//!   reusable workspace for kernel intermediates.  The executor owns one
+//!   arena per worker thread and routes the hot path through these.
+//!   Scratch is an OPTIMIZATION channel only: results must be bitwise
+//!   identical whatever the arena contains (the native backend's kernels
+//!   fully overwrite every region they read), and backends without
+//!   reusable intermediates (pjrt) simply inherit the defaults, which
+//!   ignore the handle.
 
 use crate::model::ShapeSpec;
 use crate::tensor::Params;
 
+use super::scratch::ScratchHandle;
 use super::tensor::Tensor;
 
 /// One executable realization of the split model's five roles.
@@ -70,4 +79,73 @@ pub trait Backend: Send + Sync {
 
     /// Eval batch: (mean loss, correct count).
     fn eval(&self, w: &[Vec<f32>], x: &Tensor, y1h: &Tensor) -> anyhow::Result<(f32, f32)>;
+
+    // ---- scratch-aware variants (the round engine's hot path) ----
+    //
+    // Defaults ignore the handle and defer to the plain role — correct
+    // for backends with no host-side intermediates to reuse.  The native
+    // backend overrides all five to draw im2col/packing buffers from the
+    // worker's arena instead of reallocating per call.
+
+    /// [`Backend::client_fwd`] drawing intermediates from `scratch`.
+    fn client_fwd_with(
+        &self,
+        scratch: &ScratchHandle,
+        cut: usize,
+        wc: &[Vec<f32>],
+        x: &Tensor,
+    ) -> anyhow::Result<Tensor> {
+        let _ = scratch;
+        self.client_fwd(cut, wc, x)
+    }
+
+    /// [`Backend::server_grad`] drawing intermediates from `scratch`.
+    fn server_grad_with(
+        &self,
+        scratch: &ScratchHandle,
+        cut: usize,
+        ws: &[Vec<f32>],
+        smashed: &Tensor,
+        y1h: &Tensor,
+    ) -> anyhow::Result<(f32, Params, Tensor)> {
+        let _ = scratch;
+        self.server_grad(cut, ws, smashed, y1h)
+    }
+
+    /// [`Backend::client_grad`] drawing intermediates from `scratch`.
+    fn client_grad_with(
+        &self,
+        scratch: &ScratchHandle,
+        cut: usize,
+        wc: &[Vec<f32>],
+        x: &Tensor,
+        g_smashed: &Tensor,
+    ) -> anyhow::Result<Params> {
+        let _ = scratch;
+        self.client_grad(cut, wc, x, g_smashed)
+    }
+
+    /// [`Backend::full_grad`] drawing intermediates from `scratch`.
+    fn full_grad_with(
+        &self,
+        scratch: &ScratchHandle,
+        w: &[Vec<f32>],
+        x: &Tensor,
+        y1h: &Tensor,
+    ) -> anyhow::Result<(f32, Params)> {
+        let _ = scratch;
+        self.full_grad(w, x, y1h)
+    }
+
+    /// [`Backend::eval`] drawing intermediates from `scratch`.
+    fn eval_with(
+        &self,
+        scratch: &ScratchHandle,
+        w: &[Vec<f32>],
+        x: &Tensor,
+        y1h: &Tensor,
+    ) -> anyhow::Result<(f32, f32)> {
+        let _ = scratch;
+        self.eval(w, x, y1h)
+    }
 }

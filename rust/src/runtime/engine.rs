@@ -182,6 +182,10 @@ fn run_one(exe: &xla::PjRtLoadedExecutable, inputs: Vec<Tensor>) -> anyhow::Resu
 /// roles.  Holds a pool of engines (each owning its own PJRT client +
 /// compiled executables); calls are distributed round-robin, so
 /// independent per-client executions run concurrently.
+///
+/// The scratch-aware `*_with` role variants are inherited from the trait
+/// defaults (they ignore the arena handle): PJRT keeps its working
+/// memory device-side, so there are no host intermediates to reuse.
 pub struct PjrtBackend {
     engines: Vec<Engine>,
     next: AtomicUsize,

@@ -1,8 +1,10 @@
 //! Typed execution facade: a backend-agnostic [`ModelRuntime`] that the
 //! coordinator, figures and examples talk to, plus the [`ParallelExecutor`]
 //! that fans independent per-client backend calls across scoped worker
-//! threads.  The actual compute lives behind the [`Backend`] trait — the
-//! pure-Rust [`NativeBackend`] by default, the PJRT engine pool with
+//! threads, each owning a reusable kernel [`Scratch`](super::Scratch)
+//! arena.  The actual
+//! compute lives behind the [`Backend`] trait — the pure-Rust
+//! [`NativeBackend`] by default, the PJRT engine pool with
 //! `--features pjrt`.
 
 use crate::model::{Manifest, ShapeSpec};
@@ -10,6 +12,7 @@ use crate::tensor::Params;
 
 use super::backend::Backend;
 use super::native::NativeBackend;
+use super::scratch::ScratchHandle;
 use super::tensor::Tensor;
 
 /// Env var overriding the auto thread count (CI exercises the threaded
@@ -37,21 +40,34 @@ pub fn resolve_threads(requested: usize) -> usize {
 /// `server_grad` / `client_grad` / `full_grad` calls of a round phase)
 /// across `std::thread::scope` workers.
 ///
+/// The executor owns one kernel [`Scratch`](super::Scratch) arena per
+/// worker thread;
+/// [`ParallelExecutor::map_with_scratch`] hands worker `k` its own arena
+/// handle, so the backend's im2col/packing buffers are reused across
+/// every job a worker runs, with zero cross-worker contention.
+///
 /// Determinism contract: worker `k` of `w` computes indices `k, k+w,
 /// k+2w, …` and every result is scattered back into its index slot, so
 /// the output `Vec` ordering — and hence any index-ordered reduction the
 /// caller performs — is identical for every thread count.  Jobs must be
-/// pure functions of their index (the [`Backend`] contract), which makes
-/// `threads = N` bitwise equal to `threads = 1`.
+/// pure functions of their index (the [`Backend`] contract: scratch
+/// contents never influence results), which makes `threads = N` bitwise
+/// equal to `threads = 1`.
 pub struct ParallelExecutor {
     threads: usize,
+    /// One arena per worker; `arenas[k]` is only ever locked by worker
+    /// `k` during a `map_with_scratch` call (and by the caller thread on
+    /// the serial path, which uses `arenas[0]`).
+    arenas: Vec<ScratchHandle>,
 }
 
 impl ParallelExecutor {
     /// `requested = 0` → auto (see [`resolve_threads`]); `1` → run every
     /// job inline on the caller thread (no spawns at all).
     pub fn new(requested: usize) -> ParallelExecutor {
-        ParallelExecutor { threads: resolve_threads(requested) }
+        let threads = resolve_threads(requested);
+        let arenas = (0..threads).map(|_| ScratchHandle::new()).collect();
+        ParallelExecutor { threads, arenas }
     }
 
     /// The resolved worker count.
@@ -67,18 +83,32 @@ impl ParallelExecutor {
         T: Send,
         F: Fn(usize) -> anyhow::Result<T> + Sync,
     {
+        self.map_with_scratch(n, |_, i| f(i))
+    }
+
+    /// [`ParallelExecutor::map`] where each job additionally receives its
+    /// worker's scratch arena — the round engine's hot path (backends
+    /// reuse kernel intermediates across all the jobs a worker runs).
+    pub fn map_with_scratch<T, F>(&self, n: usize, f: F) -> anyhow::Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(&ScratchHandle, usize) -> anyhow::Result<T> + Sync,
+    {
         let w = self.threads.min(n);
         if w <= 1 {
-            return (0..n).map(f).collect();
+            let scratch = &self.arenas[0];
+            return (0..n).map(|i| f(scratch, i)).collect();
         }
         let f = &f;
+        let arenas = &self.arenas;
         let mut out: Vec<Option<T>> = Vec::with_capacity(n);
         out.resize_with(n, || None);
         std::thread::scope(|s| -> anyhow::Result<()> {
             let handles: Vec<_> = (0..w)
                 .map(|k| {
                     s.spawn(move || -> anyhow::Result<Vec<(usize, T)>> {
-                        (k..n).step_by(w).map(|i| Ok((i, f(i)?))).collect()
+                        let scratch = &arenas[k];
+                        (k..n).step_by(w).map(|i| Ok((i, f(scratch, i)?))).collect()
                     })
                 })
                 .collect();
@@ -156,6 +186,17 @@ impl ModelRuntime {
         self.backend.client_fwd(cut, wc, x)
     }
 
+    /// [`ModelRuntime::client_fwd`] with a worker scratch arena.
+    pub fn client_fwd_with(
+        &self,
+        scratch: &ScratchHandle,
+        cut: usize,
+        wc: &[Vec<f32>],
+        x: &Tensor,
+    ) -> anyhow::Result<Tensor> {
+        self.backend.client_fwd_with(scratch, cut, wc, x)
+    }
+
     /// Server FP+BP: returns (loss, server grads g^{s,n}, smashed grads
     /// s^n) — eqs (2)(3)(4).
     pub fn server_grad(
@@ -166,6 +207,18 @@ impl ModelRuntime {
         y1h: &Tensor,
     ) -> anyhow::Result<(f32, Params, Tensor)> {
         self.backend.server_grad(cut, ws, smashed, y1h)
+    }
+
+    /// [`ModelRuntime::server_grad`] with a worker scratch arena.
+    pub fn server_grad_with(
+        &self,
+        scratch: &ScratchHandle,
+        cut: usize,
+        ws: &[Vec<f32>],
+        smashed: &Tensor,
+        y1h: &Tensor,
+    ) -> anyhow::Result<(f32, Params, Tensor)> {
+        self.backend.server_grad_with(scratch, cut, ws, smashed, y1h)
     }
 
     /// Client BP with injected (aggregated) smashed-gradient — eq (6).
@@ -179,6 +232,18 @@ impl ModelRuntime {
         self.backend.client_grad(cut, wc, x, g_smashed)
     }
 
+    /// [`ModelRuntime::client_grad`] with a worker scratch arena.
+    pub fn client_grad_with(
+        &self,
+        scratch: &ScratchHandle,
+        cut: usize,
+        wc: &[Vec<f32>],
+        x: &Tensor,
+        g_smashed: &Tensor,
+    ) -> anyhow::Result<Params> {
+        self.backend.client_grad_with(scratch, cut, wc, x, g_smashed)
+    }
+
     /// FL baseline: (loss, full gradient).
     pub fn full_grad(
         &self,
@@ -189,9 +254,31 @@ impl ModelRuntime {
         self.backend.full_grad(w, x, y1h)
     }
 
+    /// [`ModelRuntime::full_grad`] with a worker scratch arena.
+    pub fn full_grad_with(
+        &self,
+        scratch: &ScratchHandle,
+        w: &[Vec<f32>],
+        x: &Tensor,
+        y1h: &Tensor,
+    ) -> anyhow::Result<(f32, Params)> {
+        self.backend.full_grad_with(scratch, w, x, y1h)
+    }
+
     /// Eval batch: (mean loss, correct count).
     pub fn eval(&self, w: &[Vec<f32>], x: &Tensor, y1h: &Tensor) -> anyhow::Result<(f32, f32)> {
         self.backend.eval(w, x, y1h)
+    }
+
+    /// [`ModelRuntime::eval`] with a worker scratch arena.
+    pub fn eval_with(
+        &self,
+        scratch: &ScratchHandle,
+        w: &[Vec<f32>],
+        x: &Tensor,
+        y1h: &Tensor,
+    ) -> anyhow::Result<(f32, f32)> {
+        self.backend.eval_with(scratch, w, x, y1h)
     }
 
     /// Train-batch input shape [batch, h, w, c].
@@ -247,6 +334,48 @@ mod tests {
         let res: anyhow::Result<Vec<usize>> =
             ex.map(10, |i| if i == 6 { anyhow::bail!("job {i} failed") } else { Ok(i) });
         assert!(res.unwrap_err().to_string().contains("job 6"));
+    }
+
+    #[test]
+    fn map_with_scratch_hands_each_worker_one_arena() {
+        // Workers leave a breadcrumb in their arena: every job a worker
+        // ran must have seen the same arena, and arenas stay warm across
+        // map calls (the reuse property the kernels rely on).
+        let ex = ParallelExecutor::new(3);
+        let marks = ex
+            .map_with_scratch(9, |scratch, i| {
+                let mut s = scratch.lock();
+                s.col.push(i as f32);
+                Ok(s.col.len())
+            })
+            .unwrap();
+        // 9 jobs over 3 workers: each arena saw exactly 3 jobs, so the
+        // per-arena lengths are a permutation-in-slots of 1..=3.
+        let total: usize = {
+            let mut per_arena_final = std::collections::BTreeMap::new();
+            for (i, &len) in marks.iter().enumerate() {
+                per_arena_final.insert(i % 3, len);
+            }
+            per_arena_final.values().sum()
+        };
+        assert_eq!(total, 9, "each of 3 arenas should end at 3 pushes: {marks:?}");
+        // A second map reuses the same arenas (warm buffers).
+        let lens = ex.map_with_scratch(3, |scratch, _| Ok(scratch.lock().col.len())).unwrap();
+        assert!(lens.iter().all(|&l| l >= 3), "arenas were not reused: {lens:?}");
+    }
+
+    #[test]
+    fn serial_map_with_scratch_uses_one_arena() {
+        let ex = ParallelExecutor::new(1);
+        ex.map_with_scratch(5, |scratch, i| {
+            let mut s = scratch.lock();
+            s.pa.push(i as f32);
+            Ok(())
+        })
+        .unwrap();
+        // All five jobs funneled through arena 0.
+        let len = ex.map_with_scratch(1, |scratch, _| Ok(scratch.lock().pa.len())).unwrap()[0];
+        assert_eq!(len, 5);
     }
 
     #[test]

@@ -5,7 +5,12 @@
 //!   implements: the five roles (`client_fwd`, `server_grad`,
 //!   `client_grad`, `full_grad`, `eval`) over flat f32 buffers.
 //! * [`native`] — the default pure-Rust backend: dense/conv/pool forward
-//!   and backward on the host, zero external dependencies.
+//!   and backward on the host, zero external dependencies, on an
+//!   im2col + blocked-GEMM fast path ([`native::gemm`]) with the scalar
+//!   originals kept as [`native::reference`].
+//! * [`scratch`] — reusable per-worker kernel workspace ([`Scratch`] /
+//!   [`ScratchHandle`]): the executor owns one arena per worker thread
+//!   and routes it through the [`Backend`] `*_with` role variants.
 //! * `engine` (feature `pjrt`) — the XLA/PJRT engine pool that executes
 //!   the HLO-text artifacts produced by `python/compile/aot.py`.  This is
 //!   the ONLY place PJRT/xla types appear; the coordinator above deals
@@ -16,6 +21,7 @@ pub mod backend;
 pub mod engine;
 pub mod exec;
 pub mod native;
+pub mod scratch;
 pub mod tensor;
 
 pub use backend::Backend;
@@ -23,4 +29,5 @@ pub use backend::Backend;
 pub use engine::{Engine, Handle};
 pub use exec::{ModelRuntime, ParallelExecutor, resolve_threads, THREADS_ENV};
 pub use native::NativeBackend;
+pub use scratch::{Scratch, ScratchHandle};
 pub use tensor::Tensor;

@@ -1,0 +1,474 @@
+//! The one tuned `f32` GEMM core behind every native conv/dense kernel:
+//! a register-blocked `MR×NR` microkernel under GotoBLAS-style cache
+//! blocking (`KC` k-panels, `MC×KC` packed A, `KC×NC` packed B), with the
+//! layer bias+relu fused into the epilogue of the final k-panel.
+//!
+//! One routine serves five products (see `ops.rs`): conv fwd
+//! (`im2col(x)·W`), conv d_x (`d_out·Wᵀ`), conv d_w (`im2col(x)ᵀ·d_out`),
+//! dense fwd (`x·W`) and dense d_x/d_w — transposed operands are handled
+//! by the packing routines through strided [`MatView`]s, so no operand is
+//! ever materialized transposed.
+//!
+//! Determinism: for a fixed problem shape the summation order of every
+//! output element is fixed — k-panels accumulate in ascending `p` order
+//! and panel partials are added to C in ascending panel order — and no
+//! read ever observes scratch-buffer history (packing pads edge tiles
+//! with explicit zeros).  Identical inputs therefore produce bitwise
+//! identical outputs on every call, from any worker thread: the
+//! threads=N ≡ threads=1 and split-vs-full bitwise guarantees extend to
+//! the GEMM path unchanged.  See DESIGN.md §Native backend.
+
+/// Microkernel tile height (rows of C per register tile).
+pub const MR: usize = 8;
+/// Microkernel tile width (one 8-lane f32 vector).
+pub const NR: usize = 8;
+/// Rows of A packed per panel (`MC×KC` ≈ 64 KiB, L2-resident).
+const MC: usize = 64;
+/// Columns of B packed per panel (`KC×NC` ≈ 256 KiB).
+const NC: usize = 256;
+/// k-depth of one panel (one `KC×NR` B strip ≈ 8 KiB, L1-resident).
+const KC: usize = 256;
+
+/// Strided read-only view of a row-major matrix (or its transpose):
+/// element `(r, c)` lives at `data[r·rs + c·cs]`.
+#[derive(Clone, Copy, Debug)]
+pub struct MatView<'a> {
+    data: &'a [f32],
+    rs: usize,
+    cs: usize,
+}
+
+impl<'a> MatView<'a> {
+    /// View a row-major `[rows × cols]` buffer as itself.
+    pub fn rows(data: &'a [f32], cols: usize) -> MatView<'a> {
+        MatView { data, rs: cols, cs: 1 }
+    }
+
+    /// View a row-major `[rows × cols]` buffer as its transpose
+    /// (`cols × rows`), without copying.
+    pub fn transposed(data: &'a [f32], cols: usize) -> MatView<'a> {
+        MatView { data, rs: 1, cs: cols }
+    }
+
+    #[inline(always)]
+    fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.rs + c * self.cs]
+    }
+
+    /// Whether rows are contiguous (`cs == 1`) — enables `copy_from_slice`
+    /// fast paths in the packers.
+    #[inline(always)]
+    fn row_major(&self) -> bool {
+        self.cs == 1
+    }
+}
+
+/// What the final k-panel writes into each C element after the product.
+#[derive(Clone, Copy, Debug)]
+pub enum Epilogue<'a> {
+    /// Plain product (gradient GEMMs).
+    None,
+    /// `+ bias[j]` per output column (linear logits layer).
+    Bias(&'a [f32]),
+    /// `max(0, · + bias[j])` (hidden conv/dense layers).
+    BiasRelu(&'a [f32]),
+}
+
+/// `C[m×n] (+)= A[m×k] · B[k×n]`, row-major contiguous C (`ldc == n`).
+///
+/// * `accumulate == false` overwrites C (no pre-zeroing needed);
+///   `accumulate == true` adds the product to the existing C (used by
+///   conv d_w to sum image contributions in ascending image order) and
+///   must be paired with [`Epilogue::None`].
+/// * `pa`/`pb` are the packing arenas (see [`crate::runtime::Scratch`]);
+///   they are resized to the fixed panel footprint once and fully
+///   rewritten before every read.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm(
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    a: MatView<'_>,
+    b: MatView<'_>,
+    ep: Epilogue<'_>,
+    accumulate: bool,
+    pa: &mut Vec<f32>,
+    pb: &mut Vec<f32>,
+) {
+    debug_assert_eq!(c.len(), m * n, "gemm: C is {} elems, want {m}x{n}", c.len());
+    debug_assert!(
+        !accumulate || matches!(ep, Epilogue::None),
+        "gemm: accumulate composes across calls; fuse epilogues only on the last one"
+    );
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        // Degenerate empty product: C (+)= 0, epilogue still applies.
+        if !accumulate {
+            c.fill(0.0);
+        }
+        apply_epilogue_rows(c, n, ep);
+        return;
+    }
+    pa.resize(MC * KC, 0.0);
+    pb.resize(NC * KC, 0.0);
+    for jc in (0..n).step_by(NC) {
+        let ncw = NC.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kcw = KC.min(k - pc);
+            let first = pc == 0;
+            let last = pc + kcw == k;
+            pack_b(pb, &b, pc, kcw, jc, ncw);
+            for icb in (0..m).step_by(MC) {
+                let mcw = MC.min(m - icb);
+                pack_a(pa, &a, icb, mcw, pc, kcw);
+                for jr in (0..ncw).step_by(NR) {
+                    let nrw = NR.min(ncw - jr);
+                    let pb_strip = &pb[(jr / NR) * kcw * NR..][..kcw * NR];
+                    for ir in (0..mcw).step_by(MR) {
+                        let mrw = MR.min(mcw - ir);
+                        let pa_strip = &pa[(ir / MR) * kcw * MR..][..kcw * MR];
+                        let mut acc = [[0.0f32; NR]; MR];
+                        microkernel(kcw, pa_strip, pb_strip, &mut acc);
+                        store_tile(
+                            c,
+                            n,
+                            icb + ir,
+                            jc + jr,
+                            mrw,
+                            nrw,
+                            &acc,
+                            first && !accumulate,
+                            last,
+                            ep,
+                        );
+                    }
+                }
+            }
+            pc += kcw;
+        }
+    }
+}
+
+/// The register tile: `acc[MR][NR] += pa_strip ⊗ pb_strip` over one
+/// k-panel, ascending `p`.  Fixed-size rows keep the inner loop branch-
+/// free and autovectorizable (NR = one 8-lane f32 vector).
+#[inline(always)]
+fn microkernel(kc: usize, pa_strip: &[f32], pb_strip: &[f32], acc: &mut [[f32; NR]; MR]) {
+    debug_assert!(pa_strip.len() >= kc * MR && pb_strip.len() >= kc * NR);
+    for p in 0..kc {
+        let arow: &[f32; MR] = pa_strip[p * MR..p * MR + MR].try_into().unwrap();
+        let brow: &[f32; NR] = pb_strip[p * NR..p * NR + NR].try_into().unwrap();
+        for (accrow, &av) in acc.iter_mut().zip(arow) {
+            for (cv, &bv) in accrow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// Merge one register tile into C: overwrite on the first k-panel of a
+/// non-accumulating GEMM, add otherwise; fuse the epilogue on the last.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn store_tile(
+    c: &mut [f32],
+    ldc: usize,
+    i0: usize,
+    j0: usize,
+    mrw: usize,
+    nrw: usize,
+    acc: &[[f32; NR]; MR],
+    overwrite: bool,
+    last: bool,
+    ep: Epilogue<'_>,
+) {
+    for (i, accrow) in acc.iter().enumerate().take(mrw) {
+        let base = (i0 + i) * ldc + j0;
+        let crow = &mut c[base..base + nrw];
+        if overwrite {
+            crow.copy_from_slice(&accrow[..nrw]);
+        } else {
+            for (cv, &av) in crow.iter_mut().zip(&accrow[..nrw]) {
+                *cv += av;
+            }
+        }
+        if last {
+            apply_epilogue(crow, j0, ep);
+        }
+    }
+}
+
+#[inline(always)]
+fn apply_epilogue(crow: &mut [f32], j0: usize, ep: Epilogue<'_>) {
+    match ep {
+        Epilogue::None => {}
+        Epilogue::Bias(bias) => {
+            for (cv, &bv) in crow.iter_mut().zip(&bias[j0..j0 + crow.len()]) {
+                *cv += bv;
+            }
+        }
+        Epilogue::BiasRelu(bias) => {
+            for (cv, &bv) in crow.iter_mut().zip(&bias[j0..j0 + crow.len()]) {
+                *cv += bv;
+                if *cv < 0.0 {
+                    *cv = 0.0;
+                }
+            }
+        }
+    }
+}
+
+fn apply_epilogue_rows(c: &mut [f32], ldc: usize, ep: Epilogue<'_>) {
+    for crow in c.chunks_mut(ldc) {
+        apply_epilogue(crow, 0, ep);
+    }
+}
+
+/// Pack A rows `i0..i0+mc` × k `p0..p0+kc` into MR-row strips, k-major
+/// within each strip; rows past `mc` in the last strip are zero-padded so
+/// the microkernel never branches on the edge.
+fn pack_a(dst: &mut [f32], a: &MatView<'_>, i0: usize, mc: usize, p0: usize, kc: usize) {
+    let mut off = 0;
+    let mut ir = 0;
+    while ir < mc {
+        let mrw = MR.min(mc - ir);
+        for p in 0..kc {
+            let d = &mut dst[off + p * MR..off + (p + 1) * MR];
+            for (i, dv) in d.iter_mut().enumerate() {
+                *dv = if i < mrw { a.at(i0 + ir + i, p0 + p) } else { 0.0 };
+            }
+        }
+        off += kc * MR;
+        ir += MR;
+    }
+}
+
+/// Pack B k `p0..p0+kc` × columns `j0..j0+nc` into NR-column strips,
+/// k-major within each strip, zero-padding the ragged last strip.  The
+/// row-major full-strip case (weights, d_out) is a straight `memcpy`.
+fn pack_b(dst: &mut [f32], b: &MatView<'_>, p0: usize, kc: usize, j0: usize, nc: usize) {
+    let mut off = 0;
+    let mut jr = 0;
+    while jr < nc {
+        let nrw = NR.min(nc - jr);
+        if b.row_major() && nrw == NR {
+            for p in 0..kc {
+                let src = (p0 + p) * b.rs + j0 + jr;
+                dst[off + p * NR..off + (p + 1) * NR].copy_from_slice(&b.data[src..src + NR]);
+            }
+        } else {
+            for p in 0..kc {
+                let d = &mut dst[off + p * NR..off + (p + 1) * NR];
+                for (j, dv) in d.iter_mut().enumerate() {
+                    *dv = if j < nrw { b.at(p0 + p, j0 + jr + j) } else { 0.0 };
+                }
+            }
+        }
+        off += kc * NR;
+        jr += NR;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+
+    /// Naive triple loop with the SAME per-element summation order as the
+    /// packed path's single-panel case (ascending k, epilogue last).
+    fn naive(
+        m: usize,
+        n: usize,
+        k: usize,
+        a: &MatView<'_>,
+        b: &MatView<'_>,
+        ep: Epilogue<'_>,
+        init: Option<&[f32]>,
+    ) -> Vec<f32> {
+        let mut c = match init {
+            Some(c0) => c0.to_vec(),
+            None => vec![0.0f32; m * n],
+        };
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = if init.is_some() { c[i * n + j] } else { 0.0 };
+                for p in 0..k {
+                    s += a.at(i, p) * b.at(p, j);
+                }
+                c[i * n + j] = s;
+            }
+        }
+        for crow in c.chunks_mut(n) {
+            apply_epilogue(crow, 0, ep);
+        }
+        c
+    }
+
+    fn close(a: f32, b: f32) -> bool {
+        (a - b).abs() <= 1e-4 * (1.0 + b.abs())
+    }
+
+    #[test]
+    fn matches_naive_on_awkward_shapes() {
+        // Shapes straddling every blocking edge: below/above MR, NR, MC,
+        // NC, KC, and non-multiples of all of them.
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (8, 8, 8),
+            (9, 7, 25),
+            (13, 10, 300),
+            (70, 9, 17),
+            (65, 260, 13),
+            (31, 33, 257),
+        ];
+        for &(m, n, k) in &shapes {
+            let a: Vec<f32> =
+                (0..m * k).map(|i| ((i * 37 + 11) % 97) as f32 / 97.0 - 0.5).collect();
+            let b: Vec<f32> =
+                (0..k * n).map(|i| ((i * 53 + 29) % 89) as f32 / 89.0 - 0.5).collect();
+            let av = MatView::rows(&a, k);
+            let bv = MatView::rows(&b, n);
+            let want = naive(m, n, k, &av, &bv, Epilogue::None, None);
+            let mut got = vec![0.0f32; m * n];
+            let (mut pa, mut pb) = (Vec::new(), Vec::new());
+            gemm(&mut got, m, n, k, av, bv, Epilogue::None, false, &mut pa, &mut pb);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(close(*g, *w), "({m}x{n}x{k})[{i}]: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn transposed_views_read_the_transpose() {
+        // A = Xᵀ where X is 4x3 row-major: A is 3x4.
+        let x: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let at = MatView::transposed(&x, 3);
+        assert_eq!(at.at(0, 0), 0.0);
+        assert_eq!(at.at(2, 1), x[5]); // X[1][2]
+        assert_eq!(at.at(1, 3), x[10]); // X[3][1]
+    }
+
+    #[test]
+    fn property_strided_operands_and_epilogues() {
+        check("gemm-strided-epilogue", 48, |rng| {
+            let m = 1 + rng.below(20);
+            let n = 1 + rng.below(20);
+            let k = 1 + rng.below(40);
+            let a_raw: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32 * 0.5).collect();
+            let b_raw: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32 * 0.5).collect();
+            // Transposed storage for each operand, half the time.
+            let ta = rng.below(2) == 1;
+            let tb = rng.below(2) == 1;
+            let a_t: Vec<f32>; // column-major storage when transposed
+            let av = if ta {
+                a_t = (0..k * m).map(|i| a_raw[(i % m) * k + i / m]).collect();
+                MatView::transposed(&a_t, m)
+            } else {
+                MatView::rows(&a_raw, k)
+            };
+            let b_t: Vec<f32>;
+            let bv = if tb {
+                b_t = (0..n * k).map(|i| b_raw[(i % k) * n + i / k]).collect();
+                MatView::transposed(&b_t, k)
+            } else {
+                MatView::rows(&b_raw, n)
+            };
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let ep = match rng.below(3) {
+                0 => Epilogue::None,
+                1 => Epilogue::Bias(&bias),
+                _ => Epilogue::BiasRelu(&bias),
+            };
+            let want = naive(m, n, k, &av, &bv, ep, None);
+            let mut got = vec![f32::NAN; m * n]; // overwrite mode must not read C
+            let (mut pa, mut pb) = (Vec::new(), Vec::new());
+            gemm(&mut got, m, n, k, av, bv, ep, false, &mut pa, &mut pb);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                prop_assert!(
+                    close(*g, *w),
+                    "[{i}]: {g} vs {w} (m {m} n {n} k {k} ta {ta} tb {tb})"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn accumulate_adds_to_existing_c() {
+        let m = 5;
+        let n = 6;
+        let k = 9;
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32).cos()).collect();
+        let av = MatView::rows(&a, k);
+        let bv = MatView::rows(&b, n);
+        let c0: Vec<f32> = (0..m * n).map(|i| i as f32 / 7.0).collect();
+        let want = naive(m, n, k, &av, &bv, Epilogue::None, Some(&c0));
+        let mut got = c0.clone();
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        gemm(&mut got, m, n, k, av, bv, Epilogue::None, true, &mut pa, &mut pb);
+        for (g, w) in got.iter().zip(&want) {
+            assert!(close(*g, *w), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn results_are_bitwise_stable_across_dirty_arenas() {
+        // The arena contract: no read observes buffer history, so a
+        // NaN-poisoned arena must give bitwise the clean-arena answer.
+        let (m, n, k) = (33, 19, 270); // multi-panel in k, ragged tiles
+        let a: Vec<f32> = (0..m * k).map(|i| ((i * 31 + 7) % 61) as f32 / 61.0 - 0.5).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| ((i * 17 + 3) % 71) as f32 / 71.0 - 0.5).collect();
+        let bias: Vec<f32> = (0..n).map(|j| j as f32 / 19.0 - 0.4).collect();
+        let run = |pa: &mut Vec<f32>, pb: &mut Vec<f32>| {
+            let mut c = vec![0.0f32; m * n];
+            gemm(
+                &mut c,
+                m,
+                n,
+                k,
+                MatView::rows(&a, k),
+                MatView::rows(&b, n),
+                Epilogue::BiasRelu(&bias),
+                false,
+                pa,
+                pb,
+            );
+            c
+        };
+        let clean = run(&mut Vec::new(), &mut Vec::new());
+        let mut pa = vec![f32::NAN; 7];
+        let mut pb = vec![f32::NAN; 100_000];
+        let dirty = run(&mut pa, &mut pb);
+        for (x, y) in clean.iter().zip(&dirty) {
+            assert_eq!(x.to_bits(), y.to_bits(), "dirty arena changed the result");
+        }
+    }
+
+    #[test]
+    fn empty_k_is_epilogue_only() {
+        let bias = [1.0f32, -2.0];
+        let mut c = vec![5.0f32, 5.0, 5.0, 5.0];
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        let a: [f32; 0] = [];
+        gemm(
+            &mut c,
+            2,
+            2,
+            0,
+            MatView::rows(&a, 0),
+            MatView::rows(&a, 2),
+            Epilogue::BiasRelu(&bias),
+            false,
+            &mut pa,
+            &mut pb,
+        );
+        assert_eq!(c, vec![1.0, 0.0, 1.0, 0.0]);
+    }
+}

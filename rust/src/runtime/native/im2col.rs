@@ -1,0 +1,166 @@
+//! im2col/col2im lowering for the SAME-padded stride-1 convs: one image's
+//! receptive fields unrolled to a row-major `h·w × k·k·ic` matrix whose
+//! column order `(ky, kx, ic)` matches the HWIO weight layout exactly —
+//! conv forward is then `col · W`, conv d_w is `colᵀ · d_out`, and conv
+//! d_x is `d_out · Wᵀ` scattered back by [`col2im_image`].
+//!
+//! Both routines walk the column matrix in row-major scan order, so the
+//! scatter-add order of every `d_x` element is a fixed function of the
+//! geometry — the determinism argument of DESIGN.md §Native backend.
+
+/// Columns of the im2col matrix for a `k×k` conv over `ic` channels.
+pub fn col_width(k: usize, ic: usize) -> usize {
+    k * k * ic
+}
+
+/// Unroll ONE image (`h×w×ic`, NHWC sans batch) into `col`
+/// (`h·w × k·k·ic`).  Every element of `col` is written: out-of-image
+/// taps are explicit zeros, so the caller may pass arbitrary stale
+/// scratch.
+pub fn im2col_image(x: &[f32], h: usize, w: usize, ic: usize, k: usize, col: &mut [f32]) {
+    debug_assert_eq!(x.len(), h * w * ic);
+    debug_assert_eq!(col.len(), h * w * col_width(k, ic));
+    let pad = k / 2;
+    let mut off = 0;
+    for y in 0..h {
+        for xo in 0..w {
+            for ky in 0..k {
+                // Source row sy = y + ky - pad; a whole kx-run of zeros
+                // when it falls outside the image.
+                if y + ky < pad || y + ky - pad >= h {
+                    col[off..off + k * ic].fill(0.0);
+                    off += k * ic;
+                    continue;
+                }
+                let sy = y + ky - pad;
+                for kx in 0..k {
+                    let dst = &mut col[off..off + ic];
+                    if xo + kx >= pad && xo + kx - pad < w {
+                        let src = (sy * w + xo + kx - pad) * ic;
+                        dst.copy_from_slice(&x[src..src + ic]);
+                    } else {
+                        dst.fill(0.0);
+                    }
+                    off += ic;
+                }
+            }
+        }
+    }
+}
+
+/// Inverse scatter-add of [`im2col_image`]: fold a column-space gradient
+/// back onto the image, accumulating into `dx` (caller zeroes it).  Taps
+/// that fell outside the image are dropped (their forward value was the
+/// zero padding).
+pub fn col2im_image(col: &[f32], h: usize, w: usize, ic: usize, k: usize, dx: &mut [f32]) {
+    debug_assert_eq!(dx.len(), h * w * ic);
+    debug_assert_eq!(col.len(), h * w * col_width(k, ic));
+    let pad = k / 2;
+    let mut off = 0;
+    for y in 0..h {
+        for xo in 0..w {
+            for ky in 0..k {
+                if y + ky < pad || y + ky - pad >= h {
+                    off += k * ic;
+                    continue;
+                }
+                let sy = y + ky - pad;
+                for kx in 0..k {
+                    if xo + kx >= pad && xo + kx - pad < w {
+                        let dst = (sy * w + xo + kx - pad) * ic;
+                        for (dv, &cv) in dx[dst..dst + ic].iter_mut().zip(&col[off..off + ic]) {
+                            *dv += cv;
+                        }
+                    }
+                    off += ic;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_kernel_is_a_copy() {
+        // k=1: the col matrix is the image itself.
+        let x: Vec<f32> = (0..2 * 3 * 4).map(|i| i as f32).collect();
+        let mut col = vec![f32::NAN; x.len()];
+        im2col_image(&x, 2, 3, 4, 1, &mut col);
+        assert_eq!(col, x);
+    }
+
+    #[test]
+    fn col_rows_are_receptive_fields() {
+        // 3x3 image, 1 channel, k=3: the center pixel's row is the whole
+        // image; the corner row has the matching zero ring.
+        let x: Vec<f32> = (1..=9).map(|i| i as f32).collect();
+        let mut col = vec![f32::NAN; 9 * 9];
+        im2col_image(&x, 3, 3, 1, 3, &mut col);
+        // Center output (y=1, x=1) sees the full image in scan order.
+        assert_eq!(&col[4 * 9..5 * 9], &x[..]);
+        // Top-left output (y=0, x=0): rows/cols above/left are padding.
+        assert_eq!(&col[..9], &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn col2im_of_ones_counts_tap_multiplicity() {
+        // Fold a col matrix of ones: each image pixel receives one unit
+        // per window that reads it — k² in the interior, fewer at edges.
+        let (h, w, ic, k) = (4usize, 5usize, 2usize, 3usize);
+        let col = vec![1.0f32; h * w * col_width(k, ic)];
+        let mut dx = vec![0.0f32; h * w * ic];
+        col2im_image(&col, h, w, ic, k, &mut dx);
+        // Interior pixel (1,1): all 9 windows see it.
+        assert_eq!(dx[(w + 1) * ic], 9.0);
+        // Corner pixel (0,0): only the 4 windows centered in [0,1]².
+        assert_eq!(dx[0], 4.0);
+        // Gradient mass conservation: every col entry lands somewhere
+        // inside, and ones-cols entries from padding taps are dropped.
+        let interior_taps: f32 = dx.iter().sum();
+        assert!(interior_taps < (h * w * col_width(k, ic)) as f32);
+    }
+
+    #[test]
+    fn roundtrip_against_direct_conv() {
+        // conv(x, w) via im2col == direct sliding-window sum.
+        let (h, w, ic, k, oc) = (4usize, 3usize, 2usize, 3usize, 2usize);
+        let x: Vec<f32> = (0..h * w * ic).map(|i| (i as f32 * 0.37).sin()).collect();
+        let wt: Vec<f32> = (0..k * k * ic * oc).map(|i| (i as f32 * 0.61).cos()).collect();
+        let mut col = vec![0.0f32; h * w * col_width(k, ic)];
+        im2col_image(&x, h, w, ic, k, &mut col);
+        let kk = col_width(k, ic);
+        let pad = k / 2;
+        for y in 0..h {
+            for xo in 0..w {
+                for o in 0..oc {
+                    let via_col: f32 = (0..kk)
+                        .map(|p| col[(y * w + xo) * kk + p] * wt[p * oc + o])
+                        .sum();
+                    let mut direct = 0.0f32;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            if y + ky < pad || y + ky - pad >= h {
+                                continue;
+                            }
+                            if xo + kx < pad || xo + kx - pad >= w {
+                                continue;
+                            }
+                            let (sy, sx) = (y + ky - pad, xo + kx - pad);
+                            for i in 0..ic {
+                                direct += x[(sy * w + sx) * ic + i]
+                                    * wt[((ky * k + kx) * ic + i) * oc + o];
+                            }
+                        }
+                    }
+                    assert!(
+                        (via_col - direct).abs() < 1e-5,
+                        "({y},{xo},{o}): {via_col} vs {direct}"
+                    );
+                }
+            }
+        }
+    }
+}

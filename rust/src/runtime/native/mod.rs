@@ -9,18 +9,31 @@
 //! pool argmaxes); backward consumes the tape to produce exactly the VJPs
 //! the five roles need.
 //!
+//! Compute runs on the im2col + blocked-GEMM fast path ([`gemm`],
+//! [`im2col`], [`ops`]) with per-call intermediates drawn from a
+//! [`Scratch`] arena: the `*_with` role variants take the caller's
+//! per-worker [`ScratchHandle`] (the hot path — `ParallelExecutor` owns
+//! one arena per worker), while the plain [`Backend`] methods fall back
+//! to an internal arena so direct callers (tests, benches) need no
+//! setup.  The original scalar kernels are retained in [`reference`] and
+//! cross-checked against the fast path by property tests.
+//!
 //! Numerical semantics are pinned to the JAX reference kernels
 //! (`python/compile/kernels/ref.py`) by the golden tests in [`ops`] and
 //! the full-model goldens below; split-vs-full gradient equality is exact
 //! (bitwise) because both paths share the same kernels.
 
+pub mod gemm;
+pub mod im2col;
 pub mod ops;
+pub mod reference;
 
 use crate::model::{NUM_CUTS, ShapeSpec};
 use crate::tensor::Params;
 
 use ops::Geom;
 use super::backend::Backend;
+use super::scratch::{Scratch, ScratchHandle};
 use super::tensor::Tensor;
 
 /// Static description of one block, derived from the manifest shapes.
@@ -42,6 +55,10 @@ enum Tape {
 pub struct NativeBackend {
     spec: ShapeSpec,
     blocks: Vec<BlockDesc>,
+    /// Arena for callers of the plain (scratch-less) role methods.  The
+    /// hot path never touches it — the executor hands every worker its
+    /// own arena through the `*_with` variants.
+    fallback: ScratchHandle,
 }
 
 impl NativeBackend {
@@ -99,7 +116,7 @@ impl NativeBackend {
             "last block must produce {} logits",
             spec.classes
         );
-        Ok(NativeBackend { spec, blocks })
+        Ok(NativeBackend { spec, blocks, fallback: ScratchHandle::new() })
     }
 
     fn check_cut(&self, cut: usize) -> anyhow::Result<usize> {
@@ -131,8 +148,10 @@ impl NativeBackend {
     }
 
     /// Run blocks `first..=last` (1-based), recording the backward tape.
+    /// Kernel intermediates come from `s`; tape buffers are owned.
     fn forward(
         &self,
+        s: &mut Scratch,
         params: &[Vec<f32>],
         x: &[f32],
         batch: usize,
@@ -155,7 +174,7 @@ impl NativeBackend {
                     let g = Geom { b: batch, h, w, c: ic };
                     anyhow::ensure!(cur.len() == g.len(), "block {blk}: input length mismatch");
                     anyhow::ensure!(wt.len() == k * k * ic * oc, "block {blk}: weight length");
-                    let act = ops::conv2d_fwd(&cur, g, wt, k, oc, bias, true);
+                    let act = ops::conv2d_fwd(s, &cur, g, wt, k, oc, bias, true);
                     let ag = Geom { b: batch, h, w, c: oc };
                     let (out, idx) = ops::maxpool2x2_fwd(&act, ag);
                     let input = std::mem::replace(&mut cur, out);
@@ -168,7 +187,7 @@ impl NativeBackend {
                         cur.len()
                     );
                     anyhow::ensure!(wt.len() == din * dout, "block {blk}: weight length");
-                    let out = ops::dense_fwd(&cur, batch, din, dout, wt, bias, relu);
+                    let out = ops::dense_fwd(s, &cur, batch, din, dout, wt, bias, relu);
                     let input = std::mem::take(&mut cur);
                     cur = out.clone();
                     tapes.push(Tape::Dense { input, din, dout, out, relu });
@@ -182,6 +201,7 @@ impl NativeBackend {
     /// `eval`): no tape, no input clones, no retained activations.
     fn forward_no_tape(
         &self,
+        s: &mut Scratch,
         params: &[Vec<f32>],
         x: &[f32],
         batch: usize,
@@ -203,7 +223,7 @@ impl NativeBackend {
                     let g = Geom { b: batch, h, w, c: ic };
                     anyhow::ensure!(cur.len() == g.len(), "block {blk}: input length mismatch");
                     anyhow::ensure!(wt.len() == k * k * ic * oc, "block {blk}: weight length");
-                    let act = ops::conv2d_fwd(&cur, g, wt, k, oc, bias, true);
+                    let act = ops::conv2d_fwd(s, &cur, g, wt, k, oc, bias, true);
                     let ag = Geom { b: batch, h, w, c: oc };
                     (cur, _) = ops::maxpool2x2_fwd(&act, ag);
                 }
@@ -214,7 +234,7 @@ impl NativeBackend {
                         cur.len()
                     );
                     anyhow::ensure!(wt.len() == din * dout, "block {blk}: weight length");
-                    cur = ops::dense_fwd(&cur, batch, din, dout, wt, bias, relu);
+                    cur = ops::dense_fwd(s, &cur, batch, din, dout, wt, bias, relu);
                 }
             }
         }
@@ -225,6 +245,7 @@ impl NativeBackend {
     /// parameter gradients (manifest order) and the input cotangent.
     fn backward(
         &self,
+        s: &mut Scratch,
         params: &[Vec<f32>],
         tapes: &[Tape],
         d_last: Vec<f32>,
@@ -238,7 +259,7 @@ impl NativeBackend {
                 Tape::Conv { input, g, k, oc, act, idx } => {
                     let mut d_act = ops::maxpool2x2_bwd(idx, &d, act.len());
                     ops::relu_mask(&mut d_act, act);
-                    let (d_x, d_w, d_b) = ops::conv2d_bwd(input, *g, wt, *k, *oc, &d_act);
+                    let (d_x, d_w, d_b) = ops::conv2d_bwd(s, input, *g, wt, *k, *oc, &d_act);
                     grads[2 * bi] = d_w;
                     grads[2 * bi + 1] = d_b;
                     d = d_x;
@@ -247,7 +268,7 @@ impl NativeBackend {
                     if *relu {
                         ops::relu_mask(&mut d, out);
                     }
-                    let (d_x, d_w, d_b) = ops::dense_bwd(input, batch, *din, *dout, wt, &d);
+                    let (d_x, d_w, d_b) = ops::dense_bwd(s, input, batch, *din, *dout, wt, &d);
                     grads[2 * bi] = d_w;
                     grads[2 * bi + 1] = d_b;
                     d = d_x;
@@ -278,15 +299,37 @@ impl Backend for NativeBackend {
     }
 
     fn client_fwd(&self, cut: usize, wc: &[Vec<f32>], x: &Tensor) -> anyhow::Result<Tensor> {
+        self.client_fwd_with(&self.fallback, cut, wc, x)
+    }
+
+    fn client_fwd_with(
+        &self,
+        scratch: &ScratchHandle,
+        cut: usize,
+        wc: &[Vec<f32>],
+        x: &Tensor,
+    ) -> anyhow::Result<Tensor> {
         let nc = self.check_cut(cut)?;
         anyhow::ensure!(wc.len() == nc, "client_fwd: {} params, expected {nc}", wc.len());
         let batch = self.batch_of_input(x)?;
-        let out = self.forward_no_tape(wc, &x.data, batch, 1, nc / 2)?;
+        let mut s = scratch.lock();
+        let out = self.forward_no_tape(&mut s, wc, &x.data, batch, 1, nc / 2)?;
         Ok(Tensor::new(out, self.smashed_shape(cut, batch)))
     }
 
     fn server_grad(
         &self,
+        cut: usize,
+        ws: &[Vec<f32>],
+        smashed: &Tensor,
+        y1h: &Tensor,
+    ) -> anyhow::Result<(f32, Params, Tensor)> {
+        self.server_grad_with(&self.fallback, cut, ws, smashed, y1h)
+    }
+
+    fn server_grad_with(
+        &self,
+        scratch: &ScratchHandle,
         cut: usize,
         ws: &[Vec<f32>],
         smashed: &Tensor,
@@ -308,14 +351,27 @@ impl Backend for NativeBackend {
         let batch = smashed.shape[0];
         self.check_labels(y1h, batch)?;
         let first = nc / 2 + 1;
-        let (logits, tapes) = self.forward(ws, &smashed.data, batch, first, self.blocks.len())?;
+        let mut s = scratch.lock();
+        let (logits, tapes) =
+            self.forward(&mut s, ws, &smashed.data, batch, first, self.blocks.len())?;
         let (loss, d_logits) = ops::softmax_ce(&logits, &y1h.data, batch, self.spec.classes);
-        let (g_ws, d_smashed) = self.backward(ws, &tapes, d_logits, batch);
+        let (g_ws, d_smashed) = self.backward(&mut s, ws, &tapes, d_logits, batch);
         Ok((loss, g_ws, Tensor::new(d_smashed, smashed.shape.clone())))
     }
 
     fn client_grad(
         &self,
+        cut: usize,
+        wc: &[Vec<f32>],
+        x: &Tensor,
+        g_smashed: &Tensor,
+    ) -> anyhow::Result<Params> {
+        self.client_grad_with(&self.fallback, cut, wc, x, g_smashed)
+    }
+
+    fn client_grad_with(
+        &self,
+        scratch: &ScratchHandle,
         cut: usize,
         wc: &[Vec<f32>],
         x: &Tensor,
@@ -329,28 +385,51 @@ impl Backend for NativeBackend {
             "cotangent shape {:?} does not match cut {cut} batch {batch}",
             g_smashed.shape
         );
-        let (_out, tapes) = self.forward(wc, &x.data, batch, 1, nc / 2)?;
-        let (g_wc, _d_x) = self.backward(wc, &tapes, g_smashed.data.clone(), batch);
+        let mut s = scratch.lock();
+        let (_out, tapes) = self.forward(&mut s, wc, &x.data, batch, 1, nc / 2)?;
+        let (g_wc, _d_x) = self.backward(&mut s, wc, &tapes, g_smashed.data.clone(), batch);
         Ok(g_wc)
     }
 
     fn full_grad(&self, w: &[Vec<f32>], x: &Tensor, y1h: &Tensor) -> anyhow::Result<(f32, Params)> {
+        self.full_grad_with(&self.fallback, w, x, y1h)
+    }
+
+    fn full_grad_with(
+        &self,
+        scratch: &ScratchHandle,
+        w: &[Vec<f32>],
+        x: &Tensor,
+        y1h: &Tensor,
+    ) -> anyhow::Result<(f32, Params)> {
         let n = self.spec.params.len();
         anyhow::ensure!(w.len() == n, "full_grad: {} params, expected {n}", w.len());
         let batch = self.batch_of_input(x)?;
         self.check_labels(y1h, batch)?;
-        let (logits, tapes) = self.forward(w, &x.data, batch, 1, self.blocks.len())?;
+        let mut s = scratch.lock();
+        let (logits, tapes) = self.forward(&mut s, w, &x.data, batch, 1, self.blocks.len())?;
         let (loss, d_logits) = ops::softmax_ce(&logits, &y1h.data, batch, self.spec.classes);
-        let (g_w, _d_x) = self.backward(w, &tapes, d_logits, batch);
+        let (g_w, _d_x) = self.backward(&mut s, w, &tapes, d_logits, batch);
         Ok((loss, g_w))
     }
 
     fn eval(&self, w: &[Vec<f32>], x: &Tensor, y1h: &Tensor) -> anyhow::Result<(f32, f32)> {
+        self.eval_with(&self.fallback, w, x, y1h)
+    }
+
+    fn eval_with(
+        &self,
+        scratch: &ScratchHandle,
+        w: &[Vec<f32>],
+        x: &Tensor,
+        y1h: &Tensor,
+    ) -> anyhow::Result<(f32, f32)> {
         let n = self.spec.params.len();
         anyhow::ensure!(w.len() == n, "eval: {} params, expected {n}", w.len());
         let batch = self.batch_of_input(x)?;
         self.check_labels(y1h, batch)?;
-        let logits = self.forward_no_tape(w, &x.data, batch, 1, self.blocks.len())?;
+        let mut s = scratch.lock();
+        let logits = self.forward_no_tape(&mut s, w, &x.data, batch, 1, self.blocks.len())?;
         let loss = ops::ce_loss(&logits, &y1h.data, batch, self.spec.classes);
         let correct = ops::correct_count(&logits, &y1h.data, batch, self.spec.classes);
         Ok((loss, correct))
@@ -457,6 +536,37 @@ mod tests {
             let diff = tensor::max_abs_diff(&g_split, &g_full);
             assert!(diff == 0.0, "cut {cut}: split grad differs by {diff}");
         }
+    }
+
+    /// The scratch-aware role variants are the hot path; they must agree
+    /// bitwise with the fallback-arena plain methods, through ANY handle.
+    #[test]
+    fn scratch_variants_agree_bitwise_with_plain_roles() {
+        let be = backend();
+        let (params, x, y1h) = golden_setup(&be);
+        let fresh = ScratchHandle::new();
+        let (loss_a, g_a) = be.full_grad(&params, &x, &y1h).unwrap();
+        let (loss_b, g_b) = be.full_grad_with(&fresh, &params, &x, &y1h).unwrap();
+        assert_eq!(loss_a, loss_b);
+        assert_eq!(tensor::max_abs_diff(&g_a, &g_b), 0.0);
+        // Reusing the now-dirty arena changes nothing.
+        let (loss_c, g_c) = be.full_grad_with(&fresh, &params, &x, &y1h).unwrap();
+        assert_eq!(loss_a, loss_c);
+        assert_eq!(tensor::max_abs_diff(&g_a, &g_c), 0.0);
+        let nc = be.spec().cut(2).client_params;
+        let s_a = be.client_fwd(2, &params[..nc], &x).unwrap();
+        let s_b = be.client_fwd_with(&fresh, 2, &params[..nc], &x).unwrap();
+        assert_eq!(s_a, s_b);
+        let (ls_a, _gw, gs_a) = be.server_grad(2, &params[nc..], &s_a, &y1h).unwrap();
+        let (ls_b, _gw, gs_b) = be.server_grad_with(&fresh, 2, &params[nc..], &s_a, &y1h).unwrap();
+        assert_eq!(ls_a, ls_b);
+        assert_eq!(gs_a, gs_b);
+        let gc_a = be.client_grad(2, &params[..nc], &x, &gs_a).unwrap();
+        let gc_b = be.client_grad_with(&fresh, 2, &params[..nc], &x, &gs_a).unwrap();
+        assert_eq!(tensor::max_abs_diff(&gc_a, &gc_b), 0.0);
+        let ev_a = be.eval(&params, &x, &y1h).unwrap();
+        let ev_b = be.eval_with(&fresh, &params, &x, &y1h).unwrap();
+        assert_eq!(ev_a, ev_b);
     }
 
     #[test]

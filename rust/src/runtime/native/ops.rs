@@ -4,14 +4,29 @@
 //!
 //! Layout conventions match the AOT artifacts exactly: activations are
 //! NHWC, conv weights are HWIO, dense weights are `[in, out]`, everything
-//! row-major `f32`.  Inner loops run over the innermost (channel/output)
-//! dimension so reads and writes stay contiguous; zero inputs (common
-//! after relu) skip their accumulation entirely.
+//! row-major `f32`.
+//!
+//! The conv and dense kernels run on the im2col + blocked-GEMM fast path
+//! (see [`super::gemm`] / [`super::im2col`] and DESIGN.md §Native
+//! backend): one register-blocked microkernel serves conv fwd
+//! (`im2col(x)·W`), conv d_x (`d_out·Wᵀ` then col2im), conv d_w
+//! (`im2col(x)ᵀ·d_out`) and the dense matmuls, with the bias+relu fused
+//! into the GEMM epilogue.  Intermediates (the im2col matrix, packed
+//! panels) live in a caller-provided [`Scratch`] arena and are reused
+//! across calls; outputs are freshly allocated because the backward tape
+//! retains them.  The original scalar loops are kept in
+//! [`super::reference`] and cross-checked against this path by the
+//! property tests below.
 //!
 //! Golden values in the tests below were produced by JAX CPU (see
 //! DESIGN.md §Native backend) from the same deterministic inputs, so the
 //! semantics — padding offsets, pooling tie-breaks, loss scaling — are
 //! pinned to the reference implementation rather than to this code.
+
+use crate::runtime::scratch::Scratch;
+
+use super::gemm::{Epilogue, gemm, MatView};
+use super::im2col::{col2im_image, col_width, im2col_image};
 
 /// Image geometry of an NHWC activation buffer.
 #[derive(Clone, Copy, Debug)]
@@ -33,8 +48,15 @@ impl Geom {
 }
 
 /// SAME conv2d, stride 1, square odd kernel `k`, NHWC x HWIO -> NHWC,
-/// with bias add and optional relu fused at the end.
+/// with bias add and optional relu fused into the GEMM epilogue.
+///
+/// Lowering: per image, `out_n = im2col(x_n) · W` — one `h·w × k·k·ic`
+/// by `k·k·ic × oc` GEMM.  Per-image (rather than whole-batch) lowering
+/// bounds the im2col scratch to one image regardless of batch size and
+/// makes each output row's summation order batch-independent.
+#[allow(clippy::too_many_arguments)]
 pub fn conv2d_fwd(
+    scratch: &mut Scratch,
     x: &[f32],
     g: Geom,
     wt: &[f32],
@@ -47,54 +69,38 @@ pub fn conv2d_fwd(
     debug_assert_eq!(x.len(), g.len());
     debug_assert_eq!(wt.len(), k * k * ic * oc);
     debug_assert_eq!(bias.len(), oc);
-    let pad = k / 2;
-    let mut out = vec![0.0f32; b * h * w * oc];
+    let m = h * w;
+    let kk = col_width(k, ic);
+    let mut out = vec![0.0f32; b * m * oc];
+    let Scratch { col, pa, pb, .. } = scratch;
+    col.resize(m * kk, 0.0);
+    let ep = if relu { Epilogue::BiasRelu(bias) } else { Epilogue::Bias(bias) };
     for n in 0..b {
-        for y in 0..h {
-            for ky in 0..k {
-                // Source row sy = y + ky - pad, skipped outside the image.
-                if y + ky < pad || y + ky - pad >= h {
-                    continue;
-                }
-                let sy = y + ky - pad;
-                for xo in 0..w {
-                    let obase = ((n * h + y) * w + xo) * oc;
-                    for kx in 0..k {
-                        if xo + kx < pad || xo + kx - pad >= w {
-                            continue;
-                        }
-                        let sx = xo + kx - pad;
-                        let xbase = ((n * h + sy) * w + sx) * ic;
-                        let wbase = (ky * k + kx) * ic * oc;
-                        for i in 0..ic {
-                            let xv = x[xbase + i];
-                            if xv != 0.0 {
-                                let wrow = &wt[wbase + i * oc..wbase + (i + 1) * oc];
-                                let orow = &mut out[obase..obase + oc];
-                                for (o, &wv) in orow.iter_mut().zip(wrow) {
-                                    *o += xv * wv;
-                                }
-                            }
-                        }
-                    }
-                }
-            }
-        }
-    }
-    for row in out.chunks_mut(oc) {
-        for (o, &bv) in row.iter_mut().zip(bias) {
-            *o += bv;
-            if relu && *o < 0.0 {
-                *o = 0.0;
-            }
-        }
+        im2col_image(&x[n * m * ic..(n + 1) * m * ic], h, w, ic, k, col);
+        gemm(
+            &mut out[n * m * oc..(n + 1) * m * oc],
+            m,
+            oc,
+            kk,
+            MatView::rows(col, kk),
+            MatView::rows(wt, oc),
+            ep,
+            false,
+            pa,
+            pb,
+        );
     }
     out
 }
 
 /// Backward of [`conv2d_fwd`] *without* the activation: the caller masks
 /// `d_out` by the relu derivative first.  Returns `(d_x, d_w, d_b)`.
+///
+/// Per image: `d_x` is `d_out_n · Wᵀ` scattered back by col2im, and `d_w`
+/// accumulates `im2col(x_n)ᵀ · d_out_n` in ascending image order (fixed
+/// summation order — see DESIGN.md).
 pub fn conv2d_bwd(
+    scratch: &mut Scratch,
     x: &[f32],
     g: Geom,
     wt: &[f32],
@@ -105,7 +111,8 @@ pub fn conv2d_bwd(
     let Geom { b, h, w, c: ic } = g;
     debug_assert_eq!(x.len(), g.len());
     debug_assert_eq!(d_out.len(), b * h * w * oc);
-    let pad = k / 2;
+    let m = h * w;
+    let kk = col_width(k, ic);
     let mut d_x = vec![0.0f32; x.len()];
     let mut d_w = vec![0.0f32; wt.len()];
     let mut d_b = vec![0.0f32; oc];
@@ -114,42 +121,39 @@ pub fn conv2d_bwd(
             *db += dv;
         }
     }
+    let Scratch { col, dcol, pa, pb } = scratch;
+    col.resize(m * kk, 0.0);
+    dcol.resize(m * kk, 0.0);
     for n in 0..b {
-        for y in 0..h {
-            for ky in 0..k {
-                if y + ky < pad || y + ky - pad >= h {
-                    continue;
-                }
-                let sy = y + ky - pad;
-                for xo in 0..w {
-                    let obase = ((n * h + y) * w + xo) * oc;
-                    let dorow = &d_out[obase..obase + oc];
-                    for kx in 0..k {
-                        if xo + kx < pad || xo + kx - pad >= w {
-                            continue;
-                        }
-                        let sx = xo + kx - pad;
-                        let xbase = ((n * h + sy) * w + sx) * ic;
-                        let wbase = (ky * k + kx) * ic * oc;
-                        for i in 0..ic {
-                            let wrow = &wt[wbase + i * oc..wbase + (i + 1) * oc];
-                            let mut acc = 0.0f32;
-                            for (&dv, &wv) in dorow.iter().zip(wrow) {
-                                acc += dv * wv;
-                            }
-                            d_x[xbase + i] += acc;
-                            let xv = x[xbase + i];
-                            if xv != 0.0 {
-                                let dwrow = &mut d_w[wbase + i * oc..wbase + (i + 1) * oc];
-                                for (dw, &dv) in dwrow.iter_mut().zip(dorow) {
-                                    *dw += xv * dv;
-                                }
-                            }
-                        }
-                    }
-                }
-            }
-        }
+        let dorow = &d_out[n * m * oc..(n + 1) * m * oc];
+        // d_x_n: column-space cotangent, folded back onto the image.
+        gemm(
+            dcol,
+            m,
+            kk,
+            oc,
+            MatView::rows(dorow, oc),
+            MatView::transposed(wt, oc),
+            Epilogue::None,
+            false,
+            pa,
+            pb,
+        );
+        col2im_image(dcol, h, w, ic, k, &mut d_x[n * m * ic..(n + 1) * m * ic]);
+        // d_w += im2col(x_n)ᵀ · d_out_n.
+        im2col_image(&x[n * m * ic..(n + 1) * m * ic], h, w, ic, k, col);
+        gemm(
+            &mut d_w,
+            kk,
+            oc,
+            m,
+            MatView::transposed(col, kk),
+            MatView::rows(dorow, oc),
+            Epilogue::None,
+            true,
+            pa,
+            pb,
+        );
     }
     (d_x, d_w, d_b)
 }
@@ -200,9 +204,11 @@ pub fn maxpool2x2_bwd(idx: &[u32], d_out: &[f32], in_len: usize) -> Vec<f32> {
     d_x
 }
 
-/// Dense layer `out = x @ w + b`, optional relu.  `x` is `[bsz, din]`,
-/// `wt` is `[din, dout]` row-major.
+/// Dense layer `out = x @ w + b`, optional relu fused into the GEMM
+/// epilogue.  `x` is `[bsz, din]`, `wt` is `[din, dout]` row-major.
+#[allow(clippy::too_many_arguments)]
 pub fn dense_fwd(
+    scratch: &mut Scratch,
     x: &[f32],
     bsz: usize,
     din: usize,
@@ -215,32 +221,28 @@ pub fn dense_fwd(
     debug_assert_eq!(wt.len(), din * dout);
     debug_assert_eq!(bias.len(), dout);
     let mut out = vec![0.0f32; bsz * dout];
-    for n in 0..bsz {
-        let xrow = &x[n * din..(n + 1) * din];
-        let orow = &mut out[n * dout..(n + 1) * dout];
-        orow.copy_from_slice(bias);
-        for (i, &xv) in xrow.iter().enumerate() {
-            if xv != 0.0 {
-                let wrow = &wt[i * dout..(i + 1) * dout];
-                for (o, &wv) in orow.iter_mut().zip(wrow) {
-                    *o += xv * wv;
-                }
-            }
-        }
-        if relu {
-            for o in orow.iter_mut() {
-                if *o < 0.0 {
-                    *o = 0.0;
-                }
-            }
-        }
-    }
+    let Scratch { pa, pb, .. } = scratch;
+    let ep = if relu { Epilogue::BiasRelu(bias) } else { Epilogue::Bias(bias) };
+    gemm(
+        &mut out,
+        bsz,
+        dout,
+        din,
+        MatView::rows(x, din),
+        MatView::rows(wt, dout),
+        ep,
+        false,
+        pa,
+        pb,
+    );
     out
 }
 
 /// Backward of [`dense_fwd`] without the activation (caller masks first).
-/// Returns `(d_x, d_w, d_b)`.
+/// Returns `(d_x, d_w, d_b)`: `d_x = d_out · Wᵀ`, `d_w = xᵀ · d_out` —
+/// both on the GEMM core via transposed views, no operand materialized.
 pub fn dense_bwd(
+    scratch: &mut Scratch,
     x: &[f32],
     bsz: usize,
     din: usize,
@@ -253,29 +255,36 @@ pub fn dense_bwd(
     let mut d_x = vec![0.0f32; bsz * din];
     let mut d_w = vec![0.0f32; wt.len()];
     let mut d_b = vec![0.0f32; dout];
-    for n in 0..bsz {
-        let dorow = &d_out[n * dout..(n + 1) * dout];
-        for (db, &dv) in d_b.iter_mut().zip(dorow) {
+    for row in d_out.chunks(dout) {
+        for (db, &dv) in d_b.iter_mut().zip(row) {
             *db += dv;
         }
-        let xrow = &x[n * din..(n + 1) * din];
-        let dxrow = &mut d_x[n * din..(n + 1) * din];
-        for i in 0..din {
-            let wrow = &wt[i * dout..(i + 1) * dout];
-            let mut acc = 0.0f32;
-            for (&dv, &wv) in dorow.iter().zip(wrow) {
-                acc += dv * wv;
-            }
-            dxrow[i] = acc;
-            let xv = xrow[i];
-            if xv != 0.0 {
-                let dwrow = &mut d_w[i * dout..(i + 1) * dout];
-                for (dw, &dv) in dwrow.iter_mut().zip(dorow) {
-                    *dw += xv * dv;
-                }
-            }
-        }
     }
+    let Scratch { pa, pb, .. } = scratch;
+    gemm(
+        &mut d_x,
+        bsz,
+        din,
+        dout,
+        MatView::rows(d_out, dout),
+        MatView::transposed(wt, dout),
+        Epilogue::None,
+        false,
+        pa,
+        pb,
+    );
+    gemm(
+        &mut d_w,
+        din,
+        dout,
+        bsz,
+        MatView::transposed(x, din),
+        MatView::rows(d_out, dout),
+        Epilogue::None,
+        false,
+        pa,
+        pb,
+    );
     (d_x, d_w, d_b)
 }
 
@@ -365,7 +374,10 @@ pub fn correct_count(logits: &[f32], y1h: &[f32], bsz: usize, classes: usize) ->
 
 #[cfg(test)]
 pub(crate) mod tests {
+    use super::super::reference;
     use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
 
     /// Deterministic dyadic-rational generator shared with the JAX golden
     /// script: exact in f32 on every platform.
@@ -384,6 +396,17 @@ pub(crate) mod tests {
 
     fn close(a: f64, b: f64, tol: f64) -> bool {
         (a - b).abs() <= tol * (1.0 + b.abs())
+    }
+
+    /// The satellite acceptance comparator: |a-b| ≤ 1e-5·(1+|b|).
+    fn assert_close_1e5(tag: &str, got: &[f32], want: &[f32]) {
+        assert_eq!(got.len(), want.len(), "{tag}: length");
+        for (i, (a, b)) in got.iter().zip(want).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-5 * (1.0 + b.abs()),
+                "{tag}[{i}]: fast {a} vs reference {b}"
+            );
+        }
     }
 
     // Golden values from JAX CPU (lax.conv_general_dilated / reduce_window
@@ -408,7 +431,8 @@ pub(crate) mod tests {
         let x = gen_vec(X_CONV, 180);
         let w = gen_vec(W_CONV, 300);
         let b = gen_vec(B_CONV, 4);
-        let out = conv2d_fwd(&x, CONV_G, &w, 5, 4, &b, true);
+        let mut s = Scratch::new();
+        let out = conv2d_fwd(&mut s, &x, CONV_G, &w, 5, 4, &b, true);
         assert!(close(fsum(&out), 46.72308349609375, 1e-4), "sum {}", fsum(&out));
         // out[0, 0, 1, 2] with OC=4: ((0*6+0)*5+1)*4+2 = 6.
         assert!((out[6] - 0.755523681640625).abs() < 1e-5, "probe {}", out[6]);
@@ -419,7 +443,8 @@ pub(crate) mod tests {
         let x = gen_vec(X_CONV, 180);
         let w = gen_vec(W_CONV, 300);
         let d_out = gen_vec(DO_CONV, 240);
-        let (d_x, d_w, d_b) = conv2d_bwd(&x, CONV_G, &w, 5, 4, &d_out);
+        let mut s = Scratch::new();
+        let (d_x, d_w, d_b) = conv2d_bwd(&mut s, &x, CONV_G, &w, 5, 4, &d_out);
         assert!(close(fsum(&d_x), 0.0796661376953125, 1e-3), "d_x {}", fsum(&d_x));
         assert!(close(fsum(&d_w), 1.1000213623046875, 1e-3), "d_w {}", fsum(&d_w));
         assert!(close(fsum(&d_b), -1.5546875, 1e-3), "d_b {}", fsum(&d_b));
@@ -443,7 +468,8 @@ pub(crate) mod tests {
         let x = gen_vec(X_DENSE, 21);
         let w = gen_vec(W_DENSE, 35);
         let b = gen_vec(B_DENSE, 5);
-        let out = dense_fwd(&x, 3, 7, 5, &w, &b, true);
+        let mut s = Scratch::new();
+        let out = dense_fwd(&mut s, &x, 3, 7, 5, &w, &b, true);
         assert!(close(fsum(&out), 1.689208984375, 1e-4), "dense {}", fsum(&out));
     }
 
@@ -453,7 +479,8 @@ pub(crate) mod tests {
         let mut w = gen_vec(W_DENSE, 35);
         let b = gen_vec(B_DENSE, 5);
         let d_out = gen_vec(40, 15);
-        let (_d_x, d_w, _d_b) = dense_bwd(&x, 3, 7, 5, &w, &d_out);
+        let mut s = Scratch::new();
+        let (_d_x, d_w, _d_b) = dense_bwd(&mut s, &x, 3, 7, 5, &w, &d_out);
         // <d_w, e> ≈ (f(w + h e) - f(w - h e)) / 2h with f = <out, d_out>.
         let probe = 9usize;
         let h = 1e-3f32;
@@ -461,15 +488,151 @@ pub(crate) mod tests {
             out.iter().zip(&d_out).map(|(&o, &d)| (o * d) as f64).sum()
         };
         w[probe] += h;
-        let up = dot(&dense_fwd(&x, 3, 7, 5, &w, &b, false));
+        let up = dot(&dense_fwd(&mut s, &x, 3, 7, 5, &w, &b, false));
         w[probe] -= 2.0 * h;
-        let dn = dot(&dense_fwd(&x, 3, 7, 5, &w, &b, false));
+        let dn = dot(&dense_fwd(&mut s, &x, 3, 7, 5, &w, &b, false));
         let fd = (up - dn) / (2.0 * h as f64);
         assert!(
             (fd - d_w[probe] as f64).abs() < 1e-3 * (1.0 + fd.abs()),
             "fd {fd} vs analytic {}",
             d_w[probe]
         );
+    }
+
+    /// The satellite shapes the tiling must survive: odd H/W, channel
+    /// counts off the MR/NR=8 tiles, batch 1 — fast path ≡ scalar
+    /// reference to 1e-5 on forward AND all three backward outputs.
+    #[test]
+    fn gemm_path_matches_reference_on_awkward_shapes() {
+        // (b, h, w, ic, k, oc)
+        let cases = [
+            (1usize, 5usize, 7usize, 3usize, 5usize, 9usize), // odd h/w, off-tile ic/oc
+            (1, 1, 1, 1, 1, 1),                               // degenerate 1x1
+            (2, 6, 5, 3, 3, 4),                               // the golden geometry, k=3
+            (1, 3, 9, 7, 5, 13),                              // oc crossing one NR tile
+            (3, 7, 2, 5, 3, 8),                               // narrow image, exact NR
+        ];
+        let mut s = Scratch::new();
+        for (ci, &(b, h, w, ic, k, oc)) in cases.iter().enumerate() {
+            let g = Geom { b, h, w, c: ic };
+            let base = 10_000 * ci as u64;
+            let x = gen_vec(base, g.len());
+            let wt = gen_vec(base + 1_000, k * k * ic * oc);
+            let bias = gen_vec(base + 2_000, oc);
+            let d_out = gen_vec(base + 3_000, b * h * w * oc);
+            for relu in [false, true] {
+                let fast = conv2d_fwd(&mut s, &x, g, &wt, k, oc, &bias, relu);
+                let slow = reference::conv2d_fwd(&x, g, &wt, k, oc, &bias, relu);
+                assert_close_1e5(&format!("case {ci} fwd(relu={relu})"), &fast, &slow);
+            }
+            let (dx_f, dw_f, db_f) = conv2d_bwd(&mut s, &x, g, &wt, k, oc, &d_out);
+            let (dx_s, dw_s, db_s) = reference::conv2d_bwd(&x, g, &wt, k, oc, &d_out);
+            assert_close_1e5(&format!("case {ci} d_x"), &dx_f, &dx_s);
+            assert_close_1e5(&format!("case {ci} d_w"), &dw_f, &dw_s);
+            assert_close_1e5(&format!("case {ci} d_b"), &db_f, &db_s);
+        }
+    }
+
+    #[test]
+    fn property_conv_gemm_equals_reference() {
+        let mut s = Scratch::new();
+        check("conv-gemm-vs-reference", 48, |rng| {
+            let b = 1 + rng.below(2);
+            let h = 1 + rng.below(7);
+            let w = 1 + rng.below(7);
+            let ic = 1 + rng.below(4);
+            let oc = 1 + rng.below(9);
+            let k = [1usize, 3, 5][rng.below(3)];
+            let g = Geom { b, h, w, c: ic };
+            let x: Vec<f32> = (0..g.len()).map(|_| rng.normal() as f32 * 0.5).collect();
+            let wt: Vec<f32> =
+                (0..k * k * ic * oc).map(|_| rng.normal() as f32 * 0.5).collect();
+            let bias: Vec<f32> = (0..oc).map(|_| rng.normal() as f32 * 0.5).collect();
+            let d_out: Vec<f32> =
+                (0..b * h * w * oc).map(|_| rng.normal() as f32 * 0.5).collect();
+            let fast = conv2d_fwd(&mut s, &x, g, &wt, k, oc, &bias, true);
+            let slow = reference::conv2d_fwd(&x, g, &wt, k, oc, &bias, true);
+            for (i, (a, bb)) in fast.iter().zip(&slow).enumerate() {
+                prop_assert!(
+                    (a - bb).abs() <= 1e-5 * (1.0 + bb.abs()),
+                    "fwd[{i}]: {a} vs {bb} (b{b} {h}x{w}x{ic} k{k} oc{oc})"
+                );
+            }
+            let (dx_f, dw_f, db_f) = conv2d_bwd(&mut s, &x, g, &wt, k, oc, &d_out);
+            let (dx_s, dw_s, db_s) = reference::conv2d_bwd(&x, g, &wt, k, oc, &d_out);
+            for (tag, f, r) in [("d_x", &dx_f, &dx_s), ("d_w", &dw_f, &dw_s), ("d_b", &db_f, &db_s)]
+            {
+                for (i, (a, bb)) in f.iter().zip(r.iter()).enumerate() {
+                    prop_assert!(
+                        (a - bb).abs() <= 1e-5 * (1.0 + bb.abs()),
+                        "{tag}[{i}]: {a} vs {bb} (b{b} {h}x{w}x{ic} k{k} oc{oc})"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_dense_gemm_equals_reference() {
+        let mut s = Scratch::new();
+        check("dense-gemm-vs-reference", 48, |rng| {
+            let bsz = 1 + rng.below(6);
+            let din = 1 + rng.below(50);
+            let dout = 1 + rng.below(20);
+            let x: Vec<f32> = (0..bsz * din).map(|_| rng.normal() as f32 * 0.5).collect();
+            let wt: Vec<f32> = (0..din * dout).map(|_| rng.normal() as f32 * 0.5).collect();
+            let bias: Vec<f32> = (0..dout).map(|_| rng.normal() as f32 * 0.5).collect();
+            let d_out: Vec<f32> = (0..bsz * dout).map(|_| rng.normal() as f32 * 0.5).collect();
+            let fast = dense_fwd(&mut s, &x, bsz, din, dout, &wt, &bias, true);
+            let slow = reference::dense_fwd(&x, bsz, din, dout, &wt, &bias, true);
+            for (i, (a, bb)) in fast.iter().zip(&slow).enumerate() {
+                prop_assert!(
+                    (a - bb).abs() <= 1e-5 * (1.0 + bb.abs()),
+                    "fwd[{i}]: {a} vs {bb} ({bsz}x{din}x{dout})"
+                );
+            }
+            let (dx_f, dw_f, db_f) = dense_bwd(&mut s, &x, bsz, din, dout, &wt, &d_out);
+            let (dx_s, dw_s, db_s) = reference::dense_bwd(&x, bsz, din, dout, &wt, &d_out);
+            for (tag, f, r) in [("d_x", &dx_f, &dx_s), ("d_w", &dw_f, &dw_s), ("d_b", &db_f, &db_s)]
+            {
+                for (i, (a, bb)) in f.iter().zip(r.iter()).enumerate() {
+                    prop_assert!(
+                        (a - bb).abs() <= 1e-5 * (1.0 + bb.abs()),
+                        "{tag}[{i}]: {a} vs {bb} ({bsz}x{din}x{dout})"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The scratch-arena purity contract (DESIGN.md): results are bitwise
+    /// identical whatever stale garbage the arena carries — this is what
+    /// lets per-worker arenas coexist with threads=N ≡ threads=1.
+    #[test]
+    fn results_do_not_depend_on_scratch_contents() {
+        let x = gen_vec(X_CONV, 180);
+        let w = gen_vec(W_CONV, 300);
+        let b = gen_vec(B_CONV, 4);
+        let d_out = gen_vec(DO_CONV, 240);
+        let run = |s: &mut Scratch| {
+            let fwd = conv2d_fwd(s, &x, CONV_G, &w, 5, 4, &b, true);
+            let (dx, dw, db) = conv2d_bwd(s, &x, CONV_G, &w, 5, 4, &d_out);
+            let dn = dense_fwd(s, &fwd[..20], 4, 5, 3, &w[..15], &b[..3], true);
+            [fwd, dx, dw, db, dn].concat()
+        };
+        let clean = run(&mut Scratch::new());
+        let mut dirty = Scratch::new();
+        dirty.col = vec![f32::NAN; 7];
+        dirty.dcol = vec![f32::NAN; 100_000];
+        dirty.pa = vec![f32::NAN; 13];
+        dirty.pb = vec![f32::NAN; 64];
+        let poisoned = run(&mut dirty);
+        assert_eq!(clean.len(), poisoned.len());
+        for (i, (a, bb)) in clean.iter().zip(&poisoned).enumerate() {
+            assert_eq!(a.to_bits(), bb.to_bits(), "[{i}]: {a} vs {bb} under dirty scratch");
+        }
     }
 
     #[test]

@@ -1,0 +1,256 @@
+//! The scalar reference kernels: the original autovectorized triple-loop
+//! conv/dense implementations, retained verbatim after the im2col+GEMM
+//! fast path (`ops.rs`) replaced them on the hot path.
+//!
+//! They exist to pin semantics, not to be fast: the property tests in
+//! [`super::ops`] cross-check the GEMM path against these on awkward
+//! shapes, the golden tests below pin them to JAX CPU, and
+//! `benches/bench_kernels.rs` uses them as the speedup baseline.  The
+//! `xv != 0.0` skip-heuristic is kept HERE only — it pays on branchy
+//! scalar loops over post-relu activations but is pure branch overhead
+//! inside a packed GEMM, so the fast path dropped it.
+
+use super::ops::Geom;
+
+/// SAME conv2d, stride 1, square odd kernel `k`, NHWC x HWIO -> NHWC,
+/// with bias add and optional relu applied in a second pass.
+pub fn conv2d_fwd(
+    x: &[f32],
+    g: Geom,
+    wt: &[f32],
+    k: usize,
+    oc: usize,
+    bias: &[f32],
+    relu: bool,
+) -> Vec<f32> {
+    let Geom { b, h, w, c: ic } = g;
+    debug_assert_eq!(x.len(), g.len());
+    debug_assert_eq!(wt.len(), k * k * ic * oc);
+    debug_assert_eq!(bias.len(), oc);
+    let pad = k / 2;
+    let mut out = vec![0.0f32; b * h * w * oc];
+    for n in 0..b {
+        for y in 0..h {
+            for ky in 0..k {
+                // Source row sy = y + ky - pad, skipped outside the image.
+                if y + ky < pad || y + ky - pad >= h {
+                    continue;
+                }
+                let sy = y + ky - pad;
+                for xo in 0..w {
+                    let obase = ((n * h + y) * w + xo) * oc;
+                    for kx in 0..k {
+                        if xo + kx < pad || xo + kx - pad >= w {
+                            continue;
+                        }
+                        let sx = xo + kx - pad;
+                        let xbase = ((n * h + sy) * w + sx) * ic;
+                        let wbase = (ky * k + kx) * ic * oc;
+                        for i in 0..ic {
+                            let xv = x[xbase + i];
+                            if xv != 0.0 {
+                                let wrow = &wt[wbase + i * oc..wbase + (i + 1) * oc];
+                                let orow = &mut out[obase..obase + oc];
+                                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                                    *o += xv * wv;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for row in out.chunks_mut(oc) {
+        for (o, &bv) in row.iter_mut().zip(bias) {
+            *o += bv;
+            if relu && *o < 0.0 {
+                *o = 0.0;
+            }
+        }
+    }
+    out
+}
+
+/// Backward of [`conv2d_fwd`] *without* the activation: the caller masks
+/// `d_out` by the relu derivative first.  Returns `(d_x, d_w, d_b)`.
+pub fn conv2d_bwd(
+    x: &[f32],
+    g: Geom,
+    wt: &[f32],
+    k: usize,
+    oc: usize,
+    d_out: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let Geom { b, h, w, c: ic } = g;
+    debug_assert_eq!(x.len(), g.len());
+    debug_assert_eq!(d_out.len(), b * h * w * oc);
+    let pad = k / 2;
+    let mut d_x = vec![0.0f32; x.len()];
+    let mut d_w = vec![0.0f32; wt.len()];
+    let mut d_b = vec![0.0f32; oc];
+    for row in d_out.chunks(oc) {
+        for (db, &dv) in d_b.iter_mut().zip(row) {
+            *db += dv;
+        }
+    }
+    for n in 0..b {
+        for y in 0..h {
+            for ky in 0..k {
+                if y + ky < pad || y + ky - pad >= h {
+                    continue;
+                }
+                let sy = y + ky - pad;
+                for xo in 0..w {
+                    let obase = ((n * h + y) * w + xo) * oc;
+                    let dorow = &d_out[obase..obase + oc];
+                    for kx in 0..k {
+                        if xo + kx < pad || xo + kx - pad >= w {
+                            continue;
+                        }
+                        let sx = xo + kx - pad;
+                        let xbase = ((n * h + sy) * w + sx) * ic;
+                        let wbase = (ky * k + kx) * ic * oc;
+                        for i in 0..ic {
+                            let wrow = &wt[wbase + i * oc..wbase + (i + 1) * oc];
+                            let mut acc = 0.0f32;
+                            for (&dv, &wv) in dorow.iter().zip(wrow) {
+                                acc += dv * wv;
+                            }
+                            d_x[xbase + i] += acc;
+                            let xv = x[xbase + i];
+                            if xv != 0.0 {
+                                let dwrow = &mut d_w[wbase + i * oc..wbase + (i + 1) * oc];
+                                for (dw, &dv) in dwrow.iter_mut().zip(dorow) {
+                                    *dw += xv * dv;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (d_x, d_w, d_b)
+}
+
+/// Dense layer `out = x @ w + b`, optional relu.  `x` is `[bsz, din]`,
+/// `wt` is `[din, dout]` row-major.
+pub fn dense_fwd(
+    x: &[f32],
+    bsz: usize,
+    din: usize,
+    dout: usize,
+    wt: &[f32],
+    bias: &[f32],
+    relu: bool,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), bsz * din);
+    debug_assert_eq!(wt.len(), din * dout);
+    debug_assert_eq!(bias.len(), dout);
+    let mut out = vec![0.0f32; bsz * dout];
+    for n in 0..bsz {
+        let xrow = &x[n * din..(n + 1) * din];
+        let orow = &mut out[n * dout..(n + 1) * dout];
+        orow.copy_from_slice(bias);
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv != 0.0 {
+                let wrow = &wt[i * dout..(i + 1) * dout];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+        if relu {
+            for o in orow.iter_mut() {
+                if *o < 0.0 {
+                    *o = 0.0;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Backward of [`dense_fwd`] without the activation (caller masks first).
+/// Returns `(d_x, d_w, d_b)`.
+pub fn dense_bwd(
+    x: &[f32],
+    bsz: usize,
+    din: usize,
+    dout: usize,
+    wt: &[f32],
+    d_out: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(x.len(), bsz * din);
+    debug_assert_eq!(d_out.len(), bsz * dout);
+    let mut d_x = vec![0.0f32; bsz * din];
+    let mut d_w = vec![0.0f32; wt.len()];
+    let mut d_b = vec![0.0f32; dout];
+    for n in 0..bsz {
+        let dorow = &d_out[n * dout..(n + 1) * dout];
+        for (db, &dv) in d_b.iter_mut().zip(dorow) {
+            *db += dv;
+        }
+        let xrow = &x[n * din..(n + 1) * din];
+        let dxrow = &mut d_x[n * din..(n + 1) * din];
+        for i in 0..din {
+            let wrow = &wt[i * dout..(i + 1) * dout];
+            let mut acc = 0.0f32;
+            for (&dv, &wv) in dorow.iter().zip(wrow) {
+                acc += dv * wv;
+            }
+            dxrow[i] = acc;
+            let xv = xrow[i];
+            if xv != 0.0 {
+                let dwrow = &mut d_w[i * dout..(i + 1) * dout];
+                for (dw, &dv) in dwrow.iter_mut().zip(dorow) {
+                    *dw += xv * dv;
+                }
+            }
+        }
+    }
+    (d_x, d_w, d_b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ops::tests::gen_vec;
+    use super::*;
+
+    fn fsum(v: &[f32]) -> f64 {
+        v.iter().map(|&x| x as f64).sum()
+    }
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + b.abs())
+    }
+
+    const CONV_G: Geom = Geom { b: 2, h: 6, w: 5, c: 3 };
+
+    // The same JAX CPU goldens as the fast path (`ops::tests`): the
+    // reference keeps its own copy so a regression in either path is
+    // attributed unambiguously.
+    #[test]
+    fn reference_conv_matches_jax() {
+        let x = gen_vec(0, 180);
+        let w = gen_vec(180, 300);
+        let b = gen_vec(480, 4);
+        let out = conv2d_fwd(&x, CONV_G, &w, 5, 4, &b, true);
+        assert!(close(fsum(&out), 46.72308349609375, 1e-4), "sum {}", fsum(&out));
+        let d_out = gen_vec(484, 240);
+        let (d_x, d_w, d_b) = conv2d_bwd(&x, CONV_G, &w, 5, 4, &d_out);
+        assert!(close(fsum(&d_x), 0.0796661376953125, 1e-3), "d_x {}", fsum(&d_x));
+        assert!(close(fsum(&d_w), 1.1000213623046875, 1e-3), "d_w {}", fsum(&d_w));
+        assert!(close(fsum(&d_b), -1.5546875, 1e-3), "d_b {}", fsum(&d_b));
+    }
+
+    #[test]
+    fn reference_dense_matches_jax() {
+        let x = gen_vec(904, 21);
+        let w = gen_vec(925, 35);
+        let b = gen_vec(960, 5);
+        let out = dense_fwd(&x, 3, 7, 5, &w, &b, true);
+        assert!(close(fsum(&out), 1.689208984375, 1e-4), "dense {}", fsum(&out));
+    }
+}

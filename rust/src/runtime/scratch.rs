@@ -1,0 +1,88 @@
+//! Reusable kernel scratch memory: a per-worker arena for the native
+//! backend's im2col buffers and packed GEMM panels, so the training hot
+//! path stops reallocating multi-hundred-KB intermediates on every
+//! forward/backward call.
+//!
+//! Ownership model (see DESIGN.md §Native backend):
+//!
+//! * [`Scratch`] is the arena itself — four named growable `f32` buffers
+//!   that the GEMM/im2col kernels resize (never shrink) to the largest
+//!   shape they have seen.  A steady-state round performs ZERO scratch
+//!   allocations.
+//! * [`ScratchHandle`] is the cheap, cloneable handle the rest of the
+//!   runtime passes around (`Arc<Mutex<Scratch>>`).  The
+//!   [`super::ParallelExecutor`] owns one arena per worker thread and
+//!   hands worker `k` its own handle, so hot-path locks are uncontended.
+//! * Correctness NEVER depends on scratch contents: every kernel fully
+//!   overwrites the region it later reads (packing pads with explicit
+//!   zeros; im2col writes every column).  Results are therefore bitwise
+//!   identical whatever stale data an arena carries — the property the
+//!   threads=N ≡ threads=1 guarantee needs, tested by
+//!   `native::ops::tests::results_do_not_depend_on_scratch_contents`.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Reusable kernel workspace: im2col/col2im staging plus the packed GEMM
+/// panels.  Buffers grow to a high-water mark and are reused in place.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// im2col matrix of one image: `h·w × k·k·ic`.
+    pub col: Vec<f32>,
+    /// Column-space gradient of one image (col2im input), same shape.
+    pub dcol: Vec<f32>,
+    /// Packed A panel (`MC × KC`, MR-row strips, k-major).
+    pub pa: Vec<f32>,
+    /// Packed B panel (`KC × NC`, NR-column strips, k-major).
+    pub pb: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Current high-water footprint in bytes (diagnostics/benches).
+    pub fn capacity_bytes(&self) -> usize {
+        (self.col.capacity() + self.dcol.capacity() + self.pa.capacity() + self.pb.capacity())
+            * std::mem::size_of::<f32>()
+    }
+}
+
+/// Shared handle to one [`Scratch`] arena.  Clones refer to the same
+/// arena; lock scope is one backend call.
+#[derive(Clone, Debug, Default)]
+pub struct ScratchHandle(Arc<Mutex<Scratch>>);
+
+impl ScratchHandle {
+    pub fn new() -> ScratchHandle {
+        ScratchHandle::default()
+    }
+
+    /// Lock the arena for one kernel invocation.  Workers own disjoint
+    /// arenas, so this never contends on the hot path.
+    pub fn lock(&self) -> MutexGuard<'_, Scratch> {
+        self.0.lock().expect("scratch arena mutex poisoned")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_starts_empty_and_tracks_capacity() {
+        let s = Scratch::new();
+        assert_eq!(s.capacity_bytes(), 0);
+        let h = ScratchHandle::new();
+        h.lock().col.resize(16, 0.0);
+        assert!(h.lock().capacity_bytes() >= 16 * 4);
+    }
+
+    #[test]
+    fn handle_clones_share_one_arena() {
+        let h = ScratchHandle::new();
+        let h2 = h.clone();
+        h.lock().pa.push(1.0);
+        assert_eq!(h2.lock().pa.len(), 1);
+    }
+}
