@@ -1,9 +1,14 @@
 //! Parallel round-engine scaling: real wall-clock of one communication
 //! round at threads ∈ {1, 2, 4} for SFL-GA and FL on the builtin manifest
 //! (native backend, default paper batches), plus the measured speedup vs
-//! the serial engine.  Emits a machine-readable summary to
-//! `BENCH_parallel.json` (override the path with `SFLGA_BENCH_OUT`) to
-//! seed the perf trajectory across PRs.
+//! the serial engine.  A second, *pipelined-chain* variant measures SFL
+//! (unicast) at τ = 2 — the configuration where the task-session executor
+//! fuses client-fwd → server FP/BP → client-bwd into ONE chain per
+//! participant with no phase barriers inside an epoch, so its speedup
+//! over threads=1 isolates the win of phase fusion on deep chains.
+//! Emits a machine-readable summary to `BENCH_parallel.json` (override
+//! the path with `SFLGA_BENCH_OUT`) to seed the perf trajectory across
+//! PRs.
 //!
 //! Training results are bitwise identical at every thread count
 //! (`tests/determinism.rs`), so this measures pure systems speedup.
@@ -19,42 +24,61 @@ const CUT: usize = 2;
 const CLIENTS: usize = 8;
 const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
 
+/// One-round wall-clock for a (scheme, τ) pair across [`THREAD_COUNTS`],
+/// returned as the per-thread JSON block (with speedups vs threads=1).
+fn bench_scheme(
+    manifest: &Manifest,
+    scheme: SchemeKind,
+    tau: usize,
+    label: &str,
+) -> anyhow::Result<BTreeMap<String, Json>> {
+    let mut per_thread: BTreeMap<String, Json> = BTreeMap::new();
+    let mut serial_mean_ns = 0.0;
+    for threads in THREAD_COUNTS {
+        let cfg = TrainConfig {
+            scheme,
+            tau,
+            threads,
+            rounds: 1_000_000, // never reached; we drive rounds manually
+            eval_every: usize::MAX,
+            samples_per_client: 64,
+            num_clients: CLIENTS,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::native(manifest, cfg)?;
+        let r = bench(&format!("round/{label}/threads={threads}"), 1, 4, || {
+            let st = trainer.draw_channel();
+            trainer.run_round(CUT, &st).unwrap().train_loss
+        });
+        if threads == 1 {
+            serial_mean_ns = r.mean_ns;
+        }
+        let speedup = serial_mean_ns / r.mean_ns;
+        println!("    -> speedup vs threads=1: {speedup:.2}x");
+        let mut entry = BTreeMap::new();
+        entry.insert("mean_ns".to_string(), Json::Num(r.mean_ns));
+        entry.insert("p50_ns".to_string(), Json::Num(r.p50_ns));
+        entry.insert("min_ns".to_string(), Json::Num(r.min_ns));
+        entry.insert("speedup_vs_serial".to_string(), Json::Num(speedup));
+        per_thread.insert(format!("threads_{threads}"), Json::Obj(entry));
+    }
+    Ok(per_thread)
+}
+
 fn main() -> anyhow::Result<()> {
     let manifest = Manifest::builtin();
     let mut schemes_json: BTreeMap<String, Json> = BTreeMap::new();
     println!("== parallel round engine: one-round wall-clock ==");
     for scheme in [SchemeKind::SflGa, SchemeKind::Fl] {
-        let mut per_thread: BTreeMap<String, Json> = BTreeMap::new();
-        let mut serial_mean_ns = 0.0;
-        for threads in THREAD_COUNTS {
-            let cfg = TrainConfig {
-                scheme,
-                threads,
-                rounds: 1_000_000, // never reached; we drive rounds manually
-                eval_every: usize::MAX,
-                samples_per_client: 64,
-                num_clients: CLIENTS,
-                ..Default::default()
-            };
-            let mut trainer = Trainer::native(&manifest, cfg)?;
-            let r = bench(&format!("round/{}/threads={threads}", scheme.name()), 1, 4, || {
-                let st = trainer.draw_channel();
-                trainer.run_round(CUT, &st).unwrap().train_loss
-            });
-            if threads == 1 {
-                serial_mean_ns = r.mean_ns;
-            }
-            let speedup = serial_mean_ns / r.mean_ns;
-            println!("    -> speedup vs threads=1: {speedup:.2}x");
-            let mut entry = BTreeMap::new();
-            entry.insert("mean_ns".to_string(), Json::Num(r.mean_ns));
-            entry.insert("p50_ns".to_string(), Json::Num(r.p50_ns));
-            entry.insert("min_ns".to_string(), Json::Num(r.min_ns));
-            entry.insert("speedup_vs_serial".to_string(), Json::Num(speedup));
-            per_thread.insert(format!("threads_{threads}"), Json::Obj(entry));
-        }
-        schemes_json.insert(scheme.name().to_string(), Json::Obj(per_thread));
+        let block = bench_scheme(&manifest, scheme, 1, scheme.name())?;
+        schemes_json.insert(scheme.name().to_string(), Json::Obj(block));
     }
+    // Pipelined-chain variant: unicast SFL at τ = 2 runs each participant
+    // as one fused fwd → server → bwd chain per epoch — no phase barrier
+    // anywhere inside the epoch, the deepest pipeline the plans express.
+    println!("== pipelined fused chains: sfl, tau=2 ==");
+    let block = bench_scheme(&manifest, SchemeKind::Sfl, 2, "sfl-fused-tau2")?;
+    schemes_json.insert("sfl_fused_tau2".to_string(), Json::Obj(block));
 
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("parallel_round_engine".to_string()));

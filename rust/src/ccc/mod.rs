@@ -89,6 +89,9 @@ pub struct Env {
     scenario: ScenarioConfig,
     caps: Vec<f64>,
     part_rng: Pcg,
+    /// The run seed, kept so [`Env::reset`] can re-derive the
+    /// participation stream for every episode.
+    seed: u64,
     cum_cost: f64,
     steps: usize,
 }
@@ -116,6 +119,11 @@ impl Env {
         seed: u64,
         scenario: ScenarioConfig,
     ) -> Env {
+        // Channel-seed convention: the RAW run seed (`Channel::new`
+        // domain-separates its RNG stream internally) — the SAME
+        // convention `Trainer::new` uses, so the optimizer trains on
+        // exactly the gain trajectory the simulator replays
+        // (`tests/reproducibility.rs` pins the equality).
         let channel = Channel::new(net.clone(), num_clients, seed);
         // Fixed hardware: the same capacity fold and participation RNG
         // the Trainer derives from the run seed (see DESIGN.md
@@ -131,6 +139,7 @@ impl Env {
             scenario,
             caps,
             part_rng,
+            seed,
             cum_cost: 0.0,
             steps: 0,
         }
@@ -154,9 +163,20 @@ impl Env {
     }
 
     /// Reset for a new episode; returns (channel state, feature vector).
+    ///
+    /// The participation RNG is re-derived from the run seed, so every
+    /// episode replays the SAME cohort sequence — the stream the
+    /// [`ScenarioConfig::part_rng`] contract says Env and Trainer both
+    /// derive from the run seed.  (Before this fix, episode k's cohorts
+    /// depended on how many episodes had already run.)  The channel RNG
+    /// is deliberately NOT reset: block fading continues across episodes,
+    /// so the agent explores fresh gain realizations each episode while
+    /// the cohort stream stays pinned — the trajectory as a whole is
+    /// still a deterministic function of the run seed and episode count.
     pub fn reset(&mut self) -> (ChannelState, Vec<f32>) {
         self.cum_cost = 0.0;
         self.steps = 0;
+        self.part_rng = ScenarioConfig::part_rng(self.seed);
         let st = self.channel.draw_round();
         let f = self.features(&st);
         (st, f)
@@ -199,6 +219,7 @@ impl Env {
             psi,
             feasible,
             participants,
+            cohort,
             next_state,
             next_features,
         }
@@ -249,6 +270,12 @@ pub struct StepOutcome {
     pub feasible: bool,
     /// Cohort size the cost was evaluated over.
     pub participants: usize,
+    /// The drawn cohort (sorted client indices), `None` under full
+    /// participation (implicitly `0..n` — the fast path draws nothing
+    /// and allocates nothing).  Exposed so the episode-replay contract
+    /// of [`Env::reset`] is observable: for a fixed run seed, every
+    /// episode sees the same cohort sequence.
+    pub cohort: Option<Vec<usize>>,
     pub next_state: ChannelState,
     pub next_features: Vec<f32>,
 }

@@ -14,7 +14,7 @@ pub mod trainer;
 
 pub use comm::RoundComm;
 pub use metrics::RunMetrics;
-pub use plan::{ClientSync, CotangentRoute, RoundPlan};
+pub use plan::{BwdDependency, ClientSync, CotangentRoute, RoundPlan};
 pub use timing::{AllocPolicy, RoundLatency};
 pub use trainer::{RoundStats, TrainConfig, Trainer};
 

@@ -48,6 +48,21 @@ pub enum RoundPlan {
     Full,
 }
 
+/// When a participant's client-side BP (eq 6) may start, relative to its
+/// own server FP+BP — the plan's pipeline dependency description, which
+/// the round engine turns into an executor schedule (DESIGN.md §Perf).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BwdDependency {
+    /// Unicast: participant j backprops its OWN cotangent s^j, which is
+    /// ready the moment j's server FP+BP lands — client-bwd fuses onto
+    /// the same per-participant task chain, no cross-client barrier.
+    OwnServerGrad,
+    /// Broadcast: eq (5) aggregates the cotangents of ALL participants
+    /// before anyone can backprop — an irreducible barrier; client-bwd
+    /// fans out only after the coordinator's fixed-order reduction.
+    BroadcastBarrier,
+}
+
 impl RoundPlan {
     /// The split-phase routing, if this plan splits the model.
     pub fn route(&self) -> Option<CotangentRoute> {
@@ -60,6 +75,22 @@ impl RoundPlan {
     /// Whether the round pays synchronous client-model FedAvg traffic.
     pub fn pays_client_fedavg(&self) -> bool {
         matches!(self, RoundPlan::Split { sync: ClientSync::FedAvg, .. })
+    }
+
+    /// The client-bwd dependency of this plan's pipeline, `None` for the
+    /// full-model plan (FL has no split phases at all — each participant
+    /// is already ONE fused τ-epoch local-training task).
+    pub fn bwd_dependency(&self) -> Option<BwdDependency> {
+        self.route().map(|r| match r {
+            CotangentRoute::Unicast => BwdDependency::OwnServerGrad,
+            CotangentRoute::Broadcast => BwdDependency::BroadcastBarrier,
+        })
+    }
+
+    /// True when the executor may fuse client-bwd onto each participant's
+    /// fwd→server chain (no barrier between eqs 2–4 and eq 6).
+    pub fn fuses_client_bwd(&self) -> bool {
+        self.bwd_dependency() == Some(BwdDependency::OwnServerGrad)
     }
 }
 
@@ -112,5 +143,22 @@ mod tests {
         // FL never splits.
         assert_eq!(SchemeKind::Fl.plan().route(), None);
         assert!(!SchemeKind::Fl.plan().pays_client_fedavg());
+    }
+
+    #[test]
+    fn bwd_dependency_encodes_the_pipeline_shape() {
+        // Unicast schemes fuse client-bwd onto the per-participant chain;
+        // broadcast schemes barrier on the eq-5 aggregation; FL has no
+        // split phases.
+        for s in [SchemeKind::Sfl, SchemeKind::Psl] {
+            assert_eq!(s.plan().bwd_dependency(), Some(BwdDependency::OwnServerGrad));
+            assert!(s.plan().fuses_client_bwd());
+        }
+        for s in [SchemeKind::SflGa, SchemeKind::SflGaDrift] {
+            assert_eq!(s.plan().bwd_dependency(), Some(BwdDependency::BroadcastBarrier));
+            assert!(!s.plan().fuses_client_bwd());
+        }
+        assert_eq!(SchemeKind::Fl.plan().bwd_dependency(), None);
+        assert!(!SchemeKind::Fl.plan().fuses_client_bwd());
     }
 }

@@ -16,15 +16,25 @@
 //!    (eq 6),
 //! 5. **aggregate** — the scheme's client-side synchronization policy.
 //!
-//! Fan-out phases run on the [`ParallelExecutor`] — the paper's framework
-//! is parallel by construction (N clients compute simultaneously), and the
-//! engine executes it that way; each worker reuses its own kernel scratch
-//! arena across jobs (see `runtime::scratch`).  Determinism: every
-//! per-client job is a
-//! pure function of the round-start state, batches are drawn on the
-//! coordinator thread in client order, and ALL reductions/updates happen
-//! on the coordinator thread in fixed client-index order — so training is
-//! bitwise identical for every thread count (`tests/determinism.rs`).
+//! The phases are *pipelined*, not bulk-synchronous: the round engine
+//! runs on the [`ParallelExecutor`]'s task-session API, submitting ONE
+//! fused chain per participant — j's server FP+BP starts the moment j's
+//! client-fwd lands, without waiting for any other participant, and when
+//! the plan unicasts cotangents ([`RoundPlan::fuses_client_bwd`]) j's
+//! client-bwd chains straight on.  Only the eq-5 broadcast aggregation is
+//! a true barrier (it needs every participant's cotangent).  Under
+//! [`Trainer::run`], a round's evaluation is additionally overlapped with
+//! the NEXT round's fan-out: eval jobs score a snapshot of the
+//! just-aggregated global model on the same worker queue.  Each worker
+//! reuses its own kernel scratch arena across jobs (see
+//! `runtime::scratch`).
+//!
+//! Determinism: every per-client job is a pure function of the
+//! round-start state, batches are drawn on the coordinator thread in
+//! client order, and ALL reductions/updates happen on the coordinator
+//! thread in fixed client-index order over the buffered per-job results
+//! (completion order never matters) — so training is bitwise identical
+//! for every thread count (`tests/determinism.rs`), pipelining included.
 //!
 //! Every run executes under a [`ScenarioConfig`] (see [`crate::scenario`]
 //! and DESIGN.md §Scenarios): the partition strategy fixes per-client
@@ -55,11 +65,13 @@
 //! Evaluation always scores the *global* model: ρ-weighted client-side
 //! average joined with the server-side model (for FL, the global model).
 
+use std::sync::Arc;
+
 use crate::data::init::{init_params, join_params, split_params};
 use crate::data::{Batcher, Dataset, generate};
 use crate::latency::ComputeConfig;
-use crate::model::Manifest;
-use crate::runtime::{ModelRuntime, ParallelExecutor, Tensor};
+use crate::model::{Manifest, ShapeSpec};
+use crate::runtime::{JobHandle, ModelRuntime, ParallelExecutor, TaskSession, Tensor};
 use crate::scenario::ScenarioConfig;
 use crate::tensor::{self, Params};
 use crate::util::rng::Pcg;
@@ -168,6 +180,57 @@ pub struct Trainer {
     last_cut: Option<usize>,
 }
 
+/// Everything a trainer derives deterministically from `cfg.seed`: the
+/// synthetic datasets, the partition and its ρ weights, the per-client
+/// batcher streams, the capacity table, the fading channel, the
+/// participation stream and the initial model.  [`Trainer::new`] and
+/// [`Trainer::reset`] both build one, so a reset trainer is bitwise
+/// indistinguishable from a freshly constructed one with the same seed
+/// (`tests/reproducibility.rs`).
+struct SeededState {
+    train: Dataset,
+    test: Dataset,
+    batchers: Vec<Batcher>,
+    rho: Vec<f64>,
+    caps: Vec<f64>,
+    channel: Channel,
+    part_rng: Pcg,
+    params: Params,
+}
+
+impl SeededState {
+    fn derive(cfg: &TrainConfig, spec: &ShapeSpec) -> SeededState {
+        let total = cfg.samples_per_client * cfg.num_clients;
+        let train = generate(spec, &cfg.dataset, total, cfg.seed);
+        let test = generate(spec, &cfg.dataset, cfg.test_samples, cfg.seed ^ 0x7E57);
+        // Scenario axis 1 — data distribution: the partition strategy
+        // fixes each client's shard and, via |D^n|, the sample-count
+        // aggregation weights ρ^n = |D^n| / |D| (FedAvg weighting).
+        let shards =
+            cfg.scenario.partition.indices(&train.labels, train.classes, cfg.num_clients, cfg.seed);
+        let d_total: usize = shards.iter().map(Vec::len).sum();
+        let rho: Vec<f64> = shards.iter().map(|s| s.len() as f64 / d_total as f64).collect();
+        let batchers = shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Batcher::new(s.clone(), spec.train_batch, cfg.seed ^ (i as u64) << 8))
+            .collect();
+        // Scenario axis 2 — compute heterogeneity: resolve the max/spread
+        // draw and the straggler multipliers into one per-client capacity
+        // table (fixed hardware; participant subsets index into it).
+        let caps = cfg.scenario.resolve_caps(&cfg.comp, cfg.num_clients, cfg.seed);
+        let params = init_params(spec, cfg.seed ^ 0x1417);
+        // Channel-seed convention: the RAW run seed, the same convention
+        // `ccc::Env::with_scenario` uses (`Channel::new` domain-separates
+        // its RNG stream internally), so the CCC optimizer trains on
+        // exactly the gain trajectory this trainer replays
+        // (`tests/reproducibility.rs` pins the equality).
+        let channel = Channel::new(cfg.net.clone(), cfg.num_clients, cfg.seed);
+        let part_rng = ScenarioConfig::part_rng(cfg.seed);
+        SeededState { train, test, batchers, rho, caps, channel, part_rng, params }
+    }
+}
+
 impl Trainer {
     /// Trainer over the native pure-Rust backend — no artifacts needed.
     pub fn native(manifest: &Manifest, cfg: TrainConfig) -> anyhow::Result<Trainer> {
@@ -204,48 +267,23 @@ impl Trainer {
             spec.eval_batch
         );
 
-        let total = cfg.samples_per_client * cfg.num_clients;
-        let train = generate(&spec, &cfg.dataset, total, cfg.seed);
-        let test = generate(&spec, &cfg.dataset, cfg.test_samples, cfg.seed ^ 0x7E57);
-        // Scenario axis 1 — data distribution: the partition strategy
-        // fixes each client's shard and, via |D^n|, the sample-count
-        // aggregation weights ρ^n = |D^n| / |D| (FedAvg weighting).
-        let shards =
-            cfg.scenario.partition.indices(&train.labels, train.classes, cfg.num_clients, cfg.seed);
-        let d_total: usize = shards.iter().map(Vec::len).sum();
-        let rho: Vec<f64> = shards.iter().map(|s| s.len() as f64 / d_total as f64).collect();
-        let batchers = shards
-            .iter()
-            .enumerate()
-            .map(|(i, s)| Batcher::new(s.clone(), spec.train_batch, cfg.seed ^ (i as u64) << 8))
-            .collect();
-
-        // Scenario axis 2 — compute heterogeneity: resolve the max/spread
-        // draw and the straggler multipliers into one per-client capacity
-        // table (fixed hardware; participant subsets index into it).
-        let caps = cfg.scenario.resolve_caps(&cfg.comp, cfg.num_clients, cfg.seed);
-
-        let params = init_params(&spec, cfg.seed ^ 0x1417);
-        // Initialize every cut's split from the same full model; the cut in
-        // force selects which prefix the clients own.
-        let wc = vec![params.clone(); cfg.num_clients];
-        let channel = Channel::new(cfg.net.clone(), cfg.num_clients, cfg.seed ^ 0xC4A7);
-        let part_rng = ScenarioConfig::part_rng(cfg.seed);
+        let st = SeededState::derive(&cfg, &spec);
         let pool = ParallelExecutor::new(cfg.threads);
-
         Ok(Trainer {
             rt,
             pool,
-            train,
-            test,
-            batchers,
-            rho,
-            channel,
-            ws: params.clone(),
-            w_full: params,
-            wc,
-            caps,
-            part_rng,
+            train: st.train,
+            test: st.test,
+            batchers: st.batchers,
+            rho: st.rho,
+            channel: st.channel,
+            // Initialize every cut's split from the same full model; the
+            // cut in force selects which prefix the clients own.
+            wc: vec![st.params.clone(); cfg.num_clients],
+            ws: st.params.clone(),
+            w_full: st.params,
+            caps: st.caps,
+            part_rng: st.part_rng,
             round: 0,
             last_cut: None,
             cfg,
@@ -302,6 +340,30 @@ impl Trainer {
     /// # Ok::<(), anyhow::Error>(())
     /// ```
     pub fn run_round(&mut self, cut: usize, state: &ChannelState) -> anyhow::Result<RoundStats> {
+        let (mut stats, _no_pending) = self.run_round_inner(cut, state, None)?;
+        if self.eval_due() {
+            stats.test = Some(self.evaluate(cut)?);
+        }
+        Ok(stats)
+    }
+
+    /// Whether the round that just finished (`self.round`, 1-based after
+    /// the increment) is an evaluation round.
+    fn eval_due(&self) -> bool {
+        self.round % self.cfg.eval_every == 0 || self.round == self.cfg.rounds
+    }
+
+    /// One round WITHOUT its own evaluation: executes the scheme's plan
+    /// over the cohort and, when `pending` carries the previous round's
+    /// deferred evaluation, scores that snapshot on the same worker queue
+    /// as this round's first fan-out — returning the completed result so
+    /// the caller can attach it to the earlier round's stats.
+    fn run_round_inner(
+        &mut self,
+        cut: usize,
+        state: &ChannelState,
+        pending: Option<&PendingEval>,
+    ) -> anyhow::Result<(RoundStats, Option<(f64, f64)>)> {
         // Dynamic cut selection (Algorithm 1) moves layer ownership between
         // the sides; on a cut change, re-anchor every replica to the global
         // model so the handed-over blocks carry the aggregated weights.
@@ -326,11 +388,11 @@ impl Trainer {
             let total: f64 = participants.iter().map(|&i| self.rho[i]).sum();
             participants.iter().map(|&i| self.rho[i] / total).collect()
         };
-        let loss = match self.cfg.scheme.plan() {
+        let (loss, prior_eval) = match self.cfg.scheme.plan() {
             RoundPlan::Split { route, sync } => {
-                self.round_split(cut, route, sync, &participants, &weights)?
+                self.round_split(cut, route, sync, &participants, &weights, pending)?
             }
-            RoundPlan::Full => self.round_full(&participants, &weights)?,
+            RoundPlan::Full => self.round_full(&participants, &weights, pending)?,
         };
         // Communication and latency account for the cohort only: the
         // channel state and compute table restricted to participants.
@@ -362,20 +424,16 @@ impl Trainer {
             self.cfg.tau,
         );
         self.round += 1;
-        let test = if self.round % self.cfg.eval_every == 0 || self.round == self.cfg.rounds {
-            Some(self.evaluate(cut)?)
-        } else {
-            None
-        };
-        Ok(RoundStats {
+        let stats = RoundStats {
             round: self.round,
             cut,
             participants: participants.len(),
             train_loss: loss,
             comm,
             latency,
-            test,
-        })
+            test: None,
+        };
+        Ok((stats, prior_eval))
     }
 
     /// Convenience: run a full fixed-cut training; returns all stats.
@@ -404,11 +462,34 @@ impl Trainer {
     /// assert_eq!(stats.len(), 10);
     /// # Ok::<(), anyhow::Error>(())
     /// ```
+    /// Rounds are pipelined across the eval boundary: when round t
+    /// evaluates, its eval jobs score a SNAPSHOT of the just-aggregated
+    /// global model on the same worker queue as round t+1's first
+    /// fan-out, and the result is attached to round t's stats once it
+    /// lands.  Values are bitwise identical to evaluating synchronously
+    /// (the snapshot is immutable and eval consumes no RNG); only
+    /// wall-clock moves.  The last round's eval has no successor to
+    /// overlap with and runs synchronously.
     pub fn run(&mut self, cut: usize) -> anyhow::Result<Vec<RoundStats>> {
-        let mut out = Vec::with_capacity(self.cfg.rounds);
+        let mut out: Vec<RoundStats> = Vec::with_capacity(self.cfg.rounds);
+        let mut pending: Option<PendingEval> = None;
         for _ in 0..self.cfg.rounds {
             let state = self.draw_channel();
-            out.push(self.run_round(cut, &state)?);
+            let (stats, prior_eval) = self.run_round_inner(cut, &state, pending.as_ref())?;
+            if let Some(p) = pending.take() {
+                let result = prior_eval.expect("round engine completes any pending eval");
+                out[p.stats_idx].test = Some(result);
+            }
+            out.push(stats);
+            if self.eval_due() {
+                pending = Some(PendingEval {
+                    stats_idx: out.len() - 1,
+                    w: Arc::new(self.global_params(cut)),
+                });
+            }
+        }
+        if let Some(p) = pending.take() {
+            out[p.stats_idx].test = Some(self.evaluate_snapshot(&p.w)?);
         }
         Ok(out)
     }
@@ -432,10 +513,17 @@ impl Trainer {
     /// One split round (§II-A steps 1–5) of τ epochs over the cohort
     /// `participants` (sorted ascending), phases configured by
     /// `route`/`sync`.  `weights[j]` is participant j's aggregation
-    /// weight (ρ renormalized over the cohort).  All per-client backend
-    /// calls fan out on the executor; all reductions run on the
-    /// coordinator thread in fixed client-index order (bitwise
-    /// thread-count independence).
+    /// weight (ρ renormalized over the cohort).
+    ///
+    /// Pipelined execution: each participant is ONE fused task chain —
+    /// client-fwd (eq 1) feeds the server FP+BP (eqs 2–4) the moment it
+    /// lands, and when the plan unicasts cotangents the client-bwd
+    /// (eq 6) chains straight on; only the eq-5 broadcast aggregation is
+    /// a barrier.  The previous round's deferred evaluation (when
+    /// `pending` is set) rides the first epoch's worker queue.  All
+    /// reductions run on the coordinator thread in fixed client-index
+    /// order over the buffered results (bitwise thread-count
+    /// independence).
     fn round_split(
         &mut self,
         cut: usize,
@@ -443,11 +531,14 @@ impl Trainer {
         sync: ClientSync,
         participants: &[usize],
         weights: &[f64],
-    ) -> anyhow::Result<f64> {
+        pending: Option<&PendingEval>,
+    ) -> anyhow::Result<(f64, Option<(f64, f64)>)> {
         let nc = self.rt.spec().cut(cut).client_params;
+        let eb = self.rt.spec().eval_batch;
         let k = participants.len();
         let lr = self.cfg.lr;
         let shared = sync == ClientSync::SharedStep;
+        let fuse_bwd = RoundPlan::Split { route, sync }.fuses_client_bwd();
         // Preallocated reduction accumulators, reused across the τ epochs.
         let mut g_ws_acc = tensor::zeros_like(&self.ws[nc..]);
         let mut g_c_acc = if shared {
@@ -456,49 +547,93 @@ impl Trainer {
             Params::new()
         };
         let mut mean_loss = 0.0;
-        for _ in 0..self.cfg.tau {
+        let mut eval_handles: Option<Vec<JobHandle<(f64, f64)>>> = None;
+        for epoch in 0..self.cfg.tau {
             let batches = self.draw_batches(participants);
             let rt = &self.rt;
+            let test = &self.test;
             let wc = &self.wc;
-            // (1) client-fwd fan-out — eq (1), zero-copy parameter views;
-            // each worker draws kernel scratch from its own arena.
-            let smashed = self.pool.map_with_scratch(k, |scratch, j| {
-                rt.client_fwd_with(scratch, cut, &wc[participants[j]][..nc], &batches[j].0)
-            })?;
-            // (2) server reduce: per-participant server FP+BP (eqs 2–4)
-            // fan out; the weighted server-gradient reduction (eq 7) then
-            // streams into the accumulator in cohort (= ascending client
-            // index) order.
             let ws_srv = &self.ws[nc..];
-            let server = self.pool.map_with_scratch(k, |scratch, j| {
-                rt.server_grad_with(scratch, cut, ws_srv, &smashed[j], &batches[j].1)
+            // (1)+(2) fused fan-out — eq (1) chaining into eqs (2–4) per
+            // participant with no cross-client barrier (and, unicast,
+            // eq (6) too); zero-copy parameter views, each worker drawing
+            // kernel scratch from its own arena.  Returns per chain:
+            // (loss, g_ws, cotangent to aggregate, fused g_c).
+            let chains = self.pool.session(|sess| {
+                let handles: Vec<_> = (0..k)
+                    .map(|j| {
+                        let pj = participants[j];
+                        let (x, y) = (&batches[j].0, &batches[j].1);
+                        sess.submit(move |scratch| {
+                            let smashed = rt.client_fwd_with(scratch, cut, &wc[pj][..nc], x)?;
+                            let (loss, g_ws, g_s) =
+                                rt.server_grad_with(scratch, cut, ws_srv, &smashed, y)?;
+                            if fuse_bwd {
+                                let g_c =
+                                    rt.client_grad_with(scratch, cut, &wc[pj][..nc], x, &g_s)?;
+                                Ok((loss, g_ws, None, Some(g_c)))
+                            } else {
+                                Ok((loss, g_ws, Some(g_s), None))
+                            }
+                        })
+                    })
+                    .collect();
+                // The deferred eval of round t−1 overlaps this round's
+                // phase-0/1 work: same queue, snapshot model, no RNG.
+                if epoch == 0 {
+                    if let Some(p) = pending {
+                        eval_handles = Some(submit_eval(sess, rt, test, eb, &p.w));
+                    }
+                }
+                // In-order collection over out-of-order completions: the
+                // buffered handles restore ascending cohort order for
+                // every reduction below.
+                handles.into_iter().map(JobHandle::wait).collect::<anyhow::Result<Vec<_>>>()
             })?;
+            // (2b) the weighted server-gradient reduction (eq 7) streams
+            // into the accumulator in cohort (= ascending client index)
+            // order on the coordinator thread.
             tensor::zero(&mut g_ws_acc);
             let mut loss_acc = 0.0;
-            for (j, (loss, g_ws, _)) in server.iter().enumerate() {
+            for (j, (loss, g_ws, _, _)) in chains.iter().enumerate() {
                 loss_acc += weights[j] * *loss as f64;
                 tensor::weighted_accumulate(&mut g_ws_acc, g_ws, weights[j]);
             }
-            // (3) cotangent routing: aggregate per eq (5) and broadcast
-            // ONE tensor, or unicast each participant its own cotangent.
-            let broadcast = match route {
-                CotangentRoute::Broadcast => {
-                    let mut agg = Tensor::zeros(&server[0].2.shape);
-                    for (j, (_, _, g_s)) in server.iter().enumerate() {
-                        tensor::weighted_accumulate_flat(&mut agg.data, &g_s.data, weights[j]);
-                    }
-                    Some(agg)
+            // (3)+(4) cotangent routing and client-bwd.  Unicast plans
+            // already carried eq (6) inside each chain; broadcast plans
+            // hit the irreducible eq-5 barrier — aggregate ONE tensor in
+            // cohort order, then fan the VJPs out against it.
+            let g_c_parts: Vec<Params> = if fuse_bwd {
+                chains
+                    .into_iter()
+                    .map(|(_, _, _, g_c)| g_c.expect("fused chain carries g_c"))
+                    .collect()
+            } else {
+                let mut agg = {
+                    let g0 = chains[0].2.as_ref().expect("barrier chain carries cotangent");
+                    Tensor::zeros(&g0.shape)
+                };
+                for (j, (_, _, g_s, _)) in chains.iter().enumerate() {
+                    let g_s = g_s.as_ref().expect("barrier chain carries cotangent");
+                    tensor::weighted_accumulate_flat(&mut agg.data, &g_s.data, weights[j]);
                 }
-                CotangentRoute::Unicast => None,
+                let agg = &agg;
+                // The shared plan runs every VJP against the one shared
+                // w^c; per-client plans against the client's own replica.
+                self.pool.session(|sess| {
+                    let handles: Vec<_> = (0..k)
+                        .map(|j| {
+                            let wc_j =
+                                if shared { &wc[0][..nc] } else { &wc[participants[j]][..nc] };
+                            let x = &batches[j].0;
+                            sess.submit(move |scratch| {
+                                rt.client_grad_with(scratch, cut, wc_j, x, agg)
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(JobHandle::wait).collect()
+                })?
             };
-            // (4) client-bwd fan-out — eq (6).  The shared plan runs every
-            // VJP against the one shared w^c; per-client plans against the
-            // client's own replica and (unicast) own cotangent.
-            let g_c_parts = self.pool.map_with_scratch(k, |scratch, j| {
-                let wc_j = if shared { &wc[0][..nc] } else { &wc[participants[j]][..nc] };
-                let cot = broadcast.as_ref().unwrap_or(&server[j].2);
-                rt.client_grad_with(scratch, cut, wc_j, &batches[j].0, cot)
-            })?;
             // Apply this epoch's updates on the coordinator thread:
             // server-side SGD step on the aggregated gradient (eq 7)…
             tensor::sgd_step(&mut self.ws[nc..], &g_ws_acc, lr);
@@ -541,17 +676,31 @@ impl Trainer {
                 }
             }
         }
-        Ok(mean_loss)
+        // Collect the deferred eval (already complete — its session
+        // closed with epoch 0) in fixed batch order.
+        let prior_eval = match eval_handles {
+            Some(handles) => Some(collect_eval(handles, self.test.len())?),
+            None => None,
+        };
+        Ok((mean_loss, prior_eval))
     }
 
     /// FedAvg round ([`RoundPlan::Full`]) over the cohort: per-participant
-    /// τ full-model local steps fan out (each worker owns a private model
-    /// clone), then the weighted model aggregation streams in cohort
-    /// order.
-    fn round_full(&mut self, participants: &[usize], weights: &[f64]) -> anyhow::Result<f64> {
+    /// τ full-model local steps fan out as ONE fused chain each (a worker
+    /// owns a private model clone for the whole local run), then the
+    /// weighted model aggregation streams in cohort order.  The previous
+    /// round's deferred eval (when `pending` is set) rides the same
+    /// worker queue.
+    fn round_full(
+        &mut self,
+        participants: &[usize],
+        weights: &[f64],
+        pending: Option<&PendingEval>,
+    ) -> anyhow::Result<(f64, Option<(f64, f64)>)> {
         let k = participants.len();
         let lr = self.cfg.lr;
         let tau = self.cfg.tau;
+        let eb = self.rt.spec().eval_batch;
         // Phase 0: τ batch-index draws per participant, in ascending
         // client order on the coordinator thread (per-client Batcher RNG
         // order is identical to serial).  Workers materialize their own
@@ -563,28 +712,48 @@ impl Trainer {
             .collect();
         let rt = &self.rt;
         let train = &self.train;
+        let test = &self.test;
         let w0 = &self.w_full;
-        let locals = self.pool.map_with_scratch(k, |scratch, j| {
-            let mut w = w0.clone();
-            let mut first_loss = 0.0f32;
-            for (e, idx) in draws[j].iter().enumerate() {
-                let (x, y) = train.batch(idx);
-                let (loss, g) = rt.full_grad_with(scratch, &w, &x, &y)?;
-                if e == 0 {
-                    first_loss = loss;
-                }
-                tensor::sgd_step(&mut w, &g, lr);
+        let mut eval_handles: Option<Vec<JobHandle<(f64, f64)>>> = None;
+        let locals = self.pool.session(|sess| {
+            let handles: Vec<_> = (0..k)
+                .map(|j| {
+                    let draws_j = &draws[j];
+                    sess.submit(move |scratch| {
+                        let mut w = w0.clone();
+                        // Train loss averaged over the τ local epochs —
+                        // the same Σ_e/τ accounting the split rounds
+                        // report, so fig-3-style loss curves compare like
+                        // quantities at τ > 1 (a reported FL loss is no
+                        // longer just the FIRST local epoch's).
+                        let mut loss_sum = 0.0f64;
+                        for idx in draws_j {
+                            let (x, y) = train.batch(idx);
+                            let (loss, g) = rt.full_grad_with(scratch, &w, &x, &y)?;
+                            loss_sum += loss as f64;
+                            tensor::sgd_step(&mut w, &g, lr);
+                        }
+                        Ok((loss_sum / tau as f64, w))
+                    })
+                })
+                .collect();
+            if let Some(p) = pending {
+                eval_handles = Some(submit_eval(sess, rt, test, eb, &p.w));
             }
-            Ok((first_loss, w))
+            handles.into_iter().map(JobHandle::wait).collect::<anyhow::Result<Vec<_>>>()
         })?;
         let mut agg = tensor::zeros_like(&self.w_full);
         let mut loss_acc = 0.0;
         for (j, (loss, w)) in locals.iter().enumerate() {
-            loss_acc += weights[j] * *loss as f64;
+            loss_acc += weights[j] * *loss;
             tensor::weighted_accumulate(&mut agg, w, weights[j]);
         }
         self.w_full = agg;
-        Ok(loss_acc)
+        let prior_eval = match eval_handles {
+            Some(handles) => Some(collect_eval(handles, self.test.len())?),
+            None => None,
+        };
+        Ok((loss_acc, prior_eval))
     }
 
     // ------------------------------------------------------------- eval
@@ -607,28 +776,24 @@ impl Trainer {
     /// a multiple of the eval batch) is scored too, with the mean loss
     /// weighted by true batch sizes.
     pub fn evaluate(&self, cut: usize) -> anyhow::Result<(f64, f64)> {
-        let w = self.global_params(cut);
-        let eb = self.rt.spec().eval_batch;
+        self.evaluate_snapshot(&Arc::new(self.global_params(cut)))
+    }
+
+    /// [`Trainer::evaluate`] over an explicit parameter snapshot — the
+    /// synchronous twin of the deferred eval `run` pipelines into the
+    /// next round.  ONE implementation serves both paths: the same
+    /// [`submit_eval`] jobs and [`collect_eval`] reduction run here in a
+    /// dedicated session, so deferred and synchronous evaluation cannot
+    /// drift apart (the bitwise-equality contract of
+    /// `tests/reproducibility.rs`).
+    fn evaluate_snapshot(&self, w: &Arc<Params>) -> anyhow::Result<(f64, f64)> {
         let total = self.test.len();
         anyhow::ensure!(total > 0, "empty test set");
-        let starts: Vec<usize> = (0..total).step_by(eb).collect();
+        let eb = self.rt.spec().eval_batch;
         let rt = &self.rt;
         let test = &self.test;
-        let scores = self.pool.map_with_scratch(starts.len(), |scratch, b| {
-            let lo = starts[b];
-            let hi = (lo + eb).min(total);
-            let idx: Vec<usize> = (lo..hi).collect();
-            let (x, y) = test.batch(&idx);
-            let (l, c) = rt.eval_with(scratch, &w, &x, &y)?;
-            Ok((l as f64 * (hi - lo) as f64, c as f64))
-        })?;
-        let mut loss = 0.0;
-        let mut correct = 0.0;
-        for (l, c) in scores {
-            loss += l;
-            correct += c;
-        }
-        Ok((loss / total as f64, correct / total as f64))
+        let handles = self.pool.session(|sess| Ok(submit_eval(sess, rt, test, eb, w)))?;
+        collect_eval(handles, total)
     }
 
     /// Max |Δ| between two clients' client-side models — the drift Γ(φ)
@@ -642,13 +807,29 @@ impl Trainer {
         m
     }
 
-    /// Reset all model state (fresh init) without reloading artifacts.
+    /// Reset to a freshly-constructed trainer for `seed` without
+    /// reloading the backend.  EVERY seed-dependent stream — datasets,
+    /// partition + ρ weights, batcher order, capacity table, channel
+    /// fading, participation draws, model init — is re-derived from the
+    /// new seed, so `reset(s)` followed by `run` is bitwise identical to
+    /// constructing a fresh `Trainer` with seed `s`
+    /// (`tests/reproducibility.rs`).  Leaving any of those streams
+    /// mid-sequence (the pre-fix behavior) silently broke run-to-run
+    /// comparability.
     pub fn reset(&mut self, seed: u64) {
+        self.cfg.seed = seed;
         let spec = self.rt.spec().clone();
-        let params = init_params(&spec, seed);
-        self.wc = vec![params.clone(); self.cfg.num_clients];
-        self.ws = params.clone();
-        self.w_full = params;
+        let st = SeededState::derive(&self.cfg, &spec);
+        self.train = st.train;
+        self.test = st.test;
+        self.batchers = st.batchers;
+        self.rho = st.rho;
+        self.caps = st.caps;
+        self.channel = st.channel;
+        self.part_rng = st.part_rng;
+        self.wc = vec![st.params.clone(); self.cfg.num_clients];
+        self.ws = st.params.clone();
+        self.w_full = st.params;
         self.round = 0;
         self.last_cut = None;
     }
@@ -657,4 +838,58 @@ impl Trainer {
     pub fn split_of_global(&self, cut: usize) -> (Params, Params) {
         split_params(self.rt.spec(), cut, &self.global_params(cut))
     }
+}
+
+// ------------------------------------------------------- deferred eval
+
+/// A deferred evaluation: the snapshot of the just-aggregated global
+/// model for the round at `stats_idx`, scored while the NEXT round's
+/// fan-out runs (see [`Trainer::run`]).  The snapshot is immutable and
+/// evaluation consumes no RNG, so the result is bitwise what a
+/// synchronous [`Trainer::evaluate`] at the end of that round returns.
+struct PendingEval {
+    /// Index into the run's stats vec whose `test` field this eval fills.
+    stats_idx: usize,
+    /// Owned snapshot shared across the per-batch eval jobs.
+    w: Arc<Params>,
+}
+
+/// Submit the deferred evaluation of snapshot `w` into `sess`, one job
+/// per eval batch (the tail batch included).  Jobs interleave with the
+/// round's fan-out on the same workers; collect with [`collect_eval`].
+fn submit_eval<'env>(
+    sess: &TaskSession<'env>,
+    rt: &'env ModelRuntime,
+    test: &'env Dataset,
+    eval_batch: usize,
+    w: &Arc<Params>,
+) -> Vec<JobHandle<(f64, f64)>> {
+    let total = test.len();
+    (0..total)
+        .step_by(eval_batch)
+        .map(|lo| {
+            let hi = (lo + eval_batch).min(total);
+            let w = Arc::clone(w);
+            sess.submit(move |scratch| {
+                let idx: Vec<usize> = (lo..hi).collect();
+                let (x, y) = test.batch(&idx);
+                let (l, c) = rt.eval_with(scratch, &w, &x, &y)?;
+                Ok((l as f64 * (hi - lo) as f64, c as f64))
+            })
+        })
+        .collect()
+}
+
+/// Reduce the per-batch eval scores in fixed batch order — the same
+/// reduction [`Trainer::evaluate`] performs, so deferred and synchronous
+/// evaluation agree bitwise.
+fn collect_eval(handles: Vec<JobHandle<(f64, f64)>>, total: usize) -> anyhow::Result<(f64, f64)> {
+    let mut loss = 0.0;
+    let mut correct = 0.0;
+    for h in handles {
+        let (l, c) = h.wait()?;
+        loss += l;
+        correct += c;
+    }
+    Ok((loss / total as f64, correct / total as f64))
 }

@@ -7,6 +7,9 @@
 //! [`NativeBackend`] by default, the PJRT engine pool with
 //! `--features pjrt`.
 
+use std::sync::mpsc;
+use std::sync::Mutex;
+
 use crate::model::{Manifest, ShapeSpec};
 use crate::tensor::Params;
 
@@ -38,21 +41,36 @@ pub fn resolve_threads(requested: usize) -> usize {
 
 /// Fans independent per-index jobs (the per-client `client_fwd` /
 /// `server_grad` / `client_grad` / `full_grad` calls of a round phase)
-/// across `std::thread::scope` workers.
+/// across `std::thread::scope` workers, in two flavors:
+///
+/// * [`ParallelExecutor::map`] / [`ParallelExecutor::map_with_scratch`] —
+///   a bulk-synchronous fan-out: all `n` jobs are known up front, the
+///   call returns when every one finished.  Worker `k` of `w` computes
+///   indices `k, k+w, k+2w, …`.
+/// * [`ParallelExecutor::session`] — the dependency-driven *pipelined*
+///   API: jobs are submitted one at a time ([`TaskSession::submit`]) into
+///   a shared queue, each returning a [`JobHandle`] (a per-job completion
+///   channel).  Workers drain the queue as fast as their current job
+///   allows, so a long chain submitted for participant 0 never stalls
+///   participant 1's — the round engine fuses client-fwd → server FP/BP
+///   (→ client-bwd) into ONE submitted chain per participant and only
+///   barriers where the math does (the eq-5 broadcast aggregation).
 ///
 /// The executor owns one kernel [`Scratch`](super::Scratch) arena per
-/// worker thread;
-/// [`ParallelExecutor::map_with_scratch`] hands worker `k` its own arena
-/// handle, so the backend's im2col/packing buffers are reused across
-/// every job a worker runs, with zero cross-worker contention.
+/// worker thread; both APIs hand worker `k` its own arena handle, so the
+/// backend's im2col/packing buffers are reused across every job a worker
+/// runs, with zero cross-worker contention.
 ///
-/// Determinism contract: worker `k` of `w` computes indices `k, k+w,
-/// k+2w, …` and every result is scattered back into its index slot, so
-/// the output `Vec` ordering — and hence any index-ordered reduction the
-/// caller performs — is identical for every thread count.  Jobs must be
-/// pure functions of their index (the [`Backend`] contract: scratch
-/// contents never influence results), which makes `threads = N` bitwise
-/// equal to `threads = 1`.
+/// Determinism contract (both APIs): results come back in *submission /
+/// index order* — `map` scatters into index slots, `session` buffers each
+/// result in its handle's channel so the caller collects in whatever
+/// fixed order it likes, regardless of completion order.  Jobs must be
+/// pure functions of their inputs (the [`Backend`] contract: scratch
+/// contents never influence results), so which worker runs a job — and
+/// when it completes relative to its peers — cannot affect any value.
+/// That makes `threads = N` bitwise equal to `threads = 1` even though
+/// the pipelined path executes jobs in a nondeterministic real-time
+/// order (`tests/determinism.rs`).
 pub struct ParallelExecutor {
     threads: usize,
     /// One arena per worker; `arenas[k]` is only ever locked by worker
@@ -121,6 +139,123 @@ impl ParallelExecutor {
             Ok(())
         })?;
         Ok(out.into_iter().map(|v| v.expect("worker skipped an index")).collect())
+    }
+
+    /// Open a pipelined task session: `f` receives a [`TaskSession`] it
+    /// can [`submit`](TaskSession::submit) jobs into at any point; every
+    /// submitted job runs on one of this executor's workers (each with
+    /// its own scratch arena) and reports through its [`JobHandle`].
+    ///
+    /// Unlike [`ParallelExecutor::map`], there is no per-phase barrier:
+    /// a job starts the moment a worker frees up, so independent chains
+    /// overlap and late submissions (e.g. a deferred evaluation) ride the
+    /// same queue as the round's fan-out.  The session itself IS a
+    /// barrier at close: `session` returns only after every submitted job
+    /// completed (scoped-thread join), so borrows captured by jobs are
+    /// released when the call returns.  Handles may outlive the session —
+    /// each buffers its result — which is how the round engine collects a
+    /// deferred eval submitted into an earlier phase.
+    ///
+    /// With one thread, `submit` runs each job eagerly inline (arena 0) —
+    /// the fully serial schedule the determinism suite compares against.
+    pub fn session<'env, R>(
+        &'env self,
+        f: impl FnOnce(&TaskSession<'env>) -> anyhow::Result<R>,
+    ) -> anyhow::Result<R> {
+        if self.threads <= 1 {
+            return f(&TaskSession { tx: None, serial_arena: Some(&self.arenas[0]) });
+        }
+        let (tx, rx) = mpsc::channel::<Job<'env>>();
+        let queue = Mutex::new(rx);
+        std::thread::scope(|s| {
+            for arena in &self.arenas {
+                let queue = &queue;
+                s.spawn(move || {
+                    loop {
+                        // Dequeue under the lock, run with it released.
+                        let job = {
+                            let q = queue.lock().expect("session queue poisoned");
+                            q.recv()
+                        };
+                        match job {
+                            Ok(job) => job(arena),
+                            Err(_) => break, // session closed and queue drained
+                        }
+                    }
+                });
+            }
+            let sess = TaskSession { tx: Some(tx), serial_arena: None };
+            f(&sess)
+            // `sess` (and its Sender) drop here; workers drain what is
+            // left in the queue, then exit; the scope joins them all.
+        })
+    }
+}
+
+// ---------------------------------------------------------------- sessions
+
+/// A queued unit of work: runs on some worker with that worker's arena.
+type Job<'env> = Box<dyn FnOnce(&ScratchHandle) + Send + 'env>;
+
+/// A pipelined job-submission scope (see [`ParallelExecutor::session`]).
+/// Jobs submitted here may borrow anything that outlives the `session`
+/// call — the round engine submits zero-copy closures over the live
+/// `wc`/`ws` parameter slices exactly like the `map` path.
+pub struct TaskSession<'env> {
+    /// Parallel path: the shared job queue feeding the session's workers.
+    tx: Option<mpsc::Sender<Job<'env>>>,
+    /// Serial path (`threads == 1`): jobs execute eagerly on this arena
+    /// at submit time — the reference schedule.
+    serial_arena: Option<&'env ScratchHandle>,
+}
+
+impl<'env> TaskSession<'env> {
+    /// Submit one job; returns its completion channel.  Jobs are started
+    /// in submission order but complete in any order; the handle buffers
+    /// the result, so collecting handles in submission order yields an
+    /// in-order reduction over out-of-order completions.
+    pub fn submit<T, F>(&self, job: F) -> JobHandle<T>
+    where
+        T: Send + 'env,
+        F: FnOnce(&ScratchHandle) -> anyhow::Result<T> + Send + 'env,
+    {
+        if let Some(arena) = self.serial_arena {
+            return JobHandle { rx: None, eager: Some(job(arena)) };
+        }
+        let (rtx, rrx) = mpsc::channel();
+        let boxed: Job<'env> = Box::new(move |scratch| {
+            // A dropped receiver just means the caller abandoned the
+            // handle (e.g. an earlier job already errored the round).
+            let _ = rtx.send(job(scratch));
+        });
+        self.tx
+            .as_ref()
+            .expect("parallel session has a queue")
+            .send(boxed)
+            .expect("session workers exited before the session closed");
+        JobHandle { rx: Some(rrx), eager: None }
+    }
+}
+
+/// One submitted job's completion channel ([`TaskSession::submit`]).
+/// `wait` blocks until the job's result lands (or returns immediately on
+/// the serial path / once the result is buffered).
+pub struct JobHandle<T> {
+    rx: Option<mpsc::Receiver<anyhow::Result<T>>>,
+    eager: Option<anyhow::Result<T>>,
+}
+
+impl<T> JobHandle<T> {
+    /// Block for this job's result.  Consumes the handle: one job, one
+    /// completion.
+    pub fn wait(mut self) -> anyhow::Result<T> {
+        if let Some(r) = self.eager.take() {
+            return r;
+        }
+        match self.rx.take().expect("job handle has a channel").recv() {
+            Ok(r) => r,
+            Err(_) => anyhow::bail!("pipelined job dropped without completing (worker panicked)"),
+        }
     }
 }
 
@@ -382,5 +517,154 @@ mod tests {
     fn resolve_threads_prefers_explicit_request() {
         assert_eq!(resolve_threads(3), 3);
         assert!(resolve_threads(0) >= 1);
+    }
+
+    /// The pipelining property itself: job 0 is slow, jobs 1..n are fast,
+    /// so completions arrive OUT of submission order (fast jobs do not
+    /// wait behind the slow one — no phase barrier), yet collecting the
+    /// handles in submission order still yields an in-order reduction.
+    #[test]
+    fn session_reduces_in_order_over_out_of_order_completions() {
+        let ex = ParallelExecutor::new(4);
+        let completion_order = std::sync::Mutex::new(Vec::new());
+        let results = ex
+            .session(|sess| {
+                let handles: Vec<_> = (0..8usize)
+                    .map(|i| {
+                        let order = &completion_order;
+                        sess.submit(move |_| {
+                            if i == 0 {
+                                std::thread::sleep(std::time::Duration::from_millis(60));
+                            }
+                            order.lock().unwrap().push(i);
+                            Ok(i * i)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(JobHandle::wait).collect::<anyhow::Result<Vec<_>>>()
+            })
+            .unwrap();
+        assert_eq!(results, (0..8).map(|i| i * i).collect::<Vec<_>>());
+        let order = completion_order.into_inner().unwrap();
+        assert_eq!(order.len(), 8);
+        // With 4 workers and job 0 sleeping, some fast job finished first:
+        // phase fusion is demonstrably active (no barrier on job 0).
+        assert_ne!(order[0], 0, "job 0 slept 60ms yet completed first — jobs were serialized");
+    }
+
+    #[test]
+    fn serial_session_runs_jobs_eagerly_in_submission_order() {
+        let ex = ParallelExecutor::new(1);
+        let completion_order = std::sync::Mutex::new(Vec::new());
+        let results = ex
+            .session(|sess| {
+                let handles: Vec<_> = (0..5usize)
+                    .map(|i| {
+                        let order = &completion_order;
+                        sess.submit(move |_| {
+                            order.lock().unwrap().push(i);
+                            Ok(i + 10)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(JobHandle::wait).collect::<anyhow::Result<Vec<_>>>()
+            })
+            .unwrap();
+        assert_eq!(results, vec![10, 11, 12, 13, 14]);
+        assert_eq!(*completion_order.lock().unwrap(), (0..5).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn session_propagates_job_errors_and_runs_the_rest() {
+        for threads in [1usize, 3] {
+            let ex = ParallelExecutor::new(threads);
+            let outcome: anyhow::Result<Vec<usize>> = ex.session(|sess| {
+                let handles: Vec<_> = (0..6usize)
+                    .map(|i| {
+                        sess.submit(move |_| {
+                            if i == 2 {
+                                anyhow::bail!("job {i} failed");
+                            }
+                            Ok(i)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(JobHandle::wait).collect()
+            });
+            assert!(outcome.unwrap_err().to_string().contains("job 2"));
+        }
+    }
+
+    /// Handles buffer their results, so a handle may be collected AFTER
+    /// its session closed — the deferred-eval pattern the round engine
+    /// uses to overlap round t's evaluation with round t+1's fan-out.
+    #[test]
+    fn job_handles_outlive_their_session() {
+        for threads in [1usize, 4] {
+            let ex = ParallelExecutor::new(threads);
+            let handle = ex
+                .session(|sess| {
+                    let h = sess.submit(|_| Ok(41));
+                    let inline = sess.submit(|_| Ok(1)).wait()?;
+                    Ok((h, inline))
+                })
+                .unwrap();
+            let (h, inline) = handle;
+            assert_eq!(inline, 1);
+            assert_eq!(h.wait().unwrap(), 41);
+        }
+    }
+
+    #[test]
+    fn session_jobs_draw_from_the_executor_arenas() {
+        let ex = ParallelExecutor::new(2);
+        // Each job leaves one breadcrumb in whatever arena its worker
+        // owns; across all arenas every job must have run exactly once.
+        ex.session(|sess| {
+            let handles: Vec<_> = (0..6usize)
+                .map(|i| {
+                    sess.submit(move |scratch| {
+                        scratch.lock().dcol.push(i as f32);
+                        Ok(())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(JobHandle::wait).collect::<anyhow::Result<Vec<_>>>()
+        })
+        .unwrap();
+        let total: usize = ex.arenas.iter().map(|a| a.lock().dcol.len()).sum();
+        assert_eq!(total, 6, "every session job must land in exactly one worker arena");
+        // A later map call reuses the same (now warm) arenas.
+        let lens = ex.map_with_scratch(2, |scratch, _| Ok(scratch.lock().dcol.len())).unwrap();
+        assert!(lens.iter().any(|&l| l > 0), "session arenas were not reused: {lens:?}");
+    }
+
+    /// A fused chain (several backend calls in one submitted job) on a
+    /// multi-worker session gives the same values as the serial path.
+    #[test]
+    fn fused_chains_match_serial_bitwise() {
+        let run = |threads: usize| -> Vec<f64> {
+            let ex = ParallelExecutor::new(threads);
+            ex.session(|sess| {
+                let handles: Vec<_> = (0..5usize)
+                    .map(|i| {
+                        sess.submit(move |_| {
+                            // Stage 1 then stage 2, chained with no barrier.
+                            let a = (i as f64 + 1.0).sqrt();
+                            let b = a.ln() + a * 3.0;
+                            Ok(b)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(JobHandle::wait).collect()
+            })
+            .unwrap()
+        };
+        let serial = run(1);
+        let parallel = run(4);
+        assert_eq!(
+            serial.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            parallel.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        );
     }
 }

@@ -10,7 +10,9 @@
 //!   originals kept as [`native::reference`].
 //! * [`scratch`] — reusable per-worker kernel workspace ([`Scratch`] /
 //!   [`ScratchHandle`]): the executor owns one arena per worker thread
-//!   and routes it through the [`Backend`] `*_with` role variants.
+//!   and routes it through the [`Backend`] `*_with` role variants, on
+//!   both the bulk `map` fan-outs and the pipelined [`TaskSession`]
+//!   submit/collect path.
 //! * `engine` (feature `pjrt`) — the XLA/PJRT engine pool that executes
 //!   the HLO-text artifacts produced by `python/compile/aot.py`.  This is
 //!   the ONLY place PJRT/xla types appear; the coordinator above deals
@@ -27,7 +29,14 @@ pub mod tensor;
 pub use backend::Backend;
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, Handle};
-pub use exec::{ModelRuntime, ParallelExecutor, resolve_threads, THREADS_ENV};
+pub use exec::{
+    JobHandle,
+    ModelRuntime,
+    ParallelExecutor,
+    resolve_threads,
+    TaskSession,
+    THREADS_ENV,
+};
 pub use native::NativeBackend;
 pub use scratch::{Scratch, ScratchHandle};
 pub use tensor::Tensor;

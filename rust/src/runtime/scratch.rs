@@ -12,7 +12,9 @@
 //! * [`ScratchHandle`] is the cheap, cloneable handle the rest of the
 //!   runtime passes around (`Arc<Mutex<Scratch>>`).  The
 //!   [`super::ParallelExecutor`] owns one arena per worker thread and
-//!   hands worker `k` its own handle, so hot-path locks are uncontended.
+//!   hands worker `k` its own handle — on the bulk `map` fan-outs and on
+//!   the pipelined session path alike, where worker `k` runs every job
+//!   it dequeues against its arena — so hot-path locks are uncontended.
 //! * Correctness NEVER depends on scratch contents: every kernel fully
 //!   overwrites the region it later reads (packing pads with explicit
 //!   zeros; im2col writes every column).  Results are therefore bitwise

@@ -191,8 +191,11 @@ impl ScenarioConfig {
     }
 
     /// The participation RNG for a run: one cohort draw per round is
-    /// consumed from this stream (shared between trainer and CCC env so
-    /// both derive it from the run seed identically).
+    /// consumed from this stream.  The contract (pinned by
+    /// `tests/reproducibility.rs`): `Trainer` derives it once per
+    /// run/reset and `ccc::Env` re-derives it on every episode reset, so
+    /// for one run seed the trainer's run and EVERY optimizer episode
+    /// replay the identical cohort sequence.
     pub fn part_rng(seed: u64) -> Pcg {
         Pcg::new(seed ^ 0x9AC7, 0x9AC7)
     }

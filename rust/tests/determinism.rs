@@ -8,8 +8,15 @@
 //!
 //! It also pins the parallel round engine's core guarantee: `threads = N`
 //! training is bitwise equal to `threads = 1` for EVERY scheme and cut —
-//! per-client jobs are pure, work assignment is index-strided, and all
-//! reductions run on the coordinator thread in fixed client-index order.
+//! per-client jobs are pure and all reductions run on the coordinator
+//! thread in fixed client-index order over buffered results.  With the
+//! pipelined executor this is a strictly stronger statement than it was
+//! for the barrier-per-phase engine: at `threads = 4` each participant's
+//! client-fwd → server FP+BP (→ unicast client-bwd) runs as one fused
+//! chain completing in nondeterministic real-time order, deferred evals
+//! interleave with the next round's fan-out on the same workers, and
+//! `threads = 1` is the fully serial submit-order schedule — the suites
+//! below assert the results never differ by a bit.
 
 use sfl_ga::coordinator::{AllocPolicy, SchemeKind, TrainConfig, Trainer};
 use sfl_ga::data::partition::Partition;
@@ -60,11 +67,23 @@ fn different_seed_gives_different_curves() {
 /// Round stats + final global model as raw bits at a given thread count.
 /// `test_samples = 40` with eval batch 32 also exercises the tail batch.
 fn run_bits(scheme: SchemeKind, cut: usize, threads: usize) -> (Vec<u64>, Vec<u32>) {
+    run_bits_tau(scheme, cut, threads, 1)
+}
+
+/// `run_bits` at τ local epochs — τ > 1 exercises the fused chains
+/// across consecutive epoch sessions and the τ-averaged loss accounting.
+fn run_bits_tau(
+    scheme: SchemeKind,
+    cut: usize,
+    threads: usize,
+    tau: usize,
+) -> (Vec<u64>, Vec<u32>) {
     let manifest = Manifest::builtin_with_batches(8, 32);
     let cfg = TrainConfig {
         scheme,
         num_clients: 3,
         rounds: 2,
+        tau,
         eval_every: 1,
         samples_per_client: 16,
         test_samples: 40,
@@ -109,6 +128,26 @@ fn parallel_rounds_are_bitwise_equal_to_serial_for_every_scheme_and_cut() {
                 "{scheme:?} cut {cut}: threads=4 final params diverge from threads=1"
             );
         }
+    }
+}
+
+/// τ = 2 drives each worker chain through two epoch sessions per round
+/// and makes FL's fused τ-step local runs meaningfully multi-batch.  One
+/// scheme per pipeline shape: broadcast barrier (SflGa), fused unicast
+/// client-bwd (Sfl), fused full-model local runs (Fl).
+#[test]
+fn multi_epoch_pipelined_rounds_are_bitwise_equal_to_serial() {
+    for scheme in [SchemeKind::SflGa, SchemeKind::Sfl, SchemeKind::Fl] {
+        let (stats1, params1) = run_bits_tau(scheme, 2, 1, 2);
+        let (stats4, params4) = run_bits_tau(scheme, 2, 4, 2);
+        assert_eq!(
+            stats1, stats4,
+            "{scheme:?} tau=2: threads=4 round stats diverge from threads=1"
+        );
+        assert_eq!(
+            params1, params4,
+            "{scheme:?} tau=2: threads=4 final params diverge from threads=1"
+        );
     }
 }
 

@@ -1,0 +1,257 @@
+//! Reproducibility contracts fixed by the bugfix sweep (see CHANGES.md):
+//!
+//! 1. `Trainer::reset(seed)` + `run` is BITWISE a freshly constructed
+//!    `Trainer` with that seed — every seed-dependent stream (datasets,
+//!    partition/ρ, batcher order, capacity table, channel fading,
+//!    participation draws, model init) is re-derived on reset.
+//! 2. `ccc::Env::reset` re-derives the participation stream, so every
+//!    episode replays the same cohort sequence (the channel deliberately
+//!    keeps fading across episodes).
+//! 3. FL reports the τ-averaged train loss, like the split schemes — at
+//!    τ > 1 the fig-3-style loss curves compare like quantities.
+//! 4. Env and Trainer share one channel-seed convention: for equal run
+//!    seeds they draw identical gain trajectories.
+//! 5. `Trainer::run`'s deferred (pipelined) evaluation is bitwise the
+//!    synchronous `run_round` evaluation.
+
+use sfl_ga::ccc::{CccConfig, Env};
+use sfl_ga::coordinator::{AllocPolicy, SchemeKind, TrainConfig, Trainer};
+use sfl_ga::data::partition::Partition;
+use sfl_ga::latency::ComputeConfig;
+use sfl_ga::model::Manifest;
+use sfl_ga::scenario::{ScenarioConfig, StragglerConfig};
+use sfl_ga::wireless::NetConfig;
+
+/// A small config exercising EVERY seeded stream: Dirichlet partition,
+/// partial participation, stragglers, eval tail batch.
+fn scenario_cfg(seed: u64, scheme: SchemeKind) -> TrainConfig {
+    TrainConfig {
+        scheme,
+        num_clients: 4,
+        rounds: 3,
+        eval_every: 2,
+        samples_per_client: 16,
+        test_samples: 40,
+        seed,
+        threads: 1,
+        alloc: AllocPolicy::Equal,
+        scenario: ScenarioConfig {
+            partition: Partition::Dirichlet(0.3),
+            participation: 0.5,
+            straggler: StragglerConfig { frac: 0.25, factor: 4.0 },
+        },
+        ..Default::default()
+    }
+}
+
+/// Everything a run observes, as raw bits.
+fn run_fingerprint(t: &mut Trainer, cut: usize) -> (Vec<u64>, Vec<u32>) {
+    let mut stat_bits = Vec::new();
+    for s in t.run(cut).unwrap() {
+        stat_bits.push(s.train_loss.to_bits());
+        stat_bits.push(s.comm.total_bits().to_bits());
+        stat_bits.push(s.latency.total().to_bits());
+        if let Some((tl, ta)) = s.test {
+            stat_bits.push(tl.to_bits());
+            stat_bits.push(ta.to_bits());
+        }
+    }
+    let param_bits = t.global_params(cut).iter().flatten().map(|v| v.to_bits()).collect();
+    (stat_bits, param_bits)
+}
+
+#[test]
+fn reset_then_run_is_bitwise_a_fresh_trainer() {
+    let manifest = Manifest::builtin_with_batches(8, 32);
+    for scheme in [SchemeKind::SflGa, SchemeKind::Fl] {
+        // Train under seed 5, then reset to seed 9: datasets, shards,
+        // batcher streams, caps, channel and participation draws must all
+        // re-derive from 9 — not stay mid-stream from the seed-5 run.
+        let mut reused = Trainer::native(&manifest, scenario_cfg(5, scheme)).unwrap();
+        reused.run(2).unwrap();
+        reused.reset(9);
+        let a = run_fingerprint(&mut reused, 2);
+        let mut fresh = Trainer::native(&manifest, scenario_cfg(9, scheme)).unwrap();
+        let b = run_fingerprint(&mut fresh, 2);
+        assert_eq!(a.0, b.0, "{scheme:?}: reset trainer's stats diverge from a fresh trainer");
+        assert_eq!(a.1, b.1, "{scheme:?}: reset trainer's params diverge from a fresh trainer");
+    }
+}
+
+#[test]
+fn resetting_to_the_same_seed_replays_the_run_bitwise() {
+    let manifest = Manifest::builtin_with_batches(8, 32);
+    let mut t = Trainer::native(&manifest, scenario_cfg(7, SchemeKind::SflGa)).unwrap();
+    let first = run_fingerprint(&mut t, 2);
+    t.reset(7);
+    let second = run_fingerprint(&mut t, 2);
+    assert_eq!(first, second, "reset(seed) must rewind every seeded stream");
+}
+
+fn small_env(seed: u64, participation: f64) -> Env {
+    let manifest = Manifest::builtin();
+    let spec = manifest.for_dataset("mnist").unwrap().clone();
+    let cfg = CccConfig {
+        episodes: 2,
+        steps_per_episode: 6,
+        alloc: AllocPolicy::Equal,
+        ..Default::default()
+    };
+    Env::with_scenario(
+        spec,
+        NetConfig::default(),
+        ComputeConfig::default(),
+        cfg,
+        6,
+        seed,
+        ScenarioConfig {
+            participation,
+            straggler: StragglerConfig { frac: 0.25, factor: 4.0 },
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn env_episodes_replay_the_same_cohort_sequence() {
+    let mut env = small_env(11, 0.5);
+    let mut episode_cohorts = Vec::new();
+    let mut episode_gains = Vec::new();
+    for _ in 0..2 {
+        let (mut state, _) = env.reset();
+        episode_gains.push(state.gains.clone());
+        let mut cohorts = Vec::new();
+        for _ in 0..6 {
+            let out = env.step(&state, 2);
+            let cohort = out.cohort.expect("partial participation draws a cohort");
+            assert_eq!(out.participants, cohort.len());
+            cohorts.push(cohort);
+            state = out.next_state;
+        }
+        episode_cohorts.push(cohorts);
+    }
+    // Episode 2's cohort sequence is episode 1's, step for step — the
+    // participation stream re-derives from the run seed on reset.
+    assert_eq!(
+        episode_cohorts[0], episode_cohorts[1],
+        "episode cohorts depend on how many episodes ran before"
+    );
+    // The sequence actually varies within an episode (the draw is live).
+    assert!(
+        episode_cohorts[0].iter().any(|c| c != &episode_cohorts[0][0]),
+        "cohort sequence is degenerate: {:?}",
+        episode_cohorts[0]
+    );
+    // The channel deliberately keeps fading ACROSS episodes (block-fading
+    // continuity): episode starts see fresh gain realizations.
+    assert_ne!(
+        episode_gains[0], episode_gains[1],
+        "channel was reset too — episodes should explore fresh fading"
+    );
+}
+
+#[test]
+fn env_and_trainer_draw_identical_gain_trajectories() {
+    let seed = 21;
+    let clients = 5;
+    let manifest = Manifest::builtin_with_batches(8, 32);
+    let cfg = TrainConfig {
+        num_clients: clients,
+        rounds: 2,
+        samples_per_client: 16,
+        test_samples: 32,
+        seed,
+        threads: 1,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::native(&manifest, cfg).unwrap();
+    let spec = manifest.for_dataset("mnist").unwrap().clone();
+    let ccc = CccConfig { alloc: AllocPolicy::Equal, ..Default::default() };
+    let mut env =
+        Env::new(spec, NetConfig::default(), ComputeConfig::default(), ccc, clients, seed);
+    // Draw 4 successive rounds from each; the gain sequences must agree
+    // bitwise — the optimizer prices the hardware the simulator runs on.
+    let (mut state, _) = env.reset();
+    for round in 0..4 {
+        let trainer_gains: Vec<u64> =
+            trainer.draw_channel().gains.iter().map(|g| g.to_bits()).collect();
+        let env_gains: Vec<u64> = state.gains.iter().map(|g| g.to_bits()).collect();
+        assert_eq!(trainer_gains, env_gains, "gain trajectories diverge at round {round}");
+        state = env.step(&state, 2).next_state;
+    }
+}
+
+/// With lr = 0 the model never moves, so per-epoch losses depend only on
+/// the (deterministic) batch stream: one τ=2 round must report the mean
+/// of the two corresponding τ=1 rounds' losses — for FL exactly like the
+/// split schemes (FL used to report only the FIRST local epoch's loss).
+/// Two equal-sized clients keep FL's ρ-weighted model aggregation exact
+/// (0.5·w + 0.5·w ≡ w bitwise), so the τ=1 run's second round sees the
+/// same model the τ=2 run's second epoch does.
+#[test]
+fn train_loss_is_tau_averaged_for_fl_and_split_alike() {
+    let manifest = Manifest::builtin_with_batches(8, 32);
+    for scheme in [SchemeKind::Fl, SchemeKind::SflGa] {
+        let base = TrainConfig {
+            scheme,
+            num_clients: 2,
+            lr: 0.0,
+            samples_per_client: 16,
+            test_samples: 32,
+            seed: 31,
+            threads: 1,
+            eval_every: usize::MAX - 1,
+            alloc: AllocPolicy::Equal,
+            ..Default::default()
+        };
+        let mut two_epochs =
+            Trainer::native(&manifest, TrainConfig { rounds: 1, tau: 2, ..base.clone() })
+                .unwrap();
+        let avg = two_epochs.run(2).unwrap()[0].train_loss;
+        let mut per_round =
+            Trainer::native(&manifest, TrainConfig { rounds: 2, tau: 1, ..base }).unwrap();
+        let stats = per_round.run(2).unwrap();
+        let want = (stats[0].train_loss + stats[1].train_loss) / 2.0;
+        assert!(
+            (avg - want).abs() < 1e-9,
+            "{scheme:?}: tau=2 loss {avg} != mean of per-epoch losses {want}"
+        );
+        assert_ne!(
+            avg.to_bits(),
+            stats[0].train_loss.to_bits(),
+            "{scheme:?}: tau=2 loss equals the first epoch's loss exactly — not averaged?"
+        );
+    }
+}
+
+/// `Trainer::run` overlaps round t's eval with round t+1's fan-out; the
+/// attached values must be bitwise what the synchronous `run_round` path
+/// computes.
+#[test]
+fn deferred_eval_matches_synchronous_eval_bitwise() {
+    let manifest = Manifest::builtin_with_batches(8, 32);
+    for threads in [1usize, 4] {
+        let mk = || {
+            let cfg = TrainConfig { threads, ..scenario_cfg(13, SchemeKind::SflGa) };
+            Trainer::native(&manifest, cfg).unwrap()
+        };
+        let mut overlapped = mk();
+        let via_run = overlapped.run(2).unwrap();
+        let mut synchronous = mk();
+        let mut via_rounds = Vec::new();
+        for _ in 0..3 {
+            let state = synchronous.draw_channel();
+            via_rounds.push(synchronous.run_round(2, &state).unwrap());
+        }
+        assert_eq!(via_run.len(), via_rounds.len());
+        for (a, b) in via_run.iter().zip(&via_rounds) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(
+                a.test.map(|(l, c)| (l.to_bits(), c.to_bits())),
+                b.test.map(|(l, c)| (l.to_bits(), c.to_bits())),
+                "deferred eval diverges from synchronous eval at round {} (threads {threads})",
+                a.round
+            );
+        }
+    }
+}
