@@ -4,7 +4,7 @@
 //! latency budget is < ~10 ms for N=10 (DESIGN.md §Perf).
 
 use sfl_ga::allocator::RoundProblem;
-use sfl_ga::benchlib::bench;
+use sfl_ga::benchlib::{self, bench};
 use sfl_ga::util::rng::Pcg;
 use sfl_ga::wireless::{avg_gain, dbm_to_watt};
 
@@ -31,9 +31,9 @@ fn main() {
     println!("== allocator (P2.1) ==");
     for n in [2, 5, 10, 20, 50] {
         let p = problem(n, n as u64);
-        bench(&format!("solve_optimal/N={n}"), 3, 20, || p.solve().chi);
+        bench(&format!("solve_optimal/N={n}"), 3, benchlib::iters(20, 3), || p.solve().chi);
     }
     let p = problem(10, 99);
-    bench("solve_equal/N=10", 10, 200, || p.solve_equal().chi);
-    bench("psi_star/N=10", 10, 500, || p.psi_star());
+    bench("solve_equal/N=10", 10, benchlib::iters(200, 20), || p.solve_equal().chi);
+    bench("psi_star/N=10", 10, benchlib::iters(500, 50), || p.psi_star());
 }

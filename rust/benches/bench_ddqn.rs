@@ -1,7 +1,7 @@
 //! DDQN benchmarks: act/train-step latency of the pure-Rust agent at the
 //! Algorithm-1 configuration (state dim N+1, 64x64 hidden, batch 32).
 
-use sfl_ga::benchlib::bench;
+use sfl_ga::benchlib::{self, bench};
 use sfl_ga::ddqn::{DdqnAgent, DdqnConfig, Transition};
 
 fn main() {
@@ -25,7 +25,7 @@ fn main() {
             done: i % 20 == 0,
         });
     }
-    bench("act(eps-greedy)", 100, 2000, || agent.act(&state));
-    bench("greedy_forward", 100, 2000, || agent.greedy(&state));
-    bench("train_step(batch=32)", 20, 300, || agent.train_step());
+    bench("act(eps-greedy)", 100, benchlib::iters(2000, 200), || agent.act(&state));
+    bench("greedy_forward", 100, benchlib::iters(2000, 200), || agent.greedy(&state));
+    bench("train_step(batch=32)", 20, benchlib::iters(300, 30), || agent.train_step());
 }

@@ -2,7 +2,7 @@
 //! the per-round cost model of Figs. 5/6 (no NN training — these isolate
 //! the simulation/optimization layers that every figure run multiplies).
 
-use sfl_ga::benchlib::bench;
+use sfl_ga::benchlib::{self, bench};
 use sfl_ga::coordinator::SchemeKind;
 use sfl_ga::coordinator::timing::{AllocPolicy, round_latency};
 use sfl_ga::latency::ComputeConfig;
@@ -19,17 +19,17 @@ fn main() -> anyhow::Result<()> {
     let st = ch.draw_round();
 
     for scheme in SchemeKind::all() {
-        bench(&format!("round_latency_opt/{}", scheme.name()), 2, 30, || {
+        bench(&format!("round_latency_opt/{}", scheme.name()), 2, benchlib::iters(30, 5), || {
             round_latency(scheme, &spec, spec.cut(2), &net, &comp, &st, AllocPolicy::Optimal, 1)
                 .total()
         });
     }
-    bench("round_latency_equal/sfl-ga", 10, 200, || {
+    bench("round_latency_equal/sfl-ga", 10, benchlib::iters(200, 20), || {
         let pol = AllocPolicy::Equal;
         round_latency(SchemeKind::SflGa, &spec, spec.cut(2), &net, &comp, &st, pol, 1).total()
     });
     // Fig. 8's full sweep: 6 bandwidths x 4 schemes x K draws.
-    bench("fig8_sweep(6bw x 4schemes x 5draws)", 1, 5, || {
+    bench("fig8_sweep(6bw x 4schemes x 5draws)", 1, benchlib::iters(5, 1), || {
         let mut total = 0.0;
         for bw in [5.0, 10.0, 15.0, 20.0, 25.0, 30.0] {
             let net = NetConfig { bandwidth: bw * 1e6, ..Default::default() };

@@ -11,7 +11,7 @@
 
 use std::collections::BTreeMap;
 
-use sfl_ga::benchlib::bench;
+use sfl_ga::benchlib::{self, bench};
 use sfl_ga::model::Manifest;
 use sfl_ga::runtime::native::ops::{self, Geom};
 use sfl_ga::runtime::native::reference;
@@ -62,9 +62,17 @@ fn check_close(tag: &str, a: &[f32], b: &[f32]) {
 }
 
 fn main() -> anyhow::Result<()> {
-    let manifest = Manifest::builtin();
+    // Quick mode (CI bench-smoke): small batches keep the scalar reference
+    // path affordable; the JSON's `quick` flag marks the numbers.
+    let manifest = if benchlib::quick() {
+        Manifest::builtin_with_batches(8, 32)
+    } else {
+        Manifest::builtin()
+    };
     let spec = manifest.for_dataset("mnist")?.clone();
     let b = spec.train_batch;
+    let conv_iters = benchlib::iters(3, 1);
+    let dense_iters = benchlib::iters(8, 3);
     println!("== native kernels: scalar reference vs im2col+GEMM (batch {b}) ==");
 
     let mut scratch = Scratch::new();
@@ -93,10 +101,10 @@ fn main() -> anyhow::Result<()> {
                     &ops::conv2d_fwd(&mut scratch, &x, g, &wt, k, oc, &bias, true),
                     &reference::conv2d_fwd(&x, g, &wt, k, oc, &bias, true),
                 );
-                let s = bench(&format!("{name}_fwd/scalar"), 1, 3, || {
+                let s = bench(&format!("{name}_fwd/scalar"), 1, conv_iters, || {
                     reference::conv2d_fwd(&x, g, &wt, k, oc, &bias, true)
                 });
-                let f = bench(&format!("{name}_fwd/gemm"), 1, 3, || {
+                let f = bench(&format!("{name}_fwd/gemm"), 1, conv_iters, || {
                     ops::conv2d_fwd(&mut scratch, &x, g, &wt, k, oc, &bias, true)
                 });
                 println!("    -> speedup {:.2}x", s.mean_ns / f.mean_ns);
@@ -109,10 +117,10 @@ fn main() -> anyhow::Result<()> {
                     gemm_ns: f.mean_ns,
                 });
 
-                let s = bench(&format!("{name}_bwd/scalar"), 1, 3, || {
+                let s = bench(&format!("{name}_bwd/scalar"), 1, conv_iters, || {
                     reference::conv2d_bwd(&x, g, &wt, k, oc, &d_out)
                 });
-                let f = bench(&format!("{name}_bwd/gemm"), 1, 3, || {
+                let f = bench(&format!("{name}_bwd/gemm"), 1, conv_iters, || {
                     ops::conv2d_bwd(&mut scratch, &x, g, &wt, k, oc, &d_out)
                 });
                 println!("    -> speedup {:.2}x", s.mean_ns / f.mean_ns);
@@ -141,10 +149,10 @@ fn main() -> anyhow::Result<()> {
                     &ops::dense_fwd(&mut scratch, &x, b, din, dout, &wt, &bias, true),
                     &reference::dense_fwd(&x, b, din, dout, &wt, &bias, true),
                 );
-                let s = bench(&format!("{name}_fwd/scalar"), 2, 8, || {
+                let s = bench(&format!("{name}_fwd/scalar"), 2, dense_iters, || {
                     reference::dense_fwd(&x, b, din, dout, &wt, &bias, true)
                 });
-                let f = bench(&format!("{name}_fwd/gemm"), 2, 8, || {
+                let f = bench(&format!("{name}_fwd/gemm"), 2, dense_iters, || {
                     ops::dense_fwd(&mut scratch, &x, b, din, dout, &wt, &bias, true)
                 });
                 println!("    -> speedup {:.2}x", s.mean_ns / f.mean_ns);
@@ -155,10 +163,10 @@ fn main() -> anyhow::Result<()> {
                     gemm_ns: f.mean_ns,
                 });
 
-                let s = bench(&format!("{name}_bwd/scalar"), 2, 8, || {
+                let s = bench(&format!("{name}_bwd/scalar"), 2, dense_iters, || {
                     reference::dense_bwd(&x, b, din, dout, &wt, &d_out)
                 });
-                let f = bench(&format!("{name}_bwd/gemm"), 2, 8, || {
+                let f = bench(&format!("{name}_bwd/gemm"), 2, dense_iters, || {
                     ops::dense_bwd(&mut scratch, &x, b, din, dout, &wt, &d_out)
                 });
                 println!("    -> speedup {:.2}x", s.mean_ns / f.mean_ns);
@@ -191,6 +199,7 @@ fn main() -> anyhow::Result<()> {
     }
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("native_kernels".to_string()));
+    root.insert("quick".to_string(), Json::Bool(benchlib::quick()));
     root.insert("shape_key".to_string(), Json::Str(spec.key.clone()));
     root.insert("train_batch".to_string(), Json::Num(b as f64));
     root.insert("conv_fwd_bwd_speedup".to_string(), Json::Num(conv_speedup));

@@ -15,7 +15,7 @@
 
 use std::collections::BTreeMap;
 
-use sfl_ga::benchlib::bench;
+use sfl_ga::benchlib::{self, bench};
 use sfl_ga::coordinator::{SchemeKind, TrainConfig, Trainer};
 use sfl_ga::model::Manifest;
 use sfl_ga::util::json::Json;
@@ -41,12 +41,13 @@ fn bench_scheme(
             threads,
             rounds: 1_000_000, // never reached; we drive rounds manually
             eval_every: usize::MAX,
-            samples_per_client: 64,
+            samples_per_client: benchlib::iters(64, 16),
             num_clients: CLIENTS,
             ..Default::default()
         };
         let mut trainer = Trainer::native(manifest, cfg)?;
-        let r = bench(&format!("round/{label}/threads={threads}"), 1, 4, || {
+        let iters = benchlib::iters(4, 2);
+        let r = bench(&format!("round/{label}/threads={threads}"), 1, iters, || {
             let st = trainer.draw_channel();
             trainer.run_round(CUT, &st).unwrap().train_loss
         });
@@ -66,7 +67,13 @@ fn bench_scheme(
 }
 
 fn main() -> anyhow::Result<()> {
-    let manifest = Manifest::builtin();
+    // Quick mode (CI bench-smoke): test-sized batches so a full round is
+    // milliseconds — the JSON marks the mode so numbers are never mixed.
+    let manifest = if benchlib::quick() {
+        Manifest::builtin_with_batches(8, 32)
+    } else {
+        Manifest::builtin()
+    };
     let mut schemes_json: BTreeMap<String, Json> = BTreeMap::new();
     println!("== parallel round engine: one-round wall-clock ==");
     for scheme in [SchemeKind::SflGa, SchemeKind::Fl] {
@@ -82,6 +89,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("parallel_round_engine".to_string()));
+    root.insert("quick".to_string(), Json::Bool(benchlib::quick()));
     root.insert("cut".to_string(), Json::Num(CUT as f64));
     root.insert("num_clients".to_string(), Json::Num(CLIENTS as f64));
     let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);

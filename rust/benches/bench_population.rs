@@ -1,0 +1,192 @@
+//! Virtual-population scale benchmark: drives a MILLION-client federation
+//! at participation 1e-4 through real training rounds (native backend,
+//! test-sized batches) and reports the peak resident population state —
+//! the O(cohort) bound DESIGN.md §Population promises.  The bound is
+//! *asserted*, not just reported: a 10⁶-client run at cohort K must peak
+//! at exactly the bytes a 10⁴-client run at the same K peaks at, or the
+//! process exits non-zero and CI's bench-smoke lane fails.
+//!
+//! Also times the pure population derivations (cohort enumeration,
+//! per-client capacity/gain lookups) at N = 10⁶ — these are the per-round
+//! coordinator overhead that must stay independent of N.
+//!
+//! Emits a machine-readable summary to `BENCH_population.json` (override
+//! the path with `SFLGA_BENCH_OUT`, same convention as `bench_parallel`).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use sfl_ga::benchlib::{self, bench};
+use sfl_ga::coordinator::{AllocPolicy, SchemeKind, TrainConfig, Trainer};
+use sfl_ga::data::partition::Partition;
+use sfl_ga::model::Manifest;
+use sfl_ga::scenario::{ScenarioConfig, StragglerConfig};
+use sfl_ga::util::json::Json;
+
+/// One measured configuration: N clients at the given participation.
+struct RunRow {
+    n: usize,
+    participation: f64,
+    k: usize,
+    rounds: usize,
+    wall_ns: f64,
+    peak_resident_bytes: usize,
+    final_loss: f64,
+}
+
+impl RunRow {
+    fn json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("num_clients".into(), Json::Num(self.n as f64));
+        m.insert("participation".into(), Json::Num(self.participation));
+        m.insert("cohort".into(), Json::Num(self.k as f64));
+        m.insert("rounds".into(), Json::Num(self.rounds as f64));
+        m.insert("wall_ns".into(), Json::Num(self.wall_ns));
+        m.insert(
+            "peak_resident_bytes".into(),
+            Json::Num(self.peak_resident_bytes as f64),
+        );
+        m.insert("final_train_loss".into(), Json::Num(self.final_loss));
+        Json::Obj(m)
+    }
+}
+
+fn run_config(manifest: &Manifest, n: usize, participation: f64, rounds: usize) -> RunRow {
+    let cfg = TrainConfig {
+        scheme: SchemeKind::SflGa,
+        num_clients: n,
+        rounds,
+        eval_every: rounds,
+        samples_per_client: 16,
+        test_samples: 32,
+        seed: 29,
+        alloc: AllocPolicy::Equal,
+        scenario: ScenarioConfig {
+            partition: Partition::Dirichlet(0.3),
+            participation,
+            straggler: StragglerConfig { frac: 0.1, factor: 4.0 },
+        },
+        ..Default::default()
+    };
+    let mut t = Trainer::native(manifest, cfg).expect("population config");
+    let t0 = Instant::now();
+    let stats = t.run(2).expect("training run");
+    let wall_ns = t0.elapsed().as_nanos() as f64;
+    let k = stats[0].participants;
+    assert!(stats.iter().all(|s| s.participants == k));
+    let row = RunRow {
+        n,
+        participation,
+        k,
+        rounds,
+        wall_ns,
+        peak_resident_bytes: t.peak_resident_population_bytes(),
+        final_loss: stats.last().unwrap().train_loss,
+    };
+    println!(
+        "population N={:>9}  r={:<7}  K={:>4}  rounds={}  wall {:>12}  peak resident {:>9} B",
+        row.n,
+        row.participation,
+        row.k,
+        row.rounds,
+        sfl_ga::benchlib::fmt_ns(row.wall_ns),
+        row.peak_resident_bytes,
+    );
+    row
+}
+
+fn main() -> anyhow::Result<()> {
+    // Test-sized batches: this measures population machinery and O(cohort)
+    // residency, not conv kernels (bench_kernels owns those numbers).
+    let manifest = Manifest::builtin_with_batches(8, 32);
+    let rounds = benchlib::iters(5, 2);
+    println!("== virtual population: million-client federation ==");
+
+    // The headline config the ISSUE pins: N = 10⁶ at participation 1e-4
+    // (cohort of 100)…
+    let million = run_config(&manifest, 1_000_000, 1e-4, rounds);
+    // …the same cohort from a 100× smaller population — the peak resident
+    // bytes must MATCH (O(cohort), zero N-dependence)…
+    let ten_k_same_cohort = run_config(&manifest, 10_000, 1e-2, rounds);
+    // …and the same participation from the smaller population (cohort 1):
+    // the resident floor.
+    let ten_k_sparse = run_config(&manifest, 10_000, 1e-4, rounds);
+
+    assert_eq!(million.k, 100, "⌈1e-4 · 1e6⌉ must be 100");
+    assert_eq!(ten_k_same_cohort.k, 100, "⌈1e-2 · 1e4⌉ must be 100");
+    anyhow::ensure!(
+        million.peak_resident_bytes == ten_k_same_cohort.peak_resident_bytes,
+        "resident population state leaked an O(N) term: N=1e6 peaks at {} B, N=1e4 at {} B \
+         for the same cohort of 100",
+        million.peak_resident_bytes,
+        ten_k_same_cohort.peak_resident_bytes
+    );
+    anyhow::ensure!(
+        ten_k_sparse.peak_resident_bytes < million.peak_resident_bytes,
+        "a cohort of {} must hold less resident state than a cohort of 100",
+        ten_k_sparse.k
+    );
+
+    println!("== pure derivations at N = 10^6 ==");
+    let pop = million_population();
+    let cohort_bench = bench(
+        "cohort_enumeration/N=1e6,K=100",
+        benchlib::iters(10, 2),
+        benchlib::iters(200, 5),
+        || pop.cohort(7),
+    );
+    let lookup_bench = bench(
+        "capacity+gain_lookup/N=1e6",
+        benchlib::iters(10, 2),
+        benchlib::iters(200, 5),
+        || {
+            let mut acc = 0.0f64;
+            for i in [0u64, 314_159, 999_999] {
+                acc += pop.capacity(i) + pop.gain_at(3, i);
+            }
+            acc
+        },
+    );
+
+    let mut runs = BTreeMap::new();
+    runs.insert("n1e6_r1e-4".to_string(), million.json());
+    runs.insert("n1e4_r1e-2".to_string(), ten_k_same_cohort.json());
+    runs.insert("n1e4_r1e-4".to_string(), ten_k_sparse.json());
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("virtual_population".to_string()));
+    root.insert("quick".to_string(), Json::Bool(benchlib::quick()));
+    root.insert("rounds".to_string(), Json::Num(rounds as f64));
+    root.insert(
+        "o_cohort_bound_verified".to_string(),
+        Json::Bool(million.peak_resident_bytes == ten_k_same_cohort.peak_resident_bytes),
+    );
+    root.insert("runs".to_string(), Json::Obj(runs));
+    root.insert(
+        "cohort_enumeration_p50_ns".to_string(),
+        Json::Num(cohort_bench.p50_ns),
+    );
+    root.insert(
+        "scattered_lookup_p50_ns".to_string(),
+        Json::Num(lookup_bench.p50_ns),
+    );
+    let out = std::env::var("SFLGA_BENCH_OUT").unwrap_or_else(|_| "BENCH_population.json".into());
+    std::fs::write(&out, Json::Obj(root).to_string() + "\n")?;
+    println!("summary written to {out}");
+    Ok(())
+}
+
+/// A standalone million-client population for the derivation benches.
+fn million_population() -> sfl_ga::coordinator::Population {
+    sfl_ga::coordinator::Population::new(
+        29,
+        1_000_000,
+        ScenarioConfig {
+            partition: Partition::Dirichlet(0.3),
+            participation: 1e-4,
+            straggler: StragglerConfig { frac: 0.1, factor: 4.0 },
+        },
+        Default::default(),
+        Default::default(),
+    )
+    .expect("population")
+}

@@ -3,7 +3,7 @@
 //! the per-round hot-path pieces (aggregation saxpy, channel draw,
 //! comm/timing models).  This is the paper's Table-less "system cost" view.
 
-use sfl_ga::benchlib::bench;
+use sfl_ga::benchlib::{self, bench};
 use sfl_ga::coordinator::{SchemeKind, TrainConfig, Trainer};
 use sfl_ga::model::Manifest;
 use sfl_ga::tensor;
@@ -11,18 +11,23 @@ use sfl_ga::util::rng::Pcg;
 
 fn main() -> anyhow::Result<()> {
     println!("== end-to-end rounds ==");
-    let manifest = Manifest::builtin();
+    // Quick mode (CI bench-smoke): test-sized batches, fewer iterations.
+    let manifest = if benchlib::quick() {
+        Manifest::builtin_with_batches(8, 32)
+    } else {
+        Manifest::builtin()
+    };
     for scheme in SchemeKind::all() {
         let cfg = TrainConfig {
             scheme,
             rounds: 1_000_000, // never reached; we drive rounds manually
             eval_every: usize::MAX,
-            samples_per_client: 64,
+            samples_per_client: benchlib::iters(64, 16),
             num_clients: 4,
             ..Default::default()
         };
         let mut trainer = Trainer::native(&manifest, cfg)?;
-        bench(&format!("round/{}", scheme.name()), 1, 3, || {
+        bench(&format!("round/{}", scheme.name()), 1, benchlib::iters(3, 1), || {
             let st = trainer.draw_channel();
             trainer.run_round(2, &st).unwrap().train_loss
         });
@@ -36,7 +41,7 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let refs: Vec<&[f32]> = parts.iter().map(|v| v.as_slice()).collect();
     let rho = vec![0.1f64; 10];
-    bench("aggregate_smashed_grads(10x100k)", 10, 200, || {
+    bench("aggregate_smashed_grads(10x100k)", 10, benchlib::iters(200, 20), || {
         tensor::weighted_sum_flat(&refs, &rho)
     });
 
@@ -45,11 +50,11 @@ fn main() -> anyhow::Result<()> {
         .map(|_| vec![(0..1_673_098 / 2).map(|_| rng.normal() as f32).collect::<Vec<f32>>(); 2])
         .collect();
     let model_refs: Vec<&Vec<Vec<f32>>> = model_parts.iter().collect();
-    bench("aggregate_server_models(10x1.67M)", 2, 20, || {
+    bench("aggregate_server_models(10x1.67M)", 2, benchlib::iters(20, 3), || {
         tensor::weighted_sum(&model_refs, &rho)
     });
 
     let mut channel = sfl_ga::wireless::Channel::new(Default::default(), 10, 1);
-    bench("channel_draw(N=10)", 100, 5000, || channel.draw_round());
+    bench("channel_draw(N=10)", 100, benchlib::iters(5000, 500), || channel.draw_round());
     Ok(())
 }

@@ -2,7 +2,7 @@
 //! L3↔L2 boundary cost that bounds the real (non-simulated) round time.
 //! Runs from a clean checkout (no artifacts required).
 
-use sfl_ga::benchlib::bench;
+use sfl_ga::benchlib::{self, bench};
 use sfl_ga::data::init::init_params;
 use sfl_ga::data::{Batcher, generate, partition};
 use sfl_ga::model::Manifest;
@@ -10,7 +10,13 @@ use sfl_ga::runtime::ModelRuntime;
 
 fn main() -> anyhow::Result<()> {
     println!("== runtime (native backend) ==");
-    let manifest = Manifest::builtin();
+    // Quick mode (CI bench-smoke): test-sized batches, fewer iterations.
+    let manifest = if benchlib::quick() {
+        Manifest::builtin_with_batches(8, 32)
+    } else {
+        Manifest::builtin()
+    };
+    let iters = benchlib::iters(10, 2);
     let rt = ModelRuntime::native(&manifest, "mnist")?;
     let spec = rt.spec().clone();
 
@@ -25,22 +31,22 @@ fn main() -> anyhow::Result<()> {
         let wc = params[..nc].to_vec();
         let ws = params[nc..].to_vec();
         let smashed = rt.client_fwd(cut, &wc, &x)?;
-        bench(&format!("client_fwd/v{cut}"), 2, 10, || {
+        bench(&format!("client_fwd/v{cut}"), 2, iters, || {
             rt.client_fwd(cut, &wc, &x).unwrap()
         });
-        bench(&format!("server_grad/v{cut}"), 2, 10, || {
+        bench(&format!("server_grad/v{cut}"), 2, iters, || {
             rt.server_grad(cut, &ws, &smashed, &y).unwrap()
         });
         let (_, _, gs) = rt.server_grad(cut, &ws, &smashed, &y)?;
-        bench(&format!("client_grad/v{cut}"), 2, 10, || {
+        bench(&format!("client_grad/v{cut}"), 2, iters, || {
             rt.client_grad(cut, &wc, &x, &gs).unwrap()
         });
     }
-    bench("full_grad", 2, 10, || rt.full_grad(&params, &x, &y).unwrap());
+    bench("full_grad", 2, iters, || rt.full_grad(&params, &x, &y).unwrap());
 
     let eval_idx: Vec<usize> = (0..spec.eval_batch.min(ds.len())).collect();
     let (ex, ey) = ds.batch(&eval_idx);
-    bench(&format!("eval(batch={})", ex.shape[0]), 1, 5, || {
+    bench(&format!("eval(batch={})", ex.shape[0]), 1, benchlib::iters(5, 2), || {
         rt.eval(&params, &ex, &ey).unwrap()
     });
     Ok(())

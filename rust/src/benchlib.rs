@@ -2,10 +2,35 @@
 //! set).  Used by the `benches/*.rs` targets via `harness = false`:
 //! warmup, timed iterations, mean/std/p50/p99 reporting, and a regression
 //! guard helper for CI-style thresholds.
+//!
+//! Every bench target honors **quick mode** ([`quick`], set by the
+//! `SFLGA_BENCH_QUICK` env var): iteration counts and problem sizes
+//! shrink to smoke-test proportions so CI's `bench-smoke` lane can
+//! execute every target end-to-end — exercising the real bench code paths
+//! and emitting the real `BENCH_*.json` artifacts — in seconds rather
+//! than minutes.  Quick-mode numbers are NOT comparable to full-mode
+//! numbers; the JSON marks the mode so downstream tooling never mixes
+//! them.
 
 use std::time::Instant;
 
 use crate::util::stats::{percentile, Running};
+
+/// True when the `SFLGA_BENCH_QUICK` environment variable is set to
+/// anything but `0`: bench targets shrink to smoke proportions.
+pub fn quick() -> bool {
+    std::env::var_os("SFLGA_BENCH_QUICK").is_some_and(|v| v != "0" && !v.is_empty())
+}
+
+/// Pick an iteration (or size) count by mode: `full` normally,
+/// `quick_n` under [`quick`] mode.
+pub fn iters(full: usize, quick_n: usize) -> usize {
+    if quick() {
+        quick_n
+    } else {
+        full
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -98,6 +123,17 @@ mod tests {
         assert_eq!(r.iters, 50);
         assert!(r.mean_ns > 0.0);
         assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p99_ns);
+    }
+
+    #[test]
+    fn quick_mode_reads_env() {
+        // Can't mutate the process env safely under parallel tests; just
+        // pin the selection logic.
+        if quick() {
+            assert_eq!(iters(100, 2), 2);
+        } else {
+            assert_eq!(iters(100, 2), 100);
+        }
     }
 
     #[test]

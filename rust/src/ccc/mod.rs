@@ -13,6 +13,7 @@
 //! Fig. 6's "Algorithm 1" strategy against fixed/random baselines.
 
 use crate::allocator::build_problem;
+use crate::coordinator::population::Population;
 use crate::coordinator::timing::AllocPolicy;
 use crate::ddqn::{DdqnAgent, DdqnConfig, Transition};
 use crate::latency::ComputeConfig;
@@ -20,7 +21,7 @@ use crate::model::{NUM_CUTS, ShapeSpec};
 use crate::privacy;
 use crate::scenario::ScenarioConfig;
 use crate::util::rng::Pcg;
-use crate::wireless::{Channel, ChannelState, NetConfig};
+use crate::wireless::{ChannelState, NetConfig};
 
 /// Γ(φ): the convergence-penalty term of Assumption 4, modeled as the
 /// monotone non-decreasing g0 · φ(v)/q.
@@ -83,15 +84,22 @@ pub struct Env {
     pub net: NetConfig,
     pub comp: ComputeConfig,
     pub cfg: CccConfig,
-    channel: Channel,
-    /// Scenario state: per-client capacities (straggler multipliers
-    /// folded in) and the cohort-draw RNG.
-    scenario: ScenarioConfig,
+    /// The virtual population the Trainer derives from — the SAME keyed
+    /// pure functions, so the optimizer prices exactly the hardware,
+    /// fading and cohorts the simulator replays
+    /// (`tests/reproducibility.rs` pins the equality bitwise).
+    pop: Population,
+    /// Dense per-client capacity table, derived once from the population
+    /// (the Env's cost model is an O(N) policy surface by construction —
+    /// its feature vector is per-client — so caching the dense table
+    /// costs nothing extra).
     caps: Vec<f64>,
-    part_rng: Pcg,
-    /// The run seed, kept so [`Env::reset`] can re-derive the
-    /// participation stream for every episode.
-    seed: u64,
+    /// Channel draws consumed so far — the fading clock.  Deliberately
+    /// NOT reset per episode: block fading continues across episodes.
+    chan_draws: u64,
+    /// Step index within the current episode — the cohort key, reset by
+    /// [`Env::reset`] so every episode replays the same cohort sequence.
+    episode_step: u64,
     cum_cost: f64,
     steps: usize,
 }
@@ -119,38 +127,38 @@ impl Env {
         seed: u64,
         scenario: ScenarioConfig,
     ) -> Env {
-        // Channel-seed convention: the RAW run seed (`Channel::new`
-        // domain-separates its RNG stream internally) — the SAME
-        // convention `Trainer::new` uses, so the optimizer trains on
-        // exactly the gain trajectory the simulator replays
-        // (`tests/reproducibility.rs` pins the equality).
-        let channel = Channel::new(net.clone(), num_clients, seed);
-        // Fixed hardware: the same capacity fold and participation RNG
-        // the Trainer derives from the run seed (see DESIGN.md
-        // §Scenarios), so the optimizer prices the simulator's hardware.
-        let caps = scenario.resolve_caps(&comp, num_clients, seed);
-        let part_rng = ScenarioConfig::part_rng(seed);
+        // One derivation for optimizer and simulator: the Env holds the
+        // SAME virtual population `Trainer::new` constructs from the run
+        // seed (DESIGN.md §Population), so capacities, straggler sets,
+        // fading and cohort draws agree bitwise between the two.
+        let pop = Population::new(seed, num_clients as u64, scenario, net.clone(), comp.clone())
+            .expect("valid scenario/population configuration");
+        let caps = pop.caps_dense();
         Env {
             spec,
             net,
             comp,
             cfg,
-            channel,
-            scenario,
+            pop,
             caps,
-            part_rng,
-            seed,
+            chan_draws: 0,
+            episode_step: 0,
             cum_cost: 0.0,
             steps: 0,
         }
     }
 
     pub fn num_clients(&self) -> usize {
-        self.channel.num_clients()
+        self.pop.num_clients() as usize
     }
 
     pub fn scenario(&self) -> &ScenarioConfig {
-        &self.scenario
+        self.pop.scenario()
+    }
+
+    /// The virtual population this environment prices.
+    pub fn population(&self) -> &Population {
+        &self.pop
     }
 
     /// DDQN dimensions for this environment.
@@ -164,20 +172,20 @@ impl Env {
 
     /// Reset for a new episode; returns (channel state, feature vector).
     ///
-    /// The participation RNG is re-derived from the run seed, so every
-    /// episode replays the SAME cohort sequence — the stream the
-    /// [`ScenarioConfig::part_rng`] contract says Env and Trainer both
-    /// derive from the run seed.  (Before this fix, episode k's cohorts
-    /// depended on how many episodes had already run.)  The channel RNG
-    /// is deliberately NOT reset: block fading continues across episodes,
-    /// so the agent explores fresh gain realizations each episode while
-    /// the cohort stream stays pinned — the trajectory as a whole is
-    /// still a deterministic function of the run seed and episode count.
+    /// The episode's step counter — the cohort-draw key — rewinds to 0,
+    /// so every episode replays the SAME cohort sequence: step t's cohort
+    /// is the pure function [`Population::cohort`]`(t)`, independent of
+    /// how many episodes already ran.  The fading clock (`chan_draws`) is
+    /// deliberately NOT reset: block fading continues across episodes, so
+    /// the agent explores fresh gain realizations each episode while the
+    /// cohort stream stays pinned — the trajectory as a whole is still a
+    /// deterministic function of the run seed and episode count.
     pub fn reset(&mut self) -> (ChannelState, Vec<f32>) {
         self.cum_cost = 0.0;
         self.steps = 0;
-        self.part_rng = ScenarioConfig::part_rng(self.seed);
-        let st = self.channel.draw_round();
+        self.episode_step = 0;
+        let st = self.pop.gains_dense(self.chan_draws);
+        self.chan_draws += 1;
         let f = self.features(&st);
         (st, f)
     }
@@ -201,16 +209,18 @@ impl Env {
     pub fn step(&mut self, state: &ChannelState, cut: usize) -> StepOutcome {
         let feasible = privacy::cut_feasible(&self.spec, cut, self.cfg.epsilon);
         let n = self.num_clients();
-        // Fast path under full participation: no cohort draw, no RNG use.
-        let cohort = (!self.scenario.full_participation())
-            .then(|| self.scenario.draw_participants(&mut self.part_rng, n));
+        // Fast path under full participation: no cohort enumeration.
+        let cohort = (!self.pop.scenario().full_participation())
+            .then(|| self.pop.cohort(self.episode_step));
+        self.episode_step += 1;
         let participants = cohort.as_ref().map_or(n, Vec::len);
         let (gamma, chi, psi) = self.cost_components_cohort(state, cut, cohort.as_deref());
         let cost = self.cfg.w * gamma + chi + psi;
         let reward = if feasible { -cost } else { -self.cfg.penalty };
         self.cum_cost += if feasible { cost } else { self.cfg.penalty };
         self.steps += 1;
-        let next_state = self.channel.draw_round();
+        let next_state = self.pop.gains_dense(self.chan_draws);
+        self.chan_draws += 1;
         let next_features = self.features(&next_state);
         StepOutcome {
             reward,

@@ -9,12 +9,14 @@
 pub mod comm;
 pub mod metrics;
 pub mod plan;
+pub mod population;
 pub mod timing;
 pub mod trainer;
 
 pub use comm::RoundComm;
 pub use metrics::RunMetrics;
 pub use plan::{BwdDependency, ClientSync, CotangentRoute, RoundPlan};
+pub use population::Population;
 pub use timing::{AllocPolicy, RoundLatency};
 pub use trainer::{RoundStats, TrainConfig, Trainer};
 

@@ -1,0 +1,327 @@
+//! The virtual client population (DESIGN.md §Population).
+//!
+//! [`Population`] is the ONE place the per-client seeded state of a run
+//! lives — capacities, straggler assignment, aggregation weights, channel
+//! distances/fading, cohort draws — as pure functions of
+//! `(run_seed, client_id)` (plus a round or draw index for the
+//! time-varying streams) instead of eagerly materialized vectors.  The
+//! [`crate::coordinator::Trainer`] and the [`crate::ccc::Env`] both
+//! derive from it, so the channel-seed and cohort-draw conventions pinned
+//! by `tests/reproducibility.rs` cannot drift apart, and `reset ≡ fresh`
+//! is structural (a reset rebuilds a value-identical `Population`).
+//!
+//! Derivation tree (every edge a [`mix2`]/[`mix3`] sub-seed, every leaf
+//! an independent Pcg stream):
+//!
+//! ```text
+//! run_seed
+//! ├── (seed, client) ── 0xD157  distance → ḡ_i (path-loss avg gain)
+//! │                 └── 0xF10C  capacity spread draw
+//! ├── (seed, draw, client) ── 0xFADE  per-round Rayleigh |h|² ~ Exp(1)
+//! ├── (seed, 0x57A6)  straggler rank permutation (rank < ⌈frac·N⌉)
+//! └── (seed, 0x9AC7, round)  cohort rank permutation (rank < ⌈r·N⌉)
+//! ```
+//!
+//! Because each leaf is keyed, deriving client 999_999's state never
+//! touches clients 0..999_998 — resident memory is O(queried set), and
+//! any interleaving of queries yields identical bits
+//! (`tests/population.rs`).  The cohort/straggler memberships go through
+//! a [`SeededPermutation`]: membership is an O(1) forward rank check with
+//! the member COUNT exact (bijectivity), and a K-member cohort enumerates
+//! in O(K log K) by inverting ranks 0..K and sorting — preserving the
+//! fixed-ascending-client-index reduction order the bitwise determinism
+//! contract requires (`tests/determinism.rs`).
+
+use crate::latency::ComputeConfig;
+use crate::scenario::ScenarioConfig;
+use crate::util::perm::SeededPermutation;
+use crate::util::rng::{mix2, mix3, Pcg};
+use crate::wireless::{avg_gain, ChannelState, NetConfig};
+
+/// Pcg stream tag for a client's distance (→ average channel gain).
+const STREAM_DISTANCE: u64 = 0xD157;
+/// Pcg stream tag for a (draw, client) Rayleigh fading realization.
+const STREAM_FADING: u64 = 0xFADE;
+/// Pcg stream tag for a client's capacity-spread draw.
+const STREAM_CAPACITY: u64 = 0xF10C;
+/// Sub-seed salt for the straggler rank permutation.
+const SALT_STRAGGLER: u64 = 0x57A6;
+/// Sub-seed salt for the per-round cohort rank permutations.
+const SALT_COHORT: u64 = 0x9AC7;
+
+/// Seeded generator of per-client state for an N-client federation; see
+/// the module docs.  Cheap to construct and to clone — it holds O(1)
+/// state regardless of N.
+#[derive(Clone, Debug)]
+pub struct Population {
+    seed: u64,
+    n: u64,
+    scenario: ScenarioConfig,
+    net: NetConfig,
+    comp: ComputeConfig,
+    /// Straggler rank permutation (`None` ⇔ no straggling configured).
+    strag_perm: Option<SeededPermutation>,
+    strag_count: u64,
+}
+
+impl Population {
+    pub fn new(
+        seed: u64,
+        n: u64,
+        scenario: ScenarioConfig,
+        net: NetConfig,
+        comp: ComputeConfig,
+    ) -> anyhow::Result<Population> {
+        anyhow::ensure!(n > 0, "population needs at least one client");
+        scenario.validate()?;
+        if !comp.client_caps.is_empty() {
+            anyhow::ensure!(
+                comp.client_caps.len() as u64 >= n,
+                "client_caps has {} entries for {n} clients",
+                comp.client_caps.len()
+            );
+        }
+        let strag = &scenario.straggler;
+        let (strag_perm, strag_count) = if strag.enabled() {
+            let k = ((strag.frac * n as f64).ceil() as u64).clamp(1, n);
+            (Some(SeededPermutation::new(n, mix2(seed, SALT_STRAGGLER))), k)
+        } else {
+            (None, 0)
+        };
+        Ok(Population { seed, n, scenario, net, comp, strag_perm, strag_count })
+    }
+
+    pub fn num_clients(&self) -> u64 {
+        self.n
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn scenario(&self) -> &ScenarioConfig {
+        &self.scenario
+    }
+
+    pub fn net(&self) -> &NetConfig {
+        &self.net
+    }
+
+    pub fn comp(&self) -> &ComputeConfig {
+        &self.comp
+    }
+
+    // ---------------------------------------------------------- cohorts
+
+    /// Cohort size K = ⌈participation·N⌉, clamped to [1, N].
+    pub fn cohort_size(&self) -> u64 {
+        ((self.scenario.participation * self.n as f64).ceil() as u64).clamp(1, self.n)
+    }
+
+    /// The round's participant set: K distinct client indices, sorted
+    /// ascending (the fixed reduction order).  Full participation returns
+    /// `0..n`; otherwise ranks 0..K of the round-keyed permutation invert
+    /// in O(K log K) — independent of N and of any other round's draw.
+    pub fn cohort(&self, round: u64) -> Vec<usize> {
+        if self.scenario.full_participation() {
+            return (0..self.n as usize).collect();
+        }
+        let k = self.cohort_size();
+        let perm = SeededPermutation::new(self.n, mix3(self.seed, SALT_COHORT, round));
+        let mut cohort: Vec<usize> = (0..k).map(|p| perm.invert(p) as usize).collect();
+        cohort.sort_unstable();
+        cohort
+    }
+
+    // ---------------------------------------------------------- compute
+
+    /// Whether client `i` is one of the ⌈frac·N⌉ stragglers (exact count
+    /// by permutation-rank membership).
+    pub fn is_straggler(&self, i: u64) -> bool {
+        self.strag_perm.as_ref().is_some_and(|p| p.apply(i) < self.strag_count)
+    }
+
+    /// Client `i`'s compute capacity in FLOPS: an explicit
+    /// `comp.client_caps` table wins (bounded-N deployments); otherwise
+    /// the max/spread draw keyed per client — with the straggler slowdown
+    /// folded in either way (fixed hardware, identical on every query).
+    pub fn capacity(&self, i: u64) -> f64 {
+        debug_assert!(i < self.n);
+        let base = if !self.comp.client_caps.is_empty() {
+            self.comp.client_caps[i as usize]
+        } else if self.comp.f_client_spread <= 0.0 {
+            self.comp.f_client_max
+        } else {
+            let mut rng = Pcg::new(mix2(self.seed, i), STREAM_CAPACITY);
+            self.comp.f_client_max * rng.range(1.0 - self.comp.f_client_spread, 1.0)
+        };
+        if self.is_straggler(i) {
+            base * (1.0 / self.scenario.straggler.factor)
+        } else {
+            base
+        }
+    }
+
+    /// Capacities of a cohort, in the cohort's order.
+    pub fn caps_for(&self, cohort: &[usize]) -> Vec<f64> {
+        cohort.iter().map(|&i| self.capacity(i as u64)).collect()
+    }
+
+    /// The full capacity table (policy/diagnostic surface — O(N), only
+    /// for bounded-N uses like the CCC feature vector).
+    pub fn caps_dense(&self) -> Vec<f64> {
+        (0..self.n).map(|i| self.capacity(i)).collect()
+    }
+
+    /// Aggregation weight ρ^i: every virtual client holds the same
+    /// `samples_per_client`, so ρ is uniformly 1/N — no O(N) vector.
+    pub fn weight(&self) -> f64 {
+        1.0 / self.n as f64
+    }
+
+    // ---------------------------------------------------------- channel
+
+    /// Client `i`'s average (large-scale) channel gain: path loss at its
+    /// keyed uniform distance draw — fixed placement.
+    pub fn avg_gain_of(&self, i: u64) -> f64 {
+        debug_assert!(i < self.n);
+        let mut rng = Pcg::new(mix2(self.seed, i), STREAM_DISTANCE);
+        avg_gain(rng.range(self.net.d_min_km, self.net.d_max_km))
+    }
+
+    /// Instantaneous gain of client `i` at channel draw `draw`:
+    /// g = ḡ_i · |h|², |h|² ~ Exp(1) keyed by `(seed, draw, client)` —
+    /// block fading, redrawn per round, identical whether computed dense
+    /// or for a single cohort member.
+    pub fn gain_at(&self, draw: u64, i: u64) -> f64 {
+        let mut rng = Pcg::new(mix3(self.seed, draw, i), STREAM_FADING);
+        self.avg_gain_of(i) * rng.exponential(1.0)
+    }
+
+    /// Gains of a cohort at draw `draw`, in the cohort's order.
+    pub fn gains_for(&self, draw: u64, cohort: &[usize]) -> Vec<f64> {
+        cohort.iter().map(|&i| self.gain_at(draw, i as u64)).collect()
+    }
+
+    /// The full channel state at draw `draw` (policy surface — O(N), for
+    /// bounded-N uses: cut-selection features, `Trainer::draw_channel`).
+    pub fn gains_dense(&self, draw: u64) -> ChannelState {
+        ChannelState { gains: (0..self.n).map(|i| self.gain_at(draw, i)).collect() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::StragglerConfig;
+
+    fn pop(n: u64, seed: u64, scenario: ScenarioConfig) -> Population {
+        Population::new(seed, n, scenario, NetConfig::default(), ComputeConfig::default())
+            .unwrap()
+    }
+
+    #[test]
+    fn straggler_count_is_exact() {
+        let scenario = ScenarioConfig {
+            straggler: StragglerConfig { frac: 0.25, factor: 4.0 },
+            ..Default::default()
+        };
+        let p = pop(100, 5, scenario);
+        let stragglers = (0..100).filter(|&i| p.is_straggler(i)).count();
+        assert_eq!(stragglers, 25, "⌈0.25·100⌉ must be exact, not statistical");
+        for i in 0..100 {
+            let want = if p.is_straggler(i) { 0.025e9 } else { 0.1e9 };
+            assert_eq!(p.capacity(i), want);
+        }
+    }
+
+    #[test]
+    fn cohorts_are_sorted_distinct_and_keyed_by_round() {
+        let scenario = ScenarioConfig { participation: 0.5, ..Default::default() };
+        let p = pop(10, 3, scenario);
+        let a = p.cohort(0);
+        assert_eq!(a.len(), 5);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "not sorted/distinct: {a:?}");
+        assert!(a.iter().all(|&i| i < 10));
+        // Same round replays; rounds vary; another seed differs.
+        assert_eq!(a, p.cohort(0));
+        assert!((1..20).any(|r| p.cohort(r) != a), "cohort never varies across rounds");
+        let q = pop(10, 4, ScenarioConfig { participation: 0.5, ..Default::default() });
+        assert!((0..20).any(|r| p.cohort(r) != q.cohort(r)), "seed ignored");
+    }
+
+    #[test]
+    fn full_participation_is_identity() {
+        let p = pop(6, 9, ScenarioConfig::default());
+        assert_eq!(p.cohort(0), vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(p.cohort(7), vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(p.cohort_size(), 6);
+    }
+
+    #[test]
+    fn derivation_is_order_independent() {
+        let scenario = ScenarioConfig {
+            participation: 0.3,
+            straggler: StragglerConfig { frac: 0.5, factor: 8.0 },
+            ..Default::default()
+        };
+        let p = pop(1000, 21, scenario.clone());
+        // Query a scattered subset first, then the dense table: bits match.
+        let scattered: Vec<f64> =
+            [999u64, 0, 500, 3].iter().map(|&i| p.capacity(i)).collect();
+        let fresh = pop(1000, 21, scenario);
+        let dense = fresh.caps_dense();
+        assert_eq!(scattered, vec![dense[999], dense[0], dense[500], dense[3]]);
+        let g_one = p.gain_at(4, 777);
+        assert_eq!(g_one, fresh.gains_dense(4).gains[777]);
+        assert_eq!(p.gains_for(4, &[777]), vec![g_one]);
+    }
+
+    #[test]
+    fn channel_statistics_are_sane() {
+        let p = pop(4, 7, ScenarioConfig::default());
+        for i in 0..4 {
+            let avg = p.avg_gain_of(i);
+            assert!(avg > 0.0 && avg < 1e-9, "implausible path-loss gain {avg}");
+            // Fading preserves the mean gain (Exp(1) has mean 1).
+            let rounds = 20_000;
+            let mean: f64 =
+                (0..rounds).map(|d| p.gain_at(d, i)).sum::<f64>() / rounds as f64;
+            assert!((mean / avg - 1.0).abs() < 0.05, "client {i}: mean {mean} avg {avg}");
+        }
+    }
+
+    #[test]
+    fn explicit_cap_table_wins_and_is_length_checked() {
+        let comp =
+            ComputeConfig { client_caps: vec![1.0, 2.0, 3.0], ..Default::default() };
+        let p = Population::new(
+            1,
+            3,
+            ScenarioConfig::default(),
+            NetConfig::default(),
+            comp.clone(),
+        )
+        .unwrap();
+        assert_eq!(p.caps_dense(), vec![1.0, 2.0, 3.0]);
+        assert!(
+            Population::new(1, 5, ScenarioConfig::default(), NetConfig::default(), comp)
+                .is_err(),
+            "short cap table must be rejected"
+        );
+    }
+
+    #[test]
+    fn million_client_population_holds_o_cohort_state() {
+        let scenario = ScenarioConfig { participation: 1e-4, ..Default::default() };
+        let p = pop(1_000_000, 42, scenario);
+        assert_eq!(p.cohort_size(), 100);
+        let cohort = p.cohort(0);
+        assert_eq!(cohort.len(), 100);
+        assert!(cohort.windows(2).all(|w| w[0] < w[1]));
+        // Deriving the cohort's full state touches 100 clients, not 1M.
+        assert_eq!(p.caps_for(&cohort).len(), 100);
+        assert_eq!(p.gains_for(0, &cohort).len(), 100);
+        assert!((p.weight() - 1e-6).abs() < 1e-18);
+    }
+}

@@ -30,31 +30,42 @@
 //! `runtime::scratch`).
 //!
 //! Determinism: every per-client job is a pure function of the
-//! round-start state, batches are drawn on the coordinator thread in
-//! client order, and ALL reductions/updates happen on the coordinator
-//! thread in fixed client-index order over the buffered per-job results
+//! round-start state, batches are pure functions of `(client, step)`
+//! keys, and ALL reductions/updates happen on the coordinator thread in
+//! fixed client-index order over the buffered per-job results
 //! (completion order never matters) — so training is bitwise identical
 //! for every thread count (`tests/determinism.rs`), pipelining included.
 //!
+//! The federation is a *virtual population* ([`Population`] +
+//! [`ClientSampler`], DESIGN.md §Population): no per-client vector of
+//! datasets, batcher streams, capacities or weights exists.  Each round
+//! derives ONLY the drawn cohort's state — ⌈r·N⌉ clients' batches, gains
+//! and capacities — from `(run_seed, client_id)` keys, so resident
+//! population state is O(cohort) while N scales to u64 range
+//! ([`Trainer::peak_resident_population_bytes`] tracks the bound;
+//! `benches/bench_population.rs` drives N = 10⁶).  Schemes that keep
+//! per-client model replicas (SFL/PSL/the drift ablation) are inherently
+//! O(N) in *model* state and are bounded to [`MAX_PER_CLIENT_REPLICAS`].
+//!
 //! Every run executes under a [`ScenarioConfig`] (see [`crate::scenario`]
 //! and DESIGN.md §Scenarios): the partition strategy fixes per-client
-//! shards and the sample-count aggregation weights ρ^n = |D^n|/|D|;
-//! straggler profiles slow a subset of clients in the timing model; and
-//! under partial participation each round runs over a cohort drawn
-//! coordinator-side, with weights renormalized over the cohort and
-//! communication/latency accounted for exactly the clients that took
-//! part.  The default scenario reproduces the paper's IID, homogeneous,
-//! always-on setup byte-for-byte.
+//! label laws (every virtual client holds `samples_per_client` samples,
+//! so the FedAvg weights ρ are uniformly 1/N); straggler profiles slow an
+//! exact ⌈frac·N⌉ subset in the timing model; and under partial
+//! participation each round runs over a cohort enumerated from a
+//! round-keyed permutation, with communication/latency accounted for
+//! exactly the clients that took part.
 //!
 //! Scheme semantics (see DESIGN.md for the discussion):
 //! * **SflGa** — clients upload smashed data; the server updates per-client
 //!   server-side models and aggregates them (eq 7), aggregates the
 //!   smashed-data gradients (eq 5) and *broadcasts one tensor*.  Per the
 //!   paper's eqs (6)/(18)/(19), the client-side gradient g_t^c is
-//!   client-independent — one shared w^c steps with the ρ-weighted VJP of
-//!   the aggregated cotangent, no client aggregation traffic.  The *bias*
-//!   of that gradient vs the true split gradient is the Γ(φ(v)) term of
-//!   Assumption 4 — it grows with the client model (Fig. 3 measures it).
+//!   client-independent — ONE shared w^c (represented once, not N times)
+//!   steps with the ρ-weighted VJP of the aggregated cotangent, no client
+//!   aggregation traffic.  The *bias* of that gradient vs the true split
+//!   gradient is the Γ(φ(v)) term of Assumption 4 — it grows with the
+//!   client model (Fig. 3 measures it).
 //! * **SflGaDrift** — ablation: own VJP of the aggregated cotangent, own
 //!   replica, no sync.
 //! * **Sfl** — per-client smashed-gradient unicast + synchronous client-
@@ -68,19 +79,27 @@
 use std::sync::Arc;
 
 use crate::data::init::{init_params, join_params, split_params};
-use crate::data::{Batcher, Dataset, generate};
+use crate::data::population::ClientSampler;
+use crate::data::{Dataset, generate};
 use crate::latency::ComputeConfig;
 use crate::model::{Manifest, ShapeSpec};
 use crate::runtime::{JobHandle, ModelRuntime, ParallelExecutor, TaskSession, Tensor};
 use crate::scenario::ScenarioConfig;
 use crate::tensor::{self, Params};
-use crate::util::rng::Pcg;
-use crate::wireless::{Channel, ChannelState, NetConfig};
+use crate::wireless::{ChannelState, NetConfig};
 
 use super::comm::{round_comm, RoundComm};
 use super::plan::{ClientSync, CotangentRoute, RoundPlan};
+use super::population::Population;
 use super::SchemeKind;
 use super::timing::{AllocPolicy, round_latency, RoundLatency};
+
+/// Upper bound on `num_clients` for schemes whose *model* state is
+/// inherently per-client (SflGaDrift / Sfl / Psl keep one replica each).
+/// The O(cohort) population refactor cannot help those — the replicas
+/// themselves are O(N) — so they stay bounded; SflGa and Fl hold one
+/// logical client-side model and scale to u64-range populations.
+pub const MAX_PER_CLIENT_REPLICAS: usize = 65_536;
 
 /// Training configuration (defaults = the paper's §V-A setup).
 #[derive(Clone, Debug)]
@@ -149,86 +168,87 @@ pub struct RoundStats {
     pub test: Option<(f64, f64)>, // (loss, accuracy)
 }
 
+/// The scheme's client-side model representation.  SFL-GA's eq-19
+/// invariant (every replica identical) and FL (client state lives in
+/// `w_full`) need ONE logical model; the per-replica schemes genuinely
+/// hold N.
+enum ClientSide {
+    /// One shared logical client-side model — O(1) in N.
+    Shared(Params),
+    /// Per-client replicas (SflGaDrift / Sfl / Psl) — O(N), bounded by
+    /// [`MAX_PER_CLIENT_REPLICAS`].
+    PerClient(Vec<Params>),
+}
+
+impl ClientSide {
+    fn for_scheme(scheme: SchemeKind, n: usize, w0: &Params) -> anyhow::Result<ClientSide> {
+        let shared = match scheme.plan() {
+            RoundPlan::Full => true,
+            RoundPlan::Split { sync, .. } => sync == ClientSync::SharedStep,
+        };
+        if shared {
+            Ok(ClientSide::Shared(w0.clone()))
+        } else {
+            anyhow::ensure!(
+                n <= MAX_PER_CLIENT_REPLICAS,
+                "{} keeps a model replica per client; {n} clients exceeds the {} bound \
+                 (use sfl-ga or fl for virtual-population scale)",
+                scheme.name(),
+                MAX_PER_CLIENT_REPLICAS
+            );
+            Ok(ClientSide::PerClient(vec![w0.clone(); n]))
+        }
+    }
+
+    /// Client `i`'s parameters (the shared model for every `i` under
+    /// [`ClientSide::Shared`]).
+    fn params_of(&self, i: usize) -> &Params {
+        match self {
+            ClientSide::Shared(w) => w,
+            ClientSide::PerClient(reps) => &reps[i],
+        }
+    }
+}
+
+/// Where a round's cohort gains come from: a caller-provided dense state
+/// ([`Trainer::run_round`]'s policy API) or a lazy per-cohort derivation
+/// at a channel-draw index ([`Trainer::run`]'s O(cohort) path).  Both
+/// evaluate the same pure function [`Population::gain_at`], so the two
+/// paths are bitwise identical (`tests/reproducibility.rs`).
+enum GainSource<'a> {
+    Dense(&'a ChannelState),
+    Lazy(u64),
+}
+
 /// The coordinator state machine.
 pub struct Trainer {
     pub cfg: TrainConfig,
     rt: ModelRuntime,
     pool: ParallelExecutor,
-    train: Dataset,
+    /// The virtual population: per-client capacities, weights, channel and
+    /// cohort draws as keyed pure functions (O(1) state however large N).
+    pop: Population,
+    /// Lazy per-client training data (same keyed-derivation contract).
+    sampler: ClientSampler,
+    /// The test split stays eagerly materialized — it is O(test_samples),
+    /// independent of N.
     test: Dataset,
-    batchers: Vec<Batcher>,
-    /// Aggregation weights ρ^n = D^n / D.
-    rho: Vec<f64>,
-    channel: Channel,
-    /// Per-client client-side models (all schemes; identical where the
-    /// scheme keeps them synchronized).
-    wc: Vec<Params>,
+    /// Client-side model(s); see [`ClientSide`].
+    client_side: ClientSide,
     /// Server-side model (split schemes) — the aggregated w^s of eq (7).
     ws: Params,
     /// Full global model (FL).
     w_full: Params,
-    /// Per-client compute capacities in FLOPS — the max/spread draw with
-    /// the scenario's straggler multipliers folded in, resolved once per
-    /// deployment (fixed hardware).
-    caps: Vec<f64>,
-    /// Participation RNG: the cohort draw consumes this on the
-    /// coordinator thread, one draw per round (untouched under full
-    /// participation).
-    part_rng: Pcg,
+    /// Channel draws consumed so far — the fading clock.  Draw d of
+    /// client i is `Population::gain_at(d, i)` whether it was observed
+    /// via [`Trainer::draw_channel`] (dense) or lazily per cohort.
+    chan_draws: u64,
     round: usize,
     /// Cut used in the previous round (dynamic-cut runs resync on change).
     last_cut: Option<usize>,
-}
-
-/// Everything a trainer derives deterministically from `cfg.seed`: the
-/// synthetic datasets, the partition and its ρ weights, the per-client
-/// batcher streams, the capacity table, the fading channel, the
-/// participation stream and the initial model.  [`Trainer::new`] and
-/// [`Trainer::reset`] both build one, so a reset trainer is bitwise
-/// indistinguishable from a freshly constructed one with the same seed
-/// (`tests/reproducibility.rs`).
-struct SeededState {
-    train: Dataset,
-    test: Dataset,
-    batchers: Vec<Batcher>,
-    rho: Vec<f64>,
-    caps: Vec<f64>,
-    channel: Channel,
-    part_rng: Pcg,
-    params: Params,
-}
-
-impl SeededState {
-    fn derive(cfg: &TrainConfig, spec: &ShapeSpec) -> SeededState {
-        let total = cfg.samples_per_client * cfg.num_clients;
-        let train = generate(spec, &cfg.dataset, total, cfg.seed);
-        let test = generate(spec, &cfg.dataset, cfg.test_samples, cfg.seed ^ 0x7E57);
-        // Scenario axis 1 — data distribution: the partition strategy
-        // fixes each client's shard and, via |D^n|, the sample-count
-        // aggregation weights ρ^n = |D^n| / |D| (FedAvg weighting).
-        let shards =
-            cfg.scenario.partition.indices(&train.labels, train.classes, cfg.num_clients, cfg.seed);
-        let d_total: usize = shards.iter().map(Vec::len).sum();
-        let rho: Vec<f64> = shards.iter().map(|s| s.len() as f64 / d_total as f64).collect();
-        let batchers = shards
-            .iter()
-            .enumerate()
-            .map(|(i, s)| Batcher::new(s.clone(), spec.train_batch, cfg.seed ^ (i as u64) << 8))
-            .collect();
-        // Scenario axis 2 — compute heterogeneity: resolve the max/spread
-        // draw and the straggler multipliers into one per-client capacity
-        // table (fixed hardware; participant subsets index into it).
-        let caps = cfg.scenario.resolve_caps(&cfg.comp, cfg.num_clients, cfg.seed);
-        let params = init_params(spec, cfg.seed ^ 0x1417);
-        // Channel-seed convention: the RAW run seed, the same convention
-        // `ccc::Env::with_scenario` uses (`Channel::new` domain-separates
-        // its RNG stream internally), so the CCC optimizer trains on
-        // exactly the gain trajectory this trainer replays
-        // (`tests/reproducibility.rs` pins the equality).
-        let channel = Channel::new(cfg.net.clone(), cfg.num_clients, cfg.seed);
-        let part_rng = ScenarioConfig::part_rng(cfg.seed);
-        SeededState { train, test, batchers, rho, caps, channel, part_rng, params }
-    }
+    /// High-water mark of per-round materialized population state in
+    /// bytes; see [`Trainer::peak_resident_population_bytes`].
+    peak_resident_bytes: usize,
 }
 
 impl Trainer {
@@ -249,6 +269,35 @@ impl Trainer {
         Trainer::new(rt, cfg)
     }
 
+    /// Every seed-dependent component, derived from `cfg.seed` alone:
+    /// the virtual population, the per-client sample source, the test
+    /// split and the initial model.  [`Trainer::new`] and
+    /// [`Trainer::reset`] both call this — reset ≡ fresh is structural
+    /// (`tests/reproducibility.rs`).
+    fn derive_seeded(
+        cfg: &TrainConfig,
+        spec: &ShapeSpec,
+    ) -> anyhow::Result<(Population, ClientSampler, Dataset, Params)> {
+        let pop = Population::new(
+            cfg.seed,
+            cfg.num_clients as u64,
+            cfg.scenario.clone(),
+            cfg.net.clone(),
+            cfg.comp.clone(),
+        )?;
+        let sampler = ClientSampler::new(
+            spec,
+            &cfg.dataset,
+            cfg.scenario.partition.clone(),
+            cfg.samples_per_client,
+            cfg.seed,
+        );
+        // Test-split seed convention unchanged from the eager substrate.
+        let test = generate(spec, &cfg.dataset, cfg.test_samples, cfg.seed ^ 0x7E57);
+        let params = init_params(spec, cfg.seed ^ 0x1417);
+        Ok((pop, sampler, test, params))
+    }
+
     /// Trainer over an already-constructed runtime (any backend).
     pub fn new(rt: ModelRuntime, cfg: TrainConfig) -> anyhow::Result<Trainer> {
         anyhow::ensure!(cfg.num_clients > 0 && cfg.rounds > 0 && cfg.tau > 0);
@@ -267,25 +316,24 @@ impl Trainer {
             spec.eval_batch
         );
 
-        let st = SeededState::derive(&cfg, &spec);
+        let (pop, sampler, test, params) = Trainer::derive_seeded(&cfg, &spec)?;
+        let client_side = ClientSide::for_scheme(cfg.scheme, cfg.num_clients, &params)?;
         let pool = ParallelExecutor::new(cfg.threads);
         Ok(Trainer {
             rt,
             pool,
-            train: st.train,
-            test: st.test,
-            batchers: st.batchers,
-            rho: st.rho,
-            channel: st.channel,
+            pop,
+            sampler,
+            test,
+            client_side,
             // Initialize every cut's split from the same full model; the
             // cut in force selects which prefix the clients own.
-            wc: vec![st.params.clone(); cfg.num_clients],
-            ws: st.params.clone(),
-            w_full: st.params,
-            caps: st.caps,
-            part_rng: st.part_rng,
+            ws: params.clone(),
+            w_full: params,
+            chan_draws: 0,
             round: 0,
             last_cut: None,
+            peak_resident_bytes: 0,
             cfg,
         })
     }
@@ -304,26 +352,49 @@ impl Trainer {
         self.pool.threads()
     }
 
-    pub fn rho(&self) -> &[f64] {
-        &self.rho
+    /// The virtual population this run derives from.
+    pub fn population(&self) -> &Population {
+        &self.pop
+    }
+
+    /// Aggregation weights ρ^n = |D^n|/|D| — uniformly 1/N (every virtual
+    /// client holds `samples_per_client` samples).  Materialized O(N)
+    /// vector for diagnostics; prefer [`Population::weight`].
+    pub fn rho(&self) -> Vec<f64> {
+        vec![self.pop.weight(); self.cfg.num_clients]
     }
 
     pub fn round_index(&self) -> usize {
         self.round
     }
 
+    /// Peak bytes of per-round *population-derived* state materialized so
+    /// far: cohort indices, gains, capacities, weights and the cohort's
+    /// batch tensors.  Bounded by O(cohort · batch) independent of
+    /// `num_clients` — the contract `benches/bench_population.rs` asserts
+    /// at N = 10⁴ vs 10⁶.  Model state is excluded: it is O(1) in N for
+    /// SflGa/Fl ([`ClientSide::Shared`]) and inherently O(N) for the
+    /// per-replica schemes.
+    pub fn peak_resident_population_bytes(&self) -> usize {
+        self.peak_resident_bytes
+    }
+
     /// Draw this round's channel (exposed for cut-selection policies that
     /// observe the state before choosing v — Algorithm 1's MDP state).
+    /// This is the O(N) dense *policy* surface; [`Trainer::run`] derives
+    /// the same draws lazily per cohort without materializing it.
     pub fn draw_channel(&mut self) -> ChannelState {
-        self.channel.draw_round()
+        let st = self.pop.gains_dense(self.chan_draws);
+        self.chan_draws += 1;
+        st
     }
 
     /// Run one communication round at cut `v` with channel `state`.
     ///
     /// The round runs the scheme's [`RoundPlan`] over this round's
-    /// participant cohort (drawn coordinator-side from the round RNG —
-    /// everyone under full participation), then accounts communication
-    /// and latency for exactly the clients that took part.
+    /// participant cohort (enumerated from the round-keyed population
+    /// permutation — everyone under full participation), then accounts
+    /// communication and latency for exactly the clients that took part.
     ///
     /// # Example
     ///
@@ -340,7 +411,7 @@ impl Trainer {
     /// # Ok::<(), anyhow::Error>(())
     /// ```
     pub fn run_round(&mut self, cut: usize, state: &ChannelState) -> anyhow::Result<RoundStats> {
-        let (mut stats, _no_pending) = self.run_round_inner(cut, state, None)?;
+        let (mut stats, _no_pending) = self.run_round_inner(cut, GainSource::Dense(state), None)?;
         if self.eval_due() {
             stats.test = Some(self.evaluate(cut)?);
         }
@@ -361,7 +432,7 @@ impl Trainer {
     fn run_round_inner(
         &mut self,
         cut: usize,
-        state: &ChannelState,
+        gains: GainSource,
         pending: Option<&PendingEval>,
     ) -> anyhow::Result<(RoundStats, Option<(f64, f64)>)> {
         // Dynamic cut selection (Algorithm 1) moves layer ownership between
@@ -369,25 +440,36 @@ impl Trainer {
         // model so the handed-over blocks carry the aggregated weights.
         if self.last_cut.is_some() && self.last_cut != Some(cut) {
             let global = self.global_params(self.last_cut.unwrap());
-            for w in &mut self.wc {
-                *w = global.clone();
+            match &mut self.client_side {
+                ClientSide::Shared(w) => *w = global.clone(),
+                ClientSide::PerClient(reps) => {
+                    for w in reps.iter_mut() {
+                        *w = global.clone();
+                    }
+                }
             }
             self.ws = global;
         }
         self.last_cut = Some(cut);
-        // Scenario axis 3 — participation: the cohort draw happens on the
-        // coordinator thread, so it is identical for every thread count.
-        let n = self.cfg.num_clients;
-        let participants = self.cfg.scenario.draw_participants(&mut self.part_rng, n);
-        // Aggregation weights over the cohort: ρ renormalized to sum to 1
-        // across the participants (exactly ρ itself under full
-        // participation — no renormalization bit-noise on the fast path).
-        let weights: Vec<f64> = if participants.len() == n {
-            self.rho.clone()
-        } else {
-            let total: f64 = participants.iter().map(|&i| self.rho[i]).sum();
-            participants.iter().map(|&i| self.rho[i] / total).collect()
+        // Scenario axis 3 — participation: the cohort enumerates from the
+        // round-keyed permutation on the coordinator thread (identical
+        // for every thread count, independent of any other round).
+        let participants = self.pop.cohort(self.round as u64);
+        let k = participants.len();
+        // This round's gains, for exactly the cohort: restrict the dense
+        // policy state, or derive the cohort's entries of the same draw.
+        let gains_cohort: Vec<f64> = match gains {
+            GainSource::Dense(st) => participants.iter().map(|&i| st.gains[i]).collect(),
+            GainSource::Lazy(draw) => self.pop.gains_for(draw, &participants),
         };
+        // Cohort aggregation weights: ρ is uniform (equal shards), so the
+        // renormalized cohort weights are exactly 1/K.
+        let weights = vec![1.0 / k as f64; k];
+        // O(cohort) residency: ids + gains + caps + weights + the epoch's
+        // materialized batch tensors (the only per-client state alive).
+        let resident = k * (std::mem::size_of::<usize>() + 3 * std::mem::size_of::<f64>())
+            + k * self.sampler.batch_bytes();
+        self.peak_resident_bytes = self.peak_resident_bytes.max(resident);
         let (loss, prior_eval) = match self.cfg.scheme.plan() {
             RoundPlan::Split { route, sync } => {
                 self.round_split(cut, route, sync, &participants, &weights, pending)?
@@ -396,23 +478,12 @@ impl Trainer {
         };
         // Communication and latency account for the cohort only: the
         // channel state and compute table restricted to participants.
-        let state_round = if participants.len() == n {
-            state.clone()
-        } else {
-            ChannelState { gains: participants.iter().map(|&i| state.gains[i]).collect() }
-        };
+        let state_round = ChannelState { gains: gains_cohort };
         let mut comp_round = self.cfg.comp.clone();
-        comp_round.client_caps = participants.iter().map(|&i| self.caps[i]).collect();
+        comp_round.client_caps = self.pop.caps_for(&participants);
         let spec = self.rt.spec().clone();
         let cut_spec = spec.cut(cut);
-        let comm = round_comm(
-            self.cfg.scheme,
-            &spec,
-            cut_spec,
-            &comp_round,
-            participants.len(),
-            self.cfg.tau,
-        );
+        let comm = round_comm(self.cfg.scheme, &spec, cut_spec, &comp_round, k, self.cfg.tau);
         let latency = round_latency(
             self.cfg.scheme,
             &spec,
@@ -427,7 +498,7 @@ impl Trainer {
         let stats = RoundStats {
             round: self.round,
             cut,
-            participants: participants.len(),
+            participants: k,
             train_loss: loss,
             comm,
             latency,
@@ -470,12 +541,19 @@ impl Trainer {
     /// (the snapshot is immutable and eval consumes no RNG); only
     /// wall-clock moves.  The last round's eval has no successor to
     /// overlap with and runs synchronously.
+    ///
+    /// Unlike the [`Trainer::draw_channel`] + [`Trainer::run_round`]
+    /// policy loop, `run` never materializes a dense channel state: each
+    /// round consumes one draw index and derives gains for the cohort
+    /// only — bitwise the same values, O(cohort) memory.
     pub fn run(&mut self, cut: usize) -> anyhow::Result<Vec<RoundStats>> {
         let mut out: Vec<RoundStats> = Vec::with_capacity(self.cfg.rounds);
         let mut pending: Option<PendingEval> = None;
         for _ in 0..self.cfg.rounds {
-            let state = self.draw_channel();
-            let (stats, prior_eval) = self.run_round_inner(cut, &state, pending.as_ref())?;
+            let draw = self.chan_draws;
+            self.chan_draws += 1;
+            let (stats, prior_eval) =
+                self.run_round_inner(cut, GainSource::Lazy(draw), pending.as_ref())?;
             if let Some(p) = pending.take() {
                 let result = prior_eval.expect("round engine completes any pending eval");
                 out[p.stats_idx].test = Some(result);
@@ -496,24 +574,10 @@ impl Trainer {
 
     // ------------------------------------------------- the round engine
 
-    /// Draw each participant's next batch, on the coordinator thread in
-    /// ascending client order (phase 0) — the Batcher RNG sequences are
-    /// therefore identical for every thread count, and a client's batch
-    /// stream only advances on rounds it participates in.
-    fn draw_batches(&mut self, participants: &[usize]) -> Vec<(Tensor, Tensor)> {
-        participants
-            .iter()
-            .map(|&i| {
-                let idx = self.batchers[i].next_batch();
-                self.train.batch(&idx)
-            })
-            .collect()
-    }
-
     /// One split round (§II-A steps 1–5) of τ epochs over the cohort
     /// `participants` (sorted ascending), phases configured by
     /// `route`/`sync`.  `weights[j]` is participant j's aggregation
-    /// weight (ρ renormalized over the cohort).
+    /// weight (1/K — ρ renormalized over the cohort).
     ///
     /// Pipelined execution: each participant is ONE fused task chain —
     /// client-fwd (eq 1) feeds the server FP+BP (eqs 2–4) the moment it
@@ -537,22 +601,35 @@ impl Trainer {
         let eb = self.rt.spec().eval_batch;
         let k = participants.len();
         let lr = self.cfg.lr;
+        let tau = self.cfg.tau;
+        let base_step = self.round * tau;
         let shared = sync == ClientSync::SharedStep;
         let fuse_bwd = RoundPlan::Split { route, sync }.fuses_client_bwd();
         // Preallocated reduction accumulators, reused across the τ epochs.
         let mut g_ws_acc = tensor::zeros_like(&self.ws[nc..]);
         let mut g_c_acc = if shared {
-            tensor::zeros_like(&self.wc[0][..nc])
+            tensor::zeros_like(&self.client_side.params_of(participants[0])[..nc])
         } else {
             Params::new()
         };
         let mut mean_loss = 0.0;
         let mut eval_handles: Option<Vec<JobHandle<(f64, f64)>>> = None;
-        for epoch in 0..self.cfg.tau {
-            let batches = self.draw_batches(participants);
+        for epoch in 0..tau {
+            // Phase 0: the cohort's batches materialize on the
+            // coordinator thread in ascending cohort order — each a pure
+            // function of (client, global step = round·τ + epoch), so the
+            // stream is identical for every thread count and every
+            // population size.
+            let step = (base_step + epoch) as u64;
+            let batches: Vec<(Tensor, Tensor)> =
+                participants.iter().map(|&i| self.sampler.batch(i as u64, step)).collect();
             let rt = &self.rt;
             let test = &self.test;
-            let wc = &self.wc;
+            let client_side = &self.client_side;
+            // Per-participant client-model views, ascending cohort order
+            // (all the same shared model under SharedStep).
+            let views: Vec<&Params> =
+                participants.iter().map(|&i| client_side.params_of(i)).collect();
             let ws_srv = &self.ws[nc..];
             // (1)+(2) fused fan-out — eq (1) chaining into eqs (2–4) per
             // participant with no cross-client barrier (and, unicast,
@@ -562,15 +639,15 @@ impl Trainer {
             let chains = self.pool.session(|sess| {
                 let handles: Vec<_> = (0..k)
                     .map(|j| {
-                        let pj = participants[j];
+                        let wv: &Params = views[j];
                         let (x, y) = (&batches[j].0, &batches[j].1);
                         sess.submit(move |scratch| {
-                            let smashed = rt.client_fwd_with(scratch, cut, &wc[pj][..nc], x)?;
+                            let smashed = rt.client_fwd_with(scratch, cut, &wv[..nc], x)?;
                             let (loss, g_ws, g_s) =
                                 rt.server_grad_with(scratch, cut, ws_srv, &smashed, y)?;
                             if fuse_bwd {
                                 let g_c =
-                                    rt.client_grad_with(scratch, cut, &wc[pj][..nc], x, &g_s)?;
+                                    rt.client_grad_with(scratch, cut, &wv[..nc], x, &g_s)?;
                                 Ok((loss, g_ws, None, Some(g_c)))
                             } else {
                                 Ok((loss, g_ws, Some(g_s), None))
@@ -623,11 +700,10 @@ impl Trainer {
                 self.pool.session(|sess| {
                     let handles: Vec<_> = (0..k)
                         .map(|j| {
-                            let wc_j =
-                                if shared { &wc[0][..nc] } else { &wc[participants[j]][..nc] };
+                            let wv: &Params = views[j];
                             let x = &batches[j].0;
                             sess.submit(move |scratch| {
-                                rt.client_grad_with(scratch, cut, wc_j, x, agg)
+                                rt.client_grad_with(scratch, cut, &wv[..nc], x, agg)
                             })
                         })
                         .collect();
@@ -637,42 +713,44 @@ impl Trainer {
             // Apply this epoch's updates on the coordinator thread:
             // server-side SGD step on the aggregated gradient (eq 7)…
             tensor::sgd_step(&mut self.ws[nc..], &g_ws_acc, lr);
-            if shared {
-                // …and the client-independent g_t^c of eq (19): the
-                // weighted VJP reduction, applied identically to every
-                // replica, keeps the shared-w^c invariant with NO
-                // aggregation traffic.  Under partial participation the
-                // shared w^c is ONE logical server-held model — clients
-                // that sat the round out pick the stepped model up when
-                // they next join, so every replica steps here too.
-                tensor::zero(&mut g_c_acc);
-                for (j, g_c) in g_c_parts.iter().enumerate() {
-                    tensor::weighted_accumulate(&mut g_c_acc, g_c, weights[j]);
+            match &mut self.client_side {
+                ClientSide::Shared(w) => {
+                    // …and the client-independent g_t^c of eq (19): the
+                    // weighted VJP reduction steps the ONE logical w^c —
+                    // no aggregation traffic, no replica vector.  Under
+                    // partial participation the shared w^c is server-held:
+                    // clients that sat the round out pick the stepped
+                    // model up when they next join.
+                    tensor::zero(&mut g_c_acc);
+                    for (j, g_c) in g_c_parts.iter().enumerate() {
+                        tensor::weighted_accumulate(&mut g_c_acc, g_c, weights[j]);
+                    }
+                    tensor::sgd_step(&mut w[..nc], &g_c_acc, lr);
                 }
-                for wc_i in &mut self.wc {
-                    tensor::sgd_step(&mut wc_i[..nc], &g_c_acc, lr);
-                }
-            } else {
-                // …or each participant's own step on its own replica
-                // (absent clients keep their stale replicas).
-                for (j, g_c) in g_c_parts.iter().enumerate() {
-                    tensor::sgd_step(&mut self.wc[participants[j]][..nc], g_c, lr);
+                ClientSide::PerClient(reps) => {
+                    // …or each participant's own step on its own replica
+                    // (absent clients keep their stale replicas).
+                    for (j, g_c) in g_c_parts.iter().enumerate() {
+                        tensor::sgd_step(&mut reps[participants[j]][..nc], g_c, lr);
+                    }
                 }
             }
-            mean_loss += loss_acc / self.cfg.tau as f64;
+            mean_loss += loss_acc / tau as f64;
         }
         // (5) aggregate: synchronous client-side FedAvg — SFL only, the
         // traffic SFL-GA removes.  Only the round's participants exchange
         // and receive the aggregate; absentees stay stale until they next
         // participate.
         if sync == ClientSync::FedAvg {
-            let mut agg = tensor::zeros_like(&self.wc[0][..nc]);
-            for (j, &i) in participants.iter().enumerate() {
-                tensor::weighted_accumulate(&mut agg, &self.wc[i][..nc], weights[j]);
-            }
-            for &i in participants {
-                for (dst, src) in self.wc[i][..nc].iter_mut().zip(&agg) {
-                    dst.copy_from_slice(src);
+            if let ClientSide::PerClient(reps) = &mut self.client_side {
+                let mut agg = tensor::zeros_like(&reps[participants[0]][..nc]);
+                for (j, &i) in participants.iter().enumerate() {
+                    tensor::weighted_accumulate(&mut agg, &reps[i][..nc], weights[j]);
+                }
+                for &i in participants {
+                    for (dst, src) in reps[i][..nc].iter_mut().zip(&agg) {
+                        dst.copy_from_slice(src);
+                    }
                 }
             }
         }
@@ -701,34 +779,30 @@ impl Trainer {
         let lr = self.cfg.lr;
         let tau = self.cfg.tau;
         let eb = self.rt.spec().eval_batch;
-        // Phase 0: τ batch-index draws per participant, in ascending
-        // client order on the coordinator thread (per-client Batcher RNG
-        // order is identical to serial).  Workers materialize their own
-        // client's tensors from the shared read-only dataset, so only one
-        // batch per worker is resident at a time.
-        let draws: Vec<Vec<Vec<usize>>> = participants
-            .iter()
-            .map(|&i| (0..tau).map(|_| self.batchers[i].next_batch()).collect())
-            .collect();
+        let base_step = (self.round * tau) as u64;
         let rt = &self.rt;
-        let train = &self.train;
+        let sampler = &self.sampler;
         let test = &self.test;
         let w0 = &self.w_full;
         let mut eval_handles: Option<Vec<JobHandle<(f64, f64)>>> = None;
         let locals = self.pool.session(|sess| {
             let handles: Vec<_> = (0..k)
                 .map(|j| {
-                    let draws_j = &draws[j];
+                    let client = participants[j] as u64;
                     sess.submit(move |scratch| {
                         let mut w = w0.clone();
                         // Train loss averaged over the τ local epochs —
                         // the same Σ_e/τ accounting the split rounds
                         // report, so fig-3-style loss curves compare like
                         // quantities at τ > 1 (a reported FL loss is no
-                        // longer just the FIRST local epoch's).
+                        // longer just the FIRST local epoch's).  Each
+                        // worker synthesizes its own client's batches on
+                        // demand (a pure function of client + global
+                        // step): one batch resident per worker, bitwise
+                        // the stream the coordinator would draw.
                         let mut loss_sum = 0.0f64;
-                        for idx in draws_j {
-                            let (x, y) = train.batch(idx);
+                        for e in 0..tau {
+                            let (x, y) = sampler.batch(client, base_step + e as u64);
                             let (loss, g) = rt.full_grad_with(scratch, &w, &x, &y)?;
                             loss_sum += loss as f64;
                             tensor::sgd_step(&mut w, &g, lr);
@@ -758,17 +832,25 @@ impl Trainer {
 
     // ------------------------------------------------------------- eval
 
-    /// Global model at cut v: ρ-weighted client-side average ++ server side.
+    /// Global model at cut v: ρ-weighted client-side average ++ server
+    /// side.  Under [`ClientSide::Shared`] the average of N identical
+    /// replicas IS the shared model — joined directly, no O(N) pass.
     pub fn global_params(&self, cut: usize) -> Params {
         if self.cfg.scheme == SchemeKind::Fl {
             return self.w_full.clone();
         }
         let nc = self.rt.spec().cut(cut).client_params;
-        let mut wc_avg = tensor::zeros_like(&self.wc[0][..nc]);
-        for (i, w) in self.wc.iter().enumerate() {
-            tensor::weighted_accumulate(&mut wc_avg, &w[..nc], self.rho[i]);
+        match &self.client_side {
+            ClientSide::Shared(w) => join_params(&w[..nc], &self.ws[nc..]),
+            ClientSide::PerClient(reps) => {
+                let rho = self.pop.weight();
+                let mut wc_avg = tensor::zeros_like(&reps[0][..nc]);
+                for w in reps {
+                    tensor::weighted_accumulate(&mut wc_avg, &w[..nc], rho);
+                }
+                join_params(&wc_avg, &self.ws[nc..])
+            }
         }
-        join_params(&wc_avg, &self.ws[nc..])
     }
 
     /// Test-set (loss, accuracy) of the global model.  Batches fan out on
@@ -797,41 +879,46 @@ impl Trainer {
     }
 
     /// Max |Δ| between two clients' client-side models — the drift Γ(φ)
-    /// bounds (diagnostics + tests).
+    /// bounds (diagnostics + tests).  Structurally zero under
+    /// [`ClientSide::Shared`] (one logical model).
     pub fn client_drift(&self, cut: usize) -> f64 {
-        let nc = self.rt.spec().cut(cut).client_params;
-        let mut m = 0.0f64;
-        for i in 1..self.wc.len() {
-            m = m.max(tensor::max_abs_diff(&self.wc[0][..nc], &self.wc[i][..nc]));
+        match &self.client_side {
+            ClientSide::Shared(_) => 0.0,
+            ClientSide::PerClient(reps) => {
+                let nc = self.rt.spec().cut(cut).client_params;
+                let mut m = 0.0f64;
+                for w in &reps[1..] {
+                    m = m.max(tensor::max_abs_diff(&reps[0][..nc], &w[..nc]));
+                }
+                m
+            }
         }
-        m
     }
 
     /// Reset to a freshly-constructed trainer for `seed` without
-    /// reloading the backend.  EVERY seed-dependent stream — datasets,
-    /// partition + ρ weights, batcher order, capacity table, channel
-    /// fading, participation draws, model init — is re-derived from the
-    /// new seed, so `reset(s)` followed by `run` is bitwise identical to
-    /// constructing a fresh `Trainer` with seed `s`
-    /// (`tests/reproducibility.rs`).  Leaving any of those streams
-    /// mid-sequence (the pre-fix behavior) silently broke run-to-run
-    /// comparability.
+    /// reloading the backend.  EVERY seed-dependent stream — the virtual
+    /// population (capacities, straggler set, channel, cohorts), the
+    /// per-client sample streams, the test split and the model init — is
+    /// re-derived from the new seed through the same
+    /// [`Trainer::derive_seeded`] as construction, so `reset(s)` followed
+    /// by `run` is bitwise identical to a fresh `Trainer` with seed `s`
+    /// (`tests/reproducibility.rs`).
     pub fn reset(&mut self, seed: u64) {
         self.cfg.seed = seed;
         let spec = self.rt.spec().clone();
-        let st = SeededState::derive(&self.cfg, &spec);
-        self.train = st.train;
-        self.test = st.test;
-        self.batchers = st.batchers;
-        self.rho = st.rho;
-        self.caps = st.caps;
-        self.channel = st.channel;
-        self.part_rng = st.part_rng;
-        self.wc = vec![st.params.clone(); self.cfg.num_clients];
-        self.ws = st.params.clone();
-        self.w_full = st.params;
+        let (pop, sampler, test, params) = Trainer::derive_seeded(&self.cfg, &spec)
+            .expect("config validated at construction");
+        self.pop = pop;
+        self.sampler = sampler;
+        self.test = test;
+        self.client_side = ClientSide::for_scheme(self.cfg.scheme, self.cfg.num_clients, &params)
+            .expect("scheme/population bound validated at construction");
+        self.ws = params.clone();
+        self.w_full = params;
+        self.chan_draws = 0;
         self.round = 0;
         self.last_cut = None;
+        self.peak_resident_bytes = 0;
     }
 
     /// Access the split of the *current* global params (testing).

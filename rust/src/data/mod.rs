@@ -11,6 +11,7 @@
 
 pub mod init;
 pub mod partition;
+pub mod population;
 
 use crate::model::ShapeSpec;
 use crate::runtime::Tensor;
@@ -114,7 +115,7 @@ fn box_smooth(img: &mut [f32], h: usize, w: usize, c: usize, iters: usize) {
 }
 
 /// Shift a (h, w, c) image by (dy, dx), zero-filling borders.
-fn shift(img: &[f32], h: usize, w: usize, c: usize, dy: i64, dx: i64, out: &mut [f32]) {
+pub(crate) fn shift(img: &[f32], h: usize, w: usize, c: usize, dy: i64, dx: i64, out: &mut [f32]) {
     out.fill(0.0);
     for y in 0..h as i64 {
         for x in 0..w as i64 {
@@ -129,17 +130,16 @@ fn shift(img: &[f32], h: usize, w: usize, c: usize, dy: i64, dx: i64, out: &mut 
     }
 }
 
-/// Generate `n` samples of dataset `name` with the spec's input geometry.
-pub fn generate(spec: &ShapeSpec, name: &str, n: usize, seed: u64) -> Dataset {
-    let cfg = SynthConfig::for_dataset(name);
+/// Class templates for the spec's geometry, from the dataset-identity
+/// seed in `cfg` (stable across runs and across train/test splits).  Both
+/// the eager [`generate`] and the lazy per-client
+/// [`population::ClientSampler`] draw samples against these — ONE
+/// implementation keeps the two substrates pixel-compatible.
+pub fn class_templates(spec: &ShapeSpec, cfg: &SynthConfig) -> Vec<Vec<f32>> {
     let (h, w, c) = (spec.input_shape[0], spec.input_shape[1], spec.input_shape[2]);
     let e = h * w * c;
-    let classes = spec.classes;
-
-    // Class templates from the dataset-identity seed (stable across runs
-    // and across train/test splits).
     let mut trng = Pcg::new(cfg.seed, 0x7E47u64);
-    let templates: Vec<Vec<f32>> = (0..classes)
+    (0..spec.classes)
         .map(|_| {
             let mut t: Vec<f32> = (0..e).map(|_| trng.normal() as f32).collect();
             box_smooth(&mut t, h, w, c, cfg.template_smoothing);
@@ -150,7 +150,16 @@ pub fn generate(spec: &ShapeSpec, name: &str, n: usize, seed: u64) -> Dataset {
             t.iter_mut().for_each(|v| *v /= norm);
             t
         })
-        .collect();
+        .collect()
+}
+
+/// Generate `n` samples of dataset `name` with the spec's input geometry.
+pub fn generate(spec: &ShapeSpec, name: &str, n: usize, seed: u64) -> Dataset {
+    let cfg = SynthConfig::for_dataset(name);
+    let (h, w, c) = (spec.input_shape[0], spec.input_shape[1], spec.input_shape[2]);
+    let e = h * w * c;
+    let classes = spec.classes;
+    let templates = class_templates(spec, &cfg);
 
     let mut rng = Pcg::new(seed ^ cfg.seed.rotate_left(17), 0xDA7A);
     let mut x = vec![0.0f32; n * e];

@@ -1,0 +1,305 @@
+//! Lazy per-client data substrate for the virtual population
+//! (DESIGN.md §Population).
+//!
+//! The eager path ([`crate::data::generate`] + `Partition::indices` +
+//! [`crate::data::Batcher`]) materializes the whole federation's data up
+//! front — O(N·spc) memory, fine for tens of clients, fatal for a
+//! million.  [`ClientSampler`] replaces it with pure functions: sample
+//! `s` of client `i` is a deterministic function of
+//! `(run_seed, client_id, s)` alone, synthesized on demand against the
+//! SAME class templates ([`crate::data::class_templates`]) and the same
+//! per-sample transform (shift + scale + pixel noise) the eager
+//! generator applies.  A round materializes only the drawn cohort's
+//! batches; nothing about a client persists between rounds, so resident
+//! state is O(cohort · batch) however large N grows, and any derivation
+//! order yields identical bits (`tests/population.rs`).
+//!
+//! Partition strategies translate to per-client *label laws*:
+//! * `Iid` — every sample's class uniform over the classes;
+//! * `Dirichlet(α)` — client i draws a categorical p_i ~ Dir(α·1_C) from
+//!   its keyed stream once, then labels i.i.d. from p_i (the virtual
+//!   dual of the eager per-class Dirichlet allocation: same marginal
+//!   skew law, client-local instead of dataset-global);
+//! * `Shards(s)` — client i holds s seeded distinct classes, labels
+//!   uniform among them (pathological skew).
+//!
+//! Every client contributes the same `samples_per_client`, so the
+//! FedAvg weights ρ^n = |D^n|/|D| are uniformly 1/N — no O(N) weight
+//! vector needs to exist.
+
+use crate::data::partition::Partition;
+use crate::data::{class_templates, shift, SynthConfig};
+use crate::model::ShapeSpec;
+use crate::runtime::Tensor;
+use crate::util::rng::{mix2, mix3, Pcg};
+
+/// Pcg stream tag for the per-client label-law draw.
+const STREAM_LABEL: u64 = 0x1ABE;
+/// Pcg stream tag for per-sample synthesis (shared with the eager
+/// generator's sample stream so the transforms stay recognizably one
+/// substrate, though the seeding is per-sample here).
+const STREAM_SAMPLE: u64 = 0xDA7A;
+/// Pcg stream tag for a batch's with-replacement index draws.
+const STREAM_BATCH: u64 = 0xBA7C;
+
+/// A client's label law, derived once per batch from its keyed stream.
+enum LabelLaw {
+    Uniform,
+    /// Cumulative class probabilities (Dirichlet label skew).
+    Cumulative(Vec<f64>),
+    /// The distinct classes this client holds (shard skew).
+    Classes(Vec<usize>),
+}
+
+/// Stateless per-client sample source: any `(client, sample)` pair
+/// synthesizes on demand in O(pixels), independent of N and of what was
+/// derived before.
+#[derive(Clone, Debug)]
+pub struct ClientSampler {
+    input_shape: Vec<usize>,
+    classes: usize,
+    cfg: SynthConfig,
+    templates: Vec<Vec<f32>>,
+    /// Run-level sample-stream seed — the same
+    /// `seed ^ cfg.seed.rotate_left(17)` fold `generate` applies, so
+    /// train streams stay domain-separated from the test split.
+    data_seed: u64,
+    partition: Partition,
+    samples_per_client: usize,
+    batch: usize,
+}
+
+impl ClientSampler {
+    pub fn new(
+        spec: &ShapeSpec,
+        name: &str,
+        partition: Partition,
+        samples_per_client: usize,
+        seed: u64,
+    ) -> ClientSampler {
+        assert!(samples_per_client > 0, "empty client shards");
+        let cfg = SynthConfig::for_dataset(name);
+        ClientSampler {
+            input_shape: spec.input_shape.clone(),
+            classes: spec.classes,
+            templates: class_templates(spec, &cfg),
+            data_seed: seed ^ cfg.seed.rotate_left(17),
+            cfg,
+            partition,
+            samples_per_client,
+            batch: spec.train_batch,
+        }
+    }
+
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn samples_per_client(&self) -> usize {
+        self.samples_per_client
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Resident bytes one materialized batch occupies (x + one-hot y) —
+    /// the unit of the trainer's peak-residency accounting.
+    pub fn batch_bytes(&self) -> usize {
+        self.batch * (self.input_elems() + self.classes) * std::mem::size_of::<f32>()
+    }
+
+    /// Client `client`'s label law under the partition strategy.
+    fn label_law(&self, client: u64) -> LabelLaw {
+        match self.partition {
+            Partition::Iid => LabelLaw::Uniform,
+            Partition::Dirichlet(alpha) => {
+                let mut rng = Pcg::new(mix2(self.data_seed, client), STREAM_LABEL);
+                let p = rng.dirichlet(alpha, self.classes);
+                let mut cum = Vec::with_capacity(self.classes);
+                let mut acc = 0.0;
+                for v in p {
+                    acc += v;
+                    cum.push(acc);
+                }
+                LabelLaw::Cumulative(cum)
+            }
+            Partition::Shards(s) => {
+                let s = s.clamp(1, self.classes);
+                let mut rng = Pcg::new(mix2(self.data_seed, client), STREAM_LABEL);
+                let mut all: Vec<usize> = (0..self.classes).collect();
+                rng.shuffle(&mut all);
+                all.truncate(s);
+                LabelLaw::Classes(all)
+            }
+        }
+    }
+
+    /// Draw a class from the law using ONE uniform from `rng` (so every
+    /// law consumes the same sample-stream prefix).
+    fn draw_label(&self, law: &LabelLaw, rng: &mut Pcg) -> usize {
+        match law {
+            LabelLaw::Uniform => rng.below(self.classes),
+            LabelLaw::Cumulative(cum) => {
+                let u = rng.uniform();
+                cum.iter().position(|&c| u < c).unwrap_or(self.classes - 1)
+            }
+            LabelLaw::Classes(cs) => cs[rng.below(cs.len())],
+        }
+    }
+
+    /// Synthesize sample `s` of `client` into `row` (len = input elems);
+    /// returns its label.  Pure in `(data_seed, client, s)` — the same
+    /// shift + scale + pixel-noise transform the eager generator applies,
+    /// keyed per sample instead of drawn sequentially.
+    fn sample_into(&self, client: u64, s: u64, law: &LabelLaw, row: &mut [f32]) -> usize {
+        let (h, w, c) = (self.input_shape[0], self.input_shape[1], self.input_shape[2]);
+        let mut rng = Pcg::new(mix3(self.data_seed, client, s), STREAM_SAMPLE);
+        let cls = self.draw_label(law, &mut rng);
+        let dy = rng.below(2 * self.cfg.shift_max as usize + 1) as i64 - self.cfg.shift_max;
+        let dx = rng.below(2 * self.cfg.shift_max as usize + 1) as i64 - self.cfg.shift_max;
+        shift(&self.templates[cls], h, w, c, dy, dx, row);
+        let alpha = rng.range(0.8, 1.2) as f32;
+        for o in row.iter_mut() {
+            *o = alpha * *o + (self.cfg.noise * rng.normal()) as f32;
+        }
+        cls
+    }
+
+    /// One sample as an owned (pixels, label) pair — testing/diagnostics.
+    pub fn sample(&self, client: u64, s: u64) -> (Vec<f32>, usize) {
+        let law = self.label_law(client);
+        let mut row = vec![0.0f32; self.input_elems()];
+        let label = self.sample_into(client, s, &law, &mut row);
+        (row, label)
+    }
+
+    /// The batch client `client` trains on at global step `step`
+    /// (= round·τ + epoch): `train_batch` indices drawn with replacement
+    /// from the client's `samples_per_client`-sized virtual shard, each
+    /// synthesized on the spot.  Pure in `(data_seed, client, step)` —
+    /// identical bits whether it runs on the coordinator, a worker, or
+    /// twice (`tests/population.rs` pins derivation-order independence).
+    pub fn batch(&self, client: u64, step: u64) -> (Tensor, Tensor) {
+        let e = self.input_elems();
+        let k = self.batch;
+        let law = self.label_law(client);
+        let mut brng = Pcg::new(mix3(self.data_seed, client, step), STREAM_BATCH);
+        let mut xb = vec![0.0f32; k * e];
+        let mut yb = vec![0.0f32; k * self.classes];
+        for row in 0..k {
+            let s = brng.below(self.samples_per_client) as u64;
+            let label = self.sample_into(client, s, &law, &mut xb[row * e..(row + 1) * e]);
+            yb[row * self.classes + label] = 1.0;
+        }
+        let mut shape = vec![k];
+        shape.extend_from_slice(&self.input_shape);
+        (Tensor::new(xb, shape), Tensor::new(yb, vec![k, self.classes]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Manifest;
+
+    fn spec() -> ShapeSpec {
+        Manifest::builtin_with_batches(8, 32).for_dataset("mnist").unwrap().clone()
+    }
+
+    fn sampler(partition: Partition, seed: u64) -> ClientSampler {
+        ClientSampler::new(&spec(), "mnist", partition, 48, seed)
+    }
+
+    #[test]
+    fn samples_are_pure_functions_of_their_key() {
+        let a = sampler(Partition::Iid, 7);
+        let b = sampler(Partition::Iid, 7);
+        // Same key → same bits, regardless of instance or call order.
+        let (x1, l1) = a.sample(3, 5);
+        let _ = a.sample(900_000_000_000, 2); // interleave an unrelated derivation
+        let (x2, l2) = a.sample(3, 5);
+        let (x3, l3) = b.sample(3, 5);
+        assert_eq!(l1, l2);
+        assert_eq!(l1, l3);
+        assert_eq!(x1, x2);
+        assert_eq!(x1, x3);
+        // Different client / sample / seed all change the pixels.
+        assert_ne!(x1, a.sample(4, 5).0);
+        assert_ne!(x1, a.sample(3, 6).0);
+        assert_ne!(x1, sampler(Partition::Iid, 8).sample(3, 5).0);
+    }
+
+    #[test]
+    fn batches_are_deterministic_and_shaped() {
+        let s = sampler(Partition::Iid, 11);
+        let (x, y) = s.batch(2, 0);
+        assert_eq!(x.shape, vec![8, 28, 28, 1]);
+        assert_eq!(y.shape, vec![8, 10]);
+        for row in 0..8 {
+            let r = &y.data[row * 10..(row + 1) * 10];
+            assert_eq!(r.iter().sum::<f32>(), 1.0);
+        }
+        let (x2, y2) = s.batch(2, 0);
+        assert_eq!(x.data, x2.data);
+        assert_eq!(y.data, y2.data);
+        // Steps advance the stream; clients differ.
+        assert_ne!(x.data, s.batch(2, 1).0.data);
+        assert_ne!(x.data, s.batch(3, 0).0.data);
+        assert!(x.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn dirichlet_law_skews_labels_per_client() {
+        let s = sampler(Partition::Dirichlet(0.2), 13);
+        // With α = 0.2 at least one of the first clients should be
+        // visibly skewed: most common label > 30% of its draws.
+        let skewed = (0..8u64).any(|client| {
+            let mut hist = [0usize; 10];
+            for i in 0..200u64 {
+                hist[s.sample(client, i).1] += 1;
+            }
+            *hist.iter().max().unwrap() > 60
+        });
+        assert!(skewed, "no visible label skew at alpha=0.2");
+    }
+
+    #[test]
+    fn shards_law_restricts_the_label_set() {
+        let s = sampler(Partition::Shards(2), 17);
+        for client in 0..6u64 {
+            let mut seen = std::collections::BTreeSet::new();
+            for i in 0..100u64 {
+                seen.insert(s.sample(client, i).1);
+            }
+            assert!(seen.len() <= 2, "client {client} saw {} classes", seen.len());
+        }
+        // Different clients hold (mostly) different shards.
+        let shard_of = |client: u64| {
+            (0..100u64).map(|i| s.sample(client, i).1).collect::<std::collections::BTreeSet<_>>()
+        };
+        assert!((1..6u64).any(|c| shard_of(c) != shard_of(0)), "all clients share one shard");
+    }
+
+    #[test]
+    fn iid_law_covers_all_classes() {
+        let s = sampler(Partition::Iid, 19);
+        let mut seen = vec![false; 10];
+        for i in 0..300u64 {
+            seen[s.sample(0, i).1] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "some class never drawn");
+    }
+
+    #[test]
+    fn distant_clients_derive_in_constant_memory() {
+        // A u64-scale client id works exactly like a small one — nothing
+        // proportional to the id (or any population size) is allocated.
+        let s = sampler(Partition::Dirichlet(0.5), 23);
+        let (x, l) = s.sample(u64::MAX - 1, 0);
+        assert!(l < 10);
+        assert!(x.iter().all(|v| v.is_finite()));
+        let (bx, _) = s.batch(u64::MAX - 1, 7);
+        assert_eq!(bx.shape[0], 8);
+    }
+}

@@ -4,6 +4,7 @@ pub mod cli;
 pub mod csvio;
 pub mod json;
 pub mod logging;
+pub mod perm;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

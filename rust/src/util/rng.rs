@@ -15,6 +15,23 @@ pub fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Mix two words into one well-scrambled sub-seed.  The virtual
+/// population keys every per-client stream as
+/// `Pcg::new(mix2(run_seed, client_id), STREAM)` — a pure function of its
+/// inputs, so any client's state derives on demand in O(1) with no
+/// sequential draw order to replay (DESIGN.md §Population).
+#[inline]
+pub fn mix2(a: u64, b: u64) -> u64 {
+    let mut s = a ^ b.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    splitmix64(&mut s)
+}
+
+/// Three-way sub-seed mix (e.g. `(run_seed, round, client_id)`).
+#[inline]
+pub fn mix3(a: u64, b: u64, c: u64) -> u64 {
+    mix2(mix2(a, b), c)
+}
+
 /// PCG-XSH-RR 64/32: small, fast, statistically solid.
 #[derive(Clone, Debug)]
 pub struct Pcg {
@@ -151,6 +168,15 @@ impl Pcg {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn mix_is_deterministic_and_asymmetric() {
+        assert_eq!(mix2(1, 2), mix2(1, 2));
+        assert_ne!(mix2(1, 2), mix2(2, 1), "mix2 must not be symmetric");
+        assert_ne!(mix3(1, 2, 3), mix3(1, 3, 2), "mix3 must order its inputs");
+        // Streams keyed off consecutive ids must not correlate trivially.
+        assert_ne!(mix2(0, 1) ^ mix2(0, 2), mix2(0, 3) ^ mix2(0, 4));
+    }
 
     #[test]
     fn deterministic_across_instances() {

@@ -39,31 +39,40 @@ fn variance_term_minimized_by_equal_weights() {
 
 /// Empirical Remark 1: after the same number of rounds, smaller cuts reach
 /// a train loss at least as good as the largest cut (allowing noise slack).
-/// This is the mechanism behind Fig. 3.
+/// This is the mechanism behind Fig. 3.  Averaged over three seeds so a
+/// single lucky/unlucky init or batch stream cannot flip the comparison —
+/// the claim is about the expected curves, not one realization.
 #[test]
 fn empirical_smaller_cut_converges_no_worse() {
     let manifest = Manifest::builtin_with_batches(8, 32);
-    let loss_at = |cut: usize| {
-        let cfg = TrainConfig {
-            scheme: SchemeKind::SflGa,
-            num_clients: 3,
-            rounds: 5,
-            eval_every: 5,
-            samples_per_client: 48,
-            test_samples: 32,
-            seed: 11,
-            alloc: AllocPolicy::Equal,
-            ..Default::default()
-        };
-        let mut t = Trainer::native(&manifest, cfg).unwrap();
-        let stats = t.run(cut).unwrap();
-        stats.last().unwrap().test.unwrap().0
+    const SEEDS: [u64; 3] = [11, 29, 47];
+    let mean_loss_at = |cut: usize| {
+        let total: f64 = SEEDS
+            .iter()
+            .map(|&seed| {
+                let cfg = TrainConfig {
+                    scheme: SchemeKind::SflGa,
+                    num_clients: 3,
+                    rounds: 5,
+                    eval_every: 5,
+                    samples_per_client: 48,
+                    test_samples: 32,
+                    seed,
+                    alloc: AllocPolicy::Equal,
+                    ..Default::default()
+                };
+                let mut t = Trainer::native(&manifest, cfg).unwrap();
+                let stats = t.run(cut).unwrap();
+                stats.last().unwrap().test.unwrap().0
+            })
+            .sum();
+        total / SEEDS.len() as f64
     };
-    let l1 = loss_at(1);
-    let l4 = loss_at(4);
+    let l1 = mean_loss_at(1);
+    let l4 = mean_loss_at(4);
     assert!(
         l1 <= l4 * 1.10,
-        "v=1 loss {l1} should be <= v=4 loss {l4} (with 10% slack)"
+        "v=1 mean loss {l1} should be <= v=4 mean loss {l4} (with 10% slack, 3 seeds)"
     );
 }
 

@@ -1,0 +1,182 @@
+//! Virtual-population contracts (DESIGN.md §Population):
+//!
+//! 1. The lazy O(cohort) path (`Trainer::run`) is BITWISE the dense
+//!    policy path (`draw_channel` + `run_round`) at a population size
+//!    where materializing anything per-client would be visible — both
+//!    evaluate the same keyed pure functions, restricted to the cohort.
+//! 2. Derivation order cannot matter: querying population facts in any
+//!    interleaving (scattered clients, later draws first) never perturbs
+//!    a subsequent training run — per-client state is a pure function of
+//!    `(run_seed, client_id)`, not of what was derived before it.
+//! 3. Resident per-round population state is O(cohort): its peak is a
+//!    function of the cohort size alone, equal across population sizes
+//!    that differ by 10× (the bound `benches/bench_population.rs` then
+//!    pushes to N = 10⁶).
+//! 4. Schemes that inherently keep one model replica per client reject
+//!    populations past `MAX_PER_CLIENT_REPLICAS` instead of allocating.
+
+use sfl_ga::coordinator::trainer::MAX_PER_CLIENT_REPLICAS;
+use sfl_ga::coordinator::{AllocPolicy, SchemeKind, TrainConfig, Trainer};
+use sfl_ga::data::partition::Partition;
+use sfl_ga::model::Manifest;
+use sfl_ga::scenario::{ScenarioConfig, StragglerConfig};
+
+fn manifest() -> Manifest {
+    Manifest::builtin_with_batches(8, 32)
+}
+
+/// N-client config at participation `part` — small per-round work however
+/// large N is (the cohort is what gets materialized).
+fn pop_cfg(num_clients: usize, part: f64, rounds: usize) -> TrainConfig {
+    TrainConfig {
+        scheme: SchemeKind::SflGa,
+        num_clients,
+        rounds,
+        eval_every: rounds,
+        samples_per_client: 16,
+        test_samples: 32,
+        seed: 23,
+        threads: 1,
+        alloc: AllocPolicy::Equal,
+        scenario: ScenarioConfig {
+            partition: Partition::Dirichlet(0.3),
+            participation: part,
+            straggler: StragglerConfig { frac: 0.1, factor: 4.0 },
+        },
+        ..Default::default()
+    }
+}
+
+/// Everything a run observes, as raw bits.
+fn fingerprint(stats: &[sfl_ga::coordinator::RoundStats], t: &Trainer, cut: usize) -> Vec<u64> {
+    let mut bits = Vec::new();
+    for s in stats {
+        bits.push(s.participants as u64);
+        bits.push(s.train_loss.to_bits());
+        bits.push(s.comm.total_bits().to_bits());
+        bits.push(s.latency.total().to_bits());
+        if let Some((tl, ta)) = s.test {
+            bits.push(tl.to_bits());
+            bits.push(ta.to_bits());
+        }
+    }
+    bits.extend(t.global_params(cut).iter().flatten().map(|v| u64::from(v.to_bits())));
+    bits
+}
+
+/// Contract 1: at N = 10_000 the lazy cohort-only derivation inside
+/// `run` agrees bitwise with the dense `draw_channel` + `run_round`
+/// policy loop (which materializes all 10_000 gains per round and then
+/// restricts them to the cohort).
+#[test]
+fn lazy_cohort_run_matches_dense_policy_loop_bitwise_at_10k_clients() {
+    let n = 10_000;
+    let rounds = 2;
+    // participation 1e-3 → cohort of exactly ⌈10⌉ clients per round.
+    let mut lazy = Trainer::native(&manifest(), pop_cfg(n, 1e-3, rounds)).unwrap();
+    let lazy_stats = lazy.run(2).unwrap();
+    assert!(lazy_stats.iter().all(|s| s.participants == 10));
+
+    let mut dense = Trainer::native(&manifest(), pop_cfg(n, 1e-3, rounds)).unwrap();
+    let mut dense_stats = Vec::new();
+    for _ in 0..rounds {
+        let state = dense.draw_channel();
+        assert_eq!(state.gains.len(), n, "the policy surface is the dense channel");
+        dense_stats.push(dense.run_round(2, &state).unwrap());
+    }
+    assert_eq!(
+        fingerprint(&lazy_stats, &lazy, 2),
+        fingerprint(&dense_stats, &dense, 2),
+        "lazy cohort derivation diverges from the dense channel restriction"
+    );
+}
+
+/// Contract 2: deriving population facts out of order — scattered client
+/// ids, future channel draws, future cohorts, all BEFORE training — is
+/// invisible to the run.  (Stateful streams would fail this: any query
+/// would advance them.)
+#[test]
+fn derivation_order_is_invisible_to_training() {
+    let n = 10_000;
+    let mut plain = Trainer::native(&manifest(), pop_cfg(n, 1e-3, 2)).unwrap();
+    let a = {
+        let s = plain.run(2).unwrap();
+        fingerprint(&s, &plain, 2)
+    };
+
+    let mut probed = Trainer::native(&manifest(), pop_cfg(n, 1e-3, 2)).unwrap();
+    {
+        let pop = probed.population();
+        // Scattered, repeated, reversed: capacities and gains for clients
+        // the run may or may not touch, future draws before past ones.
+        for &i in &[9_999u64, 0, 4_821, 77, 9_999, 3] {
+            let _ = pop.capacity(i);
+            let _ = pop.gain_at(42, i);
+            let _ = pop.gain_at(0, i);
+            let _ = pop.is_straggler(i);
+        }
+        let _ = pop.cohort(17);
+        let _ = pop.cohort(0);
+        let _ = pop.caps_dense();
+    }
+    let b = {
+        let s = probed.run(2).unwrap();
+        fingerprint(&s, &probed, 2)
+    };
+    assert_eq!(a, b, "probing the population perturbed the training run");
+}
+
+/// Contract 3: peak resident population state is a function of the
+/// cohort, not of N — equal bytes for equal cohorts at N and 10·N.
+#[test]
+fn peak_resident_state_depends_on_cohort_not_population() {
+    let run_peak = |n: usize, part: f64| {
+        let mut t = Trainer::native(&manifest(), pop_cfg(n, part, 1)).unwrap();
+        let stats = t.run(2).unwrap();
+        (stats[0].participants, t.peak_resident_population_bytes())
+    };
+    // Same cohort K = 50 from populations 10× apart.
+    let (k_small, peak_small) = run_peak(1_000, 0.05);
+    let (k_big, peak_big) = run_peak(10_000, 0.005);
+    assert_eq!(k_small, 50);
+    assert_eq!(k_big, 50);
+    assert_eq!(
+        peak_small, peak_big,
+        "peak resident population state must depend on the cohort only"
+    );
+    assert!(peak_small > 0, "peak accounting never ran");
+    // A bigger cohort from the SAME population costs more.
+    let (k2, peak2) = run_peak(1_000, 0.1);
+    assert_eq!(k2, 100);
+    assert!(peak2 > peak_small, "resident state must scale with the cohort");
+}
+
+/// Contract 4: per-replica schemes are bounded, with a clear error —
+/// and the bound is checked before any O(N) allocation happens.
+#[test]
+fn per_replica_schemes_reject_oversized_populations() {
+    for scheme in [SchemeKind::Sfl, SchemeKind::Psl, SchemeKind::SflGaDrift] {
+        let cfg = TrainConfig {
+            scheme,
+            num_clients: MAX_PER_CLIENT_REPLICAS + 1,
+            ..pop_cfg(4, 1e-3, 1)
+        };
+        let err = Trainer::native(&manifest(), cfg)
+            .err()
+            .expect("oversized per-replica population must be rejected")
+            .to_string();
+        assert!(
+            err.contains("replica per client"),
+            "{scheme:?}: unexpected error: {err}"
+        );
+    }
+    // The shared-model schemes take the same population in stride.
+    for scheme in [SchemeKind::SflGa, SchemeKind::Fl] {
+        let cfg = TrainConfig {
+            scheme,
+            num_clients: MAX_PER_CLIENT_REPLICAS + 1,
+            ..pop_cfg(4, 1e-3, 1)
+        };
+        assert!(Trainer::native(&manifest(), cfg).is_ok(), "{scheme:?} must scale past the bound");
+    }
+}
