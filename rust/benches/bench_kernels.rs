@@ -13,6 +13,7 @@ use std::collections::BTreeMap;
 
 use sfl_ga::benchlib::{self, bench};
 use sfl_ga::model::Manifest;
+use sfl_ga::runtime::native::gemm::{self, Epilogue, MatView, Tier};
 use sfl_ga::runtime::native::ops::{self, Geom};
 use sfl_ga::runtime::native::reference;
 use sfl_ga::runtime::Scratch;
@@ -193,6 +194,41 @@ fn main() -> anyhow::Result<()> {
     );
     println!("scratch high-water: {} KiB", scratch.capacity_bytes() / 1024);
 
+    // Tier face-off: the identical blocked GEMM through the portable vs
+    // the SIMD microkernel at an fc1-like shape.  On hosts without
+    // AVX2+FMA, `Tier::supported` clamps both runs to the portable kernel
+    // and the speedup reports ~1.0 (the JSON's `gemm_tier` says which).
+    let (tm, tn, tk) = if benchlib::quick() { (64, 128, 512) } else { (256, 512, 3136) };
+    let ta = gen_vec(41_000_000, tm * tk);
+    let tb = gen_vec(42_000_000, tk * tn);
+    let tbias = gen_vec(43_000_000, tn);
+    let mut tc = vec![0.0f32; tm * tn];
+    let (mut pa, mut pb) = (Vec::new(), Vec::new());
+    let tier_iters = benchlib::iters(30, 5);
+    let mut tier_ns = [0.0f64; 2];
+    for (slot, tier) in [Tier::Portable, Tier::Avx2].into_iter().enumerate() {
+        let r = bench(&format!("gemm_{tm}x{tn}x{tk}/{}", tier.name()), 2, tier_iters, || {
+            gemm::gemm_with_tier(
+                tier,
+                &mut tc,
+                tm,
+                tn,
+                tk,
+                MatView::rows(&ta, tk),
+                MatView::rows(&tb, tn),
+                Epilogue::BiasRelu(&tbias),
+                false,
+                &mut pa,
+                &mut pb,
+            );
+            tc[0]
+        });
+        tier_ns[slot] = r.mean_ns;
+    }
+    let simd_speedup = tier_ns[0] / tier_ns[1];
+    let active = Tier::Avx2.supported();
+    println!("simd tier ({}) vs portable at {tm}x{tn}x{tk}: {simd_speedup:.2}x", active.name());
+
     let mut ops_json = BTreeMap::new();
     for row in &rows {
         ops_json.insert(row.name.clone(), row.json());
@@ -203,6 +239,8 @@ fn main() -> anyhow::Result<()> {
     root.insert("shape_key".to_string(), Json::Str(spec.key.clone()));
     root.insert("train_batch".to_string(), Json::Num(b as f64));
     root.insert("conv_fwd_bwd_speedup".to_string(), Json::Num(conv_speedup));
+    root.insert("gemm_tier".to_string(), Json::Str(active.name().to_string()));
+    root.insert("simd_vs_portable_speedup".to_string(), Json::Num(simd_speedup));
     root.insert(
         "scratch_bytes".to_string(),
         Json::Num(scratch.capacity_bytes() as f64),

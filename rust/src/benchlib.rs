@@ -12,14 +12,20 @@
 //! numbers; the JSON marks the mode so downstream tooling never mixes
 //! them.
 
+use std::sync::OnceLock;
 use std::time::Instant;
 
 use crate::util::stats::{percentile, Running};
 
 /// True when the `SFLGA_BENCH_QUICK` environment variable is set to
-/// anything but `0`: bench targets shrink to smoke proportions.
+/// anything but `0`: bench targets shrink to smoke proportions.  The env
+/// var is read once and cached — bench loops call this per size decision,
+/// and the mode cannot meaningfully change mid-process anyway.
 pub fn quick() -> bool {
-    std::env::var_os("SFLGA_BENCH_QUICK").is_some_and(|v| v != "0" && !v.is_empty())
+    static QUICK: OnceLock<bool> = OnceLock::new();
+    *QUICK.get_or_init(|| {
+        std::env::var_os("SFLGA_BENCH_QUICK").is_some_and(|v| v != "0" && !v.is_empty())
+    })
 }
 
 /// Pick an iteration (or size) count by mode: `full` normally,

@@ -319,6 +319,13 @@ impl Trainer {
         let (pop, sampler, test, params) = Trainer::derive_seeded(&cfg, &spec)?;
         let client_side = ClientSide::for_scheme(cfg.scheme, cfg.num_clients, &params)?;
         let pool = ParallelExecutor::new(cfg.threads);
+        // Grant eval calls the pool capacity its batch fan-out cannot fill:
+        // with fewer eval batches than workers, each eval job may split its
+        // dense GEMMs across the idle share.  Bitwise-neutral by the
+        // Backend contract, so the threads=N ≡ threads=1 guarantee and
+        // every recorded metric are unaffected.
+        let eval_jobs = cfg.test_samples.div_ceil(spec.eval_batch).max(1);
+        rt.set_eval_parallelism((pool.threads() / eval_jobs).max(1));
         Ok(Trainer {
             rt,
             pool,

@@ -15,7 +15,7 @@
 //!   identical outputs (the coordinator's seeding guarantees rely on it).
 //! * Every role is a PURE function of its arguments, and the trait is
 //!   `Send + Sync`: the round engine's [`super::ParallelExecutor`] issues
-//!   per-client calls from concurrent `std::thread::scope` workers against
+//!   per-client calls from its persistent pool workers against
 //!   one shared backend instance, and the bitwise threads=N ≡ threads=1
 //!   guarantee (`tests/determinism.rs`) holds only if no call observes
 //!   mutable state from another.  Cache or pool internally behind locks if
@@ -147,5 +147,16 @@ pub trait Backend: Send + Sync {
     ) -> anyhow::Result<(f32, f32)> {
         let _ = scratch;
         self.eval(w, x, y1h)
+    }
+
+    /// Hint: up to `workers` extra threads may be used INSIDE one
+    /// `eval`/`eval_with` call (the trainer grants the pool capacity its
+    /// eval jobs cannot fill on their own).  Like scratch, this is an
+    /// OPTIMIZATION channel only — results must be bitwise identical for
+    /// every value (the native backend splits large dense GEMMs by output
+    /// column, which touches no element's summation order).  The default
+    /// ignores the hint.
+    fn set_eval_parallelism(&self, workers: usize) {
+        let _ = workers;
     }
 }

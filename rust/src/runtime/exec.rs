@@ -1,14 +1,15 @@
 //! Typed execution facade: a backend-agnostic [`ModelRuntime`] that the
 //! coordinator, figures and examples talk to, plus the [`ParallelExecutor`]
-//! that fans independent per-client backend calls across scoped worker
-//! threads, each owning a reusable kernel [`Scratch`](super::Scratch)
-//! arena.  The actual
-//! compute lives behind the [`Backend`] trait — the pure-Rust
-//! [`NativeBackend`] by default, the PJRT engine pool with
+//! that fans independent per-client backend calls across a PERSISTENT
+//! worker pool — spawned once at construction, each worker owning a
+//! reusable kernel [`Scratch`](super::Scratch) arena for its whole
+//! lifetime.  The actual compute lives behind the [`Backend`] trait — the
+//! pure-Rust [`NativeBackend`] by default, the PJRT engine pool with
 //! `--features pjrt`.
 
+use std::marker::PhantomData;
 use std::sync::mpsc;
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 use crate::model::{Manifest, ShapeSpec};
 use crate::tensor::Params;
@@ -41,42 +42,58 @@ pub fn resolve_threads(requested: usize) -> usize {
 
 /// Fans independent per-index jobs (the per-client `client_fwd` /
 /// `server_grad` / `client_grad` / `full_grad` calls of a round phase)
-/// across `std::thread::scope` workers, in two flavors:
+/// across a PERSISTENT worker pool, in two flavors:
 ///
 /// * [`ParallelExecutor::map`] / [`ParallelExecutor::map_with_scratch`] —
 ///   a bulk-synchronous fan-out: all `n` jobs are known up front, the
-///   call returns when every one finished.  Worker `k` of `w` computes
-///   indices `k, k+w, k+2w, …`.
+///   call returns when every one finished, results in index order.
 /// * [`ParallelExecutor::session`] — the dependency-driven *pipelined*
 ///   API: jobs are submitted one at a time ([`TaskSession::submit`]) into
-///   a shared queue, each returning a [`JobHandle`] (a per-job completion
+///   the pool queue, each returning a [`JobHandle`] (a per-job completion
 ///   channel).  Workers drain the queue as fast as their current job
 ///   allows, so a long chain submitted for participant 0 never stalls
 ///   participant 1's — the round engine fuses client-fwd → server FP/BP
 ///   (→ client-bwd) into ONE submitted chain per participant and only
 ///   barriers where the math does (the eq-5 broadcast aggregation).
 ///
-/// The executor owns one kernel [`Scratch`](super::Scratch) arena per
-/// worker thread; both APIs hand worker `k` its own arena handle, so the
-/// backend's im2col/packing buffers are reused across every job a worker
-/// runs, with zero cross-worker contention.
+/// Pool lifecycle: `new` spawns `threads` OS workers ONCE; they live
+/// until the executor drops (which closes the queue and joins them).
+/// Worker `k` owns `arenas[k]` — one kernel
+/// [`Scratch`](super::Scratch) arena per worker — for its whole lifetime,
+/// so the backend's im2col/packing buffers stay warm across every map
+/// call, session, and round of training, with zero cross-worker
+/// contention and zero per-session thread spawns.  A session is just a
+/// QUEUE EPOCH: submitted jobs carry a ticket on the session's completion
+/// counter, and closing the session blocks until the count drains to
+/// zero — that drain is the barrier that lets jobs borrow caller state
+/// (`'env`) while the queue itself is `'static`.
 ///
 /// Determinism contract (both APIs): results come back in *submission /
-/// index order* — `map` scatters into index slots, `session` buffers each
-/// result in its handle's channel so the caller collects in whatever
-/// fixed order it likes, regardless of completion order.  Jobs must be
-/// pure functions of their inputs (the [`Backend`] contract: scratch
-/// contents never influence results), so which worker runs a job — and
-/// when it completes relative to its peers — cannot affect any value.
-/// That makes `threads = N` bitwise equal to `threads = 1` even though
-/// the pipelined path executes jobs in a nondeterministic real-time
-/// order (`tests/determinism.rs`).
+/// index order* — `map` collects handles in index order, `session`
+/// buffers each result in its handle's channel so the caller collects in
+/// whatever fixed order it likes, regardless of completion order.  Jobs
+/// must be pure functions of their inputs (the [`Backend`] contract:
+/// scratch contents never influence results), so which worker runs a job
+/// — and when it completes relative to its peers — cannot affect any
+/// value.  That makes `threads = N` bitwise equal to `threads = 1` even
+/// though the pool executes jobs in a nondeterministic real-time order
+/// (`tests/determinism.rs`).
+///
+/// A panicking job does NOT kill its worker: the panic is caught, the
+/// job's waiter gets a "worker panicked" error from
+/// [`JobHandle::wait`], and the pool keeps serving (`pool_survives_job_panics`).
 pub struct ParallelExecutor {
     threads: usize,
-    /// One arena per worker; `arenas[k]` is only ever locked by worker
-    /// `k` during a `map_with_scratch` call (and by the caller thread on
-    /// the serial path, which uses `arenas[0]`).
+    /// One arena per worker; worker `k` holds a clone of `arenas[k]` and
+    /// is its only hot-path locker (the caller thread uses `arenas[0]`
+    /// directly on the serial path).
     arenas: Vec<ScratchHandle>,
+    /// Sending half of the persistent pool queue (`None` when
+    /// `threads <= 1`: the serial path never spawns).  Dropped first in
+    /// `Drop` to end every worker's `recv` loop.
+    injector: Option<mpsc::Sender<PoolJob>>,
+    /// The pool threads, joined on drop.
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl ParallelExecutor {
@@ -84,8 +101,45 @@ impl ParallelExecutor {
     /// job inline on the caller thread (no spawns at all).
     pub fn new(requested: usize) -> ParallelExecutor {
         let threads = resolve_threads(requested);
-        let arenas = (0..threads).map(|_| ScratchHandle::new()).collect();
-        ParallelExecutor { threads, arenas }
+        let arenas: Vec<ScratchHandle> = (0..threads).map(|_| ScratchHandle::new()).collect();
+        let (injector, workers) = if threads > 1 {
+            let (tx, rx) = mpsc::channel::<PoolJob>();
+            let queue = Arc::new(Mutex::new(rx));
+            let workers = arenas
+                .iter()
+                .map(|arena| {
+                    let queue = Arc::clone(&queue);
+                    let arena = arena.clone();
+                    std::thread::spawn(move || {
+                        loop {
+                            // Dequeue under the lock, run with it released.
+                            let job = {
+                                let q = queue.lock().unwrap_or_else(|e| e.into_inner());
+                                q.recv()
+                            };
+                            match job {
+                                // Catch job panics so one bad job cannot
+                                // kill the worker for the rest of the
+                                // process: the job's epoch ticket and
+                                // result sender drop inside the catch, so
+                                // its waiter errors and its session still
+                                // drains.
+                                Ok(job) => {
+                                    let _ = std::panic::catch_unwind(
+                                        std::panic::AssertUnwindSafe(|| job(&arena)),
+                                    );
+                                }
+                                Err(_) => break, // executor dropped: queue closed
+                            }
+                        }
+                    })
+                })
+                .collect();
+            (Some(tx), workers)
+        } else {
+            (None, Vec::new())
+        };
+        ParallelExecutor { threads, arenas, injector, workers }
     }
 
     /// The resolved worker count.
@@ -95,7 +149,7 @@ impl ParallelExecutor {
 
     /// Compute `f(0..n)`, in parallel when the executor has more than one
     /// worker, returning results in index order.  The first error (in
-    /// index order of the worker that hit it) aborts the round.
+    /// index order) aborts the round.
     pub fn map<T, F>(&self, n: usize, f: F) -> anyhow::Result<Vec<T>>
     where
         T: Send,
@@ -107,54 +161,39 @@ impl ParallelExecutor {
     /// [`ParallelExecutor::map`] where each job additionally receives its
     /// worker's scratch arena — the round engine's hot path (backends
     /// reuse kernel intermediates across all the jobs a worker runs).
+    /// Implemented as one [`ParallelExecutor::session`] submitting all
+    /// `n` jobs up front and collecting the handles in index order.
     pub fn map_with_scratch<T, F>(&self, n: usize, f: F) -> anyhow::Result<Vec<T>>
     where
         T: Send,
         F: Fn(&ScratchHandle, usize) -> anyhow::Result<T> + Sync,
     {
-        let w = self.threads.min(n);
-        if w <= 1 {
+        if self.threads <= 1 || n <= 1 {
             let scratch = &self.arenas[0];
             return (0..n).map(|i| f(scratch, i)).collect();
         }
         let f = &f;
-        let arenas = &self.arenas;
-        let mut out: Vec<Option<T>> = Vec::with_capacity(n);
-        out.resize_with(n, || None);
-        std::thread::scope(|s| -> anyhow::Result<()> {
-            let handles: Vec<_> = (0..w)
-                .map(|k| {
-                    s.spawn(move || -> anyhow::Result<Vec<(usize, T)>> {
-                        let scratch = &arenas[k];
-                        (k..n).step_by(w).map(|i| Ok((i, f(scratch, i)?))).collect()
-                    })
-                })
-                .collect();
-            for h in handles {
-                let part = h.join().expect("round worker panicked")?;
-                for (i, v) in part {
-                    out[i] = Some(v);
-                }
-            }
-            Ok(())
-        })?;
-        Ok(out.into_iter().map(|v| v.expect("worker skipped an index")).collect())
+        self.session(|sess| {
+            let handles: Vec<_> =
+                (0..n).map(|i| sess.submit(move |scratch| f(scratch, i))).collect();
+            handles.into_iter().map(JobHandle::wait).collect()
+        })
     }
 
     /// Open a pipelined task session: `f` receives a [`TaskSession`] it
     /// can [`submit`](TaskSession::submit) jobs into at any point; every
-    /// submitted job runs on one of this executor's workers (each with
-    /// its own scratch arena) and reports through its [`JobHandle`].
+    /// submitted job runs on one of the pool's persistent workers (each
+    /// with its own scratch arena) and reports through its [`JobHandle`].
     ///
-    /// Unlike [`ParallelExecutor::map`], there is no per-phase barrier:
-    /// a job starts the moment a worker frees up, so independent chains
-    /// overlap and late submissions (e.g. a deferred evaluation) ride the
-    /// same queue as the round's fan-out.  The session itself IS a
-    /// barrier at close: `session` returns only after every submitted job
-    /// completed (scoped-thread join), so borrows captured by jobs are
-    /// released when the call returns.  Handles may outlive the session —
-    /// each buffers its result — which is how the round engine collects a
-    /// deferred eval submitted into an earlier phase.
+    /// Unlike a per-phase barrier, a job starts the moment a worker frees
+    /// up, so independent chains overlap and late submissions (e.g. a
+    /// deferred evaluation) ride the same queue as the round's fan-out.
+    /// The session itself IS a barrier at close: `session` returns only
+    /// after every submitted job completed (the epoch drain), so borrows
+    /// captured by jobs are released when the call returns.  Handles may
+    /// outlive the session — each buffers its result — which is how the
+    /// round engine collects a deferred eval submitted into an earlier
+    /// phase.
     ///
     /// With one thread, `submit` runs each job eagerly inline (arena 0) —
     /// the fully serial schedule the determinism suite compares against.
@@ -163,50 +202,132 @@ impl ParallelExecutor {
         f: impl FnOnce(&TaskSession<'env>) -> anyhow::Result<R>,
     ) -> anyhow::Result<R> {
         if self.threads <= 1 {
-            return f(&TaskSession { tx: None, serial_arena: Some(&self.arenas[0]) });
+            return f(&TaskSession {
+                injector: None,
+                epoch: None,
+                serial_arena: Some(&self.arenas[0]),
+                _variance: PhantomData,
+            });
         }
-        let (tx, rx) = mpsc::channel::<Job<'env>>();
-        let queue = Mutex::new(rx);
-        std::thread::scope(|s| {
-            for arena in &self.arenas {
-                let queue = &queue;
-                s.spawn(move || {
-                    loop {
-                        // Dequeue under the lock, run with it released.
-                        let job = {
-                            let q = queue.lock().expect("session queue poisoned");
-                            q.recv()
-                        };
-                        match job {
-                            Ok(job) => job(arena),
-                            Err(_) => break, // session closed and queue drained
-                        }
-                    }
-                });
-            }
-            let sess = TaskSession { tx: Some(tx), serial_arena: None };
-            f(&sess)
-            // `sess` (and its Sender) drop here; workers drain what is
-            // left in the queue, then exit; the scope joins them all.
-        })
+        let epoch = Arc::new(EpochState::default());
+        // Declared BEFORE `sess` so that on unwind the session drops
+        // first and the guard still blocks until every already-submitted
+        // job finished — only then may the `'env` borrows those jobs
+        // captured go away.
+        let drain = DrainGuard(&epoch);
+        let sess = TaskSession {
+            injector: self.injector.as_ref(),
+            epoch: Some(Arc::clone(&epoch)),
+            serial_arena: None,
+            _variance: PhantomData,
+        };
+        let out = f(&sess);
+        drop(sess);
+        drop(drain); // the epoch barrier: all submitted jobs completed
+        out
+    }
+}
+
+impl Drop for ParallelExecutor {
+    fn drop(&mut self) {
+        // Closing the injector ends every worker's `recv` loop; join so
+        // no detached thread outlives the executor.
+        drop(self.injector.take());
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
     }
 }
 
 // ---------------------------------------------------------------- sessions
 
-/// A queued unit of work: runs on some worker with that worker's arena.
-type Job<'env> = Box<dyn FnOnce(&ScratchHandle) + Send + 'env>;
+/// A queued unit of work: runs on some pool worker with that worker's
+/// arena.  `'env` is the lifetime of the borrows the job captures.
+type EnvJob<'env> = Box<dyn FnOnce(&ScratchHandle) + Send + 'env>;
+
+/// What actually travels through the persistent pool queue: a
+/// lifetime-erased [`EnvJob`] (see the SAFETY argument in
+/// [`TaskSession::submit`] — the session's epoch drain is what makes the
+/// erasure sound).
+type PoolJob = EnvJob<'static>;
+
+/// One session's completion accounting: `outstanding` counts submitted-
+/// but-unfinished jobs; the session close blocks on it reaching zero.
+#[derive(Default)]
+struct EpochState {
+    outstanding: Mutex<usize>,
+    done: Condvar,
+}
+
+impl EpochState {
+    /// Poison-tolerant lock: the counter is updated in tiny panic-free
+    /// sections, and the drain runs in `Drop` where a second panic would
+    /// abort the process.
+    fn count(&self) -> MutexGuard<'_, usize> {
+        self.outstanding.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn enter(&self) {
+        *self.count() += 1;
+    }
+
+    fn exit(&self) {
+        let mut n = self.count();
+        *n -= 1;
+        if *n == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every entered job has exited.
+    fn drain(&self) {
+        let mut n = self.count();
+        while *n > 0 {
+            n = self.done.wait(n).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// Held by an in-flight job; dropping it (normal return, panic, or the
+/// job never reaching a worker) exits the epoch — the drain barrier
+/// counts COMPLETION, not submission.
+struct EpochTicket(Arc<EpochState>);
+
+impl Drop for EpochTicket {
+    fn drop(&mut self) {
+        self.0.exit();
+    }
+}
+
+/// Blocks on the session's epoch when dropped — including during unwind,
+/// so a panicking session body still waits for its in-flight jobs before
+/// their borrows die.
+struct DrainGuard<'a>(&'a EpochState);
+
+impl Drop for DrainGuard<'_> {
+    fn drop(&mut self) {
+        self.0.drain();
+    }
+}
 
 /// A pipelined job-submission scope (see [`ParallelExecutor::session`]).
 /// Jobs submitted here may borrow anything that outlives the `session`
 /// call — the round engine submits zero-copy closures over the live
 /// `wc`/`ws` parameter slices exactly like the `map` path.
 pub struct TaskSession<'env> {
-    /// Parallel path: the shared job queue feeding the session's workers.
-    tx: Option<mpsc::Sender<Job<'env>>>,
+    /// Parallel path: the executor's persistent pool queue.
+    injector: Option<&'env mpsc::Sender<PoolJob>>,
+    /// Parallel path: this session's completion epoch — every submitted
+    /// job holds a ticket; session close drains to zero.
+    epoch: Option<Arc<EpochState>>,
     /// Serial path (`threads == 1`): jobs execute eagerly on this arena
     /// at submit time — the reference schedule.
     serial_arena: Option<&'env ScratchHandle>,
+    /// Force invariance in `'env`: jobs are lifetime-erased on their way
+    /// into the `'static` pool queue ([`TaskSession::submit`]'s
+    /// transmute), so the compiler must never be allowed to shrink a
+    /// session's `'env` and admit shorter-lived borrows.
+    _variance: PhantomData<fn(&'env ()) -> &'env ()>,
 }
 
 impl<'env> TaskSession<'env> {
@@ -222,17 +343,39 @@ impl<'env> TaskSession<'env> {
         if let Some(arena) = self.serial_arena {
             return JobHandle { rx: None, eager: Some(job(arena)) };
         }
+        let epoch = self.epoch.as_ref().expect("parallel session has an epoch");
+        epoch.enter();
+        let ticket = EpochTicket(Arc::clone(epoch));
         let (rtx, rrx) = mpsc::channel();
-        let boxed: Job<'env> = Box::new(move |scratch| {
-            // A dropped receiver just means the caller abandoned the
-            // handle (e.g. an earlier job already errored the round).
+        let boxed: EnvJob<'env> = Box::new(move |scratch| {
+            // The ticket drops (epoch exit) only after the job body AND
+            // the result send, panics included — the drain barrier counts
+            // real completion.  A dropped receiver just means the caller
+            // abandoned the handle (e.g. an earlier job already errored
+            // the round).
+            let _ticket = ticket;
             let _ = rtx.send(job(scratch));
         });
-        self.tx
-            .as_ref()
-            .expect("parallel session has a queue")
-            .send(boxed)
-            .expect("session workers exited before the session closed");
+        // SAFETY: erasing `'env` to `'static` is sound because no borrow
+        // the job captures can end before the job has fully run: (1) the
+        // session's `DrainGuard` blocks the `session` call (normal return
+        // AND unwind) until this job's ticket dropped, i.e. until after
+        // the closure executed or was destroyed unrun; (2) `'env` strictly
+        // outlives that `session` call — it is a universal region of
+        // `ParallelExecutor::session`, bounded below by the drain; (3)
+        // `TaskSession` is invariant in `'env` (`_variance`), so callers
+        // cannot shrink the session's region to sneak in shorter-lived
+        // borrows; (4) the queue itself (`&'env self`) outlives the
+        // session.  The erased job thus never observes a dangling
+        // reference even though its type says `'static`.
+        let job = unsafe { std::mem::transmute::<EnvJob<'env>, PoolJob>(boxed) };
+        let sent = self
+            .injector
+            .expect("parallel session has the pool injector")
+            .send(job);
+        // A send failure returns the job — dropping it releases the
+        // ticket, so the session cannot deadlock on a dead pool.
+        sent.expect("executor workers exited before the session closed");
         JobHandle { rx: Some(rrx), eager: None }
     }
 }
@@ -416,6 +559,12 @@ impl ModelRuntime {
         self.backend.eval_with(scratch, w, x, y1h)
     }
 
+    /// Grant eval calls up to `workers` internal threads — see
+    /// [`Backend::set_eval_parallelism`]; bitwise-neutral by contract.
+    pub fn set_eval_parallelism(&self, workers: usize) {
+        self.backend.set_eval_parallelism(workers);
+    }
+
     /// Train-batch input shape [batch, h, w, c].
     pub fn input_shape(&self, batch: usize) -> Vec<usize> {
         let mut s = vec![batch];
@@ -473,30 +622,72 @@ mod tests {
 
     #[test]
     fn map_with_scratch_hands_each_worker_one_arena() {
-        // Workers leave a breadcrumb in their arena: every job a worker
-        // ran must have seen the same arena, and arenas stay warm across
-        // map calls (the reuse property the kernels rely on).
+        // Jobs leave a breadcrumb in whichever worker arena they ran on:
+        // across the pool's arenas every job must have landed exactly
+        // once (queue scheduling is dynamic, so no per-index assignment
+        // is assumed), and the arenas stay warm across map calls — the
+        // reuse property the kernels rely on.
         let ex = ParallelExecutor::new(3);
-        let marks = ex
-            .map_with_scratch(9, |scratch, i| {
-                let mut s = scratch.lock();
-                s.col.push(i as f32);
-                Ok(s.col.len())
+        ex.map_with_scratch(9, |scratch, i| {
+            scratch.lock().col.push(i as f32);
+            Ok(())
+        })
+        .unwrap();
+        let total: usize = ex.arenas.iter().map(|a| a.lock().col.len()).sum();
+        assert_eq!(total, 9, "every job must land in exactly one worker arena");
+        // A second map draws from the SAME (now warm) arenas: it pushes
+        // nothing, and the breadcrumb total is unchanged.
+        ex.map_with_scratch(3, |scratch, _| Ok(scratch.lock().col.len())).unwrap();
+        let total: usize = ex.arenas.iter().map(|a| a.lock().col.len()).sum();
+        assert_eq!(total, 9, "arenas were not reused warm across map calls");
+    }
+
+    /// The pool is persistent: the same OS threads serve every map call
+    /// and session over the executor's lifetime — no per-session spawns.
+    #[test]
+    fn pool_workers_persist_across_sessions() {
+        let ex = ParallelExecutor::new(3);
+        let ids = std::sync::Mutex::new(std::collections::HashSet::new());
+        for _ in 0..2 {
+            ex.session(|sess| {
+                let handles: Vec<_> = (0..6usize)
+                    .map(|_| {
+                        let ids = &ids;
+                        sess.submit(move |_| {
+                            ids.lock().unwrap().insert(std::thread::current().id());
+                            Ok(())
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(JobHandle::wait).collect::<anyhow::Result<Vec<_>>>()
             })
             .unwrap();
-        // 9 jobs over 3 workers: each arena saw exactly 3 jobs, so the
-        // per-arena lengths are a permutation-in-slots of 1..=3.
-        let total: usize = {
-            let mut per_arena_final = std::collections::BTreeMap::new();
-            for (i, &len) in marks.iter().enumerate() {
-                per_arena_final.insert(i % 3, len);
-            }
-            per_arena_final.values().sum()
-        };
-        assert_eq!(total, 9, "each of 3 arenas should end at 3 pushes: {marks:?}");
-        // A second map reuses the same arenas (warm buffers).
-        let lens = ex.map_with_scratch(3, |scratch, _| Ok(scratch.lock().col.len())).unwrap();
-        assert!(lens.iter().all(|&l| l >= 3), "arenas were not reused: {lens:?}");
+        }
+        let ids = ids.into_inner().unwrap();
+        assert!(
+            !ids.is_empty() && ids.len() <= 3,
+            "12 jobs across 2 sessions ran on {} distinct threads (pool has 3)",
+            ids.len()
+        );
+    }
+
+    /// A panicking job must not take down its pool worker: the waiter
+    /// gets an error, the session still closes, and the executor keeps
+    /// serving afterwards.
+    #[test]
+    fn pool_survives_job_panics() {
+        let ex = ParallelExecutor::new(2);
+        let err = ex
+            .session(|sess| {
+                let bad = sess.submit(|_| -> anyhow::Result<usize> { panic!("job exploded") });
+                let good = sess.submit(|_| Ok(7usize));
+                assert_eq!(good.wait()?, 7);
+                bad.wait()
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("worker panicked"), "unexpected error: {err}");
+        // Both workers are still alive for subsequent calls.
+        assert_eq!(ex.map(4, |i| Ok(i * 2)).unwrap(), vec![0, 2, 4, 6]);
     }
 
     #[test]
@@ -634,9 +825,11 @@ mod tests {
         .unwrap();
         let total: usize = ex.arenas.iter().map(|a| a.lock().dcol.len()).sum();
         assert_eq!(total, 6, "every session job must land in exactly one worker arena");
-        // A later map call reuses the same (now warm) arenas.
-        let lens = ex.map_with_scratch(2, |scratch, _| Ok(scratch.lock().dcol.len())).unwrap();
-        assert!(lens.iter().any(|&l| l > 0), "session arenas were not reused: {lens:?}");
+        // A later map call draws from the same (now warm) arenas: it adds
+        // no breadcrumbs, so the total is unchanged.
+        ex.map_with_scratch(2, |scratch, _| Ok(scratch.lock().dcol.len())).unwrap();
+        let total: usize = ex.arenas.iter().map(|a| a.lock().dcol.len()).sum();
+        assert_eq!(total, 6, "session arenas were not reused warm");
     }
 
     /// A fused chain (several backend calls in one submitted job) on a

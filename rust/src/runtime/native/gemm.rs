@@ -9,14 +9,38 @@
 //! by the packing routines through strided [`MatView`]s, so no operand is
 //! ever materialized transposed.
 //!
+//! # Microkernel tiers
+//!
+//! The inner register tile runs on one of two [`Tier`]s behind runtime
+//! dispatch ([`active_tier`], cached once per process):
+//!
+//! * [`Tier::Portable`] — the scalar 8×8 kernel, autovectorized by LLVM;
+//!   every platform, the JAX-golden reference tier.
+//! * [`Tier::Avx2`] — an explicit AVX2+FMA kernel (x86_64 only, selected
+//!   when `is_x86_feature_detected!` confirms both features; degrades to
+//!   portable otherwise).  Force a tier with [`GEMM_TIER_ENV`].
+//!
+//! The tiers are NOT bitwise-interchangeable: FMA contracts each `a·b+c`
+//! into one rounding where the portable kernel rounds twice, so SIMD and
+//! portable results drift apart by O(ulp) per accumulation step.  They
+//! are property-tested against each other to ≤1e-5 relative.  *Within* a
+//! tier every determinism guarantee is untouched — the summation order
+//! below is tier-independent, so identical inputs on the same tier give
+//! bitwise identical outputs from any worker thread.
+//!
 //! Determinism: for a fixed problem shape the summation order of every
 //! output element is fixed — k-panels accumulate in ascending `p` order
 //! and panel partials are added to C in ascending panel order — and no
 //! read ever observes scratch-buffer history (packing pads edge tiles
-//! with explicit zeros).  Identical inputs therefore produce bitwise
-//! identical outputs on every call, from any worker thread: the
-//! threads=N ≡ threads=1 and split-vs-full bitwise guarantees extend to
-//! the GEMM path unchanged.  See DESIGN.md §Native backend.
+//! with explicit zeros).  Because an output element's summation order is
+//! independent of which `NC` column panel it lands in, pre-packed B
+//! panels ([`pack_b_full`] / [`gemm_packed_b`]) and column-split
+//! execution ([`gemm_parallel`]) are bitwise identical to the plain
+//! [`gemm`] on the same tier.  The threads=N ≡ threads=1 and
+//! split-vs-full bitwise guarantees extend to the GEMM path unchanged.
+//! See DESIGN.md §Native backend.
+
+use std::sync::OnceLock;
 
 /// Microkernel tile height (rows of C per register tile).
 pub const MR: usize = 8;
@@ -28,6 +52,63 @@ const MC: usize = 64;
 const NC: usize = 256;
 /// k-depth of one panel (one `KC×NR` B strip ≈ 8 KiB, L1-resident).
 const KC: usize = 256;
+
+/// Env var forcing the microkernel tier: `portable` pins the scalar
+/// kernel, `avx2` requests the SIMD tier (clamped to portable when the
+/// CPU lacks it), anything else — or unset — auto-detects.  Read once
+/// per process and cached ([`active_tier`]).
+pub const GEMM_TIER_ENV: &str = "SFLGA_GEMM_TIER";
+
+/// Instruction tier of the GEMM microkernel (see the module docs: tiers
+/// are deterministic within themselves, FMA-divergent across each other).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Scalar 8×8 kernel, autovectorized — every platform.
+    Portable,
+    /// AVX2+FMA 8×8 kernel — x86_64 with runtime-detected support.
+    Avx2,
+}
+
+impl Tier {
+    /// Clamp to what this host can execute: [`Tier::Avx2`] degrades to
+    /// [`Tier::Portable`] when AVX2+FMA are absent (or off x86_64), so
+    /// forcing a tier is always safe.
+    pub fn supported(self) -> Tier {
+        match self {
+            Tier::Avx2 if avx2_available() => Tier::Avx2,
+            _ => Tier::Portable,
+        }
+    }
+
+    /// Short name for logs and bench JSON ("portable", "avx2").
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Portable => "portable",
+            Tier::Avx2 => "avx2",
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+/// The process-wide microkernel tier: the [`GEMM_TIER_ENV`] override if
+/// set, else the best tier the CPU supports.  Cached on first use so the
+/// hot path never re-reads the environment.
+pub fn active_tier() -> Tier {
+    static TIER: OnceLock<Tier> = OnceLock::new();
+    *TIER.get_or_init(|| match std::env::var(GEMM_TIER_ENV).as_deref() {
+        Ok("portable") => Tier::Portable,
+        _ => Tier::Avx2.supported(),
+    })
+}
 
 /// Strided read-only view of a row-major matrix (or its transpose):
 /// element `(r, c)` lives at `data[r·rs + c·cs]`.
@@ -61,6 +142,13 @@ impl<'a> MatView<'a> {
     fn row_major(&self) -> bool {
         self.cs == 1
     }
+
+    /// Re-view from column `j0` onward: element `(r, c)` of the result
+    /// is element `(r, j0 + c)` of `self` (the strides are unchanged, so
+    /// this is a zero-copy column offset for panel-parallel splits).
+    fn cols_from(&self, j0: usize) -> MatView<'a> {
+        MatView { data: &self.data[j0 * self.cs..], rs: self.rs, cs: self.cs }
+    }
 }
 
 /// What the final k-panel writes into each C element after the product.
@@ -74,7 +162,30 @@ pub enum Epilogue<'a> {
     BiasRelu(&'a [f32]),
 }
 
-/// `C[m×n] (+)= A[m×k] · B[k×n]`, row-major contiguous C (`ldc == n`).
+impl<'a> Epilogue<'a> {
+    /// The epilogue restricted to output columns `j0..j0+w` (for
+    /// panel-parallel column splits computing into a local strip).
+    fn slice_cols(self, j0: usize, w: usize) -> Epilogue<'a> {
+        match self {
+            Epilogue::None => Epilogue::None,
+            Epilogue::Bias(b) => Epilogue::Bias(&b[j0..j0 + w]),
+            Epilogue::BiasRelu(b) => Epilogue::BiasRelu(&b[j0..j0 + w]),
+        }
+    }
+}
+
+/// Where the driver takes its B panels from.
+#[derive(Clone, Copy)]
+enum BPanels<'a> {
+    /// Pack panels on the fly from a strided view into the `pb` arena.
+    View(MatView<'a>),
+    /// Pre-packed panels from [`pack_b_full`], consumed sequentially in
+    /// the exact `(jc, pc)` order they were written.
+    Packed(&'a [f32]),
+}
+
+/// `C[m×n] (+)= A[m×k] · B[k×n]`, row-major contiguous C (`ldc == n`),
+/// on the process-wide [`active_tier`].
 ///
 /// * `accumulate == false` overwrites C (no pre-zeroing needed);
 ///   `accumulate == true` adds the product to the existing C (used by
@@ -96,6 +207,189 @@ pub fn gemm(
     pa: &mut Vec<f32>,
     pb: &mut Vec<f32>,
 ) {
+    gemm_driver(active_tier(), c, m, n, k, a, BPanels::View(b), ep, accumulate, pa, pb);
+}
+
+/// [`gemm`] on an explicit [`Tier`] (clamped to host support) — the entry
+/// point for cross-tier property tests and the tier benchmarks, immune to
+/// the [`GEMM_TIER_ENV`] override.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_with_tier(
+    tier: Tier,
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    a: MatView<'_>,
+    b: MatView<'_>,
+    ep: Epilogue<'_>,
+    accumulate: bool,
+    pa: &mut Vec<f32>,
+    pb: &mut Vec<f32>,
+) {
+    gemm_driver(tier.supported(), c, m, n, k, a, BPanels::View(b), ep, accumulate, pa, pb);
+}
+
+/// [`gemm_with_tier`] consuming B panels pre-packed by [`pack_b_full`]
+/// instead of packing per call — the repeated-B fast path (conv layers
+/// multiply every image of a batch against the same weight panels; see
+/// `ops.rs`).  Bitwise identical to the view-packing path: the packed
+/// bytes are exactly what [`gemm`] would have packed.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed_b(
+    tier: Tier,
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    a: MatView<'_>,
+    packed_b: &[f32],
+    ep: Epilogue<'_>,
+    accumulate: bool,
+    pa: &mut Vec<f32>,
+) {
+    debug_assert_eq!(
+        packed_b.len(),
+        packed_b_len(k, n),
+        "gemm_packed_b: packed panels do not match a {k}x{n} B"
+    );
+    let mut pb = Vec::new(); // untouched on the packed path
+    let panels = BPanels::Packed(packed_b);
+    gemm_driver(tier.supported(), c, m, n, k, a, panels, ep, accumulate, pa, &mut pb);
+}
+
+/// Length of the packed-panel buffer [`pack_b_full`] produces for a
+/// `k×n` B: every `(jc, pc)` panel's NR-column strips, edge strips
+/// rounded up to NR with explicit zero padding.
+pub fn packed_b_len(k: usize, n: usize) -> usize {
+    let mut total = 0;
+    for jc in (0..n).step_by(NC) {
+        let strips = NC.min(n - jc).div_ceil(NR);
+        let mut pc = 0;
+        while pc < k {
+            let kcw = KC.min(k - pc);
+            total += strips * kcw * NR;
+            pc += kcw;
+        }
+    }
+    total
+}
+
+/// Pack ALL of B's cache panels at once, in the exact `(jc outer, pc
+/// inner)` order the GEMM driver consumes them — the hoisted-weight-
+/// packing cache ([`gemm_packed_b`]).  Every element of `dst[..len]` is
+/// written (padding included), so stale arena contents never leak into
+/// results (the NaN-poison contract of [`crate::runtime::Scratch`]).
+pub fn pack_b_full(dst: &mut Vec<f32>, b: &MatView<'_>, k: usize, n: usize) {
+    dst.resize(packed_b_len(k, n), 0.0);
+    let mut off = 0;
+    for jc in (0..n).step_by(NC) {
+        let ncw = NC.min(n - jc);
+        let strips = ncw.div_ceil(NR);
+        let mut pc = 0;
+        while pc < k {
+            let kcw = KC.min(k - pc);
+            let seg = strips * kcw * NR;
+            pack_b(&mut dst[off..off + seg], b, pc, kcw, jc, ncw);
+            off += seg;
+            pc += kcw;
+        }
+    }
+}
+
+/// Overwrite-mode [`gemm_with_tier`] with C's columns split into up to
+/// `par` NR-aligned contiguous ranges, each computed by a scoped worker
+/// thread into a private strip and merged back in ascending range order —
+/// the panel-parallel path for large eval batches.
+///
+/// Bitwise identical to the serial call for every `par`: an output
+/// element's f32 summation order depends only on the k-panel schedule,
+/// which column partitioning does not touch, and the merge is a disjoint
+/// fixed-order overwrite.  `par <= 1` (or too few column strips) runs the
+/// plain serial GEMM on `pa`/`pb`; the split path gives each worker
+/// transient local packing buffers instead, because the per-worker arena
+/// belongs to the executor worker that called us.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_parallel(
+    tier: Tier,
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    a: MatView<'_>,
+    b: MatView<'_>,
+    ep: Epilogue<'_>,
+    par: usize,
+    pa: &mut Vec<f32>,
+    pb: &mut Vec<f32>,
+) {
+    let strips = n.div_ceil(NR);
+    let chunks = par.min(strips).max(1);
+    if chunks <= 1 || m == 0 {
+        gemm_with_tier(tier, c, m, n, k, a, b, ep, false, pa, pb);
+        return;
+    }
+    debug_assert_eq!(c.len(), m * n, "gemm_parallel: C is {} elems, want {m}x{n}", c.len());
+    let per = strips.div_ceil(chunks);
+    let mut ranges = Vec::with_capacity(chunks);
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + per * NR).min(n);
+        ranges.push((lo, hi));
+        lo = hi;
+    }
+    let parts: Vec<Vec<f32>> = std::thread::scope(|s| {
+        let handles: Vec<_> = ranges
+            .iter()
+            .map(|&(j0, j1)| {
+                s.spawn(move || {
+                    let w = j1 - j0;
+                    let mut part = vec![0.0f32; m * w];
+                    let (mut lpa, mut lpb) = (Vec::new(), Vec::new());
+                    gemm_with_tier(
+                        tier,
+                        &mut part,
+                        m,
+                        w,
+                        k,
+                        a,
+                        b.cols_from(j0),
+                        ep.slice_cols(j0, w),
+                        false,
+                        &mut lpa,
+                        &mut lpb,
+                    );
+                    part
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("gemm panel worker panicked")).collect()
+    });
+    // Fixed-order merge: ascending column ranges, disjoint overwrites.
+    for (&(j0, j1), part) in ranges.iter().zip(&parts) {
+        let w = j1 - j0;
+        for (crow, prow) in c.chunks_exact_mut(n).zip(part.chunks_exact(w)) {
+            crow[j0..j1].copy_from_slice(prow);
+        }
+    }
+}
+
+/// The shared cache-blocked driver behind every public entry point.
+/// `tier` must already be clamped by [`Tier::supported`].
+#[allow(clippy::too_many_arguments)]
+fn gemm_driver(
+    tier: Tier,
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    a: MatView<'_>,
+    b: BPanels<'_>,
+    ep: Epilogue<'_>,
+    accumulate: bool,
+    pa: &mut Vec<f32>,
+    pb: &mut Vec<f32>,
+) {
     debug_assert_eq!(c.len(), m * n, "gemm: C is {} elems, want {m}x{n}", c.len());
     debug_assert!(
         !accumulate || matches!(ep, Epilogue::None),
@@ -112,27 +406,43 @@ pub fn gemm(
         apply_epilogue_rows(c, n, ep);
         return;
     }
+    let simd = matches!(tier, Tier::Avx2);
     pa.resize(MC * KC, 0.0);
-    pb.resize(NC * KC, 0.0);
+    if matches!(b, BPanels::View(_)) {
+        pb.resize(NC * KC, 0.0);
+    }
+    let mut packed_off = 0usize;
     for jc in (0..n).step_by(NC) {
         let ncw = NC.min(n - jc);
+        let strips = ncw.div_ceil(NR);
         let mut pc = 0;
         while pc < k {
             let kcw = KC.min(k - pc);
             let first = pc == 0;
             let last = pc + kcw == k;
-            pack_b(pb, &b, pc, kcw, jc, ncw);
+            let panel: &[f32] = match b {
+                BPanels::View(bv) => {
+                    pack_b(pb, &bv, pc, kcw, jc, ncw);
+                    &pb[..strips * kcw * NR]
+                }
+                BPanels::Packed(p) => {
+                    let seg = strips * kcw * NR;
+                    let s = &p[packed_off..packed_off + seg];
+                    packed_off += seg;
+                    s
+                }
+            };
             for icb in (0..m).step_by(MC) {
                 let mcw = MC.min(m - icb);
                 pack_a(pa, &a, icb, mcw, pc, kcw);
                 for jr in (0..ncw).step_by(NR) {
                     let nrw = NR.min(ncw - jr);
-                    let pb_strip = &pb[(jr / NR) * kcw * NR..][..kcw * NR];
+                    let pb_strip = &panel[(jr / NR) * kcw * NR..][..kcw * NR];
                     for ir in (0..mcw).step_by(MR) {
                         let mrw = MR.min(mcw - ir);
                         let pa_strip = &pa[(ir / MR) * kcw * MR..][..kcw * MR];
                         let mut acc = [[0.0f32; NR]; MR];
-                        microkernel(kcw, pa_strip, pb_strip, &mut acc);
+                        run_microkernel(simd, kcw, pa_strip, pb_strip, &mut acc);
                         store_tile(
                             c,
                             n,
@@ -153,20 +463,79 @@ pub fn gemm(
     }
 }
 
-/// The register tile: `acc[MR][NR] += pa_strip ⊗ pb_strip` over one
-/// k-panel, ascending `p`.  Fixed-size rows keep the inner loop branch-
-/// free and autovectorizable (NR = one 8-lane f32 vector).
+/// Tier dispatch for one register tile.  `simd` is only ever true when
+/// [`Tier::supported`] confirmed AVX2+FMA on this host.
+#[inline(always)]
+fn run_microkernel(
+    simd: bool,
+    kc: usize,
+    pa_strip: &[f32],
+    pb_strip: &[f32],
+    acc: &mut [[f32; NR]; MR],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if simd {
+        // SAFETY: `simd` implies the driver's tier was clamped through
+        // `Tier::supported`, which checked avx2+fma at runtime.
+        unsafe { microkernel_avx2(kc, pa_strip, pb_strip, acc) };
+        return;
+    }
+    let _ = simd; // consumed by the cfg arm on x86_64 only
+    microkernel(kc, pa_strip, pb_strip, acc);
+}
+
+/// The portable register tile: `acc[MR][NR] += pa_strip ⊗ pb_strip` over
+/// one k-panel, ascending `p`.  `chunks_exact` walks the strips in
+/// MR/NR-sized rows whose lengths the compiler can prove, so the indexed
+/// bounds checks of the per-`p` slices elide (see DESIGN.md §Native
+/// backend); the fixed-size inner rows keep the loop branch-free and
+/// autovectorizable (NR = one 8-lane f32 vector).
 #[inline(always)]
 fn microkernel(kc: usize, pa_strip: &[f32], pb_strip: &[f32], acc: &mut [[f32; NR]; MR]) {
-    debug_assert!(pa_strip.len() >= kc * MR && pb_strip.len() >= kc * NR);
-    for p in 0..kc {
-        let arow: &[f32; MR] = pa_strip[p * MR..p * MR + MR].try_into().unwrap();
-        let brow: &[f32; NR] = pb_strip[p * NR..p * NR + NR].try_into().unwrap();
+    debug_assert!(pa_strip.len() == kc * MR && pb_strip.len() == kc * NR);
+    for (arow, brow) in pa_strip.chunks_exact(MR).zip(pb_strip.chunks_exact(NR)) {
         for (accrow, &av) in acc.iter_mut().zip(arow) {
             for (cv, &bv) in accrow.iter_mut().zip(brow) {
                 *cv += av * bv;
             }
         }
+    }
+}
+
+/// The AVX2+FMA register tile: 8 ymm accumulators, one `b` vector load
+/// and 8 broadcast-FMAs per `p`.  Same ascending-`p` summation order as
+/// the portable kernel, but each `a·b + acc` rounds ONCE (fused), which
+/// is why the tiers are equivalent only to tolerance, never bitwise.
+///
+/// # Safety
+///
+/// Requires AVX2 and FMA at runtime (`Tier::supported` gates every call).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn microkernel_avx2(
+    kc: usize,
+    pa_strip: &[f32],
+    pb_strip: &[f32],
+    acc: &mut [[f32; NR]; MR],
+) {
+    use std::arch::x86_64::{
+        _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps,
+    };
+    debug_assert!(pa_strip.len() == kc * MR && pb_strip.len() == kc * NR);
+    let mut vacc = [_mm256_setzero_ps(); MR];
+    for (v, row) in vacc.iter_mut().zip(acc.iter()) {
+        *v = _mm256_loadu_ps(row.as_ptr());
+    }
+    for p in 0..kc {
+        let bvec = _mm256_loadu_ps(pb_strip.as_ptr().add(p * NR));
+        let abase = pa_strip.as_ptr().add(p * MR);
+        for (i, v) in vacc.iter_mut().enumerate() {
+            let avec = _mm256_set1_ps(*abase.add(i));
+            *v = _mm256_fmadd_ps(avec, bvec, *v);
+        }
+    }
+    for (v, row) in vacc.iter().zip(acc.iter_mut()) {
+        _mm256_storeu_ps(row.as_mut_ptr(), *v);
     }
 }
 
@@ -313,6 +682,10 @@ mod tests {
         (a - b).abs() <= 1e-4 * (1.0 + b.abs())
     }
 
+    fn gen_mat(len: usize, mul: usize, add: usize, modu: usize) -> Vec<f32> {
+        (0..len).map(|i| ((i * mul + add) % modu) as f32 / modu as f32 - 0.5).collect()
+    }
+
     #[test]
     fn matches_naive_on_awkward_shapes() {
         // Shapes straddling every blocking edge: below/above MR, NR, MC,
@@ -328,10 +701,8 @@ mod tests {
             (31, 33, 257),
         ];
         for &(m, n, k) in &shapes {
-            let a: Vec<f32> =
-                (0..m * k).map(|i| ((i * 37 + 11) % 97) as f32 / 97.0 - 0.5).collect();
-            let b: Vec<f32> =
-                (0..k * n).map(|i| ((i * 53 + 29) % 89) as f32 / 89.0 - 0.5).collect();
+            let a = gen_mat(m * k, 37, 11, 97);
+            let b = gen_mat(k * n, 53, 29, 89);
             let av = MatView::rows(&a, k);
             let bv = MatView::rows(&b, n);
             let want = naive(m, n, k, &av, &bv, Epilogue::None, None);
@@ -421,33 +792,37 @@ mod tests {
     #[test]
     fn results_are_bitwise_stable_across_dirty_arenas() {
         // The arena contract: no read observes buffer history, so a
-        // NaN-poisoned arena must give bitwise the clean-arena answer.
+        // NaN-poisoned arena must give bitwise the clean-arena answer —
+        // on whatever tier is active AND with the tier forced to SIMD.
         let (m, n, k) = (33, 19, 270); // multi-panel in k, ragged tiles
-        let a: Vec<f32> = (0..m * k).map(|i| ((i * 31 + 7) % 61) as f32 / 61.0 - 0.5).collect();
-        let b: Vec<f32> = (0..k * n).map(|i| ((i * 17 + 3) % 71) as f32 / 71.0 - 0.5).collect();
+        let a = gen_mat(m * k, 31, 7, 61);
+        let b = gen_mat(k * n, 17, 3, 71);
         let bias: Vec<f32> = (0..n).map(|j| j as f32 / 19.0 - 0.4).collect();
-        let run = |pa: &mut Vec<f32>, pb: &mut Vec<f32>| {
-            let mut c = vec![0.0f32; m * n];
-            gemm(
-                &mut c,
-                m,
-                n,
-                k,
-                MatView::rows(&a, k),
-                MatView::rows(&b, n),
-                Epilogue::BiasRelu(&bias),
-                false,
-                pa,
-                pb,
-            );
-            c
-        };
-        let clean = run(&mut Vec::new(), &mut Vec::new());
-        let mut pa = vec![f32::NAN; 7];
-        let mut pb = vec![f32::NAN; 100_000];
-        let dirty = run(&mut pa, &mut pb);
-        for (x, y) in clean.iter().zip(&dirty) {
-            assert_eq!(x.to_bits(), y.to_bits(), "dirty arena changed the result");
+        for tier in [active_tier(), Tier::Avx2.supported()] {
+            let run = |pa: &mut Vec<f32>, pb: &mut Vec<f32>| {
+                let mut c = vec![0.0f32; m * n];
+                gemm_with_tier(
+                    tier,
+                    &mut c,
+                    m,
+                    n,
+                    k,
+                    MatView::rows(&a, k),
+                    MatView::rows(&b, n),
+                    Epilogue::BiasRelu(&bias),
+                    false,
+                    pa,
+                    pb,
+                );
+                c
+            };
+            let clean = run(&mut Vec::new(), &mut Vec::new());
+            let mut pa = vec![f32::NAN; 7];
+            let mut pb = vec![f32::NAN; 100_000];
+            let dirty = run(&mut pa, &mut pb);
+            for (x, y) in clean.iter().zip(&dirty) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{tier:?}: dirty arena changed the result");
+            }
         }
     }
 
@@ -470,5 +845,209 @@ mod tests {
             &mut pb,
         );
         assert_eq!(c, vec![1.0, 0.0, 1.0, 0.0]);
+    }
+
+    /// The cross-tier acceptance bound: |simd - portable| ≤ 1e-5·(1+|p|).
+    /// On hosts without AVX2 the SIMD tier degrades to portable and the
+    /// comparison is trivially exact — the suite still runs everywhere.
+    #[allow(clippy::too_many_arguments)]
+    fn assert_tiers_close(
+        tag: &str,
+        m: usize,
+        n: usize,
+        k: usize,
+        av: MatView<'_>,
+        bv: MatView<'_>,
+        ep: Epilogue<'_>,
+    ) {
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        let mut portable = vec![f32::NAN; m * n];
+        gemm_with_tier(Tier::Portable, &mut portable, m, n, k, av, bv, ep, false, &mut pa, &mut pb);
+        let mut simd = vec![f32::NAN; m * n];
+        gemm_with_tier(Tier::Avx2, &mut simd, m, n, k, av, bv, ep, false, &mut pa, &mut pb);
+        for (i, (s, p)) in simd.iter().zip(&portable).enumerate() {
+            assert!(
+                (s - p).abs() <= 1e-5 * (1.0 + p.abs()),
+                "{tag}[{i}]: simd {s} vs portable {p} ({m}x{n}x{k})"
+            );
+        }
+    }
+
+    /// SIMD-vs-portable on the satellite's awkward conv-derived shapes:
+    /// odd H/W images (m = h·w), off-tile k²·ic / oc, batch-1 single-image
+    /// products, plus every blocking edge.
+    #[test]
+    fn simd_tier_matches_portable_on_awkward_shapes() {
+        // (m, n, k) = (h·w, oc, k²·ic) for the conv shapes.
+        let shapes = [
+            (35usize, 9usize, 75usize), // 5x7 image, oc 9, 5x5x3 taps
+            (1, 1, 1),
+            (63, 13, 147), // 7x9 image, oc 13, 3x3x.. taps — all off-tile
+            (8, 8, 8),
+            (9, 7, 25),
+            (13, 10, 300),  // multi-KC
+            (65, 260, 13),  // multi-NC
+            (31, 33, 257),
+        ];
+        for &(m, n, k) in &shapes {
+            let a = gen_mat(m * k, 37, 11, 97);
+            let b = gen_mat(k * n, 53, 29, 89);
+            let bias = gen_mat(n, 7, 5, 41);
+            let av = MatView::rows(&a, k);
+            let bv = MatView::rows(&b, n);
+            for ep in [Epilogue::None, Epilogue::Bias(&bias), Epilogue::BiasRelu(&bias)] {
+                assert_tiers_close("awkward", m, n, k, av, bv, ep);
+            }
+        }
+    }
+
+    #[test]
+    fn property_simd_tier_matches_portable() {
+        check("gemm-simd-vs-portable", 48, |rng| {
+            let m = 1 + rng.below(40);
+            let n = 1 + rng.below(30);
+            let k = 1 + rng.below(80);
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32 * 0.5).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32 * 0.5).collect();
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let ep = match rng.below(3) {
+                0 => Epilogue::None,
+                1 => Epilogue::Bias(&bias),
+                _ => Epilogue::BiasRelu(&bias),
+            };
+            let av = MatView::rows(&a, k);
+            let bv = MatView::rows(&b, n);
+            let (mut pa, mut pb) = (Vec::new(), Vec::new());
+            let mut portable = vec![f32::NAN; m * n];
+            gemm_with_tier(
+                Tier::Portable,
+                &mut portable,
+                m,
+                n,
+                k,
+                av,
+                bv,
+                ep,
+                false,
+                &mut pa,
+                &mut pb,
+            );
+            let mut simd = vec![f32::NAN; m * n];
+            gemm_with_tier(Tier::Avx2, &mut simd, m, n, k, av, bv, ep, false, &mut pa, &mut pb);
+            for (i, (s, p)) in simd.iter().zip(&portable).enumerate() {
+                prop_assert!(
+                    (s - p).abs() <= 1e-5 * (1.0 + p.abs()),
+                    "[{i}]: simd {s} vs portable {p} (m {m} n {n} k {k})"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// The hoisted weight-packing path: `pack_b_full` + `gemm_packed_b`
+    /// must be BITWISE the on-the-fly packing path — for row-major and
+    /// transposed B, across multi-NC and multi-KC panel shapes, on both
+    /// tiers, and regardless of what garbage the `pw` arena held before.
+    #[test]
+    fn packed_b_panels_match_inline_packing_bitwise() {
+        let shapes = [(5usize, 9usize, 7usize), (33, 300, 40), (13, 10, 520), (65, 260, 257)];
+        for tier in [Tier::Portable, Tier::Avx2.supported()] {
+            for &(m, n, k) in &shapes {
+                let a = gen_mat(m * k, 37, 11, 97);
+                let b = gen_mat(k * n, 53, 29, 89);
+                let bt: Vec<f32> = (0..n * k).map(|i| b[(i % k) * n + i / k]).collect();
+                let bias = gen_mat(n, 7, 5, 41);
+                let av = MatView::rows(&a, k);
+                for (bv, tag) in
+                    [(MatView::rows(&b, n), "rows"), (MatView::transposed(&bt, k), "transposed")]
+                {
+                    let (mut pa, mut pb) = (Vec::new(), Vec::new());
+                    let mut want = vec![0.0f32; m * n];
+                    gemm_with_tier(
+                        tier,
+                        &mut want,
+                        m,
+                        n,
+                        k,
+                        av,
+                        bv,
+                        Epilogue::BiasRelu(&bias),
+                        false,
+                        &mut pa,
+                        &mut pb,
+                    );
+                    let mut pw = vec![f32::NAN; 17]; // stale arena contents
+                    pack_b_full(&mut pw, &bv, k, n);
+                    assert_eq!(pw.len(), packed_b_len(k, n), "{tag}: packed length");
+                    assert!(pw.iter().all(|v| v.is_finite()), "{tag}: pack left stale data");
+                    let mut got = vec![f32::NAN; m * n];
+                    gemm_packed_b(
+                        tier,
+                        &mut got,
+                        m,
+                        n,
+                        k,
+                        av,
+                        &pw,
+                        Epilogue::BiasRelu(&bias),
+                        false,
+                        &mut pa,
+                    );
+                    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "{tier:?}/{tag} ({m}x{n}x{k})[{i}]: packed {g} vs inline {w}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Panel-parallel column splitting is bitwise the serial GEMM for
+    /// every split width, on both tiers, epilogues included.
+    #[test]
+    fn gemm_parallel_is_bitwise_serial() {
+        let shapes = [(13usize, 100usize, 70usize), (32, 300, 64), (5, 8, 9)];
+        for tier in [Tier::Portable, Tier::Avx2.supported()] {
+            for &(m, n, k) in &shapes {
+                let a = gen_mat(m * k, 31, 7, 61);
+                let b = gen_mat(k * n, 17, 3, 71);
+                let bias = gen_mat(n, 7, 5, 41);
+                let av = MatView::rows(&a, k);
+                let bv = MatView::rows(&b, n);
+                for ep in [Epilogue::None, Epilogue::Bias(&bias), Epilogue::BiasRelu(&bias)] {
+                    let (mut pa, mut pb) = (Vec::new(), Vec::new());
+                    let mut want = vec![0.0f32; m * n];
+                    gemm_with_tier(tier, &mut want, m, n, k, av, bv, ep, false, &mut pa, &mut pb);
+                    for par in [1usize, 2, 3, 5, 8] {
+                        let mut got = vec![f32::NAN; m * n];
+                        gemm_parallel(
+                            tier, &mut got, m, n, k, av, bv, ep, par, &mut pa, &mut pb,
+                        );
+                        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                            assert_eq!(
+                                g.to_bits(),
+                                w.to_bits(),
+                                "{tier:?} par {par} ({m}x{n}x{k})[{i}]: {g} vs serial {w}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tier_clamp_and_names_are_sane() {
+        assert_eq!(Tier::Portable.supported(), Tier::Portable);
+        assert_eq!(Tier::Portable.name(), "portable");
+        // Whatever the host, the clamp returns something executable and
+        // idempotent.
+        let t = Tier::Avx2.supported();
+        assert_eq!(t.supported(), t);
+        // And the cached process-wide tier is itself supported.
+        assert_eq!(active_tier().supported(), active_tier());
     }
 }

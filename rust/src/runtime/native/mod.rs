@@ -15,8 +15,18 @@
 //! per-worker [`ScratchHandle`] (the hot path — `ParallelExecutor` owns
 //! one arena per worker), while the plain [`Backend`] methods fall back
 //! to an internal arena so direct callers (tests, benches) need no
-//! setup.  The original scalar kernels are retained in [`reference`] and
-//! cross-checked against the fast path by property tests.
+//! setup.  The GEMM microkernel is tiered (AVX2+FMA when the host has
+//! it, portable otherwise — see [`gemm`]); each arena carries its tier so
+//! a whole forward/backward chain is tier-consistent.  The original
+//! scalar kernels are retained in [`reference`] and cross-checked
+//! against the fast path by property tests.
+//!
+//! Eval-only extra parallelism: [`Backend::set_eval_parallelism`] lets
+//! the trainer grant spare pool capacity to the forward-only eval path.
+//! Large dense layers then split their GEMM by output-column panel
+//! ([`gemm::gemm_parallel`]) — a bitwise-neutral partition, since no
+//! element's k-summation order changes.  Training roles never see the
+//! hint.
 //!
 //! Numerical semantics are pinned to the JAX reference kernels
 //! (`python/compile/kernels/ref.py`) by the golden tests in [`ops`] and
@@ -27,6 +37,8 @@ pub mod gemm;
 pub mod im2col;
 pub mod ops;
 pub mod reference;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::model::{NUM_CUTS, ShapeSpec};
 use crate::tensor::Params;
@@ -59,6 +71,9 @@ pub struct NativeBackend {
     /// hot path never touches it — the executor hands every worker its
     /// own arena through the `*_with` variants.
     fallback: ScratchHandle,
+    /// Extra threads one eval call may use for panel-parallel dense GEMM
+    /// (set by [`Backend::set_eval_parallelism`]; 1 = serial).
+    eval_par: AtomicUsize,
 }
 
 impl NativeBackend {
@@ -116,7 +131,12 @@ impl NativeBackend {
             "last block must produce {} logits",
             spec.classes
         );
-        Ok(NativeBackend { spec, blocks, fallback: ScratchHandle::new() })
+        Ok(NativeBackend {
+            spec,
+            blocks,
+            fallback: ScratchHandle::new(),
+            eval_par: AtomicUsize::new(1),
+        })
     }
 
     fn check_cut(&self, cut: usize) -> anyhow::Result<usize> {
@@ -199,6 +219,10 @@ impl NativeBackend {
 
     /// Forward-only variant for paths that never backprop (`client_fwd`,
     /// `eval`): no tape, no input clones, no retained activations.
+    /// `par > 1` lets big dense layers split their GEMM into output-column
+    /// panels across that many threads — bitwise-neutral (see module doc),
+    /// only engaged on eval-sized batches where the panels amortize the
+    /// spawn cost.
     fn forward_no_tape(
         &self,
         s: &mut Scratch,
@@ -207,6 +231,7 @@ impl NativeBackend {
         batch: usize,
         first: usize,
         last: usize,
+        par: usize,
     ) -> anyhow::Result<Vec<f32>> {
         anyhow::ensure!(
             params.len() == 2 * (last + 1 - first),
@@ -234,7 +259,8 @@ impl NativeBackend {
                         cur.len()
                     );
                     anyhow::ensure!(wt.len() == din * dout, "block {blk}: weight length");
-                    cur = ops::dense_fwd(s, &cur, batch, din, dout, wt, bias, relu);
+                    let p = if par > 1 && batch >= 32 && dout >= 2 * gemm::NR { par } else { 1 };
+                    cur = ops::dense_fwd_par(s, &cur, batch, din, dout, wt, bias, relu, p);
                 }
             }
         }
@@ -313,7 +339,8 @@ impl Backend for NativeBackend {
         anyhow::ensure!(wc.len() == nc, "client_fwd: {} params, expected {nc}", wc.len());
         let batch = self.batch_of_input(x)?;
         let mut s = scratch.lock();
-        let out = self.forward_no_tape(&mut s, wc, &x.data, batch, 1, nc / 2)?;
+        // Training-path role: never uses the eval parallelism hint.
+        let out = self.forward_no_tape(&mut s, wc, &x.data, batch, 1, nc / 2, 1)?;
         Ok(Tensor::new(out, self.smashed_shape(cut, batch)))
     }
 
@@ -429,10 +456,17 @@ impl Backend for NativeBackend {
         let batch = self.batch_of_input(x)?;
         self.check_labels(y1h, batch)?;
         let mut s = scratch.lock();
-        let logits = self.forward_no_tape(&mut s, w, &x.data, batch, 1, self.blocks.len())?;
+        let par = self.eval_par.load(Ordering::Relaxed);
+        let logits = self.forward_no_tape(&mut s, w, &x.data, batch, 1, self.blocks.len(), par)?;
         let loss = ops::ce_loss(&logits, &y1h.data, batch, self.spec.classes);
         let correct = ops::correct_count(&logits, &y1h.data, batch, self.spec.classes);
         Ok((loss, correct))
+    }
+
+    fn set_eval_parallelism(&self, workers: usize) {
+        // Relaxed is enough: the trainer sets this once before rounds
+        // start, and any value yields bitwise-identical results.
+        self.eval_par.store(workers.max(1), Ordering::Relaxed);
     }
 }
 
@@ -491,9 +525,17 @@ mod tests {
         (a - b).abs() <= tol * (1.0 + b.abs())
     }
 
+    /// Pin a backend's fallback arena to the portable GEMM tier: goldens
+    /// were captured against JAX's non-FMA rounding, and the SIMD tier's
+    /// fused multiply-adds round differently (see `gemm`).
+    fn pin_portable(be: &NativeBackend) {
+        be.fallback.lock().tier = gemm::Tier::Portable;
+    }
+
     #[test]
     fn full_grad_matches_jax_goldens() {
         let be = backend();
+        pin_portable(&be);
         let (params, x, y1h) = golden_setup(&be);
         let (loss, g) = be.full_grad(&params, &x, &y1h).unwrap();
         assert!(rel_close(loss as f64, GOLD_LOSS, 1e-3), "loss {loss} vs {GOLD_LOSS}");
@@ -507,6 +549,7 @@ mod tests {
     #[test]
     fn client_fwd_matches_jax_goldens_at_every_cut() {
         let be = backend();
+        pin_portable(&be);
         let (params, x, _y1h) = golden_setup(&be);
         for cut in 1..=NUM_CUTS {
             let nc = be.spec().cut(cut).client_params;
@@ -567,6 +610,40 @@ mod tests {
         let ev_a = be.eval(&params, &x, &y1h).unwrap();
         let ev_b = be.eval_with(&fresh, &params, &x, &y1h).unwrap();
         assert_eq!(ev_a, ev_b);
+    }
+
+    /// Panel-parallel eval is an optimization channel: whatever worker
+    /// count the trainer grants, eval results stay bitwise identical, and
+    /// the hint never leaks into training-path roles.
+    #[test]
+    fn eval_parallelism_is_bitwise_neutral() {
+        let be = backend();
+        let spec = be.spec().clone();
+        let params: Params = spec
+            .params
+            .iter()
+            .enumerate()
+            .map(|(k, p)| gen_vec(k as u64 * 1_000_000, p.size()))
+            .collect();
+        // Batch 32 clears forward_no_tape's engagement threshold, so the
+        // fc layers really do take the gemm_parallel path.
+        let batch = 32usize;
+        let mut xshape = vec![batch];
+        xshape.extend_from_slice(&spec.input_shape);
+        let x = Tensor::new(gen_vec(40_000_000, batch * spec.input_per_sample()), xshape);
+        let mut y = vec![0.0f32; batch * spec.classes];
+        for i in 0..batch {
+            y[i * spec.classes + (5 * i + 3) % spec.classes] = 1.0;
+        }
+        let y1h = Tensor::new(y, vec![batch, spec.classes]);
+        let serial = be.eval(&params, &x, &y1h).unwrap();
+        for workers in [2usize, 3, 5] {
+            be.set_eval_parallelism(workers);
+            assert_eq!(be.eval(&params, &x, &y1h).unwrap(), serial, "workers {workers}");
+        }
+        let smashed = be.client_fwd(2, &params[..4], &x).unwrap();
+        be.set_eval_parallelism(1);
+        assert_eq!(be.client_fwd(2, &params[..4], &x).unwrap(), smashed);
     }
 
     #[test]

@@ -14,9 +14,14 @@
 //! into the GEMM epilogue.  Intermediates (the im2col matrix, packed
 //! panels) live in a caller-provided [`Scratch`] arena and are reused
 //! across calls; outputs are freshly allocated because the backward tape
-//! retains them.  The original scalar loops are kept in
-//! [`super::reference`] and cross-checked against this path by the
-//! property tests below.
+//! retains them.  The conv kernels pack their weight operand into the
+//! arena's `pw` cache ONCE per layer call ([`super::gemm::pack_b_full`])
+//! and replay the packed panels across every image of the batch —
+//! bitwise identical to per-image packing, minus `(b-1)` redundant packs.
+//! Every GEMM runs on the arena's microkernel tier (`scratch.tier`), so a
+//! worker's whole chain is tier-consistent.  The original scalar loops
+//! are kept in [`super::reference`] and cross-checked against this path
+//! by the property tests below.
 //!
 //! Golden values in the tests below were produced by JAX CPU (see
 //! DESIGN.md §Native backend) from the same deterministic inputs, so the
@@ -25,7 +30,9 @@
 
 use crate::runtime::scratch::Scratch;
 
-use super::gemm::{Epilogue, gemm, MatView};
+use super::gemm::{
+    gemm_packed_b, gemm_parallel, gemm_with_tier, pack_b_full, Epilogue, MatView,
+};
 use super::im2col::{col2im_image, col_width, im2col_image};
 
 /// Image geometry of an NHWC activation buffer.
@@ -72,22 +79,26 @@ pub fn conv2d_fwd(
     let m = h * w;
     let kk = col_width(k, ic);
     let mut out = vec![0.0f32; b * m * oc];
-    let Scratch { col, pa, pb, .. } = scratch;
+    let tier = scratch.tier;
+    let Scratch { col, pa, pw, .. } = scratch;
     col.resize(m * kk, 0.0);
+    // Hoisted weight packing: W's panels are identical for every image of
+    // the batch, so pack once and replay (bitwise ≡ packing per image).
+    pack_b_full(pw, &MatView::rows(wt, oc), kk, oc);
     let ep = if relu { Epilogue::BiasRelu(bias) } else { Epilogue::Bias(bias) };
     for n in 0..b {
         im2col_image(&x[n * m * ic..(n + 1) * m * ic], h, w, ic, k, col);
-        gemm(
+        gemm_packed_b(
+            tier,
             &mut out[n * m * oc..(n + 1) * m * oc],
             m,
             oc,
             kk,
             MatView::rows(col, kk),
-            MatView::rows(wt, oc),
+            pw,
             ep,
             false,
             pa,
-            pb,
         );
     }
     out
@@ -121,28 +132,34 @@ pub fn conv2d_bwd(
             *db += dv;
         }
     }
-    let Scratch { col, dcol, pa, pb } = scratch;
+    let tier = scratch.tier;
+    let Scratch { col, dcol, pa, pb, pw, .. } = scratch;
     col.resize(m * kk, 0.0);
     dcol.resize(m * kk, 0.0);
+    // Hoisted weight packing for the d_x GEMMs: Wᵀ's panels are shared by
+    // every image.  (The d_w GEMM's B operand is the per-image d_out row
+    // block, so it keeps packing on the fly.)
+    pack_b_full(pw, &MatView::transposed(wt, oc), oc, kk);
     for n in 0..b {
         let dorow = &d_out[n * m * oc..(n + 1) * m * oc];
         // d_x_n: column-space cotangent, folded back onto the image.
-        gemm(
+        gemm_packed_b(
+            tier,
             dcol,
             m,
             kk,
             oc,
             MatView::rows(dorow, oc),
-            MatView::transposed(wt, oc),
+            pw,
             Epilogue::None,
             false,
             pa,
-            pb,
         );
         col2im_image(dcol, h, w, ic, k, &mut d_x[n * m * ic..(n + 1) * m * ic]);
         // d_w += im2col(x_n)ᵀ · d_out_n.
         im2col_image(&x[n * m * ic..(n + 1) * m * ic], h, w, ic, k, col);
-        gemm(
+        gemm_with_tier(
+            tier,
             &mut d_w,
             kk,
             oc,
@@ -217,13 +234,34 @@ pub fn dense_fwd(
     bias: &[f32],
     relu: bool,
 ) -> Vec<f32> {
+    dense_fwd_par(scratch, x, bsz, din, dout, wt, bias, relu, 1)
+}
+
+/// [`dense_fwd`] with the output columns split across up to `par` scoped
+/// worker threads ([`gemm_parallel`]) — the panel-parallel eval path for
+/// large batches.  Bitwise identical to the serial call for every `par`
+/// (column splits do not touch any element's summation order).
+#[allow(clippy::too_many_arguments)]
+pub fn dense_fwd_par(
+    scratch: &mut Scratch,
+    x: &[f32],
+    bsz: usize,
+    din: usize,
+    dout: usize,
+    wt: &[f32],
+    bias: &[f32],
+    relu: bool,
+    par: usize,
+) -> Vec<f32> {
     debug_assert_eq!(x.len(), bsz * din);
     debug_assert_eq!(wt.len(), din * dout);
     debug_assert_eq!(bias.len(), dout);
     let mut out = vec![0.0f32; bsz * dout];
+    let tier = scratch.tier;
     let Scratch { pa, pb, .. } = scratch;
     let ep = if relu { Epilogue::BiasRelu(bias) } else { Epilogue::Bias(bias) };
-    gemm(
+    gemm_parallel(
+        tier,
         &mut out,
         bsz,
         dout,
@@ -231,7 +269,7 @@ pub fn dense_fwd(
         MatView::rows(x, din),
         MatView::rows(wt, dout),
         ep,
-        false,
+        par,
         pa,
         pb,
     );
@@ -260,8 +298,10 @@ pub fn dense_bwd(
             *db += dv;
         }
     }
+    let tier = scratch.tier;
     let Scratch { pa, pb, .. } = scratch;
-    gemm(
+    gemm_with_tier(
+        tier,
         &mut d_x,
         bsz,
         din,
@@ -273,7 +313,8 @@ pub fn dense_bwd(
         pa,
         pb,
     );
-    gemm(
+    gemm_with_tier(
+        tier,
         &mut d_w,
         din,
         dout,
@@ -431,7 +472,10 @@ pub(crate) mod tests {
         let x = gen_vec(X_CONV, 180);
         let w = gen_vec(W_CONV, 300);
         let b = gen_vec(B_CONV, 4);
-        let mut s = Scratch::new();
+        // Goldens pin against JAX CPU through the portable tier: the SIMD
+        // tier's FMA rounds differently (it is pinned against portable by
+        // the gemm property tests instead).
+        let mut s = Scratch::portable();
         let out = conv2d_fwd(&mut s, &x, CONV_G, &w, 5, 4, &b, true);
         assert!(close(fsum(&out), 46.72308349609375, 1e-4), "sum {}", fsum(&out));
         // out[0, 0, 1, 2] with OC=4: ((0*6+0)*5+1)*4+2 = 6.
@@ -443,7 +487,7 @@ pub(crate) mod tests {
         let x = gen_vec(X_CONV, 180);
         let w = gen_vec(W_CONV, 300);
         let d_out = gen_vec(DO_CONV, 240);
-        let mut s = Scratch::new();
+        let mut s = Scratch::portable();
         let (d_x, d_w, d_b) = conv2d_bwd(&mut s, &x, CONV_G, &w, 5, 4, &d_out);
         assert!(close(fsum(&d_x), 0.0796661376953125, 1e-3), "d_x {}", fsum(&d_x));
         assert!(close(fsum(&d_w), 1.1000213623046875, 1e-3), "d_w {}", fsum(&d_w));
@@ -468,7 +512,7 @@ pub(crate) mod tests {
         let x = gen_vec(X_DENSE, 21);
         let w = gen_vec(W_DENSE, 35);
         let b = gen_vec(B_DENSE, 5);
-        let mut s = Scratch::new();
+        let mut s = Scratch::portable();
         let out = dense_fwd(&mut s, &x, 3, 7, 5, &w, &b, true);
         assert!(close(fsum(&out), 1.689208984375, 1e-4), "dense {}", fsum(&out));
     }
@@ -628,10 +672,36 @@ pub(crate) mod tests {
         dirty.dcol = vec![f32::NAN; 100_000];
         dirty.pa = vec![f32::NAN; 13];
         dirty.pb = vec![f32::NAN; 64];
+        dirty.pw = vec![f32::NAN; 33]; // the hoisted packed-weight cache
         let poisoned = run(&mut dirty);
         assert_eq!(clean.len(), poisoned.len());
         for (i, (a, bb)) in clean.iter().zip(&poisoned).enumerate() {
             assert_eq!(a.to_bits(), bb.to_bits(), "[{i}]: {a} vs {bb} under dirty scratch");
+        }
+    }
+
+    /// Panel-parallel dense forward is BITWISE the serial one for every
+    /// split width — the eval path may fan dense GEMM columns out to idle
+    /// workers without perturbing a single bit.
+    #[test]
+    fn dense_fwd_par_matches_serial_bitwise() {
+        let (bsz, din, dout) = (32usize, 97usize, 130usize);
+        let x = gen_vec(50_000, bsz * din);
+        let wt = gen_vec(60_000, din * dout);
+        let bias = gen_vec(70_000, dout);
+        let mut s = Scratch::new();
+        for relu in [false, true] {
+            let want = dense_fwd(&mut s, &x, bsz, din, dout, &wt, &bias, relu);
+            for par in [2usize, 3, 4, 7] {
+                let got = dense_fwd_par(&mut s, &x, bsz, din, dout, &wt, &bias, relu, par);
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "par {par} relu {relu} [{i}]: {g} vs serial {w}"
+                    );
+                }
+            }
         }
     }
 

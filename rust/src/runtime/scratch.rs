@@ -5,10 +5,14 @@
 //!
 //! Ownership model (see DESIGN.md §Native backend):
 //!
-//! * [`Scratch`] is the arena itself — four named growable `f32` buffers
+//! * [`Scratch`] is the arena itself — five named growable `f32` buffers
 //!   that the GEMM/im2col kernels resize (never shrink) to the largest
 //!   shape they have seen.  A steady-state round performs ZERO scratch
-//!   allocations.
+//!   allocations.  It also carries the GEMM microkernel [`Tier`] every
+//!   kernel call through this arena runs on (defaulting to the
+//!   process-wide [`active_tier`]), so one worker's whole forward/backward
+//!   chain is tier-consistent and tests can pin an arena to the portable
+//!   tier.
 //! * [`ScratchHandle`] is the cheap, cloneable handle the rest of the
 //!   runtime passes around (`Arc<Mutex<Scratch>>`).  The
 //!   [`super::ParallelExecutor`] owns one arena per worker thread and
@@ -24,10 +28,17 @@
 
 use std::sync::{Arc, Mutex, MutexGuard};
 
+use super::native::gemm::{active_tier, Tier};
+
 /// Reusable kernel workspace: im2col/col2im staging plus the packed GEMM
 /// panels.  Buffers grow to a high-water mark and are reused in place.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Scratch {
+    /// GEMM microkernel tier every call through this arena runs on.
+    /// Defaults to the process-wide [`active_tier`]; tests pin it to
+    /// [`Tier::Portable`] for JAX-golden comparisons (FMA in the SIMD
+    /// tier rounds differently — see `native::gemm`).
+    pub tier: Tier,
     /// im2col matrix of one image: `h·w × k·k·ic`.
     pub col: Vec<f32>,
     /// Column-space gradient of one image (col2im input), same shape.
@@ -36,6 +47,23 @@ pub struct Scratch {
     pub pa: Vec<f32>,
     /// Packed B panel (`KC × NC`, NR-column strips, k-major).
     pub pb: Vec<f32>,
+    /// Hoisted packed-weight panels (`pack_b_full` output): a conv layer
+    /// packs its weight matrix here ONCE per call and replays the panels
+    /// across every image of the batch (`gemm_packed_b`).
+    pub pw: Vec<f32>,
+}
+
+impl Default for Scratch {
+    fn default() -> Scratch {
+        Scratch {
+            tier: active_tier(),
+            col: Vec::new(),
+            dcol: Vec::new(),
+            pa: Vec::new(),
+            pb: Vec::new(),
+            pw: Vec::new(),
+        }
+    }
 }
 
 impl Scratch {
@@ -43,9 +71,19 @@ impl Scratch {
         Scratch::default()
     }
 
+    /// An arena pinned to the portable GEMM tier, for cross-implementation
+    /// golden tests that must not see FMA rounding.
+    pub fn portable() -> Scratch {
+        Scratch { tier: Tier::Portable, ..Scratch::default() }
+    }
+
     /// Current high-water footprint in bytes (diagnostics/benches).
     pub fn capacity_bytes(&self) -> usize {
-        (self.col.capacity() + self.dcol.capacity() + self.pa.capacity() + self.pb.capacity())
+        (self.col.capacity()
+            + self.dcol.capacity()
+            + self.pa.capacity()
+            + self.pb.capacity()
+            + self.pw.capacity())
             * std::mem::size_of::<f32>()
     }
 }

@@ -17,6 +17,14 @@
 //! interleave with the next round's fan-out on the same workers, and
 //! `threads = 1` is the fully serial submit-order schedule — the suites
 //! below assert the results never differ by a bit.
+//!
+//! Two further sources of schedule freedom are covered since the executor
+//! grew a persistent worker pool: jobs are dequeued dynamically (any
+//! worker may take any job, rather than the old static index striping),
+//! and eval calls may split their dense GEMMs into column panels across
+//! spare pool capacity (`set_eval_parallelism`).  Both are bitwise-neutral
+//! by construction; [`panel_parallel_eval_is_bitwise_equal_to_serial`]
+//! pins the maximal panel-split case explicitly.
 
 use sfl_ga::coordinator::{AllocPolicy, SchemeKind, TrainConfig, Trainer};
 use sfl_ga::data::partition::Partition;
@@ -149,6 +157,46 @@ fn multi_epoch_pipelined_rounds_are_bitwise_equal_to_serial() {
             "{scheme:?} tau=2: threads=4 final params diverge from threads=1"
         );
     }
+}
+
+/// The pool + panel-parallel eval combination at its extreme: with one
+/// full-size eval batch (`test_samples` = eval batch = 32), the trainer
+/// folds ALL pool capacity into that single eval call (`eval_par` =
+/// `threads`), so every dense layer of the eval forward actually splits
+/// into column panels across 4 threads — and the curve must still be
+/// bitwise equal to the fully serial run.
+#[test]
+fn panel_parallel_eval_is_bitwise_equal_to_serial() {
+    let run = |threads: usize| -> (Vec<u64>, Vec<u32>) {
+        let manifest = Manifest::builtin_with_batches(8, 32);
+        let cfg = TrainConfig {
+            scheme: SchemeKind::SflGa,
+            num_clients: 3,
+            rounds: 2,
+            eval_every: 1,
+            samples_per_client: 16,
+            test_samples: 32,
+            seed: 17,
+            threads,
+            alloc: AllocPolicy::Equal,
+            ..Default::default()
+        };
+        let mut t = Trainer::native(&manifest, cfg).unwrap();
+        let mut stat_bits = Vec::new();
+        for s in t.run(2).unwrap() {
+            stat_bits.push(s.train_loss.to_bits());
+            let (tl, ta) = s.test.expect("eval_every=1 evaluates every round");
+            stat_bits.push(tl.to_bits());
+            stat_bits.push(ta.to_bits());
+        }
+        let param_bits: Vec<u32> =
+            t.global_params(2).iter().flatten().map(|v| v.to_bits()).collect();
+        (stat_bits, param_bits)
+    };
+    let (stats1, params1) = run(1);
+    let (stats4, params4) = run(4);
+    assert_eq!(stats1, stats4, "panel-parallel eval round stats diverge from serial");
+    assert_eq!(params1, params4, "panel-parallel eval changed the final params");
 }
 
 /// Round stats + final global model as raw bits for a full scenario run:
