@@ -1,0 +1,142 @@
+//! Wire-protocol micro-benchmarks: encode/decode wall-clock and
+//! throughput for the messages that dominate a networked round —
+//! `FwdReq` (client-side weights down), `FwdOk` (smashed batch up),
+//! `BwdReq` (cotangent down) and `FullReq` (a whole FL model) — plus
+//! length-prefixed frame I/O through an in-memory stream.
+//!
+//! The protocol is the per-round overhead the TCP transport adds over
+//! loopback, so these numbers bound the coordinator-side serialization
+//! cost of DESIGN.md §Transport's byte-identical encoding.  Emits
+//! `BENCH_protocol.json` (override with `SFLGA_BENCH_OUT`).
+
+use std::collections::BTreeMap;
+
+use sfl_ga::benchlib::{self, bench};
+use sfl_ga::data::init::init_params;
+use sfl_ga::model::Manifest;
+use sfl_ga::protocol::wire::{read_frame, write_frame};
+use sfl_ga::protocol::Msg;
+use sfl_ga::runtime::Tensor;
+use sfl_ga::util::json::Json;
+
+/// Deterministic dense values in [-0.5, 0.5).
+fn gen_vec(offset: u64, n: usize) -> Vec<f32> {
+    (0..n as u64)
+        .map(|j| {
+            let h = ((offset + j) as u32).wrapping_mul(2654435761);
+            ((h >> 16) & 0xFF) as f32 / 256.0 - 0.5
+        })
+        .collect()
+}
+
+struct MsgRow {
+    name: &'static str,
+    bytes: usize,
+    encode_ns: f64,
+    decode_ns: f64,
+}
+
+impl MsgRow {
+    fn json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("bytes".to_string(), Json::Num(self.bytes as f64));
+        m.insert("encode_p50_ns".to_string(), Json::Num(self.encode_ns));
+        m.insert("decode_p50_ns".to_string(), Json::Num(self.decode_ns));
+        m.insert("encode_gb_s".to_string(), Json::Num(self.bytes as f64 / self.encode_ns));
+        m.insert("decode_gb_s".to_string(), Json::Num(self.bytes as f64 / self.decode_ns));
+        Json::Obj(m)
+    }
+}
+
+fn measure(name: &'static str, msg: &Msg, warmup: usize, iters: usize) -> MsgRow {
+    let bytes = msg.encode();
+    let decoded = Msg::decode(&bytes).expect("bench message decodes");
+    assert!(decoded.encode() == bytes, "{name}: roundtrip drifted");
+    let enc = bench(&format!("encode {name} ({} KiB)", bytes.len() >> 10), warmup, iters, || {
+        msg.encode()
+    });
+    let dec = bench(&format!("decode {name} ({} KiB)", bytes.len() >> 10), warmup, iters, || {
+        Msg::decode(&bytes).expect("decodes")
+    });
+    MsgRow { name, bytes: bytes.len(), encode_ns: enc.p50_ns, decode_ns: dec.p50_ns }
+}
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::builtin();
+    let spec = manifest.for_dataset("mnist")?.clone();
+    let cut = spec.cuts[spec.cuts.len() / 2].cut;
+    let nc = spec.cut(cut).client_params;
+    let w = init_params(&spec, 0x1417);
+    let batch = spec.train_batch;
+    let smashed_n = batch * spec.cut(cut).smashed_per_sample();
+    let warmup = benchlib::iters(10, 2);
+    let iters = benchlib::iters(200, 10);
+    println!("== protocol encode/decode (mnist, cut v={cut}, batch {batch}) ==");
+
+    let rows = vec![
+        measure(
+            "fwd-req",
+            &Msg::FwdReq { seq: 1, cut: cut as u32, step: 0, wc: w[..nc].to_vec() },
+            warmup,
+            iters,
+        ),
+        measure(
+            "fwd-ok",
+            &Msg::FwdOk {
+                seq: 1,
+                smashed: Tensor::new(gen_vec(1, smashed_n), vec![batch, smashed_n / batch]),
+                labels: Tensor::new(gen_vec(2, batch * 10), vec![batch, 10]),
+            },
+            warmup,
+            iters,
+        ),
+        measure(
+            "bwd-req",
+            &Msg::BwdReq {
+                seq: 1,
+                cotangent: Tensor::new(gen_vec(3, smashed_n), vec![batch, smashed_n / batch]),
+            },
+            warmup,
+            iters,
+        ),
+        measure(
+            "full-req",
+            &Msg::FullReq { seq: 1, step0: 0, tau: 1, lr: 0.02, w: w.clone() },
+            warmup,
+            iters,
+        ),
+    ];
+
+    // Frame I/O over an in-memory stream: one round's four phases for one
+    // participant, written and read back.
+    let frame_msgs: Vec<Vec<u8>> = (0..4)
+        .map(|_| Msg::FwdReq { seq: 1, cut: cut as u32, step: 0, wc: w[..nc].to_vec() }.encode())
+        .collect();
+    let frames = bench("frame write+read x4", warmup, iters, || {
+        let mut buf = Vec::with_capacity(frame_msgs.iter().map(|m| m.len() + 4).sum());
+        for m in &frame_msgs {
+            write_frame(&mut buf, m).expect("write");
+        }
+        let mut cur = std::io::Cursor::new(buf);
+        let mut n = 0usize;
+        while let Some(payload) = read_frame(&mut cur).expect("read") {
+            n += payload.len();
+        }
+        n
+    });
+
+    let mut msgs = BTreeMap::new();
+    for row in &rows {
+        msgs.insert(row.name.to_string(), row.json());
+    }
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("protocol".to_string()));
+    root.insert("quick".to_string(), Json::Bool(benchlib::quick()));
+    root.insert("cut".to_string(), Json::Num(cut as f64));
+    root.insert("messages".to_string(), Json::Obj(msgs));
+    root.insert("frame_io_p50_ns".to_string(), Json::Num(frames.p50_ns));
+    let out = std::env::var("SFLGA_BENCH_OUT").unwrap_or_else(|_| "BENCH_protocol.json".into());
+    std::fs::write(&out, Json::Obj(root).to_string() + "\n")?;
+    println!("summary written to {out}");
+    Ok(())
+}

@@ -1,0 +1,147 @@
+//! `sfl-coordinator` — the networked SFL-GA coordinator (DESIGN.md
+//! §Transport).
+//!
+//! Binds a TCP listener, waits for `--clients` participants to Join,
+//! then drives the configured scheme over them with per-phase
+//! `--deadline-ms` fault handling (timeout/disconnect → drop →
+//! renormalize → restart the round over the survivors).
+//!
+//! Machine-readable protocol on stdout (tests and scripts key on it):
+//!
+//! ```text
+//! LISTENING 127.0.0.1:41234        # after bind, before accepting
+//! JOINED 0 1 2                     # the federation, ascending ids
+//! COMPLETE rounds=R dropped=1,3 stats=0x<fnv64> params=0x<fnv64>
+//! ```
+//!
+//! The digests are FNV-1a over every stat float's bits and the final
+//! global parameters — two coordinators print identical digests iff
+//! their runs agreed bitwise.  Logs go to stderr.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+
+use sfl_ga::coordinator::{
+    params_digest, stats_digest, AllocPolicy, NetTrainer, RunMetrics, SchemeKind, TrainConfig,
+};
+use sfl_ga::info;
+use sfl_ga::model::Manifest;
+use sfl_ga::runtime::TcpTransport;
+use sfl_ga::util::cli::Args;
+use sfl_ga::util::logging;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1))?;
+    for (name, default, help) in [
+        ("listen", "127.0.0.1:0", "bind address (port 0 = ephemeral)"),
+        ("clients", "2", "participants to wait for"),
+        ("join-deadline-ms", "30000", "rendezvous window"),
+        ("deadline-ms", "10000", "per-phase response deadline (fault policy)"),
+        ("scheme", "sfl-ga", "sfl-ga|sfl-ga-drift|sfl|psl|fl"),
+        ("cut", "2", "split layer v"),
+        ("rounds", "2", "communication rounds"),
+        ("tau", "1", "local epochs per round"),
+        ("lr", "0.02", "learning rate"),
+        ("dataset", "mnist", "dataset key"),
+        ("seed", "17", "run seed"),
+        ("partition", "iid", "iid|dirichlet:<a>|shards:<s>"),
+        ("samples-per-client", "256", "client shard size"),
+        ("test-samples", "2048", "test split size"),
+        ("eval-every", "5", "rounds between evaluations"),
+        ("threads", "0", "coordinator worker threads (0 = auto)"),
+        ("out", "", "optional metrics CSV path"),
+    ] {
+        args.declare(name, default, help);
+    }
+    if args.flag("help") {
+        println!("{}", args.usage("sfl-coordinator", "networked SFL-GA coordinator"));
+        return Ok(());
+    }
+    logging::set_level(logging::level_from_str(&args.str_or("log", "info")));
+
+    let expected: usize = args.parse_or("clients", 2usize)?;
+    anyhow::ensure!(expected > 0, "--clients must be positive");
+    let join_deadline = args.duration_ms("join-deadline-ms", 30_000)?;
+    let deadline = args.duration_ms("deadline-ms", 10_000)?;
+    let scheme = SchemeKind::parse(&args.str_or("scheme", "sfl-ga"))?;
+    let cut: usize = args.parse_or("cut", 2usize)?;
+
+    let listener = TcpListener::bind(args.str_or("listen", "127.0.0.1:0"))?;
+    emit(&format!("LISTENING {}", listener.local_addr()?));
+    let transport = TcpTransport::accept(&listener, expected, join_deadline)?;
+    let joined = transport.joined();
+    emit(&format!(
+        "JOINED {}",
+        joined.iter().map(|id| id.to_string()).collect::<Vec<_>>().join(" ")
+    ));
+
+    let dataset = args.str_or("dataset", "mnist");
+    let cfg = TrainConfig {
+        dataset: dataset.clone(),
+        scheme,
+        num_clients: joined.len(),
+        rounds: args.parse_or("rounds", 2usize)?,
+        tau: args.parse_or("tau", 1usize)?,
+        lr: args.parse_or("lr", 0.02f32)?,
+        samples_per_client: args.parse_or("samples-per-client", 256usize)?,
+        test_samples: args.parse_or("test-samples", 2048usize)?,
+        scenario: args.scenario()?,
+        seed: args.parse_or("seed", 17u64)?,
+        eval_every: args.parse_or("eval-every", 5usize)?,
+        threads: args.threads()?,
+        alloc: if args.flag("equal-alloc") { AllocPolicy::Equal } else { AllocPolicy::Optimal },
+        ..Default::default()
+    };
+    let manifest = Manifest::builtin();
+    let mut nt = NetTrainer::new(&manifest, cfg, deadline, transport)?;
+    info!("federation of {} at cut v={cut}, scheme {}", joined.len(), scheme.name());
+
+    let stats = nt.run(cut)?;
+    let mut metrics = RunMetrics::new(scheme, &dataset);
+    for s in &stats {
+        metrics.push(s);
+        if let Some((tl, ta)) = s.test {
+            info!(
+                "round {:>4}  train_loss {:.4}  test_loss {tl:.4}  test_acc {ta:.3}",
+                s.round, s.train_loss
+            );
+        }
+    }
+    let out = args.str_or("out", "");
+    if !out.is_empty() {
+        let path = PathBuf::from(out);
+        metrics.write_csv(&path)?;
+        info!("wrote {}", path.display());
+    }
+    let dropped = nt
+        .dropped()
+        .iter()
+        .map(|id| id.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    emit(&format!(
+        "COMPLETE rounds={} dropped={} stats=0x{:016x} params=0x{:016x}",
+        stats.len(),
+        if dropped.is_empty() { "-".into() } else { dropped },
+        stats_digest(&stats),
+        params_digest(&nt.global_params(cut)),
+    ));
+    nt.shutdown();
+    Ok(())
+}
+
+/// Machine-readable stdout line, flushed so a spawning test sees it
+/// immediately.
+fn emit(line: &str) {
+    use std::io::Write;
+    let mut out = std::io::stdout().lock();
+    let _ = writeln!(out, "{line}");
+    let _ = out.flush();
+}

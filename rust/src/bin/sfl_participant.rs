@@ -1,0 +1,136 @@
+//! `sfl-participant` — a stateless SFL-GA compute participant
+//! (DESIGN.md §Transport).
+//!
+//! Connects to an `sfl-coordinator`, Joins with `--client-id`, then
+//! services the protocol via the SAME [`ParticipantNode`] state machine
+//! the in-process loopback transport runs — which is why TCP and
+//! loopback federations train bitwise identically.
+//!
+//! The process exits on coordinator Shutdown, on EOF (the coordinator
+//! closed the link — e.g. this participant was dropped by the fault
+//! policy), or after `--idle-timeout-ms` without coordinator traffic, so
+//! chaos runs and CI never leak orphan processes.  Prints `JOINED <id>`
+//! to stdout once configured.
+
+use std::io::{ErrorKind, Read};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use sfl_ga::protocol::wire::{write_frame, MAX_FRAME};
+use sfl_ga::protocol::Msg;
+use sfl_ga::runtime::ParticipantNode;
+use sfl_ga::util::cli::Args;
+use sfl_ga::util::logging;
+use sfl_ga::{info, warn_log};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1))?;
+    for (name, default, help) in [
+        ("connect", "", "coordinator address, e.g. 127.0.0.1:41234"),
+        ("client-id", "", "this participant's client id"),
+        ("connect-timeout-ms", "10000", "connection retry window"),
+        ("idle-timeout-ms", "60000", "exit after this long without traffic"),
+    ] {
+        args.declare(name, default, help);
+    }
+    if args.flag("help") {
+        println!("{}", args.usage("sfl-participant", "networked SFL-GA participant"));
+        return Ok(());
+    }
+    logging::set_level(logging::level_from_str(&args.str_or("log", "info")));
+    let addr = args.str_or("connect", "");
+    anyhow::ensure!(!addr.is_empty(), "--connect <addr> is required");
+    let id: u64 = args
+        .get("client-id")
+        .ok_or_else(|| anyhow::anyhow!("--client-id <n> is required"))?
+        .parse()
+        .map_err(|e| anyhow::anyhow!("--client-id: {e}"))?;
+    let connect_window = args.duration_ms("connect-timeout-ms", 10_000)?;
+    let idle = args.duration_ms("idle-timeout-ms", 60_000)?;
+
+    let mut stream = connect_with_retry(&addr, connect_window)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(idle))?;
+    let mut node = ParticipantNode::new(id);
+    write_frame(&mut stream, &node.join_msg().encode())?;
+    info!("participant {id} connected to {addr}");
+
+    loop {
+        let payload = match next_frame(&mut stream) {
+            Ok(Some(p)) => p,
+            Ok(None) => {
+                info!("participant {id}: coordinator closed the session");
+                return Ok(());
+            }
+            Err(e) => {
+                warn_log!("participant {id}: link error: {e:#}");
+                return Err(e);
+            }
+        };
+        let msg = Msg::decode(&payload)?;
+        if matches!(msg, Msg::Shutdown) {
+            info!("participant {id}: shutdown");
+            return Ok(());
+        }
+        let was_ready = node.ready();
+        let replies = node.handle(&msg)?;
+        if !was_ready && node.ready() {
+            // Machine-readable welcome acknowledgement for spawning tests.
+            use std::io::Write;
+            let mut out = std::io::stdout().lock();
+            let _ = writeln!(out, "JOINED {id}");
+            let _ = out.flush();
+        }
+        for reply in replies {
+            write_frame(&mut stream, &reply.encode())?;
+        }
+    }
+}
+
+/// Dial until the coordinator answers or the window closes (the
+/// coordinator may bind after this process launches).
+fn connect_with_retry(addr: &str, window: Duration) -> anyhow::Result<TcpStream> {
+    let t0 = Instant::now();
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) if t0.elapsed() < window => {
+                let _ = e;
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(e) => anyhow::bail!("could not connect to {addr} within {window:?}: {e}"),
+        }
+    }
+}
+
+/// `protocol::wire::read_frame` with the socket's read timeout doubling
+/// as the idle timeout: a timeout while *waiting for a frame to start*
+/// is a quiet `Ok(None)` (exit path), a timeout mid-frame is a real
+/// error.  The io-level error kinds must be inspected here — the
+/// vendored anyhow does not downcast.
+fn next_frame(stream: &mut TcpStream) -> anyhow::Result<Option<Vec<u8>>> {
+    let mut len = [0u8; 4];
+    match stream.read_exact(&mut len) {
+        Ok(()) => {}
+        Err(e) if e.kind() == ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+            warn_log!("idle timeout with no coordinator traffic");
+            return Ok(None);
+        }
+        Err(e) => return Err(e.into()),
+    }
+    let n = u32::from_le_bytes(len) as usize;
+    anyhow::ensure!(n <= MAX_FRAME, "incoming frame of {n} bytes exceeds cap {MAX_FRAME}");
+    let mut payload = vec![0u8; n];
+    stream
+        .read_exact(&mut payload)
+        .map_err(|e| anyhow::anyhow!("truncated frame ({n} byte payload): {e}"))?;
+    Ok(Some(payload))
+}

@@ -5,9 +5,16 @@
 //! ([`timing`]) and metrics collection ([`metrics`]).  Runs are
 //! parameterized by a [`crate::scenario::ScenarioConfig`] — data
 //! partition, partial participation, straggler compute profiles.
+//!
+//! The same round semantics also run *distributed*: [`net::NetTrainer`]
+//! fans the client-side phases out over a
+//! [`Transport`](crate::runtime::Transport) — in-process loopback or real
+//! TCP participants — with per-phase deadlines and a drop/renormalize
+//! fault policy (DESIGN.md §Transport).
 
 pub mod comm;
 pub mod metrics;
+pub mod net;
 pub mod plan;
 pub mod population;
 pub mod timing;
@@ -15,6 +22,7 @@ pub mod trainer;
 
 pub use comm::RoundComm;
 pub use metrics::RunMetrics;
+pub use net::{params_digest, partition_str, stats_digest, NetTrainer};
 pub use plan::{BwdDependency, ClientSync, CotangentRoute, RoundPlan};
 pub use population::Population;
 pub use timing::{AllocPolicy, RoundLatency};

@@ -1,0 +1,777 @@
+//! The networked coordinator: [`Trainer`](super::Trainer)'s round
+//! semantics fanned out over a [`Transport`] instead of in-process
+//! closures, plus the fault policy the paper's ρ-weighting implies
+//! (DESIGN.md §Transport).
+//!
+//! [`NetTrainer`] owns EVERY piece of model state and every reduction —
+//! participants are stateless compute peers (`runtime::node`).  Each
+//! split-round epoch is the same five phases as the in-process engine:
+//! fwd fan-out ([`Msg::FwdReq`] shipping the client-side weights), the
+//! coordinator-side server FP+BP (eqs 2–4) over the returned smashed
+//! batches, cotangent routing ([`Msg::BwdReq`] — ONE aggregated
+//! broadcast under eq 5 or per-client unicast), the client-VJP
+//! collection, and the fixed-ascending-order weighted reductions.  FL
+//! rides [`Msg::FullReq`] (τ local steps participant-side).  Because
+//! responses are slotted by participant id and every reduction runs in
+//! ascending id order over the buffered results, arrival order — and
+//! hence transport choice, thread count, or any delay below the deadline
+//! — never changes a bit of the result: a loopback run, a TCP run and an
+//! in-process [`Trainer`](super::Trainer) run of the same config agree
+//! bitwise (`tests/net_equivalence.rs`).
+//!
+//! **Fault policy** (chaos-tested in `tests/chaos.rs`): each collection
+//! phase has a deadline.  A participant that misses it — or whose
+//! connection drops — is removed from the federation, the round
+//! *restarts from its entry snapshot* over the survivors, and the
+//! aggregation weights renormalize to 1/|survivors| (ρ is uniform, eq 7).
+//! Restarting rather than patching the half-collected round is what
+//! makes the policy exact: a run that loses client c during round r is
+//! bitwise the run that excluded c before round r began.  A round
+//! consumes one channel draw keyed by its index, so a restart replays
+//! the same fading state.  When every participant is gone the run fails
+//! cleanly (no panic, no hang).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::data::init::{init_params, join_params};
+use crate::data::partition::Partition;
+use crate::data::{generate, Dataset};
+use crate::model::Manifest;
+use crate::protocol::{Msg, RunSetup};
+use crate::runtime::transport::{Incoming, Transport};
+use crate::runtime::{LoopbackTransport, ModelRuntime, ParallelExecutor, Tensor};
+use crate::tensor::{self, Params};
+use crate::wireless::ChannelState;
+use crate::{info, warn_log};
+
+use super::comm::round_comm;
+use super::plan::{ClientSync, CotangentRoute, RoundPlan};
+use super::population::Population;
+use super::timing::round_latency;
+use super::trainer::{RoundStats, TrainConfig};
+use super::SchemeKind;
+
+/// Client-side model state, coordinator-held (participants are
+/// stateless).  Mirrors the in-process trainer's representation with
+/// replicas keyed by participant id, so dropping a client drops its
+/// replica — the "excluded up front" equality needs exactly that.
+#[derive(Clone)]
+enum NetClientSide {
+    /// One shared logical client model (SFL-GA's eq 19, and FL).
+    Shared(Params),
+    /// Per-participant replicas (SFL / PSL / the drift ablation).
+    PerClient(BTreeMap<u64, Params>),
+}
+
+/// A collection phase's outcome: every expected response (slotted in
+/// cohort order), or the peers to drop.
+enum Phase {
+    Complete(Vec<Msg>),
+    Fault { dead: Vec<u64>, reason: String },
+}
+
+/// The networked round engine; see the module docs.
+pub struct NetTrainer<T: Transport> {
+    pub cfg: TrainConfig,
+    /// Per-phase collection deadline (timeout ⇒ drop ⇒ renormalize).
+    deadline: Duration,
+    transport: T,
+    rt: ModelRuntime,
+    pool: ParallelExecutor,
+    pop: Population,
+    test: Dataset,
+    client_side: NetClientSide,
+    ws: Params,
+    w_full: Params,
+    round: usize,
+    seq: u64,
+    /// Participants dropped by the fault policy, in drop order.
+    dropped: Vec<u64>,
+}
+
+impl NetTrainer<LoopbackTransport> {
+    /// In-process federation of `n` loopback participants with ids
+    /// `0..n` — the transport-layer twin of an `n`-client
+    /// [`Trainer`](super::Trainer).
+    pub fn loopback(
+        manifest: &Manifest,
+        cfg: TrainConfig,
+        n: usize,
+    ) -> anyhow::Result<NetTrainer<LoopbackTransport>> {
+        let ids: Vec<u64> = (0..n as u64).collect();
+        let transport = LoopbackTransport::new(&ids, cfg.threads)?;
+        NetTrainer::new(manifest, cfg, Duration::from_secs(60), transport)
+    }
+}
+
+impl<T: Transport> NetTrainer<T> {
+    /// Coordinator over an already-joined transport.  Sends every
+    /// participant its [`Msg::Welcome`] configuration.
+    pub fn new(
+        manifest: &Manifest,
+        cfg: TrainConfig,
+        deadline: Duration,
+        mut transport: T,
+    ) -> anyhow::Result<NetTrainer<T>> {
+        anyhow::ensure!(cfg.rounds > 0 && cfg.tau > 0, "rounds and tau must be positive");
+        anyhow::ensure!(cfg.eval_every > 0, "eval_every must be positive");
+        anyhow::ensure!(cfg.test_samples > 0, "test_samples must be positive");
+        anyhow::ensure!(cfg.samples_per_client > 0, "samples_per_client must be positive");
+        cfg.scenario.validate()?;
+        // The networked cohort IS the live participant set: the scenario
+        // engine's virtual sampling and straggler profiles stay with the
+        // in-process simulator (real stragglers are the chaos harness's
+        // job here).
+        anyhow::ensure!(
+            cfg.scenario.full_participation() && !cfg.scenario.straggler.enabled(),
+            "the networked runtime runs full participation over joined clients; \
+             partial participation / simulated stragglers are in-process features"
+        );
+        let ids = transport.clients();
+        anyhow::ensure!(!ids.is_empty(), "no participants joined the federation");
+
+        let rt = ModelRuntime::native(manifest, &cfg.dataset)?;
+        let spec = rt.spec().clone();
+        anyhow::ensure!(
+            rt.dynamic_batch() || cfg.test_samples % spec.eval_batch == 0,
+            "test_samples must be a multiple of the eval batch {}",
+            spec.eval_batch
+        );
+        // Per-client state (gains, capacities) is keyed by (seed, id), so
+        // the population only needs to span the joined id range.
+        let n_pop = ids.iter().copied().max().unwrap_or(0) + 1;
+        let pop = Population::new(
+            cfg.seed,
+            n_pop,
+            cfg.scenario.clone(),
+            cfg.net.clone(),
+            cfg.comp.clone(),
+        )?;
+        let test = generate(&spec, &cfg.dataset, cfg.test_samples, cfg.seed ^ 0x7E57);
+        let params = init_params(&spec, cfg.seed ^ 0x1417);
+        let shared = match cfg.scheme.plan() {
+            RoundPlan::Full => true,
+            RoundPlan::Split { sync, .. } => sync == ClientSync::SharedStep,
+        };
+        let client_side = if shared {
+            NetClientSide::Shared(params.clone())
+        } else {
+            NetClientSide::PerClient(ids.iter().map(|&id| (id, params.clone())).collect())
+        };
+        let pool = ParallelExecutor::new(cfg.threads);
+        let eval_jobs = cfg.test_samples.div_ceil(spec.eval_batch).max(1);
+        rt.set_eval_parallelism((pool.threads() / eval_jobs).max(1));
+
+        let setup = RunSetup {
+            dataset: cfg.dataset.clone(),
+            seed: cfg.seed,
+            partition: partition_str(&cfg.scenario.partition),
+            samples_per_client: cfg.samples_per_client,
+        };
+        for &id in &ids {
+            transport.send(id, &Msg::Welcome { setup: setup.clone() });
+        }
+        Ok(NetTrainer {
+            cfg,
+            deadline,
+            transport,
+            rt,
+            pool,
+            pop,
+            test,
+            client_side,
+            ws: params.clone(),
+            w_full: params,
+            round: 0,
+            seq: 0,
+            dropped: Vec::new(),
+        })
+    }
+
+    /// Live participant ids, ascending.
+    pub fn live(&self) -> Vec<u64> {
+        self.transport.clients()
+    }
+
+    /// Participants removed by the fault policy so far, in drop order.
+    pub fn dropped(&self) -> &[u64] {
+        &self.dropped
+    }
+
+    pub fn round_index(&self) -> usize {
+        self.round
+    }
+
+    fn next_seq(&mut self) -> u64 {
+        self.seq += 1;
+        self.seq
+    }
+
+    /// Run the full fixed-cut training; mirrors
+    /// [`Trainer::run`](super::Trainer::run) stats-for-stats (evaluation
+    /// is synchronous here — the in-process engine's deferred eval is
+    /// documented bitwise-equal to it).
+    pub fn run(&mut self, cut: usize) -> anyhow::Result<Vec<RoundStats>> {
+        let mut out = Vec::with_capacity(self.cfg.rounds);
+        for _ in 0..self.cfg.rounds {
+            let mut stats = self.run_round(cut)?;
+            if self.round % self.cfg.eval_every == 0 || self.round == self.cfg.rounds {
+                stats.test = Some(self.evaluate(cut)?);
+            }
+            out.push(stats);
+        }
+        Ok(out)
+    }
+
+    /// One fault-tolerant round at cut `v`: execute over the live set;
+    /// on a drop, restore the entry snapshot, renormalize to the
+    /// survivors and restart (same channel draw — see the module docs).
+    pub fn run_round(&mut self, cut: usize) -> anyhow::Result<RoundStats> {
+        let snapshot = (self.client_side.clone(), self.ws.clone(), self.w_full.clone());
+        let draw = self.round as u64;
+        loop {
+            let ids = self.transport.clients();
+            anyhow::ensure!(
+                !ids.is_empty(),
+                "round {}: every participant dropped out",
+                self.round
+            );
+            let k = ids.len();
+            // ρ is uniform, so the cohort weights renormalize to 1/K over
+            // whoever is still standing.
+            let weights = vec![1.0 / k as f64; k];
+            let attempt = match self.cfg.scheme.plan() {
+                RoundPlan::Split { route, sync } => {
+                    self.round_split(cut, route, sync, &ids, &weights)?
+                }
+                RoundPlan::Full => self.round_full(&ids, &weights)?,
+            };
+            match attempt {
+                Ok(train_loss) => {
+                    let stats = self.finish_round(cut, draw, &ids, train_loss);
+                    for &id in &ids {
+                        self.transport.send(id, &Msg::RoundDone { round: stats.round as u64 });
+                    }
+                    return Ok(stats);
+                }
+                Err((dead, reason)) => {
+                    warn_log!(
+                        "round {}: dropping {dead:?} ({reason}); restarting over survivors",
+                        self.round
+                    );
+                    let (cs, ws, wf) = snapshot.clone();
+                    self.client_side = cs;
+                    self.ws = ws;
+                    self.w_full = wf;
+                    for &id in &dead {
+                        self.transport.drop_client(id);
+                        self.dropped.push(id);
+                        if let NetClientSide::PerClient(reps) = &mut self.client_side {
+                            reps.remove(&id);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Account the completed round (comm + latency over exactly the
+    /// cohort, as the in-process engine does) and advance the clock.
+    fn finish_round(&mut self, cut: usize, draw: u64, ids: &[u64], train_loss: f64) -> RoundStats {
+        let k = ids.len();
+        let cohort: Vec<usize> = ids.iter().map(|&id| id as usize).collect();
+        let state_round = ChannelState { gains: self.pop.gains_for(draw, &cohort) };
+        let mut comp_round = self.cfg.comp.clone();
+        comp_round.client_caps = self.pop.caps_for(&cohort);
+        let spec = self.rt.spec().clone();
+        let cut_spec = spec.cut(cut);
+        let comm = round_comm(self.cfg.scheme, &spec, cut_spec, &comp_round, k, self.cfg.tau);
+        let latency = round_latency(
+            self.cfg.scheme,
+            &spec,
+            cut_spec,
+            &self.cfg.net,
+            &comp_round,
+            &state_round,
+            self.cfg.alloc,
+            self.cfg.tau,
+        );
+        self.round += 1;
+        RoundStats {
+            round: self.round,
+            cut,
+            participants: k,
+            train_loss,
+            comm,
+            latency,
+            test: None,
+        }
+    }
+
+    /// One split-round attempt over `ids`; `Ok(Err(..))` names the peers
+    /// to drop.  The math is phase-for-phase the in-process engine's
+    /// `round_split`, with the client kernels remote.
+    #[allow(clippy::type_complexity)]
+    fn round_split(
+        &mut self,
+        cut: usize,
+        route: CotangentRoute,
+        sync: ClientSync,
+        ids: &[u64],
+        weights: &[f64],
+    ) -> anyhow::Result<Result<f64, (Vec<u64>, String)>> {
+        let nc = self.rt.spec().cut(cut).client_params;
+        let k = ids.len();
+        let lr = self.cfg.lr;
+        let tau = self.cfg.tau;
+        let base_step = self.round * tau;
+        let mut g_ws_acc = tensor::zeros_like(&self.ws[nc..]);
+        let mut g_c_acc = match &self.client_side {
+            NetClientSide::Shared(w) => tensor::zeros_like(&w[..nc]),
+            NetClientSide::PerClient(_) => Params::new(),
+        };
+        let mut mean_loss = 0.0;
+        for epoch in 0..tau {
+            let step = (base_step + epoch) as u64;
+            // Phase 1 — client-fwd fan-out (eq 1): ship each participant
+            // its current client-side weights and the batch key.
+            let mut seq2slot = BTreeMap::new();
+            let mut seqs = Vec::with_capacity(k);
+            for (j, &id) in ids.iter().enumerate() {
+                let wc = match &self.client_side {
+                    NetClientSide::Shared(w) => w[..nc].to_vec(),
+                    NetClientSide::PerClient(reps) => reps[&id][..nc].to_vec(),
+                };
+                let seq = self.next_seq();
+                seq2slot.insert(seq, j);
+                seqs.push(seq);
+                self.transport.send(id, &Msg::FwdReq { seq, cut: cut as u32, step, wc });
+            }
+            let fwds = match self.collect(&seq2slot, ids) {
+                Phase::Complete(msgs) => msgs,
+                Phase::Fault { dead, reason } => return Ok(Err((dead, reason))),
+            };
+            let mut smashed = Vec::with_capacity(k);
+            let mut labels = Vec::with_capacity(k);
+            for msg in fwds {
+                match msg {
+                    Msg::FwdOk { smashed: s, labels: y, .. } => {
+                        smashed.push(s);
+                        labels.push(y);
+                    }
+                    other => anyhow::bail!("expected fwd-ok, got {}", other.name()),
+                }
+            }
+            // Phase 2 — server FP+BP (eqs 2–4) on the coordinator's own
+            // pool, results in ascending cohort order.
+            let rt = &self.rt;
+            let ws_srv = &self.ws[nc..];
+            let smashed_ref = &smashed;
+            let labels_ref = &labels;
+            let servers: Vec<(f32, Params, Tensor)> = self.pool.map_with_scratch(k, |scratch, j| {
+                rt.server_grad_with(scratch, cut, ws_srv, &smashed_ref[j], &labels_ref[j])
+            })?;
+            // Phase 2b — the ρ-weighted server reduction (eq 7), fixed
+            // ascending order.
+            tensor::zero(&mut g_ws_acc);
+            let mut loss_acc = 0.0;
+            for (j, (loss, g_ws, _)) in servers.iter().enumerate() {
+                loss_acc += weights[j] * *loss as f64;
+                tensor::weighted_accumulate(&mut g_ws_acc, g_ws, weights[j]);
+            }
+            // Phase 3 — cotangent routing: eq-5 aggregated broadcast
+            // (ONE tensor for everyone) or per-client unicast.
+            let mut seq2slot_bwd = BTreeMap::new();
+            match route {
+                CotangentRoute::Broadcast => {
+                    let mut agg = Tensor::zeros(&servers[0].2.shape);
+                    for (j, (_, _, g_s)) in servers.iter().enumerate() {
+                        tensor::weighted_accumulate_flat(&mut agg.data, &g_s.data, weights[j]);
+                    }
+                    for (j, &id) in ids.iter().enumerate() {
+                        seq2slot_bwd.insert(seqs[j], j);
+                        self.transport
+                            .send(id, &Msg::BwdReq { seq: seqs[j], cotangent: agg.clone() });
+                    }
+                }
+                CotangentRoute::Unicast => {
+                    for (j, &id) in ids.iter().enumerate() {
+                        seq2slot_bwd.insert(seqs[j], j);
+                        self.transport.send(
+                            id,
+                            &Msg::BwdReq { seq: seqs[j], cotangent: servers[j].2.clone() },
+                        );
+                    }
+                }
+            }
+            // Phase 4 — client-bwd collection (eq 6).
+            let bwds = match self.collect(&seq2slot_bwd, ids) {
+                Phase::Complete(msgs) => msgs,
+                Phase::Fault { dead, reason } => return Ok(Err((dead, reason))),
+            };
+            let mut g_c_parts = Vec::with_capacity(k);
+            for msg in bwds {
+                match msg {
+                    Msg::BwdOk { grad, .. } => g_c_parts.push(grad),
+                    other => anyhow::bail!("expected bwd-ok, got {}", other.name()),
+                }
+            }
+            // Apply this epoch's updates on the coordinator: server step
+            // on the aggregated gradient, then the scheme's client step.
+            tensor::sgd_step(&mut self.ws[nc..], &g_ws_acc, lr);
+            match &mut self.client_side {
+                NetClientSide::Shared(w) => {
+                    tensor::zero(&mut g_c_acc);
+                    for (j, g_c) in g_c_parts.iter().enumerate() {
+                        tensor::weighted_accumulate(&mut g_c_acc, g_c, weights[j]);
+                    }
+                    tensor::sgd_step(&mut w[..nc], &g_c_acc, lr);
+                }
+                NetClientSide::PerClient(reps) => {
+                    for (j, g_c) in g_c_parts.iter().enumerate() {
+                        let rep = reps.get_mut(&ids[j]).expect("live participant has a replica");
+                        tensor::sgd_step(&mut rep[..nc], g_c, lr);
+                    }
+                }
+            }
+            mean_loss += loss_acc / tau as f64;
+        }
+        // Phase 5 — client-side FedAvg (SFL only): aggregate the cohort's
+        // replicas and write the average back.
+        if sync == ClientSync::FedAvg {
+            if let NetClientSide::PerClient(reps) = &mut self.client_side {
+                let mut agg = tensor::zeros_like(&reps[&ids[0]][..nc]);
+                for (j, id) in ids.iter().enumerate() {
+                    tensor::weighted_accumulate(&mut agg, &reps[id][..nc], weights[j]);
+                }
+                for id in ids {
+                    let rep = reps.get_mut(id).expect("live participant has a replica");
+                    for (dst, src) in rep[..nc].iter_mut().zip(&agg) {
+                        dst.copy_from_slice(src);
+                    }
+                }
+            }
+        }
+        Ok(Ok(mean_loss))
+    }
+
+    /// One FL-round attempt: τ local steps participant-side, weighted
+    /// model aggregation coordinator-side (ascending order).
+    #[allow(clippy::type_complexity)]
+    fn round_full(
+        &mut self,
+        ids: &[u64],
+        weights: &[f64],
+    ) -> anyhow::Result<Result<f64, (Vec<u64>, String)>> {
+        let k = ids.len();
+        let base_step = (self.round * self.cfg.tau) as u64;
+        let mut seq2slot = BTreeMap::new();
+        for (j, &id) in ids.iter().enumerate() {
+            let seq = self.next_seq();
+            seq2slot.insert(seq, j);
+            let req = Msg::FullReq {
+                seq,
+                step0: base_step,
+                tau: self.cfg.tau as u32,
+                lr: self.cfg.lr,
+                w: self.w_full.clone(),
+            };
+            self.transport.send(id, &req);
+        }
+        let fulls = match self.collect(&seq2slot, ids) {
+            Phase::Complete(msgs) => msgs,
+            Phase::Fault { dead, reason } => return Ok(Err((dead, reason))),
+        };
+        let mut agg = tensor::zeros_like(&self.w_full);
+        let mut loss_acc = 0.0;
+        for (j, msg) in fulls.iter().enumerate() {
+            match msg {
+                Msg::FullOk { loss, w, .. } => {
+                    loss_acc += weights[j] * *loss;
+                    tensor::weighted_accumulate(&mut agg, w, weights[j]);
+                }
+                other => anyhow::bail!("expected full-ok, got {}", other.name()),
+            }
+        }
+        self.w_full = agg;
+        Ok(Ok(loss_acc))
+    }
+
+    /// Await one response per expected `seq` (any arrival order; results
+    /// slotted into cohort order), up to the phase deadline.  Stale seqs
+    /// from an aborted attempt are ignored; a gone peer or the deadline
+    /// yields the drop set.
+    fn collect(&mut self, seq2slot: &BTreeMap<u64, usize>, ids: &[u64]) -> Phase {
+        let k = ids.len();
+        let mut slots: Vec<Option<Msg>> = vec![None; k];
+        let mut got = 0usize;
+        let t_end = Instant::now() + self.deadline;
+        while got < k {
+            let left = t_end.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Phase::Fault {
+                    dead: missing_ids(&slots, ids),
+                    reason: format!("deadline {:?} exceeded", self.deadline),
+                };
+            }
+            match self.transport.recv(left) {
+                Some((id, Incoming::Msg(msg))) => {
+                    let seq = match &msg {
+                        Msg::FwdOk { seq, .. } | Msg::BwdOk { seq, .. }
+                        | Msg::FullOk { seq, .. } => Some(*seq),
+                        _ => None,
+                    };
+                    match seq.and_then(|s| seq2slot.get(&s)) {
+                        Some(&j) if slots[j].is_none() => {
+                            slots[j] = Some(msg);
+                            got += 1;
+                        }
+                        // Stale (pre-restart) or duplicate response.
+                        _ => info!("ignoring stale {} from {id}", msg.name()),
+                    }
+                }
+                Some((id, Incoming::Gone(reason))) => {
+                    return Phase::Fault { dead: vec![id], reason };
+                }
+                None => {
+                    // recv timed out before the phase deadline only for
+                    // the loopback (which is synchronous): whoever has no
+                    // response now never answers.
+                    return Phase::Fault {
+                        dead: missing_ids(&slots, ids),
+                        reason: "no response".into(),
+                    };
+                }
+            }
+        }
+        Phase::Complete(slots.into_iter().map(|s| s.expect("all slots filled")).collect())
+    }
+
+    // ------------------------------------------------------------- eval
+
+    /// Global model at cut v — same composition as the in-process
+    /// engine's.
+    pub fn global_params(&self, cut: usize) -> Params {
+        if self.cfg.scheme == SchemeKind::Fl {
+            return self.w_full.clone();
+        }
+        let nc = self.rt.spec().cut(cut).client_params;
+        match &self.client_side {
+            NetClientSide::Shared(w) => join_params(&w[..nc], &self.ws[nc..]),
+            NetClientSide::PerClient(reps) => {
+                let rho = 1.0 / reps.len() as f64;
+                let first = reps.values().next().expect("at least one replica");
+                let mut wc_avg = tensor::zeros_like(&first[..nc]);
+                for w in reps.values() {
+                    tensor::weighted_accumulate(&mut wc_avg, &w[..nc], rho);
+                }
+                join_params(&wc_avg, &self.ws[nc..])
+            }
+        }
+    }
+
+    /// Test-set (loss, accuracy) of the global model — the same
+    /// per-batch fan-out and fixed-order reduction as the in-process
+    /// engine (eval is always coordinator-side; participants never see
+    /// the test split).
+    pub fn evaluate(&self, cut: usize) -> anyhow::Result<(f64, f64)> {
+        let total = self.test.len();
+        anyhow::ensure!(total > 0, "empty test set");
+        let eb = self.rt.spec().eval_batch;
+        let w = Arc::new(self.global_params(cut));
+        let rt = &self.rt;
+        let test = &self.test;
+        let bounds: Vec<(usize, usize)> =
+            (0..total).step_by(eb).map(|lo| (lo, (lo + eb).min(total))).collect();
+        let bounds_ref = &bounds;
+        let scores = self.pool.map_with_scratch(bounds.len(), |scratch, b| {
+            let (lo, hi) = bounds_ref[b];
+            let idx: Vec<usize> = (lo..hi).collect();
+            let (x, y) = test.batch(&idx);
+            let (l, c) = rt.eval_with(scratch, &w, &x, &y)?;
+            Ok((l as f64 * (hi - lo) as f64, c as f64))
+        })?;
+        let mut loss = 0.0;
+        let mut correct = 0.0;
+        for (l, c) in scores {
+            loss += l;
+            correct += c;
+        }
+        Ok((loss / total as f64, correct / total as f64))
+    }
+
+    /// End the run: every live participant gets a [`Msg::Shutdown`].
+    pub fn shutdown(&mut self) {
+        for id in self.transport.clients() {
+            self.transport.send(id, &Msg::Shutdown);
+        }
+    }
+}
+
+/// Cohort slots still waiting on a response.
+fn missing_ids(slots: &[Option<Msg>], ids: &[u64]) -> Vec<u64> {
+    slots
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.is_none())
+        .map(|(j, _)| ids[j])
+        .collect()
+}
+
+/// CLI/wire spelling of a partition (the inverse of
+/// [`Partition::parse`]).
+pub fn partition_str(p: &Partition) -> String {
+    match p {
+        Partition::Iid => "iid".into(),
+        Partition::Dirichlet(a) => format!("dirichlet:{a}"),
+        Partition::Shards(s) => format!("shards:{s}"),
+    }
+}
+
+// ----------------------------------------------------------- digesting
+
+/// FNV-1a over a byte stream — a tiny content digest for bitwise
+/// comparisons across processes (stats files, final parameters).
+#[derive(Clone, Copy)]
+pub struct Digest(u64);
+
+impl Digest {
+    pub fn new() -> Digest {
+        Digest(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn bytes(&mut self, bytes: &[u8]) -> &mut Self {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x1000_0000_01b3);
+        }
+        self
+    }
+
+    pub fn f32s(&mut self, xs: &[f32]) -> &mut Self {
+        for &x in xs {
+            self.bytes(&x.to_bits().to_le_bytes());
+        }
+        self
+    }
+
+    pub fn f64(&mut self, x: f64) -> &mut Self {
+        self.bytes(&x.to_bits().to_le_bytes())
+    }
+
+    pub fn value(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Digest {
+    fn default() -> Self {
+        Digest::new()
+    }
+}
+
+/// Bitwise digest of a parameter set.
+pub fn params_digest(params: &Params) -> u64 {
+    let mut d = Digest::new();
+    for layer in params {
+        d.f32s(layer);
+    }
+    d.value()
+}
+
+/// Bitwise digest of a run's stats (every float hashed at full
+/// precision) — two runs agree iff their digests do, within FNV odds.
+///
+/// `tests/net_equivalence.rs` and the `sfl-coordinator` binary compare
+/// runs across processes through this digest.
+pub fn stats_digest(stats: &[RoundStats]) -> u64 {
+    let mut d = Digest::new();
+    for s in stats {
+        d.bytes(&(s.round as u64).to_le_bytes());
+        d.bytes(&(s.cut as u64).to_le_bytes());
+        d.bytes(&(s.participants as u64).to_le_bytes());
+        d.f64(s.train_loss);
+        d.f64(s.comm.uplink_bits);
+        d.f64(s.comm.downlink_bits);
+        d.f64(s.latency.uplink_leg);
+        d.f64(s.latency.downlink_leg);
+        match s.test {
+            Some((l, a)) => {
+                d.bytes(&[1]);
+                d.f64(l);
+                d.f64(a);
+            }
+            None => {
+                d.bytes(&[0]);
+            }
+        }
+    }
+    d.value()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::ScenarioConfig;
+
+    fn tiny_cfg() -> TrainConfig {
+        TrainConfig {
+            rounds: 1,
+            tau: 1,
+            samples_per_client: 16,
+            test_samples: 64,
+            eval_every: 1,
+            threads: 1,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn partition_str_is_parse_inverse() {
+        for p in [Partition::Iid, Partition::Dirichlet(0.3), Partition::Shards(2)] {
+            assert_eq!(Partition::parse(&partition_str(&p)).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn digests_are_bit_sensitive() {
+        let a = vec![vec![1.0f32, 2.0], vec![3.0]];
+        let mut b = a.clone();
+        assert_eq!(params_digest(&a), params_digest(&b));
+        // Flip one mantissa bit: the digest must move.
+        b[1][0] = f32::from_bits(b[1][0].to_bits() ^ 1);
+        assert_ne!(params_digest(&a), params_digest(&b));
+        // ±0.0 compare equal as floats but are distinct bit patterns.
+        assert_ne!(
+            params_digest(&vec![vec![0.0f32]]),
+            params_digest(&vec![vec![-0.0f32]])
+        );
+    }
+
+    #[test]
+    fn net_trainer_rejects_simulator_only_scenarios() {
+        let manifest = Manifest::builtin();
+        // Partial participation is an in-process simulator feature.
+        let mut cfg = tiny_cfg();
+        cfg.scenario = ScenarioConfig { participation: 0.5, ..Default::default() };
+        assert!(NetTrainer::loopback(&manifest, cfg, 2).is_err());
+        // Zero participants cannot form a federation.
+        assert!(NetTrainer::loopback(&manifest, tiny_cfg(), 0).is_err());
+    }
+
+    #[test]
+    fn loopback_round_runs_and_reports() {
+        let manifest = Manifest::builtin();
+        let mut nt = NetTrainer::loopback(&manifest, tiny_cfg(), 2).unwrap();
+        let stats = nt.run(2).unwrap();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].participants, 2);
+        assert!(stats[0].train_loss.is_finite());
+        let (loss, acc) = stats[0].test.unwrap();
+        assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+        assert!(nt.dropped().is_empty());
+        nt.shutdown();
+    }
+}

@@ -69,6 +69,8 @@ pub mod ddqn;
 
 pub mod runtime;
 
+pub mod protocol;
+
 pub mod data;
 
 pub mod scenario;

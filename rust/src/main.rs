@@ -8,6 +8,10 @@
 //!
 //! Everything runs on the built-in manifest + native pure-Rust backend;
 //! no artifacts, Python or PJRT required (see DESIGN.md §Backends).
+//!
+//! The networked runtime ships as two sibling binaries: `sfl-coordinator`
+//! (listener, round engine, fault policy) and `sfl-participant` (stateless
+//! compute peer).  See DESIGN.md §Transport.
 
 use std::path::{Path, PathBuf};
 

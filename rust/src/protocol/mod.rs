@@ -1,0 +1,342 @@
+//! The coordinator ⇄ participant message protocol (DESIGN.md §Transport).
+//!
+//! One round trip of the paper's §II-A loop maps onto four messages:
+//! [`Msg::FwdReq`] ships the client-side weights and the batch key down,
+//! [`Msg::FwdOk`] returns the smashed activations (eq 1) with the batch's
+//! labels, [`Msg::BwdReq`] routes the cotangent back — ONE aggregated
+//! tensor under SFL-GA's eq-5 broadcast, a per-client tensor under the
+//! SFL/PSL unicast — and [`Msg::BwdOk`] returns the client-side VJP
+//! (eq 6).  FL rides [`Msg::FullReq`]/[`Msg::FullOk`] (τ local steps on a
+//! shipped full model).  [`Msg::Join`]/[`Msg::Welcome`] are the
+//! rendezvous, [`Msg::RoundDone`] marks round boundaries and
+//! [`Msg::Shutdown`] ends a run.
+//!
+//! Participants are **stateless between rounds**: all model state, every
+//! reduction and every scheme policy live on the coordinator (the
+//! Psyche/xaynet role split) — a participant only derives its own batches
+//! (a pure function of `(seed, client, step)`, configured once by
+//! [`RunSetup`]) and runs the client-side forward/backward kernels.  The
+//! only cross-message state is the in-flight forward context a
+//! [`Msg::BwdReq`] resolves by `seq`.
+//!
+//! Encoding: tag byte + fields over [`wire`]'s LE primitives, one message
+//! per length-prefixed frame.  [`Msg::decode`] never panics on arbitrary
+//! or truncated input, and encode→decode is bit-exact (f32 bits travel
+//! raw) — both properties are fuzzed in `tests/protocol.rs`.
+
+pub mod wire;
+
+use crate::model::NUM_CUTS;
+use crate::runtime::Tensor;
+use crate::tensor::Params;
+use wire::{ByteReader, ByteWriter};
+
+/// Bumped on any wire-format change; [`Msg::Join`] carries it and the
+/// coordinator rejects mismatches at rendezvous.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Per-run configuration a participant needs to derive its own batch
+/// stream and run FL local steps — shipped once in [`Msg::Welcome`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSetup {
+    /// Dataset name (selects the builtin manifest entry).
+    pub dataset: String,
+    /// Run seed: the participant's `ClientSampler` derives from it, so
+    /// its batches are bitwise the ones the in-process trainer would draw.
+    pub seed: u64,
+    /// Data partition in CLI syntax (`iid`, `dirichlet:0.3`, `shards:2`).
+    pub partition: String,
+    /// Samples per client shard.
+    pub samples_per_client: usize,
+}
+
+impl RunSetup {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.str(&self.dataset);
+        w.u64(self.seed);
+        w.str(&self.partition);
+        w.usize(self.samples_per_client);
+    }
+
+    fn decode(r: &mut ByteReader) -> anyhow::Result<RunSetup> {
+        Ok(RunSetup {
+            dataset: r.str()?,
+            seed: r.u64()?,
+            partition: r.str()?,
+            samples_per_client: r.usize()?,
+        })
+    }
+}
+
+/// The protocol messages.  `seq` ties a response to its request and is
+/// globally unique per coordinator run (round restarts after a fault
+/// re-issue work under fresh seqs, so stale replies are recognizably
+/// stale).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// participant → coordinator: rendezvous claim of `client` id.
+    Join { client: u64, version: u32 },
+    /// coordinator → participant: rendezvous accept + run configuration.
+    Welcome { setup: RunSetup },
+    /// coordinator → participant: run the eq-1 client forward at `cut`
+    /// with weights `wc` on the participant's own batch for `step`.
+    FwdReq { seq: u64, cut: u32, step: u64, wc: Params },
+    /// participant → coordinator: the smashed activations plus the
+    /// batch's one-hot labels (labels travel with the smashed data, as in
+    /// SplitFed — the coordinator never touches client data directly).
+    FwdOk { seq: u64, smashed: Tensor, labels: Tensor },
+    /// coordinator → participant: the routed cotangent for `seq` — the
+    /// eq-5 aggregated broadcast (same tensor to everyone) or the
+    /// per-client unicast, depending on the scheme's `RoundPlan`.
+    BwdReq { seq: u64, cotangent: Tensor },
+    /// participant → coordinator: the eq-6 client-side VJP.
+    BwdOk { seq: u64, grad: Params },
+    /// coordinator → participant (FL): run `tau` local SGD steps from
+    /// `w`, batches keyed from `step0`.
+    FullReq { seq: u64, step0: u64, tau: u32, lr: f32, w: Params },
+    /// participant → coordinator (FL): τ-averaged train loss + the
+    /// locally-updated model.
+    FullOk { seq: u64, loss: f64, w: Params },
+    /// coordinator → participant: round boundary (any in-flight forward
+    /// context is dropped).
+    RoundDone { round: u64 },
+    /// coordinator → participant: end of run.
+    Shutdown,
+}
+
+const TAG_JOIN: u8 = 1;
+const TAG_WELCOME: u8 = 2;
+const TAG_FWD_REQ: u8 = 3;
+const TAG_FWD_OK: u8 = 4;
+const TAG_BWD_REQ: u8 = 5;
+const TAG_BWD_OK: u8 = 6;
+const TAG_FULL_REQ: u8 = 7;
+const TAG_FULL_OK: u8 = 8;
+const TAG_ROUND_DONE: u8 = 9;
+const TAG_SHUTDOWN: u8 = 10;
+
+fn encode_params(w: &mut ByteWriter, p: &Params) {
+    w.u32(p.len() as u32);
+    for layer in p {
+        w.f32s(layer);
+    }
+}
+
+fn decode_params(r: &mut ByteReader) -> anyhow::Result<Params> {
+    let n = r.u32()? as usize;
+    // A layer costs at least a 4-byte length on the wire; the per-layer
+    // f32s reads enforce the real bounds.
+    anyhow::ensure!(
+        n <= 1024 && n * 4 <= r.remaining() + 4,
+        "implausible layer count {n} for {} remaining bytes",
+        r.remaining()
+    );
+    (0..n).map(|_| r.f32s()).collect()
+}
+
+fn encode_tensor(w: &mut ByteWriter, t: &Tensor) {
+    w.usizes(&t.shape);
+    w.f32s(&t.data);
+}
+
+fn decode_tensor(r: &mut ByteReader) -> anyhow::Result<Tensor> {
+    let shape = r.usizes()?;
+    let data = r.f32s()?;
+    // Tensor::new panics on a shape/len mismatch; validate first so a
+    // corrupt frame errors instead (checked: the product may overflow).
+    let elems = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| anyhow::anyhow!("tensor shape {shape:?} overflows"))?;
+    anyhow::ensure!(
+        elems == data.len(),
+        "tensor shape {shape:?} wants {elems} elements, payload has {}",
+        data.len()
+    );
+    Ok(Tensor::new(data, shape))
+}
+
+impl Msg {
+    /// Short name for logs and drop diagnostics.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Msg::Join { .. } => "join",
+            Msg::Welcome { .. } => "welcome",
+            Msg::FwdReq { .. } => "fwd-req",
+            Msg::FwdOk { .. } => "fwd-ok",
+            Msg::BwdReq { .. } => "bwd-req",
+            Msg::BwdOk { .. } => "bwd-ok",
+            Msg::FullReq { .. } => "full-req",
+            Msg::FullOk { .. } => "full-ok",
+            Msg::RoundDone { .. } => "round-done",
+            Msg::Shutdown => "shutdown",
+        }
+    }
+
+    /// Encode into one frame payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        match self {
+            Msg::Join { client, version } => {
+                w.u8(TAG_JOIN);
+                w.u64(*client);
+                w.u32(*version);
+            }
+            Msg::Welcome { setup } => {
+                w.u8(TAG_WELCOME);
+                setup.encode(&mut w);
+            }
+            Msg::FwdReq { seq, cut, step, wc } => {
+                w.u8(TAG_FWD_REQ);
+                w.u64(*seq);
+                w.u32(*cut);
+                w.u64(*step);
+                encode_params(&mut w, wc);
+            }
+            Msg::FwdOk { seq, smashed, labels } => {
+                w.u8(TAG_FWD_OK);
+                w.u64(*seq);
+                encode_tensor(&mut w, smashed);
+                encode_tensor(&mut w, labels);
+            }
+            Msg::BwdReq { seq, cotangent } => {
+                w.u8(TAG_BWD_REQ);
+                w.u64(*seq);
+                encode_tensor(&mut w, cotangent);
+            }
+            Msg::BwdOk { seq, grad } => {
+                w.u8(TAG_BWD_OK);
+                w.u64(*seq);
+                encode_params(&mut w, grad);
+            }
+            Msg::FullReq { seq, step0, tau, lr, w: params } => {
+                w.u8(TAG_FULL_REQ);
+                w.u64(*seq);
+                w.u64(*step0);
+                w.u32(*tau);
+                w.f32(*lr);
+                encode_params(&mut w, params);
+            }
+            Msg::FullOk { seq, loss, w: params } => {
+                w.u8(TAG_FULL_OK);
+                w.u64(*seq);
+                w.f64(*loss);
+                encode_params(&mut w, params);
+            }
+            Msg::RoundDone { round } => {
+                w.u8(TAG_ROUND_DONE);
+                w.u64(*round);
+            }
+            Msg::Shutdown => {
+                w.u8(TAG_SHUTDOWN);
+            }
+        }
+        w.into_bytes()
+    }
+
+    /// Decode one frame payload.  Never panics; every malformed input is
+    /// an `Err` (fuzzed in `tests/protocol.rs`).
+    pub fn decode(bytes: &[u8]) -> anyhow::Result<Msg> {
+        let mut r = ByteReader::new(bytes);
+        let tag = r.u8()?;
+        let msg = match tag {
+            TAG_JOIN => Msg::Join { client: r.u64()?, version: r.u32()? },
+            TAG_WELCOME => Msg::Welcome { setup: RunSetup::decode(&mut r)? },
+            TAG_FWD_REQ => {
+                let seq = r.u64()?;
+                let cut = r.u32()?;
+                anyhow::ensure!(
+                    (1..=NUM_CUTS as u32).contains(&cut),
+                    "cut {cut} outside 1..={NUM_CUTS}"
+                );
+                let step = r.u64()?;
+                Msg::FwdReq { seq, cut, step, wc: decode_params(&mut r)? }
+            }
+            TAG_FWD_OK => Msg::FwdOk {
+                seq: r.u64()?,
+                smashed: decode_tensor(&mut r)?,
+                labels: decode_tensor(&mut r)?,
+            },
+            TAG_BWD_REQ => Msg::BwdReq { seq: r.u64()?, cotangent: decode_tensor(&mut r)? },
+            TAG_BWD_OK => Msg::BwdOk { seq: r.u64()?, grad: decode_params(&mut r)? },
+            TAG_FULL_REQ => {
+                let seq = r.u64()?;
+                let step0 = r.u64()?;
+                let tau = r.u32()?;
+                anyhow::ensure!(tau > 0, "full-req with tau = 0");
+                let lr = r.f32()?;
+                Msg::FullReq { seq, step0, tau, lr, w: decode_params(&mut r)? }
+            }
+            TAG_FULL_OK => {
+                Msg::FullOk { seq: r.u64()?, loss: r.f64()?, w: decode_params(&mut r)? }
+            }
+            TAG_ROUND_DONE => Msg::RoundDone { round: r.u64()? },
+            TAG_SHUTDOWN => Msg::Shutdown,
+            other => anyhow::bail!("unknown message tag {other}"),
+        };
+        r.finish()?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: &Msg) {
+        let bytes = msg.encode();
+        let back = Msg::decode(&bytes).expect("well-formed message decodes");
+        assert_eq!(&back, msg);
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        let params: Params = vec![vec![1.0, -2.5, 0.0], vec![f32::MIN_POSITIVE]];
+        let t = Tensor::new(vec![0.5; 6], vec![2, 3]);
+        roundtrip(&Msg::Join { client: 7, version: PROTO_VERSION });
+        roundtrip(&Msg::Welcome {
+            setup: RunSetup {
+                dataset: "mnist".into(),
+                seed: 17,
+                partition: "dirichlet:0.3".into(),
+                samples_per_client: 256,
+            },
+        });
+        roundtrip(&Msg::FwdReq { seq: 1, cut: 2, step: 9, wc: params.clone() });
+        roundtrip(&Msg::FwdOk { seq: 1, smashed: t.clone(), labels: t.clone() });
+        roundtrip(&Msg::BwdReq { seq: 1, cotangent: t.clone() });
+        roundtrip(&Msg::BwdOk { seq: 1, grad: params.clone() });
+        roundtrip(&Msg::FullReq { seq: 2, step0: 4, tau: 3, lr: 0.02, w: params.clone() });
+        roundtrip(&Msg::FullOk { seq: 2, loss: 1.25, w: params });
+        roundtrip(&Msg::RoundDone { round: 3 });
+        roundtrip(&Msg::Shutdown);
+    }
+
+    #[test]
+    fn bad_cut_and_bad_tensor_are_errors() {
+        let msg = Msg::FwdReq { seq: 1, cut: 2, step: 0, wc: vec![vec![1.0]] };
+        let mut bytes = msg.encode();
+        // Corrupt the cut field (offset: tag 1 + seq 8).
+        bytes[9] = 0;
+        assert!(Msg::decode(&bytes).is_err());
+        bytes[9] = (NUM_CUTS + 1) as u8;
+        assert!(Msg::decode(&bytes).is_err());
+
+        // Tensor whose shape does not match its payload length.
+        let mut w = ByteWriter::new();
+        w.u8(TAG_BWD_REQ);
+        w.u64(1);
+        w.usizes(&[2, 3]);
+        w.f32s(&[0.0; 5]);
+        assert!(Msg::decode(&w.into_bytes()).is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let mut bytes = Msg::Shutdown.encode();
+        bytes.push(0);
+        assert!(Msg::decode(&bytes).is_err());
+        assert!(Msg::decode(&[]).is_err());
+        assert!(Msg::decode(&[99]).is_err());
+    }
+}

@@ -1,0 +1,331 @@
+//! Binary wire primitives for the coordinator/participant protocol: a
+//! bounds-checked little-endian byte writer/reader pair plus
+//! length-prefixed frame I/O (serde is not in the offline vendor set, so
+//! the encoding is hand-rolled — see DESIGN.md §Transport for the
+//! grammar).
+//!
+//! Contract: **decoding never panics**.  Every read is bounds-checked
+//! against the buffer, every length field is capped before allocation
+//! ([`MAX_ELEMS`] / [`MAX_FRAME`]) and every multiplication is `checked_`
+//! — arbitrary or truncated byte streams produce `Err`, not UB or OOM
+//! (`tests/protocol.rs` feeds both).  Floats travel as IEEE-754 LE bit
+//! patterns (`to_le_bytes`/`from_le_bytes`), so an encode→decode
+//! roundtrip is bit-exact — the property the loopback ≡ TCP equivalence
+//! suite rests on.
+
+use std::io::{Read, Write};
+
+/// Hard cap on one frame's payload bytes.  Generous for the builtin
+/// model (a full FL model is ~7 MB) while bounding what a corrupt or
+/// hostile length prefix can make the reader allocate.
+pub const MAX_FRAME: usize = 256 << 20;
+
+/// Cap on any single length-prefixed collection (scalars, layers, shape
+/// dims).  Keeps `Vec::with_capacity` honest before the data that backs
+/// the length has been seen.
+pub const MAX_ELEMS: usize = 64 << 20;
+
+// --------------------------------------------------------------- writer
+
+/// Append-only little-endian encoder.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `usize` values travel as u64 (the wire format is
+    /// pointer-width-independent).
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed UTF-8 string (u32 byte count).
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed f32 slice (u32 element count, raw LE bits).
+    pub fn f32s(&mut self, xs: &[f32]) {
+        self.u32(xs.len() as u32);
+        self.buf.reserve(xs.len() * 4);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed usize slice (u32 count, u64 elements) — tensor
+    /// shapes.
+    pub fn usizes(&mut self, xs: &[usize]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.u64(x as u64);
+        }
+    }
+}
+
+// --------------------------------------------------------------- reader
+
+/// Bounds-checked little-endian decoder over a borrowed buffer.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Every message decoder ends with this: trailing garbage after a
+    /// well-formed message is a framing error, not padding.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.remaining() == 0, "{} trailing bytes after message", self.remaining());
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.remaining() >= n,
+            "truncated: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> anyhow::Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> anyhow::Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn usize(&mut self) -> anyhow::Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| anyhow::anyhow!("u64 value {v} overflows usize"))
+    }
+
+    pub fn f32(&mut self) -> anyhow::Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn f64(&mut self) -> anyhow::Result<f64> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// A collection length: capped BEFORE any allocation and checked
+    /// against the bytes actually remaining (each element is at least
+    /// `min_elem_bytes`), so a hostile prefix cannot reserve memory the
+    /// stream does not back.
+    fn elems(&mut self, min_elem_bytes: usize, what: &str) -> anyhow::Result<usize> {
+        let n = self.u32()? as usize;
+        anyhow::ensure!(n <= MAX_ELEMS, "{what} count {n} exceeds cap {MAX_ELEMS}");
+        let need = n
+            .checked_mul(min_elem_bytes)
+            .ok_or_else(|| anyhow::anyhow!("{what} byte count overflows"))?;
+        anyhow::ensure!(
+            self.remaining() >= need,
+            "truncated {what}: {n} elements need {need} bytes, have {}",
+            self.remaining()
+        );
+        Ok(n)
+    }
+
+    pub fn str(&mut self) -> anyhow::Result<String> {
+        let n = self.elems(1, "string")?;
+        let bytes = self.take(n)?;
+        Ok(std::str::from_utf8(bytes)
+            .map_err(|e| anyhow::anyhow!("invalid UTF-8 in string: {e}"))?
+            .to_string())
+    }
+
+    pub fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.elems(4, "f32 vector")?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    pub fn usizes(&mut self) -> anyhow::Result<Vec<usize>> {
+        let n = self.elems(8, "usize vector")?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.usize()?);
+        }
+        Ok(out)
+    }
+}
+
+// ------------------------------------------------------------- framing
+
+/// Write one `u32-length ++ payload` frame.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> anyhow::Result<()> {
+    anyhow::ensure!(payload.len() <= MAX_FRAME, "frame of {} bytes exceeds cap", payload.len());
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame's payload.  `Ok(None)` = clean EOF at a frame
+/// boundary; mid-frame EOF, oversized prefixes and I/O errors are `Err`.
+pub fn read_frame<R: Read>(r: &mut R) -> anyhow::Result<Option<Vec<u8>>> {
+    let mut len = [0u8; 4];
+    match r.read_exact(&mut len) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let n = u32::from_le_bytes(len) as usize;
+    anyhow::ensure!(n <= MAX_FRAME, "incoming frame of {n} bytes exceeds cap {MAX_FRAME}");
+    let mut payload = vec![0u8; n];
+    r.read_exact(&mut payload)
+        .map_err(|e| anyhow::anyhow!("truncated frame ({n} byte payload): {e}"))?;
+    Ok(Some(payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrips_are_bit_exact() {
+        let mut w = ByteWriter::new();
+        w.u8(0xAB);
+        w.u32(0xDEADBEEF);
+        w.u64(u64::MAX - 1);
+        w.f32(f32::from_bits(0x7FC0_0001)); // a signalling-ish NaN pattern
+        w.f64(-0.0);
+        w.str("smashed/π");
+        w.f32s(&[1.5, -0.0, f32::INFINITY]);
+        w.usizes(&[32, 14, 14, 32]);
+        let bytes = w.into_bytes();
+
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 0xAB);
+        assert_eq!(r.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f32().unwrap().to_bits(), 0x7FC0_0001);
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.str().unwrap(), "smashed/π");
+        let xs = r.f32s().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[0], 1.5);
+        assert_eq!(xs[1].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(xs[2], f32::INFINITY);
+        assert_eq!(r.usizes().unwrap(), vec![32, 14, 14, 32]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = ByteWriter::new();
+        w.f32s(&[1.0; 100]);
+        let bytes = w.into_bytes();
+        for cut in 0..bytes.len() {
+            let mut r = ByteReader::new(&bytes[..cut]);
+            assert!(r.f32s().is_err(), "prefix of {cut} bytes decoded");
+        }
+    }
+
+    #[test]
+    fn hostile_length_prefix_cannot_allocate() {
+        // Claims u32::MAX f32s with a 4-byte buffer behind it.
+        let mut w = ByteWriter::new();
+        w.u32(u32::MAX);
+        w.u32(0);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.f32s().is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut w = ByteWriter::new();
+        w.u8(1);
+        w.u8(2);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        r.u8().unwrap();
+        assert!(r.finish().is_err());
+        r.u8().unwrap();
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn frame_io_roundtrips_and_bounds() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut cur).unwrap().is_none(), "clean EOF");
+
+        // Oversized length prefix rejected before allocation.
+        let huge = (MAX_FRAME as u32 + 1).to_le_bytes().to_vec();
+        assert!(read_frame(&mut std::io::Cursor::new(huge)).is_err());
+
+        // Mid-frame EOF is an error, not a silent None.
+        let mut partial = Vec::new();
+        write_frame(&mut partial, b"abcdef").unwrap();
+        partial.truncate(7);
+        assert!(read_frame(&mut std::io::Cursor::new(partial)).is_err());
+    }
+}

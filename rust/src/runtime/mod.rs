@@ -17,14 +17,22 @@
 //!   the HLO-text artifacts produced by `python/compile/aot.py`.  This is
 //!   the ONLY place PJRT/xla types appear; the coordinator above deals
 //!   purely in [`Tensor`] buffers.
+//! * [`transport`] — the [`Transport`] trait the networked coordinator
+//!   fans out over: real TCP peers ([`TcpTransport`]) or in-process
+//!   [`node::ParticipantNode`]s on the executor ([`LoopbackTransport`]).
+//! * [`node`] — the participant-side protocol state machine, shared
+//!   verbatim by the loopback transport and the `sfl-participant` binary
+//!   (DESIGN.md §Transport).
 
 pub mod backend;
 #[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod exec;
 pub mod native;
+pub mod node;
 pub mod scratch;
 pub mod tensor;
+pub mod transport;
 
 pub use backend::Backend;
 #[cfg(feature = "pjrt")]
@@ -38,5 +46,7 @@ pub use exec::{
     THREADS_ENV,
 };
 pub use native::NativeBackend;
+pub use node::ParticipantNode;
 pub use scratch::{Scratch, ScratchHandle};
 pub use tensor::Tensor;
+pub use transport::{Incoming, LoopbackTransport, TcpTransport, Transport};

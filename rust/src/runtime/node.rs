@@ -1,0 +1,249 @@
+//! The participant-side state machine: one [`ParticipantNode`] services
+//! the compute half of the protocol — eq-1 client forwards, eq-6
+//! client-side VJPs and FL local steps — against its own lazily-derived
+//! batch stream.
+//!
+//! This is the SAME code whether the node runs inside the coordinator
+//! process (the loopback transport) or behind a TCP socket in the
+//! `sfl-participant` binary: both paths call [`ParticipantNode::handle`]
+//! on decoded [`Msg`] values.  Since the wire encoding is bit-exact for
+//! f32 (`protocol::wire`) and the node's kernels are the deterministic
+//! native backend, loopback and TCP runs are bitwise identical by
+//! construction — the property `tests/net_equivalence.rs` pins.
+//!
+//! A node is stateless across rounds except for the ONE in-flight
+//! forward context a [`Msg::BwdReq`] resolves by `seq`: the coordinator
+//! owns every model parameter and every reduction (see
+//! DESIGN.md §Transport).
+
+use crate::data::partition::Partition;
+use crate::data::population::ClientSampler;
+use crate::model::Manifest;
+use crate::protocol::{Msg, RunSetup, PROTO_VERSION};
+use crate::runtime::{ModelRuntime, Tensor};
+use crate::tensor::{self, Params};
+
+/// The forward context cached between a [`Msg::FwdReq`] and its
+/// [`Msg::BwdReq`]: the VJP needs the same weights and batch the forward
+/// ran on.  At most one is in flight per participant (the coordinator's
+/// per-epoch fwd→bwd discipline); a fresh FwdReq replaces a stale one,
+/// so round restarts after a fault need no extra reset handshake.
+struct FwdCtx {
+    seq: u64,
+    cut: usize,
+    wc: Params,
+    x: Tensor,
+}
+
+/// Per-run state configured by [`Msg::Welcome`].
+struct NodeState {
+    rt: ModelRuntime,
+    sampler: ClientSampler,
+    ctx: Option<FwdCtx>,
+}
+
+/// One participant's protocol engine; see the module docs.
+pub struct ParticipantNode {
+    id: u64,
+    state: Option<NodeState>,
+}
+
+impl ParticipantNode {
+    pub fn new(id: u64) -> ParticipantNode {
+        ParticipantNode { id, state: None }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The Join message this node opens its session with.
+    pub fn join_msg(&self) -> Msg {
+        Msg::Join { client: self.id, version: PROTO_VERSION }
+    }
+
+    /// Whether a [`Msg::Welcome`] has configured this node.
+    pub fn ready(&self) -> bool {
+        self.state.is_some()
+    }
+
+    fn state(&mut self) -> anyhow::Result<&mut NodeState> {
+        self.state
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("request before welcome (node not configured)"))
+    }
+
+    /// Service one coordinator message; returns the responses to send
+    /// back (empty for control messages).  An `Err` is a protocol
+    /// violation — the TCP binary exits on it (the coordinator observes
+    /// the drop), the loopback transport surfaces it as a gone peer.
+    pub fn handle(&mut self, msg: &Msg) -> anyhow::Result<Vec<Msg>> {
+        match msg {
+            Msg::Welcome { setup } => {
+                self.configure(setup)?;
+                Ok(Vec::new())
+            }
+            Msg::FwdReq { seq, cut, step, wc } => {
+                let id = self.id;
+                let st = self.state()?;
+                let cut = *cut as usize;
+                let nc = st.rt.spec().cut(cut).client_params;
+                anyhow::ensure!(
+                    wc.len() == nc,
+                    "fwd-req at cut {cut} carries {} layers, client side has {nc}",
+                    wc.len()
+                );
+                // The participant derives its OWN batch — a pure function
+                // of (seed, client, step), bitwise the batch the
+                // in-process trainer materializes for this client.
+                let (x, labels) = st.sampler.batch(id, *step);
+                let smashed = st.rt.client_fwd(cut, wc, &x)?;
+                st.ctx = Some(FwdCtx { seq: *seq, cut, wc: wc.clone(), x });
+                Ok(vec![Msg::FwdOk { seq: *seq, smashed, labels }])
+            }
+            Msg::BwdReq { seq, cotangent } => {
+                let st = self.state()?;
+                let ctx = st
+                    .ctx
+                    .take()
+                    .ok_or_else(|| anyhow::anyhow!("bwd-req with no forward in flight"))?;
+                anyhow::ensure!(
+                    ctx.seq == *seq,
+                    "bwd-req seq {seq} does not match in-flight forward seq {}",
+                    ctx.seq
+                );
+                let grad = st.rt.client_grad(ctx.cut, &ctx.wc, &ctx.x, cotangent)?;
+                Ok(vec![Msg::BwdOk { seq: *seq, grad }])
+            }
+            Msg::FullReq { seq, step0, tau, lr, w } => {
+                let id = self.id;
+                let st = self.state()?;
+                // Exactly the trainer's FL local-step loop: per-epoch
+                // batch → full grad → SGD step, loss τ-averaged in f64.
+                let mut w = w.clone();
+                let mut loss_sum = 0.0f64;
+                for e in 0..*tau as u64 {
+                    let (x, y) = st.sampler.batch(id, step0 + e);
+                    let (loss, g) = st.rt.full_grad(&w, &x, &y)?;
+                    loss_sum += loss as f64;
+                    tensor::sgd_step(&mut w, &g, *lr);
+                }
+                Ok(vec![Msg::FullOk { seq: *seq, loss: loss_sum / *tau as f64, w }])
+            }
+            Msg::RoundDone { .. } => {
+                if let Some(st) = self.state.as_mut() {
+                    st.ctx = None;
+                }
+                Ok(Vec::new())
+            }
+            Msg::Shutdown => Ok(Vec::new()),
+            other => anyhow::bail!("unexpected {} message at a participant", other.name()),
+        }
+    }
+
+    fn configure(&mut self, setup: &RunSetup) -> anyhow::Result<()> {
+        let manifest = Manifest::builtin();
+        let rt = ModelRuntime::native(&manifest, &setup.dataset)?;
+        let sampler = ClientSampler::new(
+            rt.spec(),
+            &setup.dataset,
+            Partition::parse(&setup.partition)?,
+            setup.samples_per_client,
+            setup.seed,
+        );
+        self.state = Some(NodeState { rt, sampler, ctx: None });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> RunSetup {
+        RunSetup {
+            dataset: "mnist".into(),
+            seed: 17,
+            partition: "iid".into(),
+            samples_per_client: 64,
+        }
+    }
+
+    fn welcomed(id: u64) -> ParticipantNode {
+        let mut node = ParticipantNode::new(id);
+        node.handle(&Msg::Welcome { setup: setup() }).unwrap();
+        node
+    }
+
+    #[test]
+    fn fwd_bwd_cycle_produces_client_grad() {
+        let mut node = welcomed(0);
+        let manifest = Manifest::builtin();
+        let rt = ModelRuntime::native(&manifest, "mnist").unwrap();
+        let cut = 2usize;
+        let nc = rt.spec().cut(cut).client_params;
+        let w0 = crate::data::init::init_params(rt.spec(), 17 ^ 0x1417);
+        let wc: Params = w0[..nc].to_vec();
+
+        let out = node
+            .handle(&Msg::FwdReq { seq: 5, cut: cut as u32, step: 0, wc: wc.clone() })
+            .unwrap();
+        let (smashed, labels) = match &out[..] {
+            [Msg::FwdOk { seq: 5, smashed, labels }] => (smashed.clone(), labels.clone()),
+            other => panic!("unexpected response {other:?}"),
+        };
+        // The node's forward matches a direct backend call bitwise.
+        let sampler = ClientSampler::new(rt.spec(), "mnist", Partition::Iid, 64, 17);
+        let (x, y) = sampler.batch(0, 0);
+        assert_eq!(smashed, rt.client_fwd(cut, &wc, &x).unwrap());
+        assert_eq!(labels, y);
+
+        let cot = Tensor::new(vec![0.01; smashed.len()], smashed.shape.clone());
+        let out = node.handle(&Msg::BwdReq { seq: 5, cotangent: cot.clone() }).unwrap();
+        match &out[..] {
+            [Msg::BwdOk { seq: 5, grad }] => {
+                assert_eq!(grad, &rt.client_grad(cut, &wc, &x, &cot).unwrap());
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
+        // Context consumed: a second bwd-req is a protocol violation.
+        assert!(node.handle(&Msg::BwdReq { seq: 5, cotangent: cot }).is_err());
+    }
+
+    #[test]
+    fn protocol_violations_are_errors() {
+        let mut node = ParticipantNode::new(1);
+        assert!(!node.ready());
+        // Any compute request before Welcome fails.
+        assert!(node
+            .handle(&Msg::FwdReq { seq: 0, cut: 1, step: 0, wc: Params::new() })
+            .is_err());
+        let mut node = welcomed(1);
+        assert!(node.ready());
+        // Wrong layer count for the cut.
+        assert!(node.handle(&Msg::FwdReq { seq: 0, cut: 2, step: 0, wc: Params::new() }).is_err());
+        // Seq mismatch between fwd and bwd.
+        let manifest = Manifest::builtin();
+        let rt = ModelRuntime::native(&manifest, "mnist").unwrap();
+        let nc = rt.spec().cut(1).client_params;
+        let wc = crate::data::init::init_params(rt.spec(), 17 ^ 0x1417)[..nc].to_vec();
+        node.handle(&Msg::FwdReq { seq: 7, cut: 1, step: 0, wc }).unwrap();
+        let bad = Tensor::new(vec![0.0], vec![1]);
+        assert!(node.handle(&Msg::BwdReq { seq: 8, cotangent: bad }).is_err());
+        // A coordinator-bound message arriving at a participant.
+        assert!(node.handle(&Msg::Join { client: 0, version: PROTO_VERSION }).is_err());
+    }
+
+    #[test]
+    fn round_done_clears_inflight_context() {
+        let mut node = welcomed(2);
+        let manifest = Manifest::builtin();
+        let rt = ModelRuntime::native(&manifest, "mnist").unwrap();
+        let nc = rt.spec().cut(1).client_params;
+        let wc = crate::data::init::init_params(rt.spec(), 17 ^ 0x1417)[..nc].to_vec();
+        node.handle(&Msg::FwdReq { seq: 3, cut: 1, step: 0, wc }).unwrap();
+        node.handle(&Msg::RoundDone { round: 0 }).unwrap();
+        let cot = Tensor::new(vec![0.0], vec![1]);
+        assert!(node.handle(&Msg::BwdReq { seq: 3, cotangent: cot }).is_err());
+    }
+}

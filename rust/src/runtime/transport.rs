@@ -1,0 +1,401 @@
+//! Coordinator-side transport abstraction (DESIGN.md §Transport): how the
+//! networked trainer reaches its participants.
+//!
+//! [`Transport`] exposes exactly what the fault-tolerant round engine
+//! needs — send a [`Msg`] to a participant, await the next inbound event
+//! with a timeout, and drop a peer from the live set.  Two
+//! implementations:
+//!
+//! * [`TcpTransport`] — real processes over length-prefixed TCP frames.
+//!   One reader thread per peer feeds a single event queue; a closed or
+//!   broken connection surfaces as [`Incoming::Gone`], which the round
+//!   engine treats like a deadline miss (drop + renormalize).
+//! * [`LoopbackTransport`] — in-process [`ParticipantNode`]s driven over
+//!   the existing [`ParallelExecutor`] fan-out (`map` runs on the
+//!   persistent worker pool's session path).  `send` buffers requests;
+//!   `recv` flushes the batch in ONE parallel sweep and queues the
+//!   responses **in ascending participant order**.  Delivery order is
+//!   deterministic and the compute is the same [`ParticipantNode`] code
+//!   the TCP binary runs, so loopback ≡ TCP bitwise and the executor's
+//!   threads=N ≡ 1 guarantee carries over unchanged.
+//!
+//! The round engine never relies on arrival order (responses are slotted
+//! by participant id and reduced in ascending order), so the two
+//! implementations — and any delivery timing chaos injects on the TCP
+//! one — are observationally identical below the deadline.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use crate::protocol::wire::{read_frame, write_frame};
+use crate::protocol::{Msg, PROTO_VERSION};
+use crate::runtime::node::ParticipantNode;
+use crate::runtime::ParallelExecutor;
+use crate::warn_log;
+
+/// One inbound transport event.
+#[derive(Debug)]
+pub enum Incoming {
+    /// A decoded message from a live participant.
+    Msg(Msg),
+    /// The participant is unreachable (EOF, I/O error, decode error, or a
+    /// failed send).  The engine drops it from the cohort.
+    Gone(String),
+}
+
+/// What the networked coordinator requires of a peer link; see the
+/// module docs.
+pub trait Transport {
+    /// Live participant ids, ascending — the round engine's cohort and
+    /// its fixed reduction order.
+    fn clients(&self) -> Vec<u64>;
+
+    /// Send `msg` to participant `id`.  Best-effort: a send to a dead
+    /// peer is not an error here — the failure surfaces as
+    /// [`Incoming::Gone`] from [`Transport::recv`], keeping ALL fault
+    /// handling on one path.
+    fn send(&mut self, id: u64, msg: &Msg);
+
+    /// Await the next event, up to `timeout`.  `None` = nothing arrived
+    /// (the caller checks its phase deadline and decides who to drop).
+    fn recv(&mut self, timeout: Duration) -> Option<(u64, Incoming)>;
+
+    /// Remove `id` from the live set (and close its link, if any).
+    fn drop_client(&mut self, id: u64);
+}
+
+// ------------------------------------------------------------------ tcp
+
+/// Coordinator side of the TCP transport; see the module docs.
+pub struct TcpTransport {
+    /// Write halves, keyed by claimed client id.
+    peers: BTreeMap<u64, TcpStream>,
+    rx: Receiver<(u64, Incoming)>,
+    /// Locally-generated events (failed sends) drain before the socket
+    /// queue so a dead peer is reported exactly once, promptly.
+    pending: VecDeque<(u64, Incoming)>,
+}
+
+impl TcpTransport {
+    /// Accept `expected` participants on `listener` within `deadline`.
+    ///
+    /// Each connection must open with a [`Msg::Join`] claiming a unique
+    /// client id at the current [`PROTO_VERSION`]; violators are dropped
+    /// without poisoning the rendezvous.  Returns once `expected` peers
+    /// joined — or at the deadline with however many did (the caller
+    /// decides whether a partial federation may proceed; at least one
+    /// joined peer is required).
+    pub fn accept(
+        listener: &TcpListener,
+        expected: usize,
+        deadline: Duration,
+    ) -> anyhow::Result<TcpTransport> {
+        listener.set_nonblocking(true)?;
+        let (tx, rx) = mpsc::channel();
+        let mut peers: BTreeMap<u64, TcpStream> = BTreeMap::new();
+        let t0 = Instant::now();
+        while peers.len() < expected && t0.elapsed() < deadline {
+            match listener.accept() {
+                Ok((stream, addr)) => {
+                    match Self::rendezvous(stream, addr, &peers) {
+                        Ok((id, stream)) => {
+                            let reader = stream.try_clone()?;
+                            spawn_reader(id, reader, tx.clone());
+                            peers.insert(id, stream);
+                        }
+                        Err(e) => warn_log!("rejected connection from {addr}: {e:#}"),
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        anyhow::ensure!(
+            !peers.is_empty(),
+            "no participant joined within {deadline:?} (expected {expected})"
+        );
+        Ok(TcpTransport { peers, rx, pending: VecDeque::new() })
+    }
+
+    /// Validate one connection's Join handshake.
+    fn rendezvous(
+        stream: TcpStream,
+        addr: SocketAddr,
+        peers: &BTreeMap<u64, TcpStream>,
+    ) -> anyhow::Result<(u64, TcpStream)> {
+        // Accepted sockets may inherit the listener's non-blocking mode on
+        // some platforms; the frame reader wants blocking I/O.
+        stream.set_nonblocking(false)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+        let mut reader = stream.try_clone()?;
+        let payload = read_frame(&mut reader)?
+            .ok_or_else(|| anyhow::anyhow!("{addr} closed before joining"))?;
+        let (client, version) = match Msg::decode(&payload)? {
+            Msg::Join { client, version } => (client, version),
+            other => anyhow::bail!("{addr} opened with {} instead of join", other.name()),
+        };
+        anyhow::ensure!(
+            version == PROTO_VERSION,
+            "{addr} speaks protocol v{version}, coordinator is v{PROTO_VERSION}"
+        );
+        anyhow::ensure!(!peers.contains_key(&client), "client id {client} already joined");
+        stream.set_read_timeout(None)?;
+        Ok((client, stream))
+    }
+
+    /// Participants that joined (live), ascending.
+    pub fn joined(&self) -> Vec<u64> {
+        self.peers.keys().copied().collect()
+    }
+}
+
+/// Per-peer reader: frames → decoded messages → the shared event queue;
+/// EOF and errors become ONE terminal [`Incoming::Gone`].
+fn spawn_reader(id: u64, stream: TcpStream, tx: Sender<(u64, Incoming)>) {
+    std::thread::spawn(move || {
+        let mut reader = BufReader::new(stream);
+        loop {
+            match read_frame(&mut reader) {
+                Ok(Some(payload)) => match Msg::decode(&payload) {
+                    Ok(msg) => {
+                        if tx.send((id, Incoming::Msg(msg))).is_err() {
+                            return; // transport dropped; nobody listening
+                        }
+                    }
+                    Err(e) => {
+                        let _ = tx.send((id, Incoming::Gone(format!("decode error: {e:#}"))));
+                        return;
+                    }
+                },
+                Ok(None) => {
+                    let _ = tx.send((id, Incoming::Gone("connection closed".into())));
+                    return;
+                }
+                Err(e) => {
+                    let _ = tx.send((id, Incoming::Gone(format!("read error: {e:#}"))));
+                    return;
+                }
+            }
+        }
+    });
+}
+
+impl Transport for TcpTransport {
+    fn clients(&self) -> Vec<u64> {
+        self.peers.keys().copied().collect()
+    }
+
+    fn send(&mut self, id: u64, msg: &Msg) {
+        let Some(stream) = self.peers.get_mut(&id) else { return };
+        if let Err(e) = write_frame(stream, &msg.encode()) {
+            self.pending.push_back((id, Incoming::Gone(format!("send failed: {e:#}"))));
+            self.peers.remove(&id);
+        }
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Option<(u64, Incoming)> {
+        if let Some(ev) = self.pending.pop_front() {
+            return Some(ev);
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(ev) => Some(ev),
+            Err(RecvTimeoutError::Timeout) => None,
+            // Every reader exited (all peers gone) — nothing will arrive.
+            Err(RecvTimeoutError::Disconnected) => None,
+        }
+    }
+
+    fn drop_client(&mut self, id: u64) {
+        if let Some(stream) = self.peers.remove(&id) {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+// ------------------------------------------------------------- loopback
+
+/// In-process transport over [`ParticipantNode`]s; see the module docs.
+pub struct LoopbackTransport {
+    /// All nodes ever joined, ascending id (dropped ids stay allocated —
+    /// the live set gates delivery).
+    nodes: Vec<(u64, std::sync::Mutex<ParticipantNode>)>,
+    live: BTreeSet<u64>,
+    outbox: Vec<(u64, Msg)>,
+    inbox: VecDeque<(u64, Incoming)>,
+    pool: ParallelExecutor,
+}
+
+impl LoopbackTransport {
+    /// A federation of `ids` in-process participants sharing one worker
+    /// pool (`threads` as in [`ParallelExecutor::new`]).
+    pub fn new(ids: &[u64], threads: usize) -> anyhow::Result<LoopbackTransport> {
+        let mut sorted = ids.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        anyhow::ensure!(sorted.len() == ids.len(), "duplicate participant ids in {ids:?}");
+        Ok(LoopbackTransport {
+            nodes: sorted
+                .iter()
+                .map(|&id| (id, std::sync::Mutex::new(ParticipantNode::new(id))))
+                .collect(),
+            live: sorted.into_iter().collect(),
+            outbox: Vec::new(),
+            inbox: VecDeque::new(),
+            pool: ParallelExecutor::new(threads),
+        })
+    }
+
+    /// Deliver every buffered request in one parallel sweep: node `i`'s
+    /// messages run in order on one worker (fan-out across nodes via the
+    /// executor's session path), then ALL responses enqueue in ascending
+    /// node order — a deterministic schedule for every thread count.
+    fn flush(&mut self) {
+        if self.outbox.is_empty() {
+            return;
+        }
+        let outbox = std::mem::take(&mut self.outbox);
+        let nodes = &self.nodes;
+        // Per-node request batches, ascending node order.
+        let batches: Vec<(usize, Vec<&Msg>)> = nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(slot, (id, _))| {
+                let msgs: Vec<&Msg> =
+                    outbox.iter().filter(|(to, _)| to == id).map(|(_, m)| m).collect();
+                (!msgs.is_empty()).then_some((slot, msgs))
+            })
+            .collect();
+        let batches_ref = &batches;
+        // T is the NODE's Result: a protocol violation inside one node
+        // must surface as that peer's Gone event, not abort the sweep.
+        let results: Vec<anyhow::Result<Vec<Msg>>> = self
+            .pool
+            .map(batches.len(), |j| {
+                let (slot, msgs) = &batches_ref[j];
+                let mut node = nodes[*slot].1.lock().expect("participant node poisoned");
+                let mut run = || -> anyhow::Result<Vec<Msg>> {
+                    let mut out = Vec::new();
+                    for m in msgs {
+                        out.extend(node.handle(m)?);
+                    }
+                    Ok(out)
+                };
+                Ok(run())
+            })
+            .expect("loopback sweep never fails at the executor level");
+        for ((slot, _), result) in batches.iter().zip(results) {
+            let id = nodes[*slot].0;
+            match result {
+                Ok(msgs) => {
+                    self.inbox.extend(msgs.into_iter().map(|m| (id, Incoming::Msg(m))))
+                }
+                Err(e) => {
+                    self.live.remove(&id);
+                    self.inbox.push_back((id, Incoming::Gone(format!("node error: {e:#}"))));
+                }
+            }
+        }
+    }
+}
+
+impl Transport for LoopbackTransport {
+    fn clients(&self) -> Vec<u64> {
+        self.live.iter().copied().collect()
+    }
+
+    fn send(&mut self, id: u64, msg: &Msg) {
+        if self.live.contains(&id) {
+            self.outbox.push((id, msg.clone()));
+        }
+    }
+
+    fn recv(&mut self, _timeout: Duration) -> Option<(u64, Incoming)> {
+        if self.inbox.is_empty() {
+            self.flush();
+        }
+        self.inbox.pop_front()
+    }
+
+    fn drop_client(&mut self, id: u64) {
+        self.live.remove(&id);
+        self.outbox.retain(|(to, _)| *to != id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::RunSetup;
+
+    fn welcome() -> Msg {
+        Msg::Welcome {
+            setup: RunSetup {
+                dataset: "mnist".into(),
+                seed: 17,
+                partition: "iid".into(),
+                samples_per_client: 64,
+            },
+        }
+    }
+
+    #[test]
+    fn loopback_delivers_in_ascending_id_order() {
+        let mut t = LoopbackTransport::new(&[2, 0, 5], 1).unwrap();
+        assert_eq!(t.clients(), vec![0, 2, 5]);
+        // Welcomes produce no responses; a fwd-req per node does, and the
+        // responses arrive 0, 2, 5 regardless of send order.
+        for id in [5u64, 0, 2] {
+            t.send(id, &welcome());
+        }
+        let manifest = crate::model::Manifest::builtin();
+        let rt = crate::runtime::ModelRuntime::native(&manifest, "mnist").unwrap();
+        let nc = rt.spec().cut(1).client_params;
+        let wc = crate::data::init::init_params(rt.spec(), 17 ^ 0x1417)[..nc].to_vec();
+        for (i, id) in [5u64, 2, 0].iter().enumerate() {
+            t.send(*id, &Msg::FwdReq { seq: i as u64, cut: 1, step: 0, wc: wc.clone() });
+        }
+        let mut order = Vec::new();
+        while let Some((id, ev)) = t.recv(Duration::from_millis(1)) {
+            match ev {
+                Incoming::Msg(Msg::FwdOk { .. }) => order.push(id),
+                other => panic!("unexpected event from {id}: {other:?}"),
+            }
+        }
+        assert_eq!(order, vec![0, 2, 5]);
+    }
+
+    #[test]
+    fn loopback_drop_silences_a_peer() {
+        let mut t = LoopbackTransport::new(&[0, 1], 1).unwrap();
+        t.send(0, &welcome());
+        t.send(1, &welcome());
+        while t.recv(Duration::from_millis(1)).is_some() {}
+        t.drop_client(1);
+        assert_eq!(t.clients(), vec![0]);
+        t.send(1, &Msg::RoundDone { round: 0 });
+        assert!(t.recv(Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn loopback_node_error_surfaces_as_gone() {
+        let mut t = LoopbackTransport::new(&[0], 1).unwrap();
+        // Compute before Welcome is a protocol violation inside the node.
+        t.send(0, &Msg::FwdReq { seq: 0, cut: 1, step: 0, wc: Vec::new() });
+        match t.recv(Duration::from_millis(1)) {
+            Some((0, Incoming::Gone(_))) => {}
+            other => panic!("expected gone, got {other:?}"),
+        }
+        assert!(t.clients().is_empty());
+    }
+
+    #[test]
+    fn duplicate_loopback_ids_rejected() {
+        assert!(LoopbackTransport::new(&[1, 1], 1).is_err());
+    }
+}

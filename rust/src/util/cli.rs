@@ -72,6 +72,17 @@ impl Args {
         }
     }
 
+    /// `--<name>-ms N`: a millisecond duration flag (the networked
+    /// binaries' deadline/timeout knobs).  `name` is passed WITH the
+    /// `-ms` suffix, e.g. `duration_ms("deadline-ms", 10_000)`.
+    pub fn duration_ms(
+        &self,
+        name: &str,
+        default_ms: u64,
+    ) -> anyhow::Result<std::time::Duration> {
+        Ok(std::time::Duration::from_millis(self.parse_or(name, default_ms)?))
+    }
+
     /// `--threads N`: round-engine worker threads.  `0` (the default)
     /// means auto — resolved by `runtime::resolve_threads` to the
     /// `SFLGA_TEST_THREADS` env override or the machine's available
@@ -163,6 +174,15 @@ mod tests {
     fn bad_value_is_error() {
         let a = parse(&["--rounds", "ten"]);
         assert!(a.parse_or("rounds", 0u32).is_err());
+    }
+
+    #[test]
+    fn duration_flags_parse_millis() {
+        use std::time::Duration;
+        let a = parse(&["--deadline-ms", "250"]);
+        assert_eq!(a.duration_ms("deadline-ms", 10_000).unwrap(), Duration::from_millis(250));
+        assert_eq!(a.duration_ms("join-ms", 5_000).unwrap(), Duration::from_millis(5_000));
+        assert!(parse(&["--deadline-ms", "soon"]).duration_ms("deadline-ms", 0).is_err());
     }
 
     #[test]

@@ -1,0 +1,195 @@
+//! Chaos regression suite (DESIGN.md §Transport): real `sfl-participant`
+//! processes with injected faults, asserting the coordinator's
+//! drop-renormalize-restart policy produces *exactly* the run it claims
+//! to — not merely "a" completed run.
+//!
+//! * kill a participant mid-round → the completed run is bitwise the run
+//!   that excluded that client up front (per-client state is keyed by
+//!   `(seed, id)`, so the survivor federation is self-contained);
+//! * delay below the deadline (SIGSTOP bursts) → bitwise no-op;
+//! * packet loss on one peer's responses → deadline fault → same
+//!   excluded-up-front equality;
+//! * end-to-end smoke of the two binaries over localhost TCP.
+
+mod chaos_harness;
+
+use std::net::TcpListener;
+use std::process::Command;
+use std::time::Duration;
+
+#[cfg(unix)]
+use chaos_harness::signal;
+use chaos_harness::{spawn_participant, ChaosProxy, ProcGuard, Watchdog};
+use sfl_ga::coordinator::{params_digest, stats_digest, NetTrainer, SchemeKind, TrainConfig};
+use sfl_ga::model::Manifest;
+use sfl_ga::runtime::TcpTransport;
+
+fn cfg(scheme: SchemeKind, n: usize) -> TrainConfig {
+    TrainConfig {
+        scheme,
+        num_clients: n,
+        rounds: 2,
+        tau: 1,
+        samples_per_client: 32,
+        test_samples: 64,
+        seed: 17,
+        eval_every: 1,
+        threads: 1,
+        ..Default::default()
+    }
+}
+
+/// Digest-pair of the loopback run over `n` participants — the oracle
+/// every faulted TCP run must land on.
+fn loopback_digests(scheme: SchemeKind, n: usize, cut: usize) -> (u64, u64) {
+    let manifest = Manifest::builtin();
+    let mut nt = NetTrainer::loopback(&manifest, cfg(scheme, n), n).expect("loopback");
+    let stats = nt.run(cut).expect("loopback run");
+    (stats_digest(&stats), params_digest(&nt.global_params(cut)))
+}
+
+/// Rendezvous `n` spawned participants on an ephemeral listener.
+fn federation(n: u64) -> (Vec<ProcGuard>, TcpTransport) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let participants: Vec<ProcGuard> = (0..n).map(|id| spawn_participant(&addr, id)).collect();
+    let transport =
+        TcpTransport::accept(&listener, n as usize, Duration::from_secs(30)).expect("rendezvous");
+    assert_eq!(transport.joined(), (0..n).collect::<Vec<_>>());
+    (participants, transport)
+}
+
+#[test]
+fn kill_mid_round_equals_excluded_up_front() {
+    let _wd = Watchdog::arm("kill_mid_round_equals_excluded_up_front", Duration::from_secs(180));
+    let cut = 2;
+    let manifest = Manifest::builtin();
+    let (mut participants, transport) = federation(3);
+    let mut nt =
+        NetTrainer::new(&manifest, cfg(SchemeKind::SflGa, 3), Duration::from_secs(60), transport)
+            .expect("net trainer");
+    // Let participant 2 finish its rendezvous (it prints JOINED after
+    // processing Welcome), then SIGKILL it — its death surfaces inside
+    // round 0's forward collection as a Gone event.
+    participants[2].wait_for_line("JOINED 2", Duration::from_secs(30));
+    participants[2].kill();
+
+    let stats = nt.run(cut).expect("run completes despite the kill");
+    assert_eq!(nt.dropped(), &[2], "fault policy should have dropped exactly client 2");
+    assert_eq!(nt.live(), vec![0, 1]);
+    let faulted = (stats_digest(&stats), params_digest(&nt.global_params(cut)));
+    nt.shutdown();
+
+    // Per-client channel/capacity draws are keyed by (seed, id), not by
+    // the population size, so the 2-survivor federation must be bitwise
+    // the federation that never had client 2.
+    assert_eq!(
+        faulted,
+        loopback_digests(SchemeKind::SflGa, 2, cut),
+        "survivor run diverged from the excluded-up-front run"
+    );
+}
+
+#[cfg(unix)] // SIGSTOP/SIGCONT straggler injection
+#[test]
+fn delay_below_deadline_is_bitwise_noop() {
+    let _wd = Watchdog::arm("delay_below_deadline_is_bitwise_noop", Duration::from_secs(180));
+    let cut = 1;
+    let manifest = Manifest::builtin();
+    let (participants, transport) = federation(2);
+    let mut nt =
+        NetTrainer::new(&manifest, cfg(SchemeKind::SflGa, 2), Duration::from_secs(120), transport)
+            .expect("net trainer");
+
+    // Straggle participant 0 in SIGSTOP bursts while the run progresses:
+    // well below the deadline, so nothing may change — not one bit.
+    let pid = participants[0].pid();
+    let injector = std::thread::spawn(move || {
+        for _ in 0..3 {
+            signal(pid, "STOP");
+            std::thread::sleep(Duration::from_millis(300));
+            signal(pid, "CONT");
+            std::thread::sleep(Duration::from_millis(100));
+        }
+    });
+    let stats = nt.run(cut).expect("run completes under delay");
+    injector.join().expect("injector thread");
+    assert!(nt.dropped().is_empty(), "sub-deadline delay must not drop anyone");
+    let delayed = (stats_digest(&stats), params_digest(&nt.global_params(cut)));
+    nt.shutdown();
+
+    assert_eq!(
+        delayed,
+        loopback_digests(SchemeKind::SflGa, 2, cut),
+        "sub-deadline delay changed the run"
+    );
+}
+
+#[test]
+fn packet_loss_triggers_deadline_drop() {
+    let _wd = Watchdog::arm("packet_loss_triggers_deadline_drop", Duration::from_secs(180));
+    let cut = 2;
+    let manifest = Manifest::builtin();
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    // Participants 0 and 1 connect directly; 2 sits behind a proxy that
+    // forwards its Join and then black-holes every later response while
+    // keeping the connection alive — pure response loss, no EOF signal,
+    // so only the deadline can catch it.
+    let direct: Vec<ProcGuard> = (0..2).map(|id| spawn_participant(&addr, id)).collect();
+    let proxy = ChaosProxy::start(addr, 1);
+    let lossy = spawn_participant(&proxy.addr, 2);
+    let transport =
+        TcpTransport::accept(&listener, 3, Duration::from_secs(30)).expect("rendezvous");
+    assert_eq!(transport.joined(), vec![0, 1, 2]);
+
+    // SFL exercises the per-client replica path: dropping 2 must also
+    // retire its model replica, leaving a 2-replica FedAvg.
+    let mut nt =
+        NetTrainer::new(&manifest, cfg(SchemeKind::Sfl, 3), Duration::from_secs(3), transport)
+            .expect("net trainer");
+    let stats = nt.run(cut).expect("run completes despite response loss");
+    assert_eq!(nt.dropped(), &[2], "the lossy peer should time out and drop");
+    let faulted = (stats_digest(&stats), params_digest(&nt.global_params(cut)));
+    nt.shutdown();
+    drop(direct);
+    drop(lossy);
+
+    assert_eq!(
+        faulted,
+        loopback_digests(SchemeKind::Sfl, 2, cut),
+        "post-drop run diverged from the excluded-up-front run"
+    );
+}
+
+#[test]
+fn multiprocess_binaries_complete_a_run() {
+    let _wd = Watchdog::arm("multiprocess_binaries_complete_a_run", Duration::from_secs(180));
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_sfl-coordinator"));
+    cmd.args([
+        "--listen", "127.0.0.1:0",
+        "--clients", "2",
+        "--rounds", "1",
+        "--tau", "1",
+        "--samples-per-client", "16",
+        "--test-samples", "64",
+        "--eval-every", "1",
+        "--threads", "1",
+        "--scheme", "sfl-ga",
+        "--cut", "2",
+    ]);
+    let mut coordinator = ProcGuard::spawn("coordinator", &mut cmd);
+    let listening = coordinator.wait_for_line("LISTENING ", Duration::from_secs(60));
+    let addr = listening.trim_start_matches("LISTENING ").trim();
+
+    let _participants: Vec<ProcGuard> =
+        (0..2).map(|id| spawn_participant(addr, id)).collect();
+    let joined = coordinator.wait_for_line("JOINED ", Duration::from_secs(30));
+    assert_eq!(joined, "JOINED 0 1");
+    let complete = coordinator.wait_for_line("COMPLETE ", Duration::from_secs(120));
+    assert!(
+        complete.contains("rounds=1") && complete.contains("dropped=-"),
+        "unexpected completion line: {complete}"
+    );
+    coordinator.wait_success(Duration::from_secs(30));
+}

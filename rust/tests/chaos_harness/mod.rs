@@ -1,0 +1,237 @@
+//! Chaos-testing harness for the networked runtime (`tests/chaos.rs`,
+//! `tests/net_equivalence.rs`): spawn real `sfl-participant` processes,
+//! inject faults against them — Pause (SIGSTOP), Delay, Kill, PacketLoss
+//! — and keep CI safe with kill-on-drop guards plus an in-test watchdog.
+//!
+//! Everything here is test scaffolding: deliberately small, synchronous
+//! and dependency-free.
+
+// Shared by several test crates; each uses a different subset.
+#![allow(dead_code)]
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A spawned process that is ALWAYS killed (and reaped) on drop, so a
+/// failing test never leaks a participant into the CI runner.  Stdout is
+/// piped through a reader thread; [`ProcGuard::wait_for_line`] observes
+/// it with a timeout.
+pub struct ProcGuard {
+    pub name: String,
+    child: Child,
+    lines: Receiver<String>,
+}
+
+impl ProcGuard {
+    pub fn spawn(name: &str, cmd: &mut Command) -> ProcGuard {
+        let mut child = cmd
+            .stdout(Stdio::piped())
+            .spawn()
+            .unwrap_or_else(|e| panic!("spawning {name}: {e}"));
+        let stdout = child.stdout.take().expect("stdout piped");
+        let (tx, lines) = mpsc::channel();
+        let thread_name = name.to_string();
+        std::thread::spawn(move || {
+            for line in BufReader::new(stdout).lines() {
+                let Ok(line) = line else { break };
+                eprintln!("[{thread_name} stdout] {line}");
+                if tx.send(line).is_err() {
+                    break;
+                }
+            }
+        });
+        ProcGuard { name: name.to_string(), child, lines }
+    }
+
+    pub fn pid(&self) -> u32 {
+        self.child.id()
+    }
+
+    /// Await a stdout line starting with `prefix`; panics at `timeout`
+    /// (the watchdog's job is the harder hang case).
+    pub fn wait_for_line(&self, prefix: &str, timeout: Duration) -> String {
+        let t_end = Instant::now() + timeout;
+        loop {
+            let left = t_end.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                panic!("{}: no '{prefix}' line within {timeout:?}", self.name);
+            }
+            match self.lines.recv_timeout(left) {
+                Ok(line) if line.starts_with(prefix) => return line,
+                Ok(_) => continue,
+                Err(_) => panic!("{}: stdout closed before '{prefix}'", self.name),
+            }
+        }
+    }
+
+    /// Chaos: SIGKILL, immediately.
+    pub fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+
+    /// Chaos: freeze the process (SIGSTOP) — an extreme straggler.
+    #[cfg(unix)]
+    pub fn pause(&self) {
+        signal(self.pid(), "STOP");
+    }
+
+    /// Undo [`ProcGuard::pause`] (SIGCONT).
+    #[cfg(unix)]
+    pub fn resume(&self) {
+        signal(self.pid(), "CONT");
+    }
+
+    /// Wait for a clean exit, asserting the status.
+    pub fn wait_success(&mut self, timeout: Duration) {
+        let t_end = Instant::now() + timeout;
+        loop {
+            match self.child.try_wait().expect("try_wait") {
+                Some(status) => {
+                    assert!(status.success(), "{} exited with {status}", self.name);
+                    return;
+                }
+                None if Instant::now() >= t_end => {
+                    panic!("{} still running after {timeout:?}", self.name)
+                }
+                None => std::thread::sleep(Duration::from_millis(20)),
+            }
+        }
+    }
+}
+
+impl Drop for ProcGuard {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Send a named signal to a pid via kill(1) — the raw form of
+/// [`ProcGuard::pause`]/[`ProcGuard::resume`] for injection threads that
+/// only hold a pid.
+#[cfg(unix)]
+pub fn signal(pid: u32, sig: &str) {
+    let status = Command::new("kill")
+        .arg(format!("-{sig}"))
+        .arg(pid.to_string())
+        .status()
+        .expect("spawn kill(1)");
+    assert!(status.success(), "kill -{sig} {pid} failed");
+}
+
+/// Spawn one `sfl-participant` binary joined to `addr` as `id`.
+pub fn spawn_participant(addr: &str, id: u64) -> ProcGuard {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_sfl-participant"));
+    cmd.arg("--connect")
+        .arg(addr)
+        .arg("--client-id")
+        .arg(id.to_string())
+        // Belt and suspenders: even an orphaned participant exits on its
+        // own well before a CI-lane timeout.
+        .arg("--idle-timeout-ms")
+        .arg("120000");
+    ProcGuard::spawn(&format!("participant-{id}"), &mut cmd)
+}
+
+// ----------------------------------------------------------- packet loss
+
+/// A frame-aware TCP relay for packet-loss injection: forwards whole
+/// protocol frames between a participant and the coordinator, and after
+/// `allow_upstream` client→coordinator frames silently discards the rest
+/// (the connection stays open — a black hole, not a reset).  Downstream
+/// keeps flowing, so the participant keeps computing; its results just
+/// never arrive, exactly the loss mode the deadline policy must catch.
+pub struct ChaosProxy {
+    /// Address participants should connect to.
+    pub addr: String,
+}
+
+impl ChaosProxy {
+    pub fn start(upstream: String, allow_upstream: usize) -> ChaosProxy {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind proxy");
+        let addr = listener.local_addr().expect("proxy addr").to_string();
+        std::thread::spawn(move || {
+            // One participant per proxy instance.
+            let Ok((client, _)) = listener.accept() else { return };
+            let Ok(server) = TcpStream::connect(&upstream) else { return };
+            let up = (
+                client.try_clone().expect("clone"),
+                server.try_clone().expect("clone"),
+            );
+            let down = (server, client);
+            std::thread::spawn(move || relay(up.0, up.1, Some(allow_upstream)));
+            relay(down.0, down.1, None);
+        });
+        ChaosProxy { addr }
+    }
+}
+
+/// Pump frames `src` → `dst`; with `allow = Some(n)` discard every frame
+/// after the first `n`.  Uses the same length-prefix grammar as
+/// `protocol::wire` (4-byte LE length + payload).
+fn relay(mut src: TcpStream, mut dst: TcpStream, allow: Option<usize>) {
+    let mut forwarded = 0usize;
+    loop {
+        let mut len = [0u8; 4];
+        if src.read_exact(&mut len).is_err() {
+            return;
+        }
+        let n = u32::from_le_bytes(len) as usize;
+        let mut payload = vec![0u8; n];
+        if src.read_exact(&mut payload).is_err() {
+            return;
+        }
+        if let Some(cap) = allow {
+            if forwarded >= cap {
+                continue; // black hole
+            }
+        }
+        forwarded += 1;
+        if dst.write_all(&len).is_err() || dst.write_all(&payload).is_err() {
+            return;
+        }
+        let _ = dst.flush();
+    }
+}
+
+// -------------------------------------------------------------- watchdog
+
+/// Hard in-test hang guard: aborts the whole test process if not
+/// disarmed (dropped) within the budget.  The CI lane's `timeout` is the
+/// outer net; this one produces a named, per-test failure point.
+pub struct Watchdog {
+    disarmed: Arc<AtomicBool>,
+}
+
+impl Watchdog {
+    pub fn arm(name: &'static str, budget: Duration) -> Watchdog {
+        let disarmed = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&disarmed);
+        std::thread::spawn(move || {
+            let t_end = Instant::now() + budget;
+            while Instant::now() < t_end {
+                if flag.load(Ordering::Relaxed) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+            if !flag.load(Ordering::Relaxed) {
+                eprintln!("WATCHDOG: '{name}' exceeded {budget:?}; aborting");
+                std::process::abort();
+            }
+        });
+        Watchdog { disarmed }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.disarmed.store(true, Ordering::Relaxed);
+    }
+}

@@ -1,0 +1,111 @@
+//! Transport equivalence suite (DESIGN.md §Transport): the networked
+//! round engine is a *transport*, not a different algorithm.
+//!
+//! * loopback [`NetTrainer`] ≡ the in-process [`Trainer`] — bitwise, per
+//!   scheme × cut (stats digests AND final global parameters);
+//! * real TCP participants (spawned `sfl-participant` binaries) ≡
+//!   loopback — bitwise, same digests.
+//!
+//! Together with the executor's threads=N ≡ 1 guarantee this pins the
+//! whole chain: simulator ≡ loopback ≡ multi-process TCP.
+
+mod chaos_harness;
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use chaos_harness::{spawn_participant, Watchdog};
+use sfl_ga::coordinator::{
+    params_digest, stats_digest, NetTrainer, SchemeKind, TrainConfig, Trainer,
+};
+use sfl_ga::model::Manifest;
+use sfl_ga::runtime::TcpTransport;
+
+/// Small but non-degenerate run: 2 rounds, eval every round, tiny shards.
+fn cfg(scheme: SchemeKind, n: usize) -> TrainConfig {
+    TrainConfig {
+        scheme,
+        num_clients: n,
+        rounds: 2,
+        tau: 1,
+        samples_per_client: 32,
+        test_samples: 64,
+        seed: 17,
+        eval_every: 1,
+        threads: 1,
+        ..Default::default()
+    }
+}
+
+/// Digest-pair fingerprint of one networked run over an already-joined
+/// transport.
+fn run_net<T: sfl_ga::runtime::Transport>(
+    manifest: &Manifest,
+    cfg: TrainConfig,
+    deadline: Duration,
+    transport: T,
+    cut: usize,
+) -> (u64, u64) {
+    let mut nt = NetTrainer::new(manifest, cfg, deadline, transport).expect("net trainer");
+    let stats = nt.run(cut).expect("net run");
+    assert!(nt.dropped().is_empty(), "no faults injected, yet {:?} dropped", nt.dropped());
+    let digests = (stats_digest(&stats), params_digest(&nt.global_params(cut)));
+    nt.shutdown();
+    digests
+}
+
+#[test]
+fn loopback_matches_in_process_trainer() {
+    let manifest = Manifest::builtin();
+    let n = 3;
+    for scheme in [SchemeKind::SflGa, SchemeKind::Sfl] {
+        for cut in [1usize, 2] {
+            let mut trainer = Trainer::native(&manifest, cfg(scheme, n)).expect("trainer");
+            let sim_stats = trainer.run(cut).expect("sim run");
+            let sim = (stats_digest(&sim_stats), params_digest(&trainer.global_params(cut)));
+
+            let nt = NetTrainer::loopback(&manifest, cfg(scheme, n), n).expect("loopback");
+            let net = {
+                let mut nt = nt;
+                let stats = nt.run(cut).expect("loopback run");
+                (stats_digest(&stats), params_digest(&nt.global_params(cut)))
+            };
+            assert_eq!(
+                sim, net,
+                "loopback diverged from the in-process trainer ({} at cut {cut})",
+                scheme.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn tcp_matches_loopback() {
+    let _wd = Watchdog::arm("tcp_matches_loopback", Duration::from_secs(240));
+    let manifest = Manifest::builtin();
+    let n = 2;
+    for scheme in [SchemeKind::SflGa, SchemeKind::Sfl] {
+        for cut in [1usize, 2] {
+            let loopback = {
+                let mut nt = NetTrainer::loopback(&manifest, cfg(scheme, n), n).expect("loopback");
+                let stats = nt.run(cut).expect("loopback run");
+                (stats_digest(&stats), params_digest(&nt.global_params(cut)))
+            };
+
+            let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+            let addr = listener.local_addr().expect("addr").to_string();
+            let _participants: Vec<_> =
+                (0..n as u64).map(|id| spawn_participant(&addr, id)).collect();
+            let transport = TcpTransport::accept(&listener, n, Duration::from_secs(30))
+                .expect("rendezvous");
+            assert_eq!(transport.joined(), (0..n as u64).collect::<Vec<_>>());
+            let tcp = run_net(&manifest, cfg(scheme, n), Duration::from_secs(60), transport, cut);
+
+            assert_eq!(
+                loopback, tcp,
+                "TCP federation diverged from loopback ({} at cut {cut})",
+                scheme.name()
+            );
+        }
+    }
+}

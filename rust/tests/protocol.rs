@@ -1,0 +1,231 @@
+//! Protocol fuzz/property suite (DESIGN.md §Transport): the two wire
+//! contracts the networked runtime rests on.
+//!
+//! 1. **Bit-exact roundtrip** — `decode(encode(m))` reproduces `m` for
+//!    every message type, including non-finite float payloads (compared
+//!    at the byte level, since NaN breaks structural equality on
+//!    purpose).
+//! 2. **The decoder never panics** — arbitrary bytes, truncated
+//!    prefixes and random single-byte corruptions of valid encodings all
+//!    produce `Ok`/`Err`, never a panic or runaway allocation.
+
+use sfl_ga::model::NUM_CUTS;
+use sfl_ga::prop_assert;
+use sfl_ga::protocol::wire::{read_frame, write_frame};
+use sfl_ga::protocol::{Msg, RunSetup, PROTO_VERSION};
+use sfl_ga::runtime::Tensor;
+use sfl_ga::tensor::Params;
+use sfl_ga::util::proptest::check;
+use sfl_ga::util::rng::Pcg;
+
+// ----------------------------------------------------------- generators
+
+/// Random f32: finite-and-tame, or any bit pattern at all (NaNs, infs,
+/// subnormals) depending on `finite`.
+fn gen_f32(rng: &mut Pcg, finite: bool) -> f32 {
+    if finite {
+        rng.range(-8.0, 8.0) as f32
+    } else {
+        f32::from_bits(rng.next_u32())
+    }
+}
+
+fn gen_params(rng: &mut Pcg, finite: bool) -> Params {
+    (0..rng.below(4))
+        .map(|_| (0..rng.below(16)).map(|_| gen_f32(rng, finite)).collect())
+        .collect()
+}
+
+fn gen_tensor(rng: &mut Pcg, finite: bool) -> Tensor {
+    let shape = vec![1 + rng.below(3), 1 + rng.below(5)];
+    let n: usize = shape.iter().product();
+    Tensor::new((0..n).map(|_| gen_f32(rng, finite)).collect(), shape)
+}
+
+fn gen_string(rng: &mut Pcg) -> String {
+    const ALPHABET: &[u8] = b"abcxyz0189:._-/ \xCF\x80"; // includes UTF-8 "π"
+    let mut s = String::new();
+    for _ in 0..rng.below(12) {
+        match rng.below(ALPHABET.len() - 1) {
+            i if i < ALPHABET.len() - 2 => s.push(ALPHABET[i] as char),
+            _ => s.push('π'),
+        }
+    }
+    s
+}
+
+/// One random message covering every variant (and with it every wire
+/// primitive: strings, scalars, params, tensors).
+fn gen_msg(rng: &mut Pcg, finite: bool) -> Msg {
+    match rng.below(10) {
+        0 => Msg::Join { client: rng.next_u64(), version: PROTO_VERSION },
+        1 => Msg::Welcome {
+            setup: RunSetup {
+                dataset: gen_string(rng),
+                seed: rng.next_u64(),
+                partition: gen_string(rng),
+                samples_per_client: rng.below(4096),
+            },
+        },
+        2 => Msg::FwdReq {
+            seq: rng.next_u64(),
+            cut: 1 + rng.below(NUM_CUTS) as u32,
+            step: rng.next_u64(),
+            wc: gen_params(rng, finite),
+        },
+        3 => Msg::FwdOk {
+            seq: rng.next_u64(),
+            smashed: gen_tensor(rng, finite),
+            labels: gen_tensor(rng, finite),
+        },
+        4 => Msg::BwdReq { seq: rng.next_u64(), cotangent: gen_tensor(rng, finite) },
+        5 => Msg::BwdOk { seq: rng.next_u64(), grad: gen_params(rng, finite) },
+        6 => Msg::FullReq {
+            seq: rng.next_u64(),
+            step0: rng.next_u64(),
+            tau: 1 + rng.below(16) as u32,
+            lr: gen_f32(rng, finite),
+            w: gen_params(rng, finite),
+        },
+        7 => Msg::FullOk {
+            seq: rng.next_u64(),
+            loss: if finite { rng.range(-1e3, 1e3) } else { f64::from_bits(rng.next_u64()) },
+            w: gen_params(rng, finite),
+        },
+        8 => Msg::RoundDone { round: rng.next_u64() },
+        _ => Msg::Shutdown,
+    }
+}
+
+// ------------------------------------------------------------ roundtrip
+
+#[test]
+fn roundtrip_is_structural_for_finite_payloads() {
+    check("roundtrip-structural", 512, |rng| {
+        let msg = gen_msg(rng, true);
+        let bytes = msg.encode();
+        let back = Msg::decode(&bytes)
+            .map_err(|e| format!("well-formed {} failed to decode: {e:#}", msg.name()))?;
+        prop_assert!(back == msg, "{} changed across the wire", msg.name());
+        Ok(())
+    });
+}
+
+#[test]
+fn roundtrip_is_bit_exact_for_arbitrary_float_bits() {
+    // NaN != NaN makes structural equality the wrong oracle here; the
+    // stronger claim is that re-encoding the decoded message reproduces
+    // the original bytes exactly (floats travel as raw bit patterns).
+    check("roundtrip-bit-exact", 512, |rng| {
+        let msg = gen_msg(rng, false);
+        let bytes = msg.encode();
+        let back = Msg::decode(&bytes)
+            .map_err(|e| format!("well-formed {} failed to decode: {e:#}", msg.name()))?;
+        prop_assert!(
+            back.encode() == bytes,
+            "{} did not re-encode to the same {} bytes",
+            msg.name(),
+            bytes.len()
+        );
+        Ok(())
+    });
+}
+
+// ------------------------------------------------- decoder never panics
+
+#[test]
+fn every_strict_prefix_is_rejected_without_panic() {
+    // The read sequence is deterministic, so a strict prefix of a valid
+    // encoding must hit a truncation error — it can never silently
+    // decode to something shorter.
+    check("prefix-rejection", 256, |rng| {
+        let bytes = gen_msg(rng, false).encode();
+        for cut in 0..bytes.len() {
+            prop_assert!(
+                Msg::decode(&bytes[..cut]).is_err(),
+                "prefix of {cut}/{} bytes decoded",
+                bytes.len()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn corrupted_encodings_never_panic() {
+    check("corruption-tolerance", 512, |rng| {
+        let mut bytes = gen_msg(rng, false).encode();
+        for _ in 0..4 {
+            if bytes.is_empty() {
+                break;
+            }
+            let at = rng.below(bytes.len());
+            bytes[at] ^= (1 + rng.below(255)) as u8;
+        }
+        // Ok or Err are both acceptable outcomes; panicking or OOM on a
+        // flipped length prefix is the bug class under test.
+        let _ = Msg::decode(&bytes);
+        Ok(())
+    });
+}
+
+#[test]
+fn arbitrary_byte_soup_never_panics() {
+    check("byte-soup", 1024, |rng| {
+        let bytes: Vec<u8> = (0..rng.below(192)).map(|_| rng.next_u32() as u8).collect();
+        let _ = Msg::decode(&bytes);
+        Ok(())
+    });
+}
+
+// -------------------------------------------------------------- framing
+
+#[test]
+fn framed_messages_roundtrip_through_a_stream() {
+    check("frame-roundtrip", 64, |rng| {
+        let msgs: Vec<Msg> = (0..1 + rng.below(5)).map(|_| gen_msg(rng, false)).collect();
+        let mut stream = Vec::new();
+        for m in &msgs {
+            write_frame(&mut stream, &m.encode()).map_err(|e| format!("write: {e:#}"))?;
+        }
+        let mut cur = std::io::Cursor::new(stream);
+        for m in &msgs {
+            let payload = read_frame(&mut cur)
+                .map_err(|e| format!("read: {e:#}"))?
+                .ok_or("premature EOF")?;
+            prop_assert!(payload == m.encode(), "frame payload drifted for {}", m.name());
+        }
+        prop_assert!(
+            read_frame(&mut cur).map_err(|e| format!("eof read: {e:#}"))?.is_none(),
+            "expected clean EOF after {} frames",
+            msgs.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn truncated_frame_streams_error_not_panic() {
+    check("frame-truncation", 128, |rng| {
+        let mut stream = Vec::new();
+        write_frame(&mut stream, &gen_msg(rng, false).encode()).map_err(|e| format!("{e:#}"))?;
+        let cut = rng.below(stream.len());
+        if cut == 0 {
+            return Ok(()); // empty stream is a clean EOF, nothing to assert
+        }
+        stream.truncate(cut);
+        let result = read_frame(&mut std::io::Cursor::new(stream));
+        prop_assert!(
+            match &result {
+                Ok(Some(_)) => false,
+                // read_exact reports UnexpectedEof even after partial
+                // bytes, so a cut inside the 4-byte length prefix is
+                // indistinguishable from a clean boundary EOF.
+                Ok(None) => cut < 4,
+                Err(_) => true,
+            },
+            "truncated frame at {cut} gave {result:?}"
+        );
+        Ok(())
+    });
+}

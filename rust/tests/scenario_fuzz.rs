@@ -1,0 +1,123 @@
+//! Scenario fuzz: degenerate cohorts must degrade gracefully, never
+//! panic, and keep the reproducibility contract.
+//!
+//! Random combinations of the scenario axes pushed to their edges —
+//! participation → 0 (the cohort clamps to one client), every client a
+//! straggler, extreme non-IID partitions — across random schemes and
+//! cuts.  Each case must (a) complete, (b) report a finite loss over a
+//! non-empty renormalized cohort, and (c) satisfy reset(s) ≡ fresh(s)
+//! bitwise.  (The networked engine's own degenerate cohorts — an empty
+//! federation, every participant dropped — are unit-tested in
+//! `coordinator::net`.)
+
+use sfl_ga::coordinator::{params_digest, stats_digest, SchemeKind, TrainConfig, Trainer};
+use sfl_ga::data::partition::Partition;
+use sfl_ga::model::Manifest;
+use sfl_ga::prop_assert;
+use sfl_ga::scenario::{ScenarioConfig, StragglerConfig};
+use sfl_ga::util::proptest::check;
+use sfl_ga::util::rng::Pcg;
+
+/// A random scenario biased toward the degenerate edges.
+fn gen_scenario(rng: &mut Pcg) -> ScenarioConfig {
+    let partition = match rng.below(3) {
+        0 => Partition::Iid,
+        1 => Partition::Dirichlet(0.05 + rng.uniform()), // near-degenerate non-IID
+        _ => Partition::Shards(1 + rng.below(3)),
+    };
+    let participation = match rng.below(3) {
+        0 => 1e-12, // cohort clamps to a single client
+        1 => rng.range(0.05, 0.95),
+        _ => 1.0,
+    };
+    let straggler = match rng.below(3) {
+        0 => StragglerConfig::default(),
+        1 => StragglerConfig { frac: 1.0, factor: 16.0 }, // ALL stragglers
+        _ => StragglerConfig { frac: rng.uniform(), factor: 1.0 + rng.uniform() * 8.0 },
+    };
+    ScenarioConfig { partition, participation, straggler }
+}
+
+fn tiny_cfg(rng: &mut Pcg) -> (TrainConfig, usize) {
+    let schemes = SchemeKind::all();
+    let cfg = TrainConfig {
+        scheme: schemes[rng.below(schemes.len())],
+        num_clients: 2 + rng.below(3),
+        rounds: 1,
+        tau: 1,
+        samples_per_client: 32,
+        test_samples: 64,
+        scenario: gen_scenario(rng),
+        seed: 0xFA11 ^ rng.next_u64(),
+        eval_every: 1,
+        threads: 1,
+        ..Default::default()
+    };
+    let cut = 1 + rng.below(2);
+    (cfg, cut)
+}
+
+#[test]
+fn degenerate_scenarios_complete_with_finite_renormalized_rounds() {
+    let manifest = Manifest::builtin();
+    check("degenerate-scenarios", 8, |rng| {
+        let (cfg, cut) = tiny_cfg(rng);
+        let n = cfg.num_clients;
+        let label = format!(
+            "{} n={n} cut={cut} [{}]",
+            cfg.scheme.name(),
+            cfg.scenario.describe()
+        );
+        let mut trainer =
+            Trainer::native(&manifest, cfg).map_err(|e| format!("{label}: construct: {e:#}"))?;
+        let stats = trainer.run(cut).map_err(|e| format!("{label}: run: {e:#}"))?;
+        prop_assert!(stats.len() == 1, "{label}: expected 1 round, got {}", stats.len());
+        let s = &stats[0];
+        prop_assert!(s.train_loss.is_finite(), "{label}: non-finite loss {}", s.train_loss);
+        prop_assert!(
+            (1..=n).contains(&s.participants),
+            "{label}: cohort of {} outside 1..={n}",
+            s.participants
+        );
+        let (tl, ta) =
+            s.test.ok_or_else(|| format!("{label}: eval round missing test stats"))?;
+        prop_assert!(tl.is_finite(), "{label}: non-finite test loss {tl}");
+        prop_assert!((0.0..=1.0).contains(&ta), "{label}: accuracy {ta} outside [0, 1]");
+        Ok(())
+    });
+}
+
+#[test]
+fn reset_equals_fresh_under_degenerate_scenarios() {
+    let manifest = Manifest::builtin();
+    check("reset-equals-fresh", 4, |rng| {
+        let (cfg, cut) = tiny_cfg(rng);
+        let label = format!("{} [{}]", cfg.scheme.name(), cfg.scenario.describe());
+        let orig_seed = cfg.seed;
+        let reseed = cfg.seed ^ 0xBEEF;
+
+        let mut trainer = Trainer::native(&manifest, cfg.clone())
+            .map_err(|e| format!("{label}: construct: {e:#}"))?;
+        let first = trainer.run(cut).map_err(|e| format!("{label}: run 1: {e:#}"))?;
+        let first = (stats_digest(&first), params_digest(&trainer.global_params(cut)));
+
+        // Reset to a different seed, run, and demand bitwise agreement
+        // with a from-scratch trainer at that seed — then reset back and
+        // demand the original digests again.
+        trainer.reset(reseed);
+        let reset_run = trainer.run(cut).map_err(|e| format!("{label}: reset run: {e:#}"))?;
+        let reset_run =
+            (stats_digest(&reset_run), params_digest(&trainer.global_params(cut)));
+        let mut fresh = Trainer::native(&manifest, TrainConfig { seed: reseed, ..cfg })
+            .map_err(|e| format!("{label}: fresh construct: {e:#}"))?;
+        let fresh_run = fresh.run(cut).map_err(|e| format!("{label}: fresh run: {e:#}"))?;
+        let fresh_run = (stats_digest(&fresh_run), params_digest(&fresh.global_params(cut)));
+        prop_assert!(reset_run == fresh_run, "{label}: reset({reseed:#x}) != fresh");
+
+        trainer.reset(orig_seed);
+        let back = trainer.run(cut).map_err(|e| format!("{label}: reset-back run: {e:#}"))?;
+        let back = (stats_digest(&back), params_digest(&trainer.global_params(cut)));
+        prop_assert!(back == first, "{label}: reset back to {orig_seed:#x} lost the original run");
+        Ok(())
+    });
+}
