@@ -25,7 +25,7 @@ use sfl_ga::coordinator::{
     params_digest, stats_digest, AllocPolicy, NetTrainer, RunMetrics, SchemeKind, TrainConfig,
 };
 use sfl_ga::info;
-use sfl_ga::model::Manifest;
+use sfl_ga::model::{Manifest, NUM_CUTS};
 use sfl_ga::runtime::TcpTransport;
 use sfl_ga::util::cli::Args;
 use sfl_ga::util::logging;
@@ -72,6 +72,10 @@ fn run() -> anyhow::Result<()> {
     let deadline = args.duration_ms("deadline-ms", 10_000)?;
     let scheme = SchemeKind::parse(&args.str_or("scheme", "sfl-ga"))?;
     let cut: usize = args.parse_or("cut", 2usize)?;
+    anyhow::ensure!(
+        (1..=NUM_CUTS).contains(&cut),
+        "--cut must be in 1..={NUM_CUTS}, got {cut}"
+    );
 
     let listener = TcpListener::bind(args.str_or("listen", "127.0.0.1:0"))?;
     emit(&format!("LISTENING {}", listener.local_addr()?));

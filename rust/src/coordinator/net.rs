@@ -38,7 +38,7 @@ use std::time::{Duration, Instant};
 use crate::data::init::{init_params, join_params};
 use crate::data::partition::Partition;
 use crate::data::{generate, Dataset};
-use crate::model::Manifest;
+use crate::model::{Manifest, NUM_CUTS};
 use crate::protocol::{Msg, RunSetup};
 use crate::runtime::transport::{Incoming, Transport};
 use crate::runtime::{LoopbackTransport, ModelRuntime, ParallelExecutor, Tensor};
@@ -116,6 +116,7 @@ impl<T: Transport> NetTrainer<T> {
         mut transport: T,
     ) -> anyhow::Result<NetTrainer<T>> {
         anyhow::ensure!(cfg.rounds > 0 && cfg.tau > 0, "rounds and tau must be positive");
+        anyhow::ensure!(deadline > Duration::ZERO, "deadline must be positive");
         anyhow::ensure!(cfg.eval_every > 0, "eval_every must be positive");
         anyhow::ensure!(cfg.test_samples > 0, "test_samples must be positive");
         anyhow::ensure!(cfg.samples_per_client > 0, "samples_per_client must be positive");
@@ -170,6 +171,10 @@ impl<T: Transport> NetTrainer<T> {
             partition: partition_str(&cfg.scenario.partition),
             samples_per_client: cfg.samples_per_client,
         };
+        // Writes must respect the same deadline as collections: a peer
+        // that stops reading would otherwise block `send` forever and
+        // the fault policy could never fire.
+        transport.set_io_deadline(deadline);
         for &id in &ids {
             transport.send(id, &Msg::Welcome { setup: setup.clone() });
         }
@@ -229,6 +234,10 @@ impl<T: Transport> NetTrainer<T> {
     /// on a drop, restore the entry snapshot, renormalize to the
     /// survivors and restart (same channel draw — see the module docs).
     pub fn run_round(&mut self, cut: usize) -> anyhow::Result<RoundStats> {
+        anyhow::ensure!(
+            (1..=NUM_CUTS).contains(&cut),
+            "cut {cut} outside 1..={NUM_CUTS}"
+        );
         let snapshot = (self.client_side.clone(), self.ws.clone(), self.w_full.clone());
         let draw = self.round as u64;
         loop {
@@ -355,13 +364,20 @@ impl<T: Transport> NetTrainer<T> {
             };
             let mut smashed = Vec::with_capacity(k);
             let mut labels = Vec::with_capacity(k);
-            for msg in fwds {
+            for (j, msg) in fwds.into_iter().enumerate() {
                 match msg {
                     Msg::FwdOk { smashed: s, labels: y, .. } => {
                         smashed.push(s);
                         labels.push(y);
                     }
-                    other => anyhow::bail!("expected fwd-ok, got {}", other.name()),
+                    // A wrong-typed reply is that peer's protocol
+                    // violation, not the federation's: fault it.
+                    other => {
+                        return Ok(Err((
+                            vec![ids[j]],
+                            format!("expected fwd-ok, got {}", other.name()),
+                        )))
+                    }
                 }
             }
             // Phase 2 — server FP+BP (eqs 2–4) on the coordinator's own
@@ -412,10 +428,15 @@ impl<T: Transport> NetTrainer<T> {
                 Phase::Fault { dead, reason } => return Ok(Err((dead, reason))),
             };
             let mut g_c_parts = Vec::with_capacity(k);
-            for msg in bwds {
+            for (j, msg) in bwds.into_iter().enumerate() {
                 match msg {
                     Msg::BwdOk { grad, .. } => g_c_parts.push(grad),
-                    other => anyhow::bail!("expected bwd-ok, got {}", other.name()),
+                    other => {
+                        return Ok(Err((
+                            vec![ids[j]],
+                            format!("expected bwd-ok, got {}", other.name()),
+                        )))
+                    }
                 }
             }
             // Apply this epoch's updates on the coordinator: server step
@@ -492,7 +513,12 @@ impl<T: Transport> NetTrainer<T> {
                     loss_acc += weights[j] * *loss;
                     tensor::weighted_accumulate(&mut agg, w, weights[j]);
                 }
-                other => anyhow::bail!("expected full-ok, got {}", other.name()),
+                other => {
+                    return Ok(Err((
+                        vec![ids[j]],
+                        format!("expected full-ok, got {}", other.name()),
+                    )))
+                }
             }
         }
         self.w_full = agg;
@@ -517,6 +543,18 @@ impl<T: Transport> NetTrainer<T> {
                 };
             }
             match self.transport.recv(left) {
+                // Events from outside the cohort are stale: dropping a
+                // TCP peer shuts its socket, which wakes its reader
+                // thread and queues one last Gone for an id the fault
+                // policy already removed — acting on it would re-fault
+                // the restarted attempt and double-count the drop.
+                Some((id, ev)) if !ids.contains(&id) => {
+                    let what = match &ev {
+                        Incoming::Msg(m) => m.name(),
+                        Incoming::Gone(_) => "gone",
+                    };
+                    info!("ignoring stale {what} from dropped {id}");
+                }
                 Some((id, Incoming::Msg(msg))) => {
                     let seq = match &msg {
                         Msg::FwdOk { seq, .. } | Msg::BwdOk { seq, .. }
@@ -759,6 +797,124 @@ mod tests {
         assert!(NetTrainer::loopback(&manifest, cfg, 2).is_err());
         // Zero participants cannot form a federation.
         assert!(NetTrainer::loopback(&manifest, tiny_cfg(), 0).is_err());
+    }
+
+    /// Loopback wrapper reproducing the TCP drop race: the peer's first
+    /// fwd-ok is lost (deadline fault), and — as shutting a dropped
+    /// peer's socket does — a terminal Gone for it arrives AFTER the
+    /// fault policy removed it.  The stale Gone must be discarded, not
+    /// double-drop the peer and re-restart the round.
+    struct StaleGoneTransport {
+        inner: LoopbackTransport,
+        swallowed: bool,
+        stale_gone: Option<u64>,
+    }
+
+    impl Transport for StaleGoneTransport {
+        fn clients(&self) -> Vec<u64> {
+            self.inner.clients()
+        }
+
+        fn send(&mut self, id: u64, msg: &Msg) {
+            self.inner.send(id, msg)
+        }
+
+        fn recv(&mut self, timeout: Duration) -> Option<(u64, Incoming)> {
+            if let Some(id) = self.stale_gone.take() {
+                return Some((id, Incoming::Gone("connection closed".into())));
+            }
+            loop {
+                let (id, ev) = self.inner.recv(timeout)?;
+                if !self.swallowed && id == 1 {
+                    if let Incoming::Msg(Msg::FwdOk { .. }) = ev {
+                        self.swallowed = true;
+                        continue; // lost on the wire
+                    }
+                }
+                return Some((id, ev));
+            }
+        }
+
+        fn drop_client(&mut self, id: u64) {
+            self.inner.drop_client(id);
+            self.stale_gone = Some(id);
+        }
+    }
+
+    #[test]
+    fn stale_gone_after_drop_is_discarded() {
+        let manifest = Manifest::builtin();
+        let transport = StaleGoneTransport {
+            inner: LoopbackTransport::new(&[0, 1], 1).unwrap(),
+            swallowed: false,
+            stale_gone: None,
+        };
+        let mut nt =
+            NetTrainer::new(&manifest, tiny_cfg(), Duration::from_secs(60), transport).unwrap();
+        let stats = nt.run(2).unwrap();
+        // Exactly one drop of exactly peer 1, and the restarted round
+        // completes over the survivor.
+        assert_eq!(nt.dropped(), &[1]);
+        assert_eq!(nt.live(), vec![0]);
+        assert_eq!(stats[0].participants, 1);
+    }
+
+    /// Loopback wrapper whose peer 1 answers its first fwd-req with a
+    /// well-formed but wrong-typed message carrying the matching seq.
+    struct WrongTypeTransport {
+        inner: LoopbackTransport,
+        tampered: bool,
+    }
+
+    impl Transport for WrongTypeTransport {
+        fn clients(&self) -> Vec<u64> {
+            self.inner.clients()
+        }
+
+        fn send(&mut self, id: u64, msg: &Msg) {
+            self.inner.send(id, msg)
+        }
+
+        fn recv(&mut self, timeout: Duration) -> Option<(u64, Incoming)> {
+            let (id, ev) = self.inner.recv(timeout)?;
+            if !self.tampered && id == 1 {
+                if let Incoming::Msg(Msg::FwdOk { seq, .. }) = &ev {
+                    self.tampered = true;
+                    let wrong = Msg::BwdOk { seq: *seq, grad: Params::new() };
+                    return Some((id, Incoming::Msg(wrong)));
+                }
+            }
+            Some((id, ev))
+        }
+
+        fn drop_client(&mut self, id: u64) {
+            self.inner.drop_client(id)
+        }
+    }
+
+    #[test]
+    fn wrong_typed_reply_drops_only_the_offender() {
+        let manifest = Manifest::builtin();
+        let transport = WrongTypeTransport {
+            inner: LoopbackTransport::new(&[0, 1], 1).unwrap(),
+            tampered: false,
+        };
+        let mut nt =
+            NetTrainer::new(&manifest, tiny_cfg(), Duration::from_secs(60), transport).unwrap();
+        // One buggy participant must not kill the federation: peer 1 is
+        // dropped via the fault policy and the run completes over peer 0.
+        let stats = nt.run(2).unwrap();
+        assert_eq!(nt.dropped(), &[1]);
+        assert_eq!(nt.live(), vec![0]);
+        assert_eq!(stats[0].participants, 1);
+    }
+
+    #[test]
+    fn run_round_rejects_out_of_range_cuts() {
+        let manifest = Manifest::builtin();
+        let mut nt = NetTrainer::loopback(&manifest, tiny_cfg(), 1).unwrap();
+        assert!(nt.run_round(0).is_err());
+        assert!(nt.run_round(crate::model::NUM_CUTS + 1).is_err());
     }
 
     #[test]

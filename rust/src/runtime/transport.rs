@@ -65,6 +65,15 @@ pub trait Transport {
 
     /// Remove `id` from the live set (and close its link, if any).
     fn drop_client(&mut self, id: u64);
+
+    /// Bound how long any single [`Transport::send`] may block.  Without
+    /// it a peer that stops reading (SIGSTOP, black-holed link) wedges
+    /// the coordinator mid-write once the socket buffer fills — e.g. an
+    /// FL [`Msg::FullReq`] ships the whole model, far more than a socket
+    /// buffers — and the fault policy can never fire.  A timed-out write
+    /// is a failed send (⇒ [`Incoming::Gone`]).  Default: no-op, for
+    /// transports whose sends cannot block.
+    fn set_io_deadline(&mut self, _deadline: Duration) {}
 }
 
 // ------------------------------------------------------------------ tcp
@@ -214,6 +223,14 @@ impl Transport for TcpTransport {
     fn drop_client(&mut self, id: u64) {
         if let Some(stream) = self.peers.remove(&id) {
             let _ = stream.shutdown(std::net::Shutdown::Both);
+        }
+    }
+
+    fn set_io_deadline(&mut self, deadline: Duration) {
+        for (id, stream) in &self.peers {
+            if let Err(e) = stream.set_write_timeout(Some(deadline)) {
+                warn_log!("peer {id}: set_write_timeout failed: {e}");
+            }
         }
     }
 }
@@ -397,5 +414,51 @@ mod tests {
     #[test]
     fn duplicate_loopback_ids_rejected() {
         assert!(LoopbackTransport::new(&[1, 1], 1).is_err());
+    }
+
+    /// A peer that joins and then never reads must not wedge the
+    /// coordinator in `send`: once its socket buffer fills, the write
+    /// deadline turns the blocked send into that peer's Gone event.
+    #[test]
+    fn blocked_send_hits_io_deadline_and_surfaces_gone() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        // The regression this guards against is an unbounded blocking
+        // write, so a hang IS the failure mode — abort instead.
+        let done = Arc::new(AtomicBool::new(false));
+        {
+            let done = done.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_secs(120));
+                if !done.load(Ordering::SeqCst) {
+                    eprintln!("blocked_send_hits_io_deadline_and_surfaces_gone wedged");
+                    std::process::abort();
+                }
+            });
+        }
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let peer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            write_frame(&mut s, &Msg::Join { client: 0, version: PROTO_VERSION }.encode())
+                .unwrap();
+            s // keep the connection open, never read from it
+        });
+        let mut t = TcpTransport::accept(&listener, 1, Duration::from_secs(30)).unwrap();
+        let _peer_stream = peer.join().unwrap();
+        t.set_io_deadline(Duration::from_millis(200));
+
+        // ~8 MB frame — far beyond any default socket buffer, so the
+        // write must block and then time out.
+        let w = vec![vec![0.0f32; 2_000_000]];
+        t.send(0, &Msg::FullReq { seq: 1, step0: 0, tau: 1, lr: 0.1, w });
+        match t.recv(Duration::from_secs(5)) {
+            Some((0, Incoming::Gone(_))) => {}
+            other => panic!("expected gone after blocked send, got {other:?}"),
+        }
+        assert!(t.clients().is_empty());
+        done.store(true, Ordering::SeqCst);
     }
 }
