@@ -11,18 +11,27 @@
 //! ```text
 //! LISTENING 127.0.0.1:41234        # after bind, before accepting
 //! JOINED 0 1 2                     # the federation, ascending ids
+//! CHECKPOINT round=3               # after each snapshot hits disk
 //! COMPLETE rounds=R dropped=1,3 stats=0x<fnv64> params=0x<fnv64>
 //! ```
 //!
 //! The digests are FNV-1a over every stat float's bits and the final
 //! global parameters — two coordinators print identical digests iff
 //! their runs agreed bitwise.  Logs go to stderr.
+//!
+//! Churn controls: `--min-clients` sets the quorum floor (a round whose
+//! live cohort falls below it pauses up to `--quorum-wait-ms` for
+//! rejoins before erroring out); `--checkpoint <path>` +
+//! `--checkpoint-every K` persist the round-entry state so a killed
+//! coordinator relaunched with `--resume <path>` finishes the run with
+//! digests bitwise identical to an uninterrupted one.
 
 use std::net::TcpListener;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use sfl_ga::coordinator::{
-    params_digest, stats_digest, AllocPolicy, NetTrainer, RunMetrics, SchemeKind, TrainConfig,
+    params_digest, stats_digest, AllocPolicy, Checkpoint, NetTrainer, RunMetrics, SchemeKind,
+    TrainConfig,
 };
 use sfl_ga::info;
 use sfl_ga::model::{Manifest, NUM_CUTS};
@@ -56,6 +65,11 @@ fn run() -> anyhow::Result<()> {
         ("test-samples", "2048", "test split size"),
         ("eval-every", "5", "rounds between evaluations"),
         ("threads", "0", "coordinator worker threads (0 = auto)"),
+        ("min-clients", "1", "quorum floor: pause below this many live participants"),
+        ("quorum-wait-ms", "0", "how long a paused round waits for rejoins"),
+        ("checkpoint", "", "optional checkpoint path (round-entry snapshots)"),
+        ("checkpoint-every", "5", "rounds between checkpoints"),
+        ("resume", "", "resume a killed run from this checkpoint"),
         ("out", "", "optional metrics CSV path"),
     ] {
         args.declare(name, default, help);
@@ -77,9 +91,22 @@ fn run() -> anyhow::Result<()> {
         "--cut must be in 1..={NUM_CUTS}, got {cut}"
     );
 
+    let resume_path = args.str_or("resume", "");
+    let ckpt = if resume_path.is_empty() {
+        None
+    } else {
+        let c = Checkpoint::load(Path::new(&resume_path))?;
+        info!("resuming from {resume_path}: round {}, {} live", c.round, c.live.len());
+        Some(c)
+    };
+    // A resumed run rendezvouses with exactly the peers that were live at
+    // the snapshot — the restored round engine expects that cohort.
+    let expected = ckpt.as_ref().map_or(expected, |c| c.live.len());
+    anyhow::ensure!(expected > 0, "checkpoint has no live participants to resume with");
+
     let listener = TcpListener::bind(args.str_or("listen", "127.0.0.1:0"))?;
     emit(&format!("LISTENING {}", listener.local_addr()?));
-    let transport = TcpTransport::accept(&listener, expected, join_deadline)?;
+    let transport = TcpTransport::accept(listener, expected, join_deadline)?;
     let joined = transport.joined();
     emit(&format!(
         "JOINED {}",
@@ -104,10 +131,25 @@ fn run() -> anyhow::Result<()> {
         ..Default::default()
     };
     let manifest = Manifest::builtin();
-    let mut nt = NetTrainer::new(&manifest, cfg, deadline, transport)?;
+    let mut nt = match &ckpt {
+        Some(c) => NetTrainer::resume(&manifest, cfg, deadline, transport, c)?,
+        None => NetTrainer::new(&manifest, cfg, deadline, transport)?,
+    };
+    let min_clients: usize = args.parse_or("min-clients", 1usize)?;
+    nt = nt.with_quorum(min_clients, args.duration_ms("quorum-wait-ms", 0)?);
+    let ckpt_out = args.str_or("checkpoint", "");
+    if !ckpt_out.is_empty() {
+        let every: usize = args.parse_or("checkpoint-every", 5usize)?;
+        nt = nt.with_checkpoint(PathBuf::from(&ckpt_out), every);
+    }
     info!("federation of {} at cut v={cut}, scheme {}", joined.len(), scheme.name());
 
-    let stats = nt.run(cut)?;
+    while let Some((s, saved)) = nt.step(cut)? {
+        if saved {
+            emit(&format!("CHECKPOINT round={}", s.round));
+        }
+    }
+    let stats = nt.stats().to_vec();
     let mut metrics = RunMetrics::new(scheme, &dataset);
     for s in &stats {
         metrics.push(s);

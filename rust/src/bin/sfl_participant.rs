@@ -6,21 +6,33 @@
 //! the in-process loopback transport runs — which is why TCP and
 //! loopback federations train bitwise identically.
 //!
-//! The process exits on coordinator Shutdown, on EOF (the coordinator
-//! closed the link — e.g. this participant was dropped by the fault
-//! policy), or after `--idle-timeout-ms` without coordinator traffic, so
-//! chaos runs and CI never leak orphan processes.  Prints `JOINED <id>`
-//! to stdout once configured.
+//! Dialing uses exponential backoff with per-id jitter so a cohort of
+//! participants launched in lockstep does not hammer the coordinator in
+//! sync.  A coordinator EOF *during the handshake* (before any frame was
+//! processed) is retried inside the same connect window — the
+//! coordinator may be mid-restart or still draining a stale socket.
+//!
+//! Once a session is established the process exits on coordinator
+//! Shutdown, on EOF (the coordinator closed the link — e.g. this
+//! participant was dropped by the fault policy), or after
+//! `--idle-timeout-ms` without coordinator traffic, so chaos runs and CI
+//! never leak orphan processes.  With `--reconnect`, a mid-run EOF
+//! instead re-arms the dialer for `--reconnect-window-ms` and the next
+//! session opens with `Rejoin`; the coordinator admits it at the next
+//! round boundary and re-`Sync`s the run configuration.  Prints
+//! `JOINED <id>` to stdout once configured and `REJOINED <id>` when a
+//! rejoin session processes its first frame.
 
 use std::io::{ErrorKind, Read};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
 use sfl_ga::protocol::wire::{write_frame, MAX_FRAME};
-use sfl_ga::protocol::Msg;
+use sfl_ga::protocol::{Msg, PROTO_VERSION};
 use sfl_ga::runtime::ParticipantNode;
 use sfl_ga::util::cli::Args;
 use sfl_ga::util::logging;
+use sfl_ga::util::rng::Pcg;
 use sfl_ga::{info, warn_log};
 
 fn main() {
@@ -30,12 +42,23 @@ fn main() {
     }
 }
 
+/// How a session over one TCP connection ended.
+enum Exit {
+    /// Coordinator sent `Shutdown` — the run is over, exit cleanly.
+    Shutdown,
+    /// The link went down.  `established` is true iff at least one
+    /// coordinator frame was processed on this connection — false means
+    /// the coordinator hung up during the handshake (retryable).
+    Closed { established: bool },
+}
+
 fn run() -> anyhow::Result<()> {
     let mut args = Args::parse(std::env::args().skip(1))?;
     for (name, default, help) in [
         ("connect", "", "coordinator address, e.g. 127.0.0.1:41234"),
         ("client-id", "", "this participant's client id"),
         ("connect-timeout-ms", "10000", "connection retry window"),
+        ("reconnect-window-ms", "10000", "with --reconnect: redial window after a lost link"),
         ("idle-timeout-ms", "60000", "exit after this long without traffic"),
     ] {
         args.declare(name, default, help);
@@ -53,21 +76,82 @@ fn run() -> anyhow::Result<()> {
         .parse()
         .map_err(|e| anyhow::anyhow!("--client-id: {e}"))?;
     let connect_window = args.duration_ms("connect-timeout-ms", 10_000)?;
+    let reconnect_window = args.duration_ms("reconnect-window-ms", 10_000)?;
     let idle = args.duration_ms("idle-timeout-ms", 60_000)?;
+    let reconnect = args.flag("reconnect");
 
-    let mut stream = connect_with_retry(&addr, connect_window)?;
-    stream.set_nodelay(true)?;
-    stream.set_read_timeout(Some(idle))?;
     let mut node = ParticipantNode::new(id);
-    write_frame(&mut stream, &node.join_msg().encode())?;
-    info!("participant {id} connected to {addr}");
+    // Jitter stream keyed by client id: every participant walks a
+    // different backoff schedule, so a lockstep cohort spreads out.
+    let mut rng = Pcg::new(id, 0xB0FF);
+    let mut attempt: u32 = 0;
+    let mut hello = node.join_msg();
+    let mut rejoining = false;
+    let mut window = connect_window;
+    let mut window_start = Instant::now();
 
     loop {
-        let payload = match next_frame(&mut stream) {
+        let left = window.saturating_sub(window_start.elapsed());
+        anyhow::ensure!(
+            left > Duration::ZERO,
+            "participant {id}: no session established within {window:?}"
+        );
+        let mut stream = connect_with_backoff(&addr, left, &mut rng, &mut attempt)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(idle))?;
+        if let Err(e) = write_frame(&mut stream, &hello.encode()) {
+            // The coordinator accepted then immediately closed — same as
+            // a handshake EOF, retry inside the window.
+            warn_log!("participant {id}: handshake send failed: {e:#}");
+            continue;
+        }
+        info!("participant {id} connected to {addr}");
+        match session(&mut stream, &mut node, id, rejoining, reconnect)? {
+            Exit::Shutdown => {
+                info!("participant {id}: shutdown");
+                return Ok(());
+            }
+            Exit::Closed { established: false } => {
+                // Handshake EOF: rendezvous refused or the coordinator is
+                // mid-restart.  Retry inside the SAME window.
+            }
+            Exit::Closed { established: true } => {
+                if !reconnect {
+                    info!("participant {id}: coordinator closed the session");
+                    return Ok(());
+                }
+                info!("participant {id}: link lost, re-arming reconnect");
+                attempt = 0;
+                hello = Msg::Rejoin { client: id, version: PROTO_VERSION };
+                rejoining = true;
+                window = reconnect_window;
+                window_start = Instant::now();
+            }
+        }
+    }
+}
+
+/// Service one established connection until Shutdown or the link drops.
+/// IO failures map to [`Exit::Closed`] when `reconnect` is armed (the
+/// caller redials); without it a mid-session transport error is fatal,
+/// matching the original one-shot behaviour.
+fn session(
+    stream: &mut TcpStream,
+    node: &mut ParticipantNode,
+    id: u64,
+    rejoining: bool,
+    reconnect: bool,
+) -> anyhow::Result<Exit> {
+    let mut established = false;
+    loop {
+        let payload = match next_frame(stream) {
             Ok(Some(p)) => p,
             Ok(None) => {
-                info!("participant {id}: coordinator closed the session");
-                return Ok(());
+                return Ok(Exit::Closed { established });
+            }
+            Err(e) if reconnect => {
+                warn_log!("participant {id}: link error: {e:#}");
+                return Ok(Exit::Closed { established });
             }
             Err(e) => {
                 warn_log!("participant {id}: link error: {e:#}");
@@ -76,36 +160,57 @@ fn run() -> anyhow::Result<()> {
         };
         let msg = Msg::decode(&payload)?;
         if matches!(msg, Msg::Shutdown) {
-            info!("participant {id}: shutdown");
-            return Ok(());
+            return Ok(Exit::Shutdown);
         }
         let was_ready = node.ready();
         let replies = node.handle(&msg)?;
+        if !established {
+            established = true;
+            if rejoining {
+                emit(&format!("REJOINED {id}"));
+            }
+        }
         if !was_ready && node.ready() {
             // Machine-readable welcome acknowledgement for spawning tests.
-            use std::io::Write;
-            let mut out = std::io::stdout().lock();
-            let _ = writeln!(out, "JOINED {id}");
-            let _ = out.flush();
+            emit(&format!("JOINED {id}"));
         }
         for reply in replies {
-            write_frame(&mut stream, &reply.encode())?;
+            if let Err(e) = write_frame(stream, &reply.encode()) {
+                if reconnect {
+                    warn_log!("participant {id}: send failed: {e:#}");
+                    return Ok(Exit::Closed { established });
+                }
+                return Err(e);
+            }
         }
     }
 }
 
 /// Dial until the coordinator answers or the window closes (the
-/// coordinator may bind after this process launches).
-fn connect_with_retry(addr: &str, window: Duration) -> anyhow::Result<TcpStream> {
+/// coordinator may bind after this process launches).  Sleeps between
+/// attempts grow exponentially — base `25 << attempt` ms, capped at
+/// 1.6 s — with the actual delay jittered into `[base/2, base)` so
+/// retries desynchronize across the cohort.
+fn connect_with_backoff(
+    addr: &str,
+    window: Duration,
+    rng: &mut Pcg,
+    attempt: &mut u32,
+) -> anyhow::Result<TcpStream> {
     let t0 = Instant::now();
     loop {
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
-            Err(e) if t0.elapsed() < window => {
-                let _ = e;
-                std::thread::sleep(Duration::from_millis(50));
+            Err(e) => {
+                let base = 25u64 << (*attempt).min(6);
+                *attempt += 1;
+                let jittered = base / 2 + rng.below((base - base / 2) as usize) as u64;
+                let delay = Duration::from_millis(jittered);
+                if t0.elapsed() + delay >= window {
+                    anyhow::bail!("could not connect to {addr} within {window:?}: {e}");
+                }
+                std::thread::sleep(delay);
             }
-            Err(e) => anyhow::bail!("could not connect to {addr} within {window:?}: {e}"),
         }
     }
 }
@@ -133,4 +238,13 @@ fn next_frame(stream: &mut TcpStream) -> anyhow::Result<Option<Vec<u8>>> {
         .read_exact(&mut payload)
         .map_err(|e| anyhow::anyhow!("truncated frame ({n} byte payload): {e}"))?;
     Ok(Some(payload))
+}
+
+/// Machine-readable stdout line, flushed so a spawning test sees it
+/// immediately.
+fn emit(line: &str) {
+    use std::io::Write;
+    let mut out = std::io::stdout().lock();
+    let _ = writeln!(out, "{line}");
+    let _ = out.flush();
 }

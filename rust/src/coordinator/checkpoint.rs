@@ -1,0 +1,400 @@
+//! Coordinator checkpoint/resume (DESIGN.md §Transport): the round-entry
+//! snapshot serialized to disk every K rounds so a SIGKILLed coordinator
+//! can resume a run instead of losing it.
+//!
+//! The checkpoint IS the fault policy's round-entry snapshot plus the
+//! bookkeeping the engine threads through rounds: global parameters as
+//! raw LE f32 bits (reusing the wire codec, so checkpointed params
+//! roundtrip bit-exactly), the round index, the seq counter, the dropped
+//! set, the live id set, and the full per-round stats history.  Nothing
+//! else is state: per-client derivations (channel gains, capacities,
+//! batches) are pure functions of `(seed, id[, draw])`, so they replay
+//! identically from the config — which is why a resumed run is bitwise
+//! the uninterrupted run (`tests/chaos.rs` pins this across a real
+//! SIGKILL).
+//!
+//! File format: an 8-byte magic, the payload over [`wire`]'s LE
+//! primitives, and a trailing FNV-1a digest of the payload — a torn or
+//! corrupted file (e.g. a crash mid-write, though [`Checkpoint::save`]
+//! writes via tmp+rename to keep the published path atomic) fails the
+//! digest check instead of resuming silently wrong.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::protocol::wire::{ByteReader, ByteWriter};
+use crate::protocol::{decode_params, encode_params};
+use crate::tensor::Params;
+
+use super::net::{partition_str, Digest};
+use super::trainer::{RoundStats, TrainConfig};
+
+/// `b"SFLGACK1"` as a little-endian u64.
+const MAGIC: u64 = u64::from_le_bytes(*b"SFLGACK1");
+
+/// Client-side model state in checkpoint form — the serializable twin of
+/// the engine's private representation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientSideState {
+    /// One shared logical client model (SFL-GA's eq 19, and FL).
+    Shared(Params),
+    /// Per-participant replicas, keyed by id (SFL / PSL / drift).
+    PerClient(BTreeMap<u64, Params>),
+}
+
+/// A serialized round-entry snapshot; see the module docs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Fingerprint of the [`TrainConfig`] that produced this snapshot;
+    /// resuming under a different config is refused (the derivation keys
+    /// would not replay).
+    pub fingerprint: u64,
+    /// Rounds completed (the next round to run).
+    pub round: u64,
+    /// The engine's seq counter (monotone across the whole run, so
+    /// post-resume requests can never collide with pre-kill stale ones).
+    pub seq: u64,
+    /// Participants removed by the fault policy, in drop order.
+    pub dropped: Vec<u64>,
+    /// Participants live at the snapshot, ascending — the resumed
+    /// rendezvous expects exactly these to dial back in.
+    pub live: Vec<u64>,
+    pub client_side: ClientSideState,
+    /// Server-side (split) parameter vector.
+    pub ws: Params,
+    /// Full-model (FL) parameter vector.
+    pub w_full: Params,
+    /// Per-round stats so far: a resumed run's COMPLETE history digests
+    /// equal to the uninterrupted run's.
+    pub stats: Vec<RoundStats>,
+}
+
+/// The config fields that shape training results — everything a resumed
+/// process must agree on.  `num_clients` (unused by the networked
+/// engine) and `threads` (bitwise-irrelevant by the determinism
+/// guarantee) are deliberately excluded.
+pub fn config_fingerprint(cfg: &TrainConfig) -> u64 {
+    let mut d = Digest::new();
+    d.bytes(cfg.dataset.as_bytes());
+    d.bytes(cfg.scheme.name().as_bytes());
+    d.bytes(&(cfg.rounds as u64).to_le_bytes());
+    d.bytes(&(cfg.tau as u64).to_le_bytes());
+    d.bytes(&cfg.lr.to_bits().to_le_bytes());
+    d.bytes(&(cfg.samples_per_client as u64).to_le_bytes());
+    d.bytes(&(cfg.test_samples as u64).to_le_bytes());
+    d.bytes(&cfg.seed.to_le_bytes());
+    d.bytes(&(cfg.eval_every as u64).to_le_bytes());
+    d.bytes(partition_str(&cfg.scenario.partition).as_bytes());
+    d.bytes(&[cfg.alloc as u8]);
+    for x in [
+        cfg.net.bandwidth,
+        cfg.net.p_max,
+        cfg.net.p_server,
+        cfg.net.n0,
+        cfg.net.d_min_km,
+        cfg.net.d_max_km,
+        cfg.comp.f_client_max,
+        cfg.comp.f_client_spread,
+        cfg.comp.f_server_total,
+        cfg.comp.samples_per_round as f64,
+        cfg.comp.bits_per_scalar,
+    ] {
+        d.f64(x);
+    }
+    d.bytes(&(cfg.comp.client_caps.len() as u64).to_le_bytes());
+    for &c in &cfg.comp.client_caps {
+        d.f64(c);
+    }
+    d.value()
+}
+
+fn encode_ids(w: &mut ByteWriter, ids: &[u64]) {
+    w.u32(ids.len() as u32);
+    for &id in ids {
+        w.u64(id);
+    }
+}
+
+fn decode_ids(r: &mut ByteReader) -> anyhow::Result<Vec<u64>> {
+    let n = r.u32()? as usize;
+    anyhow::ensure!(
+        n * 8 <= r.remaining(),
+        "implausible id count {n} for {} remaining bytes",
+        r.remaining()
+    );
+    (0..n).map(|_| r.u64()).collect()
+}
+
+fn encode_stats(w: &mut ByteWriter, stats: &[RoundStats]) {
+    w.u32(stats.len() as u32);
+    for s in stats {
+        w.u64(s.round as u64);
+        w.u64(s.cut as u64);
+        w.u64(s.participants as u64);
+        w.f64(s.train_loss);
+        w.f64(s.comm.uplink_bits);
+        w.f64(s.comm.downlink_bits);
+        w.f64(s.latency.uplink_leg);
+        w.f64(s.latency.downlink_leg);
+        match s.test {
+            Some((l, a)) => {
+                w.u8(1);
+                w.f64(l);
+                w.f64(a);
+            }
+            None => w.u8(0),
+        }
+    }
+}
+
+fn decode_stats(r: &mut ByteReader) -> anyhow::Result<Vec<RoundStats>> {
+    let n = r.u32()? as usize;
+    // Each record is at least 65 bytes; cheap bound against a corrupt
+    // count allocating wild.
+    anyhow::ensure!(
+        n * 65 <= r.remaining() + 65,
+        "implausible stats count {n} for {} remaining bytes",
+        r.remaining()
+    );
+    (0..n)
+        .map(|_| {
+            let round = r.u64()? as usize;
+            let cut = r.u64()? as usize;
+            let participants = r.u64()? as usize;
+            let train_loss = r.f64()?;
+            let comm = crate::coordinator::RoundComm {
+                uplink_bits: r.f64()?,
+                downlink_bits: r.f64()?,
+            };
+            let latency = crate::coordinator::RoundLatency {
+                uplink_leg: r.f64()?,
+                downlink_leg: r.f64()?,
+            };
+            let test = match r.u8()? {
+                0 => None,
+                1 => Some((r.f64()?, r.f64()?)),
+                other => anyhow::bail!("bad test-presence byte {other}"),
+            };
+            Ok(RoundStats { round, cut, participants, train_loss, comm, latency, test })
+        })
+        .collect()
+}
+
+const TAG_SHARED: u8 = 1;
+const TAG_PER_CLIENT: u8 = 2;
+
+impl Checkpoint {
+    /// Serialize: magic + payload + FNV digest of the payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.u64(self.fingerprint);
+        w.u64(self.round);
+        w.u64(self.seq);
+        encode_ids(&mut w, &self.dropped);
+        encode_ids(&mut w, &self.live);
+        match &self.client_side {
+            ClientSideState::Shared(p) => {
+                w.u8(TAG_SHARED);
+                encode_params(&mut w, p);
+            }
+            ClientSideState::PerClient(reps) => {
+                w.u8(TAG_PER_CLIENT);
+                w.u32(reps.len() as u32);
+                for (id, p) in reps {
+                    w.u64(*id);
+                    encode_params(&mut w, p);
+                }
+            }
+        }
+        encode_params(&mut w, &self.ws);
+        encode_params(&mut w, &self.w_full);
+        encode_stats(&mut w, &self.stats);
+        let payload = w.into_bytes();
+        let digest = Digest::new().bytes(&payload).value();
+        let mut out = Vec::with_capacity(payload.len() + 16);
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&payload);
+        out.extend_from_slice(&digest.to_le_bytes());
+        out
+    }
+
+    /// Decode + integrity-check; never panics on corrupt input.
+    pub fn decode(bytes: &[u8]) -> anyhow::Result<Checkpoint> {
+        anyhow::ensure!(bytes.len() >= 16, "checkpoint too short ({} bytes)", bytes.len());
+        let magic = u64::from_le_bytes(bytes[..8].try_into().expect("8 bytes"));
+        anyhow::ensure!(magic == MAGIC, "not a checkpoint file (bad magic {magic:#x})");
+        let payload = &bytes[8..bytes.len() - 8];
+        let stored =
+            u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().expect("8 bytes"));
+        let actual = Digest::new().bytes(payload).value();
+        anyhow::ensure!(
+            stored == actual,
+            "checkpoint digest mismatch (stored {stored:#x}, payload hashes to {actual:#x})"
+        );
+        let mut r = ByteReader::new(payload);
+        let fingerprint = r.u64()?;
+        let round = r.u64()?;
+        let seq = r.u64()?;
+        let dropped = decode_ids(&mut r)?;
+        let live = decode_ids(&mut r)?;
+        let client_side = match r.u8()? {
+            TAG_SHARED => ClientSideState::Shared(decode_params(&mut r)?),
+            TAG_PER_CLIENT => {
+                let n = r.u32()? as usize;
+                anyhow::ensure!(
+                    n * 12 <= r.remaining() + 12,
+                    "implausible replica count {n} for {} remaining bytes",
+                    r.remaining()
+                );
+                let mut reps = BTreeMap::new();
+                for _ in 0..n {
+                    let id = r.u64()?;
+                    reps.insert(id, decode_params(&mut r)?);
+                }
+                ClientSideState::PerClient(reps)
+            }
+            other => anyhow::bail!("bad client-side tag {other}"),
+        };
+        let ws = decode_params(&mut r)?;
+        let w_full = decode_params(&mut r)?;
+        let stats = decode_stats(&mut r)?;
+        r.finish()?;
+        Ok(Checkpoint {
+            fingerprint,
+            round,
+            seq,
+            dropped,
+            live,
+            client_side,
+            ws,
+            w_full,
+            stats,
+        })
+    }
+
+    /// Write atomically: serialize to `<path>.tmp`, then rename over
+    /// `path`, so a crash mid-save leaves either the previous checkpoint
+    /// or the new one — never a torn file at the published path.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.encode())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| anyhow::anyhow!("publishing {}: {e}", path.display()))?;
+        Ok(())
+    }
+
+    /// Read + decode a checkpoint file.
+    pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Checkpoint::decode(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{RoundComm, RoundLatency};
+
+    fn sample() -> Checkpoint {
+        let params: Params = vec![vec![1.0, -0.5, 0.0], vec![f32::MIN_POSITIVE]];
+        let mut reps = BTreeMap::new();
+        reps.insert(0u64, params.clone());
+        reps.insert(3u64, vec![vec![2.5f32]]);
+        Checkpoint {
+            fingerprint: config_fingerprint(&TrainConfig::default()),
+            round: 4,
+            seq: 99,
+            dropped: vec![1, 2],
+            live: vec![0, 3],
+            client_side: ClientSideState::PerClient(reps),
+            ws: params.clone(),
+            w_full: params,
+            stats: vec![
+                RoundStats {
+                    round: 1,
+                    cut: 2,
+                    participants: 3,
+                    train_loss: 1.5,
+                    comm: RoundComm { uplink_bits: 8.0, downlink_bits: 4.0 },
+                    latency: RoundLatency { uplink_leg: 0.5, downlink_leg: 0.25 },
+                    test: Some((1.25, 0.5)),
+                },
+                RoundStats {
+                    round: 2,
+                    cut: 2,
+                    participants: 2,
+                    train_loss: 1.25,
+                    comm: RoundComm::default(),
+                    latency: RoundLatency::default(),
+                    test: None,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_structural() {
+        let ck = sample();
+        assert_eq!(Checkpoint::decode(&ck.encode()).unwrap(), ck);
+        let shared = Checkpoint {
+            client_side: ClientSideState::Shared(vec![vec![0.25f32, -0.0]]),
+            ..sample()
+        };
+        let back = Checkpoint::decode(&shared.encode()).unwrap();
+        assert_eq!(back, shared);
+        // ±0.0 survive as distinct bit patterns (params travel as bits).
+        match back.client_side {
+            ClientSideState::Shared(p) => assert_eq!(p[0][1].to_bits(), (-0.0f32).to_bits()),
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn corruption_and_truncation_are_rejected() {
+        let bytes = sample().encode();
+        assert!(Checkpoint::decode(&[]).is_err());
+        assert!(Checkpoint::decode(&bytes[..bytes.len() - 1]).is_err());
+        for at in [0usize, 8, bytes.len() / 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[at] ^= 0x40;
+            assert!(Checkpoint::decode(&bad).is_err(), "corruption at {at} accepted");
+        }
+    }
+
+    #[test]
+    fn fingerprint_tracks_training_relevant_config() {
+        let base = TrainConfig::default();
+        let f0 = config_fingerprint(&base);
+        assert_eq!(f0, config_fingerprint(&base.clone()));
+        let mut c = base.clone();
+        c.seed ^= 1;
+        assert_ne!(f0, config_fingerprint(&c));
+        let mut c = base.clone();
+        c.tau += 1;
+        assert_ne!(f0, config_fingerprint(&c));
+        // threads and num_clients are bitwise-irrelevant — excluded.
+        let mut c = base.clone();
+        c.threads = 7;
+        c.num_clients = 123;
+        assert_eq!(f0, config_fingerprint(&c));
+    }
+
+    #[test]
+    fn save_is_atomic_and_loads_back() {
+        let dir = std::env::temp_dir()
+            .join(format!("sfl-ga-ckpt-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.ckpt");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+        // Overwrite with a later snapshot; the tmp file is gone.
+        let later = Checkpoint { round: 5, ..ck };
+        later.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), later);
+        assert!(!path.with_extension("tmp").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

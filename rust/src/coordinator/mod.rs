@@ -12,6 +12,7 @@
 //! TCP participants — with per-phase deadlines and a drop/renormalize
 //! fault policy (DESIGN.md §Transport).
 
+pub mod checkpoint;
 pub mod comm;
 pub mod metrics;
 pub mod net;
@@ -20,6 +21,7 @@ pub mod population;
 pub mod timing;
 pub mod trainer;
 
+pub use checkpoint::{config_fingerprint, Checkpoint, ClientSideState};
 pub use comm::RoundComm;
 pub use metrics::RunMetrics;
 pub use net::{params_digest, partition_str, stats_digest, NetTrainer};

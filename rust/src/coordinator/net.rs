@@ -32,6 +32,7 @@
 //! cleanly (no panic, no hang).
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -42,10 +43,12 @@ use crate::model::{Manifest, NUM_CUTS};
 use crate::protocol::{Msg, RunSetup};
 use crate::runtime::transport::{Incoming, Transport};
 use crate::runtime::{LoopbackTransport, ModelRuntime, ParallelExecutor, Tensor};
+use crate::scenario::{ChurnEvent, ChurnTrace};
 use crate::tensor::{self, Params};
 use crate::wireless::ChannelState;
 use crate::{info, warn_log};
 
+use super::checkpoint::{config_fingerprint, Checkpoint, ClientSideState};
 use super::comm::round_comm;
 use super::plan::{ClientSync, CotangentRoute, RoundPlan};
 use super::population::Population;
@@ -63,6 +66,23 @@ enum NetClientSide {
     Shared(Params),
     /// Per-participant replicas (SFL / PSL / the drift ablation).
     PerClient(BTreeMap<u64, Params>),
+}
+
+impl NetClientSide {
+    /// Checkpoint form (the engine's representation stays private).
+    fn to_state(&self) -> ClientSideState {
+        match self {
+            NetClientSide::Shared(p) => ClientSideState::Shared(p.clone()),
+            NetClientSide::PerClient(reps) => ClientSideState::PerClient(reps.clone()),
+        }
+    }
+
+    fn from_state(s: &ClientSideState) -> NetClientSide {
+        match s {
+            ClientSideState::Shared(p) => NetClientSide::Shared(p.clone()),
+            ClientSideState::PerClient(reps) => NetClientSide::PerClient(reps.clone()),
+        }
+    }
 }
 
 /// A collection phase's outcome: every expected response (slotted in
@@ -85,10 +105,30 @@ pub struct NetTrainer<T: Transport> {
     client_side: NetClientSide,
     ws: Params,
     w_full: Params,
+    /// The run's initial parameter vector `init_params(spec, seed^0x1417)`
+    /// — also every participant's COLD client-side state, so a rejoiner
+    /// (or brand-new joiner) gets exactly the replica it would have held
+    /// had it been present from round 0 and never stepped.
+    w_init: Params,
     round: usize,
     seq: u64,
-    /// Participants dropped by the fault policy, in drop order.
+    /// Participants dropped by the fault policy (or departed via churn),
+    /// in drop order.
     dropped: Vec<u64>,
+    /// Per-round stats so far — the checkpointable run history; `run`
+    /// returns a clone of the COMPLETE history so a resumed run digests
+    /// identically to an uninterrupted one.
+    stats: Vec<RoundStats>,
+    /// Quorum floor: below `min_clients` live peers the engine pauses
+    /// (bounded by `quorum_wait`) for rejoins instead of renormalizing
+    /// toward an empty cohort.  Defaults: floor 1, zero wait — which
+    /// makes "everyone dropped" an immediate clean error.
+    min_clients: usize,
+    quorum_wait: Duration,
+    /// Checkpoint sink: every `ckpt_every` completed rounds (and at the
+    /// final round) the round-entry snapshot is saved to `ckpt_path`.
+    ckpt_path: Option<PathBuf>,
+    ckpt_every: usize,
 }
 
 impl NetTrainer<LoopbackTransport> {
@@ -103,6 +143,35 @@ impl NetTrainer<LoopbackTransport> {
         let ids: Vec<u64> = (0..n as u64).collect();
         let transport = LoopbackTransport::new(&ids, cfg.threads)?;
         NetTrainer::new(manifest, cfg, Duration::from_secs(60), transport)
+    }
+
+    /// Drive a full run under a scripted [`ChurnTrace`] — the **oracle**
+    /// the chaos wall compares real kill/relaunch TCP runs against.
+    /// Events fire at round-entry time in trace order: a `Leave` departs
+    /// the peer, a `Join` admits a FRESH unconfigured participant (so
+    /// `Leave(i), Join(i)` in one round is a same-round cold rejoin and
+    /// `Join(i), Leave(i)` is join-then-immediately-die, which nets out
+    /// to never having joined).  Returns the complete stats history.
+    pub fn run_churn(
+        &mut self,
+        cut: usize,
+        trace: &ChurnTrace,
+    ) -> anyhow::Result<Vec<RoundStats>> {
+        while self.round < self.cfg.rounds {
+            for ev in trace.events_at(self.round as u64) {
+                match ev {
+                    ChurnEvent::Join(id) => {
+                        self.transport.schedule_admit(id);
+                        self.admit_new()?;
+                    }
+                    ChurnEvent::Leave(id) => self.depart(id),
+                }
+            }
+            if self.step(cut)?.is_none() {
+                break;
+            }
+        }
+        Ok(self.stats.clone())
     }
 }
 
@@ -188,11 +257,69 @@ impl<T: Transport> NetTrainer<T> {
             test,
             client_side,
             ws: params.clone(),
-            w_full: params,
+            w_full: params.clone(),
+            w_init: params,
             round: 0,
             seq: 0,
             dropped: Vec::new(),
+            stats: Vec::new(),
+            min_clients: 1,
+            quorum_wait: Duration::ZERO,
+            ckpt_path: None,
+            ckpt_every: 0,
         })
+    }
+
+    /// Resume from a checkpoint: the same constructor path, then the
+    /// serialized round-entry snapshot replaces the fresh state.  The
+    /// config must fingerprint-match the checkpointing run and the
+    /// transport's joined set must be exactly the snapshot's live set —
+    /// anything else could not replay the uninterrupted run bitwise.
+    pub fn resume(
+        manifest: &Manifest,
+        cfg: TrainConfig,
+        deadline: Duration,
+        transport: T,
+        ckpt: &Checkpoint,
+    ) -> anyhow::Result<NetTrainer<T>> {
+        anyhow::ensure!(
+            ckpt.fingerprint == config_fingerprint(&cfg),
+            "checkpoint was written under a different training config \
+             (fingerprint {:#x}, this config {:#x})",
+            ckpt.fingerprint,
+            config_fingerprint(&cfg)
+        );
+        let mut nt = NetTrainer::new(manifest, cfg, deadline, transport)?;
+        anyhow::ensure!(
+            nt.transport.clients() == ckpt.live,
+            "resume requires the checkpoint's live participants {:?} to rejoin, got {:?}",
+            ckpt.live,
+            nt.transport.clients()
+        );
+        nt.round = ckpt.round as usize;
+        nt.seq = ckpt.seq;
+        nt.dropped = ckpt.dropped.clone();
+        nt.client_side = NetClientSide::from_state(&ckpt.client_side);
+        nt.ws = ckpt.ws.clone();
+        nt.w_full = ckpt.w_full.clone();
+        nt.stats = ckpt.stats.clone();
+        Ok(nt)
+    }
+
+    /// Set the quorum floor and how long a below-floor round pauses for
+    /// rejoins before erroring out.
+    pub fn with_quorum(mut self, min_clients: usize, wait: Duration) -> Self {
+        self.min_clients = min_clients;
+        self.quorum_wait = wait;
+        self
+    }
+
+    /// Checkpoint the round-entry snapshot to `path` every `every`
+    /// completed rounds (and at the final round).
+    pub fn with_checkpoint(mut self, path: PathBuf, every: usize) -> Self {
+        self.ckpt_path = Some(path);
+        self.ckpt_every = every.max(1);
+        self
     }
 
     /// Live participant ids, ascending.
@@ -209,25 +336,172 @@ impl<T: Transport> NetTrainer<T> {
         self.round
     }
 
+    /// Per-round stats completed so far (includes any checkpoint-restored
+    /// history).
+    pub fn stats(&self) -> &[RoundStats] {
+        &self.stats
+    }
+
     fn next_seq(&mut self) -> u64 {
         self.seq += 1;
         self.seq
     }
 
+    /// The [`RunSetup`] every participant (initial or rejoining) is
+    /// configured with.
+    fn run_setup(&self) -> RunSetup {
+        RunSetup {
+            dataset: self.cfg.dataset.clone(),
+            seed: self.cfg.seed,
+            partition: partition_str(&self.cfg.scenario.partition),
+            samples_per_client: self.cfg.samples_per_client,
+        }
+    }
+
     /// Run the full fixed-cut training; mirrors
     /// [`Trainer::run`](super::Trainer::run) stats-for-stats (evaluation
     /// is synchronous here — the in-process engine's deferred eval is
-    /// documented bitwise-equal to it).
+    /// documented bitwise-equal to it).  Returns the COMPLETE history —
+    /// on a resumed run that includes the checkpoint-restored rounds, so
+    /// digesting the return value compares whole runs.
     pub fn run(&mut self, cut: usize) -> anyhow::Result<Vec<RoundStats>> {
-        let mut out = Vec::with_capacity(self.cfg.rounds);
-        for _ in 0..self.cfg.rounds {
-            let mut stats = self.run_round(cut)?;
-            if self.round % self.cfg.eval_every == 0 || self.round == self.cfg.rounds {
-                stats.test = Some(self.evaluate(cut)?);
-            }
-            out.push(stats);
+        while self.step(cut)?.is_some() {}
+        Ok(self.stats.clone())
+    }
+
+    /// Advance the run by one round: admit any peers dialing in at the
+    /// round boundary (each configured by [`Msg::Sync`]), run the
+    /// fault-tolerant round, evaluate if due, record the stats, and
+    /// checkpoint if due.  Returns `None` once all rounds are done;
+    /// otherwise the round's stats and whether a checkpoint was written.
+    pub fn step(&mut self, cut: usize) -> anyhow::Result<Option<(RoundStats, bool)>> {
+        if self.round >= self.cfg.rounds {
+            return Ok(None);
         }
-        Ok(out)
+        self.admit_new()?;
+        let mut stats = self.run_round(cut)?;
+        if self.round % self.cfg.eval_every == 0 || self.round == self.cfg.rounds {
+            stats.test = Some(self.evaluate(cut)?);
+        }
+        self.stats.push(stats);
+        let saved = self.maybe_checkpoint()?;
+        Ok(Some((stats, saved)))
+    }
+
+    /// Poll the transport for mid-run joiners and configure each with a
+    /// [`Msg::Sync`] (+ a cold replica where the scheme keeps per-client
+    /// state).  Round-boundary only — admission timing inside a round
+    /// would be nondeterministic.
+    fn admit_new(&mut self) -> anyhow::Result<Vec<u64>> {
+        let admitted = self.transport.accept_new();
+        for &id in &admitted {
+            self.sync_peer(id)?;
+        }
+        Ok(admitted)
+    }
+
+    /// Configure a just-admitted peer: grow the population span if the id
+    /// is brand-new (per-id derivations are pure in `(seed, id)`, so
+    /// regrowing changes nothing for existing ids), ship the
+    /// [`Msg::Sync`], and install the cold replica.
+    fn sync_peer(&mut self, id: u64) -> anyhow::Result<()> {
+        if id >= self.pop.num_clients() {
+            self.pop = Population::new(
+                self.cfg.seed,
+                id + 1,
+                self.cfg.scenario.clone(),
+                self.cfg.net.clone(),
+                self.cfg.comp.clone(),
+            )?;
+        }
+        let setup = self.run_setup();
+        self.transport.send(id, &Msg::Sync { round: self.round as u64, setup });
+        if let NetClientSide::PerClient(reps) = &mut self.client_side {
+            if !reps.contains_key(&id) {
+                reps.insert(id, self.w_init.clone());
+            }
+        }
+        Ok(())
+    }
+
+    /// Remove `id` from the federation at a round boundary (the churn
+    /// trace's departure event — process killed, link severed).  No-op
+    /// for a peer that is not live.
+    pub fn depart(&mut self, id: u64) {
+        if !self.transport.clients().contains(&id) {
+            return;
+        }
+        self.transport.drop_client(id);
+        self.dropped.push(id);
+        if let NetClientSide::PerClient(reps) = &mut self.client_side {
+            reps.remove(&id);
+        }
+    }
+
+    /// Block (bounded by `quorum_wait`) until at least
+    /// `max(min_clients, 1)` peers are live, admitting rejoiners as they
+    /// dial in.  Mid-round admissions also install the cold replica into
+    /// the round-entry `snapshot`: cold state is deterministic, so this
+    /// equals the rejoiner having been live-and-cold at round entry —
+    /// which is exactly what the churn-trace oracle computes.
+    fn await_quorum(
+        &mut self,
+        snapshot: &mut (NetClientSide, Params, Params),
+    ) -> anyhow::Result<()> {
+        let floor = self.min_clients.max(1);
+        let t_end = Instant::now() + self.quorum_wait;
+        loop {
+            let admitted = self.admit_new()?;
+            for &id in &admitted {
+                if let NetClientSide::PerClient(reps) = &mut snapshot.0 {
+                    if !reps.contains_key(&id) {
+                        reps.insert(id, self.w_init.clone());
+                    }
+                }
+            }
+            let live = self.transport.clients().len();
+            if live >= floor {
+                return Ok(());
+            }
+            if Instant::now() >= t_end {
+                anyhow::bail!(
+                    "round {}: federation below quorum ({live} live < {floor} required) \
+                     after waiting {:?} (dropped in order: {:?})",
+                    self.round,
+                    self.quorum_wait,
+                    self.dropped
+                );
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Serialize the current round-entry snapshot.
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            fingerprint: config_fingerprint(&self.cfg),
+            round: self.round as u64,
+            seq: self.seq,
+            dropped: self.dropped.clone(),
+            live: self.transport.clients(),
+            client_side: self.client_side.to_state(),
+            ws: self.ws.clone(),
+            w_full: self.w_full.clone(),
+            stats: self.stats.clone(),
+        }
+    }
+
+    /// Save a checkpoint if one is due (every `ckpt_every` rounds, plus
+    /// the final round); returns whether a file was written.
+    fn maybe_checkpoint(&mut self) -> anyhow::Result<bool> {
+        let Some(path) = self.ckpt_path.clone() else { return Ok(false) };
+        let due =
+            self.round % self.ckpt_every == 0 || self.round == self.cfg.rounds;
+        if !due {
+            return Ok(false);
+        }
+        self.checkpoint().save(&path)?;
+        Ok(true)
     }
 
     /// One fault-tolerant round at cut `v`: execute over the live set;
@@ -238,15 +512,16 @@ impl<T: Transport> NetTrainer<T> {
             (1..=NUM_CUTS).contains(&cut),
             "cut {cut} outside 1..={NUM_CUTS}"
         );
-        let snapshot = (self.client_side.clone(), self.ws.clone(), self.w_full.clone());
+        let mut snapshot = (self.client_side.clone(), self.ws.clone(), self.w_full.clone());
         let draw = self.round as u64;
         loop {
+            if self.transport.clients().len() < self.min_clients.max(1) {
+                // Quorum degradation: pause (bounded) for rejoins instead
+                // of renormalizing toward an empty cohort; a clean error
+                // with the drop history if the wait expires.
+                self.await_quorum(&mut snapshot)?;
+            }
             let ids = self.transport.clients();
-            anyhow::ensure!(
-                !ids.is_empty(),
-                "round {}: every participant dropped out",
-                self.round
-            );
             let k = ids.len();
             // ρ is uniform, so the cohort weights renormalize to 1/K over
             // whoever is still standing.
@@ -278,6 +553,13 @@ impl<T: Transport> NetTrainer<T> {
                         self.transport.drop_client(id);
                         self.dropped.push(id);
                         if let NetClientSide::PerClient(reps) = &mut self.client_side {
+                            reps.remove(&id);
+                        }
+                        // Scrub the snapshot as well: if this peer later
+                        // rejoins mid-round (quorum wait), it must come
+                        // back COLD — a second fault restoring the entry
+                        // snapshot must not resurrect its old replica.
+                        if let NetClientSide::PerClient(reps) = &mut snapshot.0 {
                             reps.remove(&id);
                         }
                     }
@@ -640,6 +922,72 @@ impl<T: Transport> NetTrainer<T> {
         Ok((loss / total as f64, correct / total as f64))
     }
 
+    /// Block (up to `timeout`) until participant `id` has dialed in and
+    /// been admitted + synced.  A driver affordance for deterministic
+    /// churn scripts: a relaunched process needs real time to reconnect,
+    /// and WHICH round admits it decides the churn trace — callers that
+    /// compare against an oracle pin the boundary with this.
+    pub fn await_peer(&mut self, id: u64, timeout: Duration) -> anyhow::Result<()> {
+        let t_end = Instant::now() + timeout;
+        loop {
+            if self.admit_new()?.contains(&id) {
+                return Ok(());
+            }
+            anyhow::ensure!(
+                Instant::now() < t_end,
+                "peer {id} did not (re)join within {timeout:?}"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Restart the run from scratch under `seed`: fresh parameters, fresh
+    /// population/test derivations, the transport's INITIAL peer set with
+    /// fresh unconfigured participants (re-Welcomed), empty history.
+    /// Errors on transports that cannot recreate peers (TCP: the remote
+    /// processes are not ours to respawn).
+    pub fn reset(&mut self, seed: u64) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.transport.reset_peers(),
+            "this transport cannot reset its peers"
+        );
+        self.cfg.seed = seed;
+        let ids = self.transport.clients();
+        anyhow::ensure!(!ids.is_empty(), "no participants after reset");
+        let n_pop = ids.iter().copied().max().unwrap_or(0) + 1;
+        self.pop = Population::new(
+            seed,
+            n_pop,
+            self.cfg.scenario.clone(),
+            self.cfg.net.clone(),
+            self.cfg.comp.clone(),
+        )?;
+        let spec = self.rt.spec().clone();
+        self.test = generate(&spec, &self.cfg.dataset, self.cfg.test_samples, seed ^ 0x7E57);
+        let params = init_params(&spec, seed ^ 0x1417);
+        let shared = match self.cfg.scheme.plan() {
+            RoundPlan::Full => true,
+            RoundPlan::Split { sync, .. } => sync == ClientSync::SharedStep,
+        };
+        self.client_side = if shared {
+            NetClientSide::Shared(params.clone())
+        } else {
+            NetClientSide::PerClient(ids.iter().map(|&id| (id, params.clone())).collect())
+        };
+        self.ws = params.clone();
+        self.w_full = params.clone();
+        self.w_init = params;
+        self.round = 0;
+        self.seq = 0;
+        self.dropped.clear();
+        self.stats.clear();
+        let setup = self.run_setup();
+        for &id in &ids {
+            self.transport.send(id, &Msg::Welcome { setup: setup.clone() });
+        }
+        Ok(())
+    }
+
     /// End the run: every live participant gets a [`Msg::Shutdown`].
     pub fn shutdown(&mut self) {
         for id in self.transport.clients() {
@@ -907,6 +1255,238 @@ mod tests {
         assert_eq!(nt.dropped(), &[1]);
         assert_eq!(nt.live(), vec![0]);
         assert_eq!(stats[0].participants, 1);
+    }
+
+    /// Loopback wrapper that loses EVERY participant response: each phase
+    /// times out, the fault policy drops the whole cohort, and the run
+    /// must end in a clean quorum error carrying the drop history — not a
+    /// panic from renormalizing ρ over zero survivors.
+    struct BlackHoleTransport(LoopbackTransport);
+
+    impl Transport for BlackHoleTransport {
+        fn clients(&self) -> Vec<u64> {
+            self.0.clients()
+        }
+
+        fn send(&mut self, id: u64, msg: &Msg) {
+            self.0.send(id, msg)
+        }
+
+        fn recv(&mut self, timeout: Duration) -> Option<(u64, Incoming)> {
+            while self.0.recv(timeout).is_some() {}
+            None
+        }
+
+        fn drop_client(&mut self, id: u64) {
+            self.0.drop_client(id)
+        }
+    }
+
+    #[test]
+    fn cohort_empties_to_zero_is_a_clean_error() {
+        let manifest = Manifest::builtin();
+        let transport = BlackHoleTransport(LoopbackTransport::new(&[0, 1], 1).unwrap());
+        let mut nt =
+            NetTrainer::new(&manifest, tiny_cfg(), Duration::from_millis(50), transport)
+                .unwrap();
+        let err = nt.run(2).unwrap_err().to_string();
+        assert!(err.contains("below quorum"), "unexpected error: {err}");
+        assert!(err.contains("dropped in order"), "missing drop history: {err}");
+        assert!(err.contains('0') && err.contains('1'), "history incomplete: {err}");
+        assert_eq!(nt.dropped(), &[0, 1]);
+    }
+
+    #[test]
+    fn quorum_wait_admits_rejoiner_and_matches_cold_oracle() {
+        let manifest = Manifest::builtin();
+        let mut cfg = tiny_cfg();
+        cfg.scheme = SchemeKind::Sfl; // exercise the per-client replica path
+        // Peer 1 departs before round 0 and is scheduled to dial back in;
+        // the quorum floor of 2 forces the engine to pause and admit it.
+        let mut nt = NetTrainer::loopback(&manifest, cfg.clone(), 2)
+            .unwrap()
+            .with_quorum(2, Duration::from_secs(30));
+        nt.depart(1);
+        nt.transport.schedule_admit(1);
+        let stats = nt.run(2).unwrap();
+        assert_eq!(stats[0].participants, 2);
+        assert_eq!(nt.dropped(), &[1]);
+        // A round-0 rejoin lands with COLD state = the initial replica,
+        // so the run is bitwise one where peer 1 never left.
+        let mut plain = NetTrainer::loopback(&manifest, cfg, 2).unwrap();
+        let plain_stats = plain.run(2).unwrap();
+        assert_eq!(stats_digest(&stats), stats_digest(&plain_stats));
+        assert_eq!(
+            params_digest(&nt.global_params(2)),
+            params_digest(&plain.global_params(2))
+        );
+    }
+
+    /// Loopback wrapper staging a mid-round drop-below-quorum: peer 1's
+    /// first fwd-ok is lost (fault → drop), and the dropped peer
+    /// immediately re-dials (its drop schedules a loopback admit), so the
+    /// quorum wait must admit it cold and restart the round over both.
+    struct DropThenRejoinTransport {
+        inner: LoopbackTransport,
+        swallowed: bool,
+    }
+
+    impl Transport for DropThenRejoinTransport {
+        fn clients(&self) -> Vec<u64> {
+            self.inner.clients()
+        }
+
+        fn send(&mut self, id: u64, msg: &Msg) {
+            self.inner.send(id, msg)
+        }
+
+        fn recv(&mut self, timeout: Duration) -> Option<(u64, Incoming)> {
+            loop {
+                let (id, ev) = self.inner.recv(timeout)?;
+                if !self.swallowed && id == 1 {
+                    if let Incoming::Msg(Msg::FwdOk { .. }) = ev {
+                        self.swallowed = true;
+                        continue; // lost on the wire
+                    }
+                }
+                return Some((id, ev));
+            }
+        }
+
+        fn drop_client(&mut self, id: u64) {
+            self.inner.drop_client(id);
+            if id == 1 {
+                self.inner.schedule_admit(1); // the killed process relaunches
+            }
+        }
+
+        fn accept_new(&mut self) -> Vec<u64> {
+            self.inner.accept_new()
+        }
+    }
+
+    #[test]
+    fn mid_round_quorum_admission_rejoins_cold_and_restarts() {
+        let manifest = Manifest::builtin();
+        let mut cfg = tiny_cfg();
+        cfg.scheme = SchemeKind::Sfl;
+        let transport = DropThenRejoinTransport {
+            inner: LoopbackTransport::new(&[0, 1], 1).unwrap(),
+            swallowed: false,
+        };
+        let mut nt = NetTrainer::new(&manifest, cfg.clone(), Duration::from_millis(100), transport)
+            .unwrap()
+            .with_quorum(2, Duration::from_secs(30));
+        let stats = nt.run(2).unwrap();
+        // The drop happened, and the rejoiner made it back into round 0.
+        assert_eq!(nt.dropped(), &[1]);
+        assert_eq!(stats[0].participants, 2);
+        // Round-0 cold state IS the initial replica, so the churned run is
+        // bitwise a run where peer 1 never faulted.
+        let mut plain = NetTrainer::loopback(&manifest, cfg, 2).unwrap();
+        let plain_stats = plain.run(2).unwrap();
+        assert_eq!(stats_digest(&stats), stats_digest(&plain_stats));
+        assert_eq!(
+            params_digest(&nt.global_params(2)),
+            params_digest(&plain.global_params(2))
+        );
+    }
+
+    #[test]
+    fn quorum_wait_expiry_is_a_clean_error() {
+        let manifest = Manifest::builtin();
+        let mut nt = NetTrainer::loopback(&manifest, tiny_cfg(), 2)
+            .unwrap()
+            .with_quorum(2, Duration::from_millis(20));
+        nt.depart(0);
+        let err = nt.run(2).unwrap_err().to_string();
+        assert!(err.contains("below quorum"), "unexpected error: {err}");
+        assert!(err.contains("1 live < 2 required"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn churn_trace_departure_and_rejoin_runs_cleanly() {
+        let manifest = Manifest::builtin();
+        let mut cfg = tiny_cfg();
+        cfg.rounds = 3;
+        let trace = ChurnTrace::parse("1:-1,2:+1").unwrap();
+        let mut nt = NetTrainer::loopback(&manifest, cfg, 2).unwrap();
+        let stats = nt.run_churn(2, &trace).unwrap();
+        let participants: Vec<usize> = stats.iter().map(|s| s.participants).collect();
+        assert_eq!(participants, vec![2, 1, 2]);
+        assert!(stats.iter().all(|s| s.train_loss.is_finite()));
+        assert_eq!(nt.dropped(), &[1]);
+        assert_eq!(nt.live(), vec![0, 1]);
+    }
+
+    #[test]
+    fn checkpoint_resume_matches_uninterrupted_loopback() {
+        let manifest = Manifest::builtin();
+        let mut cfg = tiny_cfg();
+        cfg.rounds = 4;
+        let dir = std::env::temp_dir()
+            .join(format!("sfl-ga-net-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("net.ckpt");
+
+        let mut a = NetTrainer::loopback(&manifest, cfg.clone(), 2).unwrap();
+        let full = a.run(2).unwrap();
+
+        // Run B checkpoints every 2 rounds and "dies" after round 2.
+        let mut b = NetTrainer::loopback(&manifest, cfg.clone(), 2)
+            .unwrap()
+            .with_checkpoint(path.clone(), 2);
+        b.step(2).unwrap().unwrap();
+        let (_, saved) = b.step(2).unwrap().unwrap();
+        assert!(saved, "checkpoint due at round 2 was not written");
+        drop(b);
+
+        let ckpt = Checkpoint::load(&path).unwrap();
+        assert_eq!(ckpt.round, 2);
+        let transport = LoopbackTransport::new(&[0, 1], 1).unwrap();
+        let mut c =
+            NetTrainer::resume(&manifest, cfg.clone(), Duration::from_secs(60), transport, &ckpt)
+                .unwrap();
+        let resumed = c.run(2).unwrap();
+        assert_eq!(resumed.len(), full.len());
+        assert_eq!(stats_digest(&full), stats_digest(&resumed));
+        assert_eq!(
+            params_digest(&a.global_params(2)),
+            params_digest(&c.global_params(2))
+        );
+
+        // A config drift is refused instead of replaying wrong.
+        let mut other = cfg;
+        other.seed ^= 1;
+        let transport = LoopbackTransport::new(&[0, 1], 1).unwrap();
+        assert!(NetTrainer::resume(
+            &manifest,
+            other,
+            Duration::from_secs(60),
+            transport,
+            &ckpt
+        )
+        .is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn reset_after_churn_equals_fresh() {
+        let manifest = Manifest::builtin();
+        let mut cfg = tiny_cfg();
+        cfg.rounds = 2;
+        let trace = ChurnTrace::parse("1:-0").unwrap();
+        let mut churned = NetTrainer::loopback(&manifest, cfg.clone(), 2).unwrap();
+        churned.run_churn(2, &trace).unwrap();
+        churned.reset(cfg.seed).unwrap();
+        let after_reset = churned.run(2).unwrap();
+        let mut fresh = NetTrainer::loopback(&manifest, cfg, 2).unwrap();
+        let fresh_stats = fresh.run(2).unwrap();
+        assert_eq!(stats_digest(&after_reset), stats_digest(&fresh_stats));
+        assert_eq!(
+            params_digest(&churned.global_params(2)),
+            params_digest(&fresh.global_params(2))
+        );
     }
 
     #[test]

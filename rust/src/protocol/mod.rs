@@ -32,8 +32,9 @@ use crate::tensor::Params;
 use wire::{ByteReader, ByteWriter};
 
 /// Bumped on any wire-format change; [`Msg::Join`] carries it and the
-/// coordinator rejects mismatches at rendezvous.
-pub const PROTO_VERSION: u32 = 1;
+/// coordinator rejects mismatches at rendezvous.  v2 added the churn
+/// handshake ([`Msg::Rejoin`] / [`Msg::Sync`]).
+pub const PROTO_VERSION: u32 = 2;
 
 /// Per-run configuration a participant needs to derive its own batch
 /// stream and run FL local steps — shipped once in [`Msg::Welcome`].
@@ -102,6 +103,20 @@ pub enum Msg {
     RoundDone { round: u64 },
     /// coordinator → participant: end of run.
     Shutdown,
+    /// participant → coordinator: a previously-seen participant dialing
+    /// back in mid-run (after a drop or a coordinator blip).  Valid any
+    /// time the coordinator polls for admissions between rounds; answered
+    /// with [`Msg::Sync`].  A brand-new late joiner may open with a plain
+    /// [`Msg::Join`] instead — participants are stateless, so the
+    /// coordinator treats both identically.
+    Rejoin { client: u64, version: u32 },
+    /// coordinator → participant: mid-run admission accept — the run
+    /// configuration plus the round index the participant will first
+    /// compute in.  All client-side model state stays coordinator-held
+    /// (the rejoiner gets the scheme-appropriate state there: the shared
+    /// model, or a cold `(seed, id)`-keyed replica), so nothing else
+    /// needs to travel.
+    Sync { round: u64, setup: RunSetup },
 }
 
 const TAG_JOIN: u8 = 1;
@@ -114,15 +129,21 @@ const TAG_FULL_REQ: u8 = 7;
 const TAG_FULL_OK: u8 = 8;
 const TAG_ROUND_DONE: u8 = 9;
 const TAG_SHUTDOWN: u8 = 10;
+const TAG_REJOIN: u8 = 11;
+const TAG_SYNC: u8 = 12;
 
-fn encode_params(w: &mut ByteWriter, p: &Params) {
+/// Length-prefixed [`Params`] encoding (layer count, then each layer's
+/// raw-bit f32s).  Public within the crate: the coordinator's checkpoint
+/// format reuses it so checkpointed parameters roundtrip bit-exactly.
+pub(crate) fn encode_params(w: &mut ByteWriter, p: &Params) {
     w.u32(p.len() as u32);
     for layer in p {
         w.f32s(layer);
     }
 }
 
-fn decode_params(r: &mut ByteReader) -> anyhow::Result<Params> {
+/// Inverse of [`encode_params`]; bounds-checked, never panics.
+pub(crate) fn decode_params(r: &mut ByteReader) -> anyhow::Result<Params> {
     let n = r.u32()? as usize;
     // A layer costs at least a 4-byte length on the wire; the per-layer
     // f32s reads enforce the real bounds.
@@ -170,6 +191,8 @@ impl Msg {
             Msg::FullOk { .. } => "full-ok",
             Msg::RoundDone { .. } => "round-done",
             Msg::Shutdown => "shutdown",
+            Msg::Rejoin { .. } => "rejoin",
+            Msg::Sync { .. } => "sync",
         }
     }
 
@@ -230,6 +253,16 @@ impl Msg {
             Msg::Shutdown => {
                 w.u8(TAG_SHUTDOWN);
             }
+            Msg::Rejoin { client, version } => {
+                w.u8(TAG_REJOIN);
+                w.u64(*client);
+                w.u32(*version);
+            }
+            Msg::Sync { round, setup } => {
+                w.u8(TAG_SYNC);
+                w.u64(*round);
+                setup.encode(&mut w);
+            }
         }
         w.into_bytes()
     }
@@ -272,6 +305,8 @@ impl Msg {
             }
             TAG_ROUND_DONE => Msg::RoundDone { round: r.u64()? },
             TAG_SHUTDOWN => Msg::Shutdown,
+            TAG_REJOIN => Msg::Rejoin { client: r.u64()?, version: r.u32()? },
+            TAG_SYNC => Msg::Sync { round: r.u64()?, setup: RunSetup::decode(&mut r)? },
             other => anyhow::bail!("unknown message tag {other}"),
         };
         r.finish()?;
@@ -310,6 +345,16 @@ mod tests {
         roundtrip(&Msg::FullOk { seq: 2, loss: 1.25, w: params });
         roundtrip(&Msg::RoundDone { round: 3 });
         roundtrip(&Msg::Shutdown);
+        roundtrip(&Msg::Rejoin { client: 7, version: PROTO_VERSION });
+        roundtrip(&Msg::Sync {
+            round: 4,
+            setup: RunSetup {
+                dataset: "mnist".into(),
+                seed: 17,
+                partition: "shards:2".into(),
+                samples_per_client: 64,
+            },
+        });
     }
 
     #[test]

@@ -83,6 +83,15 @@ impl ParticipantNode {
                 self.configure(setup)?;
                 Ok(Vec::new())
             }
+            // Mid-run admission accept: configure exactly as a Welcome
+            // does (participants are stateless between rounds, so a
+            // rejoiner needs no model state — the round index is carried
+            // by every FwdReq/FullReq's step key) and drop any forward
+            // context a previous session left behind.
+            Msg::Sync { setup, .. } => {
+                self.configure(setup)?;
+                Ok(Vec::new())
+            }
             Msg::FwdReq { seq, cut, step, wc } => {
                 let id = self.id;
                 let st = self.state()?;
@@ -232,6 +241,24 @@ mod tests {
         assert!(node.handle(&Msg::BwdReq { seq: 8, cotangent: bad }).is_err());
         // A coordinator-bound message arriving at a participant.
         assert!(node.handle(&Msg::Join { client: 0, version: PROTO_VERSION }).is_err());
+    }
+
+    #[test]
+    fn sync_configures_and_clears_inflight_context() {
+        // A fresh node is configured by Sync exactly as by Welcome…
+        let mut node = ParticipantNode::new(3);
+        node.handle(&Msg::Sync { round: 2, setup: setup() }).unwrap();
+        assert!(node.ready());
+        // …and a Sync on an already-running node (coordinator-blip
+        // rejoin) drops any stale forward context.
+        let manifest = Manifest::builtin();
+        let rt = ModelRuntime::native(&manifest, "mnist").unwrap();
+        let nc = rt.spec().cut(1).client_params;
+        let wc = crate::data::init::init_params(rt.spec(), 17 ^ 0x1417)[..nc].to_vec();
+        node.handle(&Msg::FwdReq { seq: 9, cut: 1, step: 0, wc }).unwrap();
+        node.handle(&Msg::Sync { round: 3, setup: setup() }).unwrap();
+        let cot = Tensor::new(vec![0.0], vec![1]);
+        assert!(node.handle(&Msg::BwdReq { seq: 9, cotangent: cot }).is_err());
     }
 
     #[test]

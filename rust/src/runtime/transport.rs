@@ -74,46 +74,94 @@ pub trait Transport {
     /// is a failed send (⇒ [`Incoming::Gone`]).  Default: no-op, for
     /// transports whose sends cannot block.
     fn set_io_deadline(&mut self, _deadline: Duration) {}
+
+    /// Poll for participants dialing in mid-run (churn: a dropped peer
+    /// reconnecting, or a brand-new late joiner).  Non-blocking; returns
+    /// the newly-admitted ids, which the round engine must configure with
+    /// a [`Msg::Sync`] before their first round.  Default: none — for
+    /// transports with a fixed peer set (the fault-injection mocks).
+    fn accept_new(&mut self) -> Vec<u64> {
+        Vec::new()
+    }
+
+    /// Restore the transport to its initial peer set with fresh,
+    /// unconfigured participants — the transport half of
+    /// `NetTrainer::reset`, which re-Welcomes everyone.  Returns `false`
+    /// when the transport cannot recreate peers (TCP: remote processes
+    /// are not ours to respawn) — the engine then refuses the reset.
+    fn reset_peers(&mut self) -> bool {
+        false
+    }
 }
 
 // ------------------------------------------------------------------ tcp
 
 /// Coordinator side of the TCP transport; see the module docs.
+///
+/// Owns the listener after the rendezvous so the run can keep admitting
+/// peers mid-run ([`Transport::accept_new`] — churn rejoins).  Every
+/// connection carries a per-id **generation** number: a rejoining peer
+/// bumps its id's generation, and [`Transport::recv`] discards events
+/// stamped with an older one, so a dead incarnation's terminal `Gone`
+/// (its reader thread firing after the socket finally times out) can
+/// never fault the rejoined live incarnation.
 pub struct TcpTransport {
+    /// Kept for mid-run admissions; non-blocking.
+    listener: Option<TcpListener>,
     /// Write halves, keyed by claimed client id.
     peers: BTreeMap<u64, TcpStream>,
-    rx: Receiver<(u64, Incoming)>,
+    /// Per-id connection generation; bumped on each rejoin of that id.
+    gens: BTreeMap<u64, u64>,
+    tx: Sender<(u64, u64, Incoming)>,
+    rx: Receiver<(u64, u64, Incoming)>,
     /// Locally-generated events (failed sends) drain before the socket
     /// queue so a dead peer is reported exactly once, promptly.
     pending: VecDeque<(u64, Incoming)>,
+    /// Applied to every accepted stream (including rejoiners) once set.
+    io_deadline: Option<Duration>,
 }
 
 impl TcpTransport {
     /// Accept `expected` participants on `listener` within `deadline`.
     ///
-    /// Each connection must open with a [`Msg::Join`] claiming a unique
-    /// client id at the current [`PROTO_VERSION`]; violators are dropped
-    /// without poisoning the rendezvous.  Returns once `expected` peers
+    /// Each connection must open with a [`Msg::Join`] (or a
+    /// [`Msg::Rejoin`] from a participant whose dialer re-armed while the
+    /// coordinator restarted) claiming a unique client id at the current
+    /// [`PROTO_VERSION`]; violators are dropped without poisoning the
+    /// rendezvous.  Returns once `expected` peers
     /// joined — or at the deadline with however many did (the caller
     /// decides whether a partial federation may proceed; at least one
-    /// joined peer is required).
+    /// joined peer is required).  The listener stays owned by the
+    /// transport so dropped or late peers can be admitted mid-run via
+    /// [`Transport::accept_new`].
     pub fn accept(
-        listener: &TcpListener,
+        listener: TcpListener,
         expected: usize,
         deadline: Duration,
     ) -> anyhow::Result<TcpTransport> {
         listener.set_nonblocking(true)?;
         let (tx, rx) = mpsc::channel();
-        let mut peers: BTreeMap<u64, TcpStream> = BTreeMap::new();
+        let mut t = TcpTransport {
+            listener: Some(listener),
+            peers: BTreeMap::new(),
+            gens: BTreeMap::new(),
+            tx,
+            rx,
+            pending: VecDeque::new(),
+            io_deadline: None,
+        };
         let t0 = Instant::now();
-        while peers.len() < expected && t0.elapsed() < deadline {
-            match listener.accept() {
+        while t.peers.len() < expected && t0.elapsed() < deadline {
+            match t.listener.as_ref().expect("listener present").accept() {
                 Ok((stream, addr)) => {
-                    match Self::rendezvous(stream, addr, &peers) {
+                    // Rejoin is accepted here too: a coordinator resumed
+                    // from a checkpoint rendezvouses with surviving
+                    // participants whose re-armed dialers open with Rejoin.
+                    match Self::rendezvous(stream, addr, &t.peers, true) {
                         Ok((id, stream)) => {
-                            let reader = stream.try_clone()?;
-                            spawn_reader(id, reader, tx.clone());
-                            peers.insert(id, stream);
+                            if let Err(e) = t.register(id, stream) {
+                                warn_log!("rejected connection from {addr}: {e:#}");
+                            }
                         }
                         Err(e) => warn_log!("rejected connection from {addr}: {e:#}"),
                     }
@@ -125,17 +173,34 @@ impl TcpTransport {
             }
         }
         anyhow::ensure!(
-            !peers.is_empty(),
+            !t.peers.is_empty(),
             "no participant joined within {deadline:?} (expected {expected})"
         );
-        Ok(TcpTransport { peers, rx, pending: VecDeque::new() })
+        Ok(t)
     }
 
-    /// Validate one connection's Join handshake.
+    /// Wire a validated connection into the live set: bump the id's
+    /// generation, start its reader, remember its write half.
+    fn register(&mut self, id: u64, stream: TcpStream) -> anyhow::Result<()> {
+        if let Some(deadline) = self.io_deadline {
+            stream.set_write_timeout(Some(deadline))?;
+        }
+        let gen = self.gens.get(&id).map_or(0, |g| g + 1);
+        self.gens.insert(id, gen);
+        let reader = stream.try_clone()?;
+        spawn_reader(id, gen, reader, self.tx.clone());
+        self.peers.insert(id, stream);
+        Ok(())
+    }
+
+    /// Validate one connection's handshake: a [`Msg::Join`] — or, when
+    /// `allow_rejoin` (mid-run admission), a [`Msg::Rejoin`] — claiming
+    /// an id that is not currently live, at the current protocol version.
     fn rendezvous(
         stream: TcpStream,
         addr: SocketAddr,
         peers: &BTreeMap<u64, TcpStream>,
+        allow_rejoin: bool,
     ) -> anyhow::Result<(u64, TcpStream)> {
         // Accepted sockets may inherit the listener's non-blocking mode on
         // some platforms; the frame reader wants blocking I/O.
@@ -147,6 +212,7 @@ impl TcpTransport {
             .ok_or_else(|| anyhow::anyhow!("{addr} closed before joining"))?;
         let (client, version) = match Msg::decode(&payload)? {
             Msg::Join { client, version } => (client, version),
+            Msg::Rejoin { client, version } if allow_rejoin => (client, version),
             other => anyhow::bail!("{addr} opened with {} instead of join", other.name()),
         };
         anyhow::ensure!(
@@ -165,29 +231,32 @@ impl TcpTransport {
 }
 
 /// Per-peer reader: frames → decoded messages → the shared event queue;
-/// EOF and errors become ONE terminal [`Incoming::Gone`].
-fn spawn_reader(id: u64, stream: TcpStream, tx: Sender<(u64, Incoming)>) {
+/// EOF and errors become ONE terminal [`Incoming::Gone`].  Every event is
+/// stamped with the connection's generation so the transport can discard
+/// leftovers from a replaced (rejoined) incarnation.
+fn spawn_reader(id: u64, gen: u64, stream: TcpStream, tx: Sender<(u64, u64, Incoming)>) {
     std::thread::spawn(move || {
         let mut reader = BufReader::new(stream);
         loop {
             match read_frame(&mut reader) {
                 Ok(Some(payload)) => match Msg::decode(&payload) {
                     Ok(msg) => {
-                        if tx.send((id, Incoming::Msg(msg))).is_err() {
+                        if tx.send((id, gen, Incoming::Msg(msg))).is_err() {
                             return; // transport dropped; nobody listening
                         }
                     }
                     Err(e) => {
-                        let _ = tx.send((id, Incoming::Gone(format!("decode error: {e:#}"))));
+                        let _ =
+                            tx.send((id, gen, Incoming::Gone(format!("decode error: {e:#}"))));
                         return;
                     }
                 },
                 Ok(None) => {
-                    let _ = tx.send((id, Incoming::Gone("connection closed".into())));
+                    let _ = tx.send((id, gen, Incoming::Gone("connection closed".into())));
                     return;
                 }
                 Err(e) => {
-                    let _ = tx.send((id, Incoming::Gone(format!("read error: {e:#}"))));
+                    let _ = tx.send((id, gen, Incoming::Gone(format!("read error: {e:#}"))));
                     return;
                 }
             }
@@ -212,11 +281,24 @@ impl Transport for TcpTransport {
         if let Some(ev) = self.pending.pop_front() {
             return Some(ev);
         }
-        match self.rx.recv_timeout(timeout) {
-            Ok(ev) => Some(ev),
-            Err(RecvTimeoutError::Timeout) => None,
-            // Every reader exited (all peers gone) — nothing will arrive.
-            Err(RecvTimeoutError::Disconnected) => None,
+        let t_end = Instant::now() + timeout;
+        loop {
+            let left = t_end.saturating_duration_since(Instant::now());
+            match self.rx.recv_timeout(left) {
+                Ok((id, gen, ev)) => {
+                    if self.gens.get(&id) == Some(&gen) {
+                        return Some((id, ev));
+                    }
+                    // A replaced incarnation's leftover (its reader fired
+                    // after the id rejoined under a newer generation):
+                    // silently discard, or a stale Gone would fault the
+                    // live rejoined peer.
+                }
+                Err(RecvTimeoutError::Timeout) => return None,
+                // Every reader exited (all peers gone) — nothing will
+                // arrive.
+                Err(RecvTimeoutError::Disconnected) => return None,
+            }
         }
     }
 
@@ -227,11 +309,37 @@ impl Transport for TcpTransport {
     }
 
     fn set_io_deadline(&mut self, deadline: Duration) {
+        self.io_deadline = Some(deadline);
         for (id, stream) in &self.peers {
             if let Err(e) = stream.set_write_timeout(Some(deadline)) {
                 warn_log!("peer {id}: set_write_timeout failed: {e}");
             }
         }
+    }
+
+    fn accept_new(&mut self) -> Vec<u64> {
+        let mut admitted = Vec::new();
+        loop {
+            let Some(listener) = self.listener.as_ref() else { break };
+            match listener.accept() {
+                Ok((stream, addr)) => {
+                    match Self::rendezvous(stream, addr, &self.peers, true) {
+                        Ok((id, stream)) => match self.register(id, stream) {
+                            Ok(()) => admitted.push(id),
+                            Err(e) => warn_log!("rejected rejoin from {addr}: {e:#}"),
+                        },
+                        Err(e) => warn_log!("rejected connection from {addr}: {e:#}"),
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => {
+                    warn_log!("listener error during mid-run accept: {e}");
+                    break;
+                }
+            }
+        }
+        admitted.sort_unstable();
+        admitted
     }
 }
 
@@ -243,6 +351,12 @@ pub struct LoopbackTransport {
     /// the live set gates delivery).
     nodes: Vec<(u64, std::sync::Mutex<ParticipantNode>)>,
     live: BTreeSet<u64>,
+    /// The rendezvous-time peer set, for [`Transport::reset_peers`].
+    initial_ids: Vec<u64>,
+    /// Ids scheduled by [`LoopbackTransport::schedule_admit`]; drained by
+    /// the next [`Transport::accept_new`] poll — the in-process analogue
+    /// of a churn trace's arrivals dialing the TCP listener.
+    pending_admits: Vec<u64>,
     outbox: Vec<(u64, Msg)>,
     inbox: VecDeque<(u64, Incoming)>,
     pool: ParallelExecutor,
@@ -261,11 +375,22 @@ impl LoopbackTransport {
                 .iter()
                 .map(|&id| (id, std::sync::Mutex::new(ParticipantNode::new(id))))
                 .collect(),
-            live: sorted.into_iter().collect(),
+            live: sorted.iter().copied().collect(),
+            initial_ids: sorted.clone(),
+            pending_admits: Vec::new(),
             outbox: Vec::new(),
             inbox: VecDeque::new(),
             pool: ParallelExecutor::new(threads),
         })
+    }
+
+    /// Schedule a (re)join: `id` will be admitted as a FRESH, unconfigured
+    /// [`ParticipantNode`] at the next [`Transport::accept_new`] poll,
+    /// exactly like a new process dialing the TCP listener.  Admitting a
+    /// currently-live id is a no-op (a real dialer would be rejected at
+    /// the rendezvous).
+    pub fn schedule_admit(&mut self, id: u64) {
+        self.pending_admits.push(id);
     }
 
     /// Deliver every buffered request in one parallel sweep: node `i`'s
@@ -343,6 +468,40 @@ impl Transport for LoopbackTransport {
         self.live.remove(&id);
         self.outbox.retain(|(to, _)| *to != id);
     }
+
+    fn accept_new(&mut self) -> Vec<u64> {
+        let mut admitted = Vec::new();
+        for id in std::mem::take(&mut self.pending_admits) {
+            if self.live.contains(&id) {
+                continue; // a live id cannot rejoin (TCP rendezvous parity)
+            }
+            let fresh = std::sync::Mutex::new(ParticipantNode::new(id));
+            match self.nodes.binary_search_by_key(&id, |(nid, _)| *nid) {
+                // A dropped peer rejoining: replace its slot with a fresh
+                // node — churn restarts the PROCESS, not just the link.
+                Ok(slot) => self.nodes[slot].1 = fresh,
+                Err(slot) => self.nodes.insert(slot, (id, fresh)),
+            }
+            self.live.insert(id);
+            admitted.push(id);
+        }
+        admitted.sort_unstable();
+        admitted.dedup();
+        admitted
+    }
+
+    fn reset_peers(&mut self) -> bool {
+        self.nodes = self
+            .initial_ids
+            .iter()
+            .map(|&id| (id, std::sync::Mutex::new(ParticipantNode::new(id))))
+            .collect();
+        self.live = self.initial_ids.iter().copied().collect();
+        self.pending_admits.clear();
+        self.outbox.clear();
+        self.inbox.clear();
+        true
+    }
 }
 
 #[cfg(test)]
@@ -416,6 +575,50 @@ mod tests {
         assert!(LoopbackTransport::new(&[1, 1], 1).is_err());
     }
 
+    #[test]
+    fn loopback_admission_rejoins_fresh_and_skips_live_ids() {
+        let mut t = LoopbackTransport::new(&[0, 1], 1).unwrap();
+        t.send(0, &welcome());
+        t.send(1, &welcome());
+        while t.recv(Duration::from_millis(1)).is_some() {}
+        t.drop_client(1);
+        // Live id 0 cannot rejoin; dropped id 1 and brand-new id 3 can.
+        t.schedule_admit(0);
+        t.schedule_admit(1);
+        t.schedule_admit(3);
+        assert_eq!(t.accept_new(), vec![1, 3]);
+        assert_eq!(t.clients(), vec![0, 1, 3]);
+        // The rejoined node is FRESH (unconfigured): compute before a
+        // Sync is a protocol violation surfacing as its Gone event.
+        t.send(1, &Msg::FwdReq { seq: 0, cut: 1, step: 0, wc: Vec::new() });
+        match t.recv(Duration::from_millis(1)) {
+            Some((1, Incoming::Gone(_))) => {}
+            other => panic!("expected gone from fresh rejoiner, got {other:?}"),
+        }
+        // Nothing pending → accept_new is an empty poll.
+        assert!(t.accept_new().is_empty());
+    }
+
+    #[test]
+    fn loopback_reset_restores_the_initial_peer_set() {
+        let mut t = LoopbackTransport::new(&[0, 2], 1).unwrap();
+        t.send(0, &welcome());
+        t.send(2, &welcome());
+        while t.recv(Duration::from_millis(1)).is_some() {}
+        t.drop_client(2);
+        t.schedule_admit(7);
+        t.accept_new();
+        assert_eq!(t.clients(), vec![0, 7]);
+        assert!(t.reset_peers());
+        assert_eq!(t.clients(), vec![0, 2]);
+        // Peers are fresh again: compute before Welcome errors.
+        t.send(2, &Msg::FwdReq { seq: 0, cut: 1, step: 0, wc: Vec::new() });
+        match t.recv(Duration::from_millis(1)) {
+            Some((2, Incoming::Gone(_))) => {}
+            other => panic!("expected gone from reset peer, got {other:?}"),
+        }
+    }
+
     /// A peer that joins and then never reads must not wedge the
     /// coordinator in `send`: once its socket buffer fills, the write
     /// deadline turns the blocked send into that peer's Gone event.
@@ -446,7 +649,7 @@ mod tests {
                 .unwrap();
             s // keep the connection open, never read from it
         });
-        let mut t = TcpTransport::accept(&listener, 1, Duration::from_secs(30)).unwrap();
+        let mut t = TcpTransport::accept(listener, 1, Duration::from_secs(30)).unwrap();
         let _peer_stream = peer.join().unwrap();
         t.set_io_deadline(Duration::from_millis(200));
 

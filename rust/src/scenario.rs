@@ -217,6 +217,80 @@ impl ScenarioConfig {
     }
 }
 
+/// One churn event: a participant arriving or departing at a round
+/// boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnEvent {
+    /// `id` dials in before the round starts (a brand-new joiner, or a
+    /// previously departed peer rejoining with a fresh process).
+    Join(u64),
+    /// `id` drops (process killed / link severed) before the round
+    /// starts.  Departing a peer that is not live is a no-op — traces
+    /// from fuzzers may be arbitrary.
+    Leave(u64),
+}
+
+/// A scripted arrival/departure schedule, applied at round boundaries.
+///
+/// This is the churn-trace **oracle** the chaos wall compares real
+/// SIGKILL-and-relaunch runs against: driving a loopback `NetTrainer`
+/// with the trace that mirrors the real run's kills and rejoins must
+/// produce bitwise-identical digests (DESIGN.md §Transport).  Events at
+/// round `r` fire after round `r`'s entry admission poll would — i.e.
+/// they shape the cohort that round `r` trains on — in insertion order,
+/// so `Leave(3), Join(3)` at one round is a same-round rejoin (fresh
+/// cold process) while `Join(3), Leave(3)` is join-then-immediately-die.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChurnTrace {
+    events: Vec<(u64, ChurnEvent)>,
+}
+
+impl ChurnTrace {
+    pub fn new() -> ChurnTrace {
+        ChurnTrace::default()
+    }
+
+    /// Append an event at round `round` (0-based, round-entry time).
+    pub fn push(&mut self, round: u64, ev: ChurnEvent) {
+        self.events.push((round, ev));
+    }
+
+    /// Events scheduled for round `round`, preserving insertion order.
+    pub fn events_at(&self, round: u64) -> impl Iterator<Item = ChurnEvent> + '_ {
+        self.events.iter().filter(move |(r, _)| *r == round).map(|(_, ev)| ev).copied()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse the CLI syntax: comma-separated `<round>:+<id>` (join) /
+    /// `<round>:-<id>` (leave), e.g. `1:-2,3:+2` = client 2 leaves before
+    /// round 1 and rejoins before round 3.  Empty string = no churn.
+    pub fn parse(s: &str) -> anyhow::Result<ChurnTrace> {
+        let mut trace = ChurnTrace::new();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((round, rest)) = part.split_once(':') else {
+                anyhow::bail!("bad churn event '{part}' (want <round>:+<id> or <round>:-<id>)");
+            };
+            let round: u64 =
+                round.parse().map_err(|e| anyhow::anyhow!("churn round '{round}': {e}"))?;
+            let parse_id = |id: &str| -> anyhow::Result<u64> {
+                id.parse().map_err(|e| anyhow::anyhow!("churn id '{id}': {e}"))
+            };
+            let ev = if let Some(id) = rest.strip_prefix('+') {
+                ChurnEvent::Join(parse_id(id)?)
+            } else if let Some(id) = rest.strip_prefix('-') {
+                ChurnEvent::Leave(parse_id(id)?)
+            } else {
+                anyhow::bail!("bad churn event '{part}' (want +<id> or -<id> after ':')");
+            };
+            trace.push(round, ev);
+        }
+        Ok(trace)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -274,6 +348,34 @@ mod tests {
         assert_eq!(sc.draw_participants(&mut rng, 4), vec![0, 1, 2, 3]);
         let mut fresh = Pcg::new(5, 7);
         assert_eq!(rng.next_u64(), fresh.next_u64(), "full participation consumed RNG");
+    }
+
+    #[test]
+    fn churn_trace_parses_and_preserves_order() {
+        let t = ChurnTrace::parse("1:-2, 3:+2,1:+5").unwrap();
+        assert_eq!(
+            t.events_at(1).collect::<Vec<_>>(),
+            vec![ChurnEvent::Leave(2), ChurnEvent::Join(5)]
+        );
+        assert_eq!(t.events_at(3).collect::<Vec<_>>(), vec![ChurnEvent::Join(2)]);
+        assert_eq!(t.events_at(0).count(), 0);
+        assert!(ChurnTrace::parse("").unwrap().is_empty());
+        assert!(ChurnTrace::parse("1:+2").unwrap() == {
+            let mut t = ChurnTrace::new();
+            t.push(1, ChurnEvent::Join(2));
+            t
+        });
+        // Same-round rejoin keeps leave-then-join ordering.
+        let t = ChurnTrace::parse("2:-0,2:+0").unwrap();
+        assert_eq!(
+            t.events_at(2).collect::<Vec<_>>(),
+            vec![ChurnEvent::Leave(0), ChurnEvent::Join(0)]
+        );
+        assert!(ChurnTrace::parse("x:+1").is_err());
+        assert!(ChurnTrace::parse("1:").is_err());
+        assert!(ChurnTrace::parse("1:*1").is_err());
+        assert!(ChurnTrace::parse("1:+x").is_err());
+        assert!(ChurnTrace::parse("1+2").is_err());
     }
 
     #[test]

@@ -9,6 +9,10 @@
 //! * delay below the deadline (SIGSTOP bursts) → bitwise no-op;
 //! * packet loss on one peer's responses → deadline fault → same
 //!   excluded-up-front equality;
+//! * SIGKILL a participant, relaunch it, let it rejoin → bitwise the
+//!   loopback run driven by the same churn trace;
+//! * SIGKILL the **coordinator** mid-run, relaunch with `--resume` →
+//!   bitwise the uninterrupted run;
 //! * end-to-end smoke of the two binaries over localhost TCP.
 
 mod chaos_harness;
@@ -19,10 +23,11 @@ use std::time::Duration;
 
 #[cfg(unix)]
 use chaos_harness::signal;
-use chaos_harness::{spawn_participant, ChaosProxy, ProcGuard, Watchdog};
+use chaos_harness::{spawn_participant, spawn_participant_with, ChaosProxy, ProcGuard, Watchdog};
 use sfl_ga::coordinator::{params_digest, stats_digest, NetTrainer, SchemeKind, TrainConfig};
 use sfl_ga::model::Manifest;
 use sfl_ga::runtime::TcpTransport;
+use sfl_ga::scenario::ChurnTrace;
 
 fn cfg(scheme: SchemeKind, n: usize) -> TrainConfig {
     TrainConfig {
@@ -48,15 +53,16 @@ fn loopback_digests(scheme: SchemeKind, n: usize, cut: usize) -> (u64, u64) {
     (stats_digest(&stats), params_digest(&nt.global_params(cut)))
 }
 
-/// Rendezvous `n` spawned participants on an ephemeral listener.
-fn federation(n: u64) -> (Vec<ProcGuard>, TcpTransport) {
+/// Rendezvous `n` spawned participants on an ephemeral listener; the
+/// address comes back too so churn tests can relaunch participants at it.
+fn federation(n: u64) -> (Vec<ProcGuard>, TcpTransport, String) {
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
     let addr = listener.local_addr().expect("addr").to_string();
     let participants: Vec<ProcGuard> = (0..n).map(|id| spawn_participant(&addr, id)).collect();
     let transport =
-        TcpTransport::accept(&listener, n as usize, Duration::from_secs(30)).expect("rendezvous");
+        TcpTransport::accept(listener, n as usize, Duration::from_secs(30)).expect("rendezvous");
     assert_eq!(transport.joined(), (0..n).collect::<Vec<_>>());
-    (participants, transport)
+    (participants, transport, addr)
 }
 
 #[test]
@@ -64,7 +70,7 @@ fn kill_mid_round_equals_excluded_up_front() {
     let _wd = Watchdog::arm("kill_mid_round_equals_excluded_up_front", Duration::from_secs(180));
     let cut = 2;
     let manifest = Manifest::builtin();
-    let (mut participants, transport) = federation(3);
+    let (mut participants, transport, _addr) = federation(3);
     let mut nt =
         NetTrainer::new(&manifest, cfg(SchemeKind::SflGa, 3), Duration::from_secs(60), transport)
             .expect("net trainer");
@@ -96,7 +102,7 @@ fn delay_below_deadline_is_bitwise_noop() {
     let _wd = Watchdog::arm("delay_below_deadline_is_bitwise_noop", Duration::from_secs(180));
     let cut = 1;
     let manifest = Manifest::builtin();
-    let (participants, transport) = federation(2);
+    let (participants, transport, _addr) = federation(2);
     let mut nt =
         NetTrainer::new(&manifest, cfg(SchemeKind::SflGa, 2), Duration::from_secs(120), transport)
             .expect("net trainer");
@@ -140,7 +146,7 @@ fn packet_loss_triggers_deadline_drop() {
     let proxy = ChaosProxy::start(addr, 1);
     let lossy = spawn_participant(&proxy.addr, 2);
     let transport =
-        TcpTransport::accept(&listener, 3, Duration::from_secs(30)).expect("rendezvous");
+        TcpTransport::accept(listener, 3, Duration::from_secs(30)).expect("rendezvous");
     assert_eq!(transport.joined(), vec![0, 1, 2]);
 
     // SFL exercises the per-client replica path: dropping 2 must also
@@ -160,6 +166,137 @@ fn packet_loss_triggers_deadline_drop() {
         loopback_digests(SchemeKind::Sfl, 2, cut),
         "post-drop run diverged from the excluded-up-front run"
     );
+}
+
+#[test]
+fn kill_restart_rejoin_matches_churn_oracle() {
+    let _wd = Watchdog::arm("kill_restart_rejoin_matches_churn_oracle", Duration::from_secs(240));
+    let cut = 2;
+    let manifest = Manifest::builtin();
+    // SFL keeps per-client replicas, so the rejoin must also install the
+    // cold replica — the strictest client-state path.
+    let mut c = cfg(SchemeKind::Sfl, 3);
+    c.rounds = 4;
+    let (mut participants, transport, addr) = federation(3);
+    let mut nt = NetTrainer::new(&manifest, c.clone(), Duration::from_secs(60), transport)
+        .expect("net trainer");
+    participants[1].wait_for_line("JOINED 1", Duration::from_secs(30));
+
+    // Round 1: the full cohort.
+    nt.step(cut).expect("round 1").expect("not done");
+    assert_eq!(nt.live(), vec![0, 1, 2]);
+
+    // SIGKILL participant 1 between rounds: its death surfaces as a Gone
+    // inside round 2, which completes over the survivors.
+    participants[1].kill();
+    nt.step(cut).expect("round 2").expect("not done");
+    assert_eq!(nt.dropped(), &[1], "the killed peer should have been dropped");
+    assert_eq!(nt.live(), vec![0, 2]);
+
+    // Relaunch it as a brand-new process.  Admission only happens at a
+    // round boundary; await it HERE so the rejoin round is pinned and the
+    // oracle trace below is exact.
+    participants[1] = spawn_participant(&addr, 1);
+    nt.await_peer(1, Duration::from_secs(30)).expect("rejoin admitted");
+    assert_eq!(nt.live(), vec![0, 1, 2]);
+    nt.step(cut).expect("round 3").expect("not done");
+    nt.step(cut).expect("round 4").expect("not done");
+    assert!(nt.step(cut).expect("past the end").is_none());
+    let churned = (stats_digest(nt.stats()), params_digest(&nt.global_params(cut)));
+    nt.shutdown();
+
+    // Oracle: the same churn trace through the loopback engine — leave at
+    // entry of round index 1, cold rejoin at entry of round index 2.
+    let mut oracle = NetTrainer::loopback(&manifest, c, 3).expect("loopback");
+    let trace = ChurnTrace::parse("1:-1,2:+1").expect("trace");
+    let stats = oracle.run_churn(cut, &trace).expect("oracle run");
+    assert_eq!(
+        churned,
+        (stats_digest(&stats), params_digest(&oracle.global_params(cut))),
+        "kill/relaunch TCP run diverged from the churn-trace oracle"
+    );
+}
+
+/// CLI for the checkpoint/resume scenario: both coordinator launches must
+/// agree on every training-relevant flag or `--resume` refuses the file.
+fn coordinator_cmd(extra: &[&str]) -> Command {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_sfl-coordinator"));
+    cmd.args([
+        "--clients", "2",
+        "--rounds", "4",
+        "--tau", "1",
+        "--samples-per-client", "16",
+        "--test-samples", "64",
+        "--eval-every", "1",
+        "--threads", "1",
+        "--scheme", "sfl",
+        "--cut", "2",
+        "--seed", "17",
+    ]);
+    cmd.args(extra);
+    cmd
+}
+
+#[test]
+fn coordinator_sigkill_resume_matches_uninterrupted() {
+    let _wd =
+        Watchdog::arm("coordinator_sigkill_resume_matches_uninterrupted", Duration::from_secs(300));
+
+    // Baseline: one uninterrupted binary run, COMPLETE line captured.
+    let mut baseline = ProcGuard::spawn("coordinator-baseline", &mut coordinator_cmd(&[]));
+    let listening = baseline.wait_for_line("LISTENING ", Duration::from_secs(60));
+    let addr = listening.trim_start_matches("LISTENING ").trim().to_string();
+    let _baseline_parts: Vec<ProcGuard> =
+        (0..2).map(|id| spawn_participant(&addr, id)).collect();
+    baseline.wait_for_line("JOINED ", Duration::from_secs(30));
+    let want = baseline.wait_for_line("COMPLETE ", Duration::from_secs(120));
+    baseline.wait_success(Duration::from_secs(30));
+
+    // Chaos run: checkpoint every round, SIGKILL right after the first
+    // checkpoint lands, relaunch with --resume on the SAME address.
+    let dir = std::env::temp_dir().join(format!("sfl-resume-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("checkpoint dir");
+    let ckpt = dir.join("run.ckpt");
+    let ckpt_s = ckpt.to_str().expect("utf8 path").to_string();
+    let mut coord = ProcGuard::spawn(
+        "coordinator-a",
+        &mut coordinator_cmd(&["--checkpoint", &ckpt_s, "--checkpoint-every", "1"]),
+    );
+    let listening = coord.wait_for_line("LISTENING ", Duration::from_secs(60));
+    let addr = listening.trim_start_matches("LISTENING ").trim().to_string();
+    // Participants armed for reconnect: on the coordinator's death they
+    // see EOF, re-arm the dialer and open their next session with Rejoin.
+    let participants: Vec<ProcGuard> = (0..2)
+        .map(|id| {
+            spawn_participant_with(
+                &addr,
+                id,
+                &["--reconnect", "--reconnect-window-ms", "120000"],
+            )
+        })
+        .collect();
+    coord.wait_for_line("JOINED ", Duration::from_secs(30));
+    coord.wait_for_line("CHECKPOINT ", Duration::from_secs(120));
+    coord.kill(); // SIGKILL: no shutdown handshake, in-flight round lost
+
+    let mut resumed = ProcGuard::spawn(
+        "coordinator-b",
+        &mut coordinator_cmd(&[
+            "--listen", &addr,
+            "--resume", &ckpt_s,
+            "--checkpoint", &ckpt_s,
+            "--checkpoint-every", "1",
+        ]),
+    );
+    let joined = resumed.wait_for_line("JOINED ", Duration::from_secs(60));
+    assert_eq!(joined, "JOINED 0 1", "both survivors should rejoin the resumed coordinator");
+    let got = resumed.wait_for_line("COMPLETE ", Duration::from_secs(120));
+    resumed.wait_success(Duration::from_secs(30));
+    drop(participants);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Round history, drop set and digests — the whole line — must match.
+    assert_eq!(got, want, "resumed run diverged from the uninterrupted run");
 }
 
 #[test]

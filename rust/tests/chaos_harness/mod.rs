@@ -127,6 +127,12 @@ pub fn signal(pid: u32, sig: &str) {
 
 /// Spawn one `sfl-participant` binary joined to `addr` as `id`.
 pub fn spawn_participant(addr: &str, id: u64) -> ProcGuard {
+    spawn_participant_with(addr, id, &[])
+}
+
+/// [`spawn_participant`] with extra CLI flags (`--reconnect` windows and
+/// friends for the churn scenarios).
+pub fn spawn_participant_with(addr: &str, id: u64, extra: &[&str]) -> ProcGuard {
     let mut cmd = Command::new(env!("CARGO_BIN_EXE_sfl-participant"));
     cmd.arg("--connect")
         .arg(addr)
@@ -136,6 +142,9 @@ pub fn spawn_participant(addr: &str, id: u64) -> ProcGuard {
         // own well before a CI-lane timeout.
         .arg("--idle-timeout-ms")
         .arg("120000");
+    for flag in extra {
+        cmd.arg(flag);
+    }
     ProcGuard::spawn(&format!("participant-{id}"), &mut cmd)
 }
 

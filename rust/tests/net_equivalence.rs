@@ -96,7 +96,7 @@ fn tcp_matches_loopback() {
             let addr = listener.local_addr().expect("addr").to_string();
             let _participants: Vec<_> =
                 (0..n as u64).map(|id| spawn_participant(&addr, id)).collect();
-            let transport = TcpTransport::accept(&listener, n, Duration::from_secs(30))
+            let transport = TcpTransport::accept(listener, n, Duration::from_secs(30))
                 .expect("rendezvous");
             assert_eq!(transport.joined(), (0..n as u64).collect::<Vec<_>>());
             let tcp = run_net(&manifest, cfg(scheme, n), Duration::from_secs(60), transport, cut);

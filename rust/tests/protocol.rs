@@ -57,7 +57,7 @@ fn gen_string(rng: &mut Pcg) -> String {
 /// One random message covering every variant (and with it every wire
 /// primitive: strings, scalars, params, tensors).
 fn gen_msg(rng: &mut Pcg, finite: bool) -> Msg {
-    match rng.below(10) {
+    match rng.below(12) {
         0 => Msg::Join { client: rng.next_u64(), version: PROTO_VERSION },
         1 => Msg::Welcome {
             setup: RunSetup {
@@ -93,6 +93,16 @@ fn gen_msg(rng: &mut Pcg, finite: bool) -> Msg {
             w: gen_params(rng, finite),
         },
         8 => Msg::RoundDone { round: rng.next_u64() },
+        9 => Msg::Rejoin { client: rng.next_u64(), version: PROTO_VERSION },
+        10 => Msg::Sync {
+            round: rng.next_u64(),
+            setup: RunSetup {
+                dataset: gen_string(rng),
+                seed: rng.next_u64(),
+                partition: gen_string(rng),
+                samples_per_client: rng.below(4096),
+            },
+        },
         _ => Msg::Shutdown,
     }
 }

@@ -9,12 +9,21 @@
 //! bitwise.  (The networked engine's own degenerate cohorts — an empty
 //! federation, every participant dropped — are unit-tested in
 //! `coordinator::net`.)
+//!
+//! The churn wall fuzzes the networked engine the same way: random
+//! [`ChurnTrace`]s — departures, same-round cold rejoins,
+//! join-then-immediately-die, everyone-leaves — driven through the
+//! loopback [`NetTrainer`].  Every trace must either complete with
+//! finite stats or fail with the clean below-quorum error, and
+//! reset(s) ≡ fresh(s) must survive churn.
 
-use sfl_ga::coordinator::{params_digest, stats_digest, SchemeKind, TrainConfig, Trainer};
+use sfl_ga::coordinator::{
+    params_digest, stats_digest, NetTrainer, SchemeKind, TrainConfig, Trainer,
+};
 use sfl_ga::data::partition::Partition;
 use sfl_ga::model::Manifest;
 use sfl_ga::prop_assert;
-use sfl_ga::scenario::{ScenarioConfig, StragglerConfig};
+use sfl_ga::scenario::{ChurnEvent, ChurnTrace, ScenarioConfig, StragglerConfig};
 use sfl_ga::util::proptest::check;
 use sfl_ga::util::rng::Pcg;
 
@@ -118,6 +127,161 @@ fn reset_equals_fresh_under_degenerate_scenarios() {
         let back = trainer.run(cut).map_err(|e| format!("{label}: reset-back run: {e:#}"))?;
         let back = (stats_digest(&back), params_digest(&trainer.global_params(cut)));
         prop_assert!(back == first, "{label}: reset back to {orig_seed:#x} lost the original run");
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------ churn wall
+
+/// Networked-run config: full participation, no simulated stragglers
+/// (the networked engine rejects both — real churn is the chaos here).
+fn churn_cfg(rng: &mut Pcg, n: usize, rounds: usize) -> TrainConfig {
+    let schemes = SchemeKind::all();
+    TrainConfig {
+        scheme: schemes[rng.below(schemes.len())],
+        num_clients: n,
+        rounds,
+        tau: 1,
+        samples_per_client: 32,
+        test_samples: 64,
+        seed: 0xC4A0 ^ rng.next_u64(),
+        eval_every: 1,
+        threads: 1,
+        ..Default::default()
+    }
+}
+
+/// A random churn trace biased toward the nasty edges.  Round 0 is left
+/// calm so every run starts with the whole federation.
+fn gen_trace(rng: &mut Pcg, n: u64, rounds: u64) -> ChurnTrace {
+    let mut trace = ChurnTrace::new();
+    for r in 1..rounds {
+        match rng.below(5) {
+            0 => {} // calm round
+            1 => trace.push(r, ChurnEvent::Leave(rng.below(n as usize) as u64)),
+            2 => {
+                // Same-round cold rejoin: leave then immediately re-admit.
+                let id = rng.below(n as usize) as u64;
+                trace.push(r, ChurnEvent::Leave(id));
+                trace.push(r, ChurnEvent::Join(id));
+            }
+            3 => {
+                // Join-then-immediately-die — possibly a brand-new id
+                // beyond the initial population span.
+                let id = n + rng.below(2) as u64;
+                trace.push(r, ChurnEvent::Join(id));
+                trace.push(r, ChurnEvent::Leave(id));
+            }
+            _ => {
+                // Everyone leaves: the run must end in the clean
+                // below-quorum error, never a panic.
+                for id in 0..n {
+                    trace.push(r, ChurnEvent::Leave(id));
+                }
+            }
+        }
+    }
+    trace
+}
+
+/// Like [`gen_trace`] but guaranteed to keep client 0 live, so the run
+/// always completes (for the reset-equality property).
+fn gen_safe_trace(rng: &mut Pcg, n: u64, rounds: u64) -> ChurnTrace {
+    let mut trace = ChurnTrace::new();
+    for r in 1..rounds {
+        match rng.below(4) {
+            0 => {}
+            1 => trace.push(r, ChurnEvent::Leave(1 + rng.below((n - 1) as usize) as u64)),
+            2 => {
+                let id = 1 + rng.below((n - 1) as usize) as u64;
+                trace.push(r, ChurnEvent::Leave(id));
+                trace.push(r, ChurnEvent::Join(id));
+            }
+            _ => {
+                let id = n + rng.below(2) as u64;
+                trace.push(r, ChurnEvent::Join(id));
+                trace.push(r, ChurnEvent::Leave(id));
+            }
+        }
+    }
+    trace
+}
+
+#[test]
+fn churn_traces_never_panic_and_keep_stats_finite() {
+    let manifest = Manifest::builtin();
+    check("churn-traces", 6, |rng| {
+        let n = 2 + rng.below(2);
+        let rounds = 2 + rng.below(2);
+        let cfg = churn_cfg(rng, n, rounds);
+        let cut = 1 + rng.below(2);
+        let trace = gen_trace(rng, n as u64, rounds as u64);
+        let label = format!("{} n={n} rounds={rounds} cut={cut} {trace:?}", cfg.scheme.name());
+        let mut nt = NetTrainer::loopback(&manifest, cfg, n)
+            .map_err(|e| format!("{label}: construct: {e:#}"))?;
+        match nt.run_churn(cut, &trace) {
+            Ok(stats) => {
+                prop_assert!(stats.len() == rounds, "{label}: {} of {rounds} rounds", stats.len());
+                for s in &stats {
+                    prop_assert!(
+                        s.train_loss.is_finite(),
+                        "{label}: non-finite loss {} at round {}",
+                        s.train_loss,
+                        s.round
+                    );
+                    prop_assert!(s.participants >= 1, "{label}: empty cohort at round {}", s.round);
+                    let (tl, ta) = s
+                        .test
+                        .ok_or_else(|| format!("{label}: round {} missing test stats", s.round))?;
+                    prop_assert!(tl.is_finite(), "{label}: non-finite test loss {tl}");
+                    prop_assert!((0.0..=1.0).contains(&ta), "{label}: accuracy {ta}");
+                }
+            }
+            Err(e) => {
+                // The only legal failure: the cohort emptied and the
+                // (zero-wait) quorum pause expired — a clean error that
+                // names the drop history, not a panic or a junk state.
+                let msg = format!("{e:#}");
+                prop_assert!(
+                    msg.contains("below quorum") && msg.contains("dropped in order"),
+                    "{label}: unexpected error: {msg}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn reset_equals_fresh_under_churn() {
+    let manifest = Manifest::builtin();
+    check("churn-reset", 3, |rng| {
+        let n = 2 + rng.below(2);
+        let rounds = 2 + rng.below(2);
+        let cfg = churn_cfg(rng, n, rounds);
+        let cut = 1 + rng.below(2);
+        let trace = gen_safe_trace(rng, n as u64, rounds as u64);
+        let label = format!("{} n={n} rounds={rounds} cut={cut} {trace:?}", cfg.scheme.name());
+        let reseed = cfg.seed ^ 0xBEEF;
+
+        let mut nt = NetTrainer::loopback(&manifest, cfg.clone(), n)
+            .map_err(|e| format!("{label}: construct: {e:#}"))?;
+        nt.run_churn(cut, &trace).map_err(|e| format!("{label}: run 1: {e:#}"))?;
+
+        // Reset to a new seed and replay the SAME churn trace: the result
+        // must be bitwise the fresh federation at that seed under that
+        // trace — churn must not leak state across reset.
+        nt.reset(reseed).map_err(|e| format!("{label}: reset: {e:#}"))?;
+        let replay = nt.run_churn(cut, &trace).map_err(|e| format!("{label}: run 2: {e:#}"))?;
+        let replay = (stats_digest(&replay), params_digest(&nt.global_params(cut)));
+
+        let mut fresh =
+            NetTrainer::loopback(&manifest, TrainConfig { seed: reseed, ..cfg }, n)
+                .map_err(|e| format!("{label}: fresh construct: {e:#}"))?;
+        let fresh_run =
+            fresh.run_churn(cut, &trace).map_err(|e| format!("{label}: fresh run: {e:#}"))?;
+        let fresh_run = (stats_digest(&fresh_run), params_digest(&fresh.global_params(cut)));
+        prop_assert!(replay == fresh_run, "{label}: reset({reseed:#x}) != fresh under churn");
         Ok(())
     });
 }
