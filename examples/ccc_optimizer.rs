@@ -7,7 +7,7 @@
 
 use sfl_ga::ccc::{self, CccConfig, CutPolicy, DdqnCut};
 use sfl_ga::coordinator::AllocPolicy;
-use sfl_ga::model::{Manifest, NUM_CUTS};
+use sfl_ga::model::registry;
 use sfl_ga::privacy;
 use sfl_ga::util::cli::Args;
 
@@ -17,7 +17,8 @@ fn main() -> anyhow::Result<()> {
     let epsilon = args.parse_or("epsilon", 1e-3f64)?;
     let seed = args.parse_or("seed", 17u64)?;
 
-    let manifest = Manifest::builtin();
+    // --model vgg gives the agent an 11-action menu, txf a 3-action one.
+    let manifest = registry::manifest(&args.model()?)?;
     let spec = manifest.for_dataset("mnist")?.clone();
     println!(
         "privacy ε={epsilon}: feasible cuts = {:?}",
@@ -49,8 +50,10 @@ fn main() -> anyhow::Result<()> {
     for t in 0..trials {
         let (state, feat) = env.reset();
         let learned = policy.select(t, &feat);
-        // Exhaustive: evaluate the true cost of every feasible cut.
-        let best = (1..=NUM_CUTS)
+        // Exhaustive: evaluate the true cost of every feasible menu cut.
+        let best = spec
+            .menu()
+            .ids()
             .filter(|&v| privacy::cut_feasible(&spec, v, epsilon))
             .min_by(|&a, &b| {
                 let ca = cost(&env, &state, a);

@@ -185,6 +185,94 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // Transformer kernels at the zoo's `txf` mnist shape (28x28 -> 49
+    // tokens of width 32, 2 heads): layernorm and softmax-attention
+    // forward/backward, fast path vs the f64 scalar reference — the same
+    // two-path contract the conv/dense rows pin, extended to the kernels
+    // the transformer architectures run on.  The bench-smoke lane keys on
+    // the `txf_*` rows below, so these cannot silently drop out.
+    let (t, dm, heads) = (49usize, 32usize, 2usize);
+    let rows_ln = b * t;
+    println!("== transformer kernels: scalar reference vs fast path (b {b}, t {t}, dm {dm}) ==");
+    let gamma = gen_vec(51_000_000, dm);
+    let beta = gen_vec(51_100_000, dm);
+    let lx = gen_vec(51_200_000, rows_ln * dm);
+    let ldy = gen_vec(51_300_000, rows_ln * dm);
+    let (lo_f, lm_f, lr_f) = ops::layernorm_fwd(&lx, rows_ln, dm, &gamma, &beta);
+    let (lo_r, lm_r, lr_r) = reference::layernorm_fwd(&lx, rows_ln, dm, &gamma, &beta);
+    check_close("txf_layernorm_fwd", &lo_f, &lo_r);
+    let s = bench("txf_layernorm_fwd/scalar", 2, dense_iters, || {
+        reference::layernorm_fwd(&lx, rows_ln, dm, &gamma, &beta)
+    });
+    let f = bench("txf_layernorm_fwd/fast", 2, dense_iters, || {
+        ops::layernorm_fwd(&lx, rows_ln, dm, &gamma, &beta)
+    });
+    // ~8 FLOPs/element: mean, variance, normalize, scale-shift passes.
+    let ln_flops = 8.0 * (rows_ln * dm) as f64;
+    rows.push(OpRow {
+        name: "txf_layernorm_fwd".into(),
+        flops: ln_flops,
+        scalar_ns: s.mean_ns,
+        gemm_ns: f.mean_ns,
+    });
+    check_close(
+        "txf_layernorm_bwd",
+        &ops::layernorm_bwd(&lx, &lm_f, &lr_f, &gamma, rows_ln, dm, &ldy).0,
+        &reference::layernorm_bwd(&lx, &lm_r, &lr_r, &gamma, rows_ln, dm, &ldy).0,
+    );
+    let s = bench("txf_layernorm_bwd/scalar", 2, dense_iters, || {
+        reference::layernorm_bwd(&lx, &lm_r, &lr_r, &gamma, rows_ln, dm, &ldy)
+    });
+    let f = bench("txf_layernorm_bwd/fast", 2, dense_iters, || {
+        ops::layernorm_bwd(&lx, &lm_f, &lr_f, &gamma, rows_ln, dm, &ldy)
+    });
+    rows.push(OpRow {
+        name: "txf_layernorm_bwd".into(),
+        flops: 1.5 * ln_flops,
+        scalar_ns: s.mean_ns,
+        gemm_ns: f.mean_ns,
+    });
+
+    let q = gen_vec(53_000_000, b * t * dm);
+    let k = gen_vec(53_100_000, b * t * dm);
+    let v = gen_vec(53_200_000, b * t * dm);
+    let d_concat = gen_vec(53_300_000, b * t * dm);
+    let (cat_f, probs_f) = ops::mhsa_fwd(&mut scratch, &q, &k, &v, b, t, dm, heads);
+    let (cat_r, probs_r) = reference::mhsa_fwd(&q, &k, &v, b, t, dm, heads);
+    check_close("txf_attention_fwd", &cat_f, &cat_r);
+    let s = bench("txf_attention_fwd/scalar", 2, dense_iters, || {
+        reference::mhsa_fwd(&q, &k, &v, b, t, dm, heads)
+    });
+    let f = bench("txf_attention_fwd/gemm", 2, dense_iters, || {
+        ops::mhsa_fwd(&mut scratch, &q, &k, &v, b, t, dm, heads)
+    });
+    println!("    -> speedup {:.2}x", s.mean_ns / f.mean_ns);
+    // QK^T and PV are each 2*b*t*t*dm FLOPs (heads partition dm).
+    let att_flops = 4.0 * (b * t * t * dm) as f64;
+    rows.push(OpRow {
+        name: "txf_attention_fwd".into(),
+        flops: att_flops,
+        scalar_ns: s.mean_ns,
+        gemm_ns: f.mean_ns,
+    });
+    let (dq_f, _dk, _dv) =
+        ops::mhsa_bwd(&mut scratch, &q, &k, &v, &probs_f, &d_concat, b, t, dm, heads);
+    let (dq_r, _dk, _dv) = reference::mhsa_bwd(&q, &k, &v, &probs_r, &d_concat, b, t, dm, heads);
+    check_close("txf_attention_bwd", &dq_f, &dq_r);
+    let s = bench("txf_attention_bwd/scalar", 2, dense_iters, || {
+        reference::mhsa_bwd(&q, &k, &v, &probs_r, &d_concat, b, t, dm, heads)
+    });
+    let f = bench("txf_attention_bwd/gemm", 2, dense_iters, || {
+        ops::mhsa_bwd(&mut scratch, &q, &k, &v, &probs_f, &d_concat, b, t, dm, heads)
+    });
+    println!("    -> speedup {:.2}x", s.mean_ns / f.mean_ns);
+    rows.push(OpRow {
+        name: "txf_attention_bwd".into(),
+        flops: 2.0 * att_flops,
+        scalar_ns: s.mean_ns,
+        gemm_ns: f.mean_ns,
+    });
+
     let conv_speedup = conv_scalar_ns / conv_gemm_ns;
     println!(
         "conv2d fwd+bwd total: scalar {:.1} ms, gemm {:.1} ms -> {conv_speedup:.2}x \

@@ -34,7 +34,7 @@ use sfl_ga::coordinator::{
     TrainConfig,
 };
 use sfl_ga::info;
-use sfl_ga::model::{Manifest, NUM_CUTS};
+use sfl_ga::model::registry;
 use sfl_ga::runtime::TcpTransport;
 use sfl_ga::util::cli::Args;
 use sfl_ga::util::logging;
@@ -54,7 +54,8 @@ fn run() -> anyhow::Result<()> {
         ("join-deadline-ms", "30000", "rendezvous window"),
         ("deadline-ms", "10000", "per-phase response deadline (fault policy)"),
         ("scheme", "sfl-ga", "sfl-ga|sfl-ga-drift|sfl|psl|fl"),
-        ("cut", "2", "split layer v"),
+        ("model", "builtin", "model architecture: builtin|vgg|txf"),
+        ("cut", "2", "split layer v (validated against the model's cut menu)"),
         ("rounds", "2", "communication rounds"),
         ("tau", "1", "local epochs per round"),
         ("lr", "0.02", "learning rate"),
@@ -85,11 +86,17 @@ fn run() -> anyhow::Result<()> {
     let join_deadline = args.duration_ms("join-deadline-ms", 30_000)?;
     let deadline = args.duration_ms("deadline-ms", 10_000)?;
     let scheme = SchemeKind::parse(&args.str_or("scheme", "sfl-ga"))?;
+    let model = args.model()?;
+    let dataset = args.str_or("dataset", "mnist");
+    let manifest = registry::manifest(&model)?;
     let cut: usize = args.parse_or("cut", 2usize)?;
-    anyhow::ensure!(
-        (1..=NUM_CUTS).contains(&cut),
-        "--cut must be in 1..={NUM_CUTS}, got {cut}"
-    );
+    // One shared validation path for the CLI, the round engine and the
+    // wire protocol: the active model's menu.
+    manifest
+        .for_dataset(&dataset)?
+        .menu()
+        .validate(cut)
+        .map_err(|e| anyhow::anyhow!("--cut: {e} (model '{model}')"))?;
 
     let resume_path = args.str_or("resume", "");
     let ckpt = if resume_path.is_empty() {
@@ -113,9 +120,9 @@ fn run() -> anyhow::Result<()> {
         joined.iter().map(|id| id.to_string()).collect::<Vec<_>>().join(" ")
     ));
 
-    let dataset = args.str_or("dataset", "mnist");
     let cfg = TrainConfig {
         dataset: dataset.clone(),
+        model: model.clone(),
         scheme,
         num_clients: joined.len(),
         rounds: args.parse_or("rounds", 2usize)?,
@@ -130,7 +137,6 @@ fn run() -> anyhow::Result<()> {
         alloc: if args.flag("equal-alloc") { AllocPolicy::Equal } else { AllocPolicy::Optimal },
         ..Default::default()
     };
-    let manifest = Manifest::builtin();
     let mut nt = match &ckpt {
         Some(c) => NetTrainer::resume(&manifest, cfg, deadline, transport, c)?,
         None => NetTrainer::new(&manifest, cfg, deadline, transport)?,
@@ -142,7 +148,11 @@ fn run() -> anyhow::Result<()> {
         let every: usize = args.parse_or("checkpoint-every", 5usize)?;
         nt = nt.with_checkpoint(PathBuf::from(&ckpt_out), every);
     }
-    info!("federation of {} at cut v={cut}, scheme {}", joined.len(), scheme.name());
+    info!(
+        "federation of {} at cut v={cut}, model {model}, scheme {}",
+        joined.len(),
+        scheme.name()
+    );
 
     while let Some((s, saved)) = nt.step(cut)? {
         if saved {

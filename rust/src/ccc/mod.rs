@@ -17,7 +17,7 @@ use crate::coordinator::population::Population;
 use crate::coordinator::timing::AllocPolicy;
 use crate::ddqn::{DdqnAgent, DdqnConfig, Transition};
 use crate::latency::ComputeConfig;
-use crate::model::{NUM_CUTS, ShapeSpec};
+use crate::model::ShapeSpec;
 use crate::privacy;
 use crate::scenario::ScenarioConfig;
 use crate::util::rng::Pcg;
@@ -57,8 +57,9 @@ impl Default for CccConfig {
             steps_per_episode: 20,
             alloc: AllocPolicy::Optimal,
             ddqn: DdqnConfig {
-                state_dim: 0, // filled by Env::agent_config
-                num_actions: NUM_CUTS,
+                state_dim: 0,   // filled by Env::agent_config
+                num_actions: 0, // filled by Env::agent_config from the cut menu
+
                 hidden: vec![64, 64],
                 gamma: 0.9,
                 lr: 1e-3,
@@ -161,11 +162,13 @@ impl Env {
         &self.pop
     }
 
-    /// DDQN dimensions for this environment.
+    /// DDQN dimensions for this environment.  The action space is the
+    /// active model's cut menu, so a deeper architecture automatically
+    /// widens the Q-network's output head.
     pub fn agent_config(&self) -> DdqnConfig {
         DdqnConfig {
             state_dim: self.num_clients() + 1,
-            num_actions: NUM_CUTS,
+            num_actions: self.spec.num_cuts(),
             ..self.cfg.ddqn.clone()
         }
     }

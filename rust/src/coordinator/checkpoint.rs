@@ -76,6 +76,7 @@ pub struct Checkpoint {
 pub fn config_fingerprint(cfg: &TrainConfig) -> u64 {
     let mut d = Digest::new();
     d.bytes(cfg.dataset.as_bytes());
+    d.bytes(cfg.model.as_bytes());
     d.bytes(cfg.scheme.name().as_bytes());
     d.bytes(&(cfg.rounds as u64).to_le_bytes());
     d.bytes(&(cfg.tau as u64).to_le_bytes());

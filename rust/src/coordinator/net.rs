@@ -39,7 +39,7 @@ use std::time::{Duration, Instant};
 use crate::data::init::{init_params, join_params};
 use crate::data::partition::Partition;
 use crate::data::{generate, Dataset};
-use crate::model::{Manifest, NUM_CUTS};
+use crate::model::Manifest;
 use crate::protocol::{Msg, RunSetup};
 use crate::runtime::transport::{Incoming, Transport};
 use crate::runtime::{LoopbackTransport, ModelRuntime, ParallelExecutor, Tensor};
@@ -239,6 +239,8 @@ impl<T: Transport> NetTrainer<T> {
             seed: cfg.seed,
             partition: partition_str(&cfg.scenario.partition),
             samples_per_client: cfg.samples_per_client,
+            model: cfg.model.clone(),
+            num_cuts: spec.num_cuts() as u32,
         };
         // Writes must respect the same deadline as collections: a peer
         // that stops reading would otherwise block `send` forever and
@@ -355,6 +357,8 @@ impl<T: Transport> NetTrainer<T> {
             seed: self.cfg.seed,
             partition: partition_str(&self.cfg.scenario.partition),
             samples_per_client: self.cfg.samples_per_client,
+            model: self.cfg.model.clone(),
+            num_cuts: self.rt.spec().num_cuts() as u32,
         }
     }
 
@@ -508,10 +512,7 @@ impl<T: Transport> NetTrainer<T> {
     /// on a drop, restore the entry snapshot, renormalize to the
     /// survivors and restart (same channel draw — see the module docs).
     pub fn run_round(&mut self, cut: usize) -> anyhow::Result<RoundStats> {
-        anyhow::ensure!(
-            (1..=NUM_CUTS).contains(&cut),
-            "cut {cut} outside 1..={NUM_CUTS}"
-        );
+        self.rt.spec().menu().validate(cut)?;
         let mut snapshot = (self.client_side.clone(), self.ws.clone(), self.w_full.clone());
         let draw = self.round as u64;
         loop {
@@ -1494,7 +1495,7 @@ mod tests {
         let manifest = Manifest::builtin();
         let mut nt = NetTrainer::loopback(&manifest, tiny_cfg(), 1).unwrap();
         assert!(nt.run_round(0).is_err());
-        assert!(nt.run_round(crate::model::NUM_CUTS + 1).is_err());
+        assert!(nt.run_round(nt.rt.spec().num_cuts() + 1).is_err());
     }
 
     #[test]

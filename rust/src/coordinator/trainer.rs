@@ -105,6 +105,12 @@ pub const MAX_PER_CLIENT_REPLICAS: usize = 65_536;
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
     pub dataset: String,
+    /// Model-registry architecture id (`builtin`, `vgg`, `txf`).  Selects
+    /// the layer graph and with it the cut menu every component — trainer,
+    /// comm accounting, CCC action space, networked protocol — dispatches
+    /// on.  Callers that construct their own `Manifest` must keep it
+    /// consistent with this id (the binaries resolve both from one flag).
+    pub model: String,
     pub scheme: SchemeKind,
     pub num_clients: usize,
     pub rounds: usize,
@@ -135,6 +141,7 @@ impl Default for TrainConfig {
     fn default() -> Self {
         TrainConfig {
             dataset: "mnist".into(),
+            model: "builtin".into(),
             scheme: SchemeKind::SflGa,
             num_clients: 10,
             rounds: 100,
@@ -442,6 +449,7 @@ impl Trainer {
         gains: GainSource,
         pending: Option<&PendingEval>,
     ) -> anyhow::Result<(RoundStats, Option<(f64, f64)>)> {
+        self.rt.spec().menu().validate(cut)?;
         // Dynamic cut selection (Algorithm 1) moves layer ownership between
         // the sides; on a cut change, re-anchor every replica to the global
         // model so the handed-over blocks carry the aggregated weights.

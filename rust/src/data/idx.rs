@@ -1,0 +1,309 @@
+//! Real-dataset loading: the IDX container format MNIST and
+//! Fashion-MNIST ship in (`--features mnist`).
+//!
+//! The IDX header is 4 magic bytes — `00 00 <type> <ndims>` with type
+//! `0x08` (unsigned byte) for both files — followed by `ndims` big-endian
+//! u32 dimension sizes and the raw payload.  Images are
+//! `n × rows × cols` u8, labels are `n` u8; we normalize pixels to
+//! `[0, 1]` f32 in the crate's existing row-major `[h, w, c]` sample
+//! layout (c = 1 for these datasets, so the byte order maps directly).
+//!
+//! Loading is strictly additive to the synthetic substrate: the trainer
+//! keeps calling [`super::generate`], and callers that want real data
+//! use [`load_or_synthetic`], which reads the conventional file pair
+//! from [`data_dir`] (the `SFLGA_MNIST_DIR` environment variable,
+//! default `data/mnist`) and silently falls back to the synthetic
+//! generator when the files are absent — so a checkout without the
+//! ~11 MB of downloads behaves exactly like the default build.  Only
+//! *present-but-malformed* files are an error: a corrupt download should
+//! never be papered over with synthetic data.  Files must be
+//! uncompressed (`gunzip` the official archives); there is no flate
+//! dependency to gate on.
+
+use std::path::{Path, PathBuf};
+
+use super::{generate, Dataset};
+use crate::model::ShapeSpec;
+
+/// IDX element-type code for unsigned byte payloads.
+const TYPE_U8: u8 = 0x08;
+
+/// Which half of the official file pair to load.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+impl Split {
+    /// The conventional file-name stems (`train-*` / `t10k-*`).
+    fn stem(self) -> &'static str {
+        match self {
+            Split::Train => "train",
+            Split::Test => "t10k",
+        }
+    }
+}
+
+/// Directory the loader looks in: `SFLGA_MNIST_DIR` if set, else
+/// `data/mnist` relative to the working directory.
+pub fn data_dir() -> PathBuf {
+    std::env::var_os("SFLGA_MNIST_DIR").map_or_else(|| PathBuf::from("data/mnist"), PathBuf::from)
+}
+
+/// Parse one IDX payload: returns the dimension sizes and the raw bytes.
+///
+/// Validates the magic (two zero bytes, u8 element type, expected rank),
+/// the advertised dimensions against the actual byte count, and guards
+/// the product against overflow — arbitrary headers must error, never
+/// panic or over-allocate.
+pub fn parse_idx(bytes: &[u8], want_rank: usize) -> anyhow::Result<(Vec<usize>, &[u8])> {
+    anyhow::ensure!(bytes.len() >= 4, "IDX header truncated: {} bytes", bytes.len());
+    anyhow::ensure!(
+        bytes[0] == 0 && bytes[1] == 0,
+        "bad IDX magic {:02x}{:02x}.. (want 0000..)",
+        bytes[0],
+        bytes[1]
+    );
+    anyhow::ensure!(
+        bytes[2] == TYPE_U8,
+        "IDX element type 0x{:02x} unsupported (want 0x08 = u8)",
+        bytes[2]
+    );
+    let rank = bytes[3] as usize;
+    anyhow::ensure!(
+        rank == want_rank,
+        "IDX rank {rank} (want {want_rank}: magic 0x0000{TYPE_U8:02x}{want_rank:02x})"
+    );
+    let header = 4 + 4 * rank;
+    anyhow::ensure!(bytes.len() >= header, "IDX header truncated: {} bytes", bytes.len());
+    let mut dims = Vec::with_capacity(rank);
+    let mut total = 1usize;
+    for i in 0..rank {
+        let off = 4 + 4 * i;
+        let d = u32::from_be_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        total = total
+            .checked_mul(d)
+            .ok_or_else(|| anyhow::anyhow!("IDX dimensions overflow: {dims:?} x {d}"))?;
+        dims.push(d);
+    }
+    let payload = &bytes[header..];
+    anyhow::ensure!(
+        payload.len() == total,
+        "IDX payload is {} bytes, header {dims:?} promises {total}",
+        payload.len()
+    );
+    Ok((dims, payload))
+}
+
+/// Load one `images + labels` IDX file pair into a [`Dataset`] with the
+/// spec's geometry.  Errors if either file is unreadable or malformed,
+/// if the two disagree on the sample count, or if the image geometry
+/// does not match the spec (these datasets are single-channel, so the
+/// spec must be `h x w x 1`).
+pub fn load_pair(images: &Path, labels: &Path, spec: &ShapeSpec) -> anyhow::Result<Dataset> {
+    let (h, w, c) = (spec.input_shape[0], spec.input_shape[1], spec.input_shape[2]);
+    anyhow::ensure!(c == 1, "IDX images are single-channel; spec {} wants c={c}", spec.key);
+    let img_bytes = std::fs::read(images)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", images.display()))?;
+    let lbl_bytes = std::fs::read(labels)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", labels.display()))?;
+    let (idims, pixels) =
+        parse_idx(&img_bytes, 3).map_err(|e| anyhow::anyhow!("{}: {e}", images.display()))?;
+    let (ldims, label_bytes) =
+        parse_idx(&lbl_bytes, 1).map_err(|e| anyhow::anyhow!("{}: {e}", labels.display()))?;
+    anyhow::ensure!(
+        idims[0] == ldims[0],
+        "{} has {} images but {} has {} labels",
+        images.display(),
+        idims[0],
+        labels.display(),
+        ldims[0]
+    );
+    anyhow::ensure!(
+        idims[1] == h && idims[2] == w,
+        "images are {}x{}, spec {} wants {h}x{w}",
+        idims[1],
+        idims[2],
+        spec.key
+    );
+    for (i, &l) in label_bytes.iter().enumerate() {
+        anyhow::ensure!(
+            (l as usize) < spec.classes,
+            "label {l} at sample {i} out of range (classes = {})",
+            spec.classes
+        );
+    }
+    // u8 -> [0,1] f32; row-major h*w with c=1 is already the sample layout.
+    let x: Vec<f32> = pixels.iter().map(|&p| p as f32 / 255.0).collect();
+    Ok(Dataset {
+        input_shape: spec.input_shape.clone(),
+        classes: spec.classes,
+        x,
+        labels: label_bytes.to_vec(),
+    })
+}
+
+/// The conventional file pair for a split under `dir`:
+/// `{train,t10k}-images-idx3-ubyte` + `{train,t10k}-labels-idx1-ubyte`.
+pub fn split_paths(dir: &Path, split: Split) -> (PathBuf, PathBuf) {
+    let stem = split.stem();
+    (
+        dir.join(format!("{stem}-images-idx3-ubyte")),
+        dir.join(format!("{stem}-labels-idx1-ubyte")),
+    )
+}
+
+/// Real data when present, synthetic otherwise.
+///
+/// Looks for the split's file pair under [`data_dir`]; if both exist
+/// they MUST parse (a corrupt file is an error, not a fallback), and the
+/// first `n` samples are returned.  If either file is absent — or the
+/// dataset name has no IDX distribution (cifar10) — this is exactly
+/// [`generate`]`(spec, name, n, seed)`.
+pub fn load_or_synthetic(
+    spec: &ShapeSpec,
+    name: &str,
+    split: Split,
+    n: usize,
+    seed: u64,
+) -> anyhow::Result<Dataset> {
+    load_or_synthetic_from(&data_dir(), spec, name, split, n, seed)
+}
+
+/// [`load_or_synthetic`] against an explicit directory instead of the
+/// `SFLGA_MNIST_DIR` lookup (tests use this to avoid mutating process
+/// environment under the parallel test runner).
+pub fn load_or_synthetic_from(
+    dir: &Path,
+    spec: &ShapeSpec,
+    name: &str,
+    split: Split,
+    n: usize,
+    seed: u64,
+) -> anyhow::Result<Dataset> {
+    let (images, labels) = split_paths(dir, split);
+    let idx_shaped = matches!(name, "mnist" | "fmnist");
+    if !(idx_shaped && images.exists() && labels.exists()) {
+        return Ok(generate(spec, name, n, seed));
+    }
+    let mut ds = load_pair(&images, &labels, spec)?;
+    anyhow::ensure!(ds.len() >= n, "{} has {} samples, need {n}", images.display(), ds.len());
+    ds.x.truncate(n * ds.input_elems());
+    ds.labels.truncate(n);
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Manifest;
+
+    fn spec() -> ShapeSpec {
+        Manifest::builtin().for_dataset("mnist").unwrap().clone()
+    }
+
+    /// Serialize a tiny IDX pair: `n` 28x28 images whose pixel (i, j) is
+    /// `(sample + i + j) % 256`, labels `sample % 10`.
+    fn fake_pair(n: usize) -> (Vec<u8>, Vec<u8>) {
+        let mut img = vec![0u8, 0, TYPE_U8, 3];
+        for d in [n as u32, 28, 28] {
+            img.extend_from_slice(&d.to_be_bytes());
+        }
+        for s in 0..n {
+            for i in 0..28usize {
+                for j in 0..28usize {
+                    img.push(((s + i + j) % 256) as u8);
+                }
+            }
+        }
+        let mut lbl = vec![0u8, 0, TYPE_U8, 1];
+        lbl.extend_from_slice(&(n as u32).to_be_bytes());
+        lbl.extend((0..n).map(|s| (s % 10) as u8));
+        (img, lbl)
+    }
+
+    /// A scratch dir under the target-adjacent tmp root, cleaned on drop.
+    struct TmpDir(PathBuf);
+    impl TmpDir {
+        fn new(tag: &str) -> TmpDir {
+            let d = std::env::temp_dir().join(format!("sfl_ga_idx_{tag}_{}", std::process::id()));
+            std::fs::create_dir_all(&d).unwrap();
+            TmpDir(d)
+        }
+    }
+    impl Drop for TmpDir {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+
+    #[test]
+    fn well_formed_pair_loads_normalized() {
+        let tmp = TmpDir::new("ok");
+        let (img, lbl) = fake_pair(5);
+        let (ip, lp) = split_paths(&tmp.0, Split::Train);
+        std::fs::write(&ip, &img).unwrap();
+        std::fs::write(&lp, &lbl).unwrap();
+        let ds = load_pair(&ip, &lp, &spec()).unwrap();
+        assert_eq!(ds.len(), 5);
+        assert_eq!(ds.input_shape, vec![28, 28, 1]);
+        assert_eq!(ds.labels, vec![0, 1, 2, 3, 4]);
+        // Pixel (0,0) of sample 3 is byte 3 -> 3/255.
+        assert_eq!(ds.sample(3)[0], 3.0 / 255.0);
+        assert!(ds.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn malformed_headers_are_clean_errors() {
+        let s = spec();
+        let (img, lbl) = fake_pair(2);
+        // Wrong element type.
+        let mut bad = img.clone();
+        bad[2] = 0x0D;
+        assert!(parse_idx(&bad, 3).unwrap_err().to_string().contains("element type"));
+        // Wrong rank (labels parsed as images).
+        assert!(parse_idx(&lbl, 3).unwrap_err().to_string().contains("rank"));
+        // Truncated payload.
+        let mut short = img.clone();
+        short.truncate(img.len() - 9);
+        assert!(parse_idx(&short, 3).unwrap_err().to_string().contains("promises"));
+        // Count mismatch between the pair.
+        let tmp = TmpDir::new("mismatch");
+        let (ip, lp) = split_paths(&tmp.0, Split::Train);
+        let (_, lbl3) = fake_pair(3);
+        std::fs::write(&ip, &img).unwrap();
+        std::fs::write(&lp, &lbl3).unwrap();
+        let err = load_pair(&ip, &lp, &s).unwrap_err().to_string();
+        assert!(err.contains("2 images") && err.contains("3 labels"), "{err}");
+    }
+
+    #[test]
+    fn absent_files_fall_back_to_synthetic() {
+        let tmp = TmpDir::new("absent");
+        let s = spec();
+        let ds = load_or_synthetic_from(&tmp.0, &s, "mnist", Split::Train, 16, 7).unwrap();
+        let synth = generate(&s, "mnist", 16, 7);
+        assert_eq!(ds.x, synth.x, "fallback must be the synthetic substrate verbatim");
+        assert_eq!(ds.labels, synth.labels);
+    }
+
+    #[test]
+    fn present_files_shadow_synthetic_and_truncate_to_n() {
+        let tmp = TmpDir::new("shadow");
+        let (img, lbl) = fake_pair(8);
+        let (ip, lp) = split_paths(&tmp.0, Split::Train);
+        std::fs::write(&ip, &img).unwrap();
+        std::fs::write(&lp, &lbl).unwrap();
+        let s = spec();
+        let ds = load_or_synthetic_from(&tmp.0, &s, "mnist", Split::Train, 6, 7).unwrap();
+        let too_many = load_or_synthetic_from(&tmp.0, &s, "mnist", Split::Train, 9, 7);
+        // cifar10 has no IDX distribution: same dir, still synthetic.
+        let cifar = Manifest::builtin().for_dataset("cifar10").unwrap().clone();
+        let cds = load_or_synthetic_from(&tmp.0, &cifar, "cifar10", Split::Train, 4, 7).unwrap();
+        assert_eq!(ds.len(), 6);
+        assert_eq!(ds.labels, vec![0, 1, 2, 3, 4, 5]);
+        assert!(too_many.unwrap_err().to_string().contains("need 9"));
+        assert_eq!(cds.x, generate(&cifar, "cifar10", 4, 7).x);
+    }
+}

@@ -4,19 +4,23 @@
 //! compare *computations* under identical weights, which travel through
 //! the artifacts as explicit inputs.)
 
-use crate::model::ShapeSpec;
+use crate::model::{InitKind, ShapeSpec};
 use crate::tensor::Params;
 use crate::util::rng::Pcg;
 
-/// He-normal init for every parameter array of the model.
+/// Initialize every parameter array per the spec's declared [`InitKind`]:
+/// He-normal weights, zero biases, unit layernorm gains.  Only HeNormal
+/// consumes rng draws, so constant-init arrays (which is all the builtin
+/// model's rank-1 params are) leave the draw sequence — and with it the
+/// builtin init bytes — exactly as before the registry refactor.
 pub fn init_params(spec: &ShapeSpec, seed: u64) -> Params {
     let mut rng = Pcg::new(seed, 0x1417);
     spec.params
         .iter()
-        .map(|p| {
-            if p.shape.len() == 1 {
-                vec![0.0f32; p.size()]
-            } else {
+        .map(|p| match p.init {
+            InitKind::Zero => vec![0.0f32; p.size()],
+            InitKind::One => vec![1.0f32; p.size()],
+            InitKind::HeNormal => {
                 let fan_in: usize = p.shape[..p.shape.len() - 1].iter().product();
                 let std = (2.0 / fan_in as f64).sqrt();
                 (0..p.size()).map(|_| (rng.normal() * std) as f32).collect()
@@ -78,6 +82,21 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn layernorm_gains_init_to_one() {
+        let m = crate::model::registry::manifest("txf").unwrap();
+        let spec = m.for_dataset("mnist").unwrap();
+        let p = init_params(spec, 5);
+        let mut gains = 0;
+        for (buf, ps) in p.iter().zip(&spec.params) {
+            if ps.init == InitKind::One {
+                gains += 1;
+                assert!(buf.iter().all(|&x| x == 1.0), "{} not ones", ps.name);
+            }
+        }
+        assert_eq!(gains, 4, "two blocks x two layernorms");
     }
 
     #[test]

@@ -9,6 +9,8 @@
 //! task learnable, and the noise level keeps it non-trivial.  Shapes,
 //! class count and dataset sizes match the real datasets.
 
+#[cfg(feature = "mnist")]
+pub mod idx;
 pub mod init;
 pub mod partition;
 pub mod population;

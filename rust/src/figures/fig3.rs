@@ -1,9 +1,9 @@
 //! Figure 3 — convergence (test accuracy vs communication round) of
-//! SFL-GA at cuts v = 1..4, with traditional SFL as the benchmark, per
-//! dataset.  Validates Theorem 2 / Remark 1: smaller φ(v) converges better.
+//! SFL-GA at every cut of the model's menu, with traditional SFL as the
+//! benchmark, per dataset.  Validates Theorem 2 / Remark 1: smaller φ(v)
+//! converges better.
 
 use crate::coordinator::{RunMetrics, SchemeKind, TrainConfig, Trainer};
-use crate::model::NUM_CUTS;
 use crate::util::csvio::CsvWriter;
 
 use super::FigCtx;
@@ -15,10 +15,11 @@ pub fn run(ctx: &FigCtx) -> anyhow::Result<()> {
             ctx.out(&format!("fig3_{ds}.csv")),
             &["series", "round", "test_acc", "test_loss", "train_loss"],
         )?;
+        let menu = ctx.manifest.for_dataset(ds)?.menu();
         // SFL benchmark at the middle cut.
         let mut runs: Vec<(String, SchemeKind, usize)> =
-            vec![("sfl".into(), SchemeKind::Sfl, 2)];
-        for v in 1..=NUM_CUTS {
+            vec![("sfl".into(), SchemeKind::Sfl, (menu.len() / 2).max(1))];
+        for v in menu.ids() {
             runs.push((format!("sfl-ga-v{v}"), SchemeKind::SflGa, v));
         }
         for (series, scheme, cut) in runs {

@@ -18,7 +18,7 @@ use std::path::{Path, PathBuf};
 use sfl_ga::ccc::{self, CccConfig};
 use sfl_ga::coordinator::{AllocPolicy, RunMetrics, SchemeKind, TrainConfig, Trainer};
 use sfl_ga::figures::{self, FigCtx};
-use sfl_ga::model::Manifest;
+use sfl_ga::model::registry;
 use sfl_ga::util::cli::Args;
 use sfl_ga::util::logging;
 use sfl_ga::{info, privacy};
@@ -40,19 +40,26 @@ fn run() -> anyhow::Result<()> {
         Some("train") => cmd_train(&args, &results_dir, seed),
         Some("optimize") => cmd_optimize(&args, seed),
         Some("figures") => cmd_figures(&args, &results_dir, seed),
-        Some("info") | None => cmd_info(),
+        Some("info") | None => cmd_info(&args),
         Some(other) => anyhow::bail!("unknown subcommand '{other}' (train|optimize|figures|info)"),
     }
 }
 
 fn cmd_train(args: &Args, results_dir: &Path, seed: u64) -> anyhow::Result<()> {
-    let manifest = Manifest::builtin();
+    let model = args.model()?;
+    let manifest = registry::manifest(&model)?;
     let dataset = args.str_or("dataset", "mnist");
     let scheme = SchemeKind::parse(&args.str_or("scheme", "sfl-ga"))?;
     let cut = args.parse_or("cut", 2usize)?;
+    manifest
+        .for_dataset(&dataset)?
+        .menu()
+        .validate(cut)
+        .map_err(|e| anyhow::anyhow!("--cut: {e} (model '{model}')"))?;
     let scenario = args.scenario()?;
     let cfg = TrainConfig {
         dataset: dataset.clone(),
+        model: model.clone(),
         scheme,
         num_clients: args.parse_or("clients", 10usize)?,
         rounds: args.parse_or("rounds", 100usize)?,
@@ -72,7 +79,7 @@ fn cmd_train(args: &Args, results_dir: &Path, seed: u64) -> anyhow::Result<()> {
         ..Default::default()
     };
     info!(
-        "training {} on {dataset} [{}], cut v={cut}, {} rounds",
+        "training {} ({model}) on {dataset} [{}], cut v={cut}, {} rounds",
         scheme.name(),
         scenario.describe(),
         cfg.rounds
@@ -94,14 +101,15 @@ fn cmd_train(args: &Args, results_dir: &Path, seed: u64) -> anyhow::Result<()> {
             );
         }
     }
-    let out = results_dir.join(format!("train_{}_{}_v{}.csv", scheme.name(), dataset, cut));
+    let out = results_dir.join(format!("train_{}_{}_{}_v{}.csv", scheme.name(), model, dataset, cut));
     metrics.write_csv(&out)?;
     info!("wrote {}", out.display());
     Ok(())
 }
 
 fn cmd_optimize(args: &Args, seed: u64) -> anyhow::Result<()> {
-    let manifest = Manifest::builtin();
+    let model = args.model()?;
+    let manifest = registry::manifest(&model)?;
     let dataset = args.str_or("dataset", "mnist");
     let spec = manifest.for_dataset(&dataset)?.clone();
     let cfg = CccConfig {
@@ -114,7 +122,7 @@ fn cmd_optimize(args: &Args, seed: u64) -> anyhow::Result<()> {
     let clients = args.parse_or("clients", 10usize)?;
     let scenario = args.scenario()?;
     info!(
-        "Algorithm 1 on {dataset} [{}]: eps={}, {} episodes x {} steps, {clients} clients",
+        "Algorithm 1 ({model}) on {dataset} [{}]: eps={}, {} episodes x {} steps, {clients} clients",
         scenario.describe(),
         cfg.epsilon,
         cfg.episodes,
@@ -156,9 +164,10 @@ fn cmd_figures(args: &Args, results_dir: &Path, seed: u64) -> anyhow::Result<()>
     Ok(())
 }
 
-fn cmd_info() -> anyhow::Result<()> {
-    let manifest = Manifest::builtin();
-    println!("SFL-GA reproduction — manifest summary\n");
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let model = args.model()?;
+    let manifest = registry::manifest(&model)?;
+    println!("SFL-GA reproduction — manifest summary (model: {model})\n");
     for (ds, key) in &manifest.datasets {
         let spec = &manifest.shapes[key];
         println!(

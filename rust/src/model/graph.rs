@@ -1,0 +1,352 @@
+//! The declarative layer graph every architecture in the registry is
+//! specified as: a sequence of typed [`LayerSpec`]s with fully resolved
+//! geometry, from which [`build_shape`] derives everything the rest of
+//! the crate consumes — parameter tables, the per-architecture cut menu,
+//! φ(v), smashed shapes and the eq-14–16 FLOP workloads.
+//!
+//! A cut may be placed after any layer except the last (cut `v` puts
+//! layers `1..=v` on the client), so an `L`-layer graph has an `L-1`-cut
+//! menu.  The builtin CNN expressed through this graph is byte-identical
+//! to the hand-written spec it replaced: same parameter names, shapes
+//! and block ids, the same `(2·MACs) as f64` FLOP values summed in the
+//! same ascending-layer order, and the same artifact file names — which
+//! is why every JAX golden and checkpoint digest survives the refactor.
+
+use super::{CutSpec, InitKind, ParamSpec, ShapeSpec, CUT_ROLES};
+use std::collections::BTreeMap;
+
+/// One named layer of an architecture graph.  The name prefixes the
+/// layer's parameter names (`conv1` -> `conv1_w`, `conv1_b`).
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: String,
+    pub spec: LayerSpec,
+}
+
+impl Layer {
+    pub fn new(name: &str, spec: LayerSpec) -> Layer {
+        Layer { name: name.to_string(), spec }
+    }
+}
+
+/// Typed layer spec with resolved input geometry: every variant knows
+/// its own input shape, so param shapes, activation shapes and FLOPs are
+/// all local derivations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerSpec {
+    /// SAME conv `k`x`k` + relu on an `h`x`w`x`ic` input, optionally
+    /// followed by a 2x2 max-pool.
+    Conv { h: usize, w: usize, ic: usize, k: usize, oc: usize, pool: bool },
+    /// Dense `din -> dout`, relu unless it is the logits layer.
+    Dense { din: usize, dout: usize, relu: bool },
+    /// Non-overlapping `patch`x`patch` patch embedding of an `h`x`w`x`c`
+    /// image into `(h/patch)·(w/patch)` tokens of width `dm`.
+    Embed { h: usize, w: usize, c: usize, patch: usize, dm: usize },
+    /// Pre-LN transformer block on `[tokens, dm]` activations:
+    /// x + MHSA(LN(x)) then + MLP(LN(·)) with a GELU hidden of `dff`.
+    TxfBlock { tokens: usize, dm: usize, heads: usize, dff: usize },
+}
+
+impl LayerSpec {
+    /// Input elements per sample.
+    pub fn in_elems(&self) -> usize {
+        match *self {
+            LayerSpec::Conv { h, w, ic, .. } => h * w * ic,
+            LayerSpec::Dense { din, .. } => din,
+            LayerSpec::Embed { h, w, c, .. } => h * w * c,
+            LayerSpec::TxfBlock { tokens, dm, .. } => tokens * dm,
+        }
+    }
+
+    /// Output activation shape per sample (no batch dim) — the smashed
+    /// shape when the cut sits after this layer.
+    pub fn out_shape(&self) -> Vec<usize> {
+        match *self {
+            LayerSpec::Conv { h, w, oc, pool, .. } => {
+                if pool {
+                    vec![h / 2, w / 2, oc]
+                } else {
+                    vec![h, w, oc]
+                }
+            }
+            LayerSpec::Dense { dout, .. } => vec![dout],
+            LayerSpec::Embed { h, w, patch, dm, .. } => vec![(h / patch) * (w / patch), dm],
+            LayerSpec::TxfBlock { tokens, dm, .. } => vec![tokens, dm],
+        }
+    }
+
+    /// Output elements per sample.
+    pub fn out_elems(&self) -> usize {
+        self.out_shape().iter().product()
+    }
+
+    /// Number of parameter arrays this layer owns.
+    pub fn num_params(&self) -> usize {
+        match self {
+            LayerSpec::TxfBlock { .. } => 16,
+            _ => 2,
+        }
+    }
+
+    /// The layer's parameter table (manifest order), named `{name}_*` and
+    /// assigned to `block`.
+    pub fn param_specs(&self, name: &str, block: usize) -> Vec<ParamSpec> {
+        let p = |suffix: &str, shape: Vec<usize>, init: InitKind| ParamSpec {
+            name: format!("{name}_{suffix}"),
+            shape,
+            block,
+            init,
+        };
+        match *self {
+            LayerSpec::Conv { ic, k, oc, .. } => vec![
+                p("w", vec![k, k, ic, oc], InitKind::HeNormal),
+                p("b", vec![oc], InitKind::Zero),
+            ],
+            LayerSpec::Dense { din, dout, .. } => vec![
+                p("w", vec![din, dout], InitKind::HeNormal),
+                p("b", vec![dout], InitKind::Zero),
+            ],
+            LayerSpec::Embed { c, patch, dm, .. } => vec![
+                p("w", vec![patch * patch * c, dm], InitKind::HeNormal),
+                p("b", vec![dm], InitKind::Zero),
+            ],
+            LayerSpec::TxfBlock { dm, dff, .. } => vec![
+                p("ln1_g", vec![dm], InitKind::One),
+                p("ln1_b", vec![dm], InitKind::Zero),
+                p("wq", vec![dm, dm], InitKind::HeNormal),
+                p("bq", vec![dm], InitKind::Zero),
+                p("wk", vec![dm, dm], InitKind::HeNormal),
+                p("bk", vec![dm], InitKind::Zero),
+                p("wv", vec![dm, dm], InitKind::HeNormal),
+                p("bv", vec![dm], InitKind::Zero),
+                p("wo", vec![dm, dm], InitKind::HeNormal),
+                p("bo", vec![dm], InitKind::Zero),
+                p("ln2_g", vec![dm], InitKind::One),
+                p("ln2_b", vec![dm], InitKind::Zero),
+                p("w1", vec![dm, dff], InitKind::HeNormal),
+                p("b1", vec![dff], InitKind::Zero),
+                p("w2", vec![dff, dm], InitKind::HeNormal),
+                p("b2", vec![dm], InitKind::Zero),
+            ],
+        }
+    }
+
+    /// Per-sample forward FLOPs (2 per multiply-add), as an exact integer
+    /// cast to f64 — the γ workloads of eqs 14–16.
+    pub fn fwd_flops(&self) -> f64 {
+        match *self {
+            LayerSpec::Conv { h, w, ic, k, oc, .. } => (2 * k * k * ic * oc * h * w) as f64,
+            LayerSpec::Dense { din, dout, .. } => (2 * din * dout) as f64,
+            LayerSpec::Embed { h, w, c, patch, dm } => {
+                let t = (h / patch) * (w / patch);
+                (2 * t * patch * patch * c * dm) as f64
+            }
+            LayerSpec::TxfBlock { tokens, dm, dff, .. } => {
+                let qkvo = 4 * 2 * tokens * dm * dm; // the four dm x dm projections
+                let attn = 2 * 2 * tokens * tokens * dm; // scores QKᵀ + weighted sum PV
+                let mlp = 2 * (2 * tokens * dm * dff); // two dense layers
+                let ln = 2 * 8 * tokens * dm; // two layernorms
+                (qkvo + attn + mlp + ln) as f64
+            }
+        }
+    }
+}
+
+/// Build a [`ShapeSpec`] from a layer graph: parameter table in layer
+/// order (layer `i` is block `i+1`), cut menu `1..=L-1`, φ/smashed/FLOP
+/// tables derived per cut, and the standard artifact naming scheme.
+pub fn build_shape(
+    key: &str,
+    input_shape: Vec<usize>,
+    classes: usize,
+    layers: Vec<Layer>,
+    train_batch: usize,
+    eval_batch: usize,
+) -> ShapeSpec {
+    assert!(layers.len() >= 2, "{key}: a graph needs at least two layers to have a cut");
+    assert_eq!(
+        layers[0].spec.in_elems(),
+        input_shape.iter().product::<usize>(),
+        "{key}: first layer does not accept the input shape"
+    );
+    for pair in layers.windows(2) {
+        assert_eq!(
+            pair[0].spec.out_elems(),
+            pair[1].spec.in_elems(),
+            "{key}: {} -> {} activation mismatch",
+            pair[0].name,
+            pair[1].name
+        );
+    }
+    let mut params = Vec::new();
+    for (i, layer) in layers.iter().enumerate() {
+        params.extend(layer.spec.param_specs(&layer.name, i + 1));
+    }
+    let fwd: Vec<f64> = layers.iter().map(|l| l.spec.fwd_flops()).collect();
+    let num_cuts = layers.len() - 1;
+    let mut cuts = Vec::with_capacity(num_cuts);
+    for v in 1..=num_cuts {
+        let mut artifacts = BTreeMap::new();
+        for role in CUT_ROLES {
+            artifacts.insert(role.to_string(), format!("{key}_v{v}_{role}.hlo.txt"));
+        }
+        let mut smashed_shape = vec![train_batch];
+        smashed_shape.extend(layers[v - 1].spec.out_shape());
+        cuts.push(CutSpec {
+            cut: v,
+            phi: params.iter().filter(|p| p.block <= v).map(ParamSpec::size).sum(),
+            client_params: params.iter().filter(|p| p.block <= v).count(),
+            smashed_shape,
+            flops_client_fwd: fwd[..v].iter().sum(),
+            flops_client_bwd: 2.0 * fwd[..v].iter().sum::<f64>(),
+            flops_server_fwd: fwd[v..].iter().sum(),
+            flops_server_bwd: 2.0 * fwd[v..].iter().sum::<f64>(),
+            artifacts,
+        });
+    }
+    let mut artifacts = BTreeMap::new();
+    for role in ["full_grad", "eval"] {
+        artifacts.insert(role.to_string(), format!("{key}_{role}.hlo.txt"));
+    }
+    ShapeSpec {
+        key: key.to_string(),
+        input_shape,
+        classes,
+        train_batch,
+        eval_batch,
+        total_params: params.iter().map(ParamSpec::size).sum(),
+        params,
+        layers,
+        cuts,
+        artifacts,
+    }
+}
+
+/// Recover a conv/dense layer graph from a parameter table — the
+/// derivation the native backend used to do itself, kept for manifests
+/// parsed from JSON (the AOT path has no explicit graph).  Errors when
+/// the params are not (weight, bias) pairs chaining through the input
+/// geometry; callers treat that as "no executable graph" (privacy/
+/// latency-only toy specs).
+pub fn layers_from_params(
+    input_shape: &[usize],
+    params: &[ParamSpec],
+) -> anyhow::Result<Vec<Layer>> {
+    anyhow::ensure!(input_shape.len() == 3, "expected [h, w, c] inputs, got {input_shape:?}");
+    anyhow::ensure!(
+        !params.is_empty() && params.len() % 2 == 0,
+        "expected (weight, bias) parameter pairs"
+    );
+    let n_blocks = params.len() / 2;
+    let (mut h, mut w, mut c) = (input_shape[0], input_shape[1], input_shape[2]);
+    let mut layers = Vec::with_capacity(n_blocks);
+    for bi in 0..n_blocks {
+        let wshape = &params[2 * bi].shape;
+        let bshape = &params[2 * bi + 1].shape;
+        let wname = &params[2 * bi].name;
+        let name = wname.trim_end_matches("_w");
+        anyhow::ensure!(bshape.len() == 1, "{wname}: bias must be rank 1");
+        match wshape.len() {
+            4 => {
+                let k = wshape[0];
+                let oc = wshape[3];
+                anyhow::ensure!(wshape[1] == k && k % 2 == 1, "{wname}: bad kernel");
+                anyhow::ensure!(wshape[2] == c, "{wname}: in-channels {} != {c}", wshape[2]);
+                anyhow::ensure!(bshape[0] == oc, "{wname}: bias/filters mismatch");
+                anyhow::ensure!(h % 2 == 0 && w % 2 == 0, "{wname}: pool needs even h/w");
+                layers.push(Layer::new(name, LayerSpec::Conv { h, w, ic: c, k, oc, pool: true }));
+                h /= 2;
+                w /= 2;
+                c = oc;
+            }
+            2 => {
+                let (din, dout) = (wshape[0], wshape[1]);
+                anyhow::ensure!(
+                    din == h * w * c,
+                    "{wname}: dense fan-in {din} != upstream {}",
+                    h * w * c
+                );
+                anyhow::ensure!(bshape[0] == dout, "{wname}: bias/out mismatch");
+                layers.push(Layer::new(
+                    name,
+                    LayerSpec::Dense { din, dout, relu: bi + 1 < n_blocks },
+                ));
+                h = 1;
+                w = 1;
+                c = dout;
+            }
+            r => anyhow::bail!("{wname}: unsupported weight rank {r}"),
+        }
+    }
+    Ok(layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> Vec<Layer> {
+        vec![
+            Layer::new("conv1", LayerSpec::Conv { h: 8, w: 8, ic: 1, k: 3, oc: 4, pool: true }),
+            Layer::new("fc1", LayerSpec::Dense { din: 4 * 4 * 4, dout: 6, relu: true }),
+            Layer::new("fc2", LayerSpec::Dense { din: 6, dout: 3, relu: false }),
+        ]
+    }
+
+    #[test]
+    fn menu_has_one_cut_per_non_final_layer() {
+        let spec = build_shape("t", vec![8, 8, 1], 3, tiny_graph(), 2, 4);
+        assert_eq!(spec.cuts.len(), 2);
+        assert_eq!(spec.menu().len(), 2);
+        assert_eq!(spec.cut(1).smashed_shape, vec![2, 4, 4, 4]);
+        assert_eq!(spec.cut(2).smashed_shape, vec![2, 6]);
+    }
+
+    #[test]
+    fn phi_counts_client_prefix() {
+        let spec = build_shape("t", vec![8, 8, 1], 3, tiny_graph(), 2, 4);
+        assert_eq!(spec.cut(1).phi, 3 * 3 * 1 * 4 + 4);
+        assert_eq!(spec.cut(1).client_params, 2);
+        assert_eq!(spec.cut(2).client_params, 4);
+        assert_eq!(spec.total_params, 40 + 64 * 6 + 6 + 6 * 3 + 3);
+    }
+
+    #[test]
+    fn flops_split_conserves_total() {
+        let spec = build_shape("t", vec![8, 8, 1], 3, tiny_graph(), 2, 4);
+        let t0 = spec.cuts[0].flops_client_fwd + spec.cuts[0].flops_server_fwd;
+        for c in &spec.cuts {
+            assert_eq!(c.flops_client_fwd + c.flops_server_fwd, t0);
+            assert_eq!(c.flops_client_bwd, 2.0 * c.flops_client_fwd);
+        }
+    }
+
+    #[test]
+    fn txf_block_owns_sixteen_params_with_unit_gammas() {
+        let blk = LayerSpec::TxfBlock { tokens: 9, dm: 8, heads: 2, dff: 16 };
+        let ps = blk.param_specs("blk1", 2);
+        assert_eq!(ps.len(), 16);
+        assert_eq!(ps[0].name, "blk1_ln1_g");
+        assert_eq!(ps[0].init, InitKind::One);
+        assert_eq!(ps[2].shape, vec![8, 8]);
+        assert_eq!(blk.in_elems(), blk.out_elems());
+    }
+
+    #[test]
+    fn layers_recovered_from_params_match_the_graph() {
+        let spec = build_shape("t", vec![8, 8, 1], 3, tiny_graph(), 2, 4);
+        let rec = layers_from_params(&spec.input_shape, &spec.params).unwrap();
+        assert_eq!(rec.len(), 3);
+        assert_eq!(rec[0].spec, spec.layers[0].spec);
+        assert_eq!(rec[2].spec, LayerSpec::Dense { din: 6, dout: 3, relu: false });
+    }
+
+    #[test]
+    fn mismatched_chain_panics() {
+        let bad = vec![
+            Layer::new("fc1", LayerSpec::Dense { din: 4, dout: 5, relu: true }),
+            Layer::new("fc2", LayerSpec::Dense { din: 6, dout: 3, relu: false }),
+        ];
+        assert!(std::panic::catch_unwind(|| build_shape("t", vec![4], 3, bad, 2, 4)).is_err());
+    }
+}

@@ -1,31 +1,98 @@
 //! Rust mirror of the L2 manifest: model architecture metadata.
 //!
-//! Two sources produce the same typed specs:
+//! Three sources produce the same typed specs:
 //!
+//! * [`registry::manifest`] — the model zoo (DESIGN.md §Model registry):
+//!   named architectures, each declared as a [`graph::Layer`] sequence
+//!   from which the parameter table, per-architecture [`CutMenu`],
+//!   φ(v), smashed shapes and FLOP workloads are all derived.
 //! * [`Manifest::builtin`] — the paper's split-CNN architecture
-//!   (`python/compile/layers.py`) expressed directly in Rust, so a clean
-//!   checkout needs no artifacts to run the native backend.
+//!   (`python/compile/layers.py`) expressed through the same graph, so a
+//!   clean checkout needs no artifacts to run the native backend.
 //! * [`Manifest::load`] — parses `artifacts/manifest.json` (written by
 //!   `python/compile/aot.py`) for the PJRT/AOT path.
 //!
 //! The specs feed the runtime (buffer shapes), the latency model (γ
 //! workloads of eqs 14–16) and the privacy model (φ(v)/q of eq 17).
+//! There is no crate-wide cut-count constant: every `ShapeSpec` carries
+//! its own menu (`menu()`), and all cut validation funnels through
+//! [`CutMenu::validate`].
 
 use std::collections::BTreeMap;
+use std::ops::RangeInclusive;
 use std::path::Path;
 
 use crate::util::json::Json;
 
-pub const NUM_CUTS: usize = 4;
+pub mod graph;
+pub mod registry;
+
+pub use graph::{Layer, LayerSpec};
 
 /// Roles compiled per cut; global roles are `full_grad` and `eval`.
 pub const CUT_ROLES: [&str; 3] = ["client_fwd", "server_grad", "client_grad"];
+
+/// The set of valid cut ids for one architecture: `1..=len`, where cut
+/// `v` places layers `1..=v` on the client.  This is the single shared
+/// validation helper — CLI parsing, `NetTrainer::run_round` and the
+/// protocol nodes all call [`CutMenu::validate`] so an out-of-menu cut
+/// is one error path, not three.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CutMenu {
+    len: usize,
+}
+
+impl CutMenu {
+    pub fn new(len: usize) -> CutMenu {
+        CutMenu { len }
+    }
+
+    /// Number of cuts in the menu.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// All valid cut ids, ascending.
+    pub fn ids(&self) -> RangeInclusive<usize> {
+        1..=self.len
+    }
+
+    pub fn contains(&self, v: usize) -> bool {
+        (1..=self.len).contains(&v)
+    }
+
+    /// Validate a cut id against the menu, returning it on success.
+    pub fn validate(&self, v: usize) -> anyhow::Result<usize> {
+        anyhow::ensure!(
+            self.contains(v),
+            "cut {v} outside the model's menu 1..={}",
+            self.len
+        );
+        Ok(v)
+    }
+}
+
+/// How a parameter array is initialised (`data/init.rs`).  Weights draw
+/// He-normal values; biases are zeros and layernorm gains are ones —
+/// neither consumes RNG draws, which keeps the builtin CNN's init
+/// stream byte-identical to the pre-registry code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitKind {
+    HeNormal,
+    Zero,
+    One,
+}
 
 #[derive(Clone, Debug)]
 pub struct ParamSpec {
     pub name: String,
     pub shape: Vec<usize>,
     pub block: usize,
+    pub init: InitKind,
 }
 
 impl ParamSpec {
@@ -68,14 +135,29 @@ pub struct ShapeSpec {
     pub eval_batch: usize,
     pub total_params: usize,
     pub params: Vec<ParamSpec>,
+    /// The declarative layer graph (empty for manifest-only specs whose
+    /// parameter table does not describe an executable conv/dense chain
+    /// — those still drive the latency/privacy models, but the native
+    /// backend rejects them).
+    pub layers: Vec<Layer>,
     pub cuts: Vec<CutSpec>,
     /// Global artifacts: full_grad, eval.
     pub artifacts: BTreeMap<String, String>,
 }
 
 impl ShapeSpec {
+    /// This architecture's cut menu.
+    pub fn menu(&self) -> CutMenu {
+        CutMenu::new(self.cuts.len())
+    }
+
+    /// Menu length — the number of valid cut points.
+    pub fn num_cuts(&self) -> usize {
+        self.cuts.len()
+    }
+
     pub fn cut(&self, v: usize) -> &CutSpec {
-        assert!((1..=NUM_CUTS).contains(&v), "cut {v} out of range");
+        assert!(self.menu().contains(v), "cut {v} outside menu 1..={}", self.cuts.len());
         &self.cuts[v - 1]
     }
 
@@ -105,7 +187,8 @@ pub struct Manifest {
 
 /// Architecture constants of the paper's split CNN (§V-A, [33] plus one
 /// fc128 block so every cut moves parameters) — mirrors
-/// `python/compile/layers.py::ModelSpec`.
+/// `python/compile/layers.py::ModelSpec`.  `TRAIN_BATCH`/`EVAL_BATCH`
+/// double as the registry-wide batch defaults.
 mod arch {
     pub const KERNEL: usize = 5;
     pub const CONV1: usize = 32;
@@ -117,77 +200,25 @@ mod arch {
     pub const EVAL_BATCH: usize = 256;
 }
 
-/// Build one shape key's spec from the architecture constants.
+/// Build one shape key's spec from the architecture constants, routed
+/// through the layer graph.  The graph emits the same parameter names,
+/// blocks, FLOP products (summed in the same ascending order) and
+/// artifact names as the pre-registry hand-written code — builtin specs
+/// are byte-identical, so JAX goldens and run digests stand.
 fn builtin_shape(key: &str, h: usize, w: usize, c: usize, tb: usize, eb: usize) -> ShapeSpec {
     use arch::{CLASSES, CONV1, CONV2, FC1, FC2, KERNEL};
     let flat = (h / 4) * (w / 4) * CONV2;
-    let param = |name: &str, shape: Vec<usize>, block: usize| ParamSpec {
-        name: name.to_string(),
-        shape,
-        block,
-    };
-    let params = vec![
-        param("conv1_w", vec![KERNEL, KERNEL, c, CONV1], 1),
-        param("conv1_b", vec![CONV1], 1),
-        param("conv2_w", vec![KERNEL, KERNEL, CONV1, CONV2], 2),
-        param("conv2_b", vec![CONV2], 2),
-        param("fc1_w", vec![flat, FC1], 3),
-        param("fc1_b", vec![FC1], 3),
-        param("fc2_w", vec![FC1, FC2], 4),
-        param("fc2_b", vec![FC2], 4),
-        param("fc3_w", vec![FC2, CLASSES], 5),
-        param("fc3_b", vec![CLASSES], 5),
+    let layers = vec![
+        Layer::new("conv1", LayerSpec::Conv { h, w, ic: c, k: KERNEL, oc: CONV1, pool: true }),
+        Layer::new(
+            "conv2",
+            LayerSpec::Conv { h: h / 2, w: w / 2, ic: CONV1, k: KERNEL, oc: CONV2, pool: true },
+        ),
+        Layer::new("fc1", LayerSpec::Dense { din: flat, dout: FC1, relu: true }),
+        Layer::new("fc2", LayerSpec::Dense { din: FC1, dout: FC2, relu: true }),
+        Layer::new("fc3", LayerSpec::Dense { din: FC2, dout: CLASSES, relu: false }),
     ];
-    // Per-sample forward FLOPs per block (2·MACs); backward ≈ 2x forward.
-    let kk = KERNEL * KERNEL;
-    let fwd: [f64; 5] = [
-        (2 * kk * c * CONV1 * h * w) as f64,
-        (2 * kk * CONV1 * CONV2 * (h / 2) * (w / 2)) as f64,
-        (2 * flat * FC1) as f64,
-        (2 * FC1 * FC2) as f64,
-        (2 * FC2 * CLASSES) as f64,
-    ];
-    let smashed = |cut: usize| -> Vec<usize> {
-        match cut {
-            1 => vec![tb, h / 2, w / 2, CONV1],
-            2 => vec![tb, h / 4, w / 4, CONV2],
-            3 => vec![tb, FC1],
-            _ => vec![tb, FC2],
-        }
-    };
-    let mut cuts = Vec::with_capacity(NUM_CUTS);
-    for v in 1..=NUM_CUTS {
-        let mut artifacts = BTreeMap::new();
-        for role in CUT_ROLES {
-            artifacts.insert(role.to_string(), format!("{key}_v{v}_{role}.hlo.txt"));
-        }
-        cuts.push(CutSpec {
-            cut: v,
-            phi: params.iter().filter(|p| p.block <= v).map(ParamSpec::size).sum(),
-            client_params: params.iter().filter(|p| p.block <= v).count(),
-            smashed_shape: smashed(v),
-            flops_client_fwd: fwd[..v].iter().sum(),
-            flops_client_bwd: 2.0 * fwd[..v].iter().sum::<f64>(),
-            flops_server_fwd: fwd[v..].iter().sum(),
-            flops_server_bwd: 2.0 * fwd[v..].iter().sum::<f64>(),
-            artifacts,
-        });
-    }
-    let mut artifacts = BTreeMap::new();
-    for role in ["full_grad", "eval"] {
-        artifacts.insert(role.to_string(), format!("{key}_{role}.hlo.txt"));
-    }
-    ShapeSpec {
-        key: key.to_string(),
-        input_shape: vec![h, w, c],
-        classes: CLASSES,
-        train_batch: tb,
-        eval_batch: eb,
-        total_params: params.iter().map(ParamSpec::size).sum(),
-        params,
-        cuts,
-        artifacts,
-    }
+    graph::build_shape(key, vec![h, w, c], CLASSES, layers, tb, eb)
 }
 
 impl Manifest {
@@ -264,17 +295,28 @@ fn parse_shape(
         .as_arr()?
         .iter()
         .map(|p| {
+            let shape = p.at(&["shape"])?.usize_array()?;
             Ok(ParamSpec {
                 name: p.at(&["name"])?.as_str()?.to_string(),
-                shape: p.at(&["shape"])?.usize_array()?,
+                // Manifest JSON carries no init kind; rank 1 arrays are
+                // biases (zeros), everything else is a He-normal weight
+                // — exactly the rule `data/init.rs` always applied.
+                init: if shape.len() == 1 { InitKind::Zero } else { InitKind::HeNormal },
+                shape,
                 block: p.at(&["block"])?.as_usize()?,
             })
         })
         .collect::<anyhow::Result<Vec<_>>>()?;
 
-    let mut cuts = Vec::new();
-    for v in 1..=NUM_CUTS {
-        let cj = json.at(&["cuts", &v.to_string()])?;
+    // The menu length is whatever the manifest declares: cut ids must be
+    // a dense "1".."N" key set.
+    let num_cuts = json.at(&["cuts"])?.as_obj()?.len();
+    anyhow::ensure!(num_cuts >= 1, "{key}: empty cut menu");
+    let mut cuts = Vec::with_capacity(num_cuts);
+    for v in 1..=num_cuts {
+        let cj = json
+            .at(&["cuts", &v.to_string()])
+            .map_err(|e| anyhow::anyhow!("{key}: cut ids must be dense 1..={num_cuts}: {e}"))?;
         let mut artifacts = BTreeMap::new();
         for (role, f) in cj.at(&["artifacts"])?.as_obj()? {
             artifacts.insert(role.clone(), f.as_str()?.to_string());
@@ -303,14 +345,22 @@ fn parse_shape(
         anyhow::ensure!(artifacts.contains_key(role), "{key} missing global role {role}");
     }
 
+    let input_shape = json.at(&["input_shape"])?.usize_array()?;
+    // Best-effort graph recovery: a manifest whose params are (w, b)
+    // pairs chaining through the input geometry gets an executable layer
+    // graph; anything else (latency/privacy-only toy specs) gets an
+    // empty one and is rejected by the native backend only.
+    let layers = graph::layers_from_params(&input_shape, &params).unwrap_or_default();
+
     let spec = ShapeSpec {
         key: key.to_string(),
-        input_shape: json.at(&["input_shape"])?.usize_array()?,
+        input_shape,
         classes: json.at(&["classes"])?.as_usize()?,
         train_batch,
         eval_batch,
         total_params: json.at(&["total_params"])?.as_usize()?,
         params,
+        layers,
         cuts,
         artifacts,
     };
@@ -369,6 +419,10 @@ mod tests {
         assert_eq!(spec.cut(1).smashed_per_sample(), 3);
         assert_eq!(spec.phi_fraction(1), 8.0 / 12.0);
         assert_eq!(spec.param_shapes(), vec![vec![2, 4], vec![4]]);
+        // The menu length comes from the manifest, not a constant.
+        assert_eq!(spec.menu().len(), 4);
+        // No executable conv/dense chain behind these params.
+        assert!(spec.layers.is_empty());
     }
 
     #[test]
@@ -379,10 +433,32 @@ mod tests {
     }
 
     #[test]
+    fn rejects_sparse_cut_ids() {
+        let text = toy_manifest_json().replace(r#""4": "#, r#""7": "#);
+        let json = Json::parse(&text).unwrap();
+        let err = Manifest::from_json(&json).unwrap_err().to_string();
+        assert!(err.contains("dense"), "{err}");
+    }
+
+    #[test]
     fn unknown_dataset_is_error() {
         let json = Json::parse(&toy_manifest_json()).unwrap();
         let m = Manifest::from_json(&json).unwrap();
         assert!(m.for_dataset("nope").is_err());
+    }
+
+    #[test]
+    fn cut_menu_validates() {
+        let menu = CutMenu::new(4);
+        assert_eq!(menu.len(), 4);
+        assert!(!menu.is_empty());
+        assert_eq!(menu.ids().collect::<Vec<_>>(), vec![1, 2, 3, 4]);
+        assert!(menu.contains(1) && menu.contains(4));
+        assert!(!menu.contains(0) && !menu.contains(5));
+        assert_eq!(menu.validate(3).unwrap(), 3);
+        let err = menu.validate(5).unwrap_err().to_string();
+        assert!(err.contains("menu 1..=4"), "{err}");
+        assert!(menu.validate(0).is_err());
     }
 
     #[test]
@@ -392,7 +468,10 @@ mod tests {
         assert_eq!(m.eval_batch, 256);
         for ds in ["mnist", "fmnist", "cifar10"] {
             let spec = m.for_dataset(ds).unwrap();
-            assert_eq!(spec.cuts.len(), NUM_CUTS);
+            assert_eq!(spec.cuts.len(), 4);
+            assert_eq!(spec.menu(), CutMenu::new(4));
+            // Five layers behind the four cuts.
+            assert_eq!(spec.layers.len(), 5);
             // φ(v) monotone non-decreasing (paper's Assumption 4 premise).
             for w in spec.cuts.windows(2) {
                 assert!(w[0].phi <= w[1].phi);
@@ -429,6 +508,13 @@ mod tests {
         assert_eq!(spec.cut(4).smashed_shape, vec![32, 128]);
         assert_eq!(spec.cut(4).client_params, 8);
         assert_eq!(spec.input_per_sample(), 784);
+        // The graph route preserves the hand-written parameter table.
+        assert_eq!(spec.params[0].name, "conv1_w");
+        assert_eq!(spec.params[0].init, InitKind::HeNormal);
+        assert_eq!(spec.params[9].name, "fc3_b");
+        assert_eq!(spec.params[9].init, InitKind::Zero);
+        assert_eq!(spec.cut(1).artifacts["client_fwd"], "28x28x1_v1_client_fwd.hlo.txt");
+        assert_eq!(spec.artifacts["eval"], "28x28x1_eval.hlo.txt");
     }
 
     #[test]

@@ -1,0 +1,193 @@
+//! The model registry: named architectures, each a declarative layer
+//! graph (DESIGN.md §Model registry).  Every architecture is built for
+//! the same two input geometries the builtin CNN supports — 28x28x1
+//! (mnist/fmnist) and 32x32x3 (cifar10) — so `Manifest::for_dataset`
+//! works uniformly across the zoo.
+//!
+//! | model     | layers                                   | cuts |
+//! |-----------|------------------------------------------|------|
+//! | `builtin` | conv5x5 ->x2 + 3 dense (hand-written twin) | 4    |
+//! | `vgg`     | 10 conv3x3 (2 pools) + 2 dense           | 11   |
+//! | `txf`     | patch-embed + 2 transformer blocks + head | 3    |
+//!
+//! `builtin` routes through [`Manifest::builtin_with_batches`], which
+//! builds the same graph — byte-identical params/FLOPs/artifacts to the
+//! pre-registry hand-written spec, so JAX goldens and run digests stand.
+
+use super::graph::{build_shape, Layer, LayerSpec};
+use super::{arch, Manifest, ShapeSpec};
+use std::collections::BTreeMap;
+
+/// Names accepted by `--model` / `RunSetup::model`, in display order.
+pub const MODELS: [&str; 3] = ["builtin", "vgg", "txf"];
+
+/// Look up an architecture by name with the default batch geometry.
+pub fn manifest(name: &str) -> anyhow::Result<Manifest> {
+    manifest_with_batches(name, arch::TRAIN_BATCH, arch::EVAL_BATCH)
+}
+
+/// Look up an architecture by name with explicit train/eval batch sizes.
+pub fn manifest_with_batches(
+    name: &str,
+    train_batch: usize,
+    eval_batch: usize,
+) -> anyhow::Result<Manifest> {
+    match name {
+        "builtin" => Ok(Manifest::builtin_with_batches(train_batch, eval_batch)),
+        "vgg" => Ok(zoo_manifest("vgg", vgg_layers, train_batch, eval_batch)),
+        "txf" => Ok(zoo_manifest("txf", txf_layers, train_batch, eval_batch)),
+        other => anyhow::bail!(
+            "unknown model '{other}' (available: {})",
+            MODELS.join(", ")
+        ),
+    }
+}
+
+/// Assemble a two-geometry manifest for one zoo architecture, mirroring
+/// the builtin's dataset->shape routing.
+fn zoo_manifest(
+    name: &str,
+    layers: fn(usize, usize, usize, usize) -> Vec<Layer>,
+    train_batch: usize,
+    eval_batch: usize,
+) -> Manifest {
+    let mut shapes = BTreeMap::new();
+    let mut datasets = BTreeMap::new();
+    for (h, w, c) in [(28, 28, 1), (32, 32, 3)] {
+        let key = format!("{name}-{h}x{w}x{c}");
+        let spec: ShapeSpec = build_shape(
+            &key,
+            vec![h, w, c],
+            arch::CLASSES,
+            layers(h, w, c, arch::CLASSES),
+            train_batch,
+            eval_batch,
+        );
+        shapes.insert(key, spec);
+    }
+    for ds in ["mnist", "fmnist"] {
+        datasets.insert(ds.to_string(), format!("{name}-28x28x1"));
+    }
+    datasets.insert("cifar10".to_string(), format!("{name}-32x32x3"));
+    Manifest { train_batch, eval_batch, shapes, datasets }
+}
+
+/// VGG-ish deep CNN: ten 3x3 convs in a rising channel plan with pools
+/// after conv2 and conv4 (28 -> 14 -> 7, or 32 -> 16 -> 8), then a
+/// 64-wide dense and the logits layer.  12 layers = an 11-cut menu, and
+/// small enough (~8.5 MFLOPs/sample fwd at 28x28) that debug-mode CI
+/// exercises every cut.
+fn vgg_layers(h: usize, w: usize, c: usize, classes: usize) -> Vec<Layer> {
+    // (out-channels, pool-after) per conv layer.
+    const PLAN: [(usize, bool); 10] = [
+        (8, false),
+        (8, true),
+        (16, false),
+        (16, true),
+        (24, false),
+        (24, false),
+        (32, false),
+        (32, false),
+        (48, false),
+        (48, false),
+    ];
+    let (mut ch, mut cw, mut cc) = (h, w, c);
+    let mut layers = Vec::with_capacity(PLAN.len() + 2);
+    for (i, &(oc, pool)) in PLAN.iter().enumerate() {
+        layers.push(Layer::new(
+            &format!("conv{}", i + 1),
+            LayerSpec::Conv { h: ch, w: cw, ic: cc, k: 3, oc, pool },
+        ));
+        if pool {
+            ch /= 2;
+            cw /= 2;
+        }
+        cc = oc;
+    }
+    let flat = ch * cw * cc;
+    layers.push(Layer::new("fc1", LayerSpec::Dense { din: flat, dout: 64, relu: true }));
+    layers.push(Layer::new("fc2", LayerSpec::Dense { din: 64, dout: classes, relu: false }));
+    layers
+}
+
+/// Tiny transformer-block stack: non-overlapping 4x4 patch embedding
+/// into dm=32 tokens, two pre-LN blocks (2 heads, dff=64), and a dense
+/// head over the flattened tokens.  Cuts sit at block boundaries:
+/// after embed (v=1), after block 1 (v=2), after block 2 (v=3).
+fn txf_layers(h: usize, w: usize, c: usize, classes: usize) -> Vec<Layer> {
+    const PATCH: usize = 4;
+    const DM: usize = 32;
+    const HEADS: usize = 2;
+    const DFF: usize = 64;
+    assert!(h % PATCH == 0 && w % PATCH == 0, "input not patch-divisible");
+    let tokens = (h / PATCH) * (w / PATCH);
+    vec![
+        Layer::new("embed", LayerSpec::Embed { h, w, c, patch: PATCH, dm: DM }),
+        Layer::new("blk1", LayerSpec::TxfBlock { tokens, dm: DM, heads: HEADS, dff: DFF }),
+        Layer::new("blk2", LayerSpec::TxfBlock { tokens, dm: DM, heads: HEADS, dff: DFF }),
+        Layer::new("head", LayerSpec::Dense { din: tokens * DM, dout: classes, relu: false }),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_round_trips_through_the_registry() {
+        let reg = manifest("builtin").unwrap();
+        let hand = Manifest::builtin();
+        assert_eq!(reg.datasets, hand.datasets);
+        let (a, b) = (reg.for_dataset("mnist").unwrap(), hand.for_dataset("mnist").unwrap());
+        assert_eq!(a.total_params, b.total_params);
+        assert_eq!(a.cuts.len(), b.cuts.len());
+        assert_eq!(a.artifacts, b.artifacts);
+    }
+
+    #[test]
+    fn vgg_has_a_deep_menu() {
+        let m = manifest("vgg").unwrap();
+        let spec = m.for_dataset("mnist").unwrap();
+        assert_eq!(spec.layers.len(), 12);
+        assert_eq!(spec.menu().len(), 11);
+        assert_eq!(spec.cut(1).smashed_shape, vec![arch::TRAIN_BATCH, 28, 28, 8]);
+        assert_eq!(spec.cut(2).smashed_shape, vec![arch::TRAIN_BATCH, 14, 14, 8]);
+        // fc1 fan-in chains from the last conv through both pools.
+        assert_eq!(spec.cut(11).smashed_shape, vec![arch::TRAIN_BATCH, 64]);
+        let cifar = m.for_dataset("cifar10").unwrap();
+        assert_eq!(cifar.cut(4).smashed_shape, vec![arch::TRAIN_BATCH, 8, 8, 16]);
+    }
+
+    #[test]
+    fn txf_cuts_sit_at_block_boundaries() {
+        let m = manifest("txf").unwrap();
+        let spec = m.for_dataset("mnist").unwrap();
+        assert_eq!(spec.layers.len(), 4);
+        assert_eq!(spec.menu().len(), 3);
+        for v in 1..=3 {
+            assert_eq!(spec.cut(v).smashed_shape, vec![arch::TRAIN_BATCH, 49, 32]);
+        }
+        // Two identical blocks: φ grows by exactly one block's params.
+        let blk = spec.cut(2).phi - spec.cut(1).phi;
+        assert_eq!(spec.cut(3).phi - spec.cut(2).phi, blk);
+        let cifar = m.for_dataset("cifar10").unwrap();
+        assert_eq!(cifar.cut(1).smashed_shape, vec![arch::TRAIN_BATCH, 64, 32]);
+    }
+
+    #[test]
+    fn unknown_model_is_a_clean_error() {
+        let err = manifest("resnet").unwrap_err().to_string();
+        assert!(err.contains("unknown model"), "{err}");
+        assert!(err.contains("builtin"), "{err}");
+    }
+
+    #[test]
+    fn batch_overrides_reach_every_shape() {
+        let m = manifest_with_batches("vgg", 8, 40).unwrap();
+        for spec in m.shapes.values() {
+            assert_eq!(spec.train_batch, 8);
+            assert_eq!(spec.eval_batch, 40);
+            assert_eq!(spec.cut(1).smashed_shape[0], 8);
+        }
+    }
+}

@@ -2,7 +2,7 @@
 //! client-side model deepens; the constraint log(1 + φ(v)/q) ≥ ε bounds
 //! the admissible cuts from below.
 
-use crate::model::{NUM_CUTS, ShapeSpec};
+use crate::model::ShapeSpec;
 
 /// Privacy leakage metric: log(1 + φ(v)/q) (natural log, monotone in φ).
 pub fn leakage_margin(spec: &ShapeSpec, cut: usize) -> f64 {
@@ -15,9 +15,9 @@ pub fn cut_feasible(spec: &ShapeSpec, cut: usize, epsilon: f64) -> bool {
 }
 
 /// All admissible cuts at threshold ε (ascending).  Since φ(v) is monotone
-/// non-decreasing in v, this is always a suffix of 1..=NUM_CUTS.
+/// non-decreasing in v, this is always a suffix of the model's cut menu.
 pub fn feasible_cuts(spec: &ShapeSpec, epsilon: f64) -> Vec<usize> {
-    (1..=NUM_CUTS).filter(|&v| cut_feasible(spec, v, epsilon)).collect()
+    spec.menu().ids().filter(|&v| cut_feasible(spec, v, epsilon)).collect()
 }
 
 /// Smallest admissible cut, if any.

@@ -26,21 +26,23 @@
 
 pub mod wire;
 
-use crate::model::NUM_CUTS;
 use crate::runtime::Tensor;
 use crate::tensor::Params;
 use wire::{ByteReader, ByteWriter};
 
 /// Bumped on any wire-format change; [`Msg::Join`] carries it and the
 /// coordinator rejects mismatches at rendezvous.  v2 added the churn
-/// handshake ([`Msg::Rejoin`] / [`Msg::Sync`]).
-pub const PROTO_VERSION: u32 = 2;
+/// handshake ([`Msg::Rejoin`] / [`Msg::Sync`]); v3 made [`RunSetup`]
+/// carry the model-registry id and its cut-menu length, so both sides
+/// validate cuts against the SAME peer-agreed menu instead of a
+/// hard-coded constant.
+pub const PROTO_VERSION: u32 = 3;
 
 /// Per-run configuration a participant needs to derive its own batch
 /// stream and run FL local steps — shipped once in [`Msg::Welcome`].
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunSetup {
-    /// Dataset name (selects the builtin manifest entry).
+    /// Dataset name (selects the manifest entry of `model`).
     pub dataset: String,
     /// Run seed: the participant's `ClientSampler` derives from it, so
     /// its batches are bitwise the ones the in-process trainer would draw.
@@ -49,6 +51,15 @@ pub struct RunSetup {
     pub partition: String,
     /// Samples per client shard.
     pub samples_per_client: usize,
+    /// Model-registry architecture id (`builtin`, `vgg`, `txf`): both
+    /// sides resolve it through `model::registry`, so the whole cut menu
+    /// is pinned by one string.
+    pub model: String,
+    /// Length of the coordinator's cut menu, cross-checked against the
+    /// participant's own resolution of `model` at configure time — a
+    /// registry drift between binaries fails loudly at rendezvous, not
+    /// as a shape error mid-round.
+    pub num_cuts: u32,
 }
 
 impl RunSetup {
@@ -57,6 +68,8 @@ impl RunSetup {
         w.u64(self.seed);
         w.str(&self.partition);
         w.usize(self.samples_per_client);
+        w.str(&self.model);
+        w.u32(self.num_cuts);
     }
 
     fn decode(r: &mut ByteReader) -> anyhow::Result<RunSetup> {
@@ -65,6 +78,8 @@ impl RunSetup {
             seed: r.u64()?,
             partition: r.str()?,
             samples_per_client: r.usize()?,
+            model: r.str()?,
+            num_cuts: r.u32()?,
         })
     }
 }
@@ -278,10 +293,11 @@ impl Msg {
             TAG_FWD_REQ => {
                 let seq = r.u64()?;
                 let cut = r.u32()?;
-                anyhow::ensure!(
-                    (1..=NUM_CUTS as u32).contains(&cut),
-                    "cut {cut} outside 1..={NUM_CUTS}"
-                );
+                // Structural check only: cut ids are 1-based.  Whether the
+                // cut is on the active model's menu is the receiver's call
+                // (`CutMenu::validate` against the RunSetup-agreed model) —
+                // the decoder cannot know which architecture is running.
+                anyhow::ensure!(cut >= 1, "cut ids are 1-based, got {cut}");
                 let step = r.u64()?;
                 Msg::FwdReq { seq, cut, step, wc: decode_params(&mut r)? }
             }
@@ -335,6 +351,8 @@ mod tests {
                 seed: 17,
                 partition: "dirichlet:0.3".into(),
                 samples_per_client: 256,
+                model: "vgg".into(),
+                num_cuts: 11,
             },
         });
         roundtrip(&Msg::FwdReq { seq: 1, cut: 2, step: 9, wc: params.clone() });
@@ -353,6 +371,8 @@ mod tests {
                 seed: 17,
                 partition: "shards:2".into(),
                 samples_per_client: 64,
+                model: "builtin".into(),
+                num_cuts: 4,
             },
         });
     }
@@ -361,11 +381,13 @@ mod tests {
     fn bad_cut_and_bad_tensor_are_errors() {
         let msg = Msg::FwdReq { seq: 1, cut: 2, step: 0, wc: vec![vec![1.0]] };
         let mut bytes = msg.encode();
-        // Corrupt the cut field (offset: tag 1 + seq 8).
+        // Corrupt the cut field (offset: tag 1 + seq 8).  Zero is
+        // structurally invalid; a large id decodes fine — whether it is on
+        // the active menu is the receiving node's check, not the decoder's.
         bytes[9] = 0;
         assert!(Msg::decode(&bytes).is_err());
-        bytes[9] = (NUM_CUTS + 1) as u8;
-        assert!(Msg::decode(&bytes).is_err());
+        bytes[9] = 200;
+        assert!(matches!(Msg::decode(&bytes), Ok(Msg::FwdReq { cut: 200, .. })));
 
         // Tensor whose shape does not match its payload length.
         let mut w = ByteWriter::new();

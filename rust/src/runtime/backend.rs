@@ -7,7 +7,8 @@
 //! Contract (see DESIGN.md §Backend trait):
 //! * Parameters travel as flat `f32` buffers in manifest order
 //!   ([`crate::tensor::Params`]); activations as [`Tensor`]s.
-//! * `cut` is the paper's v ∈ 1..=NUM_CUTS; the client owns the leading
+//! * `cut` is the paper's v, drawn from the model's cut menu
+//!   (`spec.menu()`); the client owns the leading
 //!   `spec.cut(v).client_params` parameter arrays.
 //! * Batch size is taken from the input tensor's leading dimension, so
 //!   train and eval batches need no separate entry points.

@@ -19,7 +19,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::thread;
 
-use crate::model::{CUT_ROLES, Manifest, NUM_CUTS, ShapeSpec};
+use crate::model::{CUT_ROLES, Manifest, ShapeSpec};
 use crate::tensor::Params;
 
 use super::backend::Backend;
@@ -236,7 +236,7 @@ impl PjrtBackend {
     }
 
     fn check_cut(&self, cut: usize) -> anyhow::Result<()> {
-        anyhow::ensure!((1..=NUM_CUTS).contains(&cut), "cut {cut} out of range");
+        self.spec.menu().validate(cut)?;
         Ok(())
     }
 }

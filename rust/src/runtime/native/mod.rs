@@ -1,12 +1,16 @@
-//! The native pure-Rust backend: executes the paper's split CNN directly
-//! on flat `Vec<f32>` buffers — no Python, JAX, XLA or PJRT anywhere.
+//! The native pure-Rust backend: executes any architecture in the model
+//! registry directly on flat `Vec<f32>` buffers — no Python, JAX, XLA or
+//! PJRT anywhere.
 //!
-//! The block structure is derived from the manifest's parameter shapes
-//! (4-d weight -> conv5x5+relu+maxpool2, 2-d weight -> dense, last block
-//! linear), which makes this backend work for every shape key the
-//! manifest describes rather than hard-coding the MNIST/CIFAR geometry.
-//! Forward passes record a per-block tape (inputs, post-relu activations,
-//! pool argmaxes); backward consumes the tape to produce exactly the VJPs
+//! Execution dispatches on the spec's declarative layer graph
+//! (`model::graph`): conv / dense layers for the CNNs, patch-embedding
+//! and pre-LN transformer blocks (layernorm → multi-head softmax
+//! attention → residual → layernorm → GELU MLP → residual) for the
+//! transformer stack.  Manifest-JSON specs recover their graph from the
+//! parameter table at parse time; specs without an executable graph are
+//! rejected here.  Forward passes record a per-layer tape (inputs,
+//! activations, pool argmaxes, attention probabilities, layernorm
+//! statistics); backward consumes the tape to produce exactly the VJPs
 //! the five roles need.
 //!
 //! Compute runs on the im2col + blocked-GEMM fast path ([`gemm`],
@@ -31,7 +35,8 @@
 //! Numerical semantics are pinned to the JAX reference kernels
 //! (`python/compile/kernels/ref.py`) by the golden tests in [`ops`] and
 //! the full-model goldens below; split-vs-full gradient equality is exact
-//! (bitwise) because both paths share the same kernels.
+//! (bitwise) because both paths share the same kernels, at every cut of
+//! every registry architecture (`tests/model_zoo.rs`).
 
 pub mod gemm;
 pub mod im2col;
@@ -40,7 +45,7 @@ pub mod reference;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::model::{NUM_CUTS, ShapeSpec};
+use crate::model::{LayerSpec, ShapeSpec};
 use crate::tensor::Params;
 
 use ops::Geom;
@@ -48,25 +53,70 @@ use super::backend::Backend;
 use super::scratch::{Scratch, ScratchHandle};
 use super::tensor::Tensor;
 
-/// Static description of one block, derived from the manifest shapes.
-#[derive(Clone, Copy, Debug)]
-enum BlockDesc {
-    /// conv `k`x`k` SAME + relu + maxpool2x2 on an `h`x`w`x`ic` input.
-    Conv { h: usize, w: usize, ic: usize, k: usize, oc: usize },
-    /// dense `din` -> `dout`, relu unless it is the logits layer.
-    Dense { din: usize, dout: usize, relu: bool },
-}
-
-/// Per-block forward records needed by the backward pass.
+/// Per-layer forward records needed by the backward pass.
 enum Tape {
-    Conv { input: Vec<f32>, g: Geom, k: usize, oc: usize, act: Vec<f32>, idx: Vec<u32> },
-    Dense { input: Vec<f32>, din: usize, dout: usize, out: Vec<f32>, relu: bool },
+    Conv {
+        input: Vec<f32>,
+        g: Geom,
+        k: usize,
+        oc: usize,
+        act: Vec<f32>,
+        idx: Vec<u32>,
+        pool: bool,
+    },
+    Dense {
+        input: Vec<f32>,
+        din: usize,
+        dout: usize,
+        out: Vec<f32>,
+        relu: bool,
+    },
+    Embed {
+        patches: Vec<f32>,
+        g: Geom,
+        patch: usize,
+        t: usize,
+        din: usize,
+        dm: usize,
+    },
+    Txf {
+        t: usize,
+        dm: usize,
+        heads: usize,
+        dff: usize,
+        input: Vec<f32>,
+        m1: Vec<f32>,
+        r1: Vec<f32>,
+        ln1: Vec<f32>,
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        probs: Vec<f32>,
+        concat: Vec<f32>,
+        res1: Vec<f32>,
+        m2: Vec<f32>,
+        r2: Vec<f32>,
+        ln2: Vec<f32>,
+        hpre: Vec<f32>,
+        hact: Vec<f32>,
+    },
 }
 
-/// Pure-Rust execution of the split model (all cuts, all five roles).
+/// Parameter arrays owned by a taped layer.
+fn tape_params(t: &Tape) -> usize {
+    match t {
+        Tape::Txf { .. } => 16,
+        _ => 2,
+    }
+}
+
+/// Pure-Rust execution of the split model (all menu cuts, all five roles).
 pub struct NativeBackend {
     spec: ShapeSpec,
-    blocks: Vec<BlockDesc>,
+    layers: Vec<LayerSpec>,
+    /// Cumulative parameter-array counts: layer `i` (1-based) owns params
+    /// `param_base[i-1]..param_base[i]` of the manifest order.
+    param_base: Vec<usize>,
     /// Arena for callers of the plain (scratch-less) role methods.  The
     /// hot path never touches it — the executor hands every worker its
     /// own arena through the `*_with` variants.
@@ -77,7 +127,7 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
-    /// Derive the block table from `spec` and validate its consistency.
+    /// Take the spec's layer graph and validate its consistency.
     pub fn new(spec: ShapeSpec) -> anyhow::Result<NativeBackend> {
         anyhow::ensure!(
             spec.input_shape.len() == 3,
@@ -85,68 +135,62 @@ impl NativeBackend {
             spec.input_shape
         );
         anyhow::ensure!(
-            !spec.params.is_empty() && spec.params.len() % 2 == 0,
-            "native backend expects (weight, bias) parameter pairs"
+            !spec.layers.is_empty(),
+            "spec '{}' has no executable layer graph (its parameter table is not a \
+             recognized layer chain)",
+            spec.key
         );
-        let n_blocks = spec.params.len() / 2;
-        let (mut h, mut w, mut c) =
-            (spec.input_shape[0], spec.input_shape[1], spec.input_shape[2]);
-        let mut blocks = Vec::with_capacity(n_blocks);
-        for bi in 0..n_blocks {
-            let wshape = &spec.params[2 * bi].shape;
-            let bshape = &spec.params[2 * bi + 1].shape;
-            let wname = &spec.params[2 * bi].name;
-            anyhow::ensure!(bshape.len() == 1, "{wname}: bias must be rank 1");
-            match wshape.len() {
-                4 => {
-                    let k = wshape[0];
-                    let oc = wshape[3];
-                    anyhow::ensure!(wshape[1] == k && k % 2 == 1, "{wname}: bad kernel");
-                    anyhow::ensure!(wshape[2] == c, "{wname}: in-channels {} != {c}", wshape[2]);
-                    anyhow::ensure!(bshape[0] == oc, "{wname}: bias/filters mismatch");
-                    anyhow::ensure!(h % 2 == 0 && w % 2 == 0, "{wname}: pool needs even h/w");
-                    blocks.push(BlockDesc::Conv { h, w, ic: c, k, oc });
-                    h /= 2;
-                    w /= 2;
-                    c = oc;
-                }
-                2 => {
-                    let (din, dout) = (wshape[0], wshape[1]);
-                    anyhow::ensure!(
-                        din == h * w * c,
-                        "{wname}: dense fan-in {din} != upstream {}",
-                        h * w * c
-                    );
-                    anyhow::ensure!(bshape[0] == dout, "{wname}: bias/out mismatch");
-                    blocks.push(BlockDesc::Dense { din, dout, relu: bi + 1 < n_blocks });
-                    h = 1;
-                    w = 1;
-                    c = dout;
-                }
-                r => anyhow::bail!("{wname}: unsupported weight rank {r}"),
-            }
+        let layers: Vec<LayerSpec> = spec.layers.iter().map(|l| l.spec).collect();
+        let mut param_base = Vec::with_capacity(layers.len() + 1);
+        param_base.push(0usize);
+        for l in &layers {
+            param_base.push(param_base.last().unwrap() + l.num_params());
         }
         anyhow::ensure!(
-            matches!(blocks.last(), Some(BlockDesc::Dense { dout, .. }) if *dout == spec.classes),
-            "last block must produce {} logits",
+            *param_base.last().unwrap() == spec.params.len(),
+            "layer graph owns {} parameter arrays, manifest lists {}",
+            param_base.last().unwrap(),
+            spec.params.len()
+        );
+        anyhow::ensure!(
+            layers[0].in_elems() == spec.input_per_sample(),
+            "first layer does not accept the input shape {:?}",
+            spec.input_shape
+        );
+        for pair in layers.windows(2) {
+            anyhow::ensure!(
+                pair[0].out_elems() == pair[1].in_elems(),
+                "activation mismatch between consecutive layers"
+            );
+        }
+        anyhow::ensure!(
+            matches!(layers.last(), Some(LayerSpec::Dense { dout, .. }) if *dout == spec.classes),
+            "last layer must produce {} logits",
             spec.classes
         );
         Ok(NativeBackend {
             spec,
-            blocks,
+            layers,
+            param_base,
             fallback: ScratchHandle::new(),
             eval_par: AtomicUsize::new(1),
         })
     }
 
-    fn check_cut(&self, cut: usize) -> anyhow::Result<usize> {
-        anyhow::ensure!((1..=NUM_CUTS).contains(&cut), "cut {cut} out of range");
+    /// Validate a cut against the menu and resolve it to `(client_params,
+    /// client_layers)`.
+    fn check_cut(&self, cut: usize) -> anyhow::Result<(usize, usize)> {
+        let cut = self.spec.menu().validate(cut)?;
         let nc = self.spec.cut(cut).client_params;
-        anyhow::ensure!(
-            nc % 2 == 0 && nc / 2 < self.blocks.len(),
-            "cut {cut}: client_params {nc} does not align to a block boundary"
-        );
-        Ok(nc)
+        let blocks = self
+            .param_base
+            .iter()
+            .position(|&b| b == nc)
+            .filter(|&bi| bi >= 1 && bi < self.layers.len())
+            .ok_or_else(|| {
+                anyhow::anyhow!("cut {cut}: client_params {nc} does not align to a layer boundary")
+            })?;
+        Ok((nc, blocks))
     }
 
     /// Validate `[batch, input_shape...]` and return the batch size.
@@ -167,7 +211,8 @@ impl NativeBackend {
         s
     }
 
-    /// Run blocks `first..=last` (1-based), recording the backward tape.
+    /// Run layers `first..=last` (1-based), recording the backward tape.
+    /// `params` is the contiguous manifest-order slice those layers own.
     /// Kernel intermediates come from `s`; tape buffers are owned.
     fn forward(
         &self,
@@ -178,39 +223,105 @@ impl NativeBackend {
         first: usize,
         last: usize,
     ) -> anyhow::Result<(Vec<f32>, Vec<Tape>)> {
+        let want = self.param_base[last] - self.param_base[first - 1];
         anyhow::ensure!(
-            params.len() == 2 * (last + 1 - first),
-            "blocks {first}..={last} need {} params, got {}",
-            2 * (last + 1 - first),
+            params.len() == want,
+            "layers {first}..={last} need {want} params, got {}",
             params.len()
         );
         let mut cur = x.to_vec();
         let mut tapes = Vec::with_capacity(last + 1 - first);
-        for (bi, blk) in (first..=last).enumerate() {
-            let wt = &params[2 * bi];
-            let bias = &params[2 * bi + 1];
-            match self.blocks[blk - 1] {
-                BlockDesc::Conv { h, w, ic, k, oc } => {
+        let mut off = 0usize;
+        for blk in first..=last {
+            let layer = self.layers[blk - 1];
+            let p = &params[off..off + layer.num_params()];
+            off += layer.num_params();
+            match layer {
+                LayerSpec::Conv { h, w, ic, k, oc, pool } => {
                     let g = Geom { b: batch, h, w, c: ic };
-                    anyhow::ensure!(cur.len() == g.len(), "block {blk}: input length mismatch");
-                    anyhow::ensure!(wt.len() == k * k * ic * oc, "block {blk}: weight length");
-                    let act = ops::conv2d_fwd(s, &cur, g, wt, k, oc, bias, true);
-                    let ag = Geom { b: batch, h, w, c: oc };
-                    let (out, idx) = ops::maxpool2x2_fwd(&act, ag);
-                    let input = std::mem::replace(&mut cur, out);
-                    tapes.push(Tape::Conv { input, g, k, oc, act, idx });
+                    anyhow::ensure!(cur.len() == g.len(), "layer {blk}: input length mismatch");
+                    anyhow::ensure!(p[0].len() == k * k * ic * oc, "layer {blk}: weight length");
+                    let act = ops::conv2d_fwd(s, &cur, g, &p[0], k, oc, &p[1], true);
+                    if pool {
+                        let ag = Geom { b: batch, h, w, c: oc };
+                        let (out, idx) = ops::maxpool2x2_fwd(&act, ag);
+                        let input = std::mem::replace(&mut cur, out);
+                        tapes.push(Tape::Conv { input, g, k, oc, act, idx, pool });
+                    } else {
+                        let input = std::mem::replace(&mut cur, act.clone());
+                        tapes.push(Tape::Conv { input, g, k, oc, act, idx: Vec::new(), pool });
+                    }
                 }
-                BlockDesc::Dense { din, dout, relu } => {
+                LayerSpec::Dense { din, dout, relu } => {
                     anyhow::ensure!(
                         cur.len() == batch * din,
-                        "block {blk}: input length {} != {batch}x{din}",
+                        "layer {blk}: input length {} != {batch}x{din}",
                         cur.len()
                     );
-                    anyhow::ensure!(wt.len() == din * dout, "block {blk}: weight length");
-                    let out = ops::dense_fwd(s, &cur, batch, din, dout, wt, bias, relu);
+                    anyhow::ensure!(p[0].len() == din * dout, "layer {blk}: weight length");
+                    let out = ops::dense_fwd(s, &cur, batch, din, dout, &p[0], &p[1], relu);
                     let input = std::mem::take(&mut cur);
                     cur = out.clone();
                     tapes.push(Tape::Dense { input, din, dout, out, relu });
+                }
+                LayerSpec::Embed { h, w, c, patch, dm } => {
+                    let g = Geom { b: batch, h, w, c };
+                    anyhow::ensure!(cur.len() == g.len(), "layer {blk}: input length mismatch");
+                    let (t, din) = ((h / patch) * (w / patch), patch * patch * c);
+                    anyhow::ensure!(p[0].len() == din * dm, "layer {blk}: weight length");
+                    let patches = ops::patchify(&cur, g, patch);
+                    cur = ops::dense_fwd(s, &patches, batch * t, din, dm, &p[0], &p[1], false);
+                    tapes.push(Tape::Embed { patches, g, patch, t, din, dm });
+                }
+                LayerSpec::TxfBlock { tokens: t, dm, heads, dff } => {
+                    let rows = batch * t;
+                    anyhow::ensure!(
+                        cur.len() == rows * dm,
+                        "layer {blk}: input length {} != {rows}x{dm}",
+                        cur.len()
+                    );
+                    // p: ln1_g ln1_b wq bq wk bk wv bv wo bo ln2_g ln2_b
+                    //    w1 b1 w2 b2 (graph::param_specs order).
+                    let (ln1, m1, r1) = ops::layernorm_fwd(&cur, rows, dm, &p[0], &p[1]);
+                    let q = ops::dense_fwd(s, &ln1, rows, dm, dm, &p[2], &p[3], false);
+                    let k = ops::dense_fwd(s, &ln1, rows, dm, dm, &p[4], &p[5], false);
+                    let v = ops::dense_fwd(s, &ln1, rows, dm, dm, &p[6], &p[7], false);
+                    let (probs, concat) = ops::mhsa_fwd(s, &q, &k, &v, batch, t, dm, heads);
+                    let attn = ops::dense_fwd(s, &concat, rows, dm, dm, &p[8], &p[9], false);
+                    let mut res1 = cur.clone();
+                    for (r, &a) in res1.iter_mut().zip(&attn) {
+                        *r += a;
+                    }
+                    let (ln2, m2, r2) = ops::layernorm_fwd(&res1, rows, dm, &p[10], &p[11]);
+                    let hpre = ops::dense_fwd(s, &ln2, rows, dm, dff, &p[12], &p[13], false);
+                    let hact = ops::gelu_fwd(&hpre);
+                    let mlp = ops::dense_fwd(s, &hact, rows, dff, dm, &p[14], &p[15], false);
+                    let mut out = res1.clone();
+                    for (o, &mv) in out.iter_mut().zip(&mlp) {
+                        *o += mv;
+                    }
+                    let input = std::mem::replace(&mut cur, out);
+                    tapes.push(Tape::Txf {
+                        t,
+                        dm,
+                        heads,
+                        dff,
+                        input,
+                        m1,
+                        r1,
+                        ln1,
+                        q,
+                        k,
+                        v,
+                        probs,
+                        concat,
+                        res1,
+                        m2,
+                        r2,
+                        ln2,
+                        hpre,
+                        hact,
+                    });
                 }
             }
         }
@@ -233,42 +344,83 @@ impl NativeBackend {
         last: usize,
         par: usize,
     ) -> anyhow::Result<Vec<f32>> {
+        let want = self.param_base[last] - self.param_base[first - 1];
         anyhow::ensure!(
-            params.len() == 2 * (last + 1 - first),
-            "blocks {first}..={last} need {} params, got {}",
-            2 * (last + 1 - first),
+            params.len() == want,
+            "layers {first}..={last} need {want} params, got {}",
             params.len()
         );
         let mut cur = x.to_vec();
-        for (bi, blk) in (first..=last).enumerate() {
-            let wt = &params[2 * bi];
-            let bias = &params[2 * bi + 1];
-            match self.blocks[blk - 1] {
-                BlockDesc::Conv { h, w, ic, k, oc } => {
+        let mut off = 0usize;
+        for blk in first..=last {
+            let layer = self.layers[blk - 1];
+            let p = &params[off..off + layer.num_params()];
+            off += layer.num_params();
+            match layer {
+                LayerSpec::Conv { h, w, ic, k, oc, pool } => {
                     let g = Geom { b: batch, h, w, c: ic };
-                    anyhow::ensure!(cur.len() == g.len(), "block {blk}: input length mismatch");
-                    anyhow::ensure!(wt.len() == k * k * ic * oc, "block {blk}: weight length");
-                    let act = ops::conv2d_fwd(s, &cur, g, wt, k, oc, bias, true);
-                    let ag = Geom { b: batch, h, w, c: oc };
-                    (cur, _) = ops::maxpool2x2_fwd(&act, ag);
+                    anyhow::ensure!(cur.len() == g.len(), "layer {blk}: input length mismatch");
+                    anyhow::ensure!(p[0].len() == k * k * ic * oc, "layer {blk}: weight length");
+                    let act = ops::conv2d_fwd(s, &cur, g, &p[0], k, oc, &p[1], true);
+                    if pool {
+                        let ag = Geom { b: batch, h, w, c: oc };
+                        (cur, _) = ops::maxpool2x2_fwd(&act, ag);
+                    } else {
+                        cur = act;
+                    }
                 }
-                BlockDesc::Dense { din, dout, relu } => {
+                LayerSpec::Dense { din, dout, relu } => {
                     anyhow::ensure!(
                         cur.len() == batch * din,
-                        "block {blk}: input length {} != {batch}x{din}",
+                        "layer {blk}: input length {} != {batch}x{din}",
                         cur.len()
                     );
-                    anyhow::ensure!(wt.len() == din * dout, "block {blk}: weight length");
-                    let p = if par > 1 && batch >= 32 && dout >= 2 * gemm::NR { par } else { 1 };
-                    cur = ops::dense_fwd_par(s, &cur, batch, din, dout, wt, bias, relu, p);
+                    anyhow::ensure!(p[0].len() == din * dout, "layer {blk}: weight length");
+                    let pp = if par > 1 && batch >= 32 && dout >= 2 * gemm::NR { par } else { 1 };
+                    cur = ops::dense_fwd_par(s, &cur, batch, din, dout, &p[0], &p[1], relu, pp);
+                }
+                LayerSpec::Embed { h, w, c, patch, dm } => {
+                    let g = Geom { b: batch, h, w, c };
+                    anyhow::ensure!(cur.len() == g.len(), "layer {blk}: input length mismatch");
+                    let (t, din) = ((h / patch) * (w / patch), patch * patch * c);
+                    anyhow::ensure!(p[0].len() == din * dm, "layer {blk}: weight length");
+                    let patches = ops::patchify(&cur, g, patch);
+                    cur = ops::dense_fwd(s, &patches, batch * t, din, dm, &p[0], &p[1], false);
+                }
+                LayerSpec::TxfBlock { tokens: t, dm, heads, dff } => {
+                    let rows = batch * t;
+                    anyhow::ensure!(
+                        cur.len() == rows * dm,
+                        "layer {blk}: input length {} != {rows}x{dm}",
+                        cur.len()
+                    );
+                    let (ln1, _m1, _r1) = ops::layernorm_fwd(&cur, rows, dm, &p[0], &p[1]);
+                    let q = ops::dense_fwd(s, &ln1, rows, dm, dm, &p[2], &p[3], false);
+                    let k = ops::dense_fwd(s, &ln1, rows, dm, dm, &p[4], &p[5], false);
+                    let v = ops::dense_fwd(s, &ln1, rows, dm, dm, &p[6], &p[7], false);
+                    let (_probs, concat) = ops::mhsa_fwd(s, &q, &k, &v, batch, t, dm, heads);
+                    let attn = ops::dense_fwd(s, &concat, rows, dm, dm, &p[8], &p[9], false);
+                    let mut res1 = cur;
+                    for (r, &a) in res1.iter_mut().zip(&attn) {
+                        *r += a;
+                    }
+                    let (ln2, _m2, _r2) = ops::layernorm_fwd(&res1, rows, dm, &p[10], &p[11]);
+                    let hpre = ops::dense_fwd(s, &ln2, rows, dm, dff, &p[12], &p[13], false);
+                    let hact = ops::gelu_fwd(&hpre);
+                    let mlp = ops::dense_fwd(s, &hact, rows, dff, dm, &p[14], &p[15], false);
+                    cur = res1;
+                    for (o, &mv) in cur.iter_mut().zip(&mlp) {
+                        *o += mv;
+                    }
                 }
             }
         }
         Ok(cur)
     }
 
-    /// Backpropagate `d_last` through the taped blocks; returns the
-    /// parameter gradients (manifest order) and the input cotangent.
+    /// Backpropagate `d_last` through the taped layers; returns the
+    /// parameter gradients (manifest order, aligned with the `params`
+    /// slice) and the input cotangent.
     fn backward(
         &self,
         s: &mut Scratch,
@@ -277,26 +429,104 @@ impl NativeBackend {
         d_last: Vec<f32>,
         batch: usize,
     ) -> (Params, Vec<f32>) {
+        let mut offs = Vec::with_capacity(tapes.len());
+        let mut off = 0usize;
+        for tp in tapes {
+            offs.push(off);
+            off += tape_params(tp);
+        }
+        debug_assert_eq!(off, params.len());
         let mut grads: Params = vec![Vec::new(); params.len()];
         let mut d = d_last;
-        for (bi, tape) in tapes.iter().enumerate().rev() {
-            let wt = &params[2 * bi];
+        for (tape, &po) in tapes.iter().zip(&offs).rev() {
             match tape {
-                Tape::Conv { input, g, k, oc, act, idx } => {
-                    let mut d_act = ops::maxpool2x2_bwd(idx, &d, act.len());
+                Tape::Conv { input, g, k, oc, act, idx, pool } => {
+                    let mut d_act =
+                        if *pool { ops::maxpool2x2_bwd(idx, &d, act.len()) } else { d };
                     ops::relu_mask(&mut d_act, act);
-                    let (d_x, d_w, d_b) = ops::conv2d_bwd(s, input, *g, wt, *k, *oc, &d_act);
-                    grads[2 * bi] = d_w;
-                    grads[2 * bi + 1] = d_b;
+                    let (d_x, d_w, d_b) = ops::conv2d_bwd(s, input, *g, &params[po], *k, *oc, &d_act);
+                    grads[po] = d_w;
+                    grads[po + 1] = d_b;
                     d = d_x;
                 }
                 Tape::Dense { input, din, dout, out, relu } => {
                     if *relu {
                         ops::relu_mask(&mut d, out);
                     }
-                    let (d_x, d_w, d_b) = ops::dense_bwd(s, input, batch, *din, *dout, wt, &d);
-                    grads[2 * bi] = d_w;
-                    grads[2 * bi + 1] = d_b;
+                    let (d_x, d_w, d_b) =
+                        ops::dense_bwd(s, input, batch, *din, *dout, &params[po], &d);
+                    grads[po] = d_w;
+                    grads[po + 1] = d_b;
+                    d = d_x;
+                }
+                Tape::Embed { patches, g, patch, t, din, dm } => {
+                    let (d_p, d_w, d_b) =
+                        ops::dense_bwd(s, patches, batch * t, *din, *dm, &params[po], &d);
+                    grads[po] = d_w;
+                    grads[po + 1] = d_b;
+                    d = ops::unpatchify(&d_p, *g, *patch);
+                }
+                Tape::Txf {
+                    t,
+                    dm,
+                    heads,
+                    dff,
+                    input,
+                    m1,
+                    r1,
+                    ln1,
+                    q,
+                    k,
+                    v,
+                    probs,
+                    concat,
+                    res1,
+                    m2,
+                    r2,
+                    ln2,
+                    hpre,
+                    hact,
+                } => {
+                    let (t, dm, heads, dff) = (*t, *dm, *heads, *dff);
+                    let rows = batch * t;
+                    let p = &params[po..po + 16];
+                    // out = res1 + mlp: d flows into both branches.
+                    let (mut d_hact, d_w2, d_b2) =
+                        ops::dense_bwd(s, hact, rows, dff, dm, &p[14], &d);
+                    ops::gelu_bwd(&mut d_hact, hpre); // now d(hpre)
+                    let (d_ln2, d_w1, d_b1) =
+                        ops::dense_bwd(s, ln2, rows, dm, dff, &p[12], &d_hact);
+                    let (d_r1b, d_g2, d_be2) =
+                        ops::layernorm_bwd(res1, m2, r2, &p[10], rows, dm, &d_ln2);
+                    let mut d_res1 = d;
+                    for (dr, &v2) in d_res1.iter_mut().zip(&d_r1b) {
+                        *dr += v2;
+                    }
+                    // res1 = input + attn: d_res1 flows into both branches.
+                    let (d_concat, d_wo, d_bo) =
+                        ops::dense_bwd(s, concat, rows, dm, dm, &p[8], &d_res1);
+                    let (dq, dk, dv) =
+                        ops::mhsa_bwd(s, q, k, v, probs, &d_concat, batch, t, dm, heads);
+                    let (mut d_ln1, d_wq, d_bq) =
+                        ops::dense_bwd(s, ln1, rows, dm, dm, &p[2], &dq);
+                    let (d_ln1_k, d_wk, d_bk) = ops::dense_bwd(s, ln1, rows, dm, dm, &p[4], &dk);
+                    let (d_ln1_v, d_wv, d_bv) = ops::dense_bwd(s, ln1, rows, dm, dm, &p[6], &dv);
+                    // Fixed accumulation order: q, then k, then v.
+                    for (a, (&bk2, &cv)) in d_ln1.iter_mut().zip(d_ln1_k.iter().zip(&d_ln1_v)) {
+                        *a = (*a + bk2) + cv;
+                    }
+                    let (d_x_ln, d_g1, d_be1) =
+                        ops::layernorm_bwd(input, m1, r1, &p[0], rows, dm, &d_ln1);
+                    let mut d_x = d_res1;
+                    for (a, &bv2) in d_x.iter_mut().zip(&d_x_ln) {
+                        *a += bv2;
+                    }
+                    for (slot, g) in grads[po..po + 16].iter_mut().zip([
+                        d_g1, d_be1, d_wq, d_bq, d_wk, d_bk, d_wv, d_bv, d_wo, d_bo, d_g2, d_be2,
+                        d_w1, d_b1, d_w2, d_b2,
+                    ]) {
+                        *slot = g;
+                    }
                     d = d_x;
                 }
             }
@@ -335,12 +565,12 @@ impl Backend for NativeBackend {
         wc: &[Vec<f32>],
         x: &Tensor,
     ) -> anyhow::Result<Tensor> {
-        let nc = self.check_cut(cut)?;
+        let (nc, blocks) = self.check_cut(cut)?;
         anyhow::ensure!(wc.len() == nc, "client_fwd: {} params, expected {nc}", wc.len());
         let batch = self.batch_of_input(x)?;
         let mut s = scratch.lock();
         // Training-path role: never uses the eval parallelism hint.
-        let out = self.forward_no_tape(&mut s, wc, &x.data, batch, 1, nc / 2, 1)?;
+        let out = self.forward_no_tape(&mut s, wc, &x.data, batch, 1, blocks, 1)?;
         Ok(Tensor::new(out, self.smashed_shape(cut, batch)))
     }
 
@@ -362,7 +592,7 @@ impl Backend for NativeBackend {
         smashed: &Tensor,
         y1h: &Tensor,
     ) -> anyhow::Result<(f32, Params, Tensor)> {
-        let nc = self.check_cut(cut)?;
+        let (nc, blocks) = self.check_cut(cut)?;
         let n_server = self.spec.params.len() - nc;
         anyhow::ensure!(
             ws.len() == n_server,
@@ -377,10 +607,9 @@ impl Backend for NativeBackend {
         );
         let batch = smashed.shape[0];
         self.check_labels(y1h, batch)?;
-        let first = nc / 2 + 1;
         let mut s = scratch.lock();
         let (logits, tapes) =
-            self.forward(&mut s, ws, &smashed.data, batch, first, self.blocks.len())?;
+            self.forward(&mut s, ws, &smashed.data, batch, blocks + 1, self.layers.len())?;
         let (loss, d_logits) = ops::softmax_ce(&logits, &y1h.data, batch, self.spec.classes);
         let (g_ws, d_smashed) = self.backward(&mut s, ws, &tapes, d_logits, batch);
         Ok((loss, g_ws, Tensor::new(d_smashed, smashed.shape.clone())))
@@ -404,7 +633,7 @@ impl Backend for NativeBackend {
         x: &Tensor,
         g_smashed: &Tensor,
     ) -> anyhow::Result<Params> {
-        let nc = self.check_cut(cut)?;
+        let (nc, blocks) = self.check_cut(cut)?;
         anyhow::ensure!(wc.len() == nc, "client_grad: {} params, expected {nc}", wc.len());
         let batch = self.batch_of_input(x)?;
         anyhow::ensure!(
@@ -413,7 +642,7 @@ impl Backend for NativeBackend {
             g_smashed.shape
         );
         let mut s = scratch.lock();
-        let (_out, tapes) = self.forward(&mut s, wc, &x.data, batch, 1, nc / 2)?;
+        let (_out, tapes) = self.forward(&mut s, wc, &x.data, batch, 1, blocks)?;
         let (g_wc, _d_x) = self.backward(&mut s, wc, &tapes, g_smashed.data.clone(), batch);
         Ok(g_wc)
     }
@@ -434,7 +663,7 @@ impl Backend for NativeBackend {
         let batch = self.batch_of_input(x)?;
         self.check_labels(y1h, batch)?;
         let mut s = scratch.lock();
-        let (logits, tapes) = self.forward(&mut s, w, &x.data, batch, 1, self.blocks.len())?;
+        let (logits, tapes) = self.forward(&mut s, w, &x.data, batch, 1, self.layers.len())?;
         let (loss, d_logits) = ops::softmax_ce(&logits, &y1h.data, batch, self.spec.classes);
         let (g_w, _d_x) = self.backward(&mut s, w, &tapes, d_logits, batch);
         Ok((loss, g_w))
@@ -457,7 +686,7 @@ impl Backend for NativeBackend {
         self.check_labels(y1h, batch)?;
         let mut s = scratch.lock();
         let par = self.eval_par.load(Ordering::Relaxed);
-        let logits = self.forward_no_tape(&mut s, w, &x.data, batch, 1, self.blocks.len(), par)?;
+        let logits = self.forward_no_tape(&mut s, w, &x.data, batch, 1, self.layers.len(), par)?;
         let loss = ops::ce_loss(&logits, &y1h.data, batch, self.spec.classes);
         let correct = ops::correct_count(&logits, &y1h.data, batch, self.spec.classes);
         Ok((loss, correct))
@@ -551,7 +780,8 @@ mod tests {
         let be = backend();
         pin_portable(&be);
         let (params, x, _y1h) = golden_setup(&be);
-        for cut in 1..=NUM_CUTS {
+        assert_eq!(be.spec().num_cuts(), GOLD_SMASHED_SUM.len());
+        for cut in be.spec().menu().ids() {
             let nc = be.spec().cut(cut).client_params;
             let s = be.client_fwd(cut, &params[..nc], &x).unwrap();
             assert_eq!(s.shape, be.smashed_shape(cut, 2));
@@ -566,7 +796,7 @@ mod tests {
         let be = backend();
         let (params, x, y1h) = golden_setup(&be);
         let (loss_full, g_full) = be.full_grad(&params, &x, &y1h).unwrap();
-        for cut in 1..=NUM_CUTS {
+        for cut in be.spec().menu().ids() {
             let nc = be.spec().cut(cut).client_params;
             let smashed = be.client_fwd(cut, &params[..nc], &x).unwrap();
             let (loss_split, g_ws, g_s) =
@@ -671,6 +901,14 @@ mod tests {
     }
 
     #[test]
+    fn graphless_spec_is_rejected_with_a_clear_error() {
+        let mut spec = Manifest::builtin().for_dataset("mnist").unwrap().clone();
+        spec.layers.clear();
+        let err = NativeBackend::new(spec).unwrap_err().to_string();
+        assert!(err.contains("layer graph"), "{err}");
+    }
+
+    #[test]
     fn batch_size_is_taken_from_the_input() {
         // The same backend serves train- and eval-sized batches.
         let be = backend();
@@ -705,7 +943,7 @@ mod tests {
         let y1h = Tensor::new(y, vec![batch, spec.classes]);
         let (loss_full, g_full) = be.full_grad(&params, &x, &y1h).unwrap();
         assert!(loss_full.is_finite());
-        for cut in 1..=NUM_CUTS {
+        for cut in spec.menu().ids() {
             let nc = spec.cut(cut).client_params;
             let smashed = be.client_fwd(cut, &params[..nc], &x).unwrap();
             let (_l, g_ws, g_s) = be.server_grad(cut, &params[nc..], &smashed, &y1h).unwrap();

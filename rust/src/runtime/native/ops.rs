@@ -413,6 +413,393 @@ pub fn correct_count(logits: &[f32], y1h: &[f32], bsz: usize, classes: usize) ->
     correct as f32
 }
 
+/// Layernorm epsilon, shared by the fast path and the scalar reference.
+pub const LN_EPS: f32 = 1e-5;
+
+/// Row-wise layernorm with learned gain/shift: `out = (x - μ)·rstd·γ + β`
+/// over rows of width `d`.  Returns `(out, mean, rstd)`; the per-row
+/// statistics feed [`layernorm_bwd`].  All reductions are sequential f32
+/// in ascending index order (fixed summation order — see DESIGN.md).
+pub fn layernorm_fwd(
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    gamma: &[f32],
+    beta: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(gamma.len(), d);
+    debug_assert_eq!(beta.len(), d);
+    let mut out = vec![0.0f32; rows * d];
+    let mut mean = vec![0.0f32; rows];
+    let mut rstd = vec![0.0f32; rows];
+    for n in 0..rows {
+        let xrow = &x[n * d..(n + 1) * d];
+        let mut s = 0.0f32;
+        for &v in xrow {
+            s += v;
+        }
+        let mu = s / d as f32;
+        let mut var = 0.0f32;
+        for &v in xrow {
+            var += (v - mu) * (v - mu);
+        }
+        let rs = 1.0 / (var / d as f32 + LN_EPS).sqrt();
+        mean[n] = mu;
+        rstd[n] = rs;
+        let orow = &mut out[n * d..(n + 1) * d];
+        for j in 0..d {
+            orow[j] = (xrow[j] - mu) * rs * gamma[j] + beta[j];
+        }
+    }
+    (out, mean, rstd)
+}
+
+/// Backward of [`layernorm_fwd`].  Returns `(d_x, d_gamma, d_beta)`;
+/// `d_gamma`/`d_beta` accumulate across rows in ascending row order.
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm_bwd(
+    x: &[f32],
+    mean: &[f32],
+    rstd: &[f32],
+    gamma: &[f32],
+    rows: usize,
+    d: usize,
+    dy: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(dy.len(), rows * d);
+    let mut d_x = vec![0.0f32; rows * d];
+    let mut d_g = vec![0.0f32; d];
+    let mut d_b = vec![0.0f32; d];
+    for n in 0..rows {
+        let xrow = &x[n * d..(n + 1) * d];
+        let dyrow = &dy[n * d..(n + 1) * d];
+        let (mu, rs) = (mean[n], rstd[n]);
+        // a = mean(dy·γ), b = mean(dy·γ·x̂) over the row.
+        let mut a = 0.0f32;
+        let mut bsum = 0.0f32;
+        for j in 0..d {
+            let g = dyrow[j] * gamma[j];
+            a += g;
+            bsum += g * (xrow[j] - mu) * rs;
+        }
+        a /= d as f32;
+        bsum /= d as f32;
+        let dxrow = &mut d_x[n * d..(n + 1) * d];
+        for j in 0..d {
+            let xhat = (xrow[j] - mu) * rs;
+            dxrow[j] = rs * (dyrow[j] * gamma[j] - a - xhat * bsum);
+            d_g[j] += dyrow[j] * xhat;
+            d_b[j] += dyrow[j];
+        }
+    }
+    (d_x, d_g, d_b)
+}
+
+const GELU_C: f32 = 0.797_884_56; // sqrt(2/π)
+const GELU_A: f32 = 0.044715;
+
+/// Elementwise GELU (tanh approximation, the variant transformer stacks
+/// standardized on): `0.5·x·(1 + tanh(√(2/π)·(x + 0.044715·x³)))`.
+pub fn gelu_fwd(x: &[f32]) -> Vec<f32> {
+    x.iter()
+        .map(|&v| {
+            let u = GELU_C * (v + GELU_A * v * v * v);
+            0.5 * v * (1.0 + u.tanh())
+        })
+        .collect()
+}
+
+/// In-place GELU VJP: multiplies `d` by dGELU/dx at the *pre-activation*
+/// values `x_pre`.
+pub fn gelu_bwd(d: &mut [f32], x_pre: &[f32]) {
+    debug_assert_eq!(d.len(), x_pre.len());
+    for (dv, &v) in d.iter_mut().zip(x_pre) {
+        let u = GELU_C * (v + GELU_A * v * v * v);
+        let t = u.tanh();
+        let du = GELU_C * (1.0 + 3.0 * GELU_A * v * v);
+        *dv *= 0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du;
+    }
+}
+
+/// In-place row-wise softmax over rows of width `d` (max-subtracted,
+/// sequential f32 — the attention-score normalizer).
+pub fn softmax_rows(x: &mut [f32], rows: usize, d: usize) {
+    debug_assert_eq!(x.len(), rows * d);
+    for row in x.chunks_mut(d) {
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let mut se = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            se += *v;
+        }
+        let inv = 1.0 / se;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Cut an NHWC batch into non-overlapping `patch`x`patch` tokens:
+/// `[b, h, w, c] -> [b·T, p·p·c]` with the token grid row-major and each
+/// token flattened `(dy, dx, ch)` — the patch-embedding lowering.
+pub fn patchify(x: &[f32], g: Geom, patch: usize) -> Vec<f32> {
+    let Geom { b, h, w, c } = g;
+    debug_assert_eq!(x.len(), g.len());
+    debug_assert!(h % patch == 0 && w % patch == 0);
+    let (gh, gw) = (h / patch, w / patch);
+    let ppc = patch * patch * c;
+    let mut out = vec![0.0f32; b * gh * gw * ppc];
+    for n in 0..b {
+        for py in 0..gh {
+            for px in 0..gw {
+                let tok = (n * gh + py) * gw + px;
+                for dy in 0..patch {
+                    let src = ((n * h + py * patch + dy) * w + px * patch) * c;
+                    let dst = tok * ppc + dy * patch * c;
+                    out[dst..dst + patch * c].copy_from_slice(&x[src..src + patch * c]);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`patchify`] for the backward pass: scatters token-space
+/// gradients back onto the image (a pure permutation — exact).
+pub fn unpatchify(dp: &[f32], g: Geom, patch: usize) -> Vec<f32> {
+    let Geom { b, h, w, c } = g;
+    let (gh, gw) = (h / patch, w / patch);
+    let ppc = patch * patch * c;
+    debug_assert_eq!(dp.len(), b * gh * gw * ppc);
+    let mut out = vec![0.0f32; g.len()];
+    for n in 0..b {
+        for py in 0..gh {
+            for px in 0..gw {
+                let tok = (n * gh + py) * gw + px;
+                for dy in 0..patch {
+                    let dst = ((n * h + py * patch + dy) * w + px * patch) * c;
+                    let src = tok * ppc + dy * patch * c;
+                    out[dst..dst + patch * c].copy_from_slice(&dp[src..src + patch * c]);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Copy head `hd`'s `dh` columns out of an interleaved `[n·t, dm]` buffer
+/// into a contiguous `[t, dh]` staging slice.
+fn gather_head(src: &[f32], dst: &mut [f32], n: usize, t: usize, dm: usize, off: usize, dh: usize) {
+    for i in 0..t {
+        let s = (n * t + i) * dm + off;
+        dst[i * dh..(i + 1) * dh].copy_from_slice(&src[s..s + dh]);
+    }
+}
+
+/// Inverse of [`gather_head`]: write a `[t, dh]` staging slice back into
+/// head `hd`'s columns.
+fn scatter_head(src: &[f32], dst: &mut [f32], n: usize, t: usize, dm: usize, off: usize, dh: usize) {
+    for i in 0..t {
+        let d = (n * t + i) * dm + off;
+        dst[d..d + dh].copy_from_slice(&src[i * dh..(i + 1) * dh]);
+    }
+}
+
+/// Multi-head softmax attention core on projected Q/K/V buffers
+/// (`[b·t, dm]`, heads side by side): per (sample, head),
+/// `P = softmax(Qh·Khᵀ/√dh)` and `Oh = P·Vh`, heads re-concatenated into
+/// `[b·t, dm]`.  Returns `(probs, concat)` — `probs` is `[b, heads, t, t]`
+/// and is retained by the tape for the backward pass.
+///
+/// Head slices are gathered into contiguous arena staging so every GEMM
+/// runs on the tiered microkernel; (sample, head) pairs run in a fixed
+/// ascending order and each output element is written exactly once, so
+/// the determinism contract extends verbatim.
+pub fn mhsa_fwd(
+    scratch: &mut Scratch,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    b: usize,
+    t: usize,
+    dm: usize,
+    heads: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(q.len(), b * t * dm);
+    debug_assert_eq!(k.len(), q.len());
+    debug_assert_eq!(v.len(), q.len());
+    debug_assert!(heads >= 1 && dm % heads == 0);
+    let dh = dm / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut probs = vec![0.0f32; b * heads * t * t];
+    let mut concat = vec![0.0f32; b * t * dm];
+    let tier = scratch.tier;
+    let Scratch { pa, pb, qh, kh, vh, oh, .. } = scratch;
+    qh.resize(t * dh, 0.0);
+    kh.resize(t * dh, 0.0);
+    vh.resize(t * dh, 0.0);
+    oh.resize(t * dh, 0.0);
+    for n in 0..b {
+        for hd in 0..heads {
+            let off = hd * dh;
+            gather_head(q, qh, n, t, dm, off, dh);
+            gather_head(k, kh, n, t, dm, off, dh);
+            gather_head(v, vh, n, t, dm, off, dh);
+            let p = &mut probs[(n * heads + hd) * t * t..(n * heads + hd + 1) * t * t];
+            // Scores straight into the tape chunk, scaled, softmaxed in place.
+            gemm_with_tier(
+                tier,
+                p,
+                t,
+                t,
+                dh,
+                MatView::rows(qh, dh),
+                MatView::transposed(kh, dh),
+                Epilogue::None,
+                false,
+                pa,
+                pb,
+            );
+            for s in p.iter_mut() {
+                *s *= scale;
+            }
+            softmax_rows(p, t, t);
+            gemm_with_tier(
+                tier,
+                oh,
+                t,
+                dh,
+                t,
+                MatView::rows(p, t),
+                MatView::rows(vh, dh),
+                Epilogue::None,
+                false,
+                pa,
+                pb,
+            );
+            scatter_head(oh, &mut concat, n, t, dm, off, dh);
+        }
+    }
+    (probs, concat)
+}
+
+/// Backward of [`mhsa_fwd`]: given the taped `probs` and the cotangent of
+/// the concatenated head outputs, returns `(d_q, d_k, d_v)`.
+#[allow(clippy::too_many_arguments)]
+pub fn mhsa_bwd(
+    scratch: &mut Scratch,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    probs: &[f32],
+    d_concat: &[f32],
+    b: usize,
+    t: usize,
+    dm: usize,
+    heads: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(probs.len(), b * heads * t * t);
+    debug_assert_eq!(d_concat.len(), b * t * dm);
+    let dh = dm / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut d_q = vec![0.0f32; b * t * dm];
+    let mut d_k = vec![0.0f32; b * t * dm];
+    let mut d_v = vec![0.0f32; b * t * dm];
+    let tier = scratch.tier;
+    let Scratch { pa, pb, qh, kh, vh, oh, sd, .. } = scratch;
+    qh.resize(t * dh, 0.0);
+    kh.resize(t * dh, 0.0);
+    vh.resize(t * dh, 0.0);
+    oh.resize(t * dh, 0.0);
+    sd.resize(t * t, 0.0);
+    for n in 0..b {
+        for hd in 0..heads {
+            let off = hd * dh;
+            gather_head(q, qh, n, t, dm, off, dh);
+            gather_head(k, kh, n, t, dm, off, dh);
+            gather_head(v, vh, n, t, dm, off, dh);
+            gather_head(d_concat, oh, n, t, dm, off, dh);
+            let p = &probs[(n * heads + hd) * t * t..(n * heads + hd + 1) * t * t];
+            // dP = dOh · Vhᵀ.
+            gemm_with_tier(
+                tier,
+                sd,
+                t,
+                t,
+                dh,
+                MatView::rows(oh, dh),
+                MatView::transposed(vh, dh),
+                Epilogue::None,
+                false,
+                pa,
+                pb,
+            );
+            // dVh = Pᵀ · dOh — staged through vh, whose gather is no
+            // longer needed once dP is out.
+            gemm_with_tier(
+                tier,
+                vh,
+                t,
+                dh,
+                t,
+                MatView::transposed(p, t),
+                MatView::rows(oh, dh),
+                Epilogue::None,
+                false,
+                pa,
+                pb,
+            );
+            scatter_head(vh, &mut d_v, n, t, dm, off, dh);
+            // Softmax VJP in place, with the 1/√dh score scale folded in:
+            // dS = scale · P ⊙ (dP − rowsum(dP ⊙ P)).
+            for i in 0..t {
+                let prow = &p[i * t..(i + 1) * t];
+                let srow = &mut sd[i * t..(i + 1) * t];
+                let mut dot = 0.0f32;
+                for j in 0..t {
+                    dot += srow[j] * prow[j];
+                }
+                for j in 0..t {
+                    srow[j] = scale * prow[j] * (srow[j] - dot);
+                }
+            }
+            // dQh = dS · Kh (oh's cotangent gather is consumed already).
+            gemm_with_tier(
+                tier,
+                oh,
+                t,
+                dh,
+                t,
+                MatView::rows(sd, t),
+                MatView::rows(kh, dh),
+                Epilogue::None,
+                false,
+                pa,
+                pb,
+            );
+            scatter_head(oh, &mut d_q, n, t, dm, off, dh);
+            // dKh = dSᵀ · Qh — staged through vh again.
+            gemm_with_tier(
+                tier,
+                vh,
+                t,
+                dh,
+                t,
+                MatView::transposed(sd, t),
+                MatView::rows(qh, dh),
+                Epilogue::None,
+                false,
+                pa,
+                pb,
+            );
+            scatter_head(vh, &mut d_k, n, t, dm, off, dh);
+        }
+    }
+    (d_q, d_k, d_v)
+}
+
 #[cfg(test)]
 pub(crate) mod tests {
     use super::super::reference;
@@ -747,5 +1134,166 @@ pub(crate) mod tests {
         let logits = vec![1.0f32, 1.0, 0.0, 0.0, 0.0, 1.0];
         let y1h = vec![1.0f32, 0.0, 0.0, 0.0, 0.0, 1.0];
         assert_eq!(correct_count(&logits, &y1h, 2, 3), 2.0);
+    }
+
+    #[test]
+    fn softmax_rows_normalizes_each_row() {
+        let mut x = gen_vec(80_000, 5 * 7).iter().map(|&v| v * 3.0).collect::<Vec<_>>();
+        softmax_rows(&mut x, 5, 7);
+        for (n, row) in x.chunks(7).enumerate() {
+            let s: f64 = row.iter().map(|&v| v as f64).sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {n} sums to {s}");
+            assert!(row.iter().all(|&v| v >= 0.0), "row {n} has negative mass");
+        }
+    }
+
+    #[test]
+    fn patchify_roundtrips_and_conserves_gradient_mass() {
+        let g = Geom { b: 2, h: 8, w: 4, c: 3 };
+        let x = gen_vec(81_000, g.len());
+        let p = patchify(&x, g, 2);
+        assert_eq!(p.len(), x.len()); // pure permutation
+        let back = unpatchify(&p, g, 2);
+        assert_eq!(back, x);
+        // Probe the layout: token 0 of image 0 starts at pixel (0,0).
+        assert_eq!(p[0], x[0]);
+        assert_eq!(&p[2 * 3..2 * 3 + 3], &x[4 * 3..4 * 3 + 3]); // (dy=1,dx=0)
+    }
+
+    /// Satellite acceptance: layernorm fast path ≡ scalar reference to
+    /// 1e-5 on awkward row widths (including d=1, where var=0 and rstd
+    /// saturates at 1/√ε).
+    #[test]
+    fn property_layernorm_equals_reference() {
+        check("layernorm-vs-reference", 48, |rng| {
+            let rows = 1 + rng.below(6);
+            let d = 1 + rng.below(40);
+            let x: Vec<f32> = (0..rows * d).map(|_| rng.normal() as f32 * 0.5).collect();
+            let gamma: Vec<f32> = (0..d).map(|_| 1.0 + rng.normal() as f32 * 0.2).collect();
+            let beta: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 0.5).collect();
+            let dy: Vec<f32> = (0..rows * d).map(|_| rng.normal() as f32 * 0.5).collect();
+            let (out_f, mean_f, rstd_f) = layernorm_fwd(&x, rows, d, &gamma, &beta);
+            let (out_r, mean_r, rstd_r) = reference::layernorm_fwd(&x, rows, d, &gamma, &beta);
+            // Error scale grows with rstd (tiny-variance rows amplify the
+            // f32-vs-f64 statistics gap), so fold the worst row in.
+            let amp = 1.0 + rstd_r.iter().fold(0.0f32, |a, &v| a.max(v));
+            for (tag, f, r) in
+                [("out", &out_f, &out_r), ("mean", &mean_f, &mean_r), ("rstd", &rstd_f, &rstd_r)]
+            {
+                for (i, (a, b)) in f.iter().zip(r.iter()).enumerate() {
+                    prop_assert!(
+                        (a - b).abs() <= 1e-5 * (1.0 + b.abs()) * amp,
+                        "{tag}[{i}]: {a} vs {b} ({rows}x{d})"
+                    );
+                }
+            }
+            let (dx_f, dg_f, db_f) = layernorm_bwd(&x, &mean_f, &rstd_f, &gamma, rows, d, &dy);
+            let (dx_r, dg_r, db_r) =
+                reference::layernorm_bwd(&x, &mean_r, &rstd_r, &gamma, rows, d, &dy);
+            for (tag, f, r) in [("d_x", &dx_f, &dx_r), ("d_g", &dg_f, &dg_r), ("d_b", &db_f, &db_r)]
+            {
+                for (i, (a, b)) in f.iter().zip(r.iter()).enumerate() {
+                    prop_assert!(
+                        (a - b).abs() <= 2e-5 * (1.0 + b.abs()) * amp,
+                        "{tag}[{i}]: {a} vs {b} ({rows}x{d})"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_gelu_equals_reference() {
+        check("gelu-vs-reference", 48, |rng| {
+            let n = 1 + rng.below(64);
+            let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 2.0).collect();
+            let d0: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let y_f = gelu_fwd(&x);
+            let y_r = reference::gelu_fwd(&x);
+            for (i, (a, b)) in y_f.iter().zip(&y_r).enumerate() {
+                prop_assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "fwd[{i}]: {a} vs {b}");
+            }
+            let mut d_f = d0.clone();
+            gelu_bwd(&mut d_f, &x);
+            let mut d_r = d0;
+            reference::gelu_bwd(&mut d_r, &x);
+            for (i, (a, b)) in d_f.iter().zip(&d_r).enumerate() {
+                prop_assert!((a - b).abs() <= 1e-5 * (1.0 + b.abs()), "bwd[{i}]: {a} vs {b}");
+            }
+            Ok(())
+        });
+    }
+
+    /// Satellite acceptance: the GEMM-path attention core ≡ the f64
+    /// scalar reference to 1e-5 on awkward token counts / head widths.
+    #[test]
+    fn property_mhsa_equals_reference() {
+        let mut s = Scratch::new();
+        check("mhsa-vs-reference", 32, |rng| {
+            let b = 1 + rng.below(2);
+            let t = 1 + rng.below(9);
+            let heads = 1 + rng.below(3);
+            let dh = 1 + rng.below(9);
+            let dm = heads * dh;
+            let mk = |scale: f32| -> Vec<f32> {
+                (0..b * t * dm).map(|_| rng.normal() as f32 * scale).collect()
+            };
+            let (q, k, v) = (mk(0.5), mk(0.5), mk(0.5));
+            let d_cat = mk(0.5);
+            let (p_f, cat_f) = mhsa_fwd(&mut s, &q, &k, &v, b, t, dm, heads);
+            let (p_r, cat_r) = reference::mhsa_fwd(&q, &k, &v, b, t, dm, heads);
+            for (tag, f, r) in [("probs", &p_f, &p_r), ("concat", &cat_f, &cat_r)] {
+                for (i, (a, bb)) in f.iter().zip(r.iter()).enumerate() {
+                    prop_assert!(
+                        (a - bb).abs() <= 1e-5 * (1.0 + bb.abs()),
+                        "{tag}[{i}]: {a} vs {bb} (b{b} t{t} h{heads} dh{dh})"
+                    );
+                }
+            }
+            let (dq_f, dk_f, dv_f) = mhsa_bwd(&mut s, &q, &k, &v, &p_f, &d_cat, b, t, dm, heads);
+            let (dq_r, dk_r, dv_r) = reference::mhsa_bwd(&q, &k, &v, &p_r, &d_cat, b, t, dm, heads);
+            for (tag, f, r) in [("d_q", &dq_f, &dq_r), ("d_k", &dk_f, &dk_r), ("d_v", &dv_f, &dv_r)]
+            {
+                for (i, (a, bb)) in f.iter().zip(r.iter()).enumerate() {
+                    prop_assert!(
+                        (a - bb).abs() <= 2e-5 * (1.0 + bb.abs()),
+                        "{tag}[{i}]: {a} vs {bb} (b{b} t{t} h{heads} dh{dh})"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The scratch-purity contract extends to the attention staging
+    /// buffers: NaN-poisoned gathers change nothing, bitwise.
+    #[test]
+    fn attention_does_not_depend_on_scratch_contents() {
+        let (b, t, heads, dh) = (2usize, 5usize, 2usize, 4usize);
+        let dm = heads * dh;
+        let q = gen_vec(90_000, b * t * dm);
+        let k = gen_vec(91_000, b * t * dm);
+        let v = gen_vec(92_000, b * t * dm);
+        let d_cat = gen_vec(93_000, b * t * dm);
+        let run = |s: &mut Scratch| {
+            let (p, cat) = mhsa_fwd(s, &q, &k, &v, b, t, dm, heads);
+            let (dq, dk, dv) = mhsa_bwd(s, &q, &k, &v, &p, &d_cat, b, t, dm, heads);
+            [p, cat, dq, dk, dv].concat()
+        };
+        let clean = run(&mut Scratch::new());
+        let mut dirty = Scratch::new();
+        dirty.pa = vec![f32::NAN; 13];
+        dirty.pb = vec![f32::NAN; 64];
+        dirty.qh = vec![f32::NAN; 1000];
+        dirty.kh = vec![f32::NAN; 3];
+        dirty.vh = vec![f32::NAN; 77];
+        dirty.oh = vec![f32::NAN; 500];
+        dirty.sd = vec![f32::NAN; 9];
+        let poisoned = run(&mut dirty);
+        assert_eq!(clean.len(), poisoned.len());
+        for (i, (a, bb)) in clean.iter().zip(&poisoned).enumerate() {
+            assert_eq!(a.to_bits(), bb.to_bits(), "[{i}]: {a} vs {bb} under dirty scratch");
+        }
     }
 }

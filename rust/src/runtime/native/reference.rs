@@ -213,6 +213,213 @@ pub fn dense_bwd(
     (d_x, d_w, d_b)
 }
 
+/// Scalar layernorm twin of [`super::ops::layernorm_fwd`], with f64 row
+/// statistics: the independent oracle the ≤1e-5 property tests compare
+/// the fast path against.
+pub fn layernorm_fwd(
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    gamma: &[f32],
+    beta: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let eps = super::ops::LN_EPS as f64;
+    let mut out = vec![0.0f32; rows * d];
+    let mut mean = vec![0.0f32; rows];
+    let mut rstd = vec![0.0f32; rows];
+    for n in 0..rows {
+        let xrow = &x[n * d..(n + 1) * d];
+        let mu: f64 = xrow.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
+        let var: f64 =
+            xrow.iter().map(|&v| (v as f64 - mu) * (v as f64 - mu)).sum::<f64>() / d as f64;
+        let rs = 1.0 / (var + eps).sqrt();
+        mean[n] = mu as f32;
+        rstd[n] = rs as f32;
+        for j in 0..d {
+            out[n * d + j] =
+                (((xrow[j] as f64 - mu) * rs) * gamma[j] as f64 + beta[j] as f64) as f32;
+        }
+    }
+    (out, mean, rstd)
+}
+
+/// Scalar twin of [`super::ops::layernorm_bwd`] (f64 accumulation).
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm_bwd(
+    x: &[f32],
+    mean: &[f32],
+    rstd: &[f32],
+    gamma: &[f32],
+    rows: usize,
+    d: usize,
+    dy: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut d_x = vec![0.0f32; rows * d];
+    let mut d_g = vec![0.0f64; d];
+    let mut d_b = vec![0.0f64; d];
+    for n in 0..rows {
+        let (mu, rs) = (mean[n] as f64, rstd[n] as f64);
+        let xrow = &x[n * d..(n + 1) * d];
+        let dyrow = &dy[n * d..(n + 1) * d];
+        let mut a = 0.0f64;
+        let mut b = 0.0f64;
+        for j in 0..d {
+            let g = dyrow[j] as f64 * gamma[j] as f64;
+            a += g;
+            b += g * (xrow[j] as f64 - mu) * rs;
+        }
+        a /= d as f64;
+        b /= d as f64;
+        for j in 0..d {
+            let xhat = (xrow[j] as f64 - mu) * rs;
+            d_x[n * d + j] = (rs * (dyrow[j] as f64 * gamma[j] as f64 - a - xhat * b)) as f32;
+            d_g[j] += dyrow[j] as f64 * xhat;
+            d_b[j] += dyrow[j] as f64;
+        }
+    }
+    let to32 = |v: Vec<f64>| v.into_iter().map(|x| x as f32).collect::<Vec<f32>>();
+    (d_x, to32(d_g), to32(d_b))
+}
+
+/// Scalar GELU twin (tanh approximation, f64 arithmetic).
+pub fn gelu_fwd(x: &[f32]) -> Vec<f32> {
+    let c = (2.0f64 / std::f64::consts::PI).sqrt();
+    x.iter()
+        .map(|&v| {
+            let v = v as f64;
+            let u = c * (v + 0.044715 * v * v * v);
+            (0.5 * v * (1.0 + u.tanh())) as f32
+        })
+        .collect()
+}
+
+/// Scalar GELU VJP twin: multiplies `d` in place by dGELU/dx at `x_pre`.
+pub fn gelu_bwd(d: &mut [f32], x_pre: &[f32]) {
+    let c = (2.0f64 / std::f64::consts::PI).sqrt();
+    for (dv, &v) in d.iter_mut().zip(x_pre) {
+        let v = v as f64;
+        let u = c * (v + 0.044715 * v * v * v);
+        let t = u.tanh();
+        let du = c * (1.0 + 3.0 * 0.044715 * v * v);
+        *dv = (*dv as f64 * (0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du)) as f32;
+    }
+}
+
+/// Scalar multi-head attention twin of [`super::ops::mhsa_fwd`]: naive
+/// f64 loops, softmax in f64.  Returns `(probs, concat)` in the same
+/// `[b, heads, t, t]` / `[b·t, dm]` layouts.
+pub fn mhsa_fwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    b: usize,
+    t: usize,
+    dm: usize,
+    heads: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let dh = dm / heads;
+    let scale = 1.0 / (dh as f64).sqrt();
+    let mut probs = vec![0.0f32; b * heads * t * t];
+    let mut concat = vec![0.0f32; b * t * dm];
+    let at = |buf: &[f32], n: usize, i: usize, off: usize, l: usize| {
+        buf[(n * t + i) * dm + off + l] as f64
+    };
+    for n in 0..b {
+        for hd in 0..heads {
+            let off = hd * dh;
+            let pbase = (n * heads + hd) * t * t;
+            for i in 0..t {
+                let mut row = vec![0.0f64; t];
+                for (j, r) in row.iter_mut().enumerate() {
+                    let mut s = 0.0f64;
+                    for l in 0..dh {
+                        s += at(q, n, i, off, l) * at(k, n, j, off, l);
+                    }
+                    *r = s * scale;
+                }
+                let m = row.iter().fold(f64::NEG_INFINITY, |a, &x| a.max(x));
+                let se: f64 = row.iter().map(|&x| (x - m).exp()).sum();
+                for (j, &r) in row.iter().enumerate() {
+                    probs[pbase + i * t + j] = ((r - m).exp() / se) as f32;
+                }
+            }
+            for i in 0..t {
+                for l in 0..dh {
+                    let mut s = 0.0f64;
+                    for j in 0..t {
+                        s += probs[pbase + i * t + j] as f64 * at(v, n, j, off, l);
+                    }
+                    concat[(n * t + i) * dm + off + l] = s as f32;
+                }
+            }
+        }
+    }
+    (probs, concat)
+}
+
+/// Scalar twin of [`super::ops::mhsa_bwd`] (naive f64 loops).
+#[allow(clippy::too_many_arguments)]
+pub fn mhsa_bwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    probs: &[f32],
+    d_concat: &[f32],
+    b: usize,
+    t: usize,
+    dm: usize,
+    heads: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let dh = dm / heads;
+    let scale = 1.0 / (dh as f64).sqrt();
+    let mut d_q = vec![0.0f32; b * t * dm];
+    let mut d_k = vec![0.0f32; b * t * dm];
+    let mut d_v = vec![0.0f32; b * t * dm];
+    let at = |buf: &[f32], n: usize, i: usize, off: usize, l: usize| {
+        buf[(n * t + i) * dm + off + l] as f64
+    };
+    for n in 0..b {
+        for hd in 0..heads {
+            let off = hd * dh;
+            let pbase = (n * heads + hd) * t * t;
+            // dP, then the softmax VJP with the score scale folded in.
+            let mut ds = vec![0.0f64; t * t];
+            for i in 0..t {
+                for j in 0..t {
+                    let mut s = 0.0f64;
+                    for l in 0..dh {
+                        s += at(d_concat, n, i, off, l) * at(v, n, j, off, l);
+                    }
+                    ds[i * t + j] = s;
+                }
+                let dot: f64 = (0..t)
+                    .map(|j| ds[i * t + j] * probs[pbase + i * t + j] as f64)
+                    .sum();
+                for j in 0..t {
+                    ds[i * t + j] =
+                        scale * probs[pbase + i * t + j] as f64 * (ds[i * t + j] - dot);
+                }
+            }
+            for i in 0..t {
+                for l in 0..dh {
+                    let mut sq = 0.0f64;
+                    let mut sk = 0.0f64;
+                    let mut sv = 0.0f64;
+                    for j in 0..t {
+                        sq += ds[i * t + j] * at(k, n, j, off, l);
+                        sk += ds[j * t + i] * at(q, n, j, off, l);
+                        sv += probs[pbase + j * t + i] as f64 * at(d_concat, n, j, off, l);
+                    }
+                    d_q[(n * t + i) * dm + off + l] = sq as f32;
+                    d_k[(n * t + i) * dm + off + l] = sk as f32;
+                    d_v[(n * t + i) * dm + off + l] = sv as f32;
+                }
+            }
+        }
+    }
+    (d_q, d_k, d_v)
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::ops::tests::gen_vec;
@@ -252,5 +459,107 @@ mod tests {
         let b = gen_vec(960, 5);
         let out = dense_fwd(&x, 3, 7, 5, &w, &b, true);
         assert!(close(fsum(&out), 1.689208984375, 1e-4), "dense {}", fsum(&out));
+    }
+
+    /// Central finite difference of `<f(x), d_out>` along coordinate `p`.
+    fn fd_probe(mut f: impl FnMut(&[f32]) -> Vec<f32>, x: &[f32], d_out: &[f32], p: usize) -> f64 {
+        let h = 1e-3f32;
+        let dot = |out: &[f32]| -> f64 {
+            out.iter().zip(d_out).map(|(&o, &d)| (o * d) as f64).sum()
+        };
+        let mut xp = x.to_vec();
+        xp[p] += h;
+        let up = dot(&f(&xp));
+        xp[p] -= 2.0 * h;
+        let dn = dot(&f(&xp));
+        (up - dn) / (2.0 * h as f64)
+    }
+
+    // The new reference twins are validated by calculus (finite
+    // differences), not JAX goldens — they are themselves the oracle the
+    // fast-path property tests compare against.
+    #[test]
+    fn reference_layernorm_bwd_matches_finite_difference() {
+        let (rows, d) = (3usize, 11usize);
+        let x = gen_vec(2_000, rows * d);
+        let gamma: Vec<f32> = gen_vec(2_100, d).iter().map(|v| 1.0 + v * 0.3).collect();
+        let beta = gen_vec(2_200, d);
+        let dy = gen_vec(2_300, rows * d);
+        let (_out, mean, rstd) = layernorm_fwd(&x, rows, d, &gamma, &beta);
+        let (d_x, d_g, d_b) = layernorm_bwd(&x, &mean, &rstd, &gamma, rows, d, &dy);
+        for p in [0usize, 7, rows * d - 1] {
+            let fd = fd_probe(|xx| layernorm_fwd(xx, rows, d, &gamma, &beta).0, &x, &dy, p);
+            assert!(
+                (fd - d_x[p] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                "d_x[{p}]: fd {fd} vs analytic {}",
+                d_x[p]
+            );
+        }
+        for p in [0usize, d - 1] {
+            let fd = fd_probe(|gg| layernorm_fwd(&x, rows, d, gg, &beta).0, &gamma, &dy, p);
+            assert!(
+                (fd - d_g[p] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                "d_g[{p}]: fd {fd} vs analytic {}",
+                d_g[p]
+            );
+            let fdb = fd_probe(|bb| layernorm_fwd(&x, rows, d, &gamma, bb).0, &beta, &dy, p);
+            assert!(
+                (fdb - d_b[p] as f64).abs() < 2e-2 * (1.0 + fdb.abs()),
+                "d_b[{p}]: fd {fdb} vs analytic {}",
+                d_b[p]
+            );
+        }
+    }
+
+    #[test]
+    fn reference_gelu_bwd_matches_finite_difference() {
+        let x = gen_vec(3_000, 9);
+        let dy = gen_vec(3_100, 9);
+        let mut d = dy.clone();
+        gelu_bwd(&mut d, &x);
+        for p in 0..x.len() {
+            let fd = fd_probe(gelu_fwd, &x, &dy, p);
+            assert!(
+                (fd - d[p] as f64).abs() < 1e-2 * (1.0 + fd.abs()),
+                "gelu d[{p}]: fd {fd} vs analytic {}",
+                d[p]
+            );
+        }
+        // GELU values bracket the identity: gelu(x) ≈ x for large x, ≈ 0
+        // for very negative x.
+        let y = gelu_fwd(&[5.0, -5.0, 0.0]);
+        assert!((y[0] - 5.0).abs() < 1e-3 && y[1].abs() < 1e-3 && y[2] == 0.0);
+    }
+
+    #[test]
+    fn reference_mhsa_bwd_matches_finite_difference() {
+        let (b, t, heads, dh) = (1usize, 4usize, 2usize, 3usize);
+        let dm = heads * dh;
+        let q = gen_vec(4_000, b * t * dm);
+        let k = gen_vec(4_100, b * t * dm);
+        let v = gen_vec(4_200, b * t * dm);
+        let d_cat = gen_vec(4_300, b * t * dm);
+        let (probs, _cat) = mhsa_fwd(&q, &k, &v, b, t, dm, heads);
+        let (d_q, d_k, d_v) = mhsa_bwd(&q, &k, &v, &probs, &d_cat, b, t, dm, heads);
+        for p in [0usize, 5, b * t * dm - 1] {
+            let fd = fd_probe(|qq| mhsa_fwd(qq, &k, &v, b, t, dm, heads).1, &q, &d_cat, p);
+            assert!(
+                (fd - d_q[p] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                "d_q[{p}]: fd {fd} vs analytic {}",
+                d_q[p]
+            );
+            let fdk = fd_probe(|kk| mhsa_fwd(&q, kk, &v, b, t, dm, heads).1, &k, &d_cat, p);
+            assert!(
+                (fdk - d_k[p] as f64).abs() < 2e-2 * (1.0 + fdk.abs()),
+                "d_k[{p}]: fd {fdk} vs analytic {}",
+                d_k[p]
+            );
+            let fdv = fd_probe(|vv| mhsa_fwd(&q, &k, vv, b, t, dm, heads).1, &v, &d_cat, p);
+            assert!(
+                (fdv - d_v[p] as f64).abs() < 2e-2 * (1.0 + fdv.abs()),
+                "d_v[{p}]: fd {fdv} vs analytic {}",
+                d_v[p]
+            );
+        }
     }
 }

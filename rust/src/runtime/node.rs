@@ -18,7 +18,7 @@
 
 use crate::data::partition::Partition;
 use crate::data::population::ClientSampler;
-use crate::model::Manifest;
+use crate::model::registry;
 use crate::protocol::{Msg, RunSetup, PROTO_VERSION};
 use crate::runtime::{ModelRuntime, Tensor};
 use crate::tensor::{self, Params};
@@ -95,7 +95,10 @@ impl ParticipantNode {
             Msg::FwdReq { seq, cut, step, wc } => {
                 let id = self.id;
                 let st = self.state()?;
-                let cut = *cut as usize;
+                // The decoder only checks cut ≥ 1; membership in the
+                // peer-agreed menu is validated here, against the model
+                // the RunSetup configured.
+                let cut = st.rt.spec().menu().validate(*cut as usize)?;
                 let nc = st.rt.spec().cut(cut).client_params;
                 anyhow::ensure!(
                     wc.len() == nc,
@@ -151,8 +154,17 @@ impl ParticipantNode {
     }
 
     fn configure(&mut self, setup: &RunSetup) -> anyhow::Result<()> {
-        let manifest = Manifest::builtin();
+        let manifest = registry::manifest(&setup.model)?;
         let rt = ModelRuntime::native(&manifest, &setup.dataset)?;
+        // Both binaries resolve the menu from the model id independently;
+        // the announced length pins them to the same registry vintage.
+        anyhow::ensure!(
+            rt.spec().num_cuts() == setup.num_cuts as usize,
+            "model '{}' has {} cuts here, coordinator announced {}",
+            setup.model,
+            rt.spec().num_cuts(),
+            setup.num_cuts
+        );
         let sampler = ClientSampler::new(
             rt.spec(),
             &setup.dataset,
@@ -175,6 +187,8 @@ mod tests {
             seed: 17,
             partition: "iid".into(),
             samples_per_client: 64,
+            model: "builtin".into(),
+            num_cuts: 4,
         }
     }
 
@@ -187,7 +201,7 @@ mod tests {
     #[test]
     fn fwd_bwd_cycle_produces_client_grad() {
         let mut node = welcomed(0);
-        let manifest = Manifest::builtin();
+        let manifest = crate::model::Manifest::builtin();
         let rt = ModelRuntime::native(&manifest, "mnist").unwrap();
         let cut = 2usize;
         let nc = rt.spec().cut(cut).client_params;
@@ -232,7 +246,7 @@ mod tests {
         // Wrong layer count for the cut.
         assert!(node.handle(&Msg::FwdReq { seq: 0, cut: 2, step: 0, wc: Params::new() }).is_err());
         // Seq mismatch between fwd and bwd.
-        let manifest = Manifest::builtin();
+        let manifest = crate::model::Manifest::builtin();
         let rt = ModelRuntime::native(&manifest, "mnist").unwrap();
         let nc = rt.spec().cut(1).client_params;
         let wc = crate::data::init::init_params(rt.spec(), 17 ^ 0x1417)[..nc].to_vec();
@@ -251,7 +265,7 @@ mod tests {
         assert!(node.ready());
         // …and a Sync on an already-running node (coordinator-blip
         // rejoin) drops any stale forward context.
-        let manifest = Manifest::builtin();
+        let manifest = crate::model::Manifest::builtin();
         let rt = ModelRuntime::native(&manifest, "mnist").unwrap();
         let nc = rt.spec().cut(1).client_params;
         let wc = crate::data::init::init_params(rt.spec(), 17 ^ 0x1417)[..nc].to_vec();
@@ -262,9 +276,45 @@ mod tests {
     }
 
     #[test]
+    fn out_of_menu_cut_is_a_clean_error() {
+        // The decoder lets any cut ≥ 1 through; the node is the menu
+        // gate.  builtin has 4 cuts, so 5 must be rejected, not panic.
+        let mut node = welcomed(4);
+        let err = node
+            .handle(&Msg::FwdReq { seq: 0, cut: 5, step: 0, wc: Params::new() })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("menu"), "{err}");
+    }
+
+    #[test]
+    fn menu_length_mismatch_is_rejected_at_configure() {
+        let mut node = ParticipantNode::new(5);
+        let mut s = setup();
+        s.num_cuts = 7; // coordinator from a different registry vintage
+        let err = node.handle(&Msg::Welcome { setup: s }).unwrap_err().to_string();
+        assert!(err.contains("announced"), "{err}");
+        assert!(!node.ready());
+    }
+
+    #[test]
+    fn nonbuiltin_model_configures_from_the_registry() {
+        let mut node = ParticipantNode::new(6);
+        let mut s = setup();
+        s.model = "txf".into();
+        s.num_cuts = 3;
+        node.handle(&Msg::Welcome { setup: s }).unwrap();
+        assert!(node.ready());
+        // A builtin-menu cut past txf's 3-cut menu is now out of range.
+        assert!(node
+            .handle(&Msg::FwdReq { seq: 0, cut: 4, step: 0, wc: Params::new() })
+            .is_err());
+    }
+
+    #[test]
     fn round_done_clears_inflight_context() {
         let mut node = welcomed(2);
-        let manifest = Manifest::builtin();
+        let manifest = crate::model::Manifest::builtin();
         let rt = ModelRuntime::native(&manifest, "mnist").unwrap();
         let nc = rt.spec().cut(1).client_params;
         let wc = crate::data::init::init_params(rt.spec(), 17 ^ 0x1417)[..nc].to_vec();

@@ -5,8 +5,9 @@
 //!
 //! Ownership model (see DESIGN.md §Native backend):
 //!
-//! * [`Scratch`] is the arena itself — five named growable `f32` buffers
-//!   that the GEMM/im2col kernels resize (never shrink) to the largest
+//! * [`Scratch`] is the arena itself — named growable `f32` buffers
+//!   (im2col staging, packed GEMM panels, per-head attention gathers)
+//!   that the kernels resize (never shrink) to the largest
 //!   shape they have seen.  A steady-state round performs ZERO scratch
 //!   allocations.  It also carries the GEMM microkernel [`Tier`] every
 //!   kernel call through this arena runs on (defaulting to the
@@ -51,6 +52,16 @@ pub struct Scratch {
     /// packs its weight matrix here ONCE per call and replays the panels
     /// across every image of the batch (`gemm_packed_b`).
     pub pw: Vec<f32>,
+    /// Per-head attention gathers (`t × dh` each): query, key and value
+    /// head slices copied out of the interleaved `[rows, dm]` buffers so
+    /// the per-head GEMMs run on contiguous operands (`native::ops::mhsa_fwd`).
+    pub qh: Vec<f32>,
+    pub kh: Vec<f32>,
+    pub vh: Vec<f32>,
+    /// Per-head output / cotangent staging (`t × dh`).
+    pub oh: Vec<f32>,
+    /// Per-head score-gradient staging (`t × t`, `mhsa_bwd`).
+    pub sd: Vec<f32>,
 }
 
 impl Default for Scratch {
@@ -62,6 +73,11 @@ impl Default for Scratch {
             pa: Vec::new(),
             pb: Vec::new(),
             pw: Vec::new(),
+            qh: Vec::new(),
+            kh: Vec::new(),
+            vh: Vec::new(),
+            oh: Vec::new(),
+            sd: Vec::new(),
         }
     }
 }
@@ -83,7 +99,12 @@ impl Scratch {
             + self.dcol.capacity()
             + self.pa.capacity()
             + self.pb.capacity()
-            + self.pw.capacity())
+            + self.pw.capacity()
+            + self.qh.capacity()
+            + self.kh.capacity()
+            + self.vh.capacity()
+            + self.oh.capacity()
+            + self.sd.capacity())
             * std::mem::size_of::<f32>()
     }
 }

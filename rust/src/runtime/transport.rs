@@ -516,6 +516,8 @@ mod tests {
                 seed: 17,
                 partition: "iid".into(),
                 samples_per_client: 64,
+                model: "builtin".into(),
+                num_cuts: 4,
             },
         }
     }

@@ -91,6 +91,20 @@ impl Args {
         self.parse_or("threads", 0usize)
     }
 
+    /// `--model builtin|vgg|txf`: the model-registry architecture id,
+    /// shared by `train`, `optimize`, the networked binaries and the
+    /// examples.  Validated against the registry here so every consumer
+    /// reports the same "unknown model" error with the menu of options.
+    pub fn model(&self) -> anyhow::Result<String> {
+        let name = self.str_or("model", "builtin");
+        anyhow::ensure!(
+            crate::model::registry::MODELS.contains(&name.as_str()),
+            "unknown model '{name}' (available: {})",
+            crate::model::registry::MODELS.join(", ")
+        );
+        Ok(name)
+    }
+
     /// The scenario flags, shared by `train`, `optimize`, `figures` and
     /// the examples:
     ///
@@ -222,6 +236,15 @@ mod tests {
         assert!(parse(&["--participation", "0"]).scenario().is_err());
         assert!(parse(&["--partition", "zipf:1"]).scenario().is_err());
         assert!(parse(&["--straggler", "2x2"]).scenario().is_err());
+    }
+
+    #[test]
+    fn model_flag_validates_against_the_registry() {
+        assert_eq!(parse(&[]).model().unwrap(), "builtin");
+        assert_eq!(parse(&["--model", "vgg"]).model().unwrap(), "vgg");
+        assert_eq!(parse(&["--model=txf"]).model().unwrap(), "txf");
+        let err = parse(&["--model", "resnet"]).model().unwrap_err().to_string();
+        assert!(err.contains("builtin, vgg, txf"), "{err}");
     }
 
     #[test]

@@ -28,7 +28,7 @@
 
 use sfl_ga::coordinator::{AllocPolicy, SchemeKind, TrainConfig, Trainer};
 use sfl_ga::data::partition::Partition;
-use sfl_ga::model::Manifest;
+use sfl_ga::model::{registry, Manifest};
 use sfl_ga::scenario::{ScenarioConfig, StragglerConfig};
 
 /// Full eval curve as raw bits: (round, train_loss, test_loss, test_acc).
@@ -197,6 +197,51 @@ fn panel_parallel_eval_is_bitwise_equal_to_serial() {
     let (stats4, params4) = run(4);
     assert_eq!(stats1, stats4, "panel-parallel eval round stats diverge from serial");
     assert_eq!(params1, params4, "panel-parallel eval changed the final params");
+}
+
+/// The thread-count guarantee is registry-wide, not builtin-specific:
+/// the transformer stack routes every round through the layernorm /
+/// softmax-attention / GELU kernels, and its menu cuts sit at block
+/// boundaries rather than conv/dense seams.  Same contract: threads=4
+/// must reproduce threads=1 bit for bit at every menu cut.  (The
+/// threaded CI lane re-runs this whole file under SFLGA_TEST_THREADS=4,
+/// so the non-builtin path is exercised there on every PR.)
+#[test]
+fn transformer_model_rounds_are_bitwise_equal_to_serial() {
+    let manifest = registry::manifest_with_batches("txf", 8, 32).unwrap();
+    let run = |cut: usize, threads: usize| -> (Vec<u64>, Vec<u32>) {
+        let cfg = TrainConfig {
+            scheme: SchemeKind::SflGa,
+            model: "txf".into(),
+            num_clients: 3,
+            rounds: 2,
+            eval_every: 1,
+            samples_per_client: 16,
+            test_samples: 40,
+            seed: 19,
+            threads,
+            alloc: AllocPolicy::Equal,
+            ..Default::default()
+        };
+        let mut t = Trainer::native(&manifest, cfg).unwrap();
+        assert_eq!(t.threads(), threads);
+        let mut stat_bits = Vec::new();
+        for s in t.run(cut).unwrap() {
+            stat_bits.push(s.train_loss.to_bits());
+            let (tl, ta) = s.test.expect("eval_every=1 evaluates every round");
+            stat_bits.push(tl.to_bits());
+            stat_bits.push(ta.to_bits());
+        }
+        let param_bits: Vec<u32> =
+            t.global_params(cut).iter().flatten().map(|v| v.to_bits()).collect();
+        (stat_bits, param_bits)
+    };
+    for cut in manifest.for_dataset("mnist").unwrap().menu().ids() {
+        let (stats1, params1) = run(cut, 1);
+        let (stats4, params4) = run(cut, 4);
+        assert_eq!(stats1, stats4, "txf cut {cut}: threads=4 stats diverge from threads=1");
+        assert_eq!(params1, params4, "txf cut {cut}: threads=4 params diverge from threads=1");
+    }
 }
 
 /// Round stats + final global model as raw bits for a full scenario run:

@@ -1,0 +1,102 @@
+//! Registry-wide split-model contract (DESIGN.md §Model registry): for
+//! EVERY architecture in the zoo, at EVERY cut of its menu, on BOTH
+//! input geometries, the split path (client_fwd → server_grad →
+//! client_grad) must reproduce the full-model gradient EXACTLY — the
+//! two paths run the identical kernels on identical buffers, so the
+//! equality is bitwise, not approximate.  This is the `builtin`
+//! split-vs-full guarantee (`runtime/native` unit tests) promoted to a
+//! registry invariant: adding an architecture means inheriting it.
+
+use sfl_ga::data::{generate, init};
+use sfl_ga::model::registry;
+use sfl_ga::runtime::{Backend, NativeBackend, ScratchHandle, Tensor};
+use sfl_ga::tensor;
+
+/// Backend + He-init params + one deterministic batch for `(model, ds)`.
+fn setup(model: &str, ds: &str) -> (NativeBackend, Vec<Vec<f32>>, Tensor, Tensor) {
+    let manifest = registry::manifest_with_batches(model, 8, 32).unwrap();
+    let spec = manifest.for_dataset(ds).unwrap().clone();
+    let params = init::init_params(&spec, 0xC0FFEE);
+    let data = generate(&spec, ds, 8, 3);
+    let (x, y1h) = data.batch(&(0..8).collect::<Vec<_>>());
+    (NativeBackend::new(spec).unwrap(), params, x, y1h)
+}
+
+#[test]
+fn split_equals_full_bitwise_at_every_cut_of_every_arch() {
+    for model in registry::MODELS {
+        for ds in ["mnist", "cifar10"] {
+            let (be, params, x, y1h) = setup(model, ds);
+            let (loss_full, g_full) = be.full_grad(&params, &x, &y1h).unwrap();
+            assert!(loss_full.is_finite(), "{model}/{ds}: full loss {loss_full}");
+            for cut in be.spec().menu().ids() {
+                let nc = be.spec().cut(cut).client_params;
+                let smashed = be.client_fwd(cut, &params[..nc], &x).unwrap();
+                let (loss_split, g_ws, g_s) =
+                    be.server_grad(cut, &params[nc..], &smashed, &y1h).unwrap();
+                let mut g_split = be.client_grad(cut, &params[..nc], &x, &g_s).unwrap();
+                g_split.extend(g_ws);
+                assert_eq!(loss_full, loss_split, "{model}/{ds} cut {cut}: loss");
+                let diff = tensor::max_abs_diff(&g_split, &g_full);
+                assert!(diff == 0.0, "{model}/{ds} cut {cut}: split grad differs by {diff}");
+            }
+        }
+    }
+}
+
+#[test]
+fn smashed_shapes_match_the_cut_specs() {
+    for model in registry::MODELS {
+        let (be, params, x, _) = setup(model, "mnist");
+        for cut in be.spec().menu().ids() {
+            let cs = be.spec().cut(cut).clone();
+            let smashed = be.client_fwd(cut, &params[..cs.client_params], &x).unwrap();
+            assert_eq!(
+                smashed.shape, cs.smashed_shape,
+                "{model} cut {cut}: smashed shape vs manifest"
+            );
+            // φ(v) really is the client-side parameter count at this cut.
+            let phi: usize = be.spec().params[..cs.client_params].iter().map(|p| p.size()).sum();
+            assert_eq!(phi, cs.phi, "{model} cut {cut}: phi");
+        }
+    }
+}
+
+/// Scratch purity extends to the transformer kernels: re-running a role
+/// through a now-dirty arena (first call left layernorm stats, attention
+/// probs and GELU buffers behind) must not change a bit.
+#[test]
+fn dirty_scratch_is_bitwise_neutral_for_the_transformer() {
+    let (be, params, x, y1h) = setup("txf", "mnist");
+    let handle = ScratchHandle::new();
+    let (loss_a, g_a) = be.full_grad_with(&handle, &params, &x, &y1h).unwrap();
+    let (loss_b, g_b) = be.full_grad_with(&handle, &params, &x, &y1h).unwrap();
+    assert_eq!(loss_a, loss_b);
+    assert_eq!(tensor::max_abs_diff(&g_a, &g_b), 0.0);
+    for cut in be.spec().menu().ids() {
+        let nc = be.spec().cut(cut).client_params;
+        let s_plain = be.client_fwd(cut, &params[..nc], &x).unwrap();
+        let s_dirty = be.client_fwd_with(&handle, cut, &params[..nc], &x).unwrap();
+        assert_eq!(s_plain, s_dirty, "cut {cut}: client_fwd under a dirty arena");
+    }
+}
+
+/// One SGD step on He-init params must move the loss for every arch —
+/// catches degenerate wiring (e.g. zero-init layernorm gains) that the
+/// exact-equality tests above cannot see.
+#[test]
+fn every_arch_produces_live_gradients() {
+    for model in registry::MODELS {
+        let (be, params, x, y1h) = setup(model, "mnist");
+        let (loss0, grads) = be.full_grad(&params, &x, &y1h).unwrap();
+        let touched = grads.iter().filter(|g| g.iter().any(|&v| v != 0.0)).count();
+        assert_eq!(touched, grads.len(), "{model}: some parameter array got a zero gradient");
+        let stepped: Vec<Vec<f32>> = params
+            .iter()
+            .zip(&grads)
+            .map(|(p, g)| p.iter().zip(g).map(|(&pv, &gv)| pv - 0.02 * gv).collect())
+            .collect();
+        let (loss1, _) = be.full_grad(&stepped, &x, &y1h).unwrap();
+        assert!(loss1 < loss0, "{model}: SGD step did not reduce loss ({loss0} -> {loss1})");
+    }
+}

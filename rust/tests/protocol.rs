@@ -9,7 +9,6 @@
 //!    prefixes and random single-byte corruptions of valid encodings all
 //!    produce `Ok`/`Err`, never a panic or runaway allocation.
 
-use sfl_ga::model::NUM_CUTS;
 use sfl_ga::prop_assert;
 use sfl_ga::protocol::wire::{read_frame, write_frame};
 use sfl_ga::protocol::{Msg, RunSetup, PROTO_VERSION};
@@ -65,11 +64,15 @@ fn gen_msg(rng: &mut Pcg, finite: bool) -> Msg {
                 seed: rng.next_u64(),
                 partition: gen_string(rng),
                 samples_per_client: rng.below(4096),
+                model: gen_string(rng),
+                num_cuts: rng.below(64) as u32,
             },
         },
         2 => Msg::FwdReq {
             seq: rng.next_u64(),
-            cut: 1 + rng.below(NUM_CUTS) as u32,
+            // Any 1-based id is wire-legal; menu membership is the
+            // receiving node's check, not the codec's.
+            cut: 1 + rng.below(16) as u32,
             step: rng.next_u64(),
             wc: gen_params(rng, finite),
         },
@@ -101,6 +104,8 @@ fn gen_msg(rng: &mut Pcg, finite: bool) -> Msg {
                 seed: rng.next_u64(),
                 partition: gen_string(rng),
                 samples_per_client: rng.below(4096),
+                model: gen_string(rng),
+                num_cuts: rng.below(64) as u32,
             },
         },
         _ => Msg::Shutdown,
